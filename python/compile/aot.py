@@ -1,0 +1,88 @@
+"""AOT lowering: JAX/Pallas entry points → HLO text + manifest.json.
+
+HLO **text** is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Static artifact shapes (see DESIGN.md §4 for the VMEM budget).
+CORR_A = 128
+CORR_B = 128
+CORR_M = 128
+PCIT_A = 128
+PCIT_B = 128
+PCIT_Z = 128
+NBODY_A = 128
+NBODY_B = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, arg_shapes):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in arg_shapes]
+    return jax.jit(fn).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = {
+        "corr_chunk": (
+            model.corr_entry,
+            [(CORR_A, CORR_M), (CORR_B, CORR_M)],
+            {"a": CORR_A, "b": CORR_B, "m": CORR_M},
+        ),
+        "pcit_chunk": (
+            model.pcit_entry,
+            [(PCIT_A, PCIT_B), (PCIT_A, PCIT_Z), (PCIT_B, PCIT_Z)],
+            {"a": PCIT_A, "b": PCIT_B, "z": PCIT_Z},
+        ),
+        "nbody_chunk": (
+            model.nbody_entry,
+            [(NBODY_A, 4), (NBODY_A, 1), (NBODY_B, 4), (NBODY_B, 1)],
+            {"a": NBODY_A, "b": NBODY_B},
+        ),
+    }
+
+    manifest = {"version": 1, "kernels": {}}
+    for name, (fn, shapes, dims) in entries.items():
+        lowered = lower_entry(fn, shapes)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["kernels"][name] = {"file": fname, **dims}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

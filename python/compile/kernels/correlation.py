@@ -1,0 +1,66 @@
+"""Pallas correlation kernel (L1): the PCIT phase-1 hot spot.
+
+TPU mapping (DESIGN.md §4): the paper's OpenMP cache-blocked `Z·Zᵀ` becomes
+an MXU-shaped tiled matmul. BlockSpec expresses the HBM↔VMEM schedule:
+grid over (A/TA, B/TB) output tiles; each step streams a (TA, M) row panel
+and a (TB, M) column panel into VMEM and issues one `dot_general` on the
+systolic array.
+
+VMEM budget per grid step (f32, TA = TB = 64, M = 128):
+  in: 64·128·4 × 2 = 64 KiB,  out: 64·64·4 = 16 KiB  →  ~80 KiB ≪ 16 MiB.
+The M (contraction) dimension stays whole inside a step — the caller (Rust
+runtime / L2 model) accumulates across M chunks, keeping the artifact shape
+static.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated against `ref.corr_chunk_ref` by
+pytest, and the real-TPU tiling analysis lives in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile edges (MXU-friendly: multiples of the 128-lane register tile,
+# halved to keep three buffers comfortably in VMEM at larger M).
+TILE_A = 64
+TILE_B = 64
+
+
+def _corr_kernel(za_ref, zb_ref, out_ref):
+    """One (TILE_A, TILE_B) output tile: za_tile @ zb_tile.T on the MXU."""
+    za = za_ref[...]
+    zb = zb_ref[...]
+    out_ref[...] = jax.lax.dot_general(
+        za,
+        zb,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def corr_chunk(za, zb, *, interpret=True):
+    """Pallas tiled ``za @ zb.T`` for standardized row panels.
+
+    za: (A, M), zb: (B, M) with A % TILE_A == 0, B % TILE_B == 0.
+    Returns (A, B) float32.
+    """
+    a, m = za.shape
+    b, m2 = zb.shape
+    assert m == m2, "sample dimension mismatch"
+    assert a % TILE_A == 0 and b % TILE_B == 0, "pad to tile multiples"
+    grid = (a // TILE_A, b // TILE_B)
+    return pl.pallas_call(
+        _corr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_A, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_B, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_A, TILE_B), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, b), jnp.float32),
+        interpret=interpret,
+    )(za, zb)

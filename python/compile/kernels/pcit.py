@@ -1,0 +1,99 @@
+"""Pallas PCIT elimination kernel (L1): the O(N³) phase-2 hot spot.
+
+TPU mapping (DESIGN.md §4): the trio scan is elementwise over an
+(A, B, Z) broadcast — a VPU kernel, not an MXU one. The grid tiles the
+(A, B) pair plane; the mediator axis Z is scanned *inside* the kernel in
+ZSTEP-wide slabs with a carried OR-accumulator, bounding VMEM:
+
+  per step: cxy tile 64·64·4 = 16 KiB, rxz slab 64·ZSTEP·4, ryz slab
+  64·ZSTEP·4, flags 16 KiB, plus ~6 temporaries of 64·64·ZSTEP·4.
+  ZSTEP = 8 → temporaries ≈ 6 × 128 KiB ≈ 0.8 MiB — comfortably in VMEM.
+
+Semantics match `ref.pcit_chunk_ref` / `quorall::pcit::trio_eliminates`
+exactly; degenerate trios (|1 − r²| < EPS_GUARD, |r| < EPS_GUARD) never
+eliminate, which also self-masks the z = x / z = y diagonal (|r| = 1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS_GUARD = 1e-6
+TILE_A = 64
+TILE_B = 64
+# Mediators processed per inner step (VMEM knob; see module docstring).
+ZSTEP = 8
+
+
+def _pcit_kernel(cxy_ref, rxz_ref, ryz_ref, out_ref):
+    cxy = cxy_ref[...]  # (TA, TB)
+    rxz = rxz_ref[...]  # (TA, Z)
+    ryz = ryz_ref[...]  # (TB, Z)
+    z = rxz.shape[1]
+    assert z % ZSTEP == 0, "Z must be a multiple of ZSTEP"
+
+    rxy = cxy[:, :, None]  # (TA, TB, 1)
+    dxy = 1.0 - rxy * rxy
+    rxy_ok = (dxy >= EPS_GUARD) & (jnp.abs(rxy) >= EPS_GUARD)
+    safe_dxy = jnp.where(dxy >= EPS_GUARD, dxy, 1.0)
+    safe_rxy = jnp.where(jnp.abs(rxy) >= EPS_GUARD, rxy, 1.0)
+
+    def body(s, flags):
+        rx = jax.lax.dynamic_slice_in_dim(rxz, s * ZSTEP, ZSTEP, axis=1)
+        ry = jax.lax.dynamic_slice_in_dim(ryz, s * ZSTEP, ZSTEP, axis=1)
+        rx = rx[:, None, :]  # (TA, 1, ZSTEP)
+        ry = ry[None, :, :]  # (1, TB, ZSTEP)
+        dxz = 1.0 - rx * rx
+        dyz = 1.0 - ry * ry
+        ok = (
+            rxy_ok
+            & (dxz >= EPS_GUARD)
+            & (dyz >= EPS_GUARD)
+            & (jnp.abs(rx) >= EPS_GUARD)
+            & (jnp.abs(ry) >= EPS_GUARD)
+        )
+        sdxz = jnp.where(dxz >= EPS_GUARD, dxz, 1.0)
+        sdyz = jnp.where(dyz >= EPS_GUARD, dyz, 1.0)
+        srx = jnp.where(jnp.abs(rx) >= EPS_GUARD, rx, 1.0)
+        sry = jnp.where(jnp.abs(ry) >= EPS_GUARD, ry, 1.0)
+        pxy = (rxy - rx * ry) / jnp.sqrt(sdxz * sdyz)
+        pxz = (rx - rxy * ry) / jnp.sqrt(safe_dxy * sdyz)
+        pyz = (ry - rxy * rx) / jnp.sqrt(safe_dxy * sdxz)
+        eps = (pxy / safe_rxy + pxz / srx + pyz / sry) / 3.0
+        hit = ok & (jnp.abs(rxy) < jnp.abs(eps * rx)) & (jnp.abs(rxy) < jnp.abs(eps * ry))
+        return flags | jnp.any(hit, axis=-1)
+
+    flags = jax.lax.fori_loop(
+        0, z // ZSTEP, body, jnp.zeros(cxy.shape, dtype=jnp.bool_)
+    )
+    out_ref[...] = flags.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pcit_chunk(cxy, rxz, ryz, *, interpret=True):
+    """Pallas PCIT elimination over one mediator chunk.
+
+    cxy: (A, B); rxz: (A, Z); ryz: (B, Z). A, B multiples of the 64-tile;
+    Z a multiple of ZSTEP. Returns (A, B) float32 flags (1.0 = eliminated).
+    """
+    a, b = cxy.shape
+    a2, z = rxz.shape
+    b2, z2 = ryz.shape
+    assert a == a2 and b == b2 and z == z2, "shape mismatch"
+    assert a % TILE_A == 0 and b % TILE_B == 0, "pad to tile multiples"
+    assert z % ZSTEP == 0, "pad Z to a multiple of ZSTEP"
+    grid = (a // TILE_A, b // TILE_B)
+    return pl.pallas_call(
+        _pcit_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_A, TILE_B), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_A, z), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_B, z), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_A, TILE_B), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, b), jnp.float32),
+        interpret=interpret,
+    )(cxy, rxz, ryz)

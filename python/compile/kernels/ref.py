@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+These functions define the exact semantics the Rust native backend
+(`rust/src/pcit/{correlation,blocked}.rs`) and the Pallas kernels must
+match. `EPS_GUARD` mirrors `quorall::pcit::EPS_GUARD`.
+"""
+
+import jax.numpy as jnp
+
+EPS_GUARD = 1e-6
+
+
+def corr_chunk_ref(za, zb):
+    """Partial correlation chunk: plain ``za @ zb.T`` (no clamp).
+
+    za: (A, M) standardized rows; zb: (B, M). The caller accumulates over M
+    chunks and clamps to [-1, 1] afterwards, so the kernel itself is a pure
+    matmul (MXU shape).
+    """
+    return jnp.matmul(za, zb.T, precision="highest")
+
+
+def trio_eliminates_ref(rxy, rxz, ryz):
+    """Vectorized PCIT trio test (see ``quorall::pcit::trio_eliminates``).
+
+    All inputs broadcast together; returns a boolean array.
+    Degenerate trios (|1 - r^2| < EPS_GUARD or any |r| < EPS_GUARD) never
+    eliminate.
+    """
+    dxy = 1.0 - rxy * rxy
+    dxz = 1.0 - rxz * rxz
+    dyz = 1.0 - ryz * ryz
+    ok = (
+        (dxy >= EPS_GUARD)
+        & (dxz >= EPS_GUARD)
+        & (dyz >= EPS_GUARD)
+        & (jnp.abs(rxy) >= EPS_GUARD)
+        & (jnp.abs(rxz) >= EPS_GUARD)
+        & (jnp.abs(ryz) >= EPS_GUARD)
+    )
+    # Guard the denominators so masked lanes never divide by ~0.
+    safe_dxy = jnp.where(dxy >= EPS_GUARD, dxy, 1.0)
+    safe_dxz = jnp.where(dxz >= EPS_GUARD, dxz, 1.0)
+    safe_dyz = jnp.where(dyz >= EPS_GUARD, dyz, 1.0)
+    safe_rxy = jnp.where(jnp.abs(rxy) >= EPS_GUARD, rxy, 1.0)
+    safe_rxz = jnp.where(jnp.abs(rxz) >= EPS_GUARD, rxz, 1.0)
+    safe_ryz = jnp.where(jnp.abs(ryz) >= EPS_GUARD, ryz, 1.0)
+    pxy = (rxy - rxz * ryz) / jnp.sqrt(safe_dxz * safe_dyz)
+    pxz = (rxz - rxy * ryz) / jnp.sqrt(safe_dxy * safe_dyz)
+    pyz = (ryz - rxy * rxz) / jnp.sqrt(safe_dxy * safe_dxz)
+    eps = (pxy / safe_rxy + pxz / safe_rxz + pyz / safe_ryz) / 3.0
+    exy = jnp.abs(eps * rxz)
+    ezy = jnp.abs(eps * ryz)
+    return ok & (jnp.abs(rxy) < exy) & (jnp.abs(rxy) < ezy)
+
+
+def pcit_chunk_ref(cxy, rxz, ryz):
+    """PCIT elimination chunk.
+
+    cxy: (A, B) direct correlations; rxz: (A, Z); ryz: (B, Z).
+    Returns (A, B) float32 flags: 1.0 where ANY mediator z in the chunk
+    eliminates the pair.
+    """
+    rxy = cxy[:, :, None]
+    rx = rxz[:, None, :]
+    ry = ryz[None, :, :]
+    elim = trio_eliminates_ref(rxy, rx, ry)
+    return jnp.any(elim, axis=-1).astype(jnp.float32)
+
+
+def standardize_rows_ref(x):
+    """Row standardization: (x - mean) / ||x - mean||_2 per row.
+
+    Constant rows map to zero (correlation 0), matching the Rust reference.
+    """
+    mean = jnp.mean(x, axis=1, keepdims=True)
+    centered = x - mean
+    ss = jnp.sum(centered * centered, axis=1, keepdims=True)
+    inv = jnp.where(ss > 0.0, 1.0 / jnp.sqrt(jnp.where(ss > 0.0, ss, 1.0)), 0.0)
+    return centered * inv
+
+
+def nbody_forces_ref(pos, mass, softening=1e-2):
+    """Direct O(n^2) gravitational forces (for the nbody kernel)."""
+    diff = pos[None, :, :] - pos[:, None, :]  # (N, N, 3): r_j - r_i
+    r2 = jnp.sum(diff * diff, axis=-1) + softening * softening
+    inv_r3 = r2 ** (-1.5)
+    mm = mass[:, None] * mass[None, :]
+    s = mm * inv_r3
+    s = s * (1.0 - jnp.eye(pos.shape[0], dtype=pos.dtype))  # no self force
+    return jnp.sum(s[:, :, None] * diff, axis=1)

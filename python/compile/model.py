@@ -1,0 +1,54 @@
+"""L2 — the JAX compute graph composing the L1 Pallas kernels.
+
+The distributed PCIT data flow (DESIGN.md §7) is tile-structured; what the
+AOT artifacts export are the static-shape entry points the Rust runtime
+calls:
+
+* ``corr_entry``      — (A, M) × (B, M) → (A, B) partial dot products
+                        (accumulated + clamped by the caller across M
+                        chunks, keeping the artifact static).
+* ``pcit_entry``      — (A, B) × (A, Z) × (B, Z) → (A, B) elimination flags
+                        for one mediator chunk (OR-accumulated by caller).
+* ``corr_model``      — the full L2 composition used by python tests:
+                        raw expression rows → standardize → tiled corr →
+                        clamp. Demonstrates the whole graph lowers and
+                        fuses; not exported (dynamic N×M).
+* ``nbody_entry``     — (A, 4)+(A, 1) × (B, 4)+(B, 1) → (A, 4) force tile.
+
+Everything here runs at build time only.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.correlation import corr_chunk
+from compile.kernels.nbody import nbody_tile
+from compile.kernels.pcit import pcit_chunk
+from compile.kernels.ref import standardize_rows_ref
+
+
+def corr_entry(za, zb):
+    """AOT entry: one correlation chunk (pure matmul tile)."""
+    return (corr_chunk(za, zb),)
+
+
+def pcit_entry(cxy, rxz, ryz):
+    """AOT entry: one PCIT elimination chunk."""
+    return (pcit_chunk(cxy, rxz, ryz),)
+
+
+def nbody_entry(pos_a, mass_a, pos_b, mass_b):
+    """AOT entry: one n-body force tile."""
+    return (nbody_tile(pos_a, mass_a, pos_b, mass_b),)
+
+
+def corr_model(x_a, x_b):
+    """Full L2 path: raw rows → standardized → correlation block, clamped.
+
+    Used by the python test suite to check the composed graph; the Rust
+    coordinator performs the same standardize step natively (O(NM), cold
+    path) and calls ``corr_entry`` for the hot tiles.
+    """
+    za = standardize_rows_ref(x_a)
+    zb = standardize_rows_ref(x_b)
+    c = corr_chunk(za, zb)
+    return jnp.clip(c, -1.0, 1.0)

@@ -1,0 +1,74 @@
+"""Pallas corr_chunk vs the pure-jnp oracle (and numpy), across shapes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.correlation import TILE_A, TILE_B, corr_chunk
+from compile.kernels.ref import corr_chunk_ref, standardize_rows_ref
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("a,b,m", [(64, 64, 8), (64, 128, 32), (128, 64, 128), (128, 128, 256)])
+def test_matches_ref_shapes(a, b, m):
+    rng = np.random.default_rng(1234 + a + b + m)
+    za, zb = rand(rng, a, m), rand(rng, b, m)
+    got = corr_chunk(jnp.asarray(za), jnp.asarray(zb))
+    want = corr_chunk_ref(jnp.asarray(za), jnp.asarray(zb))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matches_numpy_float64():
+    rng = np.random.default_rng(7)
+    za, zb = rand(rng, 64, 48), rand(rng, 64, 48)
+    got = np.asarray(corr_chunk(jnp.asarray(za), jnp.asarray(zb)))
+    want = za.astype(np.float64) @ zb.astype(np.float64).T
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ta=st.integers(min_value=1, max_value=3),
+    tb=st.integers(min_value=1, max_value=3),
+    m=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_sweep(ta, tb, m, seed):
+    a, b = ta * TILE_A, tb * TILE_B
+    rng = np.random.default_rng(seed)
+    za, zb = rand(rng, a, m), rand(rng, b, m)
+    got = corr_chunk(jnp.asarray(za), jnp.asarray(zb))
+    want = corr_chunk_ref(jnp.asarray(za), jnp.asarray(zb))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_standardized_inputs_give_unit_diag():
+    rng = np.random.default_rng(11)
+    x = rand(rng, 64, 40)
+    z = standardize_rows_ref(jnp.asarray(x))
+    c = corr_chunk(z, z)
+    np.testing.assert_allclose(np.asarray(jnp.diag(c)), np.ones(64), rtol=1e-4, atol=1e-4)
+    assert np.all(np.abs(np.asarray(c)) <= 1.0 + 1e-4)
+
+
+def test_rejects_unpadded_shapes():
+    za = jnp.zeros((63, 16))
+    zb = jnp.zeros((64, 16))
+    with pytest.raises(AssertionError):
+        corr_chunk(za, zb)
+
+
+def test_zero_padding_is_identity():
+    # Zero-padding M must not change the result (the Rust runtime relies on
+    # this to chunk the contraction).
+    rng = np.random.default_rng(13)
+    za, zb = rand(rng, 64, 30), rand(rng, 64, 30)
+    full = np.asarray(corr_chunk(jnp.asarray(za), jnp.asarray(zb)))
+    zap = np.pad(za, ((0, 0), (0, 34)))
+    zbp = np.pad(zb, ((0, 0), (0, 34)))
+    padded = np.asarray(corr_chunk(jnp.asarray(zap), jnp.asarray(zbp)))
+    np.testing.assert_allclose(full, padded, rtol=1e-6, atol=1e-6)

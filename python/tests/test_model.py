@@ -1,0 +1,38 @@
+"""L2 model composition: standardize → corr tiles → clamp; shapes + values."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import corr_model
+from compile.kernels.ref import standardize_rows_ref
+
+
+def test_corr_model_matches_numpy():
+    rng = np.random.default_rng(17)
+    xa = rng.standard_normal((64, 40)).astype(np.float32)
+    xb = rng.standard_normal((64, 40)).astype(np.float32)
+    got = np.asarray(corr_model(jnp.asarray(xa), jnp.asarray(xb)))
+
+    def std(x):
+        c = x - x.mean(axis=1, keepdims=True)
+        n = np.sqrt((c * c).sum(axis=1, keepdims=True))
+        return np.divide(c, n, out=np.zeros_like(c), where=n > 0)
+
+    want = std(xa.astype(np.float64)) @ std(xb.astype(np.float64)).T
+    np.testing.assert_allclose(got, np.clip(want, -1, 1), rtol=1e-4, atol=1e-4)
+    assert np.all(np.abs(got) <= 1.0)
+
+
+def test_constant_rows_zero():
+    xa = np.ones((64, 16), dtype=np.float32)
+    xb = np.random.default_rng(1).standard_normal((64, 16)).astype(np.float32)
+    got = np.asarray(corr_model(jnp.asarray(xa), jnp.asarray(xb)))
+    np.testing.assert_array_equal(got, np.zeros((64, 64), dtype=np.float32))
+
+
+def test_standardize_ref_props():
+    rng = np.random.default_rng(23)
+    x = rng.standard_normal((10, 30)).astype(np.float32)
+    z = np.asarray(standardize_rows_ref(jnp.asarray(x)))
+    np.testing.assert_allclose(z.mean(axis=1), np.zeros(10), atol=1e-6)
+    np.testing.assert_allclose((z * z).sum(axis=1), np.ones(10), rtol=1e-5)

@@ -1,0 +1,128 @@
+"""Pallas pcit_chunk vs the pure-jnp oracle and a scalar python reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pcit import EPS_GUARD, TILE_A, TILE_B, ZSTEP, pcit_chunk
+from compile.kernels.ref import pcit_chunk_ref
+
+
+def corr_like(rng, *shape):
+    """Random values in (-1, 1) like correlations."""
+    return (rng.uniform(-0.98, 0.98, shape)).astype(np.float32)
+
+
+def scalar_trio(rxy, rxz, ryz):
+    """Direct scalar transcription of quorall::pcit::trio_eliminates."""
+    dxy, dxz, dyz = 1 - rxy * rxy, 1 - rxz * rxz, 1 - ryz * ryz
+    if dxy < EPS_GUARD or dxz < EPS_GUARD or dyz < EPS_GUARD:
+        return False
+    if abs(rxy) < EPS_GUARD or abs(rxz) < EPS_GUARD or abs(ryz) < EPS_GUARD:
+        return False
+    pxy = (rxy - rxz * ryz) / np.sqrt(dxz * dyz)
+    pxz = (rxz - rxy * ryz) / np.sqrt(dxy * dyz)
+    pyz = (ryz - rxy * rxz) / np.sqrt(dxy * dxz)
+    eps = (pxy / rxy + pxz / rxz + pyz / ryz) / 3.0
+    return abs(rxy) < abs(eps * rxz) and abs(rxy) < abs(eps * ryz)
+
+
+@pytest.mark.parametrize("a,b,z", [(64, 64, 8), (64, 64, 64), (128, 64, 128), (64, 128, 16)])
+def test_matches_ref(a, b, z):
+    rng = np.random.default_rng(a * 1000 + b + z)
+    cxy = corr_like(rng, a, b)
+    rxz = corr_like(rng, a, z)
+    ryz = corr_like(rng, b, z)
+    got = pcit_chunk(jnp.asarray(cxy), jnp.asarray(rxz), jnp.asarray(ryz))
+    want = pcit_chunk_ref(jnp.asarray(cxy), jnp.asarray(rxz), jnp.asarray(ryz))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matches_scalar_reference():
+    rng = np.random.default_rng(42)
+    a, b, z = 64, 64, 8
+    cxy = corr_like(rng, a, b)
+    rxz = corr_like(rng, a, z)
+    ryz = corr_like(rng, b, z)
+    got = np.asarray(pcit_chunk(jnp.asarray(cxy), jnp.asarray(rxz), jnp.asarray(ryz)))
+    # Spot-check a grid of pairs against the scalar rule.
+    for i in range(0, a, 7):
+        for j in range(0, b, 11):
+            want = any(scalar_trio(float(cxy[i, j]), float(rxz[i, t]), float(ryz[j, t])) for t in range(z))
+            assert bool(got[i, j]) == want, f"pair ({i},{j})"
+
+
+def test_degenerate_mediators_never_eliminate():
+    a = b = 64
+    z = ZSTEP
+    # Strong direct edge, mediators exactly ±1 or 0 → all guarded out.
+    cxy = np.full((a, b), 0.9, dtype=np.float32)
+    rxz = np.zeros((a, z), dtype=np.float32)
+    ryz = np.ones((b, z), dtype=np.float32)
+    got = np.asarray(pcit_chunk(jnp.asarray(cxy), jnp.asarray(rxz), jnp.asarray(ryz)))
+    assert not got.any()
+
+
+def test_mediated_edge_eliminated():
+    # |r_xy| well below the indirect path r_xz·r_yz → eliminated.
+    # (PCIT is conservative: r_xy close to r_xz·r_yz is kept, see the
+    # matching rust unit test quorall::pcit::tests::mediated_edge_eliminated.)
+    a = b = 64
+    z = ZSTEP
+    cxy = np.full((a, b), 0.1, dtype=np.float32)
+    rxz = np.full((a, z), 0.6, dtype=np.float32)
+    ryz = np.full((b, z), 0.6, dtype=np.float32)
+    got = np.asarray(pcit_chunk(jnp.asarray(cxy), jnp.asarray(rxz), jnp.asarray(ryz)))
+    assert got.all()
+    # Near-mediated strong edge survives.
+    cxy2 = np.full((a, b), 0.74, dtype=np.float32)
+    rxz2 = np.full((a, z), 0.9, dtype=np.float32)
+    ryz2 = np.full((b, z), 0.9, dtype=np.float32)
+    got2 = np.asarray(pcit_chunk(jnp.asarray(cxy2), jnp.asarray(rxz2), jnp.asarray(ryz2)))
+    assert not got2.any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ta=st.integers(min_value=1, max_value=2),
+    tb=st.integers(min_value=1, max_value=2),
+    zm=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_sweep(ta, tb, zm, seed):
+    a, b, z = ta * TILE_A, tb * TILE_B, zm * ZSTEP
+    rng = np.random.default_rng(seed)
+    cxy = corr_like(rng, a, b)
+    rxz = corr_like(rng, a, z)
+    ryz = corr_like(rng, b, z)
+    got = pcit_chunk(jnp.asarray(cxy), jnp.asarray(rxz), jnp.asarray(ryz))
+    want = pcit_chunk_ref(jnp.asarray(cxy), jnp.asarray(rxz), jnp.asarray(ryz))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_zero_padding_z_is_identity():
+    # Zero mediator columns never eliminate — the Rust runtime pads with 0.
+    rng = np.random.default_rng(5)
+    cxy = corr_like(rng, 64, 64)
+    rxz = corr_like(rng, 64, 16)
+    ryz = corr_like(rng, 64, 16)
+    base = np.asarray(pcit_chunk(jnp.asarray(cxy), jnp.asarray(rxz), jnp.asarray(ryz)))
+    rxz_p = np.pad(rxz, ((0, 0), (0, 48)))
+    ryz_p = np.pad(ryz, ((0, 0), (0, 48)))
+    padded = np.asarray(pcit_chunk(jnp.asarray(cxy), jnp.asarray(rxz_p), jnp.asarray(ryz_p)))
+    np.testing.assert_array_equal(base, padded)
+
+
+def test_unit_diagonal_self_masks():
+    # Mediator columns equal to the x gene itself (r = 1) are inert.
+    rng = np.random.default_rng(9)
+    cxy = corr_like(rng, 64, 64)
+    rxz = corr_like(rng, 64, ZSTEP)
+    ryz = corr_like(rng, 64, ZSTEP)
+    rxz[:, 0] = 1.0  # z == x
+    base = np.asarray(pcit_chunk(jnp.asarray(cxy), jnp.asarray(rxz), jnp.asarray(ryz)))
+    rxz2 = rxz.copy()
+    rxz2[:, 0] = 0.0  # equally inert
+    alt = np.asarray(pcit_chunk(jnp.asarray(cxy), jnp.asarray(rxz2), jnp.asarray(ryz)))
+    np.testing.assert_array_equal(base, alt)

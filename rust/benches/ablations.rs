@@ -1,0 +1,103 @@
+//! Ablations (experiment A in DESIGN.md):
+//!  A1 owner-assignment policy → load balance + end-to-end time
+//!  A2 quorum-exact vs quorum-local → accuracy/time trade-off
+//!  A3 PCIT significance vs plain |r| threshold → network size
+//!  A4 thread-pool size inside ranks (the "OpenMP" dimension)
+//!
+//! Run: `cargo bench --bench ablations [-- --quick]`
+
+use quorall::allpairs::{OwnerPolicy, PairAssignment};
+use quorall::benchkit;
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{run_distributed_pcit, run_single_node};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::metrics::Table;
+use quorall::quorum::CyclicQuorumSet;
+use quorall::runtime::NativeBackend;
+use quorall::util::timer::format_secs;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let quick = benchkit::quick_mode();
+    let genes = if quick { 256 } else { 640 };
+    let dataset = ExpressionDataset::generate(SyntheticSpec {
+        genes,
+        samples: 40,
+        modules: 10,
+        noise: 0.6,
+        seed: 1337,
+    });
+
+    // ---- A1: owner policy load balance. ----
+    let mut a1 = Table::new("A1: pair-ownership policy (load balance)", &["P", "policy", "max load", "mean load", "imbalance"]);
+    for p in [8usize, 16, 31, 64] {
+        let q = CyclicQuorumSet::for_processes(p)?;
+        for policy in [OwnerPolicy::First, OwnerPolicy::Hash, OwnerPolicy::LeastLoaded] {
+            let a = PairAssignment::build(&q, policy);
+            let max = *a.loads().iter().max().unwrap();
+            let mean = a.loads().iter().sum::<usize>() as f64 / p as f64;
+            a1.row(vec![
+                p.to_string(),
+                policy.name().into(),
+                max.to_string(),
+                format!("{mean:.1}"),
+                format!("{:.3}", a.imbalance()),
+            ]);
+        }
+    }
+    benchkit::emit(&a1);
+
+    // ---- A2: exact vs local mode. ----
+    let single = run_single_node(&dataset, 4, None);
+    let mut a2 = Table::new(
+        "A2: quorum-exact vs quorum-local (approximation ablation)",
+        &["mode", "P", "time", "edges", "jaccard vs single", "identical"],
+    );
+    for (mode, name) in [(PcitMode::QuorumExact, "exact"), (PcitMode::QuorumLocal, "local")] {
+        for ranks in [8usize, 16] {
+            let cfg = RunConfig { ranks, mode, ..RunConfig::default() };
+            let rep = run_distributed_pcit(&cfg, &dataset, Arc::new(NativeBackend::new()))?;
+            a2.row(vec![
+                name.into(),
+                ranks.to_string(),
+                format_secs(rep.wall_secs),
+                rep.network.n_edges().to_string(),
+                format!("{:.4}", rep.network.jaccard(&single.network)),
+                if rep.network.same_edges(&single.network) { "yes" } else { "no" }.into(),
+            ]);
+        }
+    }
+    benchkit::emit(&a2);
+
+    // ---- A3: PCIT vs plain threshold. ----
+    let mut a3 = Table::new("A3: significance rule", &["rule", "edges", "density", "module precision(|r|>=0.5)"]);
+    {
+        let pcit_net = &single.network;
+        a3.row(vec![
+            "PCIT".into(),
+            pcit_net.n_edges().to_string(),
+            format!("{:.4}", pcit_net.density()),
+            format!("{:.3}", pcit_net.module_precision(&dataset, 0.5)),
+        ]);
+        for th in [0.5f32, 0.7, 0.85] {
+            let rep = run_single_node(&dataset, 4, Some(th));
+            a3.row(vec![
+                format!("|r| >= {th}"),
+                rep.network.n_edges().to_string(),
+                format!("{:.4}", rep.network.density()),
+                format!("{:.3}", rep.network.module_precision(&dataset, 0.5)),
+            ]);
+        }
+    }
+    benchkit::emit(&a3);
+
+    // ---- A4: threads inside the single-node baseline. ----
+    let mut a4 = Table::new("A4: single-node thread scaling (the OpenMP axis)", &["threads", "time", "speedup"]);
+    let t1 = run_single_node(&dataset, 1, None).wall_secs;
+    for threads in [1usize, 2, 4, 8] {
+        let t = run_single_node(&dataset, threads, None).wall_secs;
+        a4.row(vec![threads.to_string(), format_secs(t), format!("{:.2}x", t1 / t)]);
+    }
+    benchkit::emit(&a4);
+    Ok(())
+}

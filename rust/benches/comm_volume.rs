@@ -1,0 +1,73 @@
+//! Table T-C — communication volume per decomposition (§1.2 context), with
+//! the modeled volumes cross-checked against the *measured* transport
+//! byte counters of real distributed runs.
+//!
+//! Run: `cargo bench --bench comm_volume [-- --quick]`
+
+use quorall::allpairs::comm;
+use quorall::benchkit;
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::run_distributed_pcit;
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::metrics::Table;
+use quorall::runtime::NativeBackend;
+use quorall::util::bytes::format_bytes;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // Model table across P for fixed N.
+    let n = 6400;
+    let mut model_t = Table::new(
+        &format!("modeled elements received per process, N = {n}"),
+        &["P", "decomposition", "distribution", "sweep", "total", "memory elems/proc"],
+    );
+    for p in [4usize, 16, 64] {
+        for row in comm::comparison_table(n, p) {
+            model_t.row(vec![
+                p.to_string(),
+                row.kind,
+                row.distribution.to_string(),
+                row.sweep.to_string(),
+                row.total.to_string(),
+                row.memory_elements.to_string(),
+            ]);
+        }
+    }
+    benchkit::emit(&model_t);
+
+    // Measured bytes from real runs (quorum method only — the others are
+    // models of prior work).
+    let quick = benchkit::quick_mode();
+    let genes = if quick { 256 } else { 512 };
+    let dataset = ExpressionDataset::generate(SyntheticSpec {
+        genes,
+        samples: 32,
+        modules: 8,
+        noise: 0.6,
+        seed: 7,
+    });
+    let mut meas_t = Table::new(
+        &format!("measured transport bytes, quorum-exact PCIT, N = {genes}"),
+        &["P", "total comm", "per rank (recv)", "distribution share (model)"],
+    );
+    for ranks in [4usize, 8, 16] {
+        let cfg = RunConfig { ranks, mode: PcitMode::QuorumExact, ..RunConfig::default() };
+        let rep = run_distributed_pcit(&cfg, &dataset, Arc::new(NativeBackend::new()))?;
+        let dist_elems = comm::distribution_recv_per_process(
+            quorall::allpairs::DecompositionKind::CyclicQuorum,
+            genes,
+            ranks,
+        );
+        let dist_bytes = (dist_elems * 32 * 4) as u64; // × M × f32
+        meas_t.row(vec![
+            ranks.to_string(),
+            format_bytes(rep.total_comm_bytes),
+            format_bytes(rep.stats.iter().map(|s| s.recv_bytes).sum::<u64>() / ranks as u64),
+            format_bytes(dist_bytes),
+        ]);
+    }
+    benchkit::emit(&meas_t);
+    println!("expected shape: quorum sweep volume = 0 extra input elements; ring moves corr rows");
+    println!("(an output-data cost all exact-PCIT distributions share), while atom re-streams inputs.");
+    Ok(())
+}

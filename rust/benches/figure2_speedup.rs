@@ -1,0 +1,131 @@
+//! Figure 2 (left) — runtime bars vs ideal-scaling curves, three inputs.
+//!
+//! Paper: single-node optimized PCIT (16 OpenMP threads) vs cyclic-quorum
+//! MPI implementation on 1..8 nodes (2 ranks/node); ~7x speedup at 8 nodes,
+//! suboptimal/inconsistent behaviour at 2 nodes (4 ranks).
+//!
+//! Here: single-node = exact PCIT on a thread pool; distributed = the
+//! simulated cluster at P ∈ {4, 8, 16} ranks; the analytic model
+//! (calibrated from the measured run) extrapolates beyond local cores.
+//! Run: `cargo bench --bench figure2_speedup [-- --quick]`
+
+use quorall::benchkit;
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{run_distributed_pcit, run_single_node};
+use quorall::data::synthetic::ExpressionDataset;
+use quorall::data::PaperInput;
+use quorall::metrics::Table;
+use quorall::runtime::NativeBackend;
+use quorall::sim::{calibrate, predict_quorum, predict_single, ClusterModel};
+use quorall::util::stats::Summary;
+use quorall::util::timer::format_secs;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let quick = benchkit::quick_mode();
+    let inputs: Vec<(PaperInput, usize)> = if quick {
+        vec![(PaperInput::Small, 2)]
+    } else {
+        vec![(PaperInput::Small, 3), (PaperInput::Medium, 2), (PaperInput::Large, 1)]
+    };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let ranks_list = [4usize, 8, 16];
+
+    let mut table = Table::new(
+        "Figure 2 (left): PCIT runtime and speedup vs single node",
+        &["input", "N", "config", "nodes", "crit.path (mean±ci95)", "speedup", "ideal", "identical"],
+    );
+
+    for (input, reps) in inputs {
+        let spec = input.spec();
+        let dataset = ExpressionDataset::generate(spec);
+
+        // Single-node baseline (paper's left-most bar), `reps` repetitions.
+        let mut single_times = Summary::new();
+        let mut single_edges = 0;
+        for _ in 0..reps {
+            let rep = run_single_node(&dataset, threads, None);
+            single_times.push(rep.wall_secs);
+            single_edges = rep.network.n_edges();
+        }
+        table.row(vec![
+            input.name().into(),
+            spec.genes.to_string(),
+            format!("single×{threads}T"),
+            "1".into(),
+            format!("{} ± {}", format_secs(single_times.mean), format_secs(single_times.ci95_half_width())),
+            "1.00x".into(),
+            "1.00x".into(),
+            "-".into(),
+        ]);
+
+        let single_net = run_single_node(&dataset, threads, None).network;
+        let mut phase_cal: Option<(usize, f64, f64)> = None;
+
+        for &ranks in &ranks_list {
+            let cfg = RunConfig { ranks, mode: PcitMode::QuorumExact, ..RunConfig::default() };
+            let mut times = Summary::new();
+            let mut identical = true;
+            let mut edges = 0;
+            for _ in 0..reps {
+                let rep = run_distributed_pcit(&cfg, &dataset, Arc::new(NativeBackend::new()))?;
+                // Wall clock on this 1-core testbed serializes all ranks;
+                // the critical path (slowest rank's compute) is the
+                // cluster-time measure the paper's bars correspond to.
+                times.push(rep.critical_path_secs);
+                identical &= rep.network.same_edges(&single_net);
+                edges = rep.network.n_edges();
+                if ranks == 8 {
+                    let p1 = rep.stats.iter().map(|s| s.phase1_secs).fold(0.0, f64::max);
+                    let p2 = rep.stats.iter().map(|s| s.phase2_secs).fold(0.0, f64::max);
+                    phase_cal = Some((ranks, p1, p2));
+                }
+            }
+            assert_eq!(edges, single_edges, "edge counts must match");
+            // Paper plots nodes = ranks / 2 (2 ranks per node). Our
+            // baseline is a 1-thread single node and each simulated rank is
+            // single-threaded, so ideal scaling here is P× (the paper's
+            // 16-thread-node ideal lives in the extrapolation table).
+            let nodes = (ranks + 1) / 2;
+            let ideal = ranks as f64;
+            table.row(vec![
+                input.name().into(),
+                spec.genes.to_string(),
+                format!("quorum P={ranks}"),
+                nodes.to_string(),
+                format!("{} ± {}", format_secs(times.mean), format_secs(times.ci95_half_width())),
+                format!("{:.2}x", single_times.mean / times.mean),
+                format!("{ideal:.2}x"),
+                if identical { "yes" } else { "NO" }.into(),
+            ]);
+        }
+
+        // Extrapolation via the calibrated analytic model (beyond cores).
+        if let Some((cal_p, p1, p2)) = phase_cal {
+            let base = ClusterModel::default();
+            // Our simulated ranks run single-threaded.
+            let model = calibrate(spec.genes, spec.samples, cal_p, p1, p2, 1, &base)?;
+            // Paper config: single node = 16 OpenMP threads; distributed =
+            // 2 ranks/node × 8 threads/rank (model defaults).
+            let single_pred = predict_single(spec.genes, spec.samples, 16, &model);
+            let mut ext = Table::new(
+                &format!("Figure 2 extrapolation ({}, calibrated at P={cal_p}, paper config 2 ranks/node × 8T)", input.name()),
+                &["P", "nodes", "predicted time", "predicted speedup"],
+            );
+            for p in [16usize, 32, 64, 128] {
+                let pred = predict_quorum(spec.genes, spec.samples, p, &model)?;
+                ext.row(vec![
+                    p.to_string(),
+                    pred.nodes.to_string(),
+                    format_secs(pred.total_secs),
+                    format!("{:.2}x", single_pred.total_secs / pred.total_secs),
+                ]);
+            }
+            benchkit::emit(&ext);
+        }
+    }
+
+    benchkit::emit(&table);
+    println!("expected shape (paper): near-ideal speedup approaching 8 nodes (≈7x), noisy 2-node point.");
+    Ok(())
+}

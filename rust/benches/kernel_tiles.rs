@@ -1,0 +1,90 @@
+//! Supporting bench K — tile throughput, native vs XLA/PJRT backend, at the
+//! AOT artifact shapes. Requires `make artifacts` for the XLA rows (skipped
+//! with a note otherwise).
+//!
+//! Run: `cargo bench --bench kernel_tiles [-- --quick]`
+
+use quorall::benchkit::{self, format_summary, measure};
+use quorall::metrics::Table;
+use quorall::runtime::{executor_for, NativeBackend, TileExecutor};
+use quorall::util::prng::Rng;
+use quorall::util::Matrix;
+use std::sync::Arc;
+
+fn rand_matrix(rng: &mut Rng, r: usize, c: usize, scale: f32) -> Matrix {
+    Matrix::from_fn(r, c, |_, _| (rng.f32() * 2.0 - 1.0) * scale)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = benchkit::quick_mode();
+    let iters = if quick { 5 } else { 20 };
+    let mut rng = Rng::new(1234);
+
+    let mut execs: Vec<Arc<dyn TileExecutor>> = vec![Arc::new(NativeBackend::new())];
+    match executor_for(quorall::config::BackendKind::Xla, std::path::Path::new("artifacts")) {
+        Ok(e) => execs.push(e),
+        Err(e) => println!("(XLA backend unavailable — {e}; run `make artifacts`)"),
+    }
+
+    let mut table = Table::new(
+        "tile kernel throughput (artifact shapes)",
+        &["kernel", "shape", "backend", "time/call", "throughput"],
+    );
+
+    // corr tile at the artifact shape (128×128 @ 128).
+    let za = rand_matrix(&mut rng, 128, 128, 1.0);
+    let zb = rand_matrix(&mut rng, 128, 128, 1.0);
+    for exec in &execs {
+        let e = exec.clone();
+        let (za2, zb2) = (za.clone(), zb.clone());
+        let s = measure(2, iters, move || e.corr_tile(&za2, &zb2));
+        let flops = 2.0 * 128.0 * 128.0 * 128.0;
+        table.row(vec![
+            "corr_tile".into(),
+            "128x128 @ m=128".into(),
+            exec.name().into(),
+            format_summary(&s),
+            format!("{:.2} GFLOP/s", flops / s.mean / 1e9),
+        ]);
+    }
+
+    // pcit tile at the artifact shape (128×128, z=128).
+    let cxy = rand_matrix(&mut rng, 128, 128, 0.9);
+    let rxz = rand_matrix(&mut rng, 128, 128, 0.9);
+    let ryz = rand_matrix(&mut rng, 128, 128, 0.9);
+    for exec in &execs {
+        let e = exec.clone();
+        let (a, b, c) = (cxy.clone(), rxz.clone(), ryz.clone());
+        let s = measure(2, iters, move || e.pcit_tile(&a, &b, &c));
+        let trios = 128.0 * 128.0 * 128.0;
+        table.row(vec![
+            "pcit_tile".into(),
+            "128x128, z=128".into(),
+            exec.name().into(),
+            format_summary(&s),
+            format!("{:.2} Mtrio/s", trios / s.mean / 1e6),
+        ]);
+    }
+
+    // Larger composite tile exercising the chunking path.
+    let za_l = rand_matrix(&mut rng, 256, 300, 1.0);
+    let zb_l = rand_matrix(&mut rng, 256, 300, 1.0);
+    for exec in &execs {
+        let e = exec.clone();
+        let (a, b) = (za_l.clone(), zb_l.clone());
+        let s = measure(1, iters.min(10), move || e.corr_tile(&a, &b));
+        let flops = 2.0 * 256.0 * 256.0 * 300.0;
+        table.row(vec![
+            "corr_tile".into(),
+            "256x256 @ m=300 (chunked)".into(),
+            exec.name().into(),
+            format_summary(&s),
+            format!("{:.2} GFLOP/s", flops / s.mean / 1e9),
+        ]);
+    }
+
+    benchkit::emit(&table);
+    println!("note: XLA rows run interpret-lowered Pallas HLO on the CPU PJRT client;");
+    println!("real-TPU estimates (MXU util, VMEM footprint) are in DESIGN.md §Perf.");
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Communication-volume models per decomposition (reproduces the paper's
+//! §1.2 comparison and the T-C experiment in DESIGN.md).
+//!
+//! Volumes are counted in *elements received per process* for one full
+//! all-pairs sweep, matching how Driscoll et al. account bandwidth. The
+//! simulated-cluster transport (`coordinator::transport`) counts real bytes;
+//! the `comm_volume` bench cross-checks the model against those counters.
+
+use super::decomposition::{ceil_sqrt, DecompositionKind};
+use crate::quorum::CyclicQuorumSet;
+use crate::util::ceil_div;
+
+/// Elements received per process during initial data distribution
+/// (scatter of the replicated working set; the leader holds the input).
+pub fn distribution_recv_per_process(kind: DecompositionKind, n: usize, p: usize) -> usize {
+    match kind {
+        DecompositionKind::AllData => n,
+        DecompositionKind::Atom => ceil_div(n, p),
+        DecompositionKind::Force => 2 * ceil_div(n, ceil_sqrt(p)),
+        DecompositionKind::CReplication(c) => 2 * ceil_div(c * n, p),
+        DecompositionKind::CyclicQuorum => {
+            let q = CyclicQuorumSet::for_processes(p).expect("quorum set");
+            q.quorum_size() * ceil_div(n, p)
+        }
+    }
+}
+
+/// Elements received per process during the compute sweep (steady-state
+/// exchange): atom must stream all other blocks; force/c-replication shift
+/// rows/columns; the quorum method needs **zero** additional input data —
+/// every pair it owns is already local (the paper's key operational win).
+pub fn sweep_recv_per_process(kind: DecompositionKind, n: usize, p: usize) -> usize {
+    match kind {
+        DecompositionKind::AllData => 0,
+        // Ring pass of all other P-1 blocks.
+        DecompositionKind::Atom => ceil_div(n, p) * (p - 1),
+        // √P-stage reduce/bcast over rows+cols of the process grid.
+        DecompositionKind::Force => {
+            let r = ceil_sqrt(p);
+            2 * ceil_div(n, r) * (log2_ceil(r).max(1))
+        }
+        DecompositionKind::CReplication(c) => {
+            // Driscoll: P/c^2 shifts of arrays of size c·N/P (c | P assumed).
+            let shifts = (p / (c * c).max(1)).max(1);
+            2 * ceil_div(c * n, p) * shifts
+        }
+        DecompositionKind::CyclicQuorum => 0,
+    }
+}
+
+/// Total received elements per process for one sweep (distribution + sweep).
+pub fn total_recv_per_process(kind: DecompositionKind, n: usize, p: usize) -> usize {
+    distribution_recv_per_process(kind, n, p) + sweep_recv_per_process(kind, n, p)
+}
+
+fn log2_ceil(x: usize) -> usize {
+    let mut v = 1usize;
+    let mut l = 0usize;
+    while v < x {
+        v <<= 1;
+        l += 1;
+    }
+    l
+}
+
+/// One row of the T-C comparison table.
+#[derive(Clone, Debug)]
+pub struct CommRow {
+    pub kind: String,
+    pub distribution: usize,
+    pub sweep: usize,
+    pub total: usize,
+    pub memory_elements: usize,
+}
+
+/// Build the comparison table for all decompositions at (n, p).
+pub fn comparison_table(n: usize, p: usize) -> Vec<CommRow> {
+    let mut kinds = vec![
+        DecompositionKind::AllData,
+        DecompositionKind::Atom,
+        DecompositionKind::Force,
+        DecompositionKind::CyclicQuorum,
+    ];
+    // c-replication at c = sqrt(P) when it divides P.
+    let r = ceil_sqrt(p);
+    if r >= 1 && p % r == 0 && r * r == p {
+        kinds.push(DecompositionKind::CReplication(r));
+    }
+    kinds
+        .into_iter()
+        .map(|k| {
+            let d = super::Decomposition::new(k, n, p).expect("valid decomposition");
+            CommRow {
+                kind: k.name(),
+                distribution: distribution_recv_per_process(k, n, p),
+                sweep: sweep_recv_per_process(k, n, p),
+                total: total_recv_per_process(k, n, p),
+                memory_elements: d.elements_per_process(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quorum_needs_no_sweep_communication() {
+        for p in [4usize, 7, 16, 31] {
+            assert_eq!(sweep_recv_per_process(DecompositionKind::CyclicQuorum, 1000, p), 0);
+        }
+    }
+
+    #[test]
+    fn atom_sweep_dominates_distribution() {
+        let n = 1600;
+        let p = 16;
+        let d = distribution_recv_per_process(DecompositionKind::Atom, n, p);
+        let s = sweep_recv_per_process(DecompositionKind::Atom, n, p);
+        assert_eq!(d, 100);
+        assert_eq!(s, 1500);
+        assert!(s > d);
+    }
+
+    #[test]
+    fn quorum_total_below_all_data_and_atom() {
+        let n = 6400;
+        for p in [16usize, 25, 36, 64] {
+            let q = total_recv_per_process(DecompositionKind::CyclicQuorum, n, p);
+            let a = total_recv_per_process(DecompositionKind::Atom, n, p);
+            let all = total_recv_per_process(DecompositionKind::AllData, n, p);
+            assert!(q < a, "P={p}: quorum {q} vs atom {a}");
+            assert!(q < all, "P={p}: quorum {q} vs all-data {all}");
+        }
+    }
+
+    #[test]
+    fn table_contains_core_rows() {
+        let t = comparison_table(1000, 16);
+        let kinds: Vec<&str> = t.iter().map(|r| r.kind.as_str()).collect();
+        assert!(kinds.contains(&"all-data"));
+        assert!(kinds.contains(&"atom"));
+        assert!(kinds.contains(&"force"));
+        assert!(kinds.contains(&"cyclic-quorum"));
+        assert!(kinds.iter().any(|k| k.starts_with("c-replication")));
+        for row in &t {
+            assert_eq!(row.total, row.distribution + row.sweep);
+        }
+    }
+
+    #[test]
+    fn log2_ceil_values() {
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(5), 3);
+    }
+}

@@ -1,0 +1,167 @@
+//! All-pairs decompositions: the paper's cyclic-quorum method plus the
+//! baselines it cites (§1.2): atom decomposition [Plimpton 95], force
+//! decomposition [Plimpton 95], and the communication-avoiding
+//! c-replication family [Driscoll et al., IPDPS'13].
+//!
+//! Each decomposition answers: which *elements* does process i hold, and
+//! which element-pair work does it perform? We express element counts per
+//! process (memory) — the comm models live in [`super::comm`].
+
+use crate::quorum::CyclicQuorumSet;
+use crate::util::{ceil_div, isqrt};
+
+/// Which decomposition strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecompositionKind {
+    /// Every process holds all N elements (all-data / generalized framework
+    /// of Moretti et al.); work split by pair ranges.
+    AllData,
+    /// Atom decomposition: process i owns N/P elements, needs all others'
+    /// elements communicated each step (c = 1 in Driscoll's terms).
+    Atom,
+    /// Force decomposition: √P × √P grid of interaction blocks, two arrays
+    /// of N/√P elements per process.
+    Force,
+    /// Driscoll c-replication: c copies of the data, 2 arrays of N/(P/c)…
+    /// interpolates between atom (c=1) and force-like (c=√P).
+    CReplication(usize),
+    /// This paper: one array of k·N/P elements (k = cyclic quorum size).
+    CyclicQuorum,
+}
+
+impl DecompositionKind {
+    pub fn name(&self) -> String {
+        match self {
+            DecompositionKind::AllData => "all-data".into(),
+            DecompositionKind::Atom => "atom".into(),
+            DecompositionKind::Force => "force".into(),
+            DecompositionKind::CReplication(c) => format!("c-replication(c={c})"),
+            DecompositionKind::CyclicQuorum => "cyclic-quorum".into(),
+        }
+    }
+}
+
+/// A decomposition instance for N elements over P processes.
+#[derive(Clone, Debug)]
+pub struct Decomposition {
+    pub kind: DecompositionKind,
+    pub n: usize,
+    pub p: usize,
+    /// Quorum set when kind = CyclicQuorum.
+    pub quorum: Option<CyclicQuorumSet>,
+}
+
+impl Decomposition {
+    pub fn new(kind: DecompositionKind, n: usize, p: usize) -> anyhow::Result<Self> {
+        let quorum = match kind {
+            DecompositionKind::CyclicQuorum => Some(CyclicQuorumSet::for_processes(p)?),
+            _ => None,
+        };
+        if let DecompositionKind::CReplication(c) = kind {
+            anyhow::ensure!(c >= 1 && c <= p, "c must be in 1..=P");
+            anyhow::ensure!(p % c == 0, "c-replication requires c | P (got c={c}, P={p})");
+        }
+        Ok(Self { kind, n, p, quorum })
+    }
+
+    /// Elements a single process must hold in memory.
+    pub fn elements_per_process(&self) -> usize {
+        let (n, p) = (self.n, self.p);
+        match self.kind {
+            DecompositionKind::AllData => n,
+            // Atom: owns N/P but must buffer the incoming stream; Plimpton's
+            // formulation keeps 2 arrays of N/P (own + in-flight block).
+            DecompositionKind::Atom => 2 * ceil_div(n, p),
+            DecompositionKind::Force => {
+                let r = ceil_sqrt(p);
+                2 * ceil_div(n, r)
+            }
+            DecompositionKind::CReplication(c) => {
+                // Driscoll et al.: with replication factor c, each of the
+                // P/c teams holds 2 arrays of c·N/P elements.
+                2 * ceil_div(c * n, p)
+            }
+            DecompositionKind::CyclicQuorum => {
+                let q = self.quorum.as_ref().expect("quorum set present");
+                q.quorum_size() * ceil_div(n, p)
+            }
+        }
+    }
+
+    /// Number of element-level pair interactions computed by one process
+    /// under even work splitting (all decompositions split the C(N,2) work
+    /// evenly — what differs is data movement and memory).
+    pub fn pair_work_per_process(&self) -> usize {
+        ceil_div(crate::util::n_choose_2(self.n), self.p)
+    }
+}
+
+/// ceil(sqrt(p))
+pub fn ceil_sqrt(p: usize) -> usize {
+    let r = isqrt(p);
+    if r * r < p {
+        r + 1
+    } else {
+        r.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elements_per_process_ordering() {
+        // For P = 16, N = 1600: all-data (1600) > atom-ish comparisons…
+        let n = 1600;
+        let p = 16;
+        let all = Decomposition::new(DecompositionKind::AllData, n, p).unwrap();
+        let atom = Decomposition::new(DecompositionKind::Atom, n, p).unwrap();
+        let force = Decomposition::new(DecompositionKind::Force, n, p).unwrap();
+        let quorum = Decomposition::new(DecompositionKind::CyclicQuorum, n, p).unwrap();
+        assert_eq!(all.elements_per_process(), 1600);
+        assert_eq!(atom.elements_per_process(), 200);
+        assert_eq!(force.elements_per_process(), 800);
+        // k(16) is 5 or 6 → 500-600 elements; less than force's 800.
+        assert!(quorum.elements_per_process() < force.elements_per_process());
+        assert!(quorum.elements_per_process() < all.elements_per_process());
+    }
+
+    #[test]
+    fn c_replication_interpolates() {
+        let n = 6400;
+        let p = 16;
+        let c1 = Decomposition::new(DecompositionKind::CReplication(1), n, p).unwrap();
+        let c4 = Decomposition::new(DecompositionKind::CReplication(4), n, p).unwrap();
+        assert_eq!(c1.elements_per_process(), 2 * 400); // atom-like
+        assert_eq!(c4.elements_per_process(), 2 * 1600); // force-like (c=sqrt(P))
+        let force = Decomposition::new(DecompositionKind::Force, n, p).unwrap();
+        assert_eq!(c4.elements_per_process(), force.elements_per_process());
+    }
+
+    #[test]
+    fn c_replication_validated() {
+        assert!(Decomposition::new(DecompositionKind::CReplication(3), 100, 16).is_err());
+        assert!(Decomposition::new(DecompositionKind::CReplication(0), 100, 16).is_err());
+        assert!(Decomposition::new(DecompositionKind::CReplication(17), 100, 16).is_err());
+    }
+
+    #[test]
+    fn work_split_even() {
+        let d = Decomposition::new(DecompositionKind::CyclicQuorum, 1000, 10).unwrap();
+        assert_eq!(d.pair_work_per_process(), ceil_div(1000 * 999 / 2, 10));
+    }
+
+    #[test]
+    fn ceil_sqrt_values() {
+        assert_eq!(ceil_sqrt(16), 4);
+        assert_eq!(ceil_sqrt(17), 5);
+        assert_eq!(ceil_sqrt(1), 1);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(DecompositionKind::CyclicQuorum.name(), "cyclic-quorum");
+        assert_eq!(DecompositionKind::CReplication(4).name(), "c-replication(c=4)");
+    }
+}

@@ -1,0 +1,66 @@
+//! Distributed all-pairs decompositions (paper §2) and work ownership.
+//!
+//! * [`owner`] — exactly-once, load-balanced assignment of dataset pairs to
+//!   the processes whose quorums host them ("manage computation").
+//! * [`decomposition`] — the baselines the paper compares against: atom
+//!   decomposition (all data everywhere), force decomposition (dual
+//!   `N/√P` arrays), and the Driscoll et al. c-replication family.
+//! * [`comm`] — communication-volume models for each decomposition.
+
+pub mod owner;
+pub mod decomposition;
+pub mod comm;
+
+pub use decomposition::{Decomposition, DecompositionKind};
+pub use owner::{OwnerPolicy, PairAssignment, RedundantAssignment};
+
+/// An unordered dataset-pair task `(a, b)` with `a <= b` (paper Eq. 6 —
+/// self-pairs included: elements within one dataset must also pair).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PairTask {
+    pub a: usize,
+    pub b: usize,
+}
+
+impl PairTask {
+    pub fn new(a: usize, b: usize) -> Self {
+        if a <= b {
+            Self { a, b }
+        } else {
+            Self { a: b, b: a }
+        }
+    }
+
+    pub fn is_diagonal(&self) -> bool {
+        self.a == self.b
+    }
+}
+
+/// Enumerate all dataset pair tasks for P datasets (Eq. 6): P(P+1)/2 tasks.
+pub fn all_pair_tasks(p: usize) -> Vec<PairTask> {
+    let mut out = Vec::with_capacity(crate::util::pairs_with_self(p));
+    for a in 0..p {
+        for b in a..p {
+            out.push(PairTask { a, b });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_task_normalizes() {
+        assert_eq!(PairTask::new(5, 2), PairTask { a: 2, b: 5 });
+        assert!(PairTask::new(3, 3).is_diagonal());
+    }
+
+    #[test]
+    fn enumeration_count() {
+        assert_eq!(all_pair_tasks(7).len(), 28); // 7*8/2
+        assert_eq!(all_pair_tasks(1).len(), 1);
+        assert_eq!(all_pair_tasks(0).len(), 0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Exactly-once pair ownership — "manage computation" (paper title).
+//!
+//! The all-pairs property guarantees every dataset pair has ≥ 1 hosting
+//! quorum; to *compute* each pair exactly once we pick one deterministic
+//! owner per pair. The choice matters for load balance: the histogram of
+//! pairs per process should be flat (the paper's "equal work" requirement).
+
+use super::PairTask;
+use crate::quorum::CyclicQuorumSet;
+
+/// Owner-selection policy (ablation: `cargo bench --bench ablations`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OwnerPolicy {
+    /// First host in process order — simple but skewed.
+    First,
+    /// Hash of (a, b) over the host list — stateless, near-uniform.
+    Hash,
+    /// Greedy least-loaded host at assignment time — flattest histogram,
+    /// deterministic given the task enumeration order.
+    LeastLoaded,
+}
+
+impl OwnerPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "first" => Some(OwnerPolicy::First),
+            "hash" => Some(OwnerPolicy::Hash),
+            "least-loaded" | "balanced" => Some(OwnerPolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OwnerPolicy::First => "first",
+            OwnerPolicy::Hash => "hash",
+            OwnerPolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// A complete assignment of every pair task to exactly one owning process.
+#[derive(Clone, Debug)]
+pub struct PairAssignment {
+    p: usize,
+    /// owner[index(a,b)] = process id.
+    owners: Vec<usize>,
+    /// pairs per process.
+    load: Vec<usize>,
+}
+
+impl PairAssignment {
+    /// Assign all P(P+1)/2 pairs using `policy`.
+    ///
+    /// Panics only if the quorum set violates the all-pairs property (which
+    /// `CyclicQuorumSet` construction already guarantees against).
+    pub fn build(q: &CyclicQuorumSet, policy: OwnerPolicy) -> Self {
+        let p = q.processes();
+        let n_pairs = crate::util::pairs_with_self(p);
+        let mut owners = vec![usize::MAX; n_pairs];
+        let mut load = vec![0usize; p];
+        for a in 0..p {
+            for b in a..p {
+                let hosts = q.pair_hosts(a, b);
+                assert!(
+                    !hosts.is_empty(),
+                    "all-pairs property violated for ({a},{b}) — invalid quorum set"
+                );
+                let owner = match policy {
+                    OwnerPolicy::First => hosts[0],
+                    OwnerPolicy::Hash => hosts[pair_hash(a, b) as usize % hosts.len()],
+                    OwnerPolicy::LeastLoaded => {
+                        *hosts.iter().min_by_key(|&&h| (load[h], h)).unwrap()
+                    }
+                };
+                owners[Self::index(p, a, b)] = owner;
+                load[owner] += 1;
+            }
+        }
+        Self { p, owners, load }
+    }
+
+    #[inline]
+    fn index(p: usize, a: usize, b: usize) -> usize {
+        debug_assert!(a <= b && b < p);
+        // Row-major upper triangle (incl. diagonal): row a starts after
+        // sum_{r<a}(p - r) = a*p - a(a-1)/2 entries; add (b - a) within row.
+        a * p - a * a.saturating_sub(1) / 2 + (b - a)
+    }
+
+    /// Owner of pair (a, b) (order-insensitive).
+    pub fn owner(&self, a: usize, b: usize) -> usize {
+        let t = PairTask::new(a, b);
+        self.owners[Self::index(self.p, t.a, t.b)]
+    }
+
+    /// All tasks owned by `process`, enumeration order.
+    pub fn tasks_for(&self, process: usize) -> Vec<PairTask> {
+        let mut out = Vec::with_capacity(self.load[process]);
+        for a in 0..self.p {
+            for b in a..self.p {
+                if self.owners[Self::index(self.p, a, b)] == process {
+                    out.push(PairTask { a, b });
+                }
+            }
+        }
+        out
+    }
+
+    pub fn processes(&self) -> usize {
+        self.p
+    }
+
+    pub fn loads(&self) -> &[usize] {
+        &self.load
+    }
+
+    /// Load imbalance = max_load / mean_load (1.0 is perfect).
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.load.iter().max().unwrap_or(&0) as f64;
+        let mean = self.load.iter().sum::<usize>() as f64 / self.p.max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Invariant check: every pair owned exactly once, by a hosting process.
+    pub fn verify(&self, q: &CyclicQuorumSet) -> Result<(), String> {
+        if q.processes() != self.p {
+            return Err("process count mismatch".into());
+        }
+        let mut seen = 0usize;
+        for a in 0..self.p {
+            for b in a..self.p {
+                let o = self.owners[Self::index(self.p, a, b)];
+                if o == usize::MAX {
+                    return Err(format!("pair ({a},{b}) unassigned"));
+                }
+                if !(q.contains(o, a) && q.contains(o, b)) {
+                    return Err(format!("pair ({a},{b}) assigned to non-host {o}"));
+                }
+                seen += 1;
+            }
+        }
+        if seen != self.owners.len() {
+            return Err("pair index mismatch".into());
+        }
+        let total: usize = self.load.iter().sum();
+        if total != self.owners.len() {
+            return Err(format!("load sum {total} != pair count {}", self.owners.len()));
+        }
+        Ok(())
+    }
+}
+
+/// Redundant assignment (paper §6 future work: "using quorum redundancy to
+/// deliver memory and computationally efficient solutions"): every pair gets
+/// up to `r` distinct owners among its hosting quorums, load-balanced. The
+/// coordinator can then survive `r - 1` rank failures per pair.
+#[derive(Clone, Debug)]
+pub struct RedundantAssignment {
+    p: usize,
+    /// owners[pair_index] = up to r owner ranks (primary first).
+    owners: Vec<Vec<usize>>,
+}
+
+impl RedundantAssignment {
+    pub fn build(q: &CyclicQuorumSet, r: usize) -> Self {
+        assert!(r >= 1);
+        let p = q.processes();
+        let n_pairs = crate::util::pairs_with_self(p);
+        let mut owners = vec![Vec::new(); n_pairs];
+        let mut load = vec![0usize; p];
+        for a in 0..p {
+            for b in a..p {
+                let hosts = q.pair_hosts(a, b);
+                assert!(!hosts.is_empty(), "all-pairs property violated");
+                let take = r.min(hosts.len());
+                let mut hosts_by_load = hosts.clone();
+                hosts_by_load.sort_by_key(|&h| (load[h], h));
+                let chosen: Vec<usize> = hosts_by_load.into_iter().take(take).collect();
+                for &h in &chosen {
+                    load[h] += 1;
+                }
+                owners[PairAssignment::index(p, a, b)] = chosen;
+            }
+        }
+        Self { p, owners }
+    }
+
+    pub fn owners(&self, a: usize, b: usize) -> &[usize] {
+        let t = PairTask::new(a, b);
+        &self.owners[PairAssignment::index(self.p, t.a, t.b)]
+    }
+
+    /// All tasks (primary + backup) for `process`.
+    pub fn tasks_for(&self, process: usize) -> Vec<PairTask> {
+        let mut out = Vec::new();
+        for a in 0..self.p {
+            for b in a..self.p {
+                if self.owners[PairAssignment::index(self.p, a, b)].contains(&process) {
+                    out.push(PairTask { a, b });
+                }
+            }
+        }
+        out
+    }
+
+    /// Is every pair still owned by at least one process outside `dead`?
+    pub fn covers_with_failures(&self, dead: &[usize]) -> bool {
+        self.owners
+            .iter()
+            .all(|os| os.iter().any(|o| !dead.contains(o)))
+    }
+
+    /// Replication degree achieved per pair (min over pairs).
+    pub fn min_replication(&self) -> usize {
+        self.owners.iter().map(|os| os.len()).min().unwrap_or(0)
+    }
+}
+
+fn pair_hash(a: usize, b: usize) -> u64 {
+    // SplitMix-style mix of the pair.
+    let mut z = (a as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ (b as u64).wrapping_add(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    fn q(p: usize) -> CyclicQuorumSet {
+        CyclicQuorumSet::for_processes(p).unwrap()
+    }
+
+    #[test]
+    fn index_is_bijective() {
+        let p = 9;
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..p {
+            for b in a..p {
+                assert!(seen.insert(PairAssignment::index(p, a, b)), "dup at ({a},{b})");
+            }
+        }
+        assert_eq!(seen.len(), crate::util::pairs_with_self(p));
+        assert_eq!(*seen.iter().max().unwrap(), crate::util::pairs_with_self(p) - 1);
+    }
+
+    #[test]
+    fn all_policies_produce_valid_assignments() {
+        for p in [4usize, 7, 13, 16] {
+            let qs = q(p);
+            for policy in [OwnerPolicy::First, OwnerPolicy::Hash, OwnerPolicy::LeastLoaded] {
+                let a = PairAssignment::build(&qs, policy);
+                a.verify(&qs).unwrap_or_else(|e| panic!("P={p} {policy:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn least_loaded_is_balanced() {
+        let qs = q(16);
+        let a = PairAssignment::build(&qs, OwnerPolicy::LeastLoaded);
+        // 136 pairs over 16 processes = 8.5 mean; max should stay close.
+        assert!(a.imbalance() < 1.35, "imbalance {}", a.imbalance());
+        let first = PairAssignment::build(&qs, OwnerPolicy::First);
+        assert!(a.imbalance() <= first.imbalance() + 1e-9);
+    }
+
+    #[test]
+    fn owner_is_order_insensitive() {
+        let qs = q(7);
+        let a = PairAssignment::build(&qs, OwnerPolicy::Hash);
+        for x in 0..7 {
+            for y in 0..7 {
+                assert_eq!(a.owner(x, y), a.owner(y, x));
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_partition_all_pairs() {
+        let qs = q(13);
+        let a = PairAssignment::build(&qs, OwnerPolicy::LeastLoaded);
+        let mut all: Vec<PairTask> = (0..13).flat_map(|pr| a.tasks_for(pr)).collect();
+        all.sort();
+        assert_eq!(all, super::super::all_pair_tasks(13));
+    }
+
+    #[test]
+    fn prop_exactly_once_ownership() {
+        forall("exactly-once ownership", 25, |g| {
+            let p = g.usize_in(4, 40);
+            let qs = q(p);
+            let policy = *g.pick(&[OwnerPolicy::First, OwnerPolicy::Hash, OwnerPolicy::LeastLoaded]);
+            let a = PairAssignment::build(&qs, policy);
+            a.verify(&qs).unwrap();
+            // Sum of per-process tasks equals total pairs.
+            let total: usize = (0..p).map(|pr| a.tasks_for(pr).len()).sum();
+            assert_eq!(total, crate::util::pairs_with_self(p));
+        });
+    }
+}

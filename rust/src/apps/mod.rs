@@ -1,0 +1,6 @@
+//! Example application domains built on the all-pairs engine: the paper's
+//! introduction motivates n-body (§1, molecular dynamics) and biometric
+//! similarity matrices [2]; both reuse the quorum ownership machinery.
+
+pub mod nbody;
+pub mod similarity;

@@ -1,0 +1,254 @@
+//! N-body gravity via quorum all-pairs — the paper's §1 motivating domain
+//! (atom/force decomposition come from molecular dynamics).
+//!
+//! Forces are computed block-pairwise: every unordered block pair is owned
+//! by exactly one simulated rank (the same `PairAssignment` machinery as
+//! PCIT), each rank holding only its quorum's particle blocks. Newton's
+//! third law is exploited inside a block pair: computing (a, b) yields both
+//! blocks' partial forces.
+
+use crate::allpairs::{OwnerPolicy, PairAssignment};
+use crate::data::Partition;
+use crate::pool::ThreadPool;
+use crate::quorum::CyclicQuorumSet;
+use crate::util::prng::Rng;
+
+/// Particle system state (structure-of-arrays).
+#[derive(Clone, Debug)]
+pub struct Bodies {
+    pub n: usize,
+    pub mass: Vec<f64>,
+    pub pos: Vec<[f64; 3]>,
+    pub vel: Vec<[f64; 3]>,
+}
+
+/// Softening length to avoid singular forces.
+pub const SOFTENING: f64 = 1e-2;
+/// Gravitational constant (natural units).
+pub const G: f64 = 1.0;
+
+impl Bodies {
+    /// Random cold-ish cluster in the unit cube.
+    pub fn random(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mass = (0..n).map(|_| 0.5 + rng.f64()).collect();
+        let pos = (0..n).map(|_| [rng.f64(), rng.f64(), rng.f64()]).collect();
+        let vel = (0..n)
+            .map(|_| {
+                [
+                    rng.f64() * 0.1 - 0.05,
+                    rng.f64() * 0.1 - 0.05,
+                    rng.f64() * 0.1 - 0.05,
+                ]
+            })
+            .collect();
+        Self { n, mass, pos, vel }
+    }
+
+    /// Total energy (kinetic + softened potential), O(n²).
+    pub fn total_energy(&self) -> f64 {
+        let mut e = 0.0;
+        for i in 0..self.n {
+            let v = self.vel[i];
+            e += 0.5 * self.mass[i] * (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]);
+        }
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let d = dist2(self.pos[i], self.pos[j]);
+                e -= G * self.mass[i] * self.mass[j] / (d + SOFTENING * SOFTENING).sqrt();
+            }
+        }
+        e
+    }
+}
+
+#[inline]
+fn dist2(a: [f64; 3], b: [f64; 3]) -> f64 {
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    let dz = a[2] - b[2];
+    dx * dx + dy * dy + dz * dz
+}
+
+/// Pairwise force accumulation between two index ranges (a == b handled by
+/// computing each unordered pair once and symmetrizing). Returns
+/// (forces_on_a, forces_on_b) — both must be reduced by the caller.
+fn block_pair_forces(
+    bodies: &Bodies,
+    ra: std::ops::Range<usize>,
+    rb: std::ops::Range<usize>,
+) -> (Vec<[f64; 3]>, Vec<[f64; 3]>) {
+    let diag = ra == rb;
+    let mut fa = vec![[0.0; 3]; ra.len()];
+    let mut fb = vec![[0.0; 3]; rb.len()];
+    for (ii, i) in ra.clone().enumerate() {
+        for (jj, j) in rb.clone().enumerate() {
+            if diag && j <= i {
+                continue;
+            }
+            let pi = bodies.pos[i];
+            let pj = bodies.pos[j];
+            let dx = pj[0] - pi[0];
+            let dy = pj[1] - pi[1];
+            let dz = pj[2] - pi[2];
+            let r2 = dx * dx + dy * dy + dz * dz + SOFTENING * SOFTENING;
+            let inv_r3 = 1.0 / (r2 * r2.sqrt());
+            let s = G * bodies.mass[i] * bodies.mass[j] * inv_r3;
+            fa[ii][0] += s * dx;
+            fa[ii][1] += s * dy;
+            fa[ii][2] += s * dz;
+            fb[jj][0] -= s * dx;
+            fb[jj][1] -= s * dy;
+            fb[jj][2] -= s * dz;
+        }
+    }
+    (fa, fb)
+}
+
+/// Direct O(n²) forces — the reference.
+pub fn forces_direct(bodies: &Bodies) -> Vec<[f64; 3]> {
+    let (fa, fb) = block_pair_forces(bodies, 0..bodies.n, 0..bodies.n);
+    fa.into_iter()
+        .zip(fb)
+        .map(|(a, b)| [a[0] + b[0], a[1] + b[1], a[2] + b[2]])
+        .collect()
+}
+
+/// Quorum-decomposed forces: blocks partitioned over `ranks` simulated
+/// processes, every block pair computed exactly once by its owner, partial
+/// forces reduced. Matches `forces_direct` up to float reordering.
+pub fn forces_quorum(
+    bodies: &Bodies,
+    ranks: usize,
+    pool: &ThreadPool,
+) -> anyhow::Result<Vec<[f64; 3]>> {
+    let q = CyclicQuorumSet::for_processes(ranks)?;
+    let assignment = PairAssignment::build(&q, OwnerPolicy::LeastLoaded);
+    let part = Partition::new(bodies.n, ranks);
+    type Partial = (std::ops::Range<usize>, Vec<[f64; 3]>);
+    let partials: Vec<Vec<Partial>> = pool.parallel_map(ranks, |rank| {
+        let mut out: Vec<Partial> = Vec::new();
+        for t in assignment.tasks_for(rank) {
+            let ra = part.range(t.a);
+            let rb = part.range(t.b);
+            if ra.is_empty() && rb.is_empty() {
+                continue;
+            }
+            let (fa, fb) = block_pair_forces(bodies, ra.clone(), rb.clone());
+            out.push((ra, fa));
+            out.push((rb, fb));
+        }
+        out
+    });
+    let mut forces = vec![[0.0; 3]; bodies.n];
+    for rank_partials in partials {
+        for (range, fs) in rank_partials {
+            for (off, f) in fs.into_iter().enumerate() {
+                let i = range.start + off;
+                forces[i][0] += f[0];
+                forces[i][1] += f[1];
+                forces[i][2] += f[2];
+            }
+        }
+    }
+    Ok(forces)
+}
+
+/// One leapfrog (kick-drift) half: kick velocities by dt/2, drift positions.
+pub fn leapfrog_step(bodies: &mut Bodies, dt: f64, forces: &[[f64; 3]]) {
+    for i in 0..bodies.n {
+        let inv_m = 1.0 / bodies.mass[i];
+        for d in 0..3 {
+            bodies.vel[i][d] += 0.5 * dt * forces[i][d] * inv_m;
+            bodies.pos[i][d] += dt * bodies.vel[i][d];
+        }
+    }
+}
+
+/// Complete the kick after recomputing forces at the new positions.
+pub fn leapfrog_finish(bodies: &mut Bodies, dt: f64, forces: &[[f64; 3]]) {
+    for i in 0..bodies.n {
+        let inv_m = 1.0 / bodies.mass[i];
+        for d in 0..3 {
+            bodies.vel[i][d] += 0.5 * dt * forces[i][d] * inv_m;
+        }
+    }
+}
+
+/// Run `steps` of leapfrog with quorum-decomposed forces; returns relative
+/// energy drift |E_end − E_0| / |E_0|.
+pub fn simulate(
+    bodies: &mut Bodies,
+    ranks: usize,
+    steps: usize,
+    dt: f64,
+    pool: &ThreadPool,
+) -> anyhow::Result<f64> {
+    let e0 = bodies.total_energy();
+    let mut forces = forces_quorum(bodies, ranks, pool)?;
+    for _ in 0..steps {
+        leapfrog_step(bodies, dt, &forces);
+        forces = forces_quorum(bodies, ranks, pool)?;
+        leapfrog_finish(bodies, dt, &forces);
+    }
+    let e1 = bodies.total_energy();
+    Ok(((e1 - e0) / e0.abs()).abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quorum_forces_match_direct() {
+        let b = Bodies::random(60, 7);
+        let pool = ThreadPool::new(4);
+        let direct = forces_direct(&b);
+        for ranks in [4usize, 7, 9] {
+            let q = forces_quorum(&b, ranks, &pool).unwrap();
+            for i in 0..b.n {
+                for d in 0..3 {
+                    assert!(
+                        (q[i][d] - direct[i][d]).abs() < 1e-9 * (1.0 + direct[i][d].abs()),
+                        "ranks={ranks} body {i} dim {d}: {} vs {}",
+                        q[i][d],
+                        direct[i][d]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn momentum_conserved() {
+        let b = Bodies::random(40, 9);
+        let pool = ThreadPool::new(2);
+        let f = forces_quorum(&b, 5, &pool).unwrap();
+        let total: [f64; 3] = f
+            .iter()
+            .fold([0.0; 3], |acc, x| [acc[0] + x[0], acc[1] + x[1], acc[2] + x[2]]);
+        for d in 0..3 {
+            assert!(total[d].abs() < 1e-9, "net force must vanish: {total:?}");
+        }
+    }
+
+    #[test]
+    fn energy_drift_small() {
+        let mut b = Bodies::random(32, 11);
+        let pool = ThreadPool::new(2);
+        let drift = simulate(&mut b, 4, 20, 1e-3, &pool).unwrap();
+        assert!(drift < 0.05, "leapfrog energy drift too large: {drift}");
+    }
+
+    #[test]
+    fn uneven_blocks_ok() {
+        // n not divisible by ranks → trailing short/empty blocks.
+        let b = Bodies::random(23, 13);
+        let pool = ThreadPool::new(2);
+        let direct = forces_direct(&b);
+        let q = forces_quorum(&b, 7, &pool).unwrap();
+        for i in 0..b.n {
+            assert!((q[i][0] - direct[i][0]).abs() < 1e-9);
+        }
+    }
+}

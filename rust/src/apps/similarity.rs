@@ -1,0 +1,160 @@
+//! All-pairs cosine similarity — the biometrics use case from the paper's
+//! introduction (similarity matrix over feature vectors, e.g. face
+//! embeddings [2]).
+//!
+//! Reuses the correlation machinery: cosine similarity over L2-normalized
+//! rows is exactly the same `Z·Zᵀ` tile the PCIT phase-1 computes, so the
+//! distributed path exercises the same executors and ownership logic.
+
+use crate::allpairs::{OwnerPolicy, PairAssignment};
+use crate::data::Partition;
+use crate::pool::ThreadPool;
+use crate::quorum::CyclicQuorumSet;
+use crate::runtime::Executor;
+use crate::util::Matrix;
+
+/// L2-normalize rows (zero rows stay zero).
+pub fn normalize_rows(features: &Matrix) -> Matrix {
+    let (n, m) = features.shape();
+    let mut out = Matrix::zeros(n, m);
+    for r in 0..n {
+        let row = features.row(r);
+        let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let dst = out.row_mut(r);
+        if norm > 0.0 {
+            for (o, &v) in dst.iter_mut().zip(row) {
+                *o = v / norm;
+            }
+        }
+    }
+    out
+}
+
+/// Direct N×N cosine similarity (reference).
+pub fn similarity_direct(features: &Matrix) -> Matrix {
+    let z = normalize_rows(features);
+    let mut s = z.matmul_nt(&z);
+    for v in s.as_mut_slice() {
+        *v = v.clamp(-1.0, 1.0);
+    }
+    s
+}
+
+/// Distributed cosine similarity: block pairs owned via cyclic quorums and
+/// executed on `ranks` simulated processes sharing `executor` tiles.
+/// Returns the full N×N matrix (assembled at the "leader").
+pub fn similarity_quorum(
+    features: &Matrix,
+    ranks: usize,
+    executor: &Executor,
+    pool: &ThreadPool,
+) -> anyhow::Result<Matrix> {
+    let n = features.rows();
+    let z = normalize_rows(features);
+    let q = CyclicQuorumSet::for_processes(ranks)?;
+    let assignment = PairAssignment::build(&q, OwnerPolicy::LeastLoaded);
+    let part = Partition::new(n, ranks);
+    let tiles: Vec<Vec<(usize, usize, Matrix)>> = pool.parallel_map(ranks, |rank| {
+        let mut out = Vec::new();
+        for t in assignment.tasks_for(rank) {
+            let ra = part.range(t.a);
+            let rb = part.range(t.b);
+            if ra.is_empty() || rb.is_empty() {
+                continue;
+            }
+            let za = z.block(ra.start, 0, ra.len(), z.cols());
+            let zb = z.block(rb.start, 0, rb.len(), z.cols());
+            let tile = executor.corr_tile(&za, &zb);
+            out.push((ra.start, rb.start, tile));
+        }
+        out
+    });
+    let mut s = Matrix::zeros(n, n);
+    for rank_tiles in tiles {
+        for (r0, c0, tile) in rank_tiles {
+            // Write both orientations (symmetric matrix).
+            let t = tile.transpose();
+            s.set_block(r0, c0, &tile);
+            s.set_block(c0, r0, &t);
+        }
+    }
+    Ok(s)
+}
+
+/// Top-k most similar pairs (x, y, sim) with x < y, descending.
+pub fn top_pairs(sim: &Matrix, k: usize) -> Vec<(usize, usize, f32)> {
+    let n = sim.rows();
+    let mut pairs: Vec<(usize, usize, f32)> = Vec::with_capacity(n * (n - 1) / 2);
+    for x in 0..n {
+        for y in (x + 1)..n {
+            pairs.push((x, y, sim[(x, y)]));
+        }
+    }
+    pairs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    pairs.truncate(k);
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::util::prng::Rng;
+    use std::sync::Arc;
+
+    fn features(n: usize, m: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, m, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn quorum_matches_direct() {
+        let f = features(50, 16, 3);
+        let pool = ThreadPool::new(4);
+        let exec: Executor = Arc::new(NativeBackend::new());
+        let direct = similarity_direct(&f);
+        for ranks in [4usize, 6, 11] {
+            let dist = similarity_quorum(&f, ranks, &exec, &pool).unwrap();
+            assert!(
+                direct.max_abs_diff(&dist) < 1e-5,
+                "ranks={ranks} diff {}",
+                direct.max_abs_diff(&dist)
+            );
+        }
+    }
+
+    #[test]
+    fn self_similarity_is_one() {
+        let f = features(20, 8, 5);
+        let s = similarity_direct(&f);
+        for i in 0..20 {
+            assert!((s[(i, i)] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_rows_handled() {
+        let mut f = features(8, 4, 7);
+        f.row_mut(3).fill(0.0);
+        let s = similarity_direct(&f);
+        for j in 0..8 {
+            if j != 3 {
+                assert_eq!(s[(3, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn top_pairs_sorted() {
+        let f = features(15, 6, 9);
+        let s = similarity_direct(&f);
+        let top = top_pairs(&s, 10);
+        assert_eq!(top.len(), 10);
+        for w in top.windows(2) {
+            assert!(w[0].2 >= w[1].2);
+        }
+        for &(x, y, _) in &top {
+            assert!(x < y);
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Bench harness for `cargo bench` targets (criterion is unavailable
+//! offline): warmup + timed iterations, summary stats, aligned tables.
+//!
+//! Benches are plain binaries (`harness = false`) that print the rows the
+//! paper's tables/figures report; `tee` into bench_output.txt.
+
+use crate::metrics::Table;
+use crate::util::stats::Summary;
+use crate::util::timer::Stopwatch;
+
+/// One benchmark measurement: run `f` for `warmup` + `iters` iterations.
+pub fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        std::hint::black_box(f());
+        s.push(sw.elapsed_secs());
+    }
+    s
+}
+
+/// Format a summary as "mean ± ci95 (min..max)".
+pub fn format_summary(s: &Summary) -> String {
+    format!(
+        "{} ± {} (min {})",
+        crate::util::timer::format_secs(s.mean),
+        crate::util::timer::format_secs(s.ci95_half_width()),
+        crate::util::timer::format_secs(s.min),
+    )
+}
+
+/// Print a table to stdout with a blank line around it.
+pub fn emit(table: &Table) {
+    println!();
+    println!("{}", table.render());
+}
+
+/// Parse `--quick` style bench args (smaller workloads for CI).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("QUORALL_BENCH_QUICK").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let s = measure(1, 5, || 2 + 2);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn format_includes_units() {
+        let s = measure(0, 3, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        let f = format_summary(&s);
+        assert!(f.contains("±"));
+    }
+}

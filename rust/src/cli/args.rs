@@ -1,0 +1,330 @@
+//! Declarative flag/subcommand parser.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Kind + metadata of one flag.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub required: bool,
+}
+
+impl ArgSpec {
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, takes_value: false, default: None, required: false }
+    }
+
+    pub fn opt(name: &'static str, help: &'static str, default: &'static str) -> Self {
+        Self { name, help, takes_value: true, default: Some(default), required: false }
+    }
+
+    pub fn req(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, takes_value: true, default: None, required: true }
+    }
+}
+
+/// A subcommand: name, blurb, flags, positional names.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+    pub positionals: Vec<&'static str>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, args: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn arg(mut self, spec: ArgSpec) -> Self {
+        self.args.push(spec);
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str) -> Self {
+        self.positionals.push(name);
+        self
+    }
+}
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgValue {
+    Bool(bool),
+    Str(String),
+}
+
+/// Parse result for a matched subcommand.
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    pub command: &'static str,
+    values: BTreeMap<&'static str, ArgValue>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        match self.values.get(name) {
+            Some(ArgValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        matches!(self.values.get(name), Some(ArgValue::Bool(true)))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let s = self.get_str(name).ok_or_else(|| CliError(format!("missing --{name}")))?;
+        s.parse().map_err(|_| CliError(format!("--{name} expects an integer, got '{s}'")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let s = self.get_str(name).ok_or_else(|| CliError(format!("missing --{name}")))?;
+        s.parse().map_err(|_| CliError(format!("--{name} expects an integer, got '{s}'")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let s = self.get_str(name).ok_or_else(|| CliError(format!("missing --{name}")))?;
+        s.parse().map_err(|_| CliError(format!("--{name} expects a number, got '{s}'")))
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Outcome of top-level parsing.
+#[derive(Debug)]
+pub enum ParseOutcome {
+    /// A subcommand matched.
+    Run(Parsed),
+    /// `--help`/`help` was requested; the rendered text is included.
+    Help(String),
+    /// Parse error with usage text.
+    Error(CliError, String),
+}
+
+/// The application: a list of subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '<COMMAND> --help' for command options.\n");
+        s
+    }
+
+    pub fn command_usage(&self, c: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nUSAGE:\n  {} {}", self.name, c.name, c.about, self.name, c.name);
+        for p in &c.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for a in &c.args {
+            let left = if a.takes_value { format!("--{} <VALUE>", a.name) } else { format!("--{}", a.name) };
+            let mut right = a.help.to_string();
+            if let Some(d) = a.default {
+                right.push_str(&format!(" [default: {d}]"));
+            }
+            if a.required {
+                right.push_str(" [required]");
+            }
+            s.push_str(&format!("  {:<24} {}\n", left, right));
+        }
+        s
+    }
+
+    /// Parse `argv` (without the binary name).
+    pub fn parse(&self, argv: &[String]) -> ParseOutcome {
+        if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" || argv[0] == "-h" {
+            return ParseOutcome::Help(self.usage());
+        }
+        let cmd_name = &argv[0];
+        let Some(cmd) = self.commands.iter().find(|c| c.name == *cmd_name) else {
+            return ParseOutcome::Error(
+                CliError(format!("unknown command '{cmd_name}'")),
+                self.usage(),
+            );
+        };
+        let mut values: BTreeMap<&'static str, ArgValue> = BTreeMap::new();
+        for a in &cmd.args {
+            if let Some(d) = a.default {
+                values.insert(a.name, ArgValue::Str(d.to_string()));
+            } else if !a.takes_value {
+                values.insert(a.name, ArgValue::Bool(false));
+            }
+        }
+        let mut positionals = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return ParseOutcome::Help(self.command_usage(cmd));
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                // --name=value or --name value
+                let (name, inline_val) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let Some(spec) = cmd.args.iter().find(|a| a.name == name) else {
+                    return ParseOutcome::Error(
+                        CliError(format!("unknown option '--{name}' for '{}'", cmd.name)),
+                        self.command_usage(cmd),
+                    );
+                };
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            match argv.get(i) {
+                                Some(v) => v.clone(),
+                                None => {
+                                    return ParseOutcome::Error(
+                                        CliError(format!("option '--{name}' expects a value")),
+                                        self.command_usage(cmd),
+                                    )
+                                }
+                            }
+                        }
+                    };
+                    values.insert(spec.name, ArgValue::Str(val));
+                } else {
+                    if inline_val.is_some() {
+                        return ParseOutcome::Error(
+                            CliError(format!("flag '--{name}' does not take a value")),
+                            self.command_usage(cmd),
+                        );
+                    }
+                    values.insert(spec.name, ArgValue::Bool(true));
+                }
+            } else {
+                positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        if positionals.len() > cmd.positionals.len() {
+            return ParseOutcome::Error(
+                CliError(format!(
+                    "too many positional arguments for '{}' (expected at most {})",
+                    cmd.name,
+                    cmd.positionals.len()
+                )),
+                self.command_usage(cmd),
+            );
+        }
+        for a in &cmd.args {
+            if a.required && !values.contains_key(a.name) {
+                return ParseOutcome::Error(
+                    CliError(format!("missing required option '--{}'", a.name)),
+                    self.command_usage(cmd),
+                );
+            }
+        }
+        ParseOutcome::Run(Parsed { command: cmd.name, values, positionals })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("quorall", "test app")
+            .command(
+                Command::new("run", "run things")
+                    .arg(ArgSpec::opt("ranks", "number of ranks", "4"))
+                    .arg(ArgSpec::flag("verbose", "talk more"))
+                    .arg(ArgSpec::req("config", "config path")),
+            )
+            .command(Command::new("info", "show info").positional("what"))
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_defaults() {
+        let out = app().parse(&sv(&["run", "--config", "c.toml", "--verbose"]));
+        let ParseOutcome::Run(p) = out else { panic!("expected run") };
+        assert_eq!(p.get_str("config"), Some("c.toml"));
+        assert_eq!(p.get_usize("ranks").unwrap(), 4); // default
+        assert!(p.get_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let out = app().parse(&sv(&["run", "--config=c.toml", "--ranks=16"]));
+        let ParseOutcome::Run(p) = out else { panic!() };
+        assert_eq!(p.get_usize("ranks").unwrap(), 16);
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        let out = app().parse(&sv(&["run"]));
+        assert!(matches!(out, ParseOutcome::Error(..)));
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(matches!(app().parse(&sv(&["bogus"])), ParseOutcome::Error(..)));
+        assert!(matches!(
+            app().parse(&sv(&["run", "--config", "x", "--bogus"])),
+            ParseOutcome::Error(..)
+        ));
+    }
+
+    #[test]
+    fn help_variants() {
+        assert!(matches!(app().parse(&sv(&[])), ParseOutcome::Help(_)));
+        assert!(matches!(app().parse(&sv(&["--help"])), ParseOutcome::Help(_)));
+        assert!(matches!(app().parse(&sv(&["run", "--help"])), ParseOutcome::Help(_)));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let out = app().parse(&sv(&["info", "datasets"]));
+        let ParseOutcome::Run(p) = out else { panic!() };
+        assert_eq!(p.positionals, vec!["datasets".to_string()]);
+        // too many
+        assert!(matches!(app().parse(&sv(&["info", "a", "b"])), ParseOutcome::Error(..)));
+    }
+
+    #[test]
+    fn typed_getters_report_errors() {
+        let out = app().parse(&sv(&["run", "--config", "c", "--ranks", "abc"]));
+        let ParseOutcome::Run(p) = out else { panic!() };
+        assert!(p.get_usize("ranks").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Command-line argument parsing (the launcher's front end).
+//!
+//! A small declarative parser: subcommands with typed flags, `--help`
+//! generation, and friendly errors. Built in-house because `clap` is not
+//! available in the offline build image.
+
+pub mod args;
+
+pub use args::{App, ArgSpec, ArgValue, CliError, Command, ParseOutcome, Parsed};

@@ -1,0 +1,13 @@
+//! Configuration system: a TOML-subset parser plus a typed run
+//! configuration ([`RunConfig`]) consumed by the launcher.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments.
+//! (No nested tables-in-arrays, no multiline strings — the config surface
+//! of this project does not need them.)
+
+pub mod parser;
+pub mod schema;
+
+pub use parser::{ConfigError, TomlDoc, TomlValue};
+pub use schema::{BackendKind, DatasetConfig, PcitMode, RunConfig};

@@ -1,0 +1,301 @@
+//! TOML-subset parser (see module docs in `config/mod.rs`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section -> key -> value`. Top-level keys live in the
+/// `""` section.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error (line {}): {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, ConfigError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ConfigError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+            } else {
+                let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let vs = line[eq + 1..].trim();
+                let value = parse_value(vs).map_err(|m| err(&m))?;
+                doc.sections.get_mut(&section).unwrap().insert(key.to_string(), value);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<TomlDoc, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError { line: 0, msg: format!("cannot read {}: {e}", path.display()) })?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(|v| v.as_str())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key).and_then(|v| v.as_usize())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(|v| v.as_bool())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return Err(format!("bad escape: \\{other:?}")),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# a comment
+title = "run one"
+workers = 16
+
+[dataset]
+n_genes = 1536
+n_samples = 48.5
+synthetic = true
+sizes = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "title"), Some("run one"));
+        assert_eq!(doc.get_usize("", "workers"), Some(16));
+        assert_eq!(doc.get_usize("dataset", "n_genes"), Some(1536));
+        assert_eq!(doc.get_f64("dataset", "n_samples"), Some(48.5));
+        assert_eq!(doc.get_bool("dataset", "synthetic"), Some(true));
+        assert_eq!(doc.get("dataset", "sizes").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn comments_in_strings_kept() {
+        let doc = TomlDoc::parse("k = \"a # b\" # real comment").unwrap();
+        assert_eq!(doc.get_str("", "k"), Some("a # b"));
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = TomlDoc::parse(r#"k = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.get_str("", "k"), Some("a\nb\t\"c\""));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.get_usize("", "n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn arrays_nested() {
+        let doc = TomlDoc::parse("a = [[1, 2], [3]]").unwrap();
+        let a = doc.get("", "a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn negative_and_float() {
+        let doc = TomlDoc::parse("a = -5\nb = -2.5").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-5));
+        assert_eq!(doc.get_f64("", "b"), Some(-2.5));
+    }
+}

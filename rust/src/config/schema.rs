@@ -1,0 +1,311 @@
+//! Typed run configuration: validated view over a [`TomlDoc`].
+//!
+//! Example config (see `examples/configs/`):
+//!
+//! ```toml
+//! [run]
+//! ranks = 16            # simulated MPI ranks (P)
+//! threads_per_rank = 2  # pool threads inside each rank
+//! mode = "quorum-exact" # single | quorum-exact | quorum-local
+//! backend = "native"    # native | xla
+//! block = 64            # tile edge for pair blocks
+//! seed = 42
+//!
+//! [dataset]
+//! kind = "synthetic"    # synthetic | csv
+//! genes = 1536
+//! samples = 48
+//! modules = 24          # planted correlated modules
+//! noise = 0.6
+//! # path = "data/expr.csv"  (kind = "csv")
+//!
+//! [pcit]
+//! significance = "pcit" # pcit | threshold
+//! threshold = 0.85      # used when significance = "threshold"
+//! ```
+
+use super::parser::{ConfigError, TomlDoc};
+use std::path::PathBuf;
+
+/// Which PCIT execution strategy to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PcitMode {
+    /// Single-node exact PCIT (the paper's baseline, Koesterke et al.).
+    Single,
+    /// Distributed, exact: quorum phase-1 + ring-exchange phase-2.
+    QuorumExact,
+    /// Distributed, approximate: tolerance scan restricted to the owner's
+    /// quorum genes (ablation).
+    QuorumLocal,
+}
+
+impl PcitMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "single" => Some(PcitMode::Single),
+            "quorum-exact" | "exact" => Some(PcitMode::QuorumExact),
+            "quorum-local" | "local" => Some(PcitMode::QuorumLocal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PcitMode::Single => "single",
+            PcitMode::QuorumExact => "quorum-exact",
+            PcitMode::QuorumLocal => "quorum-local",
+        }
+    }
+}
+
+/// Tile execution backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust tile kernels (always available).
+    Native,
+    /// AOT-compiled XLA artifacts via PJRT (requires `make artifacts`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "xla" | "pjrt" => Some(BackendKind::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Dataset source description.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetConfig {
+    Synthetic { genes: usize, samples: usize, modules: usize, noise: f64 },
+    Csv { path: PathBuf },
+}
+
+impl DatasetConfig {
+    pub fn describe(&self) -> String {
+        match self {
+            DatasetConfig::Synthetic { genes, samples, modules, noise } => {
+                format!("synthetic(N={genes}, M={samples}, modules={modules}, noise={noise})")
+            }
+            DatasetConfig::Csv { path } => format!("csv({})", path.display()),
+        }
+    }
+}
+
+/// Complete, validated run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub ranks: usize,
+    pub threads_per_rank: usize,
+    pub mode: PcitMode,
+    pub backend: BackendKind,
+    pub block: usize,
+    pub seed: u64,
+    pub dataset: DatasetConfig,
+    /// PCIT significance variant: true = full PCIT, false = plain |r| cutoff.
+    pub use_pcit_significance: bool,
+    pub threshold: f64,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            ranks: 4,
+            threads_per_rank: 1,
+            mode: PcitMode::QuorumExact,
+            backend: BackendKind::Native,
+            block: 64,
+            seed: 42,
+            dataset: DatasetConfig::Synthetic { genes: 512, samples: 32, modules: 8, noise: 0.6 },
+            use_pcit_significance: true,
+            threshold: 0.85,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed document, applying defaults for missing keys and
+    /// validating cross-field constraints.
+    pub fn from_doc(doc: &TomlDoc) -> Result<RunConfig, ConfigError> {
+        let mut cfg = RunConfig::default();
+        let bad = |msg: String| ConfigError { line: 0, msg };
+
+        if let Some(v) = doc.get_usize("run", "ranks") {
+            cfg.ranks = v;
+        }
+        if let Some(v) = doc.get_usize("run", "threads_per_rank") {
+            cfg.threads_per_rank = v;
+        }
+        if let Some(s) = doc.get_str("run", "mode") {
+            cfg.mode = PcitMode::parse(s).ok_or_else(|| bad(format!("bad run.mode: {s}")))?;
+        }
+        if let Some(s) = doc.get_str("run", "backend") {
+            cfg.backend = BackendKind::parse(s).ok_or_else(|| bad(format!("bad run.backend: {s}")))?;
+        }
+        if let Some(v) = doc.get_usize("run", "block") {
+            cfg.block = v;
+        }
+        if let Some(v) = doc.get_usize("run", "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(s) = doc.get_str("run", "artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(s);
+        }
+
+        let kind = doc.get_str("dataset", "kind").unwrap_or("synthetic");
+        cfg.dataset = match kind {
+            "synthetic" => DatasetConfig::Synthetic {
+                genes: doc.get_usize("dataset", "genes").unwrap_or(512),
+                samples: doc.get_usize("dataset", "samples").unwrap_or(32),
+                modules: doc.get_usize("dataset", "modules").unwrap_or(8),
+                noise: doc.get_f64("dataset", "noise").unwrap_or(0.6),
+            },
+            "csv" => {
+                let p = doc
+                    .get_str("dataset", "path")
+                    .ok_or_else(|| bad("dataset.kind = \"csv\" requires dataset.path".into()))?;
+                DatasetConfig::Csv { path: PathBuf::from(p) }
+            }
+            other => return Err(bad(format!("bad dataset.kind: {other}"))),
+        };
+
+        if let Some(s) = doc.get_str("pcit", "significance") {
+            cfg.use_pcit_significance = match s {
+                "pcit" => true,
+                "threshold" => false,
+                other => return Err(bad(format!("bad pcit.significance: {other}"))),
+            };
+        }
+        if let Some(v) = doc.get_f64("pcit", "threshold") {
+            cfg.threshold = v;
+        }
+
+        cfg.validate().map_err(|m| bad(m))?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<RunConfig, ConfigError> {
+        Self::from_doc(&TomlDoc::parse_file(path)?)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ranks == 0 {
+            return Err("run.ranks must be >= 1".into());
+        }
+        if self.mode != PcitMode::Single && self.ranks != 1 && self.ranks < 4 {
+            return Err(format!(
+                "quorum modes need ranks >= 4 (got {}); cyclic quorum tables start at P = 4",
+                self.ranks
+            ));
+        }
+        if self.threads_per_rank == 0 {
+            return Err("run.threads_per_rank must be >= 1".into());
+        }
+        if self.block == 0 || self.block > 1024 {
+            return Err(format!("run.block must be in 1..=1024 (got {})", self.block));
+        }
+        if !(0.0..=1.0).contains(&self.threshold) {
+            return Err(format!("pcit.threshold must be in [0,1] (got {})", self.threshold));
+        }
+        if let DatasetConfig::Synthetic { genes, samples, .. } = self.dataset {
+            if genes < 2 {
+                return Err("dataset.genes must be >= 2".into());
+            }
+            if samples < 3 {
+                return Err("dataset.samples must be >= 3 (correlation needs df)".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(s: &str) -> TomlDoc {
+        TomlDoc::parse(s).unwrap()
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_config_round_trip() {
+        let cfg = RunConfig::from_doc(&doc(r#"
+[run]
+ranks = 16
+threads_per_rank = 2
+mode = "quorum-local"
+backend = "native"
+block = 32
+seed = 7
+
+[dataset]
+kind = "synthetic"
+genes = 256
+samples = 24
+modules = 4
+noise = 0.3
+
+[pcit]
+significance = "threshold"
+threshold = 0.9
+"#))
+        .unwrap();
+        assert_eq!(cfg.ranks, 16);
+        assert_eq!(cfg.mode, PcitMode::QuorumLocal);
+        assert_eq!(cfg.block, 32);
+        assert!(!cfg.use_pcit_significance);
+        assert_eq!(cfg.threshold, 0.9);
+        assert_eq!(
+            cfg.dataset,
+            DatasetConfig::Synthetic { genes: 256, samples: 24, modules: 4, noise: 0.3 }
+        );
+    }
+
+    #[test]
+    fn csv_requires_path() {
+        assert!(RunConfig::from_doc(&doc("[dataset]\nkind = \"csv\"")).is_err());
+        let cfg = RunConfig::from_doc(&doc("[dataset]\nkind = \"csv\"\npath = \"x.csv\"")).unwrap();
+        assert_eq!(cfg.dataset, DatasetConfig::Csv { path: PathBuf::from("x.csv") });
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 0")).is_err());
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 3")).is_err()); // quorums start at 4
+        assert!(RunConfig::from_doc(&doc("[run]\nmode = \"bogus\"")).is_err());
+        assert!(RunConfig::from_doc(&doc("[pcit]\nthreshold = 1.5")).is_err());
+        assert!(RunConfig::from_doc(&doc("[dataset]\nkind = \"synthetic\"\nsamples = 1")).is_err());
+    }
+
+    #[test]
+    fn single_mode_allows_one_rank() {
+        let cfg = RunConfig::from_doc(&doc("[run]\nranks = 1\nmode = \"single\"")).unwrap();
+        assert_eq!(cfg.mode, PcitMode::Single);
+    }
+
+    #[test]
+    fn mode_and_backend_names() {
+        assert_eq!(PcitMode::parse("quorum-exact"), Some(PcitMode::QuorumExact));
+        assert_eq!(PcitMode::QuorumExact.name(), "quorum-exact");
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::Native.name(), "native");
+    }
+}

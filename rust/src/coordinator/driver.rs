@@ -1,0 +1,379 @@
+//! High-level drivers: spawn a simulated cluster and run distributed PCIT,
+//! or run the single-node baseline.
+
+use super::leader::{leader_main, LeaderOutcome};
+use super::transport::Transport;
+use super::worker::{worker_main, Plan, MODE_EXACT, MODE_LOCAL};
+use crate::allpairs::OwnerPolicy;
+use crate::config::{PcitMode, RunConfig};
+use crate::data::synthetic::ExpressionDataset;
+use crate::pcit::network::Network;
+use crate::pcit::{exact_pcit, standardize_rows};
+use crate::pool::ThreadPool;
+use crate::quorum::CyclicQuorumSet;
+use crate::runtime::Executor;
+use crate::util::ceil_div;
+use crate::util::timer::Stopwatch;
+
+/// Per-rank execution statistics (sent worker → leader at completion).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankStats {
+    pub rank: usize,
+    pub peak_logical_bytes: u64,
+    pub corr_tiles: u64,
+    pub elim_tiles: u64,
+    pub sent_msgs: u64,
+    pub sent_bytes: u64,
+    pub recv_msgs: u64,
+    pub recv_bytes: u64,
+    pub phase1_secs: f64,
+    pub phase2_secs: f64,
+    pub n_edges: u64,
+}
+
+/// Result of a distributed run.
+#[derive(Debug)]
+pub struct DistributedReport {
+    pub network: Network,
+    pub stats: Vec<RankStats>,
+    pub wall_secs: f64,
+    /// Max over ranks of (phase1 + phase2) compute time — the parallel
+    /// critical path. On a testbed with fewer cores than ranks the wall
+    /// clock serializes rank work, so this is the faithful "time on a real
+    /// cluster" measure (transport is in-memory and effectively free).
+    pub critical_path_secs: f64,
+    pub quorum_size: usize,
+    pub assignment_imbalance: f64,
+    /// Max peak logical bytes across ranks ("memory per process").
+    pub peak_bytes_per_rank: u64,
+    /// Total bytes moved through the transport.
+    pub total_comm_bytes: u64,
+}
+
+/// Run distributed PCIT on a simulated cluster of `cfg.ranks` workers.
+///
+/// The dataset is standardized once by the leader (as the paper's
+/// implementations do before distribution); each worker receives only its
+/// quorum's blocks.
+pub fn run_distributed_pcit(
+    cfg: &RunConfig,
+    dataset: &ExpressionDataset,
+    executor: Executor,
+) -> anyhow::Result<DistributedReport> {
+    anyhow::ensure!(cfg.mode != PcitMode::Single, "use run_single_node for single mode");
+    let p = cfg.ranks;
+    let n = dataset.genes();
+    let quorum = CyclicQuorumSet::for_processes(p)?;
+    let plan = Plan {
+        n,
+        p,
+        block: ceil_div(n, p),
+        mode: if cfg.mode == PcitMode::QuorumLocal { MODE_LOCAL } else { MODE_EXACT },
+        use_pcit: cfg.use_pcit_significance,
+        threshold: cfg.threshold as f32,
+    };
+
+    let sw = Stopwatch::start();
+    let z = standardize_rows(&dataset.expr);
+
+    let (transport, mut endpoints) = Transport::new(p + 1);
+    // endpoints[0] = leader; spawn workers on 1..=p.
+    let leader_ep = endpoints.remove(0);
+    let mut handles = Vec::with_capacity(p);
+    for ep in endpoints {
+        let exec = executor.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("quorall-rank-{}", ep.rank))
+                .spawn(move || worker_main(ep, exec, plan))
+                .expect("spawn worker"),
+        );
+    }
+
+    let outcome: LeaderOutcome = leader_main(&leader_ep, &z, plan, &quorum, OwnerPolicy::LeastLoaded)?;
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
+    }
+    let wall = sw.elapsed_secs();
+    let (_msgs, bytes) = transport.total_received();
+    let peak = outcome.stats.iter().map(|s| s.peak_logical_bytes).max().unwrap_or(0);
+    let critical = outcome
+        .stats
+        .iter()
+        .map(|s| s.phase1_secs + s.phase2_secs)
+        .fold(0.0f64, f64::max);
+
+    Ok(DistributedReport {
+        network: outcome.network,
+        stats: outcome.stats,
+        wall_secs: wall,
+        critical_path_secs: critical,
+        quorum_size: outcome.quorum_size,
+        assignment_imbalance: outcome.assignment_imbalance,
+        peak_bytes_per_rank: peak,
+        total_comm_bytes: bytes,
+    })
+}
+
+/// Resilient quorum-local run with task redundancy and injected failures
+/// (paper §6 future work).
+///
+/// Every pair task is assigned to up to `redundancy` hosting ranks; the
+/// ranks in `kill` crash right after receiving their data, before doing any
+/// work. As long as every pair retains one surviving owner (checked via
+/// [`RedundantAssignment::covers_with_failures`]) the gathered network is
+/// complete — duplicate pair results deduplicate in `Network::new`.
+///
+/// Quorum-local only: the exact mode's ring requires every rank.
+pub fn run_resilient_pcit(
+    cfg: &RunConfig,
+    dataset: &ExpressionDataset,
+    executor: Executor,
+    redundancy: usize,
+    kill: &[usize],
+) -> anyhow::Result<DistributedReport> {
+    use super::messages::Message;
+    use crate::allpairs::RedundantAssignment;
+    use crate::data::Partition;
+    use crate::pcit::network::Network;
+
+    let p = cfg.ranks;
+    anyhow::ensure!(kill.iter().all(|&k| k < p), "kill ranks out of range");
+    let n = dataset.genes();
+    // r >= 2 needs every pair hosted by >= r quorums: the optimal (λ = 1)
+    // sets host each pair exactly once, so redundancy uses the r-fold cover
+    // (quorum size ~r·k — replication is the price of fault tolerance).
+    let quorum = CyclicQuorumSet::with_redundancy(p, redundancy)?;
+    let assignment = RedundantAssignment::build(&quorum, redundancy);
+    anyhow::ensure!(
+        assignment.covers_with_failures(kill),
+        "insufficient redundancy: some pair is owned only by killed ranks (r = {redundancy}, kill = {kill:?})"
+    );
+    let plan = Plan {
+        n,
+        p,
+        block: ceil_div(n, p),
+        mode: MODE_LOCAL,
+        use_pcit: cfg.use_pcit_significance,
+        threshold: cfg.threshold as f32,
+    };
+
+    let sw = Stopwatch::start();
+    let z = standardize_rows(&dataset.expr);
+    let (transport, mut endpoints) = Transport::new(p + 1);
+    let leader_ep = endpoints.remove(0);
+    let mut handles = Vec::with_capacity(p);
+    for ep in endpoints {
+        let exec = executor.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("quorall-rank-{}", ep.rank))
+                .spawn(move || super::worker::worker_main(ep, exec, plan))
+                .expect("spawn worker"),
+        );
+    }
+
+    // Scatter data, crash the victims, then hand out redundant tasks.
+    let part = Partition::new(n, p);
+    for w in 0..p {
+        let q = quorum.quorum(w);
+        let blocks: Vec<(usize, usize, crate::util::Matrix)> = q
+            .iter()
+            .map(|&b| {
+                let r = part.range(b);
+                (b, r.start, z.block(r.start, 0, r.len(), z.cols()))
+            })
+            .collect();
+        let _ = leader_ep.send(w + 1, Message::AssignData { quorum: q, blocks });
+    }
+    for &k in kill {
+        let _ = leader_ep.send(k + 1, Message::Crash);
+    }
+    for w in 0..p {
+        let _ = leader_ep.send(w + 1, Message::ComputeCorr { tasks: assignment.tasks_for(w) });
+    }
+
+    // Gather from survivors only.
+    let alive = p - kill.len();
+    let mut all_edges = Vec::new();
+    let mut stats = Vec::new();
+    let mut edges_left = alive;
+    let mut stats_left = alive;
+    while edges_left > 0 || stats_left > 0 {
+        let Some(env) = leader_ep.recv() else {
+            anyhow::bail!("leader: survivors disconnected prematurely");
+        };
+        match env.msg {
+            Message::Edges { edges } => {
+                all_edges.extend(edges);
+                edges_left -= 1;
+            }
+            Message::Stats(s) => {
+                stats.push(s);
+                stats_left -= 1;
+            }
+            other => anyhow::bail!("leader: unexpected {} gathering survivors", other.kind()),
+        }
+    }
+    stats.sort_by_key(|s| s.rank);
+    for w in 0..p {
+        let _ = leader_ep.send(w + 1, Message::Shutdown);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
+    }
+    let (_msgs, bytes) = transport.total_received();
+    let peak = stats.iter().map(|s| s.peak_logical_bytes).max().unwrap_or(0);
+    let critical = stats.iter().map(|s| s.phase1_secs + s.phase2_secs).fold(0.0f64, f64::max);
+    Ok(DistributedReport {
+        network: Network::new(n, all_edges),
+        stats,
+        wall_secs: sw.elapsed_secs(),
+        critical_path_secs: critical,
+        quorum_size: quorum.quorum_size(),
+        assignment_imbalance: 1.0,
+        peak_bytes_per_rank: peak,
+        total_comm_bytes: bytes,
+    })
+}
+
+/// Single-node result with timings comparable to [`DistributedReport`].
+#[derive(Debug)]
+pub struct SingleNodeReport {
+    pub network: Network,
+    pub wall_secs: f64,
+    /// Logical bytes the single node holds: input + full corr matrix.
+    pub logical_bytes: u64,
+}
+
+/// Run the single-node baseline (exact PCIT with a thread pool standing in
+/// for the paper's 16 OpenMP threads).
+pub fn run_single_node(dataset: &ExpressionDataset, threads: usize, threshold: Option<f32>) -> SingleNodeReport {
+    let sw = Stopwatch::start();
+    let pool = ThreadPool::new(threads);
+    let n = dataset.genes();
+    let input_bytes = dataset.expr.nbytes();
+    let (network, corr_bytes) = match threshold {
+        None => {
+            let res = exact_pcit(&dataset.expr, Some(&pool));
+            let bytes = res.corr.nbytes();
+            (Network::new(n, res.edges()), bytes)
+        }
+        Some(th) => {
+            let corr = crate::pcit::correlation_matrix(&dataset.expr);
+            let mut edges = Vec::new();
+            for x in 0..n {
+                for y in (x + 1)..n {
+                    let r = corr[(x, y)];
+                    if r.abs() >= th {
+                        edges.push((x, y, r));
+                    }
+                }
+            }
+            let bytes = corr.nbytes();
+            (Network::new(n, edges), bytes)
+        }
+    };
+    SingleNodeReport {
+        network,
+        wall_secs: sw.elapsed_secs(),
+        logical_bytes: input_bytes + corr_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::runtime::NativeBackend;
+    use std::sync::Arc;
+
+    fn dataset(n: usize) -> ExpressionDataset {
+        ExpressionDataset::generate(SyntheticSpec {
+            genes: n,
+            samples: 24,
+            modules: 6,
+            noise: 0.5,
+            seed: 91,
+        })
+    }
+
+    fn cfg(ranks: usize, mode: PcitMode) -> RunConfig {
+        RunConfig {
+            ranks,
+            threads_per_rank: 1,
+            mode,
+            backend: BackendKind::Native,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn distributed_exact_matches_single_node() {
+        let d = dataset(96);
+        let single = run_single_node(&d, 2, None);
+        for p in [4usize, 7, 9] {
+            let rep = run_distributed_pcit(&cfg(p, PcitMode::QuorumExact), &d, Arc::new(NativeBackend::new()))
+                .unwrap();
+            assert!(
+                rep.network.same_edges(&single.network),
+                "P={p}: distributed ({} edges) != single ({} edges), jaccard {}",
+                rep.network.n_edges(),
+                single.network.n_edges(),
+                rep.network.jaccard(&single.network)
+            );
+        }
+    }
+
+    #[test]
+    fn threshold_mode_matches_single_node() {
+        let d = dataset(80);
+        let single = run_single_node(&d, 2, Some(0.6));
+        let mut c = cfg(5, PcitMode::QuorumExact);
+        c.use_pcit_significance = false;
+        c.threshold = 0.6;
+        let rep = run_distributed_pcit(&c, &d, Arc::new(NativeBackend::new())).unwrap();
+        assert!(rep.network.same_edges(&single.network));
+    }
+
+    #[test]
+    fn local_mode_runs_and_approximates() {
+        let d = dataset(72);
+        let single = run_single_node(&d, 2, None);
+        let rep = run_distributed_pcit(&cfg(6, PcitMode::QuorumLocal), &d, Arc::new(NativeBackend::new()))
+            .unwrap();
+        // Local mode eliminates less (fewer mediators) → superset-ish edges;
+        // agreement should still be substantial.
+        let j = rep.network.jaccard(&single.network);
+        assert!(j > 0.5, "quorum-local jaccard too low: {j}");
+        assert!(rep.network.n_edges() >= single.network.n_edges());
+    }
+
+    #[test]
+    fn memory_decreases_with_ranks() {
+        let d = dataset(120);
+        let r4 = run_distributed_pcit(&cfg(4, PcitMode::QuorumExact), &d, Arc::new(NativeBackend::new()))
+            .unwrap();
+        let r13 = run_distributed_pcit(&cfg(13, PcitMode::QuorumExact), &d, Arc::new(NativeBackend::new()))
+            .unwrap();
+        assert!(
+            r13.peak_bytes_per_rank < r4.peak_bytes_per_rank,
+            "more ranks must mean less memory per rank: {} vs {}",
+            r13.peak_bytes_per_rank,
+            r4.peak_bytes_per_rank
+        );
+    }
+
+    #[test]
+    fn stats_are_complete() {
+        let d = dataset(64);
+        let rep = run_distributed_pcit(&cfg(4, PcitMode::QuorumExact), &d, Arc::new(NativeBackend::new()))
+            .unwrap();
+        assert_eq!(rep.stats.len(), 4);
+        let total_corr: u64 = rep.stats.iter().map(|s| s.corr_tiles).sum();
+        assert_eq!(total_corr, 10); // P(P+1)/2 pairs for P = 4
+        assert!(rep.total_comm_bytes > 0);
+        assert!(rep.stats.iter().all(|s| s.peak_logical_bytes > 0));
+    }
+}

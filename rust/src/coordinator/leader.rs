@@ -1,0 +1,122 @@
+//! Leader rank: builds the quorum set, scatters data, sequences phases,
+//! gathers edges and stats.
+
+use super::messages::Message;
+use super::transport::Endpoint;
+use super::worker::{Plan, MODE_EXACT};
+use crate::allpairs::{OwnerPolicy, PairAssignment};
+use crate::data::Partition;
+use crate::pcit::network::Network;
+use crate::quorum::CyclicQuorumSet;
+use crate::util::Matrix;
+
+/// Everything the leader returns.
+pub struct LeaderOutcome {
+    pub network: Network,
+    pub stats: Vec<super::driver::RankStats>,
+    pub assignment_imbalance: f64,
+    pub quorum_size: usize,
+}
+
+/// Run the leader protocol on endpoint 0. `z` is the standardized N×M
+/// expression matrix; workers are already listening on endpoints 1..=P.
+pub fn leader_main(
+    ep: &Endpoint,
+    z: &Matrix,
+    plan: Plan,
+    quorum: &CyclicQuorumSet,
+    policy: OwnerPolicy,
+) -> anyhow::Result<LeaderOutcome> {
+    let p = plan.p;
+    let n = plan.n;
+    let part = Partition::new(n, p);
+
+    // ---- Scatter quorum data. ----
+    for w in 0..p {
+        let q = quorum.quorum(w);
+        let blocks: Vec<(usize, usize, Matrix)> = q
+            .iter()
+            .map(|&b| {
+                let r = part.range(b);
+                (b, r.start, z.block(r.start, 0, r.len(), z.cols()))
+            })
+            .collect();
+        ep.send(w + 1, Message::AssignData { quorum: q, blocks })
+            .map_err(|e| anyhow::anyhow!("scatter to worker {w}: {e}"))?;
+    }
+
+    // ---- Assign pair work (exactly-once, balanced). ----
+    let assignment = PairAssignment::build(quorum, policy);
+    for w in 0..p {
+        let tasks = assignment.tasks_for(w);
+        ep.send(w + 1, Message::ComputeCorr { tasks })
+            .map_err(|e| anyhow::anyhow!("tasks to worker {w}: {e}"))?;
+    }
+
+    // ---- Phase sequencing (exact mode only has the tile/ring barrier). ----
+    if plan.mode == MODE_EXACT {
+        // Workers may report phase 2 before slower peers report phase 1, so
+        // count both kinds concurrently.
+        wait_phases(ep, p, &[1, 2])?;
+        for w in 0..p {
+            let _ = ep.send(w + 1, Message::Proceed);
+        }
+    }
+
+    // ---- Gather edges + stats. ----
+    let mut all_edges: Vec<(usize, usize, f32)> = Vec::new();
+    let mut stats: Vec<super::driver::RankStats> = Vec::new();
+    let mut edges_left = p;
+    let mut stats_left = p;
+    while edges_left > 0 || stats_left > 0 {
+        let Some(env) = ep.recv() else {
+            anyhow::bail!("leader: workers disconnected prematurely");
+        };
+        match env.msg {
+            Message::Edges { edges } => {
+                all_edges.extend(edges);
+                edges_left -= 1;
+            }
+            Message::Stats(s) => {
+                stats.push(s);
+                stats_left -= 1;
+            }
+            Message::PhaseDone { .. } => { /* stragglers in local mode */ }
+            other => anyhow::bail!("leader: unexpected {}", other.kind()),
+        }
+    }
+    stats.sort_by_key(|s| s.rank);
+
+    for w in 0..p {
+        let _ = ep.send(w + 1, Message::Shutdown);
+    }
+
+    Ok(LeaderOutcome {
+        network: Network::new(n, all_edges),
+        stats,
+        assignment_imbalance: assignment.imbalance(),
+        quorum_size: quorum.quorum_size(),
+    })
+}
+
+/// Wait until every worker has reported each of the listed phases.
+fn wait_phases(ep: &Endpoint, p: usize, phases: &[u8]) -> anyhow::Result<()> {
+    let mut left: std::collections::BTreeMap<u8, usize> =
+        phases.iter().map(|&ph| (ph, p)).collect();
+    while left.values().any(|&v| v > 0) {
+        let Some(env) = ep.recv() else {
+            anyhow::bail!("leader: lost workers waiting for phases {phases:?}");
+        };
+        match env.msg {
+            Message::PhaseDone { phase: ph } => {
+                let c = left
+                    .get_mut(&ph)
+                    .ok_or_else(|| anyhow::anyhow!("leader: unexpected phase {ph}"))?;
+                anyhow::ensure!(*c > 0, "leader: too many phase-{ph} reports");
+                *c -= 1;
+            }
+            other => anyhow::bail!("leader: unexpected {} during phases", other.kind()),
+        }
+    }
+    Ok(())
+}

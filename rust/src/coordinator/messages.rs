@@ -1,0 +1,100 @@
+//! Message types exchanged between leader and workers.
+//!
+//! Every payload reports its byte size so the transport can account
+//! communication volume the way the paper's MPI implementation would see it
+//! (element payloads; control messages cost a fixed header).
+
+use crate::allpairs::PairTask;
+use crate::util::Matrix;
+
+/// Fixed accounting cost of a control message header.
+pub const HEADER_BYTES: u64 = 64;
+
+#[derive(Debug)]
+pub enum Message {
+    /// Leader → worker: your quorum's datasets (standardized rows).
+    /// `(block_id, global_row_offset, rows)` per quorum member.
+    AssignData {
+        quorum: Vec<usize>,
+        blocks: Vec<(usize, usize, Matrix)>,
+    },
+    /// Leader → worker: compute these correlation block pairs.
+    ComputeCorr { tasks: Vec<PairTask> },
+    /// Worker → row-home worker: one correlation tile, oriented so rows are
+    /// the home's block. `rows_block` is the home block id, `cols_block` the
+    /// other one.
+    CorrTile {
+        rows_block: usize,
+        cols_block: usize,
+        tile: Matrix,
+    },
+    /// Worker → worker (ring step): a full row block `C[block, 0..N]`.
+    RingRows { block: usize, rows: Matrix },
+    /// Worker → leader: surviving edges (global gene ids) with correlations.
+    Edges { edges: Vec<(usize, usize, f32)> },
+    /// Worker → leader: per-rank stats at completion.
+    Stats(crate::coordinator::driver::RankStats),
+    /// Leader → worker: phase barrier release.
+    Proceed,
+    /// Worker → leader: phase done (with phase tag).
+    PhaseDone { phase: u8 },
+    /// Leader → worker: all done, exit.
+    Shutdown,
+    /// Failure injection: the receiving worker dies immediately without
+    /// reporting anything (simulates a crashed rank).
+    Crash,
+}
+
+impl Message {
+    /// Payload bytes for communication accounting.
+    pub fn payload_bytes(&self) -> u64 {
+        let body = match self {
+            Message::AssignData { blocks, .. } => {
+                blocks.iter().map(|(_, _, m)| m.nbytes()).sum::<u64>()
+            }
+            Message::ComputeCorr { tasks } => (tasks.len() * 16) as u64,
+            Message::CorrTile { tile, .. } => tile.nbytes(),
+            Message::RingRows { rows, .. } => rows.nbytes(),
+            Message::Edges { edges } => (edges.len() * 12) as u64,
+            Message::Stats(_) => 128,
+            Message::Proceed | Message::PhaseDone { .. } | Message::Shutdown | Message::Crash => 0,
+        };
+        HEADER_BYTES + body
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::AssignData { .. } => "assign-data",
+            Message::ComputeCorr { .. } => "compute-corr",
+            Message::CorrTile { .. } => "corr-tile",
+            Message::RingRows { .. } => "ring-rows",
+            Message::Edges { .. } => "edges",
+            Message::Stats(_) => "stats",
+            Message::Proceed => "proceed",
+            Message::PhaseDone { .. } => "phase-done",
+            Message::Shutdown => "shutdown",
+            Message::Crash => "crash",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_accounting() {
+        let m = Matrix::zeros(4, 8);
+        let tile = Message::CorrTile { rows_block: 0, cols_block: 1, tile: m };
+        assert_eq!(tile.payload_bytes(), HEADER_BYTES + 4 * 8 * 4);
+        assert_eq!(Message::Shutdown.payload_bytes(), HEADER_BYTES);
+        let e = Message::Edges { edges: vec![(0, 1, 0.5); 10] };
+        assert_eq!(e.payload_bytes(), HEADER_BYTES + 120);
+    }
+
+    #[test]
+    fn kinds_distinct() {
+        assert_eq!(Message::Proceed.kind(), "proceed");
+        assert_eq!(Message::Shutdown.kind(), "shutdown");
+    }
+}

@@ -1,0 +1,28 @@
+//! The distributed coordinator (L3) — the paper's system contribution.
+//!
+//! Simulated cluster: one OS thread per "MPI rank", channel transport with
+//! byte accounting ([`transport`]), a leader that builds the quorum set,
+//! scatters dataset blocks and collects results ([`leader`]), and workers
+//! that execute correlation / elimination tiles ([`worker`]).
+//!
+//! The end-to-end flows live in [`driver`]:
+//! * [`driver::run_distributed_pcit`] — the paper's §5 experiment
+//!   (quorum-exact and quorum-local modes).
+//! * [`driver::run_single_node`] — the single-node baseline.
+//!
+//! Phase structure of quorum-exact PCIT (DESIGN.md §7):
+//! 1. **Distribute** — rank i receives the standardized blocks of its
+//!    quorum S_i (k·N/P gene rows).
+//! 2. **Correlate** — every block pair computed exactly once by its owner
+//!    (`allpairs::PairAssignment`); tiles routed to row-home ranks.
+//! 3. **Eliminate** — ring exchange of row blocks; each edge block (a, c)
+//!    scanned against all N mediators; masks reduced to edges at the leader.
+
+pub mod messages;
+pub mod transport;
+pub mod worker;
+pub mod leader;
+pub mod driver;
+
+pub use driver::{run_distributed_pcit, run_resilient_pcit, run_single_node, DistributedReport, RankStats};
+pub use transport::{Endpoint, Transport};

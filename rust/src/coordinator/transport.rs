@@ -1,0 +1,218 @@
+//! In-process channel transport playing MPI's role.
+//!
+//! Rank 0 is the leader; ranks 1..=P are workers (worker w simulates MPI
+//! rank w-1 of the paper's job). Every send is counted (messages + bytes,
+//! global and per-rank) so communication-volume claims are measured, not
+//! modeled. Failure injection: a rank can be "killed" — sends to it vanish
+//! (byte-counted), and its queue raises `Disconnected` for receivers.
+
+use super::messages::Message;
+use crate::metrics::CommStats;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// A routed message.
+pub struct Envelope {
+    pub from: usize,
+    pub to: usize,
+    pub msg: Message,
+}
+
+/// Shared transport state.
+pub struct Transport {
+    n_endpoints: usize,
+    senders: Vec<Sender<Envelope>>,
+    /// Per-rank received-byte counters (indexed by receiver).
+    pub recv_stats: Vec<Arc<CommStats>>,
+    /// Per-rank sent-byte counters (indexed by sender).
+    pub send_stats: Vec<Arc<CommStats>>,
+    killed: Vec<Arc<AtomicBool>>,
+}
+
+impl Transport {
+    /// Create a transport with `n_endpoints` ranks (incl. leader at 0).
+    /// Returns the transport plus one [`Endpoint`] per rank.
+    pub fn new(n_endpoints: usize) -> (Arc<Transport>, Vec<Endpoint>) {
+        let mut senders = Vec::with_capacity(n_endpoints);
+        let mut receivers = Vec::with_capacity(n_endpoints);
+        for _ in 0..n_endpoints {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let transport = Arc::new(Transport {
+            n_endpoints,
+            senders,
+            recv_stats: (0..n_endpoints).map(|_| Arc::new(CommStats::default())).collect(),
+            send_stats: (0..n_endpoints).map(|_| Arc::new(CommStats::default())).collect(),
+            killed: (0..n_endpoints).map(|_| Arc::new(AtomicBool::new(false))).collect(),
+        });
+        let endpoints = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, rx)| Endpoint {
+                rank,
+                rx: Mutex::new(rx),
+                transport: Arc::clone(&transport),
+            })
+            .collect();
+        (transport, endpoints)
+    }
+
+    pub fn endpoints(&self) -> usize {
+        self.n_endpoints
+    }
+
+    /// Mark a rank as failed: subsequent sends to it are dropped.
+    pub fn kill(&self, rank: usize) {
+        self.killed[rank].store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_killed(&self, rank: usize) -> bool {
+        self.killed[rank].load(Ordering::SeqCst)
+    }
+
+    fn send(&self, from: usize, to: usize, msg: Message) -> Result<(), SendError> {
+        assert!(to < self.n_endpoints, "rank {to} out of range");
+        let bytes = msg.payload_bytes();
+        self.send_stats[from].record(bytes);
+        if self.is_killed(to) {
+            return Err(SendError::Killed(to));
+        }
+        self.recv_stats[to].record(bytes);
+        self.senders[to]
+            .send(Envelope { from, to, msg })
+            .map_err(|_| SendError::Disconnected(to))
+    }
+
+    /// Total (messages, bytes) received across all ranks.
+    pub fn total_received(&self) -> (u64, u64) {
+        let mut msgs = 0;
+        let mut bytes = 0;
+        for s in &self.recv_stats {
+            let (m, b) = s.snapshot();
+            msgs += m;
+            bytes += b;
+        }
+        (msgs, bytes)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SendError {
+    /// Destination was killed by failure injection.
+    Killed(usize),
+    /// Destination endpoint dropped (normal shutdown ordering).
+    Disconnected(usize),
+}
+
+impl std::fmt::Display for SendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SendError::Killed(r) => write!(f, "rank {r} killed"),
+            SendError::Disconnected(r) => write!(f, "rank {r} disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for SendError {}
+
+/// A rank's handle: receive queue + send access.
+pub struct Endpoint {
+    pub rank: usize,
+    rx: Mutex<Receiver<Envelope>>,
+    transport: Arc<Transport>,
+}
+
+impl Endpoint {
+    pub fn send(&self, to: usize, msg: Message) -> Result<(), SendError> {
+        self.transport.send(self.rank, to, msg)
+    }
+
+    /// Blocking receive. Returns None when all senders are gone.
+    pub fn recv(&self) -> Option<Envelope> {
+        self.rx.lock().unwrap().recv().ok()
+    }
+
+    /// Receive with timeout.
+    pub fn recv_timeout(&self, d: std::time::Duration) -> Option<Envelope> {
+        self.rx.lock().unwrap().recv_timeout(d).ok()
+    }
+
+    pub fn transport(&self) -> &Arc<Transport> {
+        &self.transport
+    }
+
+    /// (messages, bytes) received by this rank so far.
+    pub fn received(&self) -> (u64, u64) {
+        self.transport.recv_stats[self.rank].snapshot()
+    }
+
+    /// (messages, bytes) sent by this rank so far.
+    pub fn sent(&self) -> (u64, u64) {
+        self.transport.send_stats[self.rank].snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Matrix;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let (_t, mut eps) = Transport::new(3);
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let _e0 = eps.pop().unwrap();
+        e1.send(2, Message::Proceed).unwrap();
+        let env = e2.recv().unwrap();
+        assert_eq!(env.from, 1);
+        assert_eq!(env.to, 2);
+        assert_eq!(env.msg.kind(), "proceed");
+    }
+
+    #[test]
+    fn bytes_counted_both_sides() {
+        let (t, eps) = Transport::new(2);
+        let m = Matrix::zeros(8, 8);
+        eps[0]
+            .send(1, Message::CorrTile { rows_block: 0, cols_block: 0, tile: m })
+            .unwrap();
+        let sent = eps[0].sent();
+        let recvd = t.recv_stats[1].snapshot();
+        assert_eq!(sent.0, 1);
+        assert_eq!(sent.1, recvd.1);
+        assert!(sent.1 >= 256);
+    }
+
+    #[test]
+    fn killed_rank_drops_messages() {
+        let (t, eps) = Transport::new(2);
+        t.kill(1);
+        let err = eps[0].send(1, Message::Proceed).unwrap_err();
+        assert_eq!(err, SendError::Killed(1));
+        // Nothing delivered.
+        assert!(eps[1].recv_timeout(std::time::Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn cross_thread_usage() {
+        let (_t, mut eps) = Transport::new(2);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            for _ in 0..10 {
+                e1.send(0, Message::PhaseDone { phase: 1 }).unwrap();
+            }
+        });
+        let mut got = 0;
+        while got < 10 {
+            let env = e0.recv().unwrap();
+            assert_eq!(env.msg.kind(), "phase-done");
+            got += 1;
+        }
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,150 @@
+//! CSV/TSV expression-matrix I/O.
+//!
+//! Format: optional header row (detected by non-numeric first field),
+//! optional leading gene-name column (detected per row), numeric expression
+//! values. Writer emits a plain numeric CSV.
+
+use crate::util::Matrix;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Load an expression matrix from a CSV/TSV file. Returns (matrix, gene
+/// names — synthesized as `g<row>` when the file has none).
+pub fn load_expression_csv(path: &Path) -> Result<(Matrix, Vec<String>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_expression_csv(&text)
+}
+
+/// Parse CSV/TSV text into (matrix, gene names).
+pub fn parse_expression_csv(text: &str) -> Result<(Matrix, Vec<String>)> {
+    let sep = if text.contains('\t') { '\t' } else { ',' };
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut names: Vec<String> = Vec::new();
+    let mut width: Option<usize> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(sep).map(|f| f.trim()).collect();
+        // Header: first data line whose fields are mostly non-numeric.
+        if rows.is_empty() && names.is_empty() {
+            let numeric = fields.iter().filter(|f| f.parse::<f32>().is_ok()).count();
+            if numeric * 2 < fields.len() {
+                continue; // treat as header
+            }
+        }
+        let (name, vals) = match fields[0].parse::<f32>() {
+            Ok(_) => (format!("g{}", rows.len()), &fields[..]),
+            Err(_) => (fields[0].to_string(), &fields[1..]),
+        };
+        let mut row = Vec::with_capacity(vals.len());
+        for f in vals {
+            row.push(
+                f.parse::<f32>()
+                    .with_context(|| format!("line {}: bad value '{f}'", lineno + 1))?,
+            );
+        }
+        if let Some(w) = width {
+            if row.len() != w {
+                bail!("line {}: expected {} values, got {}", lineno + 1, w, row.len());
+            }
+        } else {
+            width = Some(row.len());
+        }
+        names.push(name);
+        rows.push(row);
+    }
+    let n = rows.len();
+    let m = width.unwrap_or(0);
+    if n == 0 || m == 0 {
+        bail!("empty expression matrix");
+    }
+    let mut flat = Vec::with_capacity(n * m);
+    for r in rows {
+        flat.extend_from_slice(&r);
+    }
+    Ok((Matrix::from_vec(n, m, flat), names))
+}
+
+/// Write a matrix as numeric CSV (no header, no names).
+pub fn write_expression_csv(path: &Path, m: &Matrix) -> Result<()> {
+    let mut out = String::with_capacity(m.rows() * m.cols() * 8);
+    for r in 0..m.rows() {
+        let vals: Vec<String> = m.row(r).iter().map(|v| format!("{v}")).collect();
+        out.push_str(&vals.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write an edge list `(gene_a, gene_b, correlation)` as CSV with header.
+pub fn write_edges_csv(path: &Path, edges: &[(usize, usize, f32)]) -> Result<()> {
+    let mut out = String::from("gene_a,gene_b,correlation\n");
+    for (a, b, r) in edges {
+        out.push_str(&format!("{a},{b},{r}\n"));
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain_numeric() {
+        let (m, names) = parse_expression_csv("1,2,3\n4,5,6\n").unwrap();
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m[(1, 2)], 6.0);
+        assert_eq!(names, vec!["g0", "g1"]);
+    }
+
+    #[test]
+    fn parse_with_header_and_names() {
+        let text = "gene,s1,s2\nTP53,0.5,-1.5\nBRCA1,2.0,3.5\n";
+        let (m, names) = parse_expression_csv(text).unwrap();
+        assert_eq!(m.shape(), (2, 2));
+        assert_eq!(names, vec!["TP53", "BRCA1"]);
+        assert_eq!(m[(0, 1)], -1.5);
+    }
+
+    #[test]
+    fn parse_tsv_and_comments() {
+        let text = "# comment\n1\t2\n3\t4\n";
+        let (m, _) = parse_expression_csv(text).unwrap();
+        assert_eq!(m.shape(), (2, 2));
+        assert_eq!(m[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(parse_expression_csv("1,2,3\n4,5\n").is_err());
+        assert!(parse_expression_csv("").is_err());
+        assert!(parse_expression_csv("a,b\nx,y\n").is_err()); // non-numeric data
+    }
+
+    #[test]
+    fn round_trip_via_files() {
+        let dir = std::env::temp_dir().join("quorall-test-loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        let m = Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f32 * 0.5);
+        write_expression_csv(&p, &m).unwrap();
+        let (m2, _) = load_expression_csv(&p).unwrap();
+        assert_eq!(m, m2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edges_csv_written() {
+        let dir = std::env::temp_dir().join("quorall-test-loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("edges.csv");
+        write_edges_csv(&p, &[(0, 1, 0.9), (1, 2, -0.8)]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("gene_a,gene_b,correlation\n"));
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,61 @@
+//! Datasets: synthetic gene-expression generation, CSV I/O, partitioning.
+//!
+//! The paper evaluates on two real microarray expression datasets and one
+//! synthetic input. Real sets are not redistributable, so `synthetic`
+//! generates expression matrices with *planted correlated modules* — the
+//! property PCIT exists to detect — at the three sizes used for Figure 2.
+//! The substitution is recorded in DESIGN.md §3.
+
+pub mod synthetic;
+pub mod loader;
+pub mod partition;
+
+pub use partition::Partition;
+pub use synthetic::{ExpressionDataset, SyntheticSpec};
+
+/// Named dataset sizes mirroring the paper's "three inputs of different
+/// sizes" (Fig. 2). N = genes, M = samples (microarray conditions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PaperInput {
+    Small,
+    Medium,
+    Large,
+}
+
+impl PaperInput {
+    pub fn spec(&self) -> SyntheticSpec {
+        match self {
+            // Sizes chosen so single-node exact PCIT (O(N^3)) stays tractable
+            // on a laptop-scale testbed while preserving the paper's ordering
+            // small < medium < large.
+            PaperInput::Small => SyntheticSpec { genes: 768, samples: 48, modules: 12, noise: 0.6, seed: 101 },
+            PaperInput::Medium => SyntheticSpec { genes: 1536, samples: 48, modules: 24, noise: 0.6, seed: 102 },
+            PaperInput::Large => SyntheticSpec { genes: 2560, samples: 48, modules: 40, noise: 0.6, seed: 103 },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PaperInput::Small => "input-S",
+            PaperInput::Medium => "input-M",
+            PaperInput::Large => "input-L",
+        }
+    }
+
+    pub fn all() -> [PaperInput; 3] {
+        [PaperInput::Small, PaperInput::Medium, PaperInput::Large]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_inputs_ordered() {
+        let [s, m, l] = PaperInput::all();
+        assert!(s.spec().genes < m.spec().genes);
+        assert!(m.spec().genes < l.spec().genes);
+        assert_eq!(s.name(), "input-S");
+    }
+}

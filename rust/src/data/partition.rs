@@ -1,0 +1,123 @@
+//! Partitioning N elements into P datasets (paper Eq. 3-5).
+//!
+//! Contiguous block partition: dataset `D_i` gets rows
+//! `[i·ceil(N/P), min((i+1)·ceil(N/P), N))` — the layout assumed by the
+//! correlation row-block assembly and the artifacts' static tile shapes.
+
+use crate::util::ceil_div;
+use std::ops::Range;
+
+/// A block partition of `0..n` into `p` datasets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    n: usize,
+    p: usize,
+    block: usize,
+}
+
+impl Partition {
+    pub fn new(n: usize, p: usize) -> Self {
+        assert!(p >= 1, "P must be >= 1");
+        Self { n, p, block: ceil_div(n, p) }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn processes(&self) -> usize {
+        self.p
+    }
+
+    /// Nominal block size (last block may be smaller).
+    pub fn block_size(&self) -> usize {
+        self.block
+    }
+
+    /// Element range of dataset i (may be empty for trailing datasets when
+    /// P does not divide N).
+    pub fn range(&self, i: usize) -> Range<usize> {
+        assert!(i < self.p, "dataset index out of range");
+        let lo = (i * self.block).min(self.n);
+        let hi = ((i + 1) * self.block).min(self.n);
+        lo..hi
+    }
+
+    /// Number of elements in dataset i.
+    pub fn len(&self, i: usize) -> usize {
+        self.range(i).len()
+    }
+
+    /// Dataset that owns element `e`.
+    pub fn dataset_of(&self, e: usize) -> usize {
+        assert!(e < self.n, "element out of range");
+        e / self.block
+    }
+
+    /// Union of all ranges covers 0..n exactly once (Eq. 5).
+    pub fn verify(&self) -> bool {
+        let mut next = 0usize;
+        for i in 0..self.p {
+            let r = self.range(i);
+            if r.start != next.min(self.n) {
+                return false;
+            }
+            next = r.end;
+        }
+        next == self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn even_partition() {
+        let pt = Partition::new(12, 4);
+        assert_eq!(pt.block_size(), 3);
+        assert_eq!(pt.range(0), 0..3);
+        assert_eq!(pt.range(3), 9..12);
+        assert!(pt.verify());
+    }
+
+    #[test]
+    fn uneven_partition() {
+        let pt = Partition::new(10, 4);
+        assert_eq!(pt.block_size(), 3);
+        assert_eq!(pt.range(0), 0..3);
+        assert_eq!(pt.range(3), 9..10); // short tail
+        assert!(pt.verify());
+        assert_eq!((0..4).map(|i| pt.len(i)).sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn empty_tail_blocks() {
+        let pt = Partition::new(4, 8);
+        assert!(pt.verify());
+        assert_eq!(pt.len(7), 0);
+        assert_eq!((0..8).map(|i| pt.len(i)).sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn dataset_of_matches_range() {
+        let pt = Partition::new(100, 7);
+        for e in 0..100 {
+            let d = pt.dataset_of(e);
+            assert!(pt.range(d).contains(&e), "element {e} dataset {d}");
+        }
+    }
+
+    #[test]
+    fn prop_partition_is_exact_cover() {
+        forall("partition exact cover", 100, |g| {
+            let n = g.usize_in(0, 500);
+            let p = g.usize_in(1, 40);
+            let pt = Partition::new(n, p);
+            assert!(pt.verify());
+            let total: usize = (0..p).map(|i| pt.len(i)).sum();
+            assert_eq!(total, n);
+        });
+    }
+}

@@ -1,0 +1,39 @@
+//! # quorall — Cyclic-Quorum All-Pairs Engine
+//!
+//! Reproduction of Kleinheksel & Somani, *"Scaling Distributed All-Pairs
+//! Algorithms: Manage Computation and Limit Data Replication with Quorums"*
+//! (2016).
+//!
+//! The library is organized in three layers (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the coordination contribution: cyclic quorum
+//!   construction ([`quorum`]), exactly-once all-pairs work decomposition
+//!   ([`allpairs`]), a simulated-cluster leader/worker runtime
+//!   ([`coordinator`]) and the PCIT application ([`pcit`]).
+//! * **L2/L1 (build-time Python)** — JAX/Pallas compute kernels, AOT-lowered
+//!   to HLO text under `artifacts/`, executed from Rust via [`runtime`].
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use quorall::quorum::CyclicQuorumSet;
+//! let q = CyclicQuorumSet::for_processes(7).unwrap();
+//! assert!(q.verify_all_pairs_property());
+//! ```
+
+pub mod util;
+pub mod logging;
+pub mod config;
+pub mod cli;
+pub mod pool;
+pub mod prop;
+pub mod quorum;
+pub mod allpairs;
+pub mod data;
+pub mod pcit;
+pub mod coordinator;
+pub mod runtime;
+pub mod apps;
+pub mod sim;
+pub mod metrics;
+pub mod benchkit;

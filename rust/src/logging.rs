@@ -1,0 +1,116 @@
+//! Tiny leveled logger (stderr), controlled by `QUORALL_LOG` or
+//! [`set_level`]. Workers prefix messages with their rank.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.write_str(s)
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("QUORALL_LOG")
+        .ok()
+        .and_then(|s| Level::from_str(&s))
+        .unwrap_or(Level::Warn) as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current log level.
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == 255 { init_from_env() } else { raw };
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the log level programmatically (CLI `--verbose`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+#[doc(hidden)]
+pub fn log_impl(l: Level, module: &str, args: fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    eprintln!("[{:>10.3} {} {}] {}", t.as_secs_f64() % 100_000.0, l, module, args);
+}
+
+#[macro_export]
+macro_rules! log_error { ($($arg:tt)*) => { $crate::logging::log_impl($crate::logging::Level::Error, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($arg:tt)*) => { $crate::logging::log_impl($crate::logging::Level::Warn, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($arg:tt)*) => { $crate::logging::log_impl($crate::logging::Level::Info, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($arg:tt)*) => { $crate::logging::log_impl($crate::logging::Level::Debug, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($arg:tt)*) => { $crate::logging::log_impl($crate::logging::Level::Trace, module_path!(), format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("info"), Some(Level::Info));
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Info);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Warn);
+    }
+}

@@ -1,0 +1,353 @@
+//! `quorall` — launcher CLI for the cyclic-quorum all-pairs engine.
+//!
+//! Subcommands:
+//! * `quorum`  — generate/inspect quorum sets, emit the P = 4..111 table
+//! * `pcit`    — run distributed (or single-node) PCIT on synthetic/CSV data
+//! * `nbody`   — quorum-decomposed n-body demo
+//! * `sim`     — analytic cluster-model predictions (Figure 2 extrapolation)
+//! * `info`    — environment/runtime report
+
+use quorall::cli::{App, ArgSpec, Command, ParseOutcome, Parsed};
+use quorall::config::{BackendKind, DatasetConfig, PcitMode, RunConfig};
+use quorall::coordinator::{run_distributed_pcit, run_single_node};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::metrics::Table;
+use quorall::quorum::{self, CyclicQuorumSet};
+use quorall::util::bytes::format_bytes;
+use quorall::util::timer::format_secs;
+
+fn app() -> App {
+    App::new("quorall", "cyclic-quorum all-pairs engine (Kleinheksel & Somani 2016)")
+        .command(
+            Command::new("quorum", "generate and analyze cyclic quorum sets")
+                .arg(ArgSpec::opt("p", "number of processes", "16"))
+                .arg(ArgSpec::opt("n", "elements for replication report", "1600"))
+                .arg(ArgSpec::flag("table", "emit the P range table"))
+                .arg(ArgSpec::opt("from", "table start P", "4"))
+                .arg(ArgSpec::opt("to", "table end P", "111"))
+                .arg(ArgSpec::flag("emit-rust", "emit tables.rs initializer rows")),
+        )
+        .command(
+            Command::new("pcit", "run PCIT gene-network reconstruction")
+                .arg(ArgSpec::opt("config", "TOML config path (overrides flags)", ""))
+                .arg(ArgSpec::opt("ranks", "simulated MPI ranks", "8"))
+                .arg(ArgSpec::opt("genes", "synthetic gene count", "512"))
+                .arg(ArgSpec::opt("samples", "synthetic sample count", "32"))
+                .arg(ArgSpec::opt("mode", "single | quorum-exact | quorum-local", "quorum-exact"))
+                .arg(ArgSpec::opt("backend", "native | xla", "native"))
+                .arg(ArgSpec::opt("seed", "dataset seed", "42"))
+                .arg(ArgSpec::opt("csv", "load expression CSV instead of synthetic", ""))
+                .arg(ArgSpec::opt("out", "write surviving edges CSV here", ""))
+                .arg(ArgSpec::flag("verify", "also run single-node and compare")),
+        )
+        .command(
+            Command::new("nbody", "quorum-decomposed n-body simulation")
+                .arg(ArgSpec::opt("bodies", "number of bodies", "256"))
+                .arg(ArgSpec::opt("ranks", "simulated ranks", "8"))
+                .arg(ArgSpec::opt("steps", "leapfrog steps", "50"))
+                .arg(ArgSpec::opt("dt", "time step", "0.001"))
+                .arg(ArgSpec::opt("threads", "pool threads", "4")),
+        )
+        .command(
+            Command::new("sim", "analytic cluster predictions (Fig. 2 extrapolation)")
+                .arg(ArgSpec::opt("genes", "gene count", "2000"))
+                .arg(ArgSpec::opt("samples", "sample count", "48"))
+                .arg(ArgSpec::opt("max-ranks", "largest P to predict", "64")),
+        )
+        .command(
+            Command::new("dataset", "generate a synthetic expression dataset as CSV")
+                .arg(ArgSpec::opt("genes", "gene count", "512"))
+                .arg(ArgSpec::opt("samples", "sample count", "48"))
+                .arg(ArgSpec::opt("modules", "planted correlated modules", "12"))
+                .arg(ArgSpec::opt("noise", "noise level", "0.6"))
+                .arg(ArgSpec::opt("seed", "generator seed", "42"))
+                .arg(ArgSpec::req("out", "output CSV path")),
+        )
+        .command(Command::new("info", "environment and artifact status"))
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match app().parse(&argv) {
+        ParseOutcome::Help(text) => print!("{text}"),
+        ParseOutcome::Error(err, usage) => {
+            eprintln!("error: {err}\n");
+            eprint!("{usage}");
+            std::process::exit(2);
+        }
+        ParseOutcome::Run(p) => {
+            let result = match p.command {
+                "quorum" => cmd_quorum(&p),
+                "pcit" => cmd_pcit(&p),
+                "dataset" => cmd_dataset(&p),
+                "nbody" => cmd_nbody(&p),
+                "sim" => cmd_sim(&p),
+                "info" => cmd_info(),
+                _ => unreachable!(),
+            };
+            if let Err(e) = result {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+fn cmd_quorum(p: &Parsed) -> anyhow::Result<()> {
+    if p.get_flag("table") || p.get_flag("emit-rust") {
+        let from = p.get_usize("from")?;
+        let to = p.get_usize("to")?;
+        let rows = quorum::tables::generate_table(from, to);
+        if p.get_flag("emit-rust") {
+            print!("{}", quorum::tables::emit_rust_table(&rows));
+            return Ok(());
+        }
+        let n = p.get_usize("n")?;
+        let mut t = Table::new(
+            &format!("cyclic quorum sizes (N = {n} elements)"),
+            &["P", "k", "lower_bound", "quorum N/proc", "force 2N/sqrtP", "all-data N", "savings_vs_force"],
+        );
+        for (pp, k, lb, set) in &rows {
+            let q = CyclicQuorumSet::from_base_set(*pp, set.clone())?;
+            let r = quorum::report(&q, n);
+            t.row(vec![
+                pp.to_string(),
+                k.to_string(),
+                lb.to_string(),
+                r.elements_per_process.to_string(),
+                r.force_elements_per_process.to_string(),
+                n.to_string(),
+                format!("{:.1}%", r.savings_vs_force_pct),
+            ]);
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+    let pp = p.get_usize("p")?;
+    let n = p.get_usize("n")?;
+    let q = CyclicQuorumSet::for_processes(pp)?;
+    println!("P = {pp}, base set A = {:?} (k = {})", q.base_set(), q.quorum_size());
+    println!("all-pairs property: {}", q.verify_all_pairs_property());
+    println!("intersection property: {}", q.verify_intersection_property());
+    for i in 0..pp.min(8) {
+        println!("  S_{i} = {:?}", q.quorum(i));
+    }
+    if pp > 8 {
+        println!("  … ({} more)", pp - 8);
+    }
+    let r = quorum::report(&q, n);
+    println!(
+        "replication for N = {n}: {}/process (force: {}, all-data: {}), savings vs force: {:.1}%",
+        r.elements_per_process, r.force_elements_per_process, n, r.savings_vs_force_pct
+    );
+    Ok(())
+}
+
+fn load_dataset(p: &Parsed) -> anyhow::Result<ExpressionDataset> {
+    let csv = p.get_str("csv").unwrap_or("");
+    if !csv.is_empty() {
+        let (m, _names) = quorall::data::loader::load_expression_csv(std::path::Path::new(csv))?;
+        let spec = SyntheticSpec { genes: m.rows(), samples: m.cols(), modules: 0, noise: 0.0, seed: 0 };
+        return Ok(ExpressionDataset { expr: m, module_of: vec![usize::MAX; spec.genes], spec });
+    }
+    Ok(ExpressionDataset::generate(SyntheticSpec {
+        genes: p.get_usize("genes")?,
+        samples: p.get_usize("samples")?,
+        modules: (p.get_usize("genes")? / 64).max(2),
+        noise: 0.6,
+        seed: p.get_u64("seed")?,
+    }))
+}
+
+fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
+    let cfg = if let Some(path) = p.get_str("config").filter(|s| !s.is_empty()) {
+        RunConfig::from_file(std::path::Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))?
+    } else {
+        let mode = PcitMode::parse(p.get_str("mode").unwrap_or("quorum-exact"))
+            .ok_or_else(|| anyhow::anyhow!("bad --mode"))?;
+        let backend = BackendKind::parse(p.get_str("backend").unwrap_or("native"))
+            .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
+        let cfg = RunConfig {
+            ranks: p.get_usize("ranks")?,
+            mode,
+            backend,
+            seed: p.get_u64("seed")?,
+            dataset: DatasetConfig::Synthetic {
+                genes: p.get_usize("genes")?,
+                samples: p.get_usize("samples")?,
+                modules: (p.get_usize("genes")? / 64).max(2),
+                noise: 0.6,
+            },
+            ..RunConfig::default()
+        };
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        cfg
+    };
+
+    // A config file fully describes the dataset; flags otherwise.
+    let dataset = if p.get_str("config").filter(|s| !s.is_empty()).is_some() {
+        match &cfg.dataset {
+            DatasetConfig::Synthetic { genes, samples, modules, noise } => {
+                ExpressionDataset::generate(SyntheticSpec {
+                    genes: *genes,
+                    samples: *samples,
+                    modules: *modules,
+                    noise: *noise,
+                    seed: cfg.seed,
+                })
+            }
+            DatasetConfig::Csv { path } => {
+                let (m, _names) = quorall::data::loader::load_expression_csv(path)?;
+                let spec = SyntheticSpec { genes: m.rows(), samples: m.cols(), modules: 0, noise: 0.0, seed: 0 };
+                ExpressionDataset { expr: m, module_of: vec![usize::MAX; spec.genes], spec }
+            }
+        }
+    } else {
+        load_dataset(p)?
+    };
+    println!(
+        "PCIT: N = {} genes, M = {} samples, mode = {}, backend = {}, ranks = {}",
+        dataset.genes(),
+        dataset.samples(),
+        cfg.mode.name(),
+        cfg.backend.name(),
+        cfg.ranks
+    );
+
+    if cfg.mode == PcitMode::Single {
+        let rep = run_single_node(&dataset, cfg.ranks.max(cfg.threads_per_rank), None);
+        println!(
+            "single-node: {} edges in {} (logical memory {})",
+            rep.network.n_edges(),
+            format_secs(rep.wall_secs),
+            format_bytes(rep.logical_bytes)
+        );
+        return Ok(());
+    }
+
+    let exec = quorall::runtime::executor_for(cfg.backend, &cfg.artifacts_dir)?;
+    let rep = run_distributed_pcit(&cfg, &dataset, exec)?;
+    println!(
+        "distributed: {} edges in {} | k = {} | peak mem/rank {} | comm {}",
+        rep.network.n_edges(),
+        format_secs(rep.wall_secs),
+        rep.quorum_size,
+        format_bytes(rep.peak_bytes_per_rank),
+        format_bytes(rep.total_comm_bytes)
+    );
+    let mut t = Table::new("per-rank stats", &["rank", "corr_tiles", "elim_tiles", "peak_mem", "sent", "recv"]);
+    for s in &rep.stats {
+        t.row(vec![
+            s.rank.to_string(),
+            s.corr_tiles.to_string(),
+            s.elim_tiles.to_string(),
+            format_bytes(s.peak_logical_bytes),
+            format_bytes(s.sent_bytes),
+            format_bytes(s.recv_bytes),
+        ]);
+    }
+    println!("{}", t.render());
+
+    if p.get_flag("verify") {
+        let single = run_single_node(&dataset, 4, None);
+        let same = rep.network.same_edges(&single.network);
+        println!(
+            "verify vs single-node: {} ({} vs {} edges, jaccard {:.4})",
+            if same { "IDENTICAL" } else { "DIFFERENT" },
+            rep.network.n_edges(),
+            single.network.n_edges(),
+            rep.network.jaccard(&single.network)
+        );
+        if cfg.mode == PcitMode::QuorumExact && !same {
+            anyhow::bail!("quorum-exact must match single-node exactly");
+        }
+    }
+    if let Some(out) = p.get_str("out").filter(|s| !s.is_empty()) {
+        quorall::data::loader::write_edges_csv(std::path::Path::new(out), &rep.network.edges)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_nbody(p: &Parsed) -> anyhow::Result<()> {
+    use quorall::apps::nbody;
+    let n = p.get_usize("bodies")?;
+    let ranks = p.get_usize("ranks")?;
+    let steps = p.get_usize("steps")?;
+    let dt = p.get_f64("dt")?;
+    let pool = quorall::pool::ThreadPool::new(p.get_usize("threads")?);
+    let mut bodies = nbody::Bodies::random(n, 42);
+    let e0 = bodies.total_energy();
+    let sw = quorall::util::timer::Stopwatch::start();
+    let drift = nbody::simulate(&mut bodies, ranks, steps, dt, &pool)?;
+    println!(
+        "n-body: {n} bodies, {ranks} ranks, {steps} steps in {} | E0 = {e0:.4}, relative energy drift = {drift:.2e}",
+        format_secs(sw.elapsed_secs())
+    );
+    Ok(())
+}
+
+fn cmd_sim(p: &Parsed) -> anyhow::Result<()> {
+    use quorall::sim::{predict_quorum, predict_single, ClusterModel};
+    let n = p.get_usize("genes")?;
+    let m = p.get_usize("samples")?;
+    let maxp = p.get_usize("max-ranks")?;
+    let model = ClusterModel::default();
+    let single = predict_single(n, m, 16, &model);
+    let mut t = Table::new(
+        &format!("cluster-model predictions (N = {n}, M = {m}; single-node 16T = {})", format_secs(single.total_secs)),
+        &["P", "nodes", "total", "speedup", "mem/rank"],
+    );
+    let mut pp = 4;
+    while pp <= maxp {
+        let pred = predict_quorum(n, m, pp, &model)?;
+        t.row(vec![
+            pp.to_string(),
+            pred.nodes.to_string(),
+            format_secs(pred.total_secs),
+            format!("{:.2}x", single.total_secs / pred.total_secs),
+            format_bytes(pred.mem_bytes_per_rank),
+        ]);
+        pp *= 2;
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_dataset(p: &Parsed) -> anyhow::Result<()> {
+    let spec = SyntheticSpec {
+        genes: p.get_usize("genes")?,
+        samples: p.get_usize("samples")?,
+        modules: p.get_usize("modules")?,
+        noise: p.get_f64("noise")?,
+        seed: p.get_u64("seed")?,
+    };
+    let d = ExpressionDataset::generate(spec);
+    let out = p.get_str("out").unwrap();
+    quorall::data::loader::write_expression_csv(std::path::Path::new(out), &d.expr)?;
+    println!(
+        "wrote {} ({} genes x {} samples, {} module genes)",
+        out,
+        d.genes(),
+        d.samples(),
+        d.module_gene_count()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("quorall {}", env!("CARGO_PKG_VERSION"));
+    println!("cores: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0));
+    let dir = std::path::Path::new("artifacts");
+    match quorall::runtime::ArtifactManifest::load(dir) {
+        Ok(m) => {
+            println!("artifacts: {} kernels in {}", m.kernels.len(), dir.display());
+            for (name, k) in &m.kernels {
+                println!("  {name}: {} dims {:?}", k.file.display(), k.dims);
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    println!("peak RSS: {}", format_bytes(quorall::metrics::peak_rss_bytes()));
+    Ok(())
+}

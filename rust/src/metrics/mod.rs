@@ -1,0 +1,41 @@
+//! Metrics: logical memory accounting per rank (Figure 2 right), real RSS,
+//! communication counters, and report tables.
+
+pub mod memory;
+pub mod report;
+
+pub use memory::{peak_rss_bytes, MemoryAccountant, MemorySnapshot};
+pub use report::Table;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cross-thread communication counters (owned by the transport).
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+impl CommStats {
+    pub fn record(&self, bytes: u64) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.messages.load(Ordering::Relaxed), self.bytes.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_stats_accumulate() {
+        let s = CommStats::default();
+        s.record(100);
+        s.record(50);
+        assert_eq!(s.snapshot(), (2, 150));
+    }
+}

@@ -1,0 +1,288 @@
+//! Exact single-node PCIT — the paper's baseline (Koesterke et al. 2013
+//! optimized this exact computation on Xeon/Xeon Phi; our per-rank thread
+//! pool plays the OpenMP role).
+//!
+//! Complexity: O(N²) memory for the correlation matrix, O(N³) trio scans.
+
+use super::{correlation_matrix, trio_eliminates};
+use crate::pool::ThreadPool;
+use crate::util::Matrix;
+
+/// Outcome of a PCIT run: the correlation matrix plus the significance mask
+/// over unordered gene pairs.
+#[derive(Clone, Debug)]
+pub struct PcitResult {
+    pub n: usize,
+    pub corr: Matrix,
+    /// keep[pair_index(x, y)] — true when the edge survived every z.
+    keep: Vec<bool>,
+}
+
+impl PcitResult {
+    #[inline]
+    pub fn pair_index(n: usize, x: usize, y: usize) -> usize {
+        debug_assert!(x < y && y < n);
+        // Strict upper triangle, row-major: row x starts after
+        // sum_{r<x}(n-1-r) entries.
+        x * (n - 1) - x * x.saturating_sub(1) / 2 + (y - x - 1)
+    }
+
+    pub fn keep(&self, x: usize, y: usize) -> bool {
+        if x == y {
+            return false;
+        }
+        let (a, b) = if x < y { (x, y) } else { (y, x) };
+        self.keep[Self::pair_index(self.n, a, b)]
+    }
+
+    pub fn keep_mask(&self) -> &[bool] {
+        &self.keep
+    }
+
+    /// Count of significant edges.
+    pub fn n_edges(&self) -> usize {
+        self.keep.iter().filter(|&&k| k).count()
+    }
+
+    /// Significant edges as (x, y, r) with x < y.
+    pub fn edges(&self) -> Vec<(usize, usize, f32)> {
+        let mut out = Vec::with_capacity(self.n_edges());
+        for x in 0..self.n {
+            for y in (x + 1)..self.n {
+                if self.keep[Self::pair_index(self.n, x, y)] {
+                    out.push((x, y, self.corr[(x, y)]));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Run exact PCIT over raw expression data (genes × samples).
+///
+/// `pool` parallelizes the O(N³) phase-2 scan across pair rows.
+pub fn exact_pcit(expr: &Matrix, pool: Option<&ThreadPool>) -> PcitResult {
+    let corr = correlation_matrix(expr);
+    exact_pcit_from_corr(&corr, pool)
+}
+
+/// Run the PCIT elimination phase on a precomputed correlation matrix.
+pub fn exact_pcit_from_corr(corr: &Matrix, pool: Option<&ThreadPool>) -> PcitResult {
+    let n = corr.rows();
+    assert_eq!(corr.rows(), corr.cols(), "correlation matrix must be square");
+    let n_pairs = n * n.saturating_sub(1) / 2;
+    let mut keep = vec![true; n_pairs];
+
+    match pool {
+        Some(pool) if n >= 2 => {
+            // Parallel over x rows; each row writes a disjoint keep slice.
+            let rows: Vec<Vec<bool>> = pool.parallel_map(n - 1, |x| scan_row(corr, x));
+            for (x, row) in rows.into_iter().enumerate() {
+                let base = PcitResult::pair_index(n, x, x + 1);
+                keep[base..base + row.len()].copy_from_slice(&row);
+            }
+        }
+        _ => {
+            for x in 0..n.saturating_sub(1) {
+                let row = scan_row(corr, x);
+                let base = PcitResult::pair_index(n, x, x + 1);
+                keep[base..base + row.len()].copy_from_slice(&row);
+            }
+        }
+    }
+    PcitResult { n, corr: corr.clone(), keep }
+}
+
+/// Keep-flags for all pairs (x, y) with y > x — the optimized row scan.
+///
+/// Same hoisting as `blocked::eliminate_chunk` (per-trio expression forms
+/// identical to `trio_eliminates`, so results match the naive scan exactly;
+/// pinned by `optimized_row_scan_matches_naive`).
+fn scan_row(corr: &Matrix, x: usize) -> Vec<bool> {
+    use super::EPS_GUARD;
+    let n = corr.rows();
+    let rx = corr.row(x);
+    // Per-z: x-leg values (dxz, validity) shared by every y in this row.
+    let mut dxz_row = vec![0.0f32; n];
+    let mut ok_x = vec![false; n];
+    for t in 0..n {
+        let v = rx[t];
+        let d = 1.0 - v * v;
+        dxz_row[t] = d;
+        ok_x[t] = d >= EPS_GUARD && v.abs() >= EPS_GUARD;
+    }
+    let mut row_keep = vec![true; n - 1 - x];
+    for y in (x + 1)..n {
+        let rxy = corr[(x, y)];
+        let dxy = 1.0 - rxy * rxy;
+        if dxy < EPS_GUARD || rxy.abs() < EPS_GUARD {
+            continue; // never eliminated
+        }
+        let abs_rxy = rxy.abs();
+        let ry = corr.row(y);
+        let mut hit = false;
+        for t in 0..n {
+            if !ok_x[t] {
+                continue;
+            }
+            let ryz_v = ry[t];
+            let dyz = 1.0 - ryz_v * ryz_v;
+            if dyz < EPS_GUARD || ryz_v.abs() < EPS_GUARD {
+                continue;
+            }
+            let rxz_v = rx[t];
+            let dxz = dxz_row[t];
+            // Same forms as trio_eliminates:
+            let pxy = (rxy - rxz_v * ryz_v) / (dxz * dyz).sqrt();
+            let pxz = (rxz_v - rxy * ryz_v) / (dxy * dyz).sqrt();
+            let pyz = (ryz_v - rxy * rxz_v) / (dxy * dxz).sqrt();
+            let eps = (pxy / rxy + pxz / rxz_v + pyz / ryz_v) / 3.0;
+            if abs_rxy < (eps * rxz_v).abs() && abs_rxy < (eps * ryz_v).abs() {
+                hit = true;
+                break;
+            }
+        }
+        if hit {
+            row_keep[y - x - 1] = false;
+        }
+    }
+    row_keep
+}
+
+/// Scan all z for pair (x, y): eliminated if any z explains the edge.
+#[inline]
+pub fn pair_is_eliminated(corr: &Matrix, x: usize, y: usize) -> bool {
+    let n = corr.rows();
+    let rxy = corr[(x, y)];
+    let rx = corr.row(x);
+    let ry = corr.row(y);
+    for z in 0..n {
+        if z == x || z == y {
+            continue;
+        }
+        if trio_eliminates(rxy, rx[z], ry[z]) {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{ExpressionDataset, SyntheticSpec};
+
+    fn small_dataset() -> ExpressionDataset {
+        ExpressionDataset::generate(SyntheticSpec {
+            genes: 60,
+            samples: 40,
+            modules: 3,
+            noise: 0.4,
+            seed: 21,
+        })
+    }
+
+    #[test]
+    fn pair_index_bijective() {
+        let n = 10;
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..n {
+            for y in (x + 1)..n {
+                assert!(seen.insert(PcitResult::pair_index(n, x, y)));
+            }
+        }
+        assert_eq!(seen.len(), 45);
+        assert_eq!(*seen.iter().max().unwrap(), 44);
+    }
+
+    #[test]
+    fn pcit_reduces_edge_count() {
+        let d = small_dataset();
+        let res = exact_pcit(&d.expr, None);
+        let total_pairs = 60 * 59 / 2;
+        assert!(res.n_edges() > 0, "some edges survive");
+        assert!(res.n_edges() < total_pairs, "some edges eliminated");
+    }
+
+    #[test]
+    fn pcit_favors_intra_module_edges() {
+        let d = small_dataset();
+        let res = exact_pcit(&d.expr, None);
+        let edges = res.edges();
+        // Among strong surviving edges, intra-module should dominate.
+        let strong: Vec<_> = edges.iter().filter(|(_, _, r)| r.abs() > 0.5).collect();
+        assert!(!strong.is_empty());
+        let intra = strong.iter().filter(|(x, y, _)| d.same_module(*x, *y)).count();
+        assert!(
+            intra * 2 > strong.len(),
+            "intra-module should dominate strong edges: {intra}/{}",
+            strong.len()
+        );
+    }
+
+    #[test]
+    fn pooled_matches_serial() {
+        let d = ExpressionDataset::generate(SyntheticSpec {
+            genes: 40,
+            samples: 24,
+            modules: 4,
+            noise: 0.5,
+            seed: 33,
+        });
+        let pool = ThreadPool::new(4);
+        let serial = exact_pcit(&d.expr, None);
+        let parallel = exact_pcit(&d.expr, Some(&pool));
+        assert_eq!(serial.keep_mask(), parallel.keep_mask());
+    }
+
+    #[test]
+    fn keep_is_symmetric_and_irreflexive() {
+        let d = small_dataset();
+        let res = exact_pcit(&d.expr, None);
+        for x in 0..10 {
+            assert!(!res.keep(x, x));
+            for y in 0..10 {
+                assert_eq!(res.keep(x, y), res.keep(y, x));
+            }
+        }
+    }
+
+    #[test]
+    fn edges_match_keep() {
+        let d = small_dataset();
+        let res = exact_pcit(&d.expr, None);
+        let edges = res.edges();
+        assert_eq!(edges.len(), res.n_edges());
+        for (x, y, r) in edges {
+            assert!(res.keep(x, y));
+            assert_eq!(r, res.corr[(x, y)]);
+        }
+    }
+
+    #[test]
+    fn optimized_row_scan_matches_naive() {
+        let d = small_dataset();
+        let corr = super::super::correlation_matrix(&d.expr);
+        let n = corr.rows();
+        for x in 0..n - 1 {
+            let fast = super::scan_row(&corr, x);
+            for y in (x + 1)..n {
+                assert_eq!(
+                    fast[y - x - 1],
+                    !pair_is_eliminated(&corr, x, y),
+                    "pair ({x},{y})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        // n = 1: no pairs; n = 2: single pair survives (no z exists).
+        let one = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(exact_pcit(&one, None).n_edges(), 0);
+        let two = Matrix::from_vec(2, 4, vec![1.0, 2.0, 3.0, 4.0, 2.0, 4.0, 6.0, 9.0]);
+        let res = exact_pcit(&two, None);
+        assert_eq!(res.n_edges(), 1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Tile-based PCIT phases — the compute shapes executed by the distributed
+//! coordinator and the AOT kernels.
+//!
+//! Phase 1: correlation tiles `corr_block(Za, Zb)` (see [`super::correlation`]).
+//! Phase 2: elimination tiles — for an edge block (rows x ∈ block a,
+//! columns y ∈ block c), scan mediator genes z in fixed-width chunks:
+//!
+//! `eliminated[x, y] |= ∃ z in chunk: trio_eliminates(Cxy[x,y], Rx[x,z], Ry[y,z])`
+//!
+//! Because the correlation matrix has an exact unit diagonal, the z = x and
+//! z = y cases self-mask (|r| = 1 trips `EPS_GUARD`), so the tile math is a
+//! pure function of the three float arrays — exactly the Pallas kernel's
+//! contract (`python/compile/kernels/pcit.py`).
+
+use super::trio_eliminates;
+use crate::util::Matrix;
+
+/// Scan one z-chunk for an edge tile. `cxy`: A×B direct correlations;
+/// `rxz`: A×Z correlations of the x rows against the chunk's z columns;
+/// `ryz`: B×Z likewise for y. Returns the A×B "eliminated by this chunk"
+/// mask (row-major).
+pub fn eliminate_chunk(cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Vec<bool> {
+    let (a, b) = cxy.shape();
+    let z = rxz.cols();
+    assert_eq!(rxz.rows(), a, "rxz rows must match tile rows");
+    assert_eq!(ryz.rows(), b, "ryz rows must match tile cols");
+    assert_eq!(ryz.cols(), z, "rxz/ryz chunk width mismatch");
+    let mut out = vec![false; a * b];
+    // Hot path (EXPERIMENTS.md §Perf): hoist everything that depends only on
+    // one leg of the trio out of the (i, j, t) loop. The per-trio expression
+    // forms are IDENTICAL to `trio_eliminates` (same literal operations, no
+    // re-association), so the mask is bitwise-equal to the reference — the
+    // unit test `optimized_scan_matches_reference` pins this.
+    use super::EPS_GUARD;
+    // Per-(j, t): dyz = 1 - r², validity of the y leg.
+    let mut dyz_all = vec![0.0f32; b * z];
+    let mut ok_y = vec![false; b * z];
+    for j in 0..b {
+        let ry = ryz.row(j);
+        for t in 0..z {
+            let v = ry[t];
+            let d = 1.0 - v * v;
+            dyz_all[j * z + t] = d;
+            ok_y[j * z + t] = d >= EPS_GUARD && v.abs() >= EPS_GUARD;
+        }
+    }
+    let mut dxz_row = vec![0.0f32; z];
+    let mut ok_x = vec![false; z];
+    for i in 0..a {
+        let rx = rxz.row(i);
+        for t in 0..z {
+            let v = rx[t];
+            let d = 1.0 - v * v;
+            dxz_row[t] = d;
+            ok_x[t] = d >= EPS_GUARD && v.abs() >= EPS_GUARD;
+        }
+        for j in 0..b {
+            let rxy = cxy[(i, j)];
+            let dxy = 1.0 - rxy * rxy;
+            if dxy < EPS_GUARD || rxy.abs() < EPS_GUARD {
+                continue; // pair can never be eliminated
+            }
+            let abs_rxy = rxy.abs();
+            let ry = ryz.row(j);
+            let dyz = &dyz_all[j * z..(j + 1) * z];
+            let oky = &ok_y[j * z..(j + 1) * z];
+            let mut hit = false;
+            for t in 0..z {
+                if !ok_x[t] || !oky[t] {
+                    continue;
+                }
+                let rxz_v = rx[t];
+                let ryz_v = ry[t];
+                let dxz = dxz_row[t];
+                let dyz_v = dyz[t];
+                // Same forms as trio_eliminates:
+                let pxy = (rxy - rxz_v * ryz_v) / (dxz * dyz_v).sqrt();
+                let pxz = (rxz_v - rxy * ryz_v) / (dxy * dyz_v).sqrt();
+                let pyz = (ryz_v - rxy * rxz_v) / (dxy * dxz).sqrt();
+                let eps = (pxy / rxy + pxz / rxz_v + pyz / ryz_v) / 3.0;
+                if abs_rxy < (eps * rxz_v).abs() && abs_rxy < (eps * ryz_v).abs() {
+                    hit = true;
+                    break;
+                }
+            }
+            out[i * b + j] = hit;
+        }
+    }
+    out
+}
+
+/// Naive reference scan (kept for differential testing of the hot path).
+#[doc(hidden)]
+pub fn eliminate_chunk_reference(cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Vec<bool> {
+    let (a, b) = cxy.shape();
+    let z = rxz.cols();
+    let mut out = vec![false; a * b];
+    for i in 0..a {
+        let rx = rxz.row(i);
+        for j in 0..b {
+            let rxy = cxy[(i, j)];
+            let ry = ryz.row(j);
+            out[i * b + j] = (0..z).any(|t| trio_eliminates(rxy, rx[t], ry[t]));
+        }
+    }
+    out
+}
+
+/// Full elimination for an edge tile: scan all N mediators in `chunk`-wide
+/// pieces, OR-accumulating. `rx_full`: A×N, `ry_full`: B×N.
+pub fn eliminate_block(cxy: &Matrix, rx_full: &Matrix, ry_full: &Matrix, chunk: usize) -> Vec<bool> {
+    let (a, b) = cxy.shape();
+    let n = rx_full.cols();
+    assert_eq!(ry_full.cols(), n);
+    assert!(chunk >= 1);
+    let mut out = vec![false; a * b];
+    let mut z0 = 0usize;
+    while z0 < n {
+        let w = chunk.min(n - z0);
+        let rxz = rx_full.block(0, z0, a, w);
+        let ryz = ry_full.block(0, z0, b, w);
+        let m = eliminate_chunk(cxy, &rxz, &ryz);
+        for (o, hit) in out.iter_mut().zip(m) {
+            *o |= hit;
+        }
+        z0 += w;
+    }
+    out
+}
+
+/// Quorum-local variant (the ablation mode): mediators restricted to the
+/// columns listed in `z_cols` (the owner's quorum genes).
+pub fn eliminate_block_local(
+    cxy: &Matrix,
+    rx_local: &Matrix,
+    ry_local: &Matrix,
+) -> Vec<bool> {
+    // rx_local / ry_local are already column-restricted; a single chunk scan.
+    eliminate_chunk(cxy, rx_local, ry_local)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{ExpressionDataset, SyntheticSpec};
+    use crate::pcit::algorithm::{exact_pcit_from_corr, PcitResult};
+    use crate::pcit::correlation_matrix;
+
+    fn corr_fixture(n: usize) -> Matrix {
+        let d = ExpressionDataset::generate(SyntheticSpec {
+            genes: n,
+            samples: 32,
+            modules: 4,
+            noise: 0.5,
+            seed: 77,
+        });
+        correlation_matrix(&d.expr)
+    }
+
+    #[test]
+    fn blocked_matches_exact_offdiagonal() {
+        let n = 48;
+        let corr = corr_fixture(n);
+        let exact = exact_pcit_from_corr(&corr, None);
+        // Edge block: rows 0..16 vs cols 16..48.
+        let (a, b) = (16usize, 32usize);
+        let cxy = corr.block(0, 16, a, b);
+        let rx = corr.block(0, 0, a, n);
+        let ry = corr.block(16, 0, b, n);
+        for chunk in [7usize, 16, 48, 100] {
+            let elim = eliminate_block(&cxy, &rx, &ry, chunk);
+            for i in 0..a {
+                for j in 0..b {
+                    let x = i;
+                    let y = 16 + j;
+                    assert_eq!(
+                        !elim[i * b + j],
+                        exact.keep(x, y),
+                        "pair ({x},{y}) chunk={chunk}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matches_exact_diagonal_block() {
+        let n = 32;
+        let corr = corr_fixture(n);
+        let exact = exact_pcit_from_corr(&corr, None);
+        let a = 16usize;
+        let cxy = corr.block(0, 0, a, a);
+        let rx = corr.block(0, 0, a, n);
+        let elim = eliminate_block(&cxy, &rx, &rx, 8);
+        for x in 0..a {
+            for y in (x + 1)..a {
+                assert_eq!(!elim[x * a + y], exact.keep(x, y), "pair ({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_width_invariance() {
+        let corr = corr_fixture(24);
+        let cxy = corr.block(0, 8, 8, 8);
+        let rx = corr.block(0, 0, 8, 24);
+        let ry = corr.block(8, 0, 8, 24);
+        let m1 = eliminate_block(&cxy, &rx, &ry, 1);
+        let m5 = eliminate_block(&cxy, &rx, &ry, 5);
+        let m24 = eliminate_block(&cxy, &rx, &ry, 24);
+        assert_eq!(m1, m5);
+        assert_eq!(m5, m24);
+    }
+
+    #[test]
+    fn local_scan_is_subset_of_full() {
+        // Restricting mediators can only *reduce* eliminations.
+        let n = 40;
+        let corr = corr_fixture(n);
+        let cxy = corr.block(0, 20, 8, 8);
+        let rx_full = corr.block(0, 0, 8, n);
+        let ry_full = corr.block(20, 0, 8, n);
+        let full = eliminate_block(&cxy, &rx_full, &ry_full, 16);
+        let rx_loc = corr.block(0, 0, 8, 10);
+        let ry_loc = corr.block(20, 0, 8, 10);
+        let local = eliminate_block_local(&cxy, &rx_loc, &ry_loc);
+        for (f, l) in full.iter().zip(&local) {
+            assert!(*f || !*l, "local eliminated where full did not");
+        }
+    }
+
+    #[test]
+    fn self_mediators_self_mask() {
+        // Including the z = x column (r = 1 on the diagonal) must not change
+        // anything — the EPS_GUARD rejects |r| = 1 trios.
+        let corr = corr_fixture(20);
+        let cxy = corr.block(0, 10, 4, 4);
+        let rx = corr.block(0, 0, 4, 20);
+        let ry = corr.block(10, 0, 4, 20);
+        let with_all = eliminate_block(&cxy, &rx, &ry, 20);
+        // Drop columns 0..4 (the x genes) and 10..14 (the y genes).
+        let keep_cols: Vec<usize> = (0..20).filter(|&z| !(z < 4 || (10..14).contains(&z))).collect();
+        let rx_sub = rx.select_cols(&keep_cols);
+        let ry_sub = ry.select_cols(&keep_cols);
+        let without = eliminate_chunk(&cxy, &rx_sub, &ry_sub);
+        assert_eq!(with_all, without);
+    }
+
+    #[test]
+    fn optimized_scan_matches_reference() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(1234);
+        for _ in 0..20 {
+            let (a, b, z) = (
+                1 + rng.below(24),
+                1 + rng.below(24),
+                1 + rng.below(64),
+            );
+            let gen = |rng: &mut Rng, r: usize, c: usize| {
+                Matrix::from_fn(r, c, |_, _| {
+                    // Mix in degenerate values to exercise the guards.
+                    match rng.below(12) {
+                        0 => 1.0,
+                        1 => -1.0,
+                        2 => 0.0,
+                        _ => rng.f32() * 1.98 - 0.99,
+                    }
+                })
+            };
+            let cxy = gen(&mut rng, a, b);
+            let rxz = gen(&mut rng, a, z);
+            let ryz = gen(&mut rng, b, z);
+            assert_eq!(
+                eliminate_chunk(&cxy, &rxz, &ryz),
+                eliminate_chunk_reference(&cxy, &rxz, &ryz),
+                "a={a} b={b} z={z}"
+            );
+        }
+    }
+
+    #[test]
+    fn pair_index_reference() {
+        // Guard against regressions in the shared strict-upper-triangle
+        // indexing used to compare blocked vs exact.
+        assert_eq!(PcitResult::pair_index(4, 0, 1), 0);
+        assert_eq!(PcitResult::pair_index(4, 2, 3), 5);
+    }
+}

@@ -1,0 +1,179 @@
+//! Row standardization and Pearson correlation.
+//!
+//! Standardization maps row x to `z = (x - mean) / ||x - mean||₂`, so the
+//! correlation matrix is exactly `Z·Zᵀ` — the form the MXU-shaped L1 kernel
+//! computes. Constant rows standardize to zero (correlation 0 with all).
+
+use crate::pool::ThreadPool;
+use crate::util::Matrix;
+
+/// Standardize every row: subtract mean, divide by the centered L2 norm.
+pub fn standardize_rows(expr: &Matrix) -> Matrix {
+    let (n, m) = expr.shape();
+    let mut z = Matrix::zeros(n, m);
+    for r in 0..n {
+        standardize_row_into(expr.row(r), z.row_mut(r));
+    }
+    z
+}
+
+/// Standardize rows using a thread pool (the per-rank "OpenMP" path).
+pub fn standardize_rows_pooled(expr: &Matrix, pool: &ThreadPool) -> Matrix {
+    let (n, m) = expr.shape();
+    let mut z = Matrix::zeros(n, m);
+    let rows: Vec<Vec<f32>> = pool.parallel_map(n, |r| {
+        let mut out = vec![0.0f32; m];
+        standardize_row_into(expr.row(r), &mut out);
+        out
+    });
+    for (r, row) in rows.into_iter().enumerate() {
+        z.row_mut(r).copy_from_slice(&row);
+    }
+    z
+}
+
+#[inline]
+pub fn standardize_row_into(x: &[f32], out: &mut [f32]) {
+    let m = x.len();
+    debug_assert_eq!(m, out.len());
+    if m == 0 {
+        return;
+    }
+    let mean = x.iter().sum::<f32>() / m as f32;
+    let mut ss = 0.0f32;
+    for &v in x {
+        let d = v - mean;
+        ss += d * d;
+    }
+    if ss <= 0.0 {
+        out.fill(0.0);
+        return;
+    }
+    let inv = 1.0 / ss.sqrt();
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = (v - mean) * inv;
+    }
+}
+
+/// Full N×N correlation matrix from the raw expression matrix.
+/// Diagonal forced to 1, off-diagonals clamped to [-1, 1].
+pub fn correlation_matrix(expr: &Matrix) -> Matrix {
+    let z = standardize_rows(expr);
+    let mut c = z.matmul_nt(&z);
+    finalize_correlation(&mut c, true);
+    c
+}
+
+/// Correlation block between two sets of *standardized* rows
+/// (`za`: A×M, `zb`: B×M) → A×B tile, clamped to [-1, 1].
+/// This is the exact reference semantics of the `corr_chunk` L1 kernel.
+pub fn corr_block(za: &Matrix, zb: &Matrix) -> Matrix {
+    let mut c = za.matmul_nt(zb);
+    finalize_correlation(&mut c, false);
+    c
+}
+
+fn finalize_correlation(c: &mut Matrix, set_diag: bool) {
+    let (n, m) = c.shape();
+    for r in 0..n {
+        for col in 0..m {
+            let v = &mut c[(r, col)];
+            *v = v.clamp(-1.0, 1.0);
+        }
+    }
+    if set_diag {
+        for r in 0..n.min(m) {
+            c[(r, r)] = 1.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::stats::pearson_f64;
+
+    fn rand_matrix(n: usize, m: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, m, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn matches_f64_reference() {
+        let x = rand_matrix(12, 30, 5);
+        let c = correlation_matrix(&x);
+        for a in 0..12 {
+            for b in 0..12 {
+                let ra: Vec<f64> = x.row(a).iter().map(|&v| v as f64).collect();
+                let rb: Vec<f64> = x.row(b).iter().map(|&v| v as f64).collect();
+                let expect = pearson_f64(&ra, &rb) as f32;
+                assert!(
+                    (c[(a, b)] - expect).abs() < 1e-4,
+                    "corr({a},{b}) = {} vs {}",
+                    c[(a, b)],
+                    expect
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_is_one_and_symmetric() {
+        let x = rand_matrix(8, 20, 9);
+        let c = correlation_matrix(&x);
+        for i in 0..8 {
+            assert_eq!(c[(i, i)], 1.0);
+            for j in 0..8 {
+                assert!((c[(i, j)] - c[(j, i)]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_rows_are_zero_correlated() {
+        let mut x = rand_matrix(4, 10, 3);
+        x.row_mut(2).fill(7.0);
+        let c = correlation_matrix(&x);
+        for j in 0..4 {
+            if j != 2 {
+                assert_eq!(c[(2, j)], 0.0);
+            }
+        }
+        assert_eq!(c[(2, 2)], 1.0); // forced diagonal
+    }
+
+    #[test]
+    fn corr_block_matches_full_matrix() {
+        let x = rand_matrix(10, 25, 11);
+        let z = standardize_rows(&x);
+        let full = correlation_matrix(&x);
+        let za = z.block(0, 0, 4, 25);
+        let zb = z.block(6, 0, 4, 25);
+        let blk = corr_block(&za, &zb);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((blk[(i, j)] - full[(i, 6 + j)]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matches_serial() {
+        let x = rand_matrix(33, 17, 13);
+        let pool = ThreadPool::new(4);
+        assert_eq!(standardize_rows(&x), standardize_rows_pooled(&x, &pool));
+    }
+
+    #[test]
+    fn standardized_rows_unit_norm() {
+        let x = rand_matrix(6, 40, 17);
+        let z = standardize_rows(&x);
+        for r in 0..6 {
+            let norm: f32 = z.row(r).iter().map(|v| v * v).sum();
+            assert!((norm - 1.0).abs() < 1e-5);
+            let mean: f32 = z.row(r).iter().sum::<f32>() / 40.0;
+            assert!(mean.abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! PCIT — partial correlation + information theory (Reverter & Chan 2008).
+//!
+//! The paper's evaluation application (§5): gene co-expression network
+//! reconstruction. For every gene trio (x, y, z) the three first-order
+//! partial correlations are computed; a trio-local tolerance ε decides
+//! whether the direct correlation r_xy is explainable through z — if some z
+//! explains it, the edge (x, y) is eliminated.
+//!
+//! * [`correlation`] — row standardization and Pearson correlation
+//!   (full matrix and tile form — the L1 kernel's reference semantics).
+//! * [`algorithm`] — exact single-node PCIT, O(N³) (the paper's baseline).
+//! * [`blocked`] — tile-based phases executed by the distributed
+//!   coordinator; bit-identical trio semantics via [`trio_eliminates`].
+//! * [`network`] — significant-edge extraction and accuracy metrics.
+
+pub mod correlation;
+pub mod algorithm;
+pub mod blocked;
+pub mod network;
+
+pub use algorithm::{exact_pcit, PcitResult};
+pub use correlation::{correlation_matrix, standardize_rows};
+pub use network::Network;
+
+/// Guard for degenerate denominators (|r| ≈ 1 or direct correlation ≈ 0).
+/// Shared by every implementation — native, blocked, and the Pallas kernel
+/// (see `python/compile/kernels/pcit.py`) — so masks agree bit-for-bit.
+pub const EPS_GUARD: f32 = 1e-6;
+
+/// The single-trio elimination test, shared by all implementations.
+///
+/// Returns true when z *explains* the (x, y) correlation: both
+/// `|r_xy| < |ε·r_xz|` and `|r_xy| < |ε·r_yz|`, with
+/// `ε = (r_xy.z/r_xy + r_xz.y/r_xz + r_yz.x/r_yz) / 3`.
+/// Degenerate trios (any |1 - r²| < EPS_GUARD or any direct r = 0) never
+/// eliminate.
+#[inline]
+pub fn trio_eliminates(rxy: f32, rxz: f32, ryz: f32) -> bool {
+    let dxy = 1.0 - rxy * rxy;
+    let dxz = 1.0 - rxz * rxz;
+    let dyz = 1.0 - ryz * ryz;
+    if dxy < EPS_GUARD || dxz < EPS_GUARD || dyz < EPS_GUARD {
+        return false;
+    }
+    if rxy.abs() < EPS_GUARD || rxz.abs() < EPS_GUARD || ryz.abs() < EPS_GUARD {
+        return false;
+    }
+    let pxy = (rxy - rxz * ryz) / (dxz * dyz).sqrt();
+    let pxz = (rxz - rxy * ryz) / (dxy * dyz).sqrt();
+    let pyz = (ryz - rxy * rxz) / (dxy * dxz).sqrt();
+    let eps = (pxy / rxy + pxz / rxz + pyz / ryz) / 3.0;
+    let exy = (eps * rxz).abs();
+    let ezy = (eps * ryz).abs();
+    rxy.abs() < exy && rxy.abs() < ezy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strong_direct_edge_survives() {
+        // x-y strongly correlated, z unrelated: z cannot explain the edge.
+        assert!(!trio_eliminates(0.95, 0.05, 0.02));
+    }
+
+    #[test]
+    fn mediated_edge_eliminated() {
+        // x-z and y-z clearly stronger than the direct x-y correlation
+        // (|r_xy| ≪ r_xz·r_yz): the tolerance test discards the weak direct
+        // edge. (PCIT is deliberately conservative: a direct correlation
+        // close to r_xz·r_yz is *kept* — only edges well below the indirect
+        // path are eliminated.)
+        assert!(trio_eliminates(0.1, 0.6, 0.6));
+        assert!(trio_eliminates(-0.1, 0.6, 0.6));
+        // Near the mediated value the edge survives.
+        assert!(!trio_eliminates(0.74, 0.9, 0.9));
+    }
+
+    #[test]
+    fn degenerate_trios_never_eliminate() {
+        assert!(!trio_eliminates(0.5, 1.0, 0.5)); // |r| = 1 → denominator 0
+        assert!(!trio_eliminates(0.0, 0.5, 0.5)); // zero direct correlation
+        assert!(!trio_eliminates(0.5, 0.0, 0.5)); // zero leg
+    }
+
+    #[test]
+    fn symmetric_in_z_legs() {
+        // Swapping rxz and ryz must not change the outcome (x-y symmetric).
+        for (a, b) in [(0.8f32, 0.6f32), (0.3, 0.9), (0.7, 0.7)] {
+            assert_eq!(trio_eliminates(0.4, a, b), trio_eliminates(0.4, b, a));
+        }
+    }
+}

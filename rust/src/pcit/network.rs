@@ -1,0 +1,142 @@
+//! Co-expression networks: significant-edge sets plus the accuracy metrics
+//! used to validate distributed runs against the single-node baseline and
+//! against the synthetic ground truth.
+
+use crate::data::synthetic::ExpressionDataset;
+use std::collections::BTreeSet;
+
+/// An undirected network over `n` genes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Network {
+    pub n: usize,
+    /// Edges (x, y, r) with x < y, sorted by (x, y).
+    pub edges: Vec<(usize, usize, f32)>,
+}
+
+impl Network {
+    pub fn new(n: usize, mut edges: Vec<(usize, usize, f32)>) -> Self {
+        for e in &mut edges {
+            if e.0 > e.1 {
+                std::mem::swap(&mut e.0, &mut e.1);
+            }
+        }
+        edges.sort_by_key(|&(x, y, _)| (x, y));
+        edges.dedup_by_key(|&mut (x, y, _)| (x, y));
+        Self { n, edges }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Edge density relative to C(n, 2).
+    pub fn density(&self) -> f64 {
+        let total = crate::util::n_choose_2(self.n);
+        if total == 0 {
+            0.0
+        } else {
+            self.edges.len() as f64 / total as f64
+        }
+    }
+
+    fn edge_set(&self) -> BTreeSet<(usize, usize)> {
+        self.edges.iter().map(|&(x, y, _)| (x, y)).collect()
+    }
+
+    /// Exact equality of edge sets (ignores correlation values).
+    pub fn same_edges(&self, other: &Network) -> bool {
+        self.edge_set() == other.edge_set()
+    }
+
+    /// Jaccard similarity of edge sets.
+    pub fn jaccard(&self, other: &Network) -> f64 {
+        let a = self.edge_set();
+        let b = other.edge_set();
+        let inter = a.intersection(&b).count();
+        let union = a.union(&b).count();
+        if union == 0 {
+            1.0
+        } else {
+            inter as f64 / union as f64
+        }
+    }
+
+    /// Fraction of edges above |r| >= `min_r` connecting same-module genes
+    /// (precision against planted ground truth).
+    pub fn module_precision(&self, truth: &ExpressionDataset, min_r: f32) -> f64 {
+        let strong: Vec<_> = self.edges.iter().filter(|(_, _, r)| r.abs() >= min_r).collect();
+        if strong.is_empty() {
+            return 0.0;
+        }
+        let hits = strong.iter().filter(|(x, y, _)| truth.same_module(*x, *y)).count();
+        hits as f64 / strong.len() as f64
+    }
+
+    /// Degree of each node.
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.n];
+        for &(x, y, _) in &self.edges {
+            d[x] += 1;
+            d[y] += 1;
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(n: usize, edges: &[(usize, usize)]) -> Network {
+        Network::new(n, edges.iter().map(|&(x, y)| (x, y, 0.9)).collect())
+    }
+
+    #[test]
+    fn normalizes_and_dedups() {
+        let nw = Network::new(5, vec![(3, 1, 0.5), (1, 3, 0.6), (0, 2, 0.7)]);
+        assert_eq!(nw.n_edges(), 2);
+        assert_eq!(nw.edges[0].0, 0);
+        assert_eq!(nw.edges[1], (1, 3, 0.5));
+    }
+
+    #[test]
+    fn density_and_degrees() {
+        let nw = net(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert!((nw.density() - 0.5).abs() < 1e-12); // 3 of 6
+        assert_eq!(nw.degrees(), vec![1, 2, 2, 1]);
+    }
+
+    #[test]
+    fn jaccard_and_equality() {
+        let a = net(5, &[(0, 1), (1, 2)]);
+        let b = net(5, &[(1, 0), (2, 1)]);
+        assert!(a.same_edges(&b));
+        assert_eq!(a.jaccard(&b), 1.0);
+        let c = net(5, &[(0, 1), (3, 4)]);
+        assert!((a.jaccard(&c) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(net(3, &[]).jaccard(&net(3, &[])), 1.0);
+    }
+
+    #[test]
+    fn module_precision_against_truth() {
+        use crate::data::synthetic::{ExpressionDataset, SyntheticSpec};
+        let d = ExpressionDataset::generate(SyntheticSpec {
+            genes: 30,
+            samples: 20,
+            modules: 3,
+            noise: 0.3,
+            seed: 5,
+        });
+        // Build a network of only intra-module pairs → precision 1.
+        let mut edges = Vec::new();
+        for x in 0..30 {
+            for y in (x + 1)..30 {
+                if d.same_module(x, y) {
+                    edges.push((x, y, 0.9));
+                }
+            }
+        }
+        let nw = Network::new(30, edges);
+        assert_eq!(nw.module_precision(&d, 0.0), 1.0);
+    }
+}

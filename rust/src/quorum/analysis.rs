@@ -1,0 +1,154 @@
+//! Quorum-set analysis: the quantities behind the paper's headline claims
+//! (§1.3, §6): per-process data replication `O(N/√P)`, comparison against
+//! the dual-array force decomposition `2·N/√P` and the all-data `N` cost.
+
+use super::cyclic::CyclicQuorumSet;
+use crate::util::ceil_div;
+
+/// Memory/replication profile of a decomposition for N elements over P
+/// processes, in *elements per process*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicationProfile {
+    /// Elements a single process must hold.
+    pub elements_per_process: usize,
+    /// Total element copies across the system.
+    pub total_copies: usize,
+}
+
+/// Elements per process when each process holds its quorum of datasets
+/// (the paper's method): k blocks of ceil(N/P).
+pub fn quorum_replication(q: &CyclicQuorumSet, n: usize) -> ReplicationProfile {
+    let p = q.processes();
+    let block = ceil_div(n, p);
+    let per = q.quorum_size() * block;
+    ReplicationProfile { elements_per_process: per, total_copies: per * p }
+}
+
+/// Force decomposition (Plimpton): two arrays of N/√P elements each.
+pub fn force_decomposition_replication(n: usize, p: usize) -> ReplicationProfile {
+    let r = crate::util::isqrt(p).max(1);
+    let r = if r * r < p { r + 1 } else { r }; // ceil(sqrt(P))
+    let per = 2 * ceil_div(n, r);
+    ReplicationProfile { elements_per_process: per, total_copies: per * p }
+}
+
+/// Atom decomposition / all-data: every process holds all N elements.
+pub fn all_data_replication(n: usize, p: usize) -> ReplicationProfile {
+    ReplicationProfile { elements_per_process: n, total_copies: n * p }
+}
+
+/// Savings of the quorum method vs the dual-array force decomposition,
+/// as a fraction in [0, 1) (paper: "up to 50% smaller").
+pub fn savings_vs_force(q: &CyclicQuorumSet, n: usize) -> f64 {
+    let quorum = quorum_replication(q, n).elements_per_process as f64;
+    let force = force_decomposition_replication(n, q.processes()).elements_per_process as f64;
+    1.0 - quorum / force
+}
+
+/// Pair-coverage multiplicity histogram: for every unordered dataset pair,
+/// how many quorums contain it. `hist[m]` = number of pairs with coverage m.
+pub fn pair_coverage_histogram(q: &CyclicQuorumSet) -> Vec<usize> {
+    let p = q.processes();
+    let mut hist: Vec<usize> = Vec::new();
+    for a in 0..p {
+        for b in a..p {
+            let m = q.pair_hosts(a, b).len();
+            if hist.len() <= m {
+                hist.resize(m + 1, 0);
+            }
+            hist[m] += 1;
+        }
+    }
+    hist
+}
+
+/// Summary line for reports.
+#[derive(Clone, Debug)]
+pub struct QuorumReport {
+    pub p: usize,
+    pub k: usize,
+    pub lower_bound: usize,
+    pub elements_per_process: usize,
+    pub force_elements_per_process: usize,
+    pub all_data_elements: usize,
+    pub savings_vs_force_pct: f64,
+    pub min_pair_coverage: usize,
+    pub max_pair_coverage: usize,
+}
+
+pub fn report(q: &CyclicQuorumSet, n: usize) -> QuorumReport {
+    let hist = pair_coverage_histogram(q);
+    let min_cov = hist.iter().enumerate().find(|(_, &c)| c > 0).map(|(m, _)| m).unwrap_or(0);
+    let max_cov = hist.iter().enumerate().rev().find(|(_, &c)| c > 0).map(|(m, _)| m).unwrap_or(0);
+    QuorumReport {
+        p: q.processes(),
+        k: q.quorum_size(),
+        lower_bound: super::diffset::lower_bound_k(q.processes()),
+        elements_per_process: quorum_replication(q, n).elements_per_process,
+        force_elements_per_process: force_decomposition_replication(n, q.processes())
+            .elements_per_process,
+        all_data_elements: n,
+        savings_vs_force_pct: savings_vs_force(q, n) * 100.0,
+        min_pair_coverage: min_cov,
+        max_pair_coverage: max_cov,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q7() -> CyclicQuorumSet {
+        CyclicQuorumSet::from_base_set(7, vec![0, 1, 3]).unwrap()
+    }
+
+    #[test]
+    fn quorum_beats_all_data() {
+        let q = q7();
+        let n = 700;
+        let quorum = quorum_replication(&q, n);
+        let all = all_data_replication(n, 7);
+        assert!(quorum.elements_per_process < all.elements_per_process);
+        assert_eq!(quorum.elements_per_process, 3 * 100);
+    }
+
+    #[test]
+    fn quorum_beats_or_matches_force() {
+        // Paper: up to 50% smaller than dual N/sqrt(P) arrays.
+        for p in [7usize, 13, 16, 31, 57, 64] {
+            let q = CyclicQuorumSet::for_processes(p).unwrap();
+            let n = p * 100;
+            let s = savings_vs_force(&q, n);
+            assert!(s >= -0.05, "P={p}: quorum should not be (much) worse, savings={s}");
+        }
+    }
+
+    #[test]
+    fn singer_savings_approach_half() {
+        // For Singer moduli k = q+1 ≈ sqrt(P), the single array of k·N/P vs
+        // 2·N/sqrt(P) saves ~50%.
+        let q = CyclicQuorumSet::for_processes(57).unwrap(); // k = 8
+        let s = savings_vs_force(&q, 57 * 64);
+        assert!(s > 0.40, "savings {s} should approach 0.5");
+    }
+
+    #[test]
+    fn coverage_histogram_counts_all_pairs() {
+        let q = q7();
+        let hist = pair_coverage_histogram(&q);
+        let total: usize = hist.iter().sum();
+        assert_eq!(total, q.total_pairs());
+        assert_eq!(hist.get(0).copied().unwrap_or(0), 0, "no uncovered pairs");
+    }
+
+    #[test]
+    fn report_fields_consistent() {
+        let q = q7();
+        let r = report(&q, 700);
+        assert_eq!(r.p, 7);
+        assert_eq!(r.k, 3);
+        assert_eq!(r.lower_bound, 3);
+        assert!(r.min_pair_coverage >= 1);
+        assert!(r.max_pair_coverage >= r.min_pair_coverage);
+    }
+}

@@ -1,0 +1,290 @@
+//! Cyclic quorum sets (paper §3.2) and the all-pairs property (§4).
+//!
+//! Indices are 0-based here: datasets `D_0..D_{P-1}`, quorum
+//! `S_i = { (a + i) mod P : a ∈ A }` for the base relaxed difference set A.
+
+use super::diffset::is_relaxed_difference_set;
+use super::tables;
+use crate::util::pairs_with_self;
+
+/// A cyclic quorum set over `p` processes generated from a base relaxed
+/// (P, k)-difference set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CyclicQuorumSet {
+    p: usize,
+    base: Vec<usize>,
+}
+
+impl CyclicQuorumSet {
+    /// Build the quorum set for `p` processes using the embedded
+    /// (near-)optimal base sets (P = 1..=111) or on-the-fly search beyond.
+    pub fn for_processes(p: usize) -> anyhow::Result<Self> {
+        if p == 0 {
+            anyhow::bail!("cannot build a quorum set over 0 processes");
+        }
+        let base = tables::base_set(p);
+        Ok(Self { p, base })
+    }
+
+    /// Build a quorum set whose pairs are covered by at least `r` quorums
+    /// (an r-fold difference cover), for the redundancy mode of paper §6.
+    ///
+    /// Construction: union of `r` shifted copies of the optimal base set —
+    /// each copy's internal differences cover every residue once, so the
+    /// union covers every residue >= r times provided the copies are
+    /// disjoint. Quorum size grows to ~r·k: redundancy costs replication,
+    /// which is exactly the trade-off the paper's future work highlights.
+    pub fn with_redundancy(p: usize, r: usize) -> anyhow::Result<Self> {
+        use super::diffset::difference_multiplicities;
+        anyhow::ensure!(r >= 1, "redundancy must be >= 1");
+        let base = tables::base_set(p);
+        if r == 1 {
+            return Self::from_base_set(p, base);
+        }
+        anyhow::ensure!(r < p, "redundancy {r} impossible for P = {p}");
+        // Greedy augmentation: a perfect (λ = 1) difference set intersects
+        // every translate of itself — disjoint copies cannot exist — so we
+        // grow the base element by element, each step picking the residue
+        // that repairs the most still-deficient differences.
+        let mut set = base;
+        loop {
+            let mult = difference_multiplicities(&set, p);
+            let deficient: Vec<usize> = (1..p).filter(|&d| mult[d] < r as usize).collect();
+            if deficient.is_empty() {
+                break;
+            }
+            let mut best: Option<(usize, usize)> = None; // (gain, candidate)
+            for c in 0..p {
+                if set.contains(&c) {
+                    continue;
+                }
+                let mut gain = 0usize;
+                for &a in &set {
+                    let d1 = (c + p - a) % p;
+                    let d2 = (a + p - c) % p;
+                    if d1 != 0 && mult[d1] < r as usize {
+                        gain += 1;
+                    }
+                    if d2 != 0 && mult[d2] < r as usize {
+                        gain += 1;
+                    }
+                }
+                if best.map_or(true, |(g, _)| gain > g) {
+                    best = Some((gain, c));
+                }
+            }
+            let Some((gain, c)) = best else {
+                anyhow::bail!("cannot reach {r}-fold coverage for P = {p}");
+            };
+            anyhow::ensure!(gain > 0 || set.len() < p, "stuck building {r}-fold cover for P = {p}");
+            set.push(c);
+            set.sort_unstable();
+        }
+        let q = Self::from_base_set(p, set)?;
+        // Every unordered pair must now be hosted by >= r quorums.
+        debug_assert!(q.min_pair_coverage() >= r);
+        Ok(q)
+    }
+
+    /// Minimum over all unordered pairs of the number of hosting quorums.
+    pub fn min_pair_coverage(&self) -> usize {
+        let mut min = usize::MAX;
+        for a in 0..self.p {
+            for b in a..self.p {
+                min = min.min(self.pair_hosts(a, b).len());
+            }
+        }
+        if min == usize::MAX {
+            0
+        } else {
+            min
+        }
+    }
+
+    /// Build from an explicit base set; validates the difference property.
+    pub fn from_base_set(p: usize, base: Vec<usize>) -> anyhow::Result<Self> {
+        if p == 0 {
+            anyhow::bail!("P must be >= 1");
+        }
+        let mut b = base;
+        b.sort_unstable();
+        b.dedup();
+        if b.iter().any(|&a| a >= p) {
+            anyhow::bail!("base set elements must be < P");
+        }
+        if p > 1 && !is_relaxed_difference_set(&b, p) {
+            anyhow::bail!("base set {:?} is not a relaxed difference set mod {}", b, p);
+        }
+        Ok(Self { p, base: b })
+    }
+
+    pub fn processes(&self) -> usize {
+        self.p
+    }
+
+    /// Quorum size k (identical for every process — "equal work").
+    pub fn quorum_size(&self) -> usize {
+        self.base.len()
+    }
+
+    pub fn base_set(&self) -> &[usize] {
+        &self.base
+    }
+
+    /// The quorum S_i: dataset indices assigned to process i, sorted.
+    pub fn quorum(&self, i: usize) -> Vec<usize> {
+        assert!(i < self.p, "process index out of range");
+        let mut q: Vec<usize> = self.base.iter().map(|&a| (a + i) % self.p).collect();
+        q.sort_unstable();
+        q
+    }
+
+    /// Membership test without materializing the quorum.
+    pub fn contains(&self, i: usize, dataset: usize) -> bool {
+        debug_assert!(i < self.p && dataset < self.p);
+        // dataset = (a + i) mod p  =>  a = (dataset - i) mod p
+        let a = (dataset + self.p - i % self.p) % self.p;
+        self.base.binary_search(&a).is_ok()
+    }
+
+    /// All processes whose quorum contains `dataset` — exactly k of them
+    /// ("equal responsibility", paper Eq. 13).
+    pub fn holders(&self, dataset: usize) -> Vec<usize> {
+        (0..self.p).filter(|&i| self.contains(i, dataset)).collect()
+    }
+
+    /// Processes whose quorum contains *both* datasets; non-empty by the
+    /// all-pairs property (Theorem 1).
+    pub fn pair_hosts(&self, a: usize, b: usize) -> Vec<usize> {
+        (0..self.p)
+            .filter(|&i| self.contains(i, a) && self.contains(i, b))
+            .collect()
+    }
+
+    /// Verify Eq. 10: every two quorums intersect.
+    pub fn verify_intersection_property(&self) -> bool {
+        for i in 0..self.p {
+            let qi = self.quorum(i);
+            for j in (i + 1)..self.p {
+                let qj = self.quorum(j);
+                if !qi.iter().any(|d| qj.binary_search(d).is_ok()) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Verify the all-pairs property (Eq. 16): every unordered dataset pair
+    /// (including self-pairs, Eq. 6) appears in at least one quorum.
+    pub fn verify_all_pairs_property(&self) -> bool {
+        for a in 0..self.p {
+            for b in a..self.p {
+                if self.pair_hosts(a, b).is_empty() {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Number of dataset pairs (with self-pairs) this set must cover.
+    pub fn total_pairs(&self) -> usize {
+        pairs_with_self(self.p)
+    }
+
+    /// Union of all quorums must equal all datasets (Eq. 9).
+    pub fn verify_cover(&self) -> bool {
+        let mut seen = vec![false; self.p];
+        for i in 0..self.p {
+            for d in self.quorum(i) {
+                seen[d] = true;
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_p7() {
+        // Fano base {0,1,3}: the classic 7-process cyclic quorum set.
+        let q = CyclicQuorumSet::from_base_set(7, vec![0, 1, 3]).unwrap();
+        assert_eq!(q.quorum_size(), 3);
+        assert_eq!(q.quorum(0), vec![0, 1, 3]);
+        assert_eq!(q.quorum(1), vec![1, 2, 4]);
+        assert_eq!(q.quorum(6), vec![0, 2, 6]);
+        assert!(q.verify_intersection_property());
+        assert!(q.verify_all_pairs_property());
+        assert!(q.verify_cover());
+    }
+
+    #[test]
+    fn contains_matches_quorum() {
+        let q = CyclicQuorumSet::from_base_set(13, vec![0, 1, 3, 9]).unwrap();
+        for i in 0..13 {
+            let quorum = q.quorum(i);
+            for d in 0..13 {
+                assert_eq!(q.contains(i, d), quorum.binary_search(&d).is_ok(), "i={i} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn equal_responsibility() {
+        let q = CyclicQuorumSet::from_base_set(7, vec![0, 1, 3]).unwrap();
+        for d in 0..7 {
+            assert_eq!(q.holders(d).len(), 3, "each dataset held by k processes");
+        }
+    }
+
+    #[test]
+    fn invalid_base_rejected() {
+        assert!(CyclicQuorumSet::from_base_set(7, vec![0, 1]).is_err());
+        assert!(CyclicQuorumSet::from_base_set(7, vec![0, 1, 9]).is_err()); // out of range
+        assert!(CyclicQuorumSet::from_base_set(0, vec![]).is_err());
+    }
+
+    #[test]
+    fn for_processes_small_range() {
+        for p in 1..=24 {
+            let q = CyclicQuorumSet::for_processes(p).unwrap();
+            assert!(q.verify_all_pairs_property(), "P={p}");
+            assert!(q.verify_cover(), "P={p}");
+        }
+    }
+
+    #[test]
+    fn redundancy_builds_r_fold_covers() {
+        for p in [7usize, 9, 13, 16] {
+            for r in [1usize, 2, 3] {
+                let q = CyclicQuorumSet::with_redundancy(p, r).unwrap();
+                assert!(q.min_pair_coverage() >= r, "P={p} r={r}");
+                assert!(q.verify_all_pairs_property());
+            }
+        }
+    }
+
+    #[test]
+    fn redundancy_grows_quorums_moderately() {
+        let q1 = CyclicQuorumSet::with_redundancy(31, 1).unwrap();
+        let q2 = CyclicQuorumSet::with_redundancy(31, 2).unwrap();
+        assert!(q2.quorum_size() > q1.quorum_size());
+        // ~sqrt(r)·k is information-theoretically enough; greedy should stay
+        // well under r·k + k.
+        assert!(q2.quorum_size() <= 3 * q1.quorum_size(), "{} vs {}", q2.quorum_size(), q1.quorum_size());
+    }
+
+    #[test]
+    fn pair_hosts_nonempty_p16() {
+        let q = CyclicQuorumSet::for_processes(16).unwrap();
+        for a in 0..16 {
+            for b in a..16 {
+                assert!(!q.pair_hosts(a, b).is_empty(), "pair ({a},{b}) uncovered");
+            }
+        }
+    }
+}

@@ -1,0 +1,401 @@
+//! Prime-field arithmetic GF(p) and polynomial arithmetic over GF(p),
+//! sufficient to run the Singer difference-set construction
+//! (`quorum::singer`) for prime orders q.
+
+/// Arithmetic in the prime field GF(p).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Gfp {
+    pub p: u64,
+}
+
+impl Gfp {
+    pub fn new(p: u64) -> Self {
+        assert!(is_prime(p), "GF(p) requires prime p, got {p}");
+        Self { p }
+    }
+
+    #[inline]
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        (a + b) % self.p
+    }
+
+    #[inline]
+    pub fn sub(&self, a: u64, b: u64) -> u64 {
+        (a + self.p - b % self.p) % self.p
+    }
+
+    #[inline]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        a * b % self.p
+    }
+
+    pub fn pow(&self, mut a: u64, mut e: u64) -> u64 {
+        let mut r = 1;
+        a %= self.p;
+        while e > 0 {
+            if e & 1 == 1 {
+                r = self.mul(r, a);
+            }
+            a = self.mul(a, a);
+            e >>= 1;
+        }
+        r
+    }
+
+    /// Multiplicative inverse via Fermat.
+    pub fn inv(&self, a: u64) -> u64 {
+        assert!(a % self.p != 0, "no inverse of 0");
+        self.pow(a, self.p - 2)
+    }
+
+    #[inline]
+    pub fn neg(&self, a: u64) -> u64 {
+        (self.p - a % self.p) % self.p
+    }
+}
+
+/// Trial-division primality (fields here are tiny).
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    if n % 2 == 0 {
+        return n == 2;
+    }
+    let mut d = 3;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 2;
+    }
+    true
+}
+
+/// Is `n` a prime power p^k (k >= 1)? Returns `(p, k)` if so.
+pub fn prime_power(n: u64) -> Option<(u64, u32)> {
+    if n < 2 {
+        return None;
+    }
+    let mut m = n;
+    let mut p = 0u64;
+    let mut d = 2u64;
+    while d * d <= m {
+        if m % d == 0 {
+            p = d;
+            break;
+        }
+        d += 1;
+    }
+    if p == 0 {
+        return Some((n, 1)); // n prime
+    }
+    let mut k = 0u32;
+    while m % p == 0 {
+        m /= p;
+        k += 1;
+    }
+    if m == 1 {
+        Some((p, k))
+    } else {
+        None
+    }
+}
+
+/// Dense polynomial over GF(p), least-significant coefficient first.
+/// Invariant: no trailing zeros (zero polynomial = empty vec).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Poly {
+    pub c: Vec<u64>,
+}
+
+impl Poly {
+    pub fn new(mut c: Vec<u64>, f: Gfp) -> Self {
+        for v in &mut c {
+            *v %= f.p;
+        }
+        let mut p = Self { c };
+        p.trim();
+        p
+    }
+
+    pub fn zero() -> Self {
+        Self { c: Vec::new() }
+    }
+
+    pub fn one() -> Self {
+        Self { c: vec![1] }
+    }
+
+    /// The monomial x.
+    pub fn x() -> Self {
+        Self { c: vec![0, 1] }
+    }
+
+    fn trim(&mut self) {
+        while self.c.last() == Some(&0) {
+            self.c.pop();
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.c.is_empty()
+    }
+
+    pub fn degree(&self) -> isize {
+        self.c.len() as isize - 1
+    }
+
+    pub fn add(&self, other: &Poly, f: Gfp) -> Poly {
+        let n = self.c.len().max(other.c.len());
+        let mut c = vec![0u64; n];
+        for i in 0..n {
+            let a = self.c.get(i).copied().unwrap_or(0);
+            let b = other.c.get(i).copied().unwrap_or(0);
+            c[i] = f.add(a, b);
+        }
+        Poly::new(c, f)
+    }
+
+    pub fn mul(&self, other: &Poly, f: Gfp) -> Poly {
+        if self.is_zero() || other.is_zero() {
+            return Poly::zero();
+        }
+        let mut c = vec![0u64; self.c.len() + other.c.len() - 1];
+        for (i, &a) in self.c.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            for (j, &b) in other.c.iter().enumerate() {
+                c[i + j] = f.add(c[i + j], f.mul(a, b));
+            }
+        }
+        Poly::new(c, f)
+    }
+
+    /// Remainder of self divided by `m` (m monic-izable, non-zero).
+    pub fn rem(&self, m: &Poly, f: Gfp) -> Poly {
+        assert!(!m.is_zero(), "division by zero polynomial");
+        let mut r = self.clone();
+        let dm = m.degree();
+        let lead_inv = f.inv(*m.c.last().unwrap());
+        while !r.is_zero() && r.degree() >= dm {
+            let shift = (r.degree() - dm) as usize;
+            let coef = f.mul(*r.c.last().unwrap(), lead_inv);
+            // r -= coef * x^shift * m
+            for (j, &mj) in m.c.iter().enumerate() {
+                let idx = j + shift;
+                r.c[idx] = f.sub(r.c[idx], f.mul(coef, mj));
+            }
+            r.trim();
+        }
+        r
+    }
+
+    /// (self * other) mod m.
+    pub fn mulmod(&self, other: &Poly, m: &Poly, f: Gfp) -> Poly {
+        self.mul(other, f).rem(m, f)
+    }
+
+    /// Evaluate at a point.
+    pub fn eval(&self, x: u64, f: Gfp) -> u64 {
+        let mut acc = 0u64;
+        for &c in self.c.iter().rev() {
+            acc = f.add(f.mul(acc, x), c);
+        }
+        acc
+    }
+}
+
+/// Is `m` irreducible over GF(p)? (brute force: no roots for deg<=3 is
+/// insufficient in general, so we do trial division by all monic polys of
+/// degree <= deg/2 — fields here are tiny.)
+pub fn is_irreducible(m: &Poly, f: Gfp) -> bool {
+    let d = m.degree();
+    if d <= 0 {
+        return false;
+    }
+    if d == 1 {
+        return true;
+    }
+    // Enumerate monic divisors of degree 1..=d/2.
+    for dd in 1..=(d as usize / 2) {
+        let mut coeffs = vec![0u64; dd + 1];
+        coeffs[dd] = 1;
+        if try_divisors(&mut coeffs, 0, dd, m, f) {
+            return false;
+        }
+    }
+    true
+}
+
+fn try_divisors(coeffs: &mut Vec<u64>, pos: usize, dd: usize, m: &Poly, f: Gfp) -> bool {
+    if pos == dd {
+        let cand = Poly::new(coeffs.clone(), f);
+        return m.rem(&cand, f).is_zero();
+    }
+    for v in 0..f.p {
+        coeffs[pos] = v;
+        if try_divisors(coeffs, pos + 1, dd, m, f) {
+            return true;
+        }
+    }
+    coeffs[pos] = 0;
+    false
+}
+
+/// Multiplicative order of x modulo m in GF(p)[x]/(m). Returns None if x is
+/// not invertible (i.e., x divides m).
+pub fn order_of_x(m: &Poly, f: Gfp) -> Option<u64> {
+    let d = m.degree();
+    assert!(d >= 1);
+    let group = f.p.pow(d as u32) - 1;
+    if m.c[0] == 0 {
+        return None; // x | m
+    }
+    let x = Poly::x();
+    let mut acc = x.clone().rem(m, f);
+    let mut ord = 1u64;
+    while acc != Poly::one() {
+        acc = acc.mulmod(&x, m, f);
+        ord += 1;
+        if ord > group {
+            return None; // defensive; should not happen for irreducible m
+        }
+    }
+    Some(ord)
+}
+
+/// Find a primitive polynomial of degree `d` over GF(p): irreducible with
+/// x of maximal order p^d - 1.
+pub fn find_primitive_poly(d: usize, f: Gfp) -> Poly {
+    let group = f.p.pow(d as u32) - 1;
+    // Enumerate monic polynomials of degree d.
+    let mut coeffs = vec![0u64; d + 1];
+    coeffs[d] = 1;
+    let mut best: Option<Poly> = None;
+    enumerate_polys(&mut coeffs, 0, d, f, &mut |cand| {
+        if best.is_some() {
+            return;
+        }
+        if cand.c[0] != 0 && is_irreducible(cand, f) && order_of_x(cand, f) == Some(group) {
+            best = Some(cand.clone());
+        }
+    });
+    best.expect("a primitive polynomial exists for every prime p and degree d")
+}
+
+fn enumerate_polys(coeffs: &mut Vec<u64>, pos: usize, d: usize, f: Gfp, visit: &mut impl FnMut(&Poly)) {
+    if pos == d {
+        let cand = Poly::new(coeffs.clone(), f);
+        visit(&cand);
+        return;
+    }
+    for v in 0..f.p {
+        coeffs[pos] = v;
+        enumerate_polys(coeffs, pos + 1, d, f, visit);
+    }
+    coeffs[pos] = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primes() {
+        assert!(is_prime(2));
+        assert!(is_prime(3));
+        assert!(is_prime(97));
+        assert!(!is_prime(1));
+        assert!(!is_prime(91)); // 7*13
+    }
+
+    #[test]
+    fn prime_powers() {
+        assert_eq!(prime_power(8), Some((2, 3)));
+        assert_eq!(prime_power(9), Some((3, 2)));
+        assert_eq!(prime_power(7), Some((7, 1)));
+        assert_eq!(prime_power(12), None);
+        assert_eq!(prime_power(1), None);
+    }
+
+    #[test]
+    fn field_ops() {
+        let f = Gfp::new(7);
+        assert_eq!(f.add(5, 4), 2);
+        assert_eq!(f.sub(2, 5), 4);
+        assert_eq!(f.mul(3, 5), 1);
+        assert_eq!(f.inv(3), 5);
+        assert_eq!(f.pow(3, 6), 1); // Fermat
+        assert_eq!(f.neg(2), 5);
+    }
+
+    #[test]
+    fn field_inverses_all() {
+        for p in [2u64, 3, 5, 11, 13] {
+            let f = Gfp::new(p);
+            for a in 1..p {
+                assert_eq!(f.mul(a, f.inv(a)), 1, "p={p} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn poly_mul_rem() {
+        let f = Gfp::new(5);
+        // (x+1)(x+2) = x^2 + 3x + 2
+        let a = Poly::new(vec![1, 1], f);
+        let b = Poly::new(vec![2, 1], f);
+        let c = a.mul(&b, f);
+        assert_eq!(c, Poly::new(vec![2, 3, 1], f));
+        // c mod (x+1) == 0
+        assert!(c.rem(&a, f).is_zero());
+        // c mod x = constant 2
+        assert_eq!(c.rem(&Poly::x(), f), Poly::new(vec![2], f));
+    }
+
+    #[test]
+    fn poly_eval() {
+        let f = Gfp::new(7);
+        let p = Poly::new(vec![1, 2, 3], f); // 3x^2 + 2x + 1
+        assert_eq!(p.eval(2, f), (3 * 4 + 2 * 2 + 1) % 7);
+    }
+
+    #[test]
+    fn irreducibility() {
+        let f = Gfp::new(2);
+        // x^2 + x + 1 irreducible over GF(2)
+        assert!(is_irreducible(&Poly::new(vec![1, 1, 1], f), f));
+        // x^2 + 1 = (x+1)^2 over GF(2)
+        assert!(!is_irreducible(&Poly::new(vec![1, 0, 1], f), f));
+        // x^3 + x + 1 irreducible over GF(2)
+        assert!(is_irreducible(&Poly::new(vec![1, 1, 0, 1], f), f));
+    }
+
+    #[test]
+    fn primitive_poly_has_full_order() {
+        for p in [2u64, 3, 5, 7] {
+            let f = Gfp::new(p);
+            let m = find_primitive_poly(3, f);
+            assert_eq!(m.degree(), 3);
+            assert!(is_irreducible(&m, f));
+            assert_eq!(order_of_x(&m, f), Some(p.pow(3) - 1));
+        }
+    }
+
+    #[test]
+    fn mulmod_closes_in_field() {
+        let f = Gfp::new(3);
+        let m = find_primitive_poly(3, f);
+        // Walk the whole multiplicative group: x^i for i in 0..26 are distinct.
+        let x = Poly::x();
+        let mut acc = Poly::one();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..26 {
+            assert!(seen.insert(format!("{:?}", acc.c)));
+            acc = acc.mulmod(&x, &m, f);
+        }
+        assert_eq!(acc, Poly::one()); // full cycle
+    }
+}

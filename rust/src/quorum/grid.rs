@@ -1,0 +1,164 @@
+//! Maekawa grid quorums — the classic √P construction the paper's cited
+//! lower-bound work [12] motivates, used here as a size baseline against
+//! cyclic quorums.
+//!
+//! Processes are arranged in an r×c grid (r·c ≥ P); process i's quorum is
+//! its whole row plus its whole column. Any two quorums intersect (row of
+//! one crosses the column of the other), and — relevant here — any two
+//! quorums *jointly* contain the pair of their owners, but grid quorums do
+//! **not** generally have the cyclic all-pairs property with equal-size
+//! quorums when P is not a perfect square; they are also ~2√P in size, i.e.
+//! the "dual array" cost the paper improves on by up to 50 %.
+
+use crate::util::isqrt;
+
+/// A grid quorum system over P processes.
+#[derive(Clone, Debug)]
+pub struct GridQuorumSet {
+    p: usize,
+    rows: usize,
+    cols: usize,
+}
+
+impl GridQuorumSet {
+    /// Build with the squarest grid covering P.
+    pub fn for_processes(p: usize) -> Self {
+        assert!(p >= 1);
+        let r = {
+            let s = isqrt(p);
+            if s * s < p {
+                s + 1
+            } else {
+                s
+            }
+        };
+        let c = crate::util::ceil_div(p, r);
+        Self { p, rows: r, cols: c }
+    }
+
+    pub fn processes(&self) -> usize {
+        self.p
+    }
+
+    pub fn grid(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Quorum of process i: its row ∪ its column (clipped to < P), sorted.
+    pub fn quorum(&self, i: usize) -> Vec<usize> {
+        assert!(i < self.p);
+        let (r, c) = (i / self.cols, i % self.cols);
+        let mut q: Vec<usize> = Vec::with_capacity(self.rows + self.cols);
+        for cc in 0..self.cols {
+            let m = r * self.cols + cc;
+            if m < self.p {
+                q.push(m);
+            }
+        }
+        for rr in 0..self.rows {
+            let m = rr * self.cols + c;
+            if m < self.p {
+                q.push(m);
+            }
+        }
+        q.sort_unstable();
+        q.dedup();
+        q
+    }
+
+    /// Maximum quorum size (the baseline number: ~r + c − 1 ≈ 2√P).
+    pub fn max_quorum_size(&self) -> usize {
+        (0..self.p).map(|i| self.quorum(i).len()).max().unwrap_or(0)
+    }
+
+    /// Every two quorums intersect (Maekawa's property).
+    pub fn verify_intersection_property(&self) -> bool {
+        for i in 0..self.p {
+            let qi = self.quorum(i);
+            for j in (i + 1)..self.p {
+                let qj = self.quorum(j);
+                if !qi.iter().any(|d| qj.binary_search(d).is_ok()) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Does the system have the paper's all-pairs property? (Generally NO —
+    /// this is the point of the comparison: intersection alone is weaker.)
+    pub fn has_all_pairs_property(&self) -> bool {
+        for a in 0..self.p {
+            for b in a..self.p {
+                let hosted = (0..self.p).any(|i| {
+                    let q = self.quorum(i);
+                    q.binary_search(&a).is_ok() && q.binary_search(&b).is_ok()
+                });
+                if !hosted {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quorum::CyclicQuorumSet;
+
+    #[test]
+    fn grid_dimensions() {
+        let g = GridQuorumSet::for_processes(16);
+        assert_eq!(g.grid(), (4, 4));
+        let g = GridQuorumSet::for_processes(10);
+        let (r, c) = g.grid();
+        assert!(r * c >= 10);
+    }
+
+    #[test]
+    fn quorum_is_row_plus_column() {
+        let g = GridQuorumSet::for_processes(9); // 3x3
+        // Process 4 (center): row {3,4,5} ∪ col {1,4,7}.
+        assert_eq!(g.quorum(4), vec![1, 3, 4, 5, 7]);
+        assert_eq!(g.max_quorum_size(), 5); // 2·3 − 1
+    }
+
+    #[test]
+    fn intersection_holds() {
+        for p in [4usize, 9, 10, 16, 23, 25] {
+            let g = GridQuorumSet::for_processes(p);
+            assert!(g.verify_intersection_property(), "P={p}");
+        }
+    }
+
+    #[test]
+    fn grid_all_pairs_interesting_cases() {
+        // Perfect-square grids DO have all-pairs (every (a,b) hosted by the
+        // process at (row_a, col_b)); the paper's win is the ~2× smaller
+        // quorum, not coverage. Ragged grids can lose coverage.
+        assert!(GridQuorumSet::for_processes(9).has_all_pairs_property());
+        assert!(GridQuorumSet::for_processes(16).has_all_pairs_property());
+    }
+
+    #[test]
+    fn cyclic_beats_grid_size() {
+        // The paper's claim (§1.3): single O(√P) array vs grid's ~2√P.
+        for p in [13usize, 16, 31, 57, 64, 91] {
+            let g = GridQuorumSet::for_processes(p);
+            let c = CyclicQuorumSet::for_processes(p).unwrap();
+            assert!(
+                c.quorum_size() < g.max_quorum_size(),
+                "P={p}: cyclic {} vs grid {}",
+                c.quorum_size(),
+                g.max_quorum_size()
+            );
+            // At Singer moduli the ratio approaches 1/2.
+            if [13usize, 31, 57].contains(&p) {
+                let ratio = c.quorum_size() as f64 / g.max_quorum_size() as f64;
+                assert!(ratio < 0.65, "P={p} ratio {ratio}");
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Cyclic quorum sets with the all-pairs property — the paper's core
+//! contribution (§3, §4).
+//!
+//! * [`diffset`] — relaxed (P, k)-difference sets: verification, exact
+//!   branch-and-bound search, the Maekawa lower bound.
+//! * [`gf`] / [`singer`] — finite fields and the Singer perfect
+//!   difference-set construction (optimal quorums for P = q²+q+1).
+//! * [`search`] — randomized hill-climb for near-optimal sets at any P.
+//! * [`tables`] — pinned base sets for the paper's P = 4..=111 range.
+//! * [`cyclic`] — [`CyclicQuorumSet`]: quorum generation, membership, and
+//!   verification of the intersection/cover/all-pairs properties.
+//! * [`analysis`] — replication profiles vs the atom/force baselines.
+
+pub mod gf;
+pub mod singer;
+pub mod diffset;
+pub mod search;
+pub mod tables;
+pub mod cyclic;
+pub mod grid;
+pub mod analysis;
+
+pub use analysis::{quorum_replication, report, QuorumReport, ReplicationProfile};
+pub use cyclic::CyclicQuorumSet;
+pub use grid::GridQuorumSet;
+pub use diffset::{is_relaxed_difference_set, lower_bound_k};
+pub use search::{find_base_set, SearchParams};

@@ -1,0 +1,271 @@
+//! Randomized search for small relaxed difference sets.
+//!
+//! Luk & Wong found optimal cyclic quorums for P = 4..111 by exhaustive
+//! search (days of CPU). We reproduce near-optimal sets in milliseconds with
+//! an iterated hill-climb: start from a random k-subset containing 0, then
+//! repeatedly replace the element whose removal loses the fewest covered
+//! differences with the candidate that covers the most uncovered ones.
+//! Restart with fresh randomness on stagnation. The result is validated by
+//! `is_relaxed_difference_set`; `tables.rs` pins the generated sets.
+
+use super::diffset::{
+    exact_search, grid_fallback, lower_bound_k,
+};
+use super::singer::singer_set_for_modulus;
+use crate::util::prng::Rng;
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct SearchParams {
+    pub seed: u64,
+    /// Restarts per k before giving up and growing k.
+    pub restarts: usize,
+    /// Hill-climb steps per restart.
+    pub steps: usize,
+    /// Use exact branch-and-bound below this modulus.
+    pub exact_below: usize,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        Self { seed: 0x5EED, restarts: 60, steps: 4000, exact_below: 24 }
+    }
+}
+
+/// Find a (near-)minimal relaxed difference set for modulus `p`.
+///
+/// Strategy: Singer set when p = q²+q+1 (optimal) → exact search for small p
+/// → randomized hill-climb growing k from the lower bound → grid fallback
+/// (always succeeds).
+pub fn find_base_set(p: usize, params: &SearchParams) -> Vec<usize> {
+    if p == 0 {
+        return vec![];
+    }
+    if p <= 3 {
+        // {0}, {0,1}, {0,1} cover P = 1, 2, 3.
+        return if p == 1 { vec![0] } else { vec![0, 1] };
+    }
+    if let Some(s) = singer_set_for_modulus(p) {
+        return s;
+    }
+    let lb = lower_bound_k(p);
+    if p < params.exact_below {
+        for k in lb..=2 * lb + 2 {
+            if let Some(s) = exact_search(p, k) {
+                return s;
+            }
+        }
+    }
+    let mut rng = Rng::new(params.seed ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    // Grow k until the hill-climb lands a valid set.
+    let fallback = grid_fallback(p);
+    for k in lb..=fallback.len() {
+        if k >= fallback.len() {
+            break;
+        }
+        for _ in 0..params.restarts {
+            if let Some(s) = hill_climb(p, k, params.steps, &mut rng) {
+                return s;
+            }
+        }
+    }
+    fallback
+}
+
+/// One hill-climb attempt: returns a valid set of size k, or None.
+fn hill_climb(p: usize, k: usize, steps: usize, rng: &mut Rng) -> Option<Vec<usize>> {
+    // Random initial subset containing 0.
+    let mut set = vec![0usize];
+    let mut rest = rng.sample_indices(p - 1, k - 1);
+    for r in &mut rest {
+        *r += 1;
+    }
+    set.extend_from_slice(&rest);
+    set.sort_unstable();
+
+    let mut cov = Coverage::new(&set, p);
+    if cov.complete() {
+        return Some(set);
+    }
+
+    for _ in 0..steps {
+        // Pick a random uncovered difference d and try to fix it: choose an
+        // existing element a and replace a random victim with (a + d) mod p
+        // or (a - d) mod p.
+        let unc = cov.sample_uncovered(rng)?;
+        let anchor = set[rng.below(set.len())];
+        let target = if rng.chance(0.5) {
+            (anchor + unc) % p
+        } else {
+            (anchor + p - unc) % p
+        };
+        if set.contains(&target) {
+            continue;
+        }
+        // Victim: never 0 (canonical), prefer the element whose removal
+        // loses the least coverage.
+        let mut best_victim = None;
+        let mut best_score = isize::MIN;
+        for (vi, &v) in set.iter().enumerate() {
+            if v == 0 {
+                continue;
+            }
+            let loss = cov.loss_if_removed(&set, v);
+            let gain = cov.gain_if_added_excl(&set, target, v);
+            let score = gain as isize - loss as isize;
+            if score > best_score {
+                best_score = score;
+                best_victim = Some(vi);
+            }
+        }
+        let vi = best_victim?;
+        // Accept improving or sideways moves; occasionally accept worse
+        // (simple randomized tie-breaking keeps us out of local minima).
+        if best_score >= 0 || rng.chance(0.1) {
+            let victim = set[vi];
+            set[vi] = target;
+            set.sort_unstable();
+            cov = Coverage::new(&set, p);
+            let _ = victim;
+            if cov.complete() {
+                return Some(set);
+            }
+        }
+    }
+    None
+}
+
+/// Difference-coverage bookkeeping.
+struct Coverage {
+    mult: Vec<u32>,
+    n_uncovered: usize,
+    p: usize,
+}
+
+impl Coverage {
+    fn new(set: &[usize], p: usize) -> Self {
+        let mut mult = vec![0u32; p];
+        for &a in set {
+            for &b in set {
+                if a != b {
+                    mult[(a + p - b) % p] += 1;
+                }
+            }
+        }
+        let n_uncovered = (1..p).filter(|&d| mult[d] == 0).count();
+        Self { mult, n_uncovered, p }
+    }
+
+    fn complete(&self) -> bool {
+        self.n_uncovered == 0
+    }
+
+    fn sample_uncovered(&self, rng: &mut Rng) -> Option<usize> {
+        if self.n_uncovered == 0 {
+            return None;
+        }
+        let pick = rng.below(self.n_uncovered);
+        (1..self.p).filter(|&d| self.mult[d] == 0).nth(pick)
+    }
+
+    /// Number of differences that become uncovered if `v` leaves the set.
+    fn loss_if_removed(&self, set: &[usize], v: usize) -> usize {
+        let p = self.p;
+        let mut loss = 0;
+        for &a in set {
+            if a == v {
+                continue;
+            }
+            let d1 = (v + p - a) % p;
+            let d2 = (a + p - v) % p;
+            if d1 != 0 && self.mult[d1] == 1 {
+                loss += 1;
+            }
+            if d2 != 0 && self.mult[d2] == 1 {
+                loss += 1;
+            }
+        }
+        loss
+    }
+
+    /// Number of currently-uncovered differences `target` would cover,
+    /// assuming `victim` has been removed.
+    fn gain_if_added_excl(&self, set: &[usize], target: usize, victim: usize) -> usize {
+        let p = self.p;
+        let mut gain = 0;
+        let mut seen = Vec::with_capacity(2 * set.len());
+        for &a in set {
+            if a == victim || a == target {
+                continue;
+            }
+            for d in [(target + p - a) % p, (a + p - target) % p] {
+                if d == 0 || seen.contains(&d) {
+                    continue;
+                }
+                // Covered only via victim pairs? Approximate: treat mult
+                // contributed by victim as removed.
+                let victim_pairs = ((victim + p - a) % p == d) as u32 + ((a + p - victim) % p == d) as u32;
+                if self.mult[d].saturating_sub(victim_pairs) == 0 {
+                    gain += 1;
+                    seen.push(d);
+                }
+            }
+        }
+        gain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::diffset::is_relaxed_difference_set;
+
+    #[test]
+    fn finds_sets_for_all_small_p() {
+        let params = SearchParams { restarts: 30, steps: 2000, ..Default::default() };
+        for p in 1..=60 {
+            let s = find_base_set(p, &params);
+            assert!(is_relaxed_difference_set(&s, p.max(1)), "P={p} set={s:?}");
+            assert!(s.contains(&0) || p == 0, "canonical form contains 0: {s:?}");
+        }
+    }
+
+    #[test]
+    fn respects_singer_optimality() {
+        let params = SearchParams::default();
+        for (p, expect_k) in [(7usize, 3usize), (13, 4), (31, 6), (57, 8)] {
+            let s = find_base_set(p, &params);
+            assert_eq!(s.len(), expect_k, "P={p} should use the Singer set");
+        }
+    }
+
+    #[test]
+    fn near_optimal_for_medium_p() {
+        let params = SearchParams::default();
+        for p in [20usize, 40, 64, 90, 111] {
+            let s = find_base_set(p, &params);
+            assert!(is_relaxed_difference_set(&s, p), "P={p}");
+            let lb = lower_bound_k(p);
+            assert!(
+                s.len() <= lb + 3,
+                "P={p}: size {} too far above lower bound {lb}",
+                s.len()
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let params = SearchParams::default();
+        let a = find_base_set(45, &params);
+        let b = find_base_set(45, &params);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tiny_moduli() {
+        assert_eq!(find_base_set(1, &SearchParams::default()), vec![0]);
+        assert_eq!(find_base_set(2, &SearchParams::default()), vec![0, 1]);
+        assert_eq!(find_base_set(3, &SearchParams::default()), vec![0, 1]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Singer difference sets (paper §1.3, §6 "future work": the cyclic quorums
+//! are *optimal* for all Singer difference sets).
+//!
+//! For a prime power q, the cyclic group Z_n with n = q² + q + 1 carries a
+//! perfect (n, q+1, 1)-difference set — the Singer construction from the
+//! projective plane PG(2, q). We implement the classical construction for
+//! prime q: represent GF(q³) as GF(q)[x]/(m) for a primitive cubic m; the
+//! powers g^i of the primitive root that fall in the 2-dimensional subspace
+//! span{1, x} (zero x²-coefficient) form, taken mod n, exactly q+1 residues
+//! that are a perfect difference set.
+
+use super::diffset::is_relaxed_difference_set;
+use super::gf::{find_primitive_poly, is_prime, Gfp, Poly};
+
+/// Orders q (prime) for which `singer_set` applies, with n = q²+q+1 <= max_n.
+pub fn singer_orders_up_to(max_n: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut q = 2usize;
+    while q * q + q + 1 <= max_n {
+        if is_prime(q as u64) {
+            out.push((q, q * q + q + 1));
+        }
+        q += 1;
+    }
+    out
+}
+
+/// Construct the Singer perfect difference set for prime q.
+/// Returns residues sorted ascending, first element rotated to 0.
+pub fn singer_set(q: usize) -> Vec<usize> {
+    assert!(is_prime(q as u64), "singer_set requires prime q (got {q})");
+    let f = Gfp::new(q as u64);
+    let n = q * q + q + 1;
+    let m = find_primitive_poly(3, f);
+    let x = Poly::x();
+    // Walk g^i for i in 0..(q^3 - 1); g = x is primitive by construction.
+    let mut acc = Poly::one();
+    let group = (q as u64).pow(3) - 1;
+    let mut residues: Vec<usize> = Vec::new();
+    for i in 0..group {
+        // acc = x^i. In span{1,x} iff coefficient of x^2 is zero.
+        let coeff_x2 = acc.c.get(2).copied().unwrap_or(0);
+        if coeff_x2 == 0 && !acc.is_zero() {
+            residues.push((i as usize) % n);
+        }
+        acc = acc.mulmod(&x, &m, f);
+    }
+    residues.sort_unstable();
+    residues.dedup();
+    assert_eq!(
+        residues.len(),
+        q + 1,
+        "Singer construction must yield q+1 residues (q={q})"
+    );
+    // Canonicalize: rotate so the set contains 0 (it always does: g^0 = 1 is
+    // in span{1,x}), then sort.
+    debug_assert!(residues.contains(&0));
+    debug_assert!(is_relaxed_difference_set(&residues, n));
+    residues
+}
+
+/// If `p` = q²+q+1 for some prime q, return the Singer set for it.
+pub fn singer_set_for_modulus(p: usize) -> Option<Vec<usize>> {
+    for (q, n) in singer_orders_up_to(p) {
+        if n == p {
+            return Some(singer_set(q));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quorum::diffset::difference_multiplicities;
+
+    #[test]
+    fn orders_enumeration() {
+        let orders = singer_orders_up_to(111);
+        // q prime with q^2+q+1 <= 111: 2 -> 7, 3 -> 13, 5 -> 31, 7 -> 57
+        assert_eq!(orders, vec![(2, 7), (3, 13), (5, 31), (7, 57)]);
+    }
+
+    #[test]
+    fn singer_q2_is_fano() {
+        let s = singer_set(2);
+        assert_eq!(s.len(), 3);
+        assert!(is_relaxed_difference_set(&s, 7));
+        let mult = difference_multiplicities(&s, 7);
+        assert!(mult[1..].iter().all(|&m| m == 1), "perfect difference set");
+    }
+
+    #[test]
+    fn singer_sets_are_perfect() {
+        for (q, n) in [(3usize, 13usize), (5, 31), (7, 57)] {
+            let s = singer_set(q);
+            assert_eq!(s.len(), q + 1, "q={q}");
+            assert!(is_relaxed_difference_set(&s, n), "q={q} set={s:?}");
+            let mult = difference_multiplicities(&s, n);
+            assert!(
+                mult[1..].iter().all(|&m| m == 1),
+                "q={q}: every difference exactly once (λ=1), got {mult:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn modulus_lookup() {
+        assert!(singer_set_for_modulus(31).is_some());
+        assert!(singer_set_for_modulus(32).is_none());
+        assert!(singer_set_for_modulus(57).is_some());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_composite_q() {
+        let _ = singer_set(4); // prime-power q=4 not supported by this impl
+    }
+}

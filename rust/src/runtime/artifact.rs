@@ -1,0 +1,239 @@
+//! Artifact manifest: metadata for the AOT-compiled HLO programs.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing each
+//! kernel's file and static shapes. HLO **text** is the interchange format
+//! (see DESIGN.md §2 — jax ≥ 0.5 serialized protos are rejected by
+//! xla_extension 0.5.1).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Static shape info for one kernel artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// Named integer dimensions, e.g. {"a": 128, "b": 128, "m": 128}.
+    pub dims: BTreeMap<String, usize>,
+}
+
+impl KernelSpec {
+    pub fn dim(&self, name: &str) -> Result<usize> {
+        self.dims
+            .get(name)
+            .copied()
+            .with_context(|| format!("kernel '{}' missing dim '{name}'", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub version: usize,
+    pub kernels: BTreeMap<String, KernelSpec>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` to AOT-compile the kernels",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let j = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(1);
+        let Some(kernels_obj) = j.get("kernels").and_then(|k| k.as_obj()) else {
+            bail!("manifest missing 'kernels' object");
+        };
+        let mut kernels = BTreeMap::new();
+        for (name, spec) in kernels_obj {
+            let Some(file) = spec.get("file").and_then(|f| f.as_str()) else {
+                bail!("kernel '{name}' missing 'file'");
+            };
+            let mut dims = BTreeMap::new();
+            if let Some(obj) = spec.as_obj() {
+                for (k, v) in obj {
+                    if k == "file" {
+                        continue;
+                    }
+                    if let Some(n) = v.as_usize() {
+                        dims.insert(k.clone(), n);
+                    }
+                }
+            }
+            kernels.insert(
+                name.clone(),
+                KernelSpec { name: name.clone(), file: dir.join(file), dims },
+            );
+        }
+        Ok(Self { version, kernels, dir: dir.to_path_buf() })
+    }
+
+    pub fn kernel(&self, name: &str) -> Result<&KernelSpec> {
+        self.kernels
+            .get(name)
+            .with_context(|| format!("manifest has no kernel '{name}' (have: {:?})", self.kernels.keys().collect::<Vec<_>>()))
+    }
+
+    /// All artifact files exist on disk?
+    pub fn verify_files(&self) -> Result<()> {
+        for k in self.kernels.values() {
+            if !k.file.exists() {
+                bail!("artifact file missing: {} (run `make artifacts`)", k.file.display());
+            }
+        }
+        Ok(())
+    }
+
+    /// Deep check: every artifact parses as HLO text and its parameter
+    /// shapes are consistent with the manifest dims. Catches stale
+    /// artifacts after a kernel-shape change without a `make artifacts`.
+    pub fn verify_shapes(&self) -> Result<()> {
+        self.verify_files()?;
+        for k in self.kernels.values() {
+            let text = std::fs::read_to_string(&k.file)
+                .with_context(|| format!("reading {}", k.file.display()))?;
+            let info = HloInfo::parse(&text)
+                .with_context(|| format!("parsing {}", k.file.display()))?;
+            for dim in k.dims.values() {
+                anyhow::ensure!(
+                    info.mentions_dim(*dim),
+                    "artifact {} does not mention manifest dim {} — stale artifacts? run `make artifacts`",
+                    k.file.display(),
+                    dim
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Lightweight structural view of an HLO text module (header + parameter
+/// shapes) — enough to sanity-check artifacts without an XLA client.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HloInfo {
+    pub module_name: String,
+    /// All `f32[a,b]`-style shapes appearing in the ENTRY signature.
+    pub entry_shapes: Vec<Vec<usize>>,
+}
+
+impl HloInfo {
+    pub fn parse(text: &str) -> Result<HloInfo> {
+        let first = text.lines().next().unwrap_or("");
+        anyhow::ensure!(first.starts_with("HloModule"), "not HLO text (missing HloModule header)");
+        let module_name = first
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or("?")
+            .trim_end_matches(',')
+            .to_string();
+        // Entry parameter/result shapes live in the header's
+        // `entry_computation_layout={(f32[a,b]{...}, ...) -> ...}`; older
+        // emitters put them on the ENTRY line instead — harvest both.
+        let mut entry_shapes = Vec::new();
+        let entry_line = text.lines().find(|l| l.trim_start().starts_with("ENTRY"));
+        for line in [Some(first), entry_line].into_iter().flatten() {
+            let mut i = 0usize;
+            while let Some(pos) = line[i..].find("f32[") {
+                let start = i + pos + 4;
+                let Some(end_rel) = line[start..].find(']') else { break };
+                let dims_str = &line[start..start + end_rel];
+                let dims: Vec<usize> = dims_str
+                    .split(',')
+                    .filter_map(|d| d.trim().parse().ok())
+                    .collect();
+                if !dims.is_empty() {
+                    entry_shapes.push(dims);
+                }
+                i = start + end_rel + 1;
+                if i >= line.len() {
+                    break;
+                }
+            }
+        }
+        anyhow::ensure!(
+            !entry_shapes.is_empty(),
+            "no f32 array shapes found in HLO header/ENTRY"
+        );
+        Ok(HloInfo { module_name, entry_shapes })
+    }
+
+    /// Does some entry shape contain this dimension?
+    pub fn mentions_dim(&self, dim: usize) -> bool {
+        self.entry_shapes.iter().any(|s| s.contains(&dim))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "kernels": {
+            "corr_chunk": {"file": "corr.hlo.txt", "a": 128, "b": 128, "m": 128},
+            "pcit_chunk": {"file": "pcit.hlo.txt", "a": 128, "b": 128, "z": 128}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.version, 1);
+        let k = m.kernel("corr_chunk").unwrap();
+        assert_eq!(k.dim("m").unwrap(), 128);
+        assert_eq!(k.file, PathBuf::from("/tmp/a/corr.hlo.txt"));
+        assert!(m.kernel("nope").is_err());
+        assert!(k.dim("zz").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse("{}", Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse(r#"{"kernels": {"x": {}}}"#, Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse("not json", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn verify_files_reports_missing() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/nonexistent-dir")).unwrap();
+        assert!(m.verify_files().is_err());
+    }
+
+    const SAMPLE_HLO: &str = "HloModule jit_corr_entry, entry_computation_layout={(f32[128,128]{1,0}, f32[128,128]{1,0})->(f32[128,128]{1,0})}\n\nENTRY main.5 (Arg_0.1: f32[128,128], Arg_1.2: f32[128,128]) -> (f32[128,128]) {\n}\n";
+
+    #[test]
+    fn hlo_info_parses_entry_shapes() {
+        let info = HloInfo::parse(SAMPLE_HLO).unwrap();
+        assert_eq!(info.module_name, "jit_corr_entry");
+        assert!(info.entry_shapes.contains(&vec![128, 128]));
+        assert!(info.mentions_dim(128));
+        assert!(!info.mentions_dim(64));
+    }
+
+    #[test]
+    fn hlo_info_rejects_non_hlo() {
+        assert!(HloInfo::parse("not hlo at all").is_err());
+        assert!(HloInfo::parse("HloModule x\n(no entry)\n").is_err());
+    }
+
+    #[test]
+    fn verify_shapes_on_real_artifacts_if_present() {
+        // Runs the deep check whenever `make artifacts` has been executed.
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = ArtifactManifest::load(dir).unwrap();
+            m.verify_shapes().unwrap();
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Tile-execution runtime: the bridge between the Rust coordinator (L3)
+//! and the AOT-compiled JAX/Pallas compute (L2/L1).
+//!
+//! [`TileExecutor`] is the interface workers program against. Two
+//! implementations:
+//! * [`native::NativeBackend`] — pure Rust, always available; the
+//!   reference semantics (identical to `pcit::correlation` / `pcit::blocked`).
+//! * [`engine::XlaBackend`] — loads `artifacts/*.hlo.txt` (produced by
+//!   `python/compile/aot.py`), compiles them on the PJRT CPU client from the
+//!   `xla` crate, and executes tiles with padding to the artifacts' static
+//!   shapes.
+//!
+//! Differential tests (`rust/tests/integration_runtime.rs`) assert the two
+//! backends agree on random tiles.
+
+pub mod native;
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactManifest, KernelSpec};
+pub use native::NativeBackend;
+
+use crate::util::Matrix;
+use std::sync::Arc;
+
+/// Executes the two PCIT tile shapes plus the generic similarity tile.
+/// Implementations must be `Send + Sync`: one executor is shared by all
+/// worker threads (PJRT executables are internally synchronized).
+pub trait TileExecutor: Send + Sync {
+    /// Correlation tile between standardized row blocks:
+    /// `za` (A×M) · `zb` (B×M)ᵀ, clamped to [-1, 1]. A, B, M arbitrary.
+    fn corr_tile(&self, za: &Matrix, zb: &Matrix) -> Matrix;
+
+    /// PCIT elimination tile: OR over mediators z of
+    /// `trio_eliminates(cxy[x,y], rxz[x,z], ryz[y,z])`.
+    /// `cxy`: A×B, `rxz`: A×Z, `ryz`: B×Z → A×B flags as f32 (0.0 / 1.0).
+    fn pcit_tile(&self, cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Matrix;
+
+    /// Human-readable backend name (reports, benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Shared executor handle.
+pub type Executor = Arc<dyn TileExecutor>;
+
+/// Build an executor from a config backend kind.
+pub fn executor_for(
+    kind: crate::config::BackendKind,
+    artifacts_dir: &std::path::Path,
+) -> anyhow::Result<Executor> {
+    match kind {
+        crate::config::BackendKind::Native => Ok(Arc::new(native::NativeBackend::new())),
+        crate::config::BackendKind::Xla => {
+            let e = engine::XlaBackend::load(artifacts_dir)?;
+            Ok(Arc::new(e))
+        }
+    }
+}
+
+/// Convert an elimination flag matrix (0.0/1.0) to a boolean mask.
+pub fn flags_to_mask(flags: &Matrix) -> Vec<bool> {
+    flags.as_slice().iter().map(|&v| v > 0.5).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_convert() {
+        let m = Matrix::from_vec(1, 3, vec![0.0, 1.0, 0.0]);
+        assert_eq!(flags_to_mask(&m), vec![false, true, false]);
+    }
+}

@@ -1,0 +1,64 @@
+//! Pure-Rust tile backend — reference semantics for the XLA artifacts.
+
+use super::TileExecutor;
+use crate::pcit::blocked::eliminate_chunk;
+use crate::pcit::correlation::corr_block;
+use crate::util::Matrix;
+
+/// Always-available backend computing tiles with the same formulas the
+/// Pallas kernels implement.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl TileExecutor for NativeBackend {
+    fn corr_tile(&self, za: &Matrix, zb: &Matrix) -> Matrix {
+        corr_block(za, zb)
+    }
+
+    fn pcit_tile(&self, cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Matrix {
+        let mask = eliminate_chunk(cxy, rxz, ryz);
+        let (a, b) = cxy.shape();
+        Matrix::from_vec(a, b, mask.into_iter().map(|m| if m { 1.0 } else { 0.0 }).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcit::standardize_rows;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn corr_tile_matches_module_fn() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(6, 12, |_, _| rng.normal_f32());
+        let z = standardize_rows(&x);
+        let a = z.block(0, 0, 3, 12);
+        let b = z.block(3, 0, 3, 12);
+        let be = NativeBackend::new();
+        assert_eq!(be.corr_tile(&a, &b), corr_block(&a, &b));
+    }
+
+    #[test]
+    fn pcit_tile_flags_are_binary() {
+        let mut rng = Rng::new(5);
+        let cxy = Matrix::from_fn(4, 4, |_, _| rng.f32() * 1.6 - 0.8);
+        let rxz = Matrix::from_fn(4, 8, |_, _| rng.f32() * 1.6 - 0.8);
+        let ryz = Matrix::from_fn(4, 8, |_, _| rng.f32() * 1.6 - 0.8);
+        let be = NativeBackend::new();
+        let f = be.pcit_tile(&cxy, &rxz, &ryz);
+        for &v in f.as_slice() {
+            assert!(v == 0.0 || v == 1.0);
+        }
+    }
+}

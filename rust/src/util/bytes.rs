@@ -1,0 +1,64 @@
+//! Human-readable byte formatting for memory reports.
+
+/// Format a byte count with binary units (KiB/MiB/GiB), 2 decimals.
+pub fn format_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if bytes < 1024 {
+        return format!("{bytes} B");
+    }
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Parse strings like "64KiB", "1.5 MiB", "2GB" (decimal SI accepted too).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| c.is_ascii_alphabetic() || c == ' ');
+    let (num, unit) = match split {
+        Some(i) => (s[..i].trim(), s[i..].trim()),
+        None => (s, ""),
+    };
+    let v: f64 = num.parse().ok()?;
+    let mult: f64 = match unit.to_ascii_lowercase().as_str() {
+        "" | "b" => 1.0,
+        "k" | "kb" => 1e3,
+        "kib" => 1024.0,
+        "m" | "mb" => 1e6,
+        "mib" => 1024.0 * 1024.0,
+        "g" | "gb" => 1e9,
+        "gib" => 1024.0 * 1024.0 * 1024.0,
+        "t" | "tb" => 1e12,
+        "tib" => 1024.0f64.powi(4),
+        _ => return None,
+    };
+    Some((v * mult) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_round_trip_ish() {
+        assert_eq!(format_bytes(0), "0 B");
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(1024), "1.00 KiB");
+        assert_eq!(format_bytes(1536), "1.50 KiB");
+        assert_eq!(format_bytes(1024 * 1024), "1.00 MiB");
+        assert_eq!(format_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(parse_bytes("1024"), Some(1024));
+        assert_eq!(parse_bytes("1 KiB"), Some(1024));
+        assert_eq!(parse_bytes("1.5MiB"), Some(1572864));
+        assert_eq!(parse_bytes("2GB"), Some(2_000_000_000));
+        assert_eq!(parse_bytes("nonsense"), None);
+    }
+}

@@ -1,0 +1,335 @@
+//! Dense row-major `f32` matrix — the core numeric container.
+//!
+//! Gene-expression inputs are `N×M` (genes × samples); correlation blocks are
+//! `B×B`. Row-major layout matches both the XLA literal layout used by the
+//! runtime bridge and the cache-friendly row iteration of the native kernels.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// From an existing row-major buffer (length must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure `f(r, c)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Logical size in bytes of the backing buffer.
+    pub fn nbytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Copy a sub-block `[r0..r0+h) × [c0..c0+w)` into a new matrix.
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        let mut out = Matrix::zeros(h, w);
+        for r in 0..h {
+            out.row_mut(r).copy_from_slice(&self.row(r0 + r)[c0..c0 + w]);
+        }
+        out
+    }
+
+    /// Write a block into this matrix at `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Matrix) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols, "block out of range");
+        for r in 0..b.rows {
+            let dst = r0 + r;
+            self.data[dst * self.cols + c0..dst * self.cols + c0 + b.cols]
+                .copy_from_slice(b.row(r));
+        }
+    }
+
+    /// Select a subset of rows into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Select a subset of columns into a new matrix.
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (i, &c) in idx.iter().enumerate() {
+                dst[i] = src[c];
+            }
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Plain `self · otherᵀ` (used for standardized-row correlation:
+    /// rows of both operands are observations over the same M columns).
+    ///
+    /// Hot path (EXPERIMENTS.md §Perf): the j dimension is processed four
+    /// rows at a time so each `a[l]` load feeds four independent dot-product
+    /// chains (4× ILP) while every individual dot product still accumulates
+    /// in strict l-order — results are bitwise identical to the naive loop,
+    /// which keeps the single-node and distributed paths exactly consistent.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "inner dimension mismatch");
+        let (n, m, k) = (self.rows, other.rows, self.cols);
+        let mut out = Matrix::zeros(n, m);
+        let bdat = &other.data;
+        for i in 0..n {
+            let a = self.row(i);
+            let orow = &mut out.data[i * m..(i + 1) * m];
+            let mut j = 0usize;
+            while j + 4 <= m {
+                let b0 = &bdat[j * k..(j + 1) * k];
+                let b1 = &bdat[(j + 1) * k..(j + 2) * k];
+                let b2 = &bdat[(j + 2) * k..(j + 3) * k];
+                let b3 = &bdat[(j + 3) * k..(j + 4) * k];
+                let (mut c0, mut c1, mut c2, mut c3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for l in 0..k {
+                    let av = a[l];
+                    c0 += av * b0[l];
+                    c1 += av * b1[l];
+                    c2 += av * b2[l];
+                    c3 += av * b3[l];
+                }
+                orow[j] = c0;
+                orow[j + 1] = c1;
+                orow[j + 2] = c2;
+                orow[j + 3] = c3;
+                j += 4;
+            }
+            while j < m {
+                let b = &bdat[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for l in 0..k {
+                    acc += a[l] * b[l];
+                }
+                orow[j] = acc;
+                j += 1;
+            }
+        }
+        out
+    }
+
+    /// Max absolute elementwise difference against another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Pad to shape `(rows_to, cols_to)` with `fill`, keeping data top-left.
+    pub fn padded(&self, rows_to: usize, cols_to: usize, fill: f32) -> Matrix {
+        assert!(rows_to >= self.rows && cols_to >= self.cols);
+        let mut out = Matrix::filled(rows_to, cols_to, fill);
+        out.set_block(0, 0, self);
+        out
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        for r in 0..show_r {
+            let show_c = self.cols.min(8);
+            let vals: Vec<String> = self.row(r)[..show_c].iter().map(|v| format!("{v:8.4}")).collect();
+            writeln!(f, "  [{}{}]", vals.join(", "), if self.cols > show_c { ", …" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_index() {
+        let mut m = Matrix::zeros(2, 3);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m[(0, 0)], 0.0);
+        assert_eq!(m.shape(), (2, 3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_length_checked() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn block_round_trip() {
+        let m = Matrix::from_fn(6, 6, |r, c| (r * 6 + c) as f32);
+        let b = m.block(2, 3, 2, 2);
+        assert_eq!(b[(0, 0)], 15.0);
+        assert_eq!(b[(1, 1)], 22.0);
+        let mut z = Matrix::zeros(6, 6);
+        z.set_block(2, 3, &b);
+        assert_eq!(z[(2, 3)], 15.0);
+        assert_eq!(z[(3, 4)], 22.0);
+        assert_eq!(z[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::from_fn(3, 5, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn matmul_nt_vs_manual() {
+        // A (2x3) · B(2x3)^T = 2x2
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(2, 3, vec![1., 0., 1., 0., 1., 0.]);
+        let c = a.matmul_nt(&b);
+        assert_eq!(c[(0, 0)], 4.0); // 1+3
+        assert_eq!(c[(0, 1)], 2.0);
+        assert_eq!(c[(1, 0)], 10.0); // 4+6
+        assert_eq!(c[(1, 1)], 5.0);
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let a = Matrix::from_fn(4, 4, |r, c| (r + c) as f32);
+        let i = Matrix::eye(4);
+        // a · iᵀ = a (i symmetric)
+        assert_eq!(a.matmul_nt(&i), a);
+    }
+
+    #[test]
+    fn select_rows_works() {
+        let m = Matrix::from_fn(5, 2, |r, _| r as f32);
+        let s = m.select_rows(&[4, 0, 2]);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s[(0, 0)], 4.0);
+        assert_eq!(s[(1, 0)], 0.0);
+        assert_eq!(s[(2, 0)], 2.0);
+    }
+
+    #[test]
+    fn padded_keeps_content() {
+        let m = Matrix::from_fn(2, 2, |r, c| (r * 2 + c) as f32 + 1.0);
+        let p = m.padded(4, 3, 0.0);
+        assert_eq!(p.shape(), (4, 3));
+        assert_eq!(p[(1, 1)], 4.0);
+        assert_eq!(p[(3, 2)], 0.0);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        let a = Matrix::filled(2, 2, 1.0);
+        let mut b = a.clone();
+        b[(1, 0)] = 1.5;
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

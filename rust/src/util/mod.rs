@@ -1,0 +1,104 @@
+//! Small self-contained utilities shared by every subsystem.
+//!
+//! The offline build environment only ships the `xla` crate closure, so the
+//! usual ecosystem crates (rand, serde, itertools, ...) are reimplemented
+//! here as minimal, well-tested substrates.
+
+pub mod prng;
+pub mod stats;
+pub mod json;
+pub mod timer;
+pub mod bytes;
+pub mod matrix;
+
+pub use matrix::Matrix;
+pub use prng::Rng;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// Number of unordered pairs over `n` items, excluding self-pairs:
+/// `C(n,2) = n(n-1)/2`.
+#[inline]
+pub fn n_choose_2(n: usize) -> usize {
+    n * n.saturating_sub(1) / 2
+}
+
+/// Number of unordered pairs over `n` items *including* self-pairs
+/// (the dataset-level pairing of the paper's Eq. 6): `n(n+1)/2`.
+#[inline]
+pub fn pairs_with_self(n: usize) -> usize {
+    n * (n + 1) / 2
+}
+
+/// `isqrt` for usize (floor of the square root).
+#[inline]
+pub fn isqrt(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).sqrt() as usize;
+    // Correct potential floating-point drift in either direction; overflow
+    // of x*x counts as "too big" (checked_mul, not saturating: saturation
+    // would loop forever at n = usize::MAX).
+    while x.checked_mul(x).map_or(true, |v| v > n) {
+        x -= 1;
+    }
+    while (x + 1).checked_mul(x + 1).is_some_and(|v| v <= n) {
+        x += 1;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(5, 4), 8);
+        assert_eq!(round_up(8, 4), 8);
+        assert_eq!(round_up(0, 4), 0);
+    }
+
+    #[test]
+    fn pair_counts() {
+        assert_eq!(n_choose_2(7), 21); // paper Fig. 1: seven elements, 21 pairs
+        assert_eq!(n_choose_2(0), 0);
+        assert_eq!(n_choose_2(1), 0);
+        assert_eq!(pairs_with_self(7), 28);
+    }
+
+    #[test]
+    fn isqrt_exhaustive_small() {
+        for n in 0..10_000usize {
+            let r = isqrt(n);
+            assert!(r * r <= n && (r + 1) * (r + 1) > n, "isqrt({n}) = {r}");
+        }
+    }
+
+    #[test]
+    fn isqrt_large() {
+        assert_eq!(isqrt(usize::MAX), (1usize << 32) - 1);
+        assert_eq!(isqrt(1usize << 62), 1usize << 31);
+        assert_eq!(isqrt((1usize << 62) - 1), (1usize << 31) - 1);
+    }
+}

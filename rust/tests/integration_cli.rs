@@ -1,0 +1,104 @@
+//! Integration: the `quorall` binary end to end (launcher surface).
+
+use std::process::Command;
+
+fn quorall() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_quorall"))
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = quorall().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["quorum", "pcit", "nbody", "sim", "info"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn quorum_generation() {
+    let out = quorall().args(["quorum", "--p", "7", "--n", "700"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("all-pairs property: true"));
+    assert!(text.contains("S_0"));
+}
+
+#[test]
+fn quorum_table_subset() {
+    let out = quorall()
+        .args(["quorum", "--table", "--from", "4", "--to", "16"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("savings_vs_force"));
+    assert!(text.lines().count() > 13);
+}
+
+#[test]
+fn pcit_small_run_with_verify() {
+    let out = quorall()
+        .args([
+            "pcit", "--ranks", "4", "--genes", "96", "--samples", "20", "--verify",
+        ])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {text}\nstderr: {err}");
+    assert!(text.contains("IDENTICAL"), "{text}");
+}
+
+#[test]
+fn pcit_writes_edges_csv() {
+    let dir = std::env::temp_dir().join("quorall-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_path = dir.join("edges.csv");
+    let out = quorall()
+        .args([
+            "pcit",
+            "--ranks",
+            "4",
+            "--genes",
+            "64",
+            "--samples",
+            "16",
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let csv = std::fs::read_to_string(&out_path).unwrap();
+    assert!(csv.starts_with("gene_a,gene_b,correlation"));
+    std::fs::remove_file(&out_path).ok();
+}
+
+#[test]
+fn nbody_runs() {
+    let out = quorall()
+        .args(["nbody", "--bodies", "64", "--ranks", "4", "--steps", "5"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("energy drift"));
+}
+
+#[test]
+fn sim_prints_predictions() {
+    let out = quorall().args(["sim", "--genes", "1000", "--max-ranks", "16"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("speedup"));
+}
+
+#[test]
+fn bad_arguments_fail_cleanly() {
+    let out = quorall().args(["pcit", "--mode", "bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = quorall().args(["nonexistent-command"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}

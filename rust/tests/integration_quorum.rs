@@ -1,0 +1,96 @@
+//! Integration: quorum properties at scale + cross-module invariants.
+
+use quorall::allpairs::{all_pair_tasks, OwnerPolicy, PairAssignment};
+use quorall::prop::forall;
+use quorall::quorum::{
+    diffset::{is_relaxed_difference_set, lower_bound_k},
+    CyclicQuorumSet,
+};
+
+#[test]
+fn paper_range_all_pairs_property() {
+    // The paper's operational claim, for its full P range: every dataset
+    // pair lives in at least one quorum.
+    for p in 4..=111 {
+        let q = CyclicQuorumSet::for_processes(p).unwrap();
+        assert!(q.verify_all_pairs_property(), "P={p}");
+        assert!(q.verify_intersection_property(), "P={p}");
+        assert!(q.verify_cover(), "P={p}");
+    }
+}
+
+#[test]
+fn paper_range_sizes_near_optimal() {
+    let mut over = 0usize;
+    for p in 4..=111 {
+        let q = CyclicQuorumSet::for_processes(p).unwrap();
+        let lb = lower_bound_k(p);
+        assert!(
+            q.quorum_size() <= lb + 2,
+            "P={p}: k={} vs lower bound {lb}",
+            q.quorum_size()
+        );
+        if q.quorum_size() > lb {
+            over += 1;
+        }
+    }
+    // Most entries should be at the lower bound or +1.
+    assert!(over <= 70, "too many above-bound sets: {over}");
+}
+
+#[test]
+fn equal_work_equal_responsibility() {
+    // Paper Eq. 12-13: every quorum the same size, every dataset in exactly
+    // k quorums.
+    for p in [7usize, 16, 31, 57, 96] {
+        let q = CyclicQuorumSet::for_processes(p).unwrap();
+        let k = q.quorum_size();
+        for i in 0..p {
+            assert_eq!(q.quorum(i).len(), k, "P={p} S_{i}");
+        }
+        for d in 0..p {
+            assert_eq!(q.holders(d).len(), k, "P={p} D_{d}");
+        }
+    }
+}
+
+#[test]
+fn prop_shifted_sets_stay_difference_sets() {
+    forall("cyclic shift preserves the difference property", 60, |g| {
+        let p = g.usize_in(4, 111);
+        let q = CyclicQuorumSet::for_processes(p).unwrap();
+        let shift = g.usize_in(0, p - 1);
+        let shifted: Vec<usize> = q.base_set().iter().map(|&a| (a + shift) % p).collect();
+        assert!(is_relaxed_difference_set(&shifted, p));
+    });
+}
+
+#[test]
+fn prop_ownership_partitions_work() {
+    forall("ownership partitions the pair tasks", 30, |g| {
+        let p = g.usize_in(4, 64);
+        let q = CyclicQuorumSet::for_processes(p).unwrap();
+        let policy = *g.pick(&[OwnerPolicy::First, OwnerPolicy::Hash, OwnerPolicy::LeastLoaded]);
+        let assignment = PairAssignment::build(&q, policy);
+        assignment.verify(&q).unwrap();
+        let mut collected: Vec<_> = (0..p).flat_map(|r| assignment.tasks_for(r)).collect();
+        collected.sort();
+        assert_eq!(collected, all_pair_tasks(p));
+    });
+}
+
+#[test]
+fn least_loaded_beats_first_policy_on_average() {
+    let mut wins = 0;
+    let mut total = 0;
+    for p in (8..=96).step_by(8) {
+        let q = CyclicQuorumSet::for_processes(p).unwrap();
+        let ll = PairAssignment::build(&q, OwnerPolicy::LeastLoaded).imbalance();
+        let first = PairAssignment::build(&q, OwnerPolicy::First).imbalance();
+        total += 1;
+        if ll <= first + 1e-12 {
+            wins += 1;
+        }
+    }
+    assert!(wins * 2 >= total, "least-loaded should usually win: {wins}/{total}");
+}

@@ -1,0 +1,114 @@
+//! Integration: the XLA/PJRT backend vs the native reference, and a full
+//! distributed run on the XLA backend.
+//!
+//! These tests need `make artifacts` (they are skipped with a message when
+//! `artifacts/manifest.json` is absent, so `cargo test` stays green on a
+//! fresh checkout).
+
+use quorall::config::{BackendKind, PcitMode, RunConfig};
+use quorall::coordinator::{run_distributed_pcit, run_single_node};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::pcit::standardize_rows;
+use quorall::runtime::{executor_for, NativeBackend, TileExecutor};
+use quorall::util::prng::Rng;
+use quorall::util::Matrix;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping XLA integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn rand_corr(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+    Matrix::from_fn(r, c, |_, _| rng.f32() * 1.9 - 0.95)
+}
+
+#[test]
+fn xla_corr_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = executor_for(BackendKind::Xla, dir).expect("load artifacts");
+    let native = NativeBackend::new();
+    let mut rng = Rng::new(5);
+    // Mix of exact-fit, padded, and chunked shapes.
+    for (a, b, m) in [(128usize, 128usize, 128usize), (64, 32, 20), (100, 90, 130), (128, 128, 300), (200, 150, 48), (1, 1, 3)] {
+        let x = Matrix::from_fn(a, m, |_, _| rng.normal_f32());
+        let y = Matrix::from_fn(b, m, |_, _| rng.normal_f32());
+        let za = standardize_rows(&x);
+        let zb = standardize_rows(&y);
+        let got = xla.corr_tile(&za, &zb);
+        let want = native.corr_tile(&za, &zb);
+        assert_eq!(got.shape(), want.shape());
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-5, "corr tile ({a},{b},m={m}) diff {diff}");
+    }
+}
+
+#[test]
+fn xla_pcit_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = executor_for(BackendKind::Xla, dir).expect("load artifacts");
+    let native = NativeBackend::new();
+    let mut rng = Rng::new(11);
+    for (a, b, z) in [(128usize, 128usize, 128usize), (64, 64, 64), (50, 70, 200), (128, 128, 1000), (10, 5, 7)] {
+        let cxy = rand_corr(&mut rng, a, b);
+        let rxz = rand_corr(&mut rng, a, z);
+        let ryz = rand_corr(&mut rng, b, z);
+        let got = xla.pcit_tile(&cxy, &rxz, &ryz);
+        let want = native.pcit_tile(&cxy, &rxz, &ryz);
+        assert_eq!(
+            got.as_slice(),
+            want.as_slice(),
+            "pcit flags ({a},{b},z={z}) differ"
+        );
+    }
+}
+
+#[test]
+fn xla_distributed_run_matches_single_node() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exec = executor_for(BackendKind::Xla, dir).expect("load artifacts");
+    let d = ExpressionDataset::generate(SyntheticSpec {
+        genes: 96,
+        samples: 24,
+        modules: 4,
+        noise: 0.5,
+        seed: 31,
+    });
+    let single = run_single_node(&d, 2, None);
+    let cfg = RunConfig { ranks: 4, mode: PcitMode::QuorumExact, backend: BackendKind::Xla, ..RunConfig::default() };
+    let rep = run_distributed_pcit(&cfg, &d, exec).unwrap();
+    assert!(
+        rep.network.same_edges(&single.network),
+        "XLA-backed distributed PCIT must equal single-node: {} vs {}",
+        rep.network.n_edges(),
+        single.network.n_edges()
+    );
+}
+
+#[test]
+fn xla_backend_is_shareable_across_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exec = executor_for(BackendKind::Xla, dir).expect("load artifacts");
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let e = exec.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            let x = Matrix::from_fn(64, 32, |_, _| rng.normal_f32());
+            let za = standardize_rows(&x);
+            let tile = e.corr_tile(&za, &za);
+            // Diagonal of a self-correlation is 1.
+            for i in 0..64 {
+                assert!((tile[(i, i)] - 1.0).abs() < 1e-4);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
