@@ -17,6 +17,7 @@ use quorall::data::PaperInput;
 use quorall::metrics::Table;
 use quorall::runtime::NativeBackend;
 use quorall::sim::{calibrate, predict_quorum, predict_single, ClusterModel};
+use quorall::util::json::Json;
 use quorall::util::stats::Summary;
 use quorall::util::timer::format_secs;
 use std::sync::Arc;
@@ -35,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         "Figure 2 (left): PCIT runtime and speedup vs single node",
         &["input", "N", "config", "nodes", "crit.path (mean±ci95)", "speedup", "ideal", "identical"],
     );
+    let mut ext_tables: Vec<Table> = Vec::new();
 
     for (input, reps) in inputs {
         let spec = input.spec();
@@ -122,10 +124,19 @@ fn main() -> anyhow::Result<()> {
                 ]);
             }
             benchkit::emit(&ext);
+            ext_tables.push(ext);
         }
     }
 
     benchkit::emit(&table);
+    let mut tables: Vec<&Table> = vec![&table];
+    tables.extend(ext_tables.iter());
+    let payload = benchkit::json_payload(
+        "figure2_speedup",
+        vec![("quick", Json::Bool(quick)), ("threads", Json::Num(threads as f64))],
+        &tables,
+    );
+    benchkit::write_json(std::path::Path::new("BENCH_figure2_speedup.json"), &payload)?;
     println!("expected shape (paper): near-ideal speedup approaching 8 nodes (≈7x), noisy 2-node point.");
     Ok(())
 }

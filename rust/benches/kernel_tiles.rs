@@ -1,12 +1,17 @@
-//! Supporting bench K — tile throughput, native vs XLA/PJRT backend, at the
-//! AOT artifact shapes. Requires `make artifacts` for the XLA rows (skipped
-//! with a note otherwise).
+//! Supporting bench K — tile throughput: the blocked microkernel vs the
+//! seed 4-wide kernel, plus native-vs-XLA/PJRT backend rows at the AOT
+//! artifact shapes (XLA rows require `make artifacts` and `--features xla`;
+//! skipped with a note otherwise).
+//!
+//! Emits `BENCH_kernels.json` with every row plus the headline
+//! `speedup_vs_seed` at the paper-scale tile (B≈256 rows, M≈1024 samples).
 //!
 //! Run: `cargo bench --bench kernel_tiles [-- --quick]`
 
 use quorall::benchkit::{self, format_summary, measure};
 use quorall::metrics::Table;
 use quorall::runtime::{executor_for, NativeBackend, TileExecutor};
+use quorall::util::json::Json;
 use quorall::util::prng::Rng;
 use quorall::util::Matrix;
 use std::sync::Arc;
@@ -23,10 +28,51 @@ fn main() -> anyhow::Result<()> {
     let mut execs: Vec<Arc<dyn TileExecutor>> = vec![Arc::new(NativeBackend::new())];
     match executor_for(quorall::config::BackendKind::Xla, std::path::Path::new("artifacts")) {
         Ok(e) => execs.push(e),
-        Err(e) => println!("(XLA backend unavailable — {e}; run `make artifacts`)"),
+        Err(e) => println!("(XLA backend unavailable — {e:#}; run `make artifacts`)"),
     }
 
-    let mut table = Table::new(
+    // ---- Headline: blocked microkernel vs the seed kernel at the ----
+    // ---- quorum-tile working shape (B≈256 rows, M≈1024 samples). ----
+    let mut kernel_table = Table::new(
+        "matmul_nt kernel: blocked (8x4 register tile, 64-row panels) vs seed (flat 4-wide)",
+        &["kernel", "shape", "time/call", "gflops", "speedup_vs_seed"],
+    );
+    let (bsz, msz) = if quick { (128usize, 256usize) } else { (256usize, 1024usize) };
+    let a = rand_matrix(&mut rng, bsz, msz, 1.0);
+    let b = rand_matrix(&mut rng, bsz, msz, 1.0);
+    let flops = 2.0 * bsz as f64 * bsz as f64 * msz as f64;
+    let seed_s = {
+        let (a2, b2) = (a.clone(), b.clone());
+        measure(2, iters, move || a2.matmul_nt_seed(&b2))
+    };
+    let blocked_s = {
+        let (a2, b2) = (a.clone(), b.clone());
+        measure(2, iters, move || a2.matmul_nt(&b2))
+    };
+    // Guard: the two kernels must agree bitwise before their times mean anything.
+    assert_eq!(
+        a.matmul_nt(&b).as_slice(),
+        a.matmul_nt_seed(&b).as_slice(),
+        "blocked kernel diverged from seed kernel"
+    );
+    let speedup = seed_s.mean / blocked_s.mean;
+    kernel_table.row(vec![
+        "seed".into(),
+        format!("{bsz}x{bsz} @ m={msz}"),
+        format_summary(&seed_s),
+        format!("{:.3}", flops / seed_s.mean / 1e9),
+        "1.000".into(),
+    ]);
+    kernel_table.row(vec![
+        "blocked".into(),
+        format!("{bsz}x{bsz} @ m={msz}"),
+        format_summary(&blocked_s),
+        format!("{:.3}", flops / blocked_s.mean / 1e9),
+        format!("{speedup:.3}"),
+    ]);
+    println!("blocked vs seed at {bsz}x{bsz}@m={msz}: {speedup:.2}x");
+
+    let mut tile_table = Table::new(
         "tile kernel throughput (artifact shapes)",
         &["kernel", "shape", "backend", "time/call", "throughput"],
     );
@@ -37,9 +83,9 @@ fn main() -> anyhow::Result<()> {
     for exec in &execs {
         let e = exec.clone();
         let (za2, zb2) = (za.clone(), zb.clone());
-        let s = measure(2, iters, move || e.corr_tile(&za2, &zb2));
+        let s = measure(2, iters, move || e.corr_tile(za2.view(), zb2.view()));
         let flops = 2.0 * 128.0 * 128.0 * 128.0;
-        table.row(vec![
+        tile_table.row(vec![
             "corr_tile".into(),
             "128x128 @ m=128".into(),
             exec.name().into(),
@@ -55,9 +101,9 @@ fn main() -> anyhow::Result<()> {
     for exec in &execs {
         let e = exec.clone();
         let (a, b, c) = (cxy.clone(), rxz.clone(), ryz.clone());
-        let s = measure(2, iters, move || e.pcit_tile(&a, &b, &c));
+        let s = measure(2, iters, move || e.pcit_tile(a.view(), b.view(), c.view()));
         let trios = 128.0 * 128.0 * 128.0;
-        table.row(vec![
+        tile_table.row(vec![
             "pcit_tile".into(),
             "128x128, z=128".into(),
             exec.name().into(),
@@ -66,24 +112,42 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
-    // Larger composite tile exercising the chunking path.
-    let za_l = rand_matrix(&mut rng, 256, 300, 1.0);
-    let zb_l = rand_matrix(&mut rng, 256, 300, 1.0);
+    // Larger composite tile exercising the chunking path — reads the
+    // operands zero-copy out of one backing matrix, as the workers do.
+    let zbig = rand_matrix(&mut rng, 512, 300, 1.0);
     for exec in &execs {
         let e = exec.clone();
-        let (a, b) = (za_l.clone(), zb_l.clone());
-        let s = measure(1, iters.min(10), move || e.corr_tile(&a, &b));
+        let z2 = zbig.clone();
+        let s = measure(1, iters.min(10), move || {
+            e.corr_tile(z2.view_block(0, 0, 256, 300), z2.view_block(256, 0, 256, 300))
+        });
         let flops = 2.0 * 256.0 * 256.0 * 300.0;
-        table.row(vec![
+        tile_table.row(vec![
             "corr_tile".into(),
-            "256x256 @ m=300 (chunked)".into(),
+            "256x256 @ m=300 (chunked, zero-copy views)".into(),
             exec.name().into(),
             format_summary(&s),
             format!("{:.2} GFLOP/s", flops / s.mean / 1e9),
         ]);
     }
 
-    benchkit::emit(&table);
+    benchkit::emit(&kernel_table);
+    benchkit::emit(&tile_table);
+
+    let payload = benchkit::json_payload(
+        "kernel_tiles",
+        vec![
+            ("quick", Json::Bool(quick)),
+            ("tile_rows", Json::Num(bsz as f64)),
+            ("tile_samples", Json::Num(msz as f64)),
+            ("seed_mean_secs", Json::Num(seed_s.mean)),
+            ("blocked_mean_secs", Json::Num(blocked_s.mean)),
+            ("speedup_vs_seed", Json::Num(speedup)),
+        ],
+        &[&kernel_table, &tile_table],
+    );
+    benchkit::write_json(std::path::Path::new("BENCH_kernels.json"), &payload)?;
+
     println!("note: XLA rows run interpret-lowered Pallas HLO on the CPU PJRT client;");
     println!("real-TPU estimates (MXU util, VMEM footprint) are in DESIGN.md §Perf.");
     Ok(())

@@ -82,18 +82,19 @@ fn block_pair_forces(
     let mut fa = vec![[0.0; 3]; ra.len()];
     let mut fb = vec![[0.0; 3]; rb.len()];
     for (ii, i) in ra.clone().enumerate() {
+        let pi = bodies.pos[i];
+        let mi = bodies.mass[i];
         for (jj, j) in rb.clone().enumerate() {
             if diag && j <= i {
                 continue;
             }
-            let pi = bodies.pos[i];
             let pj = bodies.pos[j];
             let dx = pj[0] - pi[0];
             let dy = pj[1] - pi[1];
             let dz = pj[2] - pi[2];
             let r2 = dx * dx + dy * dy + dz * dz + SOFTENING * SOFTENING;
             let inv_r3 = 1.0 / (r2 * r2.sqrt());
-            let s = G * bodies.mass[i] * bodies.mass[j] * inv_r3;
+            let s = G * mi * bodies.mass[j] * inv_r3;
             fa[ii][0] += s * dx;
             fa[ii][1] += s * dy;
             fa[ii][2] += s * dz;

@@ -5,13 +5,17 @@
 //! Reuses the correlation machinery: cosine similarity over L2-normalized
 //! rows is exactly the same `Z·Zᵀ` tile the PCIT phase-1 computes, so the
 //! distributed path exercises the same executors and ownership logic.
+//! Quorum tiles are read zero-copy out of the normalized matrix, and the
+//! symmetric assembly writes each tile's mirror with
+//! [`Matrix::set_block_transposed`] instead of materializing a transposed
+//! copy — no per-tile operand or temporary allocations remain.
 
 use crate::allpairs::{OwnerPolicy, PairAssignment};
 use crate::data::Partition;
 use crate::pool::ThreadPool;
 use crate::quorum::CyclicQuorumSet;
 use crate::runtime::Executor;
-use crate::util::Matrix;
+use crate::util::{matmul_nt_pooled, Matrix};
 
 /// L2-normalize rows (zero rows stay zero).
 pub fn normalize_rows(features: &Matrix) -> Matrix {
@@ -40,6 +44,17 @@ pub fn similarity_direct(features: &Matrix) -> Matrix {
     s
 }
 
+/// [`similarity_direct`] with the `Z·Zᵀ` product panelled across a thread
+/// pool — bitwise identical to the serial version.
+pub fn similarity_direct_pooled(features: &Matrix, pool: &ThreadPool) -> Matrix {
+    let z = normalize_rows(features);
+    let mut s = matmul_nt_pooled(&z, &z, pool);
+    for v in s.as_mut_slice() {
+        *v = v.clamp(-1.0, 1.0);
+    }
+    s
+}
+
 /// Distributed cosine similarity: block pairs owned via cyclic quorums and
 /// executed on `ranks` simulated processes sharing `executor` tiles.
 /// Returns the full N×N matrix (assembled at the "leader").
@@ -62,9 +77,8 @@ pub fn similarity_quorum(
             if ra.is_empty() || rb.is_empty() {
                 continue;
             }
-            let za = z.block(ra.start, 0, ra.len(), z.cols());
-            let zb = z.block(rb.start, 0, rb.len(), z.cols());
-            let tile = executor.corr_tile(&za, &zb);
+            // Zero-copy: tiles read straight from the normalized matrix.
+            let tile = executor.corr_tile(z.view_rows(ra.clone()), z.view_rows(rb.clone()));
             out.push((ra.start, rb.start, tile));
         }
         out
@@ -72,27 +86,93 @@ pub fn similarity_quorum(
     let mut s = Matrix::zeros(n, n);
     for rank_tiles in tiles {
         for (r0, c0, tile) in rank_tiles {
-            // Write both orientations (symmetric matrix).
-            let t = tile.transpose();
             s.set_block(r0, c0, &tile);
-            s.set_block(c0, r0, &t);
+            if r0 != c0 {
+                // Mirror orientation written transpose-on-the-fly; diagonal
+                // self-tiles are already bitwise symmetric (row i · row j
+                // and row j · row i are identical strict-order sums).
+                s.set_block_transposed(c0, r0, &tile);
+            }
         }
     }
     Ok(s)
 }
 
 /// Top-k most similar pairs (x, y, sim) with x < y, descending.
+///
+/// Keeps a k-bounded min-heap instead of materializing and sorting all
+/// N(N-1)/2 pairs: O(N² log k) time, O(k) extra memory. Ties in similarity
+/// rank the lexicographically smaller (x, y) first.
 pub fn top_pairs(sim: &Matrix, k: usize) -> Vec<(usize, usize, f32)> {
-    let n = sim.rows();
-    let mut pairs: Vec<(usize, usize, f32)> = Vec::with_capacity(n * (n - 1) / 2);
-    for x in 0..n {
-        for y in (x + 1)..n {
-            pairs.push((x, y, sim[(x, y)]));
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    if k == 0 {
+        return Vec::new();
+    }
+
+    // Reverse-ordered entry: the heap root is the *worst* retained pair.
+    struct Worst(f32, usize, usize);
+    impl Worst {
+        /// "self ranks strictly worse than other" — higher sim is better,
+        /// ties prefer lexicographically smaller (x, y).
+        fn worse_than(&self, other: &Worst) -> bool {
+            match self.0.total_cmp(&other.0) {
+                Ordering::Less => true,
+                Ordering::Greater => false,
+                Ordering::Equal => (self.1, self.2) > (other.1, other.2),
+            }
         }
     }
-    pairs.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
-    pairs.truncate(k);
-    pairs
+    impl PartialEq for Worst {
+        fn eq(&self, other: &Self) -> bool {
+            self.cmp(other) == Ordering::Equal
+        }
+    }
+    impl Eq for Worst {}
+    impl PartialOrd for Worst {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Worst {
+        fn cmp(&self, other: &Self) -> Ordering {
+            // Max-heap surfaces the worst entry: worse == greater.
+            if self.worse_than(other) {
+                Ordering::Greater
+            } else if other.worse_than(self) {
+                Ordering::Less
+            } else {
+                Ordering::Equal
+            }
+        }
+    }
+
+    let n = sim.rows();
+    // k may exceed the pair count — never reserve beyond what can be held.
+    let cap = k.min(n * n.saturating_sub(1) / 2);
+    let mut heap: BinaryHeap<Worst> = BinaryHeap::with_capacity(cap);
+    for x in 0..n {
+        let row = sim.row(x);
+        for (y, &v) in row.iter().enumerate().skip(x + 1) {
+            let cand = Worst(v, x, y);
+            if heap.len() < k {
+                heap.push(cand);
+            } else if let Some(worst) = heap.peek() {
+                if worst.worse_than(&cand) {
+                    heap.pop();
+                    heap.push(cand);
+                }
+            }
+        }
+    }
+    // Drain worst-first, then reverse into best-first order.
+    let mut out: Vec<(usize, usize, f32)> = Vec::with_capacity(heap.len());
+    while let Some(Worst(v, x, y)) = heap.pop() {
+        out.push((x, y, v));
+    }
+    out.reverse();
+    out
 }
 
 #[cfg(test)]
@@ -121,6 +201,31 @@ mod tests {
                 direct.max_abs_diff(&dist)
             );
         }
+    }
+
+    #[test]
+    fn quorum_assembly_is_exactly_symmetric() {
+        // set_block + set_block_transposed must produce a bitwise-symmetric
+        // matrix (the mirror write is the same strict-order dot product).
+        let f = features(37, 12, 19);
+        let pool = ThreadPool::new(2);
+        let exec: Executor = Arc::new(NativeBackend::new());
+        let s = similarity_quorum(&f, 5, &exec, &pool).unwrap();
+        for i in 0..37 {
+            for j in 0..37 {
+                assert_eq!(s[(i, j)], s[(j, i)], "asymmetry at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_direct_is_bitwise_serial() {
+        let f = features(41, 14, 23);
+        let pool = ThreadPool::new(4);
+        assert_eq!(
+            similarity_direct(&f).as_slice(),
+            similarity_direct_pooled(&f, &pool).as_slice()
+        );
     }
 
     #[test]
@@ -155,6 +260,28 @@ mod tests {
         }
         for &(x, y, _) in &top {
             assert!(x < y);
+        }
+    }
+
+    #[test]
+    fn top_pairs_matches_full_sort() {
+        // The bounded heap must agree with the exhaustive sort under the
+        // same ordering rule (sim desc, then (x, y) asc), including ties.
+        let mut rng = Rng::new(77);
+        let n = 24;
+        // Coarse quantization forces plenty of exact ties.
+        let s = Matrix::from_fn(n, n, |_, _| (rng.below(9) as f32 - 4.0) / 4.0);
+        let mut all: Vec<(usize, usize, f32)> = Vec::new();
+        for x in 0..n {
+            for y in (x + 1)..n {
+                all.push((x, y, s[(x, y)]));
+            }
+        }
+        all.sort_by(|a, b| b.2.total_cmp(&a.2).then_with(|| (a.0, a.1).cmp(&(b.0, b.1))));
+        for k in [0usize, 1, 7, 50, all.len(), all.len() + 10] {
+            let mut expect = all.clone();
+            expect.truncate(k);
+            assert_eq!(top_pairs(&s, k), expect, "k={k}");
         }
     }
 }

@@ -38,6 +38,34 @@ pub fn emit(table: &Table) {
     println!("{}", table.render());
 }
 
+/// Persist a machine-readable bench payload (e.g. `BENCH_kernels.json`).
+/// The payload convention is one top-level object with a `tables` array of
+/// [`Table::to_json`] values plus free-form metadata keys.
+pub fn write_json(path: &std::path::Path, payload: &crate::util::json::Json) -> std::io::Result<()> {
+    std::fs::write(path, payload.to_string_pretty() + "\n")?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Bundle tables + metadata into the standard bench JSON payload.
+pub fn json_payload(
+    bench: &str,
+    meta: Vec<(&str, crate::util::json::Json)>,
+    tables: &[&Table],
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str(bench.to_string()));
+    for (k, v) in meta {
+        top.insert(k.to_string(), v);
+    }
+    top.insert(
+        "tables".to_string(),
+        Json::Arr(tables.iter().map(|t| t.to_json()).collect()),
+    );
+    Json::Obj(top)
+}
+
 /// Parse `--quick` style bench args (smaller workloads for CI).
 pub fn quick_mode() -> bool {
     std::env::args().any(|a| a == "--quick") || std::env::var("QUORALL_BENCH_QUICK").is_ok()
@@ -59,5 +87,20 @@ mod tests {
         let s = measure(0, 3, || std::thread::sleep(std::time::Duration::from_micros(50)));
         let f = format_summary(&s);
         assert!(f.contains("±"));
+    }
+
+    #[test]
+    fn json_payload_round_trips() {
+        use crate::util::json::Json;
+        let mut t = Table::new("demo", &["k", "v"]);
+        t.row(vec!["speedup".into(), "2.5".into()]);
+        let p = json_payload("kernel_tiles", vec![("quick", Json::Bool(true))], &[&t]);
+        let parsed = Json::parse(&p.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("bench").and_then(|v| v.as_str()), Some("kernel_tiles"));
+        assert_eq!(parsed.get("quick").and_then(|v| v.as_bool()), Some(true));
+        let tables = parsed.get("tables").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(tables.len(), 1);
+        let rows = tables[0].get("rows").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows[0].get("v").and_then(|v| v.as_f64()), Some(2.5));
     }
 }

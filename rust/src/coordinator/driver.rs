@@ -260,7 +260,7 @@ pub fn run_single_node(dataset: &ExpressionDataset, threads: usize, threshold: O
             (Network::new(n, res.edges()), bytes)
         }
         Some(th) => {
-            let corr = crate::pcit::correlation_matrix(&dataset.expr);
+            let corr = crate::pcit::correlation_matrix_pooled(&dataset.expr, &pool);
             let mut edges = Vec::new();
             for x in 0..n {
                 for y in (x + 1)..n {

@@ -6,6 +6,7 @@
 
 use crate::allpairs::PairTask;
 use crate::util::Matrix;
+use std::sync::Arc;
 
 /// Fixed accounting cost of a control message header.
 pub const HEADER_BYTES: u64 = 64;
@@ -20,13 +21,18 @@ pub enum Message {
     },
     /// Leader → worker: compute these correlation block pairs.
     ComputeCorr { tasks: Vec<PairTask> },
-    /// Worker → row-home worker: one correlation tile, oriented so rows are
-    /// the home's block. `rows_block` is the home block id, `cols_block` the
-    /// other one.
+    /// Worker → row-home worker: one correlation tile. When `transposed` is
+    /// false, tile rows already are the home's block; when true, the home
+    /// must apply the tile transposed (`set_block_transposed`) — the owner
+    /// ships one buffer to both row homes instead of materializing a
+    /// transposed copy. `rows_block` is the home block id, `cols_block` the
+    /// other one. The `Arc` is the in-memory transport's stand-in for MPI
+    /// send buffers; `payload_bytes` still accounts the full tile per send.
     CorrTile {
         rows_block: usize,
         cols_block: usize,
-        tile: Matrix,
+        transposed: bool,
+        tile: Arc<Matrix>,
     },
     /// Worker → worker (ring step): a full row block `C[block, 0..N]`.
     RingRows { block: usize, rows: Matrix },
@@ -84,8 +90,8 @@ mod tests {
 
     #[test]
     fn payload_accounting() {
-        let m = Matrix::zeros(4, 8);
-        let tile = Message::CorrTile { rows_block: 0, cols_block: 1, tile: m };
+        let m = Arc::new(Matrix::zeros(4, 8));
+        let tile = Message::CorrTile { rows_block: 0, cols_block: 1, transposed: false, tile: m };
         assert_eq!(tile.payload_bytes(), HEADER_BYTES + 4 * 8 * 4);
         assert_eq!(Message::Shutdown.payload_bytes(), HEADER_BYTES);
         let e = Message::Edges { edges: vec![(0, 1, 0.5); 10] };

@@ -176,9 +176,9 @@ mod tests {
     #[test]
     fn bytes_counted_both_sides() {
         let (t, eps) = Transport::new(2);
-        let m = Matrix::zeros(8, 8);
+        let m = std::sync::Arc::new(Matrix::zeros(8, 8));
         eps[0]
-            .send(1, Message::CorrTile { rows_block: 0, cols_block: 0, tile: m })
+            .send(1, Message::CorrTile { rows_block: 0, cols_block: 0, transposed: false, tile: m })
             .unwrap();
         let sent = eps[0].sent();
         let recvd = t.recv_stats[1].snapshot();

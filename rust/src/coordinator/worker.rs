@@ -118,29 +118,32 @@ impl WorkerState {
         // than ranks, recv-wait time is other ranks' compute and would
         // double-count into the critical path.
         let sw = ThreadCpuTimer::start();
-        // Phase 1: compute owned correlation tiles, route to row homes.
+        // Phase 1: compute owned correlation tiles (zero-copy reads out of
+        // the quorum blocks), route to row homes. Off-diagonal tiles ship
+        // the *same* buffer to both homes — the column home applies it
+        // transposed on write instead of receiving a transposed copy.
         for t in &tasks {
-            let za = self.block_z(t.a);
-            let zb = self.block_z(t.b);
-            let tile = self.exec.corr_tile(za, zb);
+            let tile = Arc::new(self.exec.corr_tile(self.block_z(t.a).view(), self.block_z(t.b).view()));
             self.corr_tiles += 1;
             if t.a == t.b {
                 let _ = self.ep.send(t.a + 1, Message::CorrTile {
                     rows_block: t.a,
                     cols_block: t.b,
+                    transposed: false,
                     tile,
                 });
             } else {
-                let transposed = tile.transpose();
                 let _ = self.ep.send(t.a + 1, Message::CorrTile {
                     rows_block: t.a,
                     cols_block: t.b,
-                    tile,
+                    transposed: false,
+                    tile: Arc::clone(&tile),
                 });
                 let _ = self.ep.send(t.b + 1, Message::CorrTile {
                     rows_block: t.b,
                     cols_block: t.a,
-                    tile: transposed,
+                    transposed: true,
+                    tile,
                 });
             }
         }
@@ -162,10 +165,14 @@ impl WorkerState {
                 },
             };
             match msg {
-                Message::CorrTile { rows_block, cols_block, tile } => {
+                Message::CorrTile { rows_block, cols_block, transposed, tile } => {
                     debug_assert_eq!(rows_block, self.my_block);
                     let c0 = self.plan.block_range(cols_block).start;
-                    row_block.set_block(0, c0, &tile);
+                    if transposed {
+                        row_block.set_block_transposed(0, c0, &tile);
+                    } else {
+                        row_block.set_block(0, c0, &tile);
+                    }
                     tiles_needed -= 1;
                 }
                 Message::Shutdown => return,
@@ -258,9 +265,9 @@ impl WorkerState {
         if a == 0 || b == 0 {
             return;
         }
-        // cxy: slice of my rows at the other block's columns.
-        let cxy = my_rows.block(0, other_range.start, a, b);
-        let flags = self.exec.pcit_tile(&cxy, my_rows, other_rows);
+        // cxy: zero-copy window of my rows at the other block's columns.
+        let cxy = my_rows.view_block(0, other_range.start, a, b);
+        let flags = self.exec.pcit_tile(cxy, my_rows.view(), other_rows.view());
         self.elim_tiles += 1;
         let mask = flags_to_mask(&flags);
         let diagonal = other_block == self.my_block;
@@ -304,13 +311,12 @@ impl WorkerState {
             (b, r.len())
         }).collect();
         for t in &tasks {
-            let za = self.block_z(t.a).clone();
-            let zb = self.block_z(t.b).clone();
-            let (a_len, b_len) = (za.rows(), zb.rows());
+            let (a_len, b_len) = (self.block_z(t.a).rows(), self.block_z(t.b).rows());
             if a_len == 0 || b_len == 0 {
                 continue;
             }
-            let cxy = self.exec.corr_tile(&za, &zb);
+            // Tiles read the quorum blocks in place — no per-task clones.
+            let cxy = self.exec.corr_tile(self.block_z(t.a).view(), self.block_z(t.b).view());
             self.corr_tiles += 1;
             if self.plan.use_pcit {
                 // r(x, z) and r(y, z) for z over the quorum panel.
@@ -322,15 +328,14 @@ impl WorkerState {
                     if qlen == 0 {
                         continue;
                     }
-                    let zq = self.block_z(qb).clone();
-                    let ta = self.exec.corr_tile(&za, &zq);
-                    let tb = self.exec.corr_tile(&zb, &zq);
+                    let ta = self.exec.corr_tile(self.block_z(t.a).view(), self.block_z(qb).view());
+                    let tb = self.exec.corr_tile(self.block_z(t.b).view(), self.block_z(qb).view());
                     self.corr_tiles += 2;
                     rxz.set_block(0, c0, &ta);
                     ryz.set_block(0, c0, &tb);
                     c0 += qlen;
                 }
-                let flags = self.exec.pcit_tile(&cxy, &rxz, &ryz);
+                let flags = self.exec.pcit_tile(cxy.view(), rxz.view(), ryz.view());
                 self.elim_tiles += 1;
                 let mask = flags_to_mask(&flags);
                 self.collect_task_edges(t, &cxy, Some(&mask), &mut edges);

@@ -1,5 +1,7 @@
 //! Plain-text table formatting for bench output and CLI reports.
 
+use crate::util::json::Json;
+
 /// A simple aligned table: header + rows of strings.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
@@ -56,6 +58,31 @@ impl Table {
         out
     }
 
+    /// Machine-readable form: `{title, rows: [{header_i: cell_i, ...}]}` —
+    /// the payload `benchkit::write_json` persists as `BENCH_*.json`.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let mut obj = std::collections::BTreeMap::new();
+                for (h, c) in self.header.iter().zip(row) {
+                    // Numbers stay numbers so downstream tooling can plot.
+                    let v = match c.parse::<f64>() {
+                        Ok(x) if x.is_finite() => Json::Num(x),
+                        _ => Json::Str(c.clone()),
+                    };
+                    obj.insert(h.clone(), v);
+                }
+                Json::Obj(obj)
+            })
+            .collect();
+        let mut top = std::collections::BTreeMap::new();
+        top.insert("title".to_string(), Json::Str(self.title.clone()));
+        top.insert("rows".to_string(), Json::Arr(rows));
+        Json::Obj(top)
+    }
+
     /// Render as CSV (for EXPERIMENTS.md ingestion).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
@@ -91,6 +118,17 @@ mod tests {
         let mut t = Table::new("", &["a", "b"]);
         t.row(vec!["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn json_keeps_numbers() {
+        let mut t = Table::new("bench", &["name", "gflops"]);
+        t.row(vec!["seed".into(), "1.25".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").and_then(|v| v.as_str()), Some("bench"));
+        let rows = j.get("rows").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows[0].get("gflops").and_then(|v| v.as_f64()), Some(1.25));
+        assert_eq!(rows[0].get("name").and_then(|v| v.as_str()), Some("seed"));
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //!
 //! Complexity: O(N²) memory for the correlation matrix, O(N³) trio scans.
 
+use super::correlation::correlation_matrix_pooled;
 use super::{correlation_matrix, trio_eliminates};
 use crate::pool::ThreadPool;
 use crate::util::Matrix;
@@ -60,9 +61,14 @@ impl PcitResult {
 
 /// Run exact PCIT over raw expression data (genes × samples).
 ///
-/// `pool` parallelizes the O(N³) phase-2 scan across pair rows.
+/// `pool` parallelizes both the phase-1 `Z·Zᵀ` product (row panels) and the
+/// O(N³) phase-2 scan across pair rows; results are bitwise identical to
+/// the serial path either way.
 pub fn exact_pcit(expr: &Matrix, pool: Option<&ThreadPool>) -> PcitResult {
-    let corr = correlation_matrix(expr);
+    let corr = match pool {
+        Some(p) => correlation_matrix_pooled(expr, p),
+        None => correlation_matrix(expr),
+    };
     exact_pcit_from_corr(&corr, pool)
 }
 

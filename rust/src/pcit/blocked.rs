@@ -13,13 +13,14 @@
 //! contract (`python/compile/kernels/pcit.py`).
 
 use super::trio_eliminates;
-use crate::util::Matrix;
+use crate::util::MatrixView;
 
 /// Scan one z-chunk for an edge tile. `cxy`: A×B direct correlations;
 /// `rxz`: A×Z correlations of the x rows against the chunk's z columns;
 /// `ryz`: B×Z likewise for y. Returns the A×B "eliminated by this chunk"
-/// mask (row-major).
-pub fn eliminate_chunk(cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Vec<bool> {
+/// mask (row-major). Operands are borrowed views — the distributed path
+/// scans straight out of each rank's row blocks with no copies.
+pub fn eliminate_chunk(cxy: MatrixView<'_>, rxz: MatrixView<'_>, ryz: MatrixView<'_>) -> Vec<bool> {
     let (a, b) = cxy.shape();
     let z = rxz.cols();
     assert_eq!(rxz.rows(), a, "rxz rows must match tile rows");
@@ -91,7 +92,7 @@ pub fn eliminate_chunk(cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Vec<bool> {
 
 /// Naive reference scan (kept for differential testing of the hot path).
 #[doc(hidden)]
-pub fn eliminate_chunk_reference(cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Vec<bool> {
+pub fn eliminate_chunk_reference(cxy: MatrixView<'_>, rxz: MatrixView<'_>, ryz: MatrixView<'_>) -> Vec<bool> {
     let (a, b) = cxy.shape();
     let z = rxz.cols();
     let mut out = vec![false; a * b];
@@ -107,8 +108,14 @@ pub fn eliminate_chunk_reference(cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Ve
 }
 
 /// Full elimination for an edge tile: scan all N mediators in `chunk`-wide
-/// pieces, OR-accumulating. `rx_full`: A×N, `ry_full`: B×N.
-pub fn eliminate_block(cxy: &Matrix, rx_full: &Matrix, ry_full: &Matrix, chunk: usize) -> Vec<bool> {
+/// pieces, OR-accumulating. `rx_full`: A×N, `ry_full`: B×N. Chunk windows
+/// are zero-copy sub-views of the full row blocks.
+pub fn eliminate_block(
+    cxy: MatrixView<'_>,
+    rx_full: MatrixView<'_>,
+    ry_full: MatrixView<'_>,
+    chunk: usize,
+) -> Vec<bool> {
     let (a, b) = cxy.shape();
     let n = rx_full.cols();
     assert_eq!(ry_full.cols(), n);
@@ -117,9 +124,7 @@ pub fn eliminate_block(cxy: &Matrix, rx_full: &Matrix, ry_full: &Matrix, chunk: 
     let mut z0 = 0usize;
     while z0 < n {
         let w = chunk.min(n - z0);
-        let rxz = rx_full.block(0, z0, a, w);
-        let ryz = ry_full.block(0, z0, b, w);
-        let m = eliminate_chunk(cxy, &rxz, &ryz);
+        let m = eliminate_chunk(cxy, rx_full.sub(0, z0, a, w), ry_full.sub(0, z0, b, w));
         for (o, hit) in out.iter_mut().zip(m) {
             *o |= hit;
         }
@@ -131,9 +136,9 @@ pub fn eliminate_block(cxy: &Matrix, rx_full: &Matrix, ry_full: &Matrix, chunk: 
 /// Quorum-local variant (the ablation mode): mediators restricted to the
 /// columns listed in `z_cols` (the owner's quorum genes).
 pub fn eliminate_block_local(
-    cxy: &Matrix,
-    rx_local: &Matrix,
-    ry_local: &Matrix,
+    cxy: MatrixView<'_>,
+    rx_local: MatrixView<'_>,
+    ry_local: MatrixView<'_>,
 ) -> Vec<bool> {
     // rx_local / ry_local are already column-restricted; a single chunk scan.
     eliminate_chunk(cxy, rx_local, ry_local)
@@ -145,6 +150,7 @@ mod tests {
     use crate::data::synthetic::{ExpressionDataset, SyntheticSpec};
     use crate::pcit::algorithm::{exact_pcit_from_corr, PcitResult};
     use crate::pcit::correlation_matrix;
+    use crate::util::Matrix;
 
     fn corr_fixture(n: usize) -> Matrix {
         let d = ExpressionDataset::generate(SyntheticSpec {
@@ -164,11 +170,11 @@ mod tests {
         let exact = exact_pcit_from_corr(&corr, None);
         // Edge block: rows 0..16 vs cols 16..48.
         let (a, b) = (16usize, 32usize);
-        let cxy = corr.block(0, 16, a, b);
-        let rx = corr.block(0, 0, a, n);
-        let ry = corr.block(16, 0, b, n);
+        let cxy = corr.view_block(0, 16, a, b);
+        let rx = corr.view_block(0, 0, a, n);
+        let ry = corr.view_block(16, 0, b, n);
         for chunk in [7usize, 16, 48, 100] {
-            let elim = eliminate_block(&cxy, &rx, &ry, chunk);
+            let elim = eliminate_block(cxy, rx, ry, chunk);
             for i in 0..a {
                 for j in 0..b {
                     let x = i;
@@ -189,9 +195,9 @@ mod tests {
         let corr = corr_fixture(n);
         let exact = exact_pcit_from_corr(&corr, None);
         let a = 16usize;
-        let cxy = corr.block(0, 0, a, a);
-        let rx = corr.block(0, 0, a, n);
-        let elim = eliminate_block(&cxy, &rx, &rx, 8);
+        let cxy = corr.view_block(0, 0, a, a);
+        let rx = corr.view_block(0, 0, a, n);
+        let elim = eliminate_block(cxy, rx, rx, 8);
         for x in 0..a {
             for y in (x + 1)..a {
                 assert_eq!(!elim[x * a + y], exact.keep(x, y), "pair ({x},{y})");
@@ -202,12 +208,12 @@ mod tests {
     #[test]
     fn chunk_width_invariance() {
         let corr = corr_fixture(24);
-        let cxy = corr.block(0, 8, 8, 8);
-        let rx = corr.block(0, 0, 8, 24);
-        let ry = corr.block(8, 0, 8, 24);
-        let m1 = eliminate_block(&cxy, &rx, &ry, 1);
-        let m5 = eliminate_block(&cxy, &rx, &ry, 5);
-        let m24 = eliminate_block(&cxy, &rx, &ry, 24);
+        let cxy = corr.view_block(0, 8, 8, 8);
+        let rx = corr.view_block(0, 0, 8, 24);
+        let ry = corr.view_block(8, 0, 8, 24);
+        let m1 = eliminate_block(cxy, rx, ry, 1);
+        let m5 = eliminate_block(cxy, rx, ry, 5);
+        let m24 = eliminate_block(cxy, rx, ry, 24);
         assert_eq!(m1, m5);
         assert_eq!(m5, m24);
     }
@@ -217,13 +223,13 @@ mod tests {
         // Restricting mediators can only *reduce* eliminations.
         let n = 40;
         let corr = corr_fixture(n);
-        let cxy = corr.block(0, 20, 8, 8);
-        let rx_full = corr.block(0, 0, 8, n);
-        let ry_full = corr.block(20, 0, 8, n);
-        let full = eliminate_block(&cxy, &rx_full, &ry_full, 16);
-        let rx_loc = corr.block(0, 0, 8, 10);
-        let ry_loc = corr.block(20, 0, 8, 10);
-        let local = eliminate_block_local(&cxy, &rx_loc, &ry_loc);
+        let cxy = corr.view_block(0, 20, 8, 8);
+        let full = eliminate_block(cxy, corr.view_block(0, 0, 8, n), corr.view_block(20, 0, 8, n), 16);
+        let local = eliminate_block_local(
+            cxy,
+            corr.view_block(0, 0, 8, 10),
+            corr.view_block(20, 0, 8, 10),
+        );
         for (f, l) in full.iter().zip(&local) {
             assert!(*f || !*l, "local eliminated where full did not");
         }
@@ -234,15 +240,15 @@ mod tests {
         // Including the z = x column (r = 1 on the diagonal) must not change
         // anything — the EPS_GUARD rejects |r| = 1 trios.
         let corr = corr_fixture(20);
-        let cxy = corr.block(0, 10, 4, 4);
+        let cxy = corr.view_block(0, 10, 4, 4);
         let rx = corr.block(0, 0, 4, 20);
         let ry = corr.block(10, 0, 4, 20);
-        let with_all = eliminate_block(&cxy, &rx, &ry, 20);
+        let with_all = eliminate_block(cxy, rx.view(), ry.view(), 20);
         // Drop columns 0..4 (the x genes) and 10..14 (the y genes).
         let keep_cols: Vec<usize> = (0..20).filter(|&z| !(z < 4 || (10..14).contains(&z))).collect();
         let rx_sub = rx.select_cols(&keep_cols);
         let ry_sub = ry.select_cols(&keep_cols);
-        let without = eliminate_chunk(&cxy, &rx_sub, &ry_sub);
+        let without = eliminate_chunk(cxy, rx_sub.view(), ry_sub.view());
         assert_eq!(with_all, without);
     }
 
@@ -271,8 +277,8 @@ mod tests {
             let rxz = gen(&mut rng, a, z);
             let ryz = gen(&mut rng, b, z);
             assert_eq!(
-                eliminate_chunk(&cxy, &rxz, &ryz),
-                eliminate_chunk_reference(&cxy, &rxz, &ryz),
+                eliminate_chunk(cxy.view(), rxz.view(), ryz.view()),
+                eliminate_chunk_reference(cxy.view(), rxz.view(), ryz.view()),
                 "a={a} b={b} z={z}"
             );
         }

@@ -5,7 +5,7 @@
 //! computes. Constant rows standardize to zero (correlation 0 with all).
 
 use crate::pool::ThreadPool;
-use crate::util::Matrix;
+use crate::util::{matmul_nt_pooled, Matrix, MatrixView};
 
 /// Standardize every row: subtract mean, divide by the centered L2 norm.
 pub fn standardize_rows(expr: &Matrix) -> Matrix {
@@ -64,10 +64,22 @@ pub fn correlation_matrix(expr: &Matrix) -> Matrix {
     c
 }
 
+/// [`correlation_matrix`] with both standardization and the `Z·Zᵀ` product
+/// panelled across a thread pool — the leader/direct full-matrix path.
+/// Bitwise identical to the serial version (same kernel, same k order).
+pub fn correlation_matrix_pooled(expr: &Matrix, pool: &ThreadPool) -> Matrix {
+    let z = standardize_rows_pooled(expr, pool);
+    let mut c = matmul_nt_pooled(&z, &z, pool);
+    finalize_correlation(&mut c, true);
+    c
+}
+
 /// Correlation block between two sets of *standardized* rows
 /// (`za`: A×M, `zb`: B×M) → A×B tile, clamped to [-1, 1].
 /// This is the exact reference semantics of the `corr_chunk` L1 kernel.
-pub fn corr_block(za: &Matrix, zb: &Matrix) -> Matrix {
+/// Borrowed views: tiles are computed in place over the standardized
+/// matrix with no operand copies.
+pub fn corr_block(za: MatrixView<'_>, zb: MatrixView<'_>) -> Matrix {
     let mut c = za.matmul_nt(zb);
     finalize_correlation(&mut c, false);
     c
@@ -148,9 +160,7 @@ mod tests {
         let x = rand_matrix(10, 25, 11);
         let z = standardize_rows(&x);
         let full = correlation_matrix(&x);
-        let za = z.block(0, 0, 4, 25);
-        let zb = z.block(6, 0, 4, 25);
-        let blk = corr_block(&za, &zb);
+        let blk = corr_block(z.view_block(0, 0, 4, 25), z.view_block(6, 0, 4, 25));
         for i in 0..4 {
             for j in 0..4 {
                 assert!((blk[(i, j)] - full[(i, 6 + j)]).abs() < 1e-6);
@@ -159,10 +169,29 @@ mod tests {
     }
 
     #[test]
+    fn corr_block_views_equal_copies() {
+        let x = rand_matrix(14, 19, 23);
+        let z = standardize_rows(&x);
+        let via_views = corr_block(z.view_block(1, 0, 6, 19), z.view_block(8, 0, 5, 19));
+        let (ca, cb) = (z.block(1, 0, 6, 19), z.block(8, 0, 5, 19));
+        let via_copies = corr_block(ca.view(), cb.view());
+        assert_eq!(via_views.as_slice(), via_copies.as_slice());
+    }
+
+    #[test]
     fn pooled_matches_serial() {
         let x = rand_matrix(33, 17, 13);
         let pool = ThreadPool::new(4);
         assert_eq!(standardize_rows(&x), standardize_rows_pooled(&x, &pool));
+    }
+
+    #[test]
+    fn pooled_correlation_is_bitwise_serial() {
+        let x = rand_matrix(47, 21, 15);
+        let pool = ThreadPool::new(4);
+        let serial = correlation_matrix(&x);
+        let pooled = correlation_matrix_pooled(&x, &pool);
+        assert_eq!(serial.as_slice(), pooled.as_slice());
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod blocked;
 pub mod network;
 
 pub use algorithm::{exact_pcit, PcitResult};
-pub use correlation::{correlation_matrix, standardize_rows};
+pub use correlation::{correlation_matrix, correlation_matrix_pooled, standardize_rows};
 pub use network::Network;
 
 /// Guard for degenerate denominators (|r| ≈ 1 or direct correlation ≈ 0).

@@ -146,7 +146,10 @@ impl ThreadPool {
     }
 }
 
-struct SendPtr<T>(*mut T);
+/// Send/Sync-smuggled raw pointer for disjoint-index parallel writes; every
+/// user must guarantee the writes are disjoint and the target outlives the
+/// blocking parallel call (see `parallel_map` and `matmul_nt_pooled`).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 
 // Manual impls: derive would add a `T: Copy` bound we don't want.
 impl<T> Clone for SendPtr<T> {
@@ -159,7 +162,7 @@ unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
-    fn get(self) -> *mut T {
+    pub(crate) fn get(self) -> *mut T {
         self.0
     }
 }

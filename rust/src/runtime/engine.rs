@@ -2,12 +2,20 @@
 //! the `xla` crate's CPU client, and executes tiles with zero-padding to
 //! the artifacts' static shapes.
 //!
+//! The whole backend is gated behind the off-by-default `xla` cargo feature
+//! (the `xla` crate and its PJRT closure are not available in the offline
+//! build environment); without it, [`XlaBackend::load`] is a stub that
+//! returns a descriptive error, so `BackendKind::Xla` fails cleanly at
+//! executor construction and every other code path is unaffected.
+//!
 //! The `xla` crate's PJRT handles are neither `Send` nor `Sync` (raw
 //! pointers + `Rc` client), so a dedicated **service thread** owns the
 //! client and executables; [`XlaBackend`] is a `Send + Sync` facade that
-//! ships tile requests over a channel and blocks on the response. PJRT CPU
-//! execution is internally multi-threaded, so a single submission queue
-//! costs little (measured in EXPERIMENTS.md §Perf).
+//! ships tile requests over a channel and blocks on the response. Tile
+//! operands arrive as borrowed [`MatrixView`]s and are materialized exactly
+//! once at this channel boundary (PJRT literals need owned buffers anyway);
+//! PJRT CPU execution is internally multi-threaded, so a single submission
+//! queue costs little (measured in EXPERIMENTS.md §Perf).
 //!
 //! Padding is semantically safe by construction:
 //! * `corr_chunk` — zero rows/columns contribute 0 to every dot product;
@@ -17,288 +25,346 @@
 //!   `trio_eliminates` rejects, so padded z never eliminates; padded rows
 //!   are sliced away.
 
-use super::artifact::ArtifactManifest;
-use super::TileExecutor;
-use crate::util::Matrix;
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Mutex;
+#[cfg(feature = "xla")]
+pub use real::XlaBackend;
 
-enum Req {
-    Corr { za: Matrix, zb: Matrix, resp: Sender<Result<Matrix>> },
-    Pcit { cxy: Matrix, rxz: Matrix, ryz: Matrix, resp: Sender<Result<Matrix>> },
-    Shutdown,
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaBackend;
 
-/// `Send + Sync` facade over the XLA service thread.
-pub struct XlaBackend {
-    tx: Mutex<Sender<Req>>,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::runtime::TileExecutor;
+    use crate::util::{Matrix, MatrixView};
+    use anyhow::Result;
+    use std::path::Path;
 
-impl XlaBackend {
-    /// Load and compile all kernels from `artifacts/` on the service thread.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let dir = dir.to_path_buf();
-        let (tx, rx) = channel::<Req>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("quorall-xla".into())
-            .spawn(move || service_main(dir, rx, ready_tx))
-            .context("spawning XLA service thread")?;
-        ready_rx
-            .recv()
-            .context("XLA service thread died during startup")??;
-        Ok(Self { tx: Mutex::new(tx), handle: Some(handle) })
+    /// Placeholder compiled without the `xla` feature: construction always
+    /// fails, so the tile methods are unreachable by design.
+    pub struct XlaBackend {
+        _unconstructible: (),
     }
 
-    fn request(&self, build: impl FnOnce(Sender<Result<Matrix>>) -> Req) -> Result<Matrix> {
-        let (rtx, rrx) = channel();
-        {
-            let tx = self.tx.lock().unwrap();
-            tx.send(build(rtx)).map_err(|_| anyhow::anyhow!("XLA service thread gone"))?;
+    impl XlaBackend {
+        pub fn load(_dir: &Path) -> Result<Self> {
+            anyhow::bail!(
+                "this build does not include the XLA/PJRT backend — \
+                 rebuild with `--features xla` (requires the `xla` crate)"
+            )
         }
-        rrx.recv().context("XLA service dropped the request")?
     }
-}
 
-impl Drop for XlaBackend {
-    fn drop(&mut self) {
-        if let Ok(tx) = self.tx.lock() {
-            let _ = tx.send(Req::Shutdown);
+    impl TileExecutor for XlaBackend {
+        fn corr_tile(&self, _za: MatrixView<'_>, _zb: MatrixView<'_>) -> Matrix {
+            unreachable!("stub XlaBackend cannot be constructed")
         }
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+
+        fn pcit_tile(&self, _cxy: MatrixView<'_>, _rxz: MatrixView<'_>, _ryz: MatrixView<'_>) -> Matrix {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+
+        fn name(&self) -> &'static str {
+            "xla-stub"
         }
     }
 }
 
-impl TileExecutor for XlaBackend {
-    fn corr_tile(&self, za: &Matrix, zb: &Matrix) -> Matrix {
-        self.request(|resp| Req::Corr { za: za.clone(), zb: zb.clone(), resp })
-            .expect("XLA corr tile execution failed")
+#[cfg(feature = "xla")]
+mod real {
+    use crate::runtime::artifact::ArtifactManifest;
+    use crate::runtime::TileExecutor;
+    use crate::util::{Matrix, MatrixView};
+    use anyhow::{Context, Result};
+    use std::path::{Path, PathBuf};
+    use std::sync::mpsc::{channel, Sender};
+    use std::sync::Mutex;
+
+    enum Req {
+        Corr { za: Matrix, zb: Matrix, resp: Sender<Result<Matrix>> },
+        Pcit { cxy: Matrix, rxz: Matrix, ryz: Matrix, resp: Sender<Result<Matrix>> },
+        Shutdown,
     }
 
-    fn pcit_tile(&self, cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Matrix {
-        self.request(|resp| Req::Pcit {
-            cxy: cxy.clone(),
-            rxz: rxz.clone(),
-            ryz: ryz.clone(),
-            resp,
-        })
-        .expect("XLA pcit tile execution failed")
+    /// `Send + Sync` facade over the XLA service thread.
+    pub struct XlaBackend {
+        tx: Mutex<Sender<Req>>,
+        handle: Option<std::thread::JoinHandle<()>>,
     }
 
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-}
-
-// ---------------- service thread ----------------
-
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Compiled {
-    fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Self { exe })
-    }
-
-    /// Execute with f32 matrix inputs; result = first tuple element.
-    fn run(&self, inputs: &[&Matrix], out_rows: usize, out_cols: usize) -> Result<Matrix> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for m in inputs {
-            let lit = xla::Literal::vec1(m.as_slice())
-                .reshape(&[m.rows() as i64, m.cols() as i64])
-                .context("reshaping input literal")?;
-            lits.push(lit);
+    impl XlaBackend {
+        /// Load and compile all kernels from `artifacts/` on the service thread.
+        pub fn load(dir: &Path) -> Result<Self> {
+            let dir = dir.to_path_buf();
+            let (tx, rx) = channel::<Req>();
+            let (ready_tx, ready_rx) = channel::<Result<()>>();
+            let handle = std::thread::Builder::new()
+                .name("quorall-xla".into())
+                .spawn(move || service_main(dir, rx, ready_tx))
+                .context("spawning XLA service thread")?;
+            ready_rx
+                .recv()
+                .context("XLA service thread died during startup")??;
+            Ok(Self { tx: Mutex::new(tx), handle: Some(handle) })
         }
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        let values = out.to_vec::<f32>().context("reading result values")?;
-        anyhow::ensure!(
-            values.len() == out_rows * out_cols,
-            "result size {} != {}x{}",
-            values.len(),
-            out_rows,
-            out_cols
-        );
-        Ok(Matrix::from_vec(out_rows, out_cols, values))
-    }
-}
 
-struct Service {
-    corr: Compiled,
-    pcit: Compiled,
-    corr_a: usize,
-    corr_b: usize,
-    corr_m: usize,
-    pcit_a: usize,
-    pcit_b: usize,
-    pcit_z: usize,
-}
-
-fn service_main(dir: PathBuf, rx: std::sync::mpsc::Receiver<Req>, ready: Sender<Result<()>>) {
-    let svc = match Service::load(&dir) {
-        Ok(s) => {
-            let _ = ready.send(Ok(()));
-            s
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    while let Ok(req) = rx.recv() {
-        match req {
-            Req::Corr { za, zb, resp } => {
-                let _ = resp.send(svc.corr_tile(&za, &zb));
+        fn request(&self, build: impl FnOnce(Sender<Result<Matrix>>) -> Req) -> Result<Matrix> {
+            let (rtx, rrx) = channel();
+            {
+                let tx = self.tx.lock().unwrap();
+                tx.send(build(rtx)).map_err(|_| anyhow::anyhow!("XLA service thread gone"))?;
             }
-            Req::Pcit { cxy, rxz, ryz, resp } => {
-                let _ = resp.send(svc.pcit_tile(&cxy, &rxz, &ryz));
-            }
-            Req::Shutdown => break,
+            rrx.recv().context("XLA service dropped the request")?
         }
     }
-}
 
-impl Service {
-    fn load(dir: &Path) -> Result<Self> {
-        let manifest = ArtifactManifest::load(dir)?;
-        manifest.verify_shapes()?; // catches stale artifacts pre-compile
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let ck = manifest.kernel("corr_chunk")?;
-        let pk = manifest.kernel("pcit_chunk")?;
-        Ok(Self {
-            corr: Compiled::load(&client, &ck.file)?,
-            pcit: Compiled::load(&client, &pk.file)?,
-            corr_a: ck.dim("a")?,
-            corr_b: ck.dim("b")?,
-            corr_m: ck.dim("m")?,
-            pcit_a: pk.dim("a")?,
-            pcit_b: pk.dim("b")?,
-            pcit_z: pk.dim("z")?,
-        })
+    impl Drop for XlaBackend {
+        fn drop(&mut self) {
+            if let Ok(tx) = self.tx.lock() {
+                let _ = tx.send(Req::Shutdown);
+            }
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+        }
     }
 
-    fn corr_tile(&self, za: &Matrix, zb: &Matrix) -> Result<Matrix> {
-        let (a, m) = za.shape();
-        let (b, m2) = zb.shape();
-        anyhow::ensure!(m == m2, "sample dimension mismatch");
-        // Large row blocks are tiled over the artifact's static (a, b) shape.
-        if a > self.corr_a || b > self.corr_b {
-            let mut out = Matrix::zeros(a, b);
-            let mut r0 = 0usize;
-            while r0 < a {
-                let rh = self.corr_a.min(a - r0);
-                let za_t = za.block(r0, 0, rh, m);
-                let mut c0 = 0usize;
-                while c0 < b {
-                    let cw = self.corr_b.min(b - c0);
-                    let zb_t = zb.block(c0, 0, cw, m);
-                    let tile = self.corr_tile(&za_t, &zb_t)?;
-                    out.set_block(r0, c0, &tile);
-                    c0 += cw;
+    impl TileExecutor for XlaBackend {
+        fn corr_tile(&self, za: MatrixView<'_>, zb: MatrixView<'_>) -> Matrix {
+            // Views are materialized once here, at the channel boundary.
+            self.request(|resp| Req::Corr { za: za.to_matrix(), zb: zb.to_matrix(), resp })
+                .expect("XLA corr tile execution failed")
+        }
+
+        fn pcit_tile(&self, cxy: MatrixView<'_>, rxz: MatrixView<'_>, ryz: MatrixView<'_>) -> Matrix {
+            self.request(|resp| Req::Pcit {
+                cxy: cxy.to_matrix(),
+                rxz: rxz.to_matrix(),
+                ryz: ryz.to_matrix(),
+                resp,
+            })
+            .expect("XLA pcit tile execution failed")
+        }
+
+        fn name(&self) -> &'static str {
+            "xla"
+        }
+    }
+
+    // ---------------- service thread ----------------
+
+    struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Compiled {
+        fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Self { exe })
+        }
+
+        /// Execute with f32 matrix inputs; result = first tuple element.
+        fn run(&self, inputs: &[&Matrix], out_rows: usize, out_cols: usize) -> Result<Matrix> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for m in inputs {
+                let lit = xla::Literal::vec1(m.as_slice())
+                    .reshape(&[m.rows() as i64, m.cols() as i64])
+                    .context("reshaping input literal")?;
+                lits.push(lit);
+            }
+            let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+            let out = result.to_tuple1().context("unwrapping result tuple")?;
+            let values = out.to_vec::<f32>().context("reading result values")?;
+            anyhow::ensure!(
+                values.len() == out_rows * out_cols,
+                "result size {} != {}x{}",
+                values.len(),
+                out_rows,
+                out_cols
+            );
+            Ok(Matrix::from_vec(out_rows, out_cols, values))
+        }
+    }
+
+    struct Service {
+        corr: Compiled,
+        pcit: Compiled,
+        corr_a: usize,
+        corr_b: usize,
+        corr_m: usize,
+        pcit_a: usize,
+        pcit_b: usize,
+        pcit_z: usize,
+    }
+
+    fn service_main(dir: PathBuf, rx: std::sync::mpsc::Receiver<Req>, ready: Sender<Result<()>>) {
+        let svc = match Service::load(&dir) {
+            Ok(s) => {
+                let _ = ready.send(Ok(()));
+                s
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        };
+        while let Ok(req) = rx.recv() {
+            match req {
+                Req::Corr { za, zb, resp } => {
+                    let _ = resp.send(svc.corr_tile(&za, &zb));
                 }
-                r0 += rh;
-            }
-            return Ok(out);
-        }
-        let mut acc = Matrix::zeros(self.corr_a, self.corr_b);
-        let mut m0 = 0usize;
-        while m0 < m {
-            let w = self.corr_m.min(m - m0);
-            let za_c = pad_to(&za.block(0, m0, a, w), self.corr_a, self.corr_m);
-            let zb_c = pad_to(&zb.block(0, m0, b, w), self.corr_b, self.corr_m);
-            let part = self.corr.run(&[&za_c, &zb_c], self.corr_a, self.corr_b)?;
-            for (o, v) in acc.as_mut_slice().iter_mut().zip(part.as_slice()) {
-                *o += v;
-            }
-            m0 += w;
-        }
-        for v in acc.as_mut_slice() {
-            *v = v.clamp(-1.0, 1.0);
-        }
-        Ok(acc.block(0, 0, a, b))
-    }
-
-    fn pcit_tile(&self, cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Result<Matrix> {
-        let (a, b) = cxy.shape();
-        let z = rxz.cols();
-        anyhow::ensure!(rxz.rows() == a && ryz.rows() == b && ryz.cols() == z, "shape mismatch");
-        // Tile large pair blocks over the static (a, b) shape.
-        if a > self.pcit_a || b > self.pcit_b {
-            let mut out = Matrix::zeros(a, b);
-            let mut r0 = 0usize;
-            while r0 < a {
-                let rh = self.pcit_a.min(a - r0);
-                let rxz_t = rxz.block(r0, 0, rh, z);
-                let mut c0 = 0usize;
-                while c0 < b {
-                    let cw = self.pcit_b.min(b - c0);
-                    let cxy_t = cxy.block(r0, c0, rh, cw);
-                    let ryz_t = ryz.block(c0, 0, cw, z);
-                    let tile = self.pcit_tile(&cxy_t, &rxz_t, &ryz_t)?;
-                    out.set_block(r0, c0, &tile);
-                    c0 += cw;
+                Req::Pcit { cxy, rxz, ryz, resp } => {
+                    let _ = resp.send(svc.pcit_tile(&cxy, &rxz, &ryz));
                 }
-                r0 += rh;
+                Req::Shutdown => break,
             }
-            return Ok(out);
         }
-        let cxy_p = pad_to(cxy, self.pcit_a, self.pcit_b);
-        let mut flags = Matrix::zeros(self.pcit_a, self.pcit_b);
-        let mut z0 = 0usize;
-        while z0 < z {
-            let w = self.pcit_z.min(z - z0);
-            let rxz_c = pad_to(&rxz.block(0, z0, a, w), self.pcit_a, self.pcit_z);
-            let ryz_c = pad_to(&ryz.block(0, z0, b, w), self.pcit_b, self.pcit_z);
-            let part = self.pcit.run(&[&cxy_p, &rxz_c, &ryz_c], self.pcit_a, self.pcit_b)?;
-            for (o, v) in flags.as_mut_slice().iter_mut().zip(part.as_slice()) {
-                *o = if *o > 0.5 || *v > 0.5 { 1.0 } else { 0.0 };
+    }
+
+    impl Service {
+        fn load(dir: &Path) -> Result<Self> {
+            let manifest = ArtifactManifest::load(dir)?;
+            manifest.verify_shapes()?; // catches stale artifacts pre-compile
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let ck = manifest.kernel("corr_chunk")?;
+            let pk = manifest.kernel("pcit_chunk")?;
+            Ok(Self {
+                corr: Compiled::load(&client, &ck.file)?,
+                pcit: Compiled::load(&client, &pk.file)?,
+                corr_a: ck.dim("a")?,
+                corr_b: ck.dim("b")?,
+                corr_m: ck.dim("m")?,
+                pcit_a: pk.dim("a")?,
+                pcit_b: pk.dim("b")?,
+                pcit_z: pk.dim("z")?,
+            })
+        }
+
+        fn corr_tile(&self, za: &Matrix, zb: &Matrix) -> Result<Matrix> {
+            let (a, m) = za.shape();
+            let (b, m2) = zb.shape();
+            anyhow::ensure!(m == m2, "sample dimension mismatch");
+            // Large row blocks are tiled over the artifact's static (a, b) shape.
+            if a > self.corr_a || b > self.corr_b {
+                let mut out = Matrix::zeros(a, b);
+                let mut r0 = 0usize;
+                while r0 < a {
+                    let rh = self.corr_a.min(a - r0);
+                    let za_t = za.block(r0, 0, rh, m);
+                    let mut c0 = 0usize;
+                    while c0 < b {
+                        let cw = self.corr_b.min(b - c0);
+                        let zb_t = zb.block(c0, 0, cw, m);
+                        let tile = self.corr_tile(&za_t, &zb_t)?;
+                        out.set_block(r0, c0, &tile);
+                        c0 += cw;
+                    }
+                    r0 += rh;
+                }
+                return Ok(out);
             }
-            z0 += w;
+            let mut acc = Matrix::zeros(self.corr_a, self.corr_b);
+            let mut m0 = 0usize;
+            while m0 < m {
+                let w = self.corr_m.min(m - m0);
+                let za_c = pad_to(&za.block(0, m0, a, w), self.corr_a, self.corr_m);
+                let zb_c = pad_to(&zb.block(0, m0, b, w), self.corr_b, self.corr_m);
+                let part = self.corr.run(&[&za_c, &zb_c], self.corr_a, self.corr_b)?;
+                for (o, v) in acc.as_mut_slice().iter_mut().zip(part.as_slice()) {
+                    *o += v;
+                }
+                m0 += w;
+            }
+            for v in acc.as_mut_slice() {
+                *v = v.clamp(-1.0, 1.0);
+            }
+            Ok(acc.block(0, 0, a, b))
         }
-        Ok(flags.block(0, 0, a, b))
+
+        fn pcit_tile(&self, cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Result<Matrix> {
+            let (a, b) = cxy.shape();
+            let z = rxz.cols();
+            anyhow::ensure!(rxz.rows() == a && ryz.rows() == b && ryz.cols() == z, "shape mismatch");
+            // Tile large pair blocks over the static (a, b) shape.
+            if a > self.pcit_a || b > self.pcit_b {
+                let mut out = Matrix::zeros(a, b);
+                let mut r0 = 0usize;
+                while r0 < a {
+                    let rh = self.pcit_a.min(a - r0);
+                    let rxz_t = rxz.block(r0, 0, rh, z);
+                    let mut c0 = 0usize;
+                    while c0 < b {
+                        let cw = self.pcit_b.min(b - c0);
+                        let cxy_t = cxy.block(r0, c0, rh, cw);
+                        let ryz_t = ryz.block(c0, 0, cw, z);
+                        let tile = self.pcit_tile(&cxy_t, &rxz_t, &ryz_t)?;
+                        out.set_block(r0, c0, &tile);
+                        c0 += cw;
+                    }
+                    r0 += rh;
+                }
+                return Ok(out);
+            }
+            let cxy_p = pad_to(cxy, self.pcit_a, self.pcit_b);
+            let mut flags = Matrix::zeros(self.pcit_a, self.pcit_b);
+            let mut z0 = 0usize;
+            while z0 < z {
+                let w = self.pcit_z.min(z - z0);
+                let rxz_c = pad_to(&rxz.block(0, z0, a, w), self.pcit_a, self.pcit_z);
+                let ryz_c = pad_to(&ryz.block(0, z0, b, w), self.pcit_b, self.pcit_z);
+                let part = self.pcit.run(&[&cxy_p, &rxz_c, &ryz_c], self.pcit_a, self.pcit_b)?;
+                for (o, v) in flags.as_mut_slice().iter_mut().zip(part.as_slice()) {
+                    *o = if *o > 0.5 || *v > 0.5 { 1.0 } else { 0.0 };
+                }
+                z0 += w;
+            }
+            Ok(flags.block(0, 0, a, b))
+        }
+    }
+
+    /// Zero-pad `m` to (rows, cols).
+    fn pad_to(m: &Matrix, rows: usize, cols: usize) -> Matrix {
+        if m.shape() == (rows, cols) {
+            m.clone()
+        } else {
+            m.padded(rows, cols, 0.0)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn pad_preserves_content() {
+            let m = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+            let p = pad_to(&m, 4, 5);
+            assert_eq!(p.shape(), (4, 5));
+            assert_eq!(p[(1, 2)], 5.0);
+            assert_eq!(p[(3, 4)], 0.0);
+            assert_eq!(pad_to(&m, 2, 3), m);
+        }
+
+        // XLA-loading tests live in rust/tests/integration_runtime.rs — they
+        // require `make artifacts` to have produced the HLO files.
     }
 }
 
-/// Zero-pad `m` to (rows, cols).
-fn pad_to(m: &Matrix, rows: usize, cols: usize) -> Matrix {
-    if m.shape() == (rows, cols) {
-        m.clone()
-    } else {
-        m.padded(rows, cols, 0.0)
-    }
-}
-
-#[cfg(test)]
+#[cfg(all(test, not(feature = "xla")))]
 mod tests {
     use super::*;
 
     #[test]
-    fn pad_preserves_content() {
-        let m = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
-        let p = pad_to(&m, 4, 5);
-        assert_eq!(p.shape(), (4, 5));
-        assert_eq!(p[(1, 2)], 5.0);
-        assert_eq!(p[(3, 4)], 0.0);
-        assert_eq!(pad_to(&m, 2, 3), m);
+    fn stub_load_errors_cleanly() {
+        let err = XlaBackend::load(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(format!("{err}").contains("xla"), "unexpected: {err}");
     }
-
-    // XLA-loading tests live in rust/tests/integration_runtime.rs — they
-    // require `make artifacts` to have produced the HLO files.
 }

@@ -20,21 +20,26 @@ pub mod engine;
 pub use artifact::{ArtifactManifest, KernelSpec};
 pub use native::NativeBackend;
 
-use crate::util::Matrix;
+use crate::util::{Matrix, MatrixView};
 use std::sync::Arc;
 
 /// Executes the two PCIT tile shapes plus the generic similarity tile.
 /// Implementations must be `Send + Sync`: one executor is shared by all
 /// worker threads (PJRT executables are internally synchronized).
+///
+/// Operands are borrowed [`MatrixView`]s so quorum tiles read straight out
+/// of the rank's standardized matrix — no per-tile operand copies. The
+/// native backend computes in place; the XLA backend copies once at its
+/// channel boundary (PJRT literals need owned buffers anyway).
 pub trait TileExecutor: Send + Sync {
     /// Correlation tile between standardized row blocks:
     /// `za` (A×M) · `zb` (B×M)ᵀ, clamped to [-1, 1]. A, B, M arbitrary.
-    fn corr_tile(&self, za: &Matrix, zb: &Matrix) -> Matrix;
+    fn corr_tile(&self, za: MatrixView<'_>, zb: MatrixView<'_>) -> Matrix;
 
     /// PCIT elimination tile: OR over mediators z of
     /// `trio_eliminates(cxy[x,y], rxz[x,z], ryz[y,z])`.
     /// `cxy`: A×B, `rxz`: A×Z, `ryz`: B×Z → A×B flags as f32 (0.0 / 1.0).
-    fn pcit_tile(&self, cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Matrix;
+    fn pcit_tile(&self, cxy: MatrixView<'_>, rxz: MatrixView<'_>, ryz: MatrixView<'_>) -> Matrix;
 
     /// Human-readable backend name (reports, benches).
     fn name(&self) -> &'static str;

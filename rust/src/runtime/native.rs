@@ -3,10 +3,11 @@
 use super::TileExecutor;
 use crate::pcit::blocked::eliminate_chunk;
 use crate::pcit::correlation::corr_block;
-use crate::util::Matrix;
+use crate::util::{Matrix, MatrixView};
 
 /// Always-available backend computing tiles with the same formulas the
-/// Pallas kernels implement.
+/// Pallas kernels implement. Operates directly on borrowed views — zero
+/// operand copies per tile.
 #[derive(Debug, Default)]
 pub struct NativeBackend;
 
@@ -17,11 +18,11 @@ impl NativeBackend {
 }
 
 impl TileExecutor for NativeBackend {
-    fn corr_tile(&self, za: &Matrix, zb: &Matrix) -> Matrix {
+    fn corr_tile(&self, za: MatrixView<'_>, zb: MatrixView<'_>) -> Matrix {
         corr_block(za, zb)
     }
 
-    fn pcit_tile(&self, cxy: &Matrix, rxz: &Matrix, ryz: &Matrix) -> Matrix {
+    fn pcit_tile(&self, cxy: MatrixView<'_>, rxz: MatrixView<'_>, ryz: MatrixView<'_>) -> Matrix {
         let mask = eliminate_chunk(cxy, rxz, ryz);
         let (a, b) = cxy.shape();
         Matrix::from_vec(a, b, mask.into_iter().map(|m| if m { 1.0 } else { 0.0 }).collect())
@@ -43,10 +44,24 @@ mod tests {
         let mut rng = Rng::new(3);
         let x = Matrix::from_fn(6, 12, |_, _| rng.normal_f32());
         let z = standardize_rows(&x);
-        let a = z.block(0, 0, 3, 12);
-        let b = z.block(3, 0, 3, 12);
+        let a = z.view_block(0, 0, 3, 12);
+        let b = z.view_block(3, 0, 3, 12);
         let be = NativeBackend::new();
-        assert_eq!(be.corr_tile(&a, &b), corr_block(&a, &b));
+        assert_eq!(be.corr_tile(a, b), corr_block(a, b));
+    }
+
+    #[test]
+    fn tile_from_views_equals_tile_from_copies() {
+        // Zero-copy reads out of the standardized matrix must be exactly
+        // the tiles the old copy-then-compute path produced.
+        let mut rng = Rng::new(9);
+        let x = Matrix::from_fn(20, 16, |_, _| rng.normal_f32());
+        let z = standardize_rows(&x);
+        let be = NativeBackend::new();
+        let from_views = be.corr_tile(z.view_block(2, 0, 7, 16), z.view_block(11, 0, 5, 16));
+        let (ca, cb) = (z.block(2, 0, 7, 16), z.block(11, 0, 5, 16));
+        let from_copies = be.corr_tile(ca.view(), cb.view());
+        assert_eq!(from_views.as_slice(), from_copies.as_slice());
     }
 
     #[test]
@@ -56,7 +71,7 @@ mod tests {
         let rxz = Matrix::from_fn(4, 8, |_, _| rng.f32() * 1.6 - 0.8);
         let ryz = Matrix::from_fn(4, 8, |_, _| rng.f32() * 1.6 - 0.8);
         let be = NativeBackend::new();
-        let f = be.pcit_tile(&cxy, &rxz, &ryz);
+        let f = be.pcit_tile(cxy.view(), rxz.view(), ryz.view());
         for &v in f.as_slice() {
             assert!(v == 0.0 || v == 1.0);
         }

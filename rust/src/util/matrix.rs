@@ -1,17 +1,46 @@
-//! Dense row-major `f32` matrix — the core numeric container.
+//! Dense row-major `f32` matrix — the core numeric container — plus
+//! borrowed [`MatrixView`]/[`MatrixViewMut`] windows over it.
 //!
 //! Gene-expression inputs are `N×M` (genes × samples); correlation blocks are
 //! `B×B`. Row-major layout matches both the XLA literal layout used by the
 //! runtime bridge and the cache-friendly row iteration of the native kernels.
+//!
+//! The all-pairs hot path reads quorum tiles *in place* through views
+//! (row offset + stride) instead of copying operand blocks, and the shared
+//! `matmul_nt` kernel is register-tiled and cache-panelled
+//! (EXPERIMENTS.md §Perf). Every kernel keeps each output element's
+//! k-accumulation in strict ascending order, so blocked, pooled, seed and
+//! naive variants are all **bitwise identical** — the invariant that keeps
+//! distributed and single-node results exactly equal.
 
+use crate::pool::ThreadPool;
 use std::fmt;
-use std::ops::{Index, IndexMut};
+use std::ops::{Index, IndexMut, Range};
 
 #[derive(Clone, PartialEq)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
     data: Vec<f32>,
+}
+
+/// Borrowed read-only window into a row-major buffer: `rows × cols`
+/// elements where consecutive rows are `stride` elements apart. Copyable
+/// and cheap — the zero-copy currency of the tile hot path.
+#[derive(Clone, Copy)]
+pub struct MatrixView<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    stride: usize,
+}
+
+/// Borrowed mutable window (same layout rules as [`MatrixView`]).
+pub struct MatrixViewMut<'a> {
+    data: &'a mut [f32],
+    rows: usize,
+    cols: usize,
+    stride: usize,
 }
 
 impl Matrix {
@@ -93,14 +122,40 @@ impl Matrix {
         (self.data.len() * std::mem::size_of::<f32>()) as u64
     }
 
+    /// Zero-copy view of the whole matrix.
+    #[inline]
+    pub fn view(&self) -> MatrixView<'_> {
+        MatrixView { data: &self.data, rows: self.rows, cols: self.cols, stride: self.cols }
+    }
+
+    /// Zero-copy view of the sub-block `[r0..r0+h) × [c0..c0+w)`.
+    #[inline]
+    pub fn view_block(&self, r0: usize, c0: usize, h: usize, w: usize) -> MatrixView<'_> {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        if h == 0 || w == 0 {
+            return MatrixView { data: &[], rows: h, cols: w, stride: 0 };
+        }
+        // Span from the block's first element to the end of its last row.
+        let start = r0 * self.cols + c0;
+        let end = start + (h - 1) * self.cols + w;
+        MatrixView { data: &self.data[start..end], rows: h, cols: w, stride: self.cols }
+    }
+
+    /// Zero-copy view of a contiguous row range (full width).
+    #[inline]
+    pub fn view_rows(&self, r: Range<usize>) -> MatrixView<'_> {
+        self.view_block(r.start, 0, r.len(), self.cols)
+    }
+
+    /// Mutable zero-copy view of the whole matrix.
+    #[inline]
+    pub fn view_mut(&mut self) -> MatrixViewMut<'_> {
+        MatrixViewMut { rows: self.rows, cols: self.cols, stride: self.cols, data: &mut self.data }
+    }
+
     /// Copy a sub-block `[r0..r0+h) × [c0..c0+w)` into a new matrix.
     pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
-        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
-        let mut out = Matrix::zeros(h, w);
-        for r in 0..h {
-            out.row_mut(r).copy_from_slice(&self.row(r0 + r)[c0..c0 + w]);
-        }
-        out
+        self.view_block(r0, c0, h, w).to_matrix()
     }
 
     /// Write a block into this matrix at `(r0, c0)`.
@@ -110,6 +165,39 @@ impl Matrix {
             let dst = r0 + r;
             self.data[dst * self.cols + c0..dst * self.cols + c0 + b.cols]
                 .copy_from_slice(b.row(r));
+        }
+    }
+
+    /// Write `b`'s **transpose** into this matrix at `(r0, c0)` — the
+    /// symmetric-assembly primitive: `self[r0+j][c0+i] = b[i][j]` — without
+    /// materializing a transposed copy of `b`. Processed in 32×32 tiles so
+    /// one side of the scatter always walks contiguous memory.
+    pub fn set_block_transposed(&mut self, r0: usize, c0: usize, b: &Matrix) {
+        self.set_block_transposed_view(r0, c0, b.view());
+    }
+
+    /// View-operand variant of [`Matrix::set_block_transposed`].
+    pub fn set_block_transposed_view(&mut self, r0: usize, c0: usize, b: MatrixView<'_>) {
+        let (bh, bw) = b.shape();
+        assert!(r0 + bw <= self.rows && c0 + bh <= self.cols, "block out of range");
+        const TB: usize = 32;
+        let cols = self.cols;
+        let mut rb = 0;
+        while rb < bh {
+            let rh = TB.min(bh - rb);
+            let mut cb = 0;
+            while cb < bw {
+                let cw = TB.min(bw - cb);
+                for i in rb..rb + rh {
+                    let src = &b.row(i)[cb..cb + cw];
+                    for (jj, &v) in src.iter().enumerate() {
+                        let j = cb + jj;
+                        self.data[(r0 + j) * cols + c0 + i] = v;
+                    }
+                }
+                cb += cw;
+            }
+            rb += rh;
         }
     }
 
@@ -135,26 +223,45 @@ impl Matrix {
         out
     }
 
-    /// Transposed copy.
+    /// Transposed copy, processed in 32×32 tiles so the column-stride walk
+    /// of the destination stays inside one cache-line working set per tile.
     pub fn transpose(&self) -> Matrix {
-        let mut out = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+        const TB: usize = 32;
+        let (n, m) = (self.rows, self.cols);
+        let mut out = Matrix::zeros(m, n);
+        let mut rb = 0;
+        while rb < n {
+            let rh = TB.min(n - rb);
+            let mut cb = 0;
+            while cb < m {
+                let cw = TB.min(m - cb);
+                for r in rb..rb + rh {
+                    let src = &self.data[r * m + cb..r * m + cb + cw];
+                    for (cc, &v) in src.iter().enumerate() {
+                        out.data[(cb + cc) * n + r] = v;
+                    }
+                }
+                cb += cw;
             }
+            rb += rh;
         }
         out
     }
 
     /// Plain `self · otherᵀ` (used for standardized-row correlation:
     /// rows of both operands are observations over the same M columns).
-    ///
-    /// Hot path (EXPERIMENTS.md §Perf): the j dimension is processed four
-    /// rows at a time so each `a[l]` load feeds four independent dot-product
-    /// chains (4× ILP) while every individual dot product still accumulates
-    /// in strict l-order — results are bitwise identical to the naive loop,
-    /// which keeps the single-node and distributed paths exactly consistent.
+    /// Register-tiled and cache-panelled; see [`matmul_nt_into`].
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        matmul_nt_into(self.view(), other.view(), &mut out.view_mut());
+        out
+    }
+
+    /// The seed repo's 4-wide-ILP kernel, kept verbatim for differential
+    /// tests and the `kernel_tiles` speedup baseline. Bitwise identical to
+    /// both [`matmul_nt_reference`] and the blocked [`Matrix::matmul_nt`].
+    #[doc(hidden)]
+    pub fn matmul_nt_seed(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "inner dimension mismatch");
         let (n, m, k) = (self.rows, other.rows, self.cols);
         let mut out = Matrix::zeros(n, m);
@@ -214,6 +321,263 @@ impl Matrix {
     }
 }
 
+impl<'a> MatrixView<'a> {
+    /// View over a contiguous row-major slice (stride = cols).
+    pub fn from_slice(data: &'a [f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        MatrixView { data, rows, cols, stride: cols }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0 || self.cols == 0
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.stride..r * self.stride + self.cols]
+    }
+
+    /// Zero-copy sub-window `[r0..r0+h) × [c0..c0+w)` of this view.
+    #[inline]
+    pub fn sub(&self, r0: usize, c0: usize, h: usize, w: usize) -> MatrixView<'a> {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        if h == 0 || w == 0 {
+            return MatrixView { data: &[], rows: h, cols: w, stride: 0 };
+        }
+        let start = r0 * self.stride + c0;
+        let end = start + (h - 1) * self.stride + w;
+        MatrixView { data: &self.data[start..end], rows: h, cols: w, stride: self.stride }
+    }
+
+    /// Materialize into an owned matrix (the only copying operation here).
+    pub fn to_matrix(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// `self · otherᵀ` into a fresh matrix (see [`matmul_nt_into`]).
+    pub fn matmul_nt(&self, other: MatrixView<'_>) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, other.rows());
+        matmul_nt_into(*self, other, &mut out.view_mut());
+        out
+    }
+}
+
+impl<'a> MatrixViewMut<'a> {
+    /// Mutable view over a contiguous row-major slice (stride = cols).
+    pub fn from_slice(data: &'a mut [f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        MatrixViewMut { data, rows, cols, stride: cols }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.stride..r * self.stride + self.cols]
+    }
+
+    /// Read-only reborrow.
+    #[inline]
+    pub fn as_view(&self) -> MatrixView<'_> {
+        MatrixView { data: self.data, rows: self.rows, cols: self.cols, stride: self.stride }
+    }
+}
+
+// ---------------- the cache-blocked microkernel ----------------
+
+/// Register tile height (A rows per microkernel invocation).
+const MR: usize = 8;
+/// Register tile width (B rows per microkernel invocation).
+const NR: usize = 4;
+/// Cache panel of A rows — one panel's rows stay L2-resident across the
+/// inner j sweep.
+const MC: usize = 64;
+/// Cache panel of B rows — reused across every A row of the i panel.
+const NC: usize = 64;
+
+/// `dst = a · bᵀ` — the shared all-pairs kernel (EXPERIMENTS.md §Perf).
+///
+/// Blocked over i (A rows) and j (B rows) only; the k (inner) dimension is
+/// **never split**: each of the `mr×nr` register accumulators performs its
+/// whole dot product in strict ascending-k order with a single `+=`, so the
+/// result is bitwise identical to the naive triple loop
+/// ([`matmul_nt_reference`]) — the invariant the distributed/single-node
+/// consistency tests pin. Writes into caller-owned storage; allocates
+/// nothing.
+pub fn matmul_nt_into(a: MatrixView<'_>, b: MatrixView<'_>, dst: &mut MatrixViewMut<'_>) {
+    let (n, k) = a.shape();
+    let (m, k2) = b.shape();
+    assert_eq!(k, k2, "inner dimension mismatch");
+    assert_eq!(dst.shape(), (n, m), "output shape mismatch");
+    let mut jp = 0;
+    while jp < m {
+        let jh = NC.min(m - jp);
+        let mut ip = 0;
+        while ip < n {
+            let ih = MC.min(n - ip);
+            let mut i0 = ip;
+            while i0 < ip + ih {
+                let mr = MR.min(ip + ih - i0);
+                let mut j0 = jp;
+                while j0 < jp + jh {
+                    let nr = NR.min(jp + jh - j0);
+                    if mr == MR && nr == NR {
+                        micro_full(a, b, i0, j0, k, dst);
+                    } else {
+                        micro_edge(a, b, i0, j0, mr, nr, k, dst);
+                    }
+                    j0 += nr;
+                }
+                i0 += mr;
+            }
+            ip += ih;
+        }
+        jp += jh;
+    }
+}
+
+/// Full MR×NR register tile: 32 independent strict-k-order accumulators.
+#[inline]
+fn micro_full(a: MatrixView<'_>, b: MatrixView<'_>, i0: usize, j0: usize, k: usize, dst: &mut MatrixViewMut<'_>) {
+    let ar: [&[f32]; MR] = std::array::from_fn(|r| a.row(i0 + r));
+    let br: [&[f32]; NR] = std::array::from_fn(|c| b.row(j0 + c));
+    let mut acc = [[0.0f32; NR]; MR];
+    for l in 0..k {
+        let bv = [br[0][l], br[1][l], br[2][l], br[3][l]];
+        for r in 0..MR {
+            let av = ar[r][l];
+            acc[r][0] += av * bv[0];
+            acc[r][1] += av * bv[1];
+            acc[r][2] += av * bv[2];
+            acc[r][3] += av * bv[3];
+        }
+    }
+    for (r, row_acc) in acc.iter().enumerate() {
+        dst.row_mut(i0 + r)[j0..j0 + NR].copy_from_slice(row_acc);
+    }
+}
+
+/// Ragged-edge tile (`mr ≤ MR`, `nr ≤ NR`): same accumulator discipline.
+fn micro_edge(
+    a: MatrixView<'_>,
+    b: MatrixView<'_>,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+    k: usize,
+    dst: &mut MatrixViewMut<'_>,
+) {
+    let mut ar: [&[f32]; MR] = [&[]; MR];
+    for (r, slot) in ar.iter_mut().enumerate().take(mr) {
+        *slot = a.row(i0 + r);
+    }
+    let mut br: [&[f32]; NR] = [&[]; NR];
+    for (c, slot) in br.iter_mut().enumerate().take(nr) {
+        *slot = b.row(j0 + c);
+    }
+    let mut acc = [[0.0f32; NR]; MR];
+    for l in 0..k {
+        let mut bv = [0.0f32; NR];
+        for c in 0..nr {
+            bv[c] = br[c][l];
+        }
+        for r in 0..mr {
+            let av = ar[r][l];
+            for c in 0..nr {
+                acc[r][c] += av * bv[c];
+            }
+        }
+    }
+    for r in 0..mr {
+        dst.row_mut(i0 + r)[j0..j0 + nr].copy_from_slice(&acc[r][..nr]);
+    }
+}
+
+/// Naive triple-loop `a · bᵀ` — the bitwise reference every optimized
+/// variant must match exactly (pinned by `blocked_matmul_is_bitwise_naive`).
+#[doc(hidden)]
+pub fn matmul_nt_reference(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "inner dimension mismatch");
+    let (n, m, k) = (a.rows(), b.rows(), a.cols());
+    let mut out = Matrix::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            let (ra, rb) = (a.row(i), b.row(j));
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += ra[l] * rb[l];
+            }
+            out[(i, j)] = acc;
+        }
+    }
+    out
+}
+
+/// `a · bᵀ` with A's rows panelled across a thread pool — the per-rank
+/// "OpenMP" path for leader/direct full-matrix products. Each task owns a
+/// disjoint row panel of the output; element results are bitwise identical
+/// to [`Matrix::matmul_nt`] (same kernel, same k order).
+pub fn matmul_nt_pooled(a: &Matrix, b: &Matrix, pool: &ThreadPool) -> Matrix {
+    let (n, k) = a.shape();
+    assert_eq!(k, b.cols(), "inner dimension mismatch");
+    let m = b.rows();
+    let mut out = Matrix::zeros(n, m);
+    {
+        let out_ptr = crate::pool::SendPtr(out.as_mut_slice().as_mut_ptr());
+        pool.parallel_for_chunked(n, |range| {
+            // SAFETY: each task writes a disjoint row range of `out`, and
+            // `out` outlives the blocking parallel_for_chunked call.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.get().add(range.start * m), range.len() * m)
+            };
+            let mut dview = MatrixViewMut::from_slice(dst, range.len(), m);
+            matmul_nt_into(a.view_rows(range), b.view(), &mut dview);
+        });
+    }
+    out
+}
+
 impl Index<(usize, usize)> for Matrix {
     type Output = f32;
     #[inline]
@@ -228,6 +592,15 @@ impl IndexMut<(usize, usize)> for Matrix {
     fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
         debug_assert!(r < self.rows && c < self.cols);
         &mut self.data[r * self.cols + c]
+    }
+}
+
+impl Index<(usize, usize)> for MatrixView<'_> {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.stride + c]
     }
 }
 
@@ -247,9 +620,16 @@ impl fmt::Debug for Matrix {
     }
 }
 
+impl fmt::Debug for MatrixView<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MatrixView {}x{} (stride {})", self.rows, self.cols, self.stride)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Rng;
 
     #[test]
     fn construction_and_index() {
@@ -280,10 +660,70 @@ mod tests {
     }
 
     #[test]
+    fn view_block_matches_copy() {
+        let m = Matrix::from_fn(9, 7, |r, c| (r * 31 + c) as f32);
+        for (r0, c0, h, w) in [(0, 0, 9, 7), (2, 3, 4, 2), (8, 6, 1, 1), (3, 0, 0, 5), (0, 2, 4, 0)] {
+            let v = m.view_block(r0, c0, h, w);
+            let b = m.block(r0, c0, h, w);
+            assert_eq!(v.shape(), b.shape());
+            assert_eq!(v.to_matrix(), b, "view_block({r0},{c0},{h},{w})");
+            for i in 0..h {
+                assert_eq!(v.row(i), b.row(i));
+            }
+        }
+    }
+
+    #[test]
+    fn view_sub_composes() {
+        let m = Matrix::from_fn(10, 10, |r, c| (r * 10 + c) as f32);
+        let outer = m.view_block(1, 2, 8, 7);
+        let inner = outer.sub(2, 1, 3, 4);
+        assert_eq!(inner.to_matrix(), m.block(3, 3, 3, 4));
+        assert_eq!(inner[(0, 0)], m[(3, 3)]);
+    }
+
+    #[test]
+    fn view_rows_is_full_width() {
+        let m = Matrix::from_fn(6, 4, |r, c| (r * 4 + c) as f32);
+        let v = m.view_rows(2..5);
+        assert_eq!(v.shape(), (3, 4));
+        assert_eq!(v.row(0), m.row(2));
+    }
+
+    #[test]
     fn transpose_involution() {
         let m = Matrix::from_fn(3, 5, |r, c| (r * 10 + c) as f32);
         assert_eq!(m.transpose().transpose(), m);
         assert_eq!(m.transpose()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn transpose_blocked_matches_naive_large() {
+        // Shapes straddling the 32×32 tile boundary.
+        let mut rng = Rng::new(41);
+        for (n, m) in [(1usize, 1usize), (31, 33), (32, 32), (70, 45), (33, 96)] {
+            let a = Matrix::from_fn(n, m, |_, _| rng.normal_f32());
+            let t = a.transpose();
+            assert_eq!(t.shape(), (m, n));
+            for r in 0..n {
+                for c in 0..m {
+                    assert_eq!(t[(c, r)], a[(r, c)], "({n},{m}) at ({r},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn set_block_transposed_matches_transpose_copy() {
+        let mut rng = Rng::new(43);
+        for (h, w) in [(1usize, 1usize), (5, 9), (32, 32), (40, 33), (64, 17)] {
+            let b = Matrix::from_fn(h, w, |_, _| rng.normal_f32());
+            let mut direct = Matrix::zeros(w + 3, h + 2);
+            direct.set_block_transposed(3, 2, &b);
+            let mut viacopy = Matrix::zeros(w + 3, h + 2);
+            viacopy.set_block(3, 2, &b.transpose());
+            assert_eq!(direct, viacopy, "shape ({h},{w})");
+        }
     }
 
     #[test]
@@ -304,6 +744,78 @@ mod tests {
         let i = Matrix::eye(4);
         // a · iᵀ = a (i symmetric)
         assert_eq!(a.matmul_nt(&i), a);
+    }
+
+    #[test]
+    fn blocked_matmul_is_bitwise_naive() {
+        // Randomized ragged shapes around every tile/panel boundary —
+        // the strict-k-order invariant means *exact* equality, not epsilon.
+        let mut rng = Rng::new(97);
+        let mut shapes = vec![
+            (0usize, 0usize, 0usize),
+            (0, 3, 5),
+            (3, 0, 5),
+            (1, 1, 0),
+            (1, 1, 1),
+            (7, 3, 11),
+            (8, 4, 16),
+            (9, 5, 17),
+            (63, 65, 33),
+            (64, 64, 64),
+            (65, 63, 100),
+            (130, 70, 129),
+        ];
+        for _ in 0..8 {
+            shapes.push((1 + rng.below(90), 1 + rng.below(90), 1 + rng.below(150)));
+        }
+        for (n, m, k) in shapes {
+            let a = Matrix::from_fn(n, k, |_, _| rng.normal_f32());
+            let b = Matrix::from_fn(m, k, |_, _| rng.normal_f32());
+            let fast = a.matmul_nt(&b);
+            let naive = matmul_nt_reference(&a, &b);
+            let seed = a.matmul_nt_seed(&b);
+            assert_eq!(fast.as_slice(), naive.as_slice(), "blocked != naive ({n},{m},{k})");
+            assert_eq!(seed.as_slice(), naive.as_slice(), "seed != naive ({n},{m},{k})");
+        }
+    }
+
+    #[test]
+    fn matmul_on_views_avoids_copies() {
+        // Tile product straight out of a larger standardized matrix.
+        let mut rng = Rng::new(7);
+        let z = Matrix::from_fn(40, 25, |_, _| rng.normal_f32());
+        let va = z.view_block(3, 0, 12, 25);
+        let vb = z.view_block(20, 0, 9, 25);
+        let from_views = va.matmul_nt(vb);
+        let from_copies = z.block(3, 0, 12, 25).matmul_nt(&z.block(20, 0, 9, 25));
+        assert_eq!(from_views.as_slice(), from_copies.as_slice());
+    }
+
+    #[test]
+    fn matmul_into_writes_caller_scratch() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::from_fn(10, 20, |_, _| rng.normal_f32());
+        let b = Matrix::from_fn(6, 20, |_, _| rng.normal_f32());
+        let mut scratch = vec![7.0f32; 10 * 6];
+        {
+            let mut dst = MatrixViewMut::from_slice(&mut scratch, 10, 6);
+            matmul_nt_into(a.view(), b.view(), &mut dst);
+        }
+        let expect = matmul_nt_reference(&a, &b);
+        assert_eq!(&scratch[..], expect.as_slice());
+    }
+
+    #[test]
+    fn matmul_pooled_is_bitwise_serial() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Rng::new(29);
+        for (n, m, k) in [(1usize, 1usize, 4usize), (33, 17, 40), (100, 64, 31)] {
+            let a = Matrix::from_fn(n, k, |_, _| rng.normal_f32());
+            let b = Matrix::from_fn(m, k, |_, _| rng.normal_f32());
+            let serial = a.matmul_nt(&b);
+            let pooled = matmul_nt_pooled(&a, &b, &pool);
+            assert_eq!(serial.as_slice(), pooled.as_slice(), "({n},{m},{k})");
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod timer;
 pub mod bytes;
 pub mod matrix;
 
-pub use matrix::Matrix;
+pub use matrix::{matmul_nt_into, matmul_nt_pooled, Matrix, MatrixView, MatrixViewMut};
 pub use prng::Rng;
 
 /// Integer ceiling division.

@@ -1,9 +1,10 @@
-//! Integration: the XLA/PJRT backend vs the native reference, and a full
-//! distributed run on the XLA backend.
+//! Integration: the XLA/PJRT backend vs the native reference, a full
+//! distributed run on the XLA backend, and view-vs-copy equivalence for
+//! every `TileExecutor` path.
 //!
-//! These tests need `make artifacts` (they are skipped with a message when
-//! `artifacts/manifest.json` is absent, so `cargo test` stays green on a
-//! fresh checkout).
+//! The XLA tests need `make artifacts` and a `--features xla` build (they
+//! are skipped with a message when `artifacts/manifest.json` is absent, so
+//! `cargo test` stays green on a fresh checkout).
 
 use quorall::config::{BackendKind, PcitMode, RunConfig};
 use quorall::coordinator::{run_distributed_pcit, run_single_node};
@@ -28,10 +29,74 @@ fn rand_corr(rng: &mut Rng, r: usize, c: usize) -> Matrix {
     Matrix::from_fn(r, c, |_, _| rng.f32() * 1.9 - 0.95)
 }
 
+/// Both tile paths, computed from borrowed views of one backing matrix vs
+/// from materialized copies, must agree exactly for any executor.
+fn assert_view_copy_equivalence(exec: &dyn TileExecutor) {
+    let mut rng = Rng::new(71);
+    // corr path: standardized backing matrix, tiles from ragged offsets.
+    let x = Matrix::from_fn(50, 33, |_, _| rng.normal_f32());
+    let z = standardize_rows(&x);
+    for (r0, h, r1, w) in [(0usize, 13usize, 13usize, 17usize), (5, 8, 30, 20), (49, 1, 0, 1)] {
+        let via_views = exec.corr_tile(z.view_block(r0, 0, h, 33), z.view_block(r1, 0, w, 33));
+        let (ca, cb) = (z.block(r0, 0, h, 33), z.block(r1, 0, w, 33));
+        let via_copies = exec.corr_tile(ca.view(), cb.view());
+        assert_eq!(
+            via_views.as_slice(),
+            via_copies.as_slice(),
+            "{}: corr tile views != copies at ({r0},{h},{r1},{w})",
+            exec.name()
+        );
+    }
+    // pcit path: a correlation-like backing matrix, windows vs copies.
+    let c = rand_corr(&mut rng, 24, 40);
+    let cxy_v = c.view_block(0, 8, 10, 12);
+    let rxz_v = c.view_block(0, 0, 10, 40);
+    let ryz_v = c.view_block(12, 0, 12, 40);
+    let via_views = exec.pcit_tile(cxy_v, rxz_v, ryz_v);
+    let (cc, rr, yy) = (c.block(0, 8, 10, 12), c.block(0, 0, 10, 40), c.block(12, 0, 12, 40));
+    let via_copies = exec.pcit_tile(cc.view(), rr.view(), yy.view());
+    assert_eq!(
+        via_views.as_slice(),
+        via_copies.as_slice(),
+        "{}: pcit tile views != copies",
+        exec.name()
+    );
+}
+
+#[test]
+fn native_view_copy_equivalence() {
+    assert_view_copy_equivalence(&NativeBackend::new());
+}
+
+#[test]
+fn xla_view_copy_equivalence() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = match executor_for(BackendKind::Xla, dir) {
+        Ok(e) => e,
+        // Without the feature the stub always errors — skip; with it,
+        // a load failure is a real regression and must fail loudly.
+        Err(e) if !cfg!(feature = "xla") => {
+            eprintln!("skipping XLA integration test: {e:#}");
+            return;
+        }
+        Err(e) => panic!("load artifacts: {e:#}"),
+    };
+    assert_view_copy_equivalence(xla.as_ref());
+}
+
 #[test]
 fn xla_corr_matches_native() {
     let Some(dir) = artifacts_dir() else { return };
-    let xla = executor_for(BackendKind::Xla, dir).expect("load artifacts");
+    let xla = match executor_for(BackendKind::Xla, dir) {
+        Ok(e) => e,
+        // Without the feature the stub always errors — skip; with it,
+        // a load failure is a real regression and must fail loudly.
+        Err(e) if !cfg!(feature = "xla") => {
+            eprintln!("skipping XLA integration test: {e:#}");
+            return;
+        }
+        Err(e) => panic!("load artifacts: {e:#}"),
+    };
     let native = NativeBackend::new();
     let mut rng = Rng::new(5);
     // Mix of exact-fit, padded, and chunked shapes.
@@ -40,8 +105,8 @@ fn xla_corr_matches_native() {
         let y = Matrix::from_fn(b, m, |_, _| rng.normal_f32());
         let za = standardize_rows(&x);
         let zb = standardize_rows(&y);
-        let got = xla.corr_tile(&za, &zb);
-        let want = native.corr_tile(&za, &zb);
+        let got = xla.corr_tile(za.view(), zb.view());
+        let want = native.corr_tile(za.view(), zb.view());
         assert_eq!(got.shape(), want.shape());
         let diff = got.max_abs_diff(&want);
         assert!(diff < 1e-5, "corr tile ({a},{b},m={m}) diff {diff}");
@@ -51,15 +116,24 @@ fn xla_corr_matches_native() {
 #[test]
 fn xla_pcit_matches_native() {
     let Some(dir) = artifacts_dir() else { return };
-    let xla = executor_for(BackendKind::Xla, dir).expect("load artifacts");
+    let xla = match executor_for(BackendKind::Xla, dir) {
+        Ok(e) => e,
+        // Without the feature the stub always errors — skip; with it,
+        // a load failure is a real regression and must fail loudly.
+        Err(e) if !cfg!(feature = "xla") => {
+            eprintln!("skipping XLA integration test: {e:#}");
+            return;
+        }
+        Err(e) => panic!("load artifacts: {e:#}"),
+    };
     let native = NativeBackend::new();
     let mut rng = Rng::new(11);
     for (a, b, z) in [(128usize, 128usize, 128usize), (64, 64, 64), (50, 70, 200), (128, 128, 1000), (10, 5, 7)] {
         let cxy = rand_corr(&mut rng, a, b);
         let rxz = rand_corr(&mut rng, a, z);
         let ryz = rand_corr(&mut rng, b, z);
-        let got = xla.pcit_tile(&cxy, &rxz, &ryz);
-        let want = native.pcit_tile(&cxy, &rxz, &ryz);
+        let got = xla.pcit_tile(cxy.view(), rxz.view(), ryz.view());
+        let want = native.pcit_tile(cxy.view(), rxz.view(), ryz.view());
         assert_eq!(
             got.as_slice(),
             want.as_slice(),
@@ -71,7 +145,16 @@ fn xla_pcit_matches_native() {
 #[test]
 fn xla_distributed_run_matches_single_node() {
     let Some(dir) = artifacts_dir() else { return };
-    let exec = executor_for(BackendKind::Xla, dir).expect("load artifacts");
+    let exec = match executor_for(BackendKind::Xla, dir) {
+        Ok(e) => e,
+        // Without the feature the stub always errors — skip; with it,
+        // a load failure is a real regression and must fail loudly.
+        Err(e) if !cfg!(feature = "xla") => {
+            eprintln!("skipping XLA integration test: {e:#}");
+            return;
+        }
+        Err(e) => panic!("load artifacts: {e:#}"),
+    };
     let d = ExpressionDataset::generate(SyntheticSpec {
         genes: 96,
         samples: 24,
@@ -93,7 +176,16 @@ fn xla_distributed_run_matches_single_node() {
 #[test]
 fn xla_backend_is_shareable_across_threads() {
     let Some(dir) = artifacts_dir() else { return };
-    let exec = executor_for(BackendKind::Xla, dir).expect("load artifacts");
+    let exec = match executor_for(BackendKind::Xla, dir) {
+        Ok(e) => e,
+        // Without the feature the stub always errors — skip; with it,
+        // a load failure is a real regression and must fail loudly.
+        Err(e) if !cfg!(feature = "xla") => {
+            eprintln!("skipping XLA integration test: {e:#}");
+            return;
+        }
+        Err(e) => panic!("load artifacts: {e:#}"),
+    };
     let mut handles = Vec::new();
     for t in 0..4u64 {
         let e = exec.clone();
@@ -101,7 +193,7 @@ fn xla_backend_is_shareable_across_threads() {
             let mut rng = Rng::new(t);
             let x = Matrix::from_fn(64, 32, |_, _| rng.normal_f32());
             let za = standardize_rows(&x);
-            let tile = e.corr_tile(&za, &za);
+            let tile = e.corr_tile(za.view(), za.view());
             // Diagonal of a self-correlation is 1.
             for i in 0..64 {
                 assert!((tile[(i, i)] - 1.0).abs() < 1e-4);
