@@ -7,7 +7,7 @@
 //! the `comm_volume` bench cross-checks the model against those counters.
 
 use super::decomposition::{ceil_sqrt, DecompositionKind};
-use crate::quorum::CyclicQuorumSet;
+use crate::quorum::{CyclicQuorumSet, GridQuorumSet};
 use crate::util::ceil_div;
 
 /// Elements received per process during initial data distribution
@@ -21,6 +21,9 @@ pub fn distribution_recv_per_process(kind: DecompositionKind, n: usize, p: usize
         DecompositionKind::CyclicQuorum => {
             let q = CyclicQuorumSet::for_processes(p).expect("quorum set");
             q.quorum_size() * ceil_div(n, p)
+        }
+        DecompositionKind::GridQuorum => {
+            GridQuorumSet::for_processes(p).max_quorum_size() * ceil_div(n, p)
         }
     }
 }
@@ -44,7 +47,9 @@ pub fn sweep_recv_per_process(kind: DecompositionKind, n: usize, p: usize) -> us
             let shifts = (p / (c * c).max(1)).max(1);
             2 * ceil_div(c * n, p) * shifts
         }
-        DecompositionKind::CyclicQuorum => 0,
+        // Quorum-style placements hold every pair they own locally: no
+        // sweep traffic (grid pays more replication for the same property).
+        DecompositionKind::CyclicQuorum | DecompositionKind::GridQuorum => 0,
     }
 }
 
@@ -80,6 +85,7 @@ pub fn comparison_table(n: usize, p: usize) -> Vec<CommRow> {
         DecompositionKind::Atom,
         DecompositionKind::Force,
         DecompositionKind::CyclicQuorum,
+        DecompositionKind::GridQuorum,
     ];
     // c-replication at c = sqrt(P) when it divides P.
     let r = ceil_sqrt(p);
@@ -143,6 +149,7 @@ mod tests {
         assert!(kinds.contains(&"atom"));
         assert!(kinds.contains(&"force"));
         assert!(kinds.contains(&"cyclic-quorum"));
+        assert!(kinds.contains(&"grid-quorum"));
         assert!(kinds.iter().any(|k| k.starts_with("c-replication")));
         for row in &t {
             assert_eq!(row.total, row.distribution + row.sweep);

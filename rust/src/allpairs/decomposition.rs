@@ -7,14 +7,15 @@
 //! which element-pair work does it perform? We express element counts per
 //! process (memory) — the comm models live in [`super::comm`].
 
-use crate::quorum::CyclicQuorumSet;
+use crate::quorum::{CyclicQuorumSet, GridQuorumSet, QuorumSystem, Strategy};
 use crate::util::{ceil_div, isqrt};
+use std::sync::Arc;
 
 /// Which decomposition strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DecompositionKind {
     /// Every process holds all N elements (all-data / generalized framework
-    /// of Moretti et al.); work split by pair ranges.
+    /// of Moretti et al. — full replication); work split by pair ranges.
     AllData,
     /// Atom decomposition: process i owns N/P elements, needs all others'
     /// elements communicated each step (c = 1 in Driscoll's terms).
@@ -27,6 +28,9 @@ pub enum DecompositionKind {
     CReplication(usize),
     /// This paper: one array of k·N/P elements (k = cyclic quorum size).
     CyclicQuorum,
+    /// Maekawa grid placement (dual-array baseline): one array of up to
+    /// ~2√P blocks per process — the placement the paper beats by ≤ 50 %.
+    GridQuorum,
 }
 
 impl DecompositionKind {
@@ -37,6 +41,7 @@ impl DecompositionKind {
             DecompositionKind::Force => "force".into(),
             DecompositionKind::CReplication(c) => format!("c-replication(c={c})"),
             DecompositionKind::CyclicQuorum => "cyclic-quorum".into(),
+            DecompositionKind::GridQuorum => "grid-quorum".into(),
         }
     }
 }
@@ -47,14 +52,15 @@ pub struct Decomposition {
     pub kind: DecompositionKind,
     pub n: usize,
     pub p: usize,
-    /// Quorum set when kind = CyclicQuorum.
-    pub quorum: Option<CyclicQuorumSet>,
+    /// Placement when kind is CyclicQuorum / GridQuorum.
+    pub quorum: Option<Arc<dyn QuorumSystem>>,
 }
 
 impl Decomposition {
     pub fn new(kind: DecompositionKind, n: usize, p: usize) -> anyhow::Result<Self> {
-        let quorum = match kind {
-            DecompositionKind::CyclicQuorum => Some(CyclicQuorumSet::for_processes(p)?),
+        let quorum: Option<Arc<dyn QuorumSystem>> = match kind {
+            DecompositionKind::CyclicQuorum => Some(Arc::new(CyclicQuorumSet::for_processes(p)?)),
+            DecompositionKind::GridQuorum => Some(Arc::new(GridQuorumSet::for_processes(p))),
             _ => None,
         };
         if let DecompositionKind::CReplication(c) = kind {
@@ -62,6 +68,17 @@ impl Decomposition {
             anyhow::ensure!(p % c == 0, "c-replication requires c | P (got c={c}, P={p})");
         }
         Ok(Self { kind, n, p, quorum })
+    }
+
+    /// Decomposition matching a runtime placement [`Strategy`], so the
+    /// memory model and the engine talk about the same placements.
+    pub fn from_strategy(strategy: Strategy, n: usize, p: usize) -> anyhow::Result<Self> {
+        let kind = match strategy {
+            Strategy::Cyclic => DecompositionKind::CyclicQuorum,
+            Strategy::Grid => DecompositionKind::GridQuorum,
+            Strategy::Full => DecompositionKind::AllData,
+        };
+        Self::new(kind, n, p)
     }
 
     /// Elements a single process must hold in memory.
@@ -81,9 +98,9 @@ impl Decomposition {
                 // P/c teams holds 2 arrays of c·N/P elements.
                 2 * ceil_div(c * n, p)
             }
-            DecompositionKind::CyclicQuorum => {
-                let q = self.quorum.as_ref().expect("quorum set present");
-                q.quorum_size() * ceil_div(n, p)
+            DecompositionKind::CyclicQuorum | DecompositionKind::GridQuorum => {
+                let q = self.quorum.as_ref().expect("placement present");
+                q.max_quorum_size() * ceil_div(n, p)
             }
         }
     }
@@ -163,5 +180,18 @@ mod tests {
     fn names() {
         assert_eq!(DecompositionKind::CyclicQuorum.name(), "cyclic-quorum");
         assert_eq!(DecompositionKind::CReplication(4).name(), "c-replication(c=4)");
+        assert_eq!(DecompositionKind::GridQuorum.name(), "grid-quorum");
+    }
+
+    #[test]
+    fn strategy_mapping_orders_memory() {
+        // The paper's Fig. 2-R ordering: cyclic < grid (dual array) < full.
+        let (n, p) = (1600, 8);
+        let cyc = Decomposition::from_strategy(Strategy::Cyclic, n, p).unwrap();
+        let grid = Decomposition::from_strategy(Strategy::Grid, n, p).unwrap();
+        let full = Decomposition::from_strategy(Strategy::Full, n, p).unwrap();
+        assert!(cyc.elements_per_process() < grid.elements_per_process());
+        assert!(grid.elements_per_process() < full.elements_per_process());
+        assert_eq!(full.elements_per_process(), n);
     }
 }

@@ -6,7 +6,7 @@
 //! pairs per process should be flat (the paper's "equal work" requirement).
 
 use super::PairTask;
-use crate::quorum::CyclicQuorumSet;
+use crate::quorum::QuorumSystem;
 
 /// Owner-selection policy (ablation: `cargo bench --bench ablations`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,11 +50,19 @@ pub struct PairAssignment {
 }
 
 impl PairAssignment {
-    /// Assign all P(P+1)/2 pairs using `policy`.
+    /// Assign all P(P+1)/2 pairs using `policy`, over any placement.
     ///
-    /// Panics only if the quorum set violates the all-pairs property (which
-    /// `CyclicQuorumSet` construction already guarantees against).
-    pub fn build(q: &CyclicQuorumSet, policy: OwnerPolicy) -> Self {
+    /// Panics only if the placement violates the all-pairs property (which
+    /// `CyclicQuorumSet` construction already guarantees against; grid and
+    /// other placements should go through [`Self::try_build`]).
+    pub fn build(q: &dyn QuorumSystem, policy: OwnerPolicy) -> Self {
+        Self::try_build(q, policy)
+            .unwrap_or_else(|e| panic!("all-pairs property violated — invalid placement: {e}"))
+    }
+
+    /// Fallible [`Self::build`]: a clean error when the placement leaves a
+    /// pair unhosted (possible for ragged grid placements).
+    pub fn try_build(q: &dyn QuorumSystem, policy: OwnerPolicy) -> anyhow::Result<Self> {
         let p = q.processes();
         let n_pairs = crate::util::pairs_with_self(p);
         let mut owners = vec![usize::MAX; n_pairs];
@@ -62,9 +70,10 @@ impl PairAssignment {
         for a in 0..p {
             for b in a..p {
                 let hosts = q.pair_hosts(a, b);
-                assert!(
+                anyhow::ensure!(
                     !hosts.is_empty(),
-                    "all-pairs property violated for ({a},{b}) — invalid quorum set"
+                    "pair ({a},{b}) is hosted by no process under the {} placement (P = {p})",
+                    q.name()
                 );
                 let owner = match policy {
                     OwnerPolicy::First => hosts[0],
@@ -77,7 +86,7 @@ impl PairAssignment {
                 load[owner] += 1;
             }
         }
-        Self { p, owners, load }
+        Ok(Self { p, owners, load })
     }
 
     #[inline]
@@ -127,7 +136,7 @@ impl PairAssignment {
     }
 
     /// Invariant check: every pair owned exactly once, by a hosting process.
-    pub fn verify(&self, q: &CyclicQuorumSet) -> Result<(), String> {
+    pub fn verify(&self, q: &dyn QuorumSystem) -> Result<(), String> {
         if q.processes() != self.p {
             return Err("process count mismatch".into());
         }
@@ -167,7 +176,7 @@ pub struct RedundantAssignment {
 }
 
 impl RedundantAssignment {
-    pub fn build(q: &CyclicQuorumSet, r: usize) -> Self {
+    pub fn build(q: &dyn QuorumSystem, r: usize) -> Self {
         assert!(r >= 1);
         let p = q.processes();
         let n_pairs = crate::util::pairs_with_self(p);

@@ -1,6 +1,14 @@
-//! Example application domains built on the all-pairs engine: the paper's
-//! introduction motivates n-body (§1, molecular dynamics) and biometric
-//! similarity matrices [2]; both reuse the quorum ownership machinery.
+//! Application plugins for the distributed all-pairs engine.
+//!
+//! The engine (`coordinator::run_app`) is app-agnostic; everything
+//! domain-specific lives here as [`crate::coordinator::DistributedApp`]
+//! implementations: [`pcit`] (the paper's §5 experiment), [`similarity`]
+//! (biometric all-pairs similarity, §1 [2]) and [`nbody`] (molecular-
+//! dynamics-style force accumulation, §1). All three run under any
+//! placement strategy (`--strategy {cyclic,grid,full}`).
 
 pub mod nbody;
+pub mod pcit;
 pub mod similarity;
+
+pub use pcit::{DistMode, PcitApp};

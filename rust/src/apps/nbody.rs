@@ -8,10 +8,15 @@
 //! blocks' partial forces.
 
 use crate::allpairs::{OwnerPolicy, PairAssignment};
+use crate::coordinator::app::{DistributedApp, WorkerCtx};
+use crate::coordinator::driver::{run_app, EngineOptions, EngineReport};
+use crate::coordinator::messages::{BlockData, Payload};
 use crate::data::Partition;
 use crate::pool::ThreadPool;
-use crate::quorum::CyclicQuorumSet;
+use crate::quorum::Strategy;
 use crate::util::prng::Rng;
+use crate::util::timer::ThreadCpuTimer;
+use std::sync::Arc;
 
 /// Particle system state (structure-of-arrays).
 #[derive(Clone, Debug)]
@@ -70,31 +75,35 @@ fn dist2(a: [f64; 3], b: [f64; 3]) -> f64 {
     dx * dx + dy * dy + dz * dz
 }
 
-/// Pairwise force accumulation between two index ranges (a == b handled by
-/// computing each unordered pair once and symmetrizing). Returns
-/// (forces_on_a, forces_on_b) — both must be reduced by the caller.
-fn block_pair_forces(
-    bodies: &Bodies,
-    ra: std::ops::Range<usize>,
-    rb: std::ops::Range<usize>,
+/// Pairwise force accumulation between two particle slices. `diag` means
+/// the slices are the *same* block: each unordered pair is computed once
+/// and symmetrized (Newton's third law). Returns (forces_on_a, forces_on_b)
+/// — both must be reduced by the caller. This is the block kernel every
+/// path (single-node, pooled, distributed worker) shares, so numerics are
+/// identical across them.
+fn pair_forces(
+    mass_a: &[f64],
+    pos_a: &[[f64; 3]],
+    mass_b: &[f64],
+    pos_b: &[[f64; 3]],
+    diag: bool,
 ) -> (Vec<[f64; 3]>, Vec<[f64; 3]>) {
-    let diag = ra == rb;
-    let mut fa = vec![[0.0; 3]; ra.len()];
-    let mut fb = vec![[0.0; 3]; rb.len()];
-    for (ii, i) in ra.clone().enumerate() {
-        let pi = bodies.pos[i];
-        let mi = bodies.mass[i];
-        for (jj, j) in rb.clone().enumerate() {
-            if diag && j <= i {
+    let mut fa = vec![[0.0; 3]; mass_a.len()];
+    let mut fb = vec![[0.0; 3]; mass_b.len()];
+    for ii in 0..mass_a.len() {
+        let pi = pos_a[ii];
+        let mi = mass_a[ii];
+        for jj in 0..mass_b.len() {
+            if diag && jj <= ii {
                 continue;
             }
-            let pj = bodies.pos[j];
+            let pj = pos_b[jj];
             let dx = pj[0] - pi[0];
             let dy = pj[1] - pi[1];
             let dz = pj[2] - pi[2];
             let r2 = dx * dx + dy * dy + dz * dz + SOFTENING * SOFTENING;
             let inv_r3 = 1.0 / (r2 * r2.sqrt());
-            let s = G * mi * bodies.mass[j] * inv_r3;
+            let s = G * mi * mass_b[jj] * inv_r3;
             fa[ii][0] += s * dx;
             fa[ii][1] += s * dy;
             fa[ii][2] += s * dz;
@@ -104,6 +113,22 @@ fn block_pair_forces(
         }
     }
     (fa, fb)
+}
+
+/// [`pair_forces`] over index ranges of a full particle system.
+fn block_pair_forces(
+    bodies: &Bodies,
+    ra: std::ops::Range<usize>,
+    rb: std::ops::Range<usize>,
+) -> (Vec<[f64; 3]>, Vec<[f64; 3]>) {
+    let diag = ra == rb;
+    pair_forces(
+        &bodies.mass[ra.clone()],
+        &bodies.pos[ra],
+        &bodies.mass[rb.clone()],
+        &bodies.pos[rb],
+        diag,
+    )
 }
 
 /// Direct O(n²) forces — the reference.
@@ -123,8 +148,20 @@ pub fn forces_quorum(
     ranks: usize,
     pool: &ThreadPool,
 ) -> anyhow::Result<Vec<[f64; 3]>> {
-    let q = CyclicQuorumSet::for_processes(ranks)?;
-    let assignment = PairAssignment::build(&q, OwnerPolicy::LeastLoaded);
+    forces_placement(bodies, ranks, Strategy::Cyclic, pool)
+}
+
+/// [`forces_quorum`] under any placement strategy (in-process pooled path;
+/// the real distributed path with comm/memory stats is
+/// [`run_distributed_nbody`]).
+pub fn forces_placement(
+    bodies: &Bodies,
+    ranks: usize,
+    strategy: Strategy,
+    pool: &ThreadPool,
+) -> anyhow::Result<Vec<[f64; 3]>> {
+    let q = strategy.build(ranks)?;
+    let assignment = PairAssignment::try_build(q.as_ref(), OwnerPolicy::LeastLoaded)?;
     let part = Partition::new(bodies.n, ranks);
     type Partial = (std::ops::Range<usize>, Vec<[f64; 3]>);
     let partials: Vec<Vec<Partial>> = pool.parallel_map(ranks, |rank| {
@@ -153,6 +190,91 @@ pub fn forces_quorum(
         }
     }
     Ok(forces)
+}
+
+/// N-body force accumulation as an engine plugin: each rank holds its
+/// placement's particle blocks (f64 mass + position SoA), computes the
+/// block-pair forces it owns, and ships per-block partial forces to the
+/// leader for the deterministic reduce.
+pub struct NbodyApp {
+    mass: Vec<f64>,
+    pos: Vec<[f64; 3]>,
+}
+
+impl NbodyApp {
+    pub fn new(bodies: &Bodies) -> Self {
+        Self { mass: bodies.mass.clone(), pos: bodies.pos.clone() }
+    }
+}
+
+impl DistributedApp for NbodyApp {
+    fn name(&self) -> &'static str {
+        "nbody"
+    }
+
+    fn elements(&self) -> usize {
+        self.mass.len()
+    }
+
+    fn make_block(&self, range: std::ops::Range<usize>) -> BlockData {
+        BlockData::Bodies {
+            mass: self.mass[range.clone()].to_vec(),
+            pos: self.pos[range].to_vec(),
+        }
+    }
+
+    fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+        let tasks = std::mem::take(&mut ctx.tasks);
+        let sw = ThreadCpuTimer::start();
+        let mut partials: Vec<(usize, Vec<[f64; 3]>)> = Vec::new();
+        for t in &tasks {
+            let (ma, pa) = ctx.block_bodies(t.a);
+            let (mb, pb) = ctx.block_bodies(t.b);
+            if ma.is_empty() && mb.is_empty() {
+                continue;
+            }
+            let (fa, fb) = pair_forces(ma, pa, mb, pb, t.a == t.b);
+            ctx.corr_tiles += 1;
+            // Partial-force buffers are held until the single Result send —
+            // account them so the placement memory comparison sees the same
+            // working-set definition as the other plugins.
+            ctx.mem.alloc(((fa.len() + fb.len()) * 24) as u64);
+            partials.push((ctx.block_range(t.a).start, fa));
+            partials.push((ctx.block_range(t.b).start, fb));
+        }
+        ctx.phase1_secs = sw.elapsed_secs();
+        Some(Payload::Forces(partials))
+    }
+}
+
+/// Run one force computation on the distributed engine and reduce the
+/// per-rank partials at the leader (rank-ascending, task order — the same
+/// deterministic order as [`forces_quorum`], so the cyclic result is
+/// bitwise identical to the pooled path). Returns forces plus the engine
+/// report with measured per-rank comm/memory stats.
+pub fn run_distributed_nbody(
+    bodies: &Bodies,
+    opts: &EngineOptions,
+) -> anyhow::Result<(Vec<[f64; 3]>, EngineReport)> {
+    let app = Arc::new(NbodyApp::new(bodies));
+    let rep = run_app(app, opts)?;
+    let mut forces = vec![[0.0; 3]; bodies.n];
+    for (rank, payload) in &rep.results {
+        match payload {
+            Payload::Forces(parts) => {
+                for (start, fs) in parts {
+                    for (off, f) in fs.iter().enumerate() {
+                        let i = start + off;
+                        forces[i][0] += f[0];
+                        forces[i][1] += f[1];
+                        forces[i][2] += f[2];
+                    }
+                }
+            }
+            other => anyhow::bail!("nbody: rank {rank} returned {} payload", other.kind()),
+        }
+    }
+    Ok((forces, rep))
 }
 
 /// One leapfrog (kick-drift) half: kick velocities by dt/2, drift positions.
@@ -185,11 +307,40 @@ pub fn simulate(
     dt: f64,
     pool: &ThreadPool,
 ) -> anyhow::Result<f64> {
+    simulate_placement(bodies, ranks, Strategy::Cyclic, steps, dt, pool)
+}
+
+/// [`simulate`] with forces decomposed under any placement strategy.
+pub fn simulate_placement(
+    bodies: &mut Bodies,
+    ranks: usize,
+    strategy: Strategy,
+    steps: usize,
+    dt: f64,
+    pool: &ThreadPool,
+) -> anyhow::Result<f64> {
+    let initial = forces_placement(bodies, ranks, strategy, pool)?;
+    simulate_with_initial_forces(bodies, ranks, strategy, steps, dt, pool, initial)
+}
+
+/// Continue a leapfrog run whose current-position forces are already known
+/// (e.g. from a distributed engine pass) — avoids recomputing the first
+/// O(n²) force pass. Returns relative energy drift |E_end − E_0| / |E_0|.
+pub fn simulate_with_initial_forces(
+    bodies: &mut Bodies,
+    ranks: usize,
+    strategy: Strategy,
+    steps: usize,
+    dt: f64,
+    pool: &ThreadPool,
+    initial: Vec<[f64; 3]>,
+) -> anyhow::Result<f64> {
+    anyhow::ensure!(initial.len() == bodies.n, "initial forces must cover every body");
     let e0 = bodies.total_energy();
-    let mut forces = forces_quorum(bodies, ranks, pool)?;
+    let mut forces = initial;
     for _ in 0..steps {
         leapfrog_step(bodies, dt, &forces);
-        forces = forces_quorum(bodies, ranks, pool)?;
+        forces = forces_placement(bodies, ranks, strategy, pool)?;
         leapfrog_finish(bodies, dt, &forces);
     }
     let e1 = bodies.total_energy();
@@ -214,6 +365,25 @@ mod tests {
                         "ranks={ranks} body {i} dim {d}: {} vs {}",
                         q[i][d],
                         direct[i][d]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn placement_choice_matches_direct() {
+        let b = Bodies::random(48, 21);
+        let pool = ThreadPool::new(2);
+        let direct = forces_direct(&b);
+        for s in Strategy::all() {
+            let f = forces_placement(&b, 8, s, &pool).unwrap();
+            for i in 0..b.n {
+                for d in 0..3 {
+                    assert!(
+                        (f[i][d] - direct[i][d]).abs() < 1e-9 * (1.0 + direct[i][d].abs()),
+                        "strategy {} body {i} dim {d}",
+                        s.name()
                     );
                 }
             }

@@ -1,0 +1,353 @@
+//! PCIT as an engine plugin — the first [`DistributedApp`].
+//!
+//! The distributed protocol is unchanged from the pre-plugin coordinator
+//! (and remains bitwise-identical to the single-node algorithm under any
+//! placement with the all-pairs property):
+//!
+//! * **Exact mode**: phase 1 computes owned correlation tiles (zero-copy
+//!   reads out of the quorum blocks) and routes them to row-home ranks;
+//!   phase 1b assembles the rank's row block `C[my_block, 0..N]`; after the
+//!   leader barrier, phase 2 ring-exchanges row blocks and runs the PCIT
+//!   elimination scan on owned edge blocks.
+//! * **Local mode** (ablation): the tolerance scan is restricted to the
+//!   owner's quorum genes; no inter-worker exchange, which is what makes it
+//!   usable for redundant/failure-tolerant runs.
+
+use crate::coordinator::app::{DistributedApp, WorkerCtx};
+use crate::coordinator::messages::{BlockData, Payload};
+use crate::runtime::{flags_to_mask, Executor};
+use crate::util::timer::ThreadCpuTimer;
+use crate::util::Matrix;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Which distributed PCIT protocol to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistMode {
+    /// Quorum-exact: tiles → row homes → ring scan (bitwise single-node).
+    Exact,
+    /// Quorum-local: mediators restricted to the owner's quorum (ablation).
+    Local,
+}
+
+/// The PCIT plugin: standardized expression rows + tile executor + knobs.
+pub struct PcitApp {
+    /// Standardized N×M expression matrix (leader side; workers see blocks).
+    z: Matrix,
+    exec: Executor,
+    mode: DistMode,
+    /// true = full PCIT elimination; false = |r| >= threshold cut.
+    use_pcit: bool,
+    threshold: f32,
+}
+
+impl PcitApp {
+    pub fn new(z: Matrix, exec: Executor, mode: DistMode, use_pcit: bool, threshold: f32) -> Self {
+        Self { z, exec, mode, use_pcit, threshold }
+    }
+
+    /// ---- Exact mode: tiles → row homes → ring scan. ----
+    fn run_exact(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+        let me = ctx.my_block;
+        let p = ctx.plan.p;
+        let tasks = std::mem::take(&mut ctx.tasks);
+
+        // Phase timings count *compute* only (executor calls + edge
+        // extraction), not blocking receives: on a testbed with fewer cores
+        // than ranks, recv-wait time is other ranks' compute and would
+        // double-count into the critical path.
+        let sw = ThreadCpuTimer::start();
+        // Phase 1: compute owned correlation tiles (zero-copy reads out of
+        // the quorum blocks), route to row homes. Off-diagonal tiles ship
+        // the *same* buffer to both homes — the column home applies it
+        // transposed on write instead of receiving a transposed copy.
+        for t in &tasks {
+            let tile = Arc::new(self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view()));
+            ctx.corr_tiles += 1;
+            if t.a == t.b {
+                ctx.send_to_rank(t.a, Payload::CorrTile {
+                    rows_block: t.a,
+                    cols_block: t.b,
+                    transposed: false,
+                    tile,
+                });
+            } else {
+                ctx.send_to_rank(t.a, Payload::CorrTile {
+                    rows_block: t.a,
+                    cols_block: t.b,
+                    transposed: false,
+                    tile: Arc::clone(&tile),
+                });
+                ctx.send_to_rank(t.b, Payload::CorrTile {
+                    rows_block: t.b,
+                    cols_block: t.a,
+                    transposed: true,
+                    tile,
+                });
+            }
+        }
+        ctx.phase1_secs = sw.elapsed_secs();
+        ctx.phase_done(1);
+
+        // Phase 1b: assemble my row block C[my_block, 0..N] from P tiles.
+        let my_range = ctx.block_range(me);
+        let mut row_block = Matrix::zeros(my_range.len(), ctx.plan.n);
+        ctx.mem.alloc(row_block.nbytes());
+        let mut tiles_needed = p;
+        while tiles_needed > 0 {
+            match ctx.recv_app()? {
+                Payload::CorrTile { rows_block: rb, cols_block, transposed, tile } => {
+                    debug_assert_eq!(rb, me);
+                    let c0 = ctx.block_range(cols_block).start;
+                    if transposed {
+                        row_block.set_block_transposed(0, c0, &tile);
+                    } else {
+                        row_block.set_block(0, c0, &tile);
+                    }
+                    tiles_needed -= 1;
+                }
+                other => panic!("worker {me}: unexpected {} in phase 1b", other.kind()),
+            }
+        }
+        ctx.phase_done(2);
+
+        // Barrier: wait for Proceed so ring messages don't interleave with
+        // stragglers' tiles (a proceeded neighbor's first ring rows may beat
+        // our Proceed — WorkerCtx stashes them).
+        if !ctx.barrier() {
+            return None;
+        }
+
+        // Phase 2: elimination. Diagonal block first, then the ring.
+        // Compute time accumulated around executor work only (see above).
+        let mut edges: Vec<(usize, usize, f32)> = Vec::new();
+        if self.use_pcit {
+            let sw2 = ThreadCpuTimer::start();
+            self.eliminate_and_collect(ctx, &row_block, me, &row_block, &mut edges);
+            ctx.phase2_secs += sw2.elapsed_secs();
+            let mut visiting_block = me;
+            let mut visiting = row_block.clone();
+            ctx.mem.alloc(visiting.nbytes());
+            for _step in 1..p {
+                let next = (me + 1) % p;
+                let sent_bytes = visiting.nbytes();
+                ctx.send_to_rank(next, Payload::RingRows { block: visiting_block, rows: visiting });
+                ctx.mem.free(sent_bytes);
+                let (vb, vr) = match ctx.recv_app()? {
+                    Payload::RingRows { block, rows } => (block, rows),
+                    other => panic!("worker {me}: unexpected {} in ring", other.kind()),
+                };
+                visiting_block = vb;
+                visiting = vr;
+                ctx.mem.alloc(visiting.nbytes());
+                if owns_edge_block(me, visiting_block) {
+                    let sw2 = ThreadCpuTimer::start();
+                    self.eliminate_and_collect(ctx, &row_block, visiting_block, &visiting, &mut edges);
+                    ctx.phase2_secs += sw2.elapsed_secs();
+                }
+            }
+        } else {
+            // Threshold mode: no mediation scan; edges straight from rows.
+            let sw2 = ThreadCpuTimer::start();
+            self.threshold_edges(ctx, &row_block, &mut edges);
+            ctx.phase2_secs += sw2.elapsed_secs();
+        }
+        Some(Payload::Edges(edges))
+    }
+
+    /// Run elimination for edge block (my_block, other_block) and append
+    /// surviving edges. `my_rows`: C[my_block, :]; `other_rows`: C[other, :].
+    fn eliminate_and_collect(
+        &self,
+        ctx: &mut WorkerCtx,
+        my_rows: &Matrix,
+        other_block: usize,
+        other_rows: &Matrix,
+        edges: &mut Vec<(usize, usize, f32)>,
+    ) {
+        let my_range = ctx.block_range(ctx.my_block);
+        let other_range = ctx.block_range(other_block);
+        let (a, b) = (my_range.len(), other_range.len());
+        if a == 0 || b == 0 {
+            return;
+        }
+        // cxy: zero-copy window of my rows at the other block's columns.
+        let cxy = my_rows.view_block(0, other_range.start, a, b);
+        let flags = self.exec.pcit_tile(cxy, my_rows.view(), other_rows.view());
+        ctx.elim_tiles += 1;
+        let mask = flags_to_mask(&flags);
+        let diagonal = other_block == ctx.my_block;
+        for i in 0..a {
+            for j in 0..b {
+                if diagonal && j <= i {
+                    continue;
+                }
+                if !mask[i * b + j] {
+                    let x = my_range.start + i;
+                    let y = other_range.start + j;
+                    let r = cxy[(i, j)];
+                    edges.push((x.min(y), x.max(y), r));
+                }
+            }
+        }
+    }
+
+    /// |r| >= threshold edges from my row block (emit x < y only).
+    fn threshold_edges(&self, ctx: &WorkerCtx, my_rows: &Matrix, edges: &mut Vec<(usize, usize, f32)>) {
+        let my_range = ctx.block_range(ctx.my_block);
+        for i in 0..my_range.len() {
+            let x = my_range.start + i;
+            let row = my_rows.row(i);
+            for (y, &r) in row.iter().enumerate().skip(x + 1) {
+                if r.abs() >= self.threshold {
+                    edges.push((x, y, r));
+                }
+            }
+        }
+    }
+
+    /// ---- Local mode: everything from quorum-local data. ----
+    fn run_local(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+        let tasks = std::mem::take(&mut ctx.tasks);
+        let sw = ThreadCpuTimer::start();
+        let mut edges: Vec<(usize, usize, f32)> = Vec::new();
+        // Mediator panel: all quorum genes, concatenated.
+        let quorum = ctx.quorum.clone();
+        let panel: Vec<(usize, usize)> = quorum
+            .iter()
+            .map(|&b| (b, ctx.block_range(b).len()))
+            .collect();
+        for t in &tasks {
+            let (a_len, b_len) = (ctx.block_rows(t.a).rows(), ctx.block_rows(t.b).rows());
+            if a_len == 0 || b_len == 0 {
+                continue;
+            }
+            // Tiles read the quorum blocks in place — no per-task clones.
+            let cxy = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view());
+            ctx.corr_tiles += 1;
+            if self.use_pcit {
+                // r(x, z) and r(y, z) for z over the quorum panel.
+                let panel_cols: usize = panel.iter().map(|&(_, l)| l).sum();
+                let mut rxz = Matrix::zeros(a_len, panel_cols);
+                let mut ryz = Matrix::zeros(b_len, panel_cols);
+                let mut c0 = 0usize;
+                for &(qb, qlen) in &panel {
+                    if qlen == 0 {
+                        continue;
+                    }
+                    let ta = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(qb).view());
+                    let tb = self.exec.corr_tile(ctx.block_rows(t.b).view(), ctx.block_rows(qb).view());
+                    ctx.corr_tiles += 2;
+                    rxz.set_block(0, c0, &ta);
+                    ryz.set_block(0, c0, &tb);
+                    c0 += qlen;
+                }
+                let flags = self.exec.pcit_tile(cxy.view(), rxz.view(), ryz.view());
+                ctx.elim_tiles += 1;
+                let mask = flags_to_mask(&flags);
+                self.collect_task_edges(ctx, t, &cxy, Some(&mask), &mut edges);
+            } else {
+                self.collect_task_edges(ctx, t, &cxy, None, &mut edges);
+            }
+        }
+        ctx.phase2_secs = sw.elapsed_secs();
+        Some(Payload::Edges(edges))
+    }
+
+    fn collect_task_edges(
+        &self,
+        ctx: &WorkerCtx,
+        t: &crate::allpairs::PairTask,
+        cxy: &Matrix,
+        mask: Option<&[bool]>,
+        edges: &mut Vec<(usize, usize, f32)>,
+    ) {
+        let ra = ctx.block_range(t.a);
+        let rb = ctx.block_range(t.b);
+        let b_len = rb.len();
+        for i in 0..ra.len() {
+            for j in 0..b_len {
+                if t.a == t.b && j <= i {
+                    continue;
+                }
+                if let Some(m) = mask {
+                    if m[i * b_len + j] {
+                        continue;
+                    }
+                }
+                let r = cxy[(i, j)];
+                if !self.use_pcit && r.abs() < self.threshold {
+                    continue;
+                }
+                let x = ra.start + i;
+                let y = rb.start + j;
+                edges.push((x.min(y), x.max(y), r));
+            }
+        }
+    }
+}
+
+/// Balanced ownership of off-diagonal edge blocks during the ring.
+fn owns_edge_block(a: usize, b: usize) -> bool {
+    debug_assert_ne!(a, b);
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    let owner = if (lo + hi) % 2 == 0 { lo } else { hi };
+    owner == a
+}
+
+impl DistributedApp for PcitApp {
+    fn name(&self) -> &'static str {
+        "pcit"
+    }
+
+    fn elements(&self) -> usize {
+        self.z.rows()
+    }
+
+    fn make_block(&self, range: Range<usize>) -> BlockData {
+        BlockData::Rows(self.z.block(range.start, 0, range.len(), self.z.cols()))
+    }
+
+    fn sync_phases(&self) -> Vec<u8> {
+        match self.mode {
+            // Workers may report phase 2 before slower peers report phase 1;
+            // the leader counts both kinds concurrently.
+            DistMode::Exact => vec![1, 2],
+            DistMode::Local => Vec::new(),
+        }
+    }
+
+    fn reduce_tolerates_duplicates(&self) -> bool {
+        // Local mode's edge sets deduplicate in `Network::new`; exact mode's
+        // phase-1b counts exactly P tiles per row home and must not see
+        // duplicates.
+        self.mode == DistMode::Local
+    }
+
+    fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+        match self.mode {
+            DistMode::Exact => self.run_exact(ctx),
+            DistMode::Local => self.run_local(ctx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_block_ownership_balanced() {
+        // Every off-diagonal (a, b) owned by exactly one side.
+        for p in [4usize, 7, 9] {
+            for a in 0..p {
+                for b in 0..p {
+                    if a == b {
+                        continue;
+                    }
+                    assert_ne!(owns_edge_block(a, b), owns_edge_block(b, a), "({a},{b})");
+                }
+            }
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! ranks = 16            # simulated MPI ranks (P)
 //! threads_per_rank = 2  # pool threads inside each rank
 //! mode = "quorum-exact" # single | quorum-exact | quorum-local
+//! strategy = "cyclic"   # cyclic | grid | full (placement)
 //! backend = "native"    # native | xla
 //! block = 64            # tile edge for pair blocks
 //! seed = 42
@@ -25,6 +26,7 @@
 //! ```
 
 use super::parser::{ConfigError, TomlDoc};
+use crate::quorum::Strategy;
 use std::path::PathBuf;
 
 /// Which PCIT execution strategy to run.
@@ -108,6 +110,9 @@ pub struct RunConfig {
     pub ranks: usize,
     pub threads_per_rank: usize,
     pub mode: PcitMode,
+    /// Placement strategy: cyclic quorums (the paper), grid (dual-array
+    /// baseline), or full replication.
+    pub strategy: Strategy,
     pub backend: BackendKind,
     pub block: usize,
     pub seed: u64,
@@ -124,6 +129,7 @@ impl Default for RunConfig {
             ranks: 4,
             threads_per_rank: 1,
             mode: PcitMode::QuorumExact,
+            strategy: Strategy::Cyclic,
             backend: BackendKind::Native,
             block: 64,
             seed: 42,
@@ -150,6 +156,9 @@ impl RunConfig {
         }
         if let Some(s) = doc.get_str("run", "mode") {
             cfg.mode = PcitMode::parse(s).ok_or_else(|| bad(format!("bad run.mode: {s}")))?;
+        }
+        if let Some(s) = doc.get_str("run", "strategy") {
+            cfg.strategy = Strategy::parse(s).ok_or_else(|| bad(format!("bad run.strategy: {s}")))?;
         }
         if let Some(s) = doc.get_str("run", "backend") {
             cfg.backend = BackendKind::parse(s).ok_or_else(|| bad(format!("bad run.backend: {s}")))?;
@@ -252,6 +261,7 @@ mod tests {
 ranks = 16
 threads_per_rank = 2
 mode = "quorum-local"
+strategy = "grid"
 backend = "native"
 block = 32
 seed = 7
@@ -270,6 +280,7 @@ threshold = 0.9
         .unwrap();
         assert_eq!(cfg.ranks, 16);
         assert_eq!(cfg.mode, PcitMode::QuorumLocal);
+        assert_eq!(cfg.strategy, Strategy::Grid);
         assert_eq!(cfg.block, 32);
         assert!(!cfg.use_pcit_significance);
         assert_eq!(cfg.threshold, 0.9);
@@ -291,6 +302,7 @@ threshold = 0.9
         assert!(RunConfig::from_doc(&doc("[run]\nranks = 0")).is_err());
         assert!(RunConfig::from_doc(&doc("[run]\nranks = 3")).is_err()); // quorums start at 4
         assert!(RunConfig::from_doc(&doc("[run]\nmode = \"bogus\"")).is_err());
+        assert!(RunConfig::from_doc(&doc("[run]\nstrategy = \"bogus\"")).is_err());
         assert!(RunConfig::from_doc(&doc("[pcit]\nthreshold = 1.5")).is_err());
         assert!(RunConfig::from_doc(&doc("[dataset]\nkind = \"synthetic\"\nsamples = 1")).is_err());
     }

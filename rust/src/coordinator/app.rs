@@ -1,0 +1,205 @@
+//! The app plugin interface of the distributed all-pairs engine.
+//!
+//! The engine owns everything app-agnostic: placement (any
+//! [`crate::quorum::QuorumSystem`]), exactly-once / redundant pair
+//! assignment, data scatter, phase barriers, stats, failure injection and
+//! detection, and the result gather. An application plugs in through
+//! [`DistributedApp`]: it says how to slice its input into dataset blocks,
+//! which barrier phases it needs, and what a worker does with its quorum
+//! blocks and owned pair tasks. PCIT, all-pairs similarity, and n-body are
+//! the three in-tree plugins.
+
+use super::messages::{BlockData, Message, Payload};
+use super::transport::Endpoint;
+use crate::allpairs::PairTask;
+use crate::metrics::MemoryAccountant;
+use crate::util::Matrix;
+use std::collections::{BTreeMap, VecDeque};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// App-agnostic execution plan shared by leader and workers.
+#[derive(Clone, Copy, Debug)]
+pub struct Plan {
+    /// Total elements N (rows, bodies, …).
+    pub n: usize,
+    /// Number of dataset blocks (= worker count P).
+    pub p: usize,
+    /// Nominal block size ceil(n/p).
+    pub block: usize,
+}
+
+impl Plan {
+    pub fn block_range(&self, b: usize) -> Range<usize> {
+        let lo = (b * self.block).min(self.n);
+        let hi = ((b + 1) * self.block).min(self.n);
+        lo..hi
+    }
+}
+
+/// An application the engine can run distributed.
+///
+/// The same plugin instance is shared by every worker thread (`Arc`), so
+/// implementations hold read-only state (input matrix, executor handle,
+/// thresholds).
+pub trait DistributedApp: Send + Sync {
+    /// App name for reports and errors.
+    fn name(&self) -> &'static str;
+
+    /// Total elements to partition into P blocks.
+    fn elements(&self) -> usize;
+
+    /// Produce the dataset block covering `range` (leader side, at
+    /// scatter time — called once per (block, holder) pair, mirroring an
+    /// MPI scatterv of replicated blocks).
+    fn make_block(&self, range: Range<usize>) -> BlockData;
+
+    /// Barrier phases the leader must sequence: workers report each listed
+    /// phase via [`WorkerCtx::phase_done`]; once **all** ranks have reported
+    /// **all** listed phases the leader broadcasts a single Proceed, which
+    /// workers consume with [`WorkerCtx::barrier`]. Empty = no barrier.
+    fn sync_phases(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Whether the app's result reduction tolerates the same pair being
+    /// computed by multiple ranks (required for redundant, r > 1,
+    /// assignment). Default false: summing reducers (n-body forces) and
+    /// count-exact protocols (PCIT exact's P-tiles-per-home invariant)
+    /// would silently corrupt under duplicates; only apps whose reduce
+    /// deduplicates (e.g. PCIT-local's edge set) opt in.
+    fn reduce_tolerates_duplicates(&self) -> bool {
+        false
+    }
+
+    /// The worker protocol: compute this rank's owned pair tasks
+    /// (`ctx.tasks`) over its quorum blocks, exchanging app traffic as
+    /// needed, and return the rank's result payload. Return `None` when a
+    /// receive reports shutdown/crash — the worker exits without reporting.
+    fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload>;
+}
+
+/// Per-worker state and engine services available to an app's
+/// [`DistributedApp::run_worker`].
+pub struct WorkerCtx {
+    pub(super) ep: Endpoint,
+    pub plan: Plan,
+    /// This rank's dataset block id (= rank index, 0-based).
+    pub my_block: usize,
+    pub mem: Arc<MemoryAccountant>,
+    /// block_id → (global element offset, block data).
+    pub(super) blocks: BTreeMap<usize, (usize, BlockData)>,
+    /// Quorum (block ids) this rank holds.
+    pub quorum: Vec<usize>,
+    /// Pair tasks owned by this rank (take with `std::mem::take`).
+    pub tasks: Vec<PairTask>,
+    /// App payloads that arrived ahead of the phase that consumes them.
+    /// Point-to-point channels are FIFO per (sender, receiver) but there is
+    /// no global order across senders: a fast peer's tile can land before
+    /// the leader's ComputeTasks, and a proceeded neighbor's ring rows
+    /// before our own Proceed.
+    pub(super) pending: VecDeque<Payload>,
+    // ---- stats the app fills in (reported by the engine) ----
+    pub corr_tiles: u64,
+    pub elim_tiles: u64,
+    pub phase1_secs: f64,
+    pub phase2_secs: f64,
+}
+
+impl WorkerCtx {
+    pub fn block_range(&self, b: usize) -> Range<usize> {
+        self.plan.block_range(b)
+    }
+
+    /// Row-matrix contents of a held block (panics if the block is not in
+    /// this rank's quorum or is not row data).
+    pub fn block_rows(&self, b: usize) -> &Matrix {
+        match &self.block_data(b).1 {
+            BlockData::Rows(m) => m,
+            other => panic!(
+                "worker {}: block {b} holds {} data, expected rows",
+                self.my_block,
+                block_kind(other)
+            ),
+        }
+    }
+
+    /// Particle contents of a held block.
+    pub fn block_bodies(&self, b: usize) -> (&[f64], &[[f64; 3]]) {
+        match &self.block_data(b).1 {
+            BlockData::Bodies { mass, pos } => (mass, pos),
+            other => panic!(
+                "worker {}: block {b} holds {} data, expected bodies",
+                self.my_block,
+                block_kind(other)
+            ),
+        }
+    }
+
+    fn block_data(&self, b: usize) -> &(usize, BlockData) {
+        self.blocks
+            .get(&b)
+            .unwrap_or_else(|| panic!("block {b} not in quorum of {}", self.my_block))
+    }
+
+    /// Send app traffic to the worker holding block id `block`.
+    pub fn send_to_rank(&self, block: usize, payload: Payload) {
+        let _ = self.ep.send(block + 1, Message::App(payload));
+    }
+
+    /// Next app payload (pending first). `None` = shutdown/crash: the app
+    /// must return `None` from `run_worker` so the worker exits cleanly.
+    pub fn recv_app(&mut self) -> Option<Payload> {
+        if let Some(p) = self.pending.pop_front() {
+            return Some(p);
+        }
+        let env = self.ep.recv()?;
+        match env.msg {
+            Message::App(p) => Some(p),
+            Message::Shutdown => None,
+            Message::Crash => {
+                self.ep.transport().kill(self.ep.rank);
+                None
+            }
+            other => panic!(
+                "worker {}: unexpected {} while awaiting app traffic",
+                self.my_block,
+                other.kind()
+            ),
+        }
+    }
+
+    /// Report a sync phase to the leader.
+    pub fn phase_done(&self, phase: u8) {
+        let _ = self.ep.send(0, Message::PhaseDone { phase });
+    }
+
+    /// Block until the leader's Proceed (stashing early app traffic).
+    /// Returns false on shutdown/crash — propagate by returning `None`.
+    pub fn barrier(&mut self) -> bool {
+        loop {
+            let Some(env) = self.ep.recv() else { return false };
+            match env.msg {
+                Message::Proceed => return true,
+                Message::Shutdown => return false,
+                Message::Crash => {
+                    self.ep.transport().kill(self.ep.rank);
+                    return false;
+                }
+                Message::App(p) => self.pending.push_back(p),
+                other => panic!(
+                    "worker {}: unexpected {} at barrier",
+                    self.my_block,
+                    other.kind()
+                ),
+            }
+        }
+    }
+}
+
+fn block_kind(b: &BlockData) -> &'static str {
+    match b {
+        BlockData::Rows(_) => "rows",
+        BlockData::Bodies { .. } => "bodies",
+    }
+}

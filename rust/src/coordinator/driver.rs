@@ -1,19 +1,24 @@
-//! High-level drivers: spawn a simulated cluster and run distributed PCIT,
-//! or run the single-node baseline.
+//! High-level drivers: the generic distributed all-pairs engine
+//! ([`run_app`]) that any [`DistributedApp`] plugs into, the PCIT wrappers
+//! built on it, and the single-node baseline.
 
-use super::leader::{leader_main, LeaderOutcome};
+use super::app::{DistributedApp, Plan};
+use super::leader::{leader_main, LeaderOutcome, LeaderPlan};
+use super::messages::Payload;
 use super::transport::Transport;
-use super::worker::{worker_main, Plan, MODE_EXACT, MODE_LOCAL};
-use crate::allpairs::OwnerPolicy;
+use super::worker::worker_main;
+use crate::allpairs::{OwnerPolicy, PairAssignment, RedundantAssignment};
+use crate::apps::pcit::{DistMode, PcitApp};
 use crate::config::{PcitMode, RunConfig};
 use crate::data::synthetic::ExpressionDataset;
 use crate::pcit::network::Network;
 use crate::pcit::{exact_pcit, standardize_rows};
 use crate::pool::ThreadPool;
-use crate::quorum::CyclicQuorumSet;
+use crate::quorum::Strategy;
 use crate::runtime::Executor;
 use crate::util::ceil_div;
 use crate::util::timer::Stopwatch;
+use std::sync::Arc;
 
 /// Per-rank execution statistics (sent worker → leader at completion).
 #[derive(Clone, Copy, Debug, Default)]
@@ -28,21 +33,56 @@ pub struct RankStats {
     pub recv_bytes: u64,
     pub phase1_secs: f64,
     pub phase2_secs: f64,
-    pub n_edges: u64,
+    /// Result items this rank reported (edges, tiles, force blocks).
+    pub n_items: u64,
 }
 
-/// Result of a distributed run.
+/// Engine knobs shared by every app.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// Simulated MPI ranks P (= dataset blocks).
+    pub ranks: usize,
+    /// Placement: cyclic quorums, grid (dual array), or full replication.
+    pub strategy: Strategy,
+    /// Pair-ownership policy.
+    pub policy: OwnerPolicy,
+    /// Owners per pair (1 = exactly-once; > 1 needs an r-fold placement).
+    pub redundancy: usize,
+    /// Ranks to crash right after data delivery (failure injection).
+    pub kill: Vec<usize>,
+    /// Resilient mode: gather from survivors instead of erroring on a
+    /// killed rank. Requires an app without barrier phases.
+    pub tolerate_kills: bool,
+}
+
+impl EngineOptions {
+    pub fn new(ranks: usize, strategy: Strategy) -> Self {
+        Self {
+            ranks,
+            strategy,
+            policy: OwnerPolicy::LeastLoaded,
+            redundancy: 1,
+            kill: Vec::new(),
+            tolerate_kills: false,
+        }
+    }
+}
+
+/// Result of a generic engine run.
 #[derive(Debug)]
-pub struct DistributedReport {
-    pub network: Network,
+pub struct EngineReport {
+    /// Per-rank result payloads, sorted by rank (survivors only).
+    pub results: Vec<(usize, Payload)>,
     pub stats: Vec<RankStats>,
+    pub strategy: Strategy,
     pub wall_secs: f64,
     /// Max over ranks of (phase1 + phase2) compute time — the parallel
     /// critical path. On a testbed with fewer cores than ranks the wall
     /// clock serializes rank work, so this is the faithful "time on a real
     /// cluster" measure (transport is in-memory and effectively free).
     pub critical_path_secs: f64,
-    pub quorum_size: usize,
+    /// Replication factor of the placement (max blocks held per rank).
+    pub max_quorum_size: usize,
     pub assignment_imbalance: f64,
     /// Max peak logical bytes across ranks ("memory per process").
     pub peak_bytes_per_rank: u64,
@@ -50,50 +90,116 @@ pub struct DistributedReport {
     pub total_comm_bytes: u64,
 }
 
-/// Run distributed PCIT on a simulated cluster of `cfg.ranks` workers.
-///
-/// The dataset is standardized once by the leader (as the paper's
-/// implementations do before distribution); each worker receives only its
-/// quorum's blocks.
-pub fn run_distributed_pcit(
-    cfg: &RunConfig,
-    dataset: &ExpressionDataset,
-    executor: Executor,
-) -> anyhow::Result<DistributedReport> {
-    anyhow::ensure!(cfg.mode != PcitMode::Single, "use run_single_node for single mode");
-    let p = cfg.ranks;
-    let n = dataset.genes();
-    let quorum = CyclicQuorumSet::for_processes(p)?;
-    let plan = Plan {
-        n,
-        p,
-        block: ceil_div(n, p),
-        mode: if cfg.mode == PcitMode::QuorumLocal { MODE_LOCAL } else { MODE_EXACT },
-        use_pcit: cfg.use_pcit_significance,
-        threshold: cfg.threshold as f32,
+/// Run `app` on a simulated cluster of `opts.ranks` workers under the
+/// chosen placement strategy: scatter placement blocks, assign pair work,
+/// sequence the app's barriers, gather per-rank results and stats.
+pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Result<EngineReport> {
+    let p = opts.ranks;
+    anyhow::ensure!(p >= 1, "engine needs at least one rank");
+    anyhow::ensure!(
+        opts.kill.iter().all(|&k| k < p),
+        "kill ranks out of range (P = {p})"
+    );
+    if opts.tolerate_kills && !opts.kill.is_empty() {
+        anyhow::ensure!(
+            app.sync_phases().is_empty(),
+            "{}: resilient runs need a barrier-free app protocol",
+            app.name()
+        );
+    }
+    anyhow::ensure!(
+        opts.redundancy <= 1 || app.reduce_tolerates_duplicates(),
+        "{}: redundant (r = {}) assignment computes pairs multiple times, which this app's reduce does not tolerate",
+        app.name(),
+        opts.redundancy
+    );
+    let n = app.elements();
+
+    // Placement + per-rank task lists (exactly-once or redundant).
+    let quorum = if opts.redundancy > 1 {
+        opts.strategy.build_redundant(p, opts.redundancy)?
+    } else {
+        opts.strategy.build(p)?
+    };
+    let (tasks, imbalance) = if opts.redundancy > 1 {
+        let assignment = RedundantAssignment::build(quorum.as_ref(), opts.redundancy);
+        if opts.tolerate_kills {
+            // Validated on the exact instance the engine executes: every
+            // pair must retain at least one surviving owner.
+            anyhow::ensure!(
+                assignment.covers_with_failures(&opts.kill),
+                "insufficient redundancy: some pair is owned only by killed ranks (r = {}, kill = {:?})",
+                opts.redundancy,
+                opts.kill
+            );
+        }
+        ((0..p).map(|w| assignment.tasks_for(w)).collect::<Vec<_>>(), 1.0)
+    } else {
+        let assignment = PairAssignment::try_build(quorum.as_ref(), opts.policy)?;
+        if opts.tolerate_kills {
+            // Exactly-once ownership: a killed rank that owns any pair
+            // would silently lose its results.
+            anyhow::ensure!(
+                opts.kill.iter().all(|&k| assignment.tasks_for(k).is_empty()),
+                "insufficient redundancy: some pair is owned only by killed ranks (r = 1, kill = {:?})",
+                opts.kill
+            );
+        }
+        let im = assignment.imbalance();
+        ((0..p).map(|w| assignment.tasks_for(w)).collect::<Vec<_>>(), im)
     };
 
+    let plan = Plan { n, p, block: ceil_div(n, p) };
     let sw = Stopwatch::start();
-    let z = standardize_rows(&dataset.expr);
-
     let (transport, mut endpoints) = Transport::new(p + 1);
     // endpoints[0] = leader; spawn workers on 1..=p.
     let leader_ep = endpoints.remove(0);
     let mut handles = Vec::with_capacity(p);
     for ep in endpoints {
-        let exec = executor.clone();
+        let app_ref = Arc::clone(&app);
         handles.push(
             std::thread::Builder::new()
                 .name(format!("quorall-rank-{}", ep.rank))
-                .spawn(move || worker_main(ep, exec, plan))
+                .spawn(move || worker_main(ep, app_ref, plan))
                 .expect("spawn worker"),
         );
     }
 
-    let outcome: LeaderOutcome = leader_main(&leader_ep, &z, plan, &quorum, OwnerPolicy::LeastLoaded)?;
-    for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
+    let lead = leader_main(
+        &leader_ep,
+        plan,
+        LeaderPlan {
+            app: app.as_ref(),
+            quorum: quorum.as_ref(),
+            tasks,
+            kill: opts.kill.clone(),
+            tolerate_kills: opts.tolerate_kills,
+        },
+    );
+    if lead.is_err() {
+        // Unblock any worker still waiting before joining (leader error
+        // paths already broadcast Shutdown; this covers early send errors).
+        for w in 0..p {
+            let _ = leader_ep.send(w + 1, super::messages::Message::Shutdown);
+        }
     }
+    let mut worker_panicked = false;
+    for h in handles {
+        worker_panicked |= h.join().is_err();
+    }
+    // Surface the leader's diagnosis (which rank died, in which phase)
+    // ahead of the bare join failure: a panicking worker marks itself
+    // killed, so the leader error is the informative one.
+    let outcome: LeaderOutcome = match lead {
+        Ok(o) => {
+            anyhow::ensure!(!worker_panicked, "worker thread panicked");
+            o
+        }
+        Err(e) if worker_panicked => {
+            return Err(e.context("a worker thread panicked during the run"))
+        }
+        Err(e) => return Err(e),
+    };
     let wall = sw.elapsed_secs();
     let (_msgs, bytes) = transport.total_received();
     let peak = outcome.stats.iter().map(|s| s.peak_logical_bytes).max().unwrap_or(0);
@@ -103,15 +209,82 @@ pub fn run_distributed_pcit(
         .map(|s| s.phase1_secs + s.phase2_secs)
         .fold(0.0f64, f64::max);
 
-    Ok(DistributedReport {
-        network: outcome.network,
+    Ok(EngineReport {
+        results: outcome.results,
         stats: outcome.stats,
+        strategy: opts.strategy,
         wall_secs: wall,
         critical_path_secs: critical,
-        quorum_size: outcome.quorum_size,
-        assignment_imbalance: outcome.assignment_imbalance,
+        max_quorum_size: quorum.max_quorum_size(),
+        assignment_imbalance: imbalance,
         peak_bytes_per_rank: peak,
         total_comm_bytes: bytes,
+    })
+}
+
+/// Result of a distributed PCIT run.
+#[derive(Debug)]
+pub struct DistributedReport {
+    pub network: Network,
+    pub stats: Vec<RankStats>,
+    pub wall_secs: f64,
+    /// See [`EngineReport::critical_path_secs`].
+    pub critical_path_secs: f64,
+    pub quorum_size: usize,
+    pub assignment_imbalance: f64,
+    /// Max peak logical bytes across ranks ("memory per process").
+    pub peak_bytes_per_rank: u64,
+    /// Total bytes moved through the transport.
+    pub total_comm_bytes: u64,
+}
+
+/// Collect the per-rank edge payloads of a PCIT engine run into a network.
+fn edges_network(n: usize, results: Vec<(usize, Payload)>) -> anyhow::Result<Network> {
+    let mut all_edges: Vec<(usize, usize, f32)> = Vec::new();
+    for (rank, payload) in results {
+        match payload {
+            Payload::Edges(edges) => all_edges.extend(edges),
+            other => anyhow::bail!("pcit: rank {rank} returned {} payload", other.kind()),
+        }
+    }
+    Ok(Network::new(n, all_edges))
+}
+
+/// Run distributed PCIT on a simulated cluster of `cfg.ranks` workers under
+/// `cfg.strategy` (cyclic quorums by default).
+///
+/// The dataset is standardized once by the leader (as the paper's
+/// implementations do before distribution); each worker receives only its
+/// placement's blocks.
+pub fn run_distributed_pcit(
+    cfg: &RunConfig,
+    dataset: &ExpressionDataset,
+    executor: Executor,
+) -> anyhow::Result<DistributedReport> {
+    anyhow::ensure!(cfg.mode != PcitMode::Single, "use run_single_node for single mode");
+    let n = dataset.genes();
+    let sw = Stopwatch::start();
+    let z = standardize_rows(&dataset.expr);
+    let mode = if cfg.mode == PcitMode::QuorumLocal { DistMode::Local } else { DistMode::Exact };
+    let app = Arc::new(PcitApp::new(
+        z,
+        executor,
+        mode,
+        cfg.use_pcit_significance,
+        cfg.threshold as f32,
+    ));
+    let opts = EngineOptions::new(cfg.ranks, cfg.strategy);
+    let rep = run_app(app, &opts)?;
+    let network = edges_network(n, rep.results)?;
+    Ok(DistributedReport {
+        network,
+        stats: rep.stats,
+        wall_secs: sw.elapsed_secs(),
+        critical_path_secs: rep.critical_path_secs,
+        quorum_size: rep.max_quorum_size,
+        assignment_imbalance: rep.assignment_imbalance,
+        peak_bytes_per_rank: rep.peak_bytes_per_rank,
+        total_comm_bytes: rep.total_comm_bytes,
     })
 }
 
@@ -120,11 +293,16 @@ pub fn run_distributed_pcit(
 ///
 /// Every pair task is assigned to up to `redundancy` hosting ranks; the
 /// ranks in `kill` crash right after receiving their data, before doing any
-/// work. As long as every pair retains one surviving owner (checked via
-/// [`RedundantAssignment::covers_with_failures`]) the gathered network is
-/// complete — duplicate pair results deduplicate in `Network::new`.
+/// work. The engine validates (on the assignment it actually executes, via
+/// [`RedundantAssignment::covers_with_failures`]) that every pair retains
+/// one surviving owner, so the gathered network is complete — duplicate
+/// pair results deduplicate in `Network::new`.
 ///
 /// Quorum-local only: the exact mode's ring requires every rank.
+///
+/// r >= 2 needs every pair hosted by >= r quorums: the optimal (λ = 1)
+/// sets host each pair exactly once, so redundancy uses the r-fold cover
+/// (quorum size ~r·k — replication is the price of fault tolerance).
 pub fn run_resilient_pcit(
     cfg: &RunConfig,
     dataset: &ExpressionDataset,
@@ -132,108 +310,32 @@ pub fn run_resilient_pcit(
     redundancy: usize,
     kill: &[usize],
 ) -> anyhow::Result<DistributedReport> {
-    use super::messages::Message;
-    use crate::allpairs::RedundantAssignment;
-    use crate::data::Partition;
-    use crate::pcit::network::Network;
-
     let p = cfg.ranks;
-    anyhow::ensure!(kill.iter().all(|&k| k < p), "kill ranks out of range");
     let n = dataset.genes();
-    // r >= 2 needs every pair hosted by >= r quorums: the optimal (λ = 1)
-    // sets host each pair exactly once, so redundancy uses the r-fold cover
-    // (quorum size ~r·k — replication is the price of fault tolerance).
-    let quorum = CyclicQuorumSet::with_redundancy(p, redundancy)?;
-    let assignment = RedundantAssignment::build(&quorum, redundancy);
-    anyhow::ensure!(
-        assignment.covers_with_failures(kill),
-        "insufficient redundancy: some pair is owned only by killed ranks (r = {redundancy}, kill = {kill:?})"
-    );
-    let plan = Plan {
-        n,
-        p,
-        block: ceil_div(n, p),
-        mode: MODE_LOCAL,
-        use_pcit: cfg.use_pcit_significance,
-        threshold: cfg.threshold as f32,
-    };
-
     let sw = Stopwatch::start();
     let z = standardize_rows(&dataset.expr);
-    let (transport, mut endpoints) = Transport::new(p + 1);
-    let leader_ep = endpoints.remove(0);
-    let mut handles = Vec::with_capacity(p);
-    for ep in endpoints {
-        let exec = executor.clone();
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("quorall-rank-{}", ep.rank))
-                .spawn(move || super::worker::worker_main(ep, exec, plan))
-                .expect("spawn worker"),
-        );
-    }
-
-    // Scatter data, crash the victims, then hand out redundant tasks.
-    let part = Partition::new(n, p);
-    for w in 0..p {
-        let q = quorum.quorum(w);
-        let blocks: Vec<(usize, usize, crate::util::Matrix)> = q
-            .iter()
-            .map(|&b| {
-                let r = part.range(b);
-                (b, r.start, z.block(r.start, 0, r.len(), z.cols()))
-            })
-            .collect();
-        let _ = leader_ep.send(w + 1, Message::AssignData { quorum: q, blocks });
-    }
-    for &k in kill {
-        let _ = leader_ep.send(k + 1, Message::Crash);
-    }
-    for w in 0..p {
-        let _ = leader_ep.send(w + 1, Message::ComputeCorr { tasks: assignment.tasks_for(w) });
-    }
-
-    // Gather from survivors only.
-    let alive = p - kill.len();
-    let mut all_edges = Vec::new();
-    let mut stats = Vec::new();
-    let mut edges_left = alive;
-    let mut stats_left = alive;
-    while edges_left > 0 || stats_left > 0 {
-        let Some(env) = leader_ep.recv() else {
-            anyhow::bail!("leader: survivors disconnected prematurely");
-        };
-        match env.msg {
-            Message::Edges { edges } => {
-                all_edges.extend(edges);
-                edges_left -= 1;
-            }
-            Message::Stats(s) => {
-                stats.push(s);
-                stats_left -= 1;
-            }
-            other => anyhow::bail!("leader: unexpected {} gathering survivors", other.kind()),
-        }
-    }
-    stats.sort_by_key(|s| s.rank);
-    for w in 0..p {
-        let _ = leader_ep.send(w + 1, Message::Shutdown);
-    }
-    for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))?;
-    }
-    let (_msgs, bytes) = transport.total_received();
-    let peak = stats.iter().map(|s| s.peak_logical_bytes).max().unwrap_or(0);
-    let critical = stats.iter().map(|s| s.phase1_secs + s.phase2_secs).fold(0.0f64, f64::max);
+    let app = Arc::new(PcitApp::new(
+        z,
+        executor,
+        DistMode::Local,
+        cfg.use_pcit_significance,
+        cfg.threshold as f32,
+    ));
+    let mut opts = EngineOptions::new(p, Strategy::Cyclic);
+    opts.redundancy = redundancy;
+    opts.kill = kill.to_vec();
+    opts.tolerate_kills = true;
+    let rep = run_app(app, &opts)?;
+    let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
-        network: Network::new(n, all_edges),
-        stats,
+        network,
+        stats: rep.stats,
         wall_secs: sw.elapsed_secs(),
-        critical_path_secs: critical,
-        quorum_size: quorum.quorum_size(),
-        assignment_imbalance: 1.0,
-        peak_bytes_per_rank: peak,
-        total_comm_bytes: bytes,
+        critical_path_secs: rep.critical_path_secs,
+        quorum_size: rep.max_quorum_size,
+        assignment_imbalance: rep.assignment_imbalance,
+        peak_bytes_per_rank: rep.peak_bytes_per_rank,
+        total_comm_bytes: rep.total_comm_bytes,
     })
 }
 

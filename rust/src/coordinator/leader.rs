@@ -1,122 +1,182 @@
-//! Leader rank: builds the quorum set, scatters data, sequences phases,
-//! gathers edges and stats.
+//! Leader rank: scatters placement blocks, hands out pair tasks, sequences
+//! the app's barrier phases, gathers results and stats — app-agnostically.
+//!
+//! Failure handling: a worker that receives `Crash` marks itself killed on
+//! the transport before exiting. All leader waits poll with a short timeout
+//! and, whenever progress stalls, check whether any rank they are still
+//! waiting on is dead; if so the leader broadcasts `Shutdown` (unblocking
+//! every worker stuck in a receive) and surfaces a clean error instead of
+//! hanging.
 
-use super::messages::Message;
+use super::app::{DistributedApp, Plan};
+use super::messages::{BlockData, Message, Payload};
 use super::transport::Endpoint;
-use super::worker::{Plan, MODE_EXACT};
-use crate::allpairs::{OwnerPolicy, PairAssignment};
+use crate::allpairs::PairTask;
 use crate::data::Partition;
-use crate::pcit::network::Network;
-use crate::quorum::CyclicQuorumSet;
-use crate::util::Matrix;
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+/// Poll interval for failure detection while waiting on workers.
+const POLL: Duration = Duration::from_millis(25);
 
 /// Everything the leader returns.
 pub struct LeaderOutcome {
-    pub network: Network,
+    /// Per-rank result payloads, sorted by rank (survivors only).
+    pub results: Vec<(usize, Payload)>,
     pub stats: Vec<super::driver::RankStats>,
-    pub assignment_imbalance: f64,
-    pub quorum_size: usize,
 }
 
-/// Run the leader protocol on endpoint 0. `z` is the standardized N×M
-/// expression matrix; workers are already listening on endpoints 1..=P.
-pub fn leader_main(
-    ep: &Endpoint,
-    z: &Matrix,
-    plan: Plan,
-    quorum: &CyclicQuorumSet,
-    policy: OwnerPolicy,
-) -> anyhow::Result<LeaderOutcome> {
+/// Leader-side inputs: the app, its placement, and precomputed per-rank
+/// task lists (exactly-once or redundant — the leader does not care).
+pub struct LeaderPlan<'a> {
+    pub app: &'a dyn DistributedApp,
+    pub quorum: &'a dyn crate::quorum::QuorumSystem,
+    /// tasks[rank] = pair tasks that rank owns.
+    pub tasks: Vec<Vec<PairTask>>,
+    /// Ranks to crash right after data delivery (failure injection).
+    pub kill: Vec<usize>,
+    /// When true (resilient runs), killed ranks are excluded from the
+    /// gather; when false any dead rank is an error.
+    pub tolerate_kills: bool,
+}
+
+/// Run the leader protocol on endpoint 0; workers listen on 1..=P.
+pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Result<LeaderOutcome> {
     let p = plan.p;
-    let n = plan.n;
-    let part = Partition::new(n, p);
+    let part = Partition::new(plan.n, p);
 
-    // ---- Scatter quorum data. ----
+    // ---- Scatter placement blocks. ----
     for w in 0..p {
-        let q = quorum.quorum(w);
-        let blocks: Vec<(usize, usize, Matrix)> = q
-            .iter()
-            .map(|&b| {
-                let r = part.range(b);
-                (b, r.start, z.block(r.start, 0, r.len(), z.cols()))
-            })
+        let blocks: Vec<(usize, usize, BlockData)> = part
+            .blocks_for(lp.quorum, w)
+            .into_iter()
+            .map(|(b, r)| (b, r.start, lp.app.make_block(r)))
             .collect();
-        ep.send(w + 1, Message::AssignData { quorum: q, blocks })
-            .map_err(|e| anyhow::anyhow!("scatter to worker {w}: {e}"))?;
+        // Derive the quorum list from the very blocks being shipped — the
+        // two can never disagree.
+        let quorum: Vec<usize> = blocks.iter().map(|(b, _, _)| *b).collect();
+        ep.send(w + 1, Message::AssignData { quorum, blocks })
+            .map_err(|e| anyhow::anyhow!("scatter to rank {w}: {e}"))?;
     }
 
-    // ---- Assign pair work (exactly-once, balanced). ----
-    let assignment = PairAssignment::build(quorum, policy);
-    for w in 0..p {
-        let tasks = assignment.tasks_for(w);
-        ep.send(w + 1, Message::ComputeCorr { tasks })
-            .map_err(|e| anyhow::anyhow!("tasks to worker {w}: {e}"))?;
+    // ---- Failure injection, then pair work (exactly-once or redundant). ----
+    for &k in &lp.kill {
+        let _ = ep.send(k + 1, Message::Crash);
+    }
+    for (w, tasks) in lp.tasks.into_iter().enumerate() {
+        let _ = ep.send(w + 1, Message::ComputeTasks { tasks });
     }
 
-    // ---- Phase sequencing (exact mode only has the tile/ring barrier). ----
-    if plan.mode == MODE_EXACT {
-        // Workers may report phase 2 before slower peers report phase 1, so
-        // count both kinds concurrently.
-        wait_phases(ep, p, &[1, 2])?;
+    // ---- Barrier phases the app asked for. ----
+    let phases = lp.app.sync_phases();
+    if !phases.is_empty() {
+        wait_phases(ep, p, &phases)?;
         for w in 0..p {
             let _ = ep.send(w + 1, Message::Proceed);
         }
     }
 
-    // ---- Gather edges + stats. ----
-    let mut all_edges: Vec<(usize, usize, f32)> = Vec::new();
+    // ---- Gather results + stats from expected ranks. ----
+    let expected: BTreeSet<usize> = (0..p)
+        .filter(|r| !(lp.tolerate_kills && lp.kill.contains(r)))
+        .collect();
+    let mut need_result = expected.clone();
+    let mut need_stats = expected;
+    let mut results: Vec<(usize, Payload)> = Vec::new();
     let mut stats: Vec<super::driver::RankStats> = Vec::new();
-    let mut edges_left = p;
-    let mut stats_left = p;
-    while edges_left > 0 || stats_left > 0 {
-        let Some(env) = ep.recv() else {
-            anyhow::bail!("leader: workers disconnected prematurely");
-        };
-        match env.msg {
-            Message::Edges { edges } => {
-                all_edges.extend(edges);
-                edges_left -= 1;
+    while !need_result.is_empty() || !need_stats.is_empty() {
+        match ep.recv_timeout(POLL) {
+            Some(env) => {
+                let rank = env.from.wrapping_sub(1);
+                match env.msg {
+                    Message::Result(payload) => {
+                        anyhow::ensure!(
+                            need_result.remove(&rank),
+                            "leader: unexpected result from rank {rank}"
+                        );
+                        results.push((rank, payload));
+                    }
+                    Message::Stats(s) => {
+                        anyhow::ensure!(
+                            need_stats.remove(&rank),
+                            "leader: unexpected stats from rank {rank}"
+                        );
+                        stats.push(s);
+                    }
+                    Message::PhaseDone { .. } => { /* stragglers after the barrier */ }
+                    other => {
+                        abort(ep, p);
+                        anyhow::bail!("leader: unexpected {} gathering results", other.kind());
+                    }
+                }
             }
-            Message::Stats(s) => {
-                stats.push(s);
-                stats_left -= 1;
+            None => {
+                if let Some(&dead) = need_result
+                    .iter()
+                    .chain(need_stats.iter())
+                    .find(|&&r| ep.transport().is_killed(r + 1))
+                {
+                    abort(ep, p);
+                    anyhow::bail!(
+                        "rank {dead} crashed before reporting its result; aborting the run"
+                    );
+                }
             }
-            Message::PhaseDone { .. } => { /* stragglers in local mode */ }
-            other => anyhow::bail!("leader: unexpected {}", other.kind()),
         }
     }
+    results.sort_by_key(|(r, _)| *r);
     stats.sort_by_key(|s| s.rank);
 
     for w in 0..p {
         let _ = ep.send(w + 1, Message::Shutdown);
     }
 
-    Ok(LeaderOutcome {
-        network: Network::new(n, all_edges),
-        stats,
-        assignment_imbalance: assignment.imbalance(),
-        quorum_size: quorum.quorum_size(),
-    })
+    Ok(LeaderOutcome { results, stats })
 }
 
-/// Wait until every worker has reported each of the listed phases.
+/// Wait until every worker has reported each of the listed phases, erroring
+/// cleanly (after unblocking all workers) if a rank we are waiting on dies.
 fn wait_phases(ep: &Endpoint, p: usize, phases: &[u8]) -> anyhow::Result<()> {
-    let mut left: std::collections::BTreeMap<u8, usize> =
-        phases.iter().map(|&ph| (ph, p)).collect();
-    while left.values().any(|&v| v > 0) {
-        let Some(env) = ep.recv() else {
-            anyhow::bail!("leader: lost workers waiting for phases {phases:?}");
-        };
-        match env.msg {
-            Message::PhaseDone { phase: ph } => {
-                let c = left
-                    .get_mut(&ph)
-                    .ok_or_else(|| anyhow::anyhow!("leader: unexpected phase {ph}"))?;
-                anyhow::ensure!(*c > 0, "leader: too many phase-{ph} reports");
-                *c -= 1;
+    let mut left: BTreeMap<u8, BTreeSet<usize>> =
+        phases.iter().map(|&ph| (ph, (0..p).collect())).collect();
+    while left.values().any(|s| !s.is_empty()) {
+        match ep.recv_timeout(POLL) {
+            Some(env) => match env.msg {
+                Message::PhaseDone { phase } => {
+                    let rank = env.from.wrapping_sub(1);
+                    let s = left
+                        .get_mut(&phase)
+                        .ok_or_else(|| anyhow::anyhow!("leader: unexpected phase {phase}"))?;
+                    anyhow::ensure!(
+                        s.remove(&rank),
+                        "leader: duplicate phase-{phase} report from rank {rank}"
+                    );
+                }
+                other => {
+                    abort(ep, p);
+                    anyhow::bail!("leader: unexpected {} during phase sync", other.kind());
+                }
+            },
+            None => {
+                if let Some(&dead) = left
+                    .values()
+                    .flatten()
+                    .find(|&&r| ep.transport().is_killed(r + 1))
+                {
+                    abort(ep, p);
+                    anyhow::bail!(
+                        "rank {dead} crashed before completing a sync phase; aborting the run"
+                    );
+                }
             }
-            other => anyhow::bail!("leader: unexpected {} during phases", other.kind()),
         }
     }
     Ok(())
+}
+
+/// Unblock every worker (stuck receives get the Shutdown) before erroring.
+fn abort(ep: &Endpoint, p: usize) {
+    for w in 0..p {
+        let _ = ep.send(w + 1, Message::Shutdown);
+    }
 }

@@ -1,8 +1,12 @@
 //! Message types exchanged between leader and workers.
 //!
-//! Every payload reports its byte size so the transport can account
-//! communication volume the way the paper's MPI implementation would see it
-//! (element payloads; control messages cost a fixed header).
+//! The engine protocol is app-agnostic: control messages (assign, tasks,
+//! barriers, shutdown, failure injection) are fixed, while app traffic rides
+//! in [`Payload`] (worker ↔ worker exchange and worker → leader results)
+//! and dataset blocks ride in [`BlockData`]. Every payload reports its byte
+//! size so the transport can account communication volume the way the
+//! paper's MPI implementation would see it (element payloads; control
+//! messages cost a fixed header).
 
 use crate::allpairs::PairTask;
 use crate::util::Matrix;
@@ -11,33 +15,110 @@ use std::sync::Arc;
 /// Fixed accounting cost of a control message header.
 pub const HEADER_BYTES: u64 = 64;
 
+/// Contents of one dataset block, as produced by an app's partitioner.
 #[derive(Debug)]
-pub enum Message {
-    /// Leader → worker: your quorum's datasets (standardized rows).
-    /// `(block_id, global_row_offset, rows)` per quorum member.
-    AssignData {
-        quorum: Vec<usize>,
-        blocks: Vec<(usize, usize, Matrix)>,
-    },
-    /// Leader → worker: compute these correlation block pairs.
-    ComputeCorr { tasks: Vec<PairTask> },
-    /// Worker → row-home worker: one correlation tile. When `transposed` is
+pub enum BlockData {
+    /// Row-major f32 rows (PCIT standardized rows, similarity embeddings).
+    Rows(Matrix),
+    /// Particle block, f64 structure-of-arrays (n-body).
+    Bodies { mass: Vec<f64>, pos: Vec<[f64; 3]> },
+}
+
+impl BlockData {
+    /// Logical payload bytes (for comm + memory accounting).
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            BlockData::Rows(m) => m.nbytes(),
+            BlockData::Bodies { mass, pos } => (mass.len() * 8 + pos.len() * 24) as u64,
+        }
+    }
+
+    /// Number of elements (rows / bodies) in the block.
+    pub fn len(&self) -> usize {
+        match self {
+            BlockData::Rows(m) => m.rows(),
+            BlockData::Bodies { mass, .. } => mass.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// App-level traffic: worker ↔ worker exchange and worker → leader results.
+#[derive(Debug)]
+pub enum Payload {
+    /// One correlation tile routed to a row-home rank. When `transposed` is
     /// false, tile rows already are the home's block; when true, the home
     /// must apply the tile transposed (`set_block_transposed`) — the owner
     /// ships one buffer to both row homes instead of materializing a
-    /// transposed copy. `rows_block` is the home block id, `cols_block` the
-    /// other one. The `Arc` is the in-memory transport's stand-in for MPI
-    /// send buffers; `payload_bytes` still accounts the full tile per send.
+    /// transposed copy. The `Arc` is the in-memory transport's stand-in for
+    /// MPI send buffers; `nbytes` still accounts the full tile per send.
     CorrTile {
         rows_block: usize,
         cols_block: usize,
         transposed: bool,
         tile: Arc<Matrix>,
     },
-    /// Worker → worker (ring step): a full row block `C[block, 0..N]`.
+    /// Ring step: a full row block `C[block, 0..N]`.
     RingRows { block: usize, rows: Matrix },
-    /// Worker → leader: surviving edges (global gene ids) with correlations.
-    Edges { edges: Vec<(usize, usize, f32)> },
+    /// Surviving edges (global element ids) with correlations.
+    Edges(Vec<(usize, usize, f32)>),
+    /// Similarity tiles for leader-side assembly: `(row0, col0, tile)`.
+    Tiles(Vec<(usize, usize, Matrix)>),
+    /// Partial n-body forces: `(global element offset, forces)` per block.
+    Forces(Vec<(usize, Vec<[f64; 3]>)>),
+}
+
+impl Payload {
+    /// Payload bytes for communication accounting.
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            Payload::CorrTile { tile, .. } => tile.nbytes(),
+            Payload::RingRows { rows, .. } => rows.nbytes(),
+            Payload::Edges(edges) => (edges.len() * 12) as u64,
+            Payload::Tiles(tiles) => tiles.iter().map(|(_, _, t)| 16 + t.nbytes()).sum(),
+            Payload::Forces(parts) => parts.iter().map(|(_, f)| 8 + (f.len() * 24) as u64).sum(),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::CorrTile { .. } => "corr-tile",
+            Payload::RingRows { .. } => "ring-rows",
+            Payload::Edges(_) => "edges",
+            Payload::Tiles(_) => "tiles",
+            Payload::Forces(_) => "forces",
+        }
+    }
+
+    /// Result items carried (edges, tiles, force blocks) — reported as the
+    /// rank's `n_items` stat.
+    pub fn items(&self) -> u64 {
+        match self {
+            Payload::CorrTile { .. } | Payload::RingRows { .. } => 1,
+            Payload::Edges(edges) => edges.len() as u64,
+            Payload::Tiles(tiles) => tiles.len() as u64,
+            Payload::Forces(parts) => parts.len() as u64,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub enum Message {
+    /// Leader → worker: your quorum's dataset blocks.
+    /// `(block_id, global_element_offset, data)` per quorum member.
+    AssignData {
+        quorum: Vec<usize>,
+        blocks: Vec<(usize, usize, BlockData)>,
+    },
+    /// Leader → worker: compute these block pairs.
+    ComputeTasks { tasks: Vec<PairTask> },
+    /// Worker → worker: app exchange traffic (tiles, ring rows, …).
+    App(Payload),
+    /// Worker → leader: this rank's reduced result.
+    Result(Payload),
     /// Worker → leader: per-rank stats at completion.
     Stats(crate::coordinator::driver::RankStats),
     /// Leader → worker: phase barrier release.
@@ -47,7 +128,8 @@ pub enum Message {
     /// Leader → worker: all done, exit.
     Shutdown,
     /// Failure injection: the receiving worker dies immediately without
-    /// reporting anything (simulates a crashed rank).
+    /// reporting anything (simulates a crashed rank) and marks itself
+    /// killed on the transport so the leader can detect the loss.
     Crash,
 }
 
@@ -56,12 +138,10 @@ impl Message {
     pub fn payload_bytes(&self) -> u64 {
         let body = match self {
             Message::AssignData { blocks, .. } => {
-                blocks.iter().map(|(_, _, m)| m.nbytes()).sum::<u64>()
+                blocks.iter().map(|(_, _, d)| d.nbytes()).sum::<u64>()
             }
-            Message::ComputeCorr { tasks } => (tasks.len() * 16) as u64,
-            Message::CorrTile { tile, .. } => tile.nbytes(),
-            Message::RingRows { rows, .. } => rows.nbytes(),
-            Message::Edges { edges } => (edges.len() * 12) as u64,
+            Message::ComputeTasks { tasks } => (tasks.len() * 16) as u64,
+            Message::App(p) | Message::Result(p) => p.nbytes(),
             Message::Stats(_) => 128,
             Message::Proceed | Message::PhaseDone { .. } | Message::Shutdown | Message::Crash => 0,
         };
@@ -71,10 +151,9 @@ impl Message {
     pub fn kind(&self) -> &'static str {
         match self {
             Message::AssignData { .. } => "assign-data",
-            Message::ComputeCorr { .. } => "compute-corr",
-            Message::CorrTile { .. } => "corr-tile",
-            Message::RingRows { .. } => "ring-rows",
-            Message::Edges { .. } => "edges",
+            Message::ComputeTasks { .. } => "compute-tasks",
+            Message::App(p) => p.kind(),
+            Message::Result(_) => "result",
             Message::Stats(_) => "stats",
             Message::Proceed => "proceed",
             Message::PhaseDone { .. } => "phase-done",
@@ -91,16 +170,35 @@ mod tests {
     #[test]
     fn payload_accounting() {
         let m = Arc::new(Matrix::zeros(4, 8));
-        let tile = Message::CorrTile { rows_block: 0, cols_block: 1, transposed: false, tile: m };
+        let tile = Message::App(Payload::CorrTile {
+            rows_block: 0,
+            cols_block: 1,
+            transposed: false,
+            tile: m,
+        });
         assert_eq!(tile.payload_bytes(), HEADER_BYTES + 4 * 8 * 4);
         assert_eq!(Message::Shutdown.payload_bytes(), HEADER_BYTES);
-        let e = Message::Edges { edges: vec![(0, 1, 0.5); 10] };
+        let e = Message::Result(Payload::Edges(vec![(0, 1, 0.5); 10]));
         assert_eq!(e.payload_bytes(), HEADER_BYTES + 120);
+    }
+
+    #[test]
+    fn block_data_accounting() {
+        let rows = BlockData::Rows(Matrix::zeros(3, 5));
+        assert_eq!(rows.nbytes(), 60);
+        assert_eq!(rows.len(), 3);
+        let bodies = BlockData::Bodies { mass: vec![1.0; 4], pos: vec![[0.0; 3]; 4] };
+        assert_eq!(bodies.nbytes(), 4 * 8 + 4 * 24);
+        assert_eq!(bodies.len(), 4);
+        assert!(!bodies.is_empty());
     }
 
     #[test]
     fn kinds_distinct() {
         assert_eq!(Message::Proceed.kind(), "proceed");
         assert_eq!(Message::Shutdown.kind(), "shutdown");
+        assert_eq!(Message::App(Payload::Edges(vec![])).kind(), "edges");
+        assert_eq!(Message::Result(Payload::Tiles(vec![])).kind(), "result");
+        assert_eq!(Payload::Forces(vec![]).items(), 0);
     }
 }

@@ -1,16 +1,19 @@
-//! The distributed coordinator (L3) — the paper's system contribution.
+//! The distributed coordinator (L3) — the paper's system contribution,
+//! split into an app-agnostic engine and app plugins.
 //!
 //! Simulated cluster: one OS thread per "MPI rank", channel transport with
-//! byte accounting ([`transport`]), a leader that builds the quorum set,
-//! scatters dataset blocks and collects results ([`leader`]), and workers
-//! that execute correlation / elimination tiles ([`worker`]).
+//! byte accounting ([`transport`]), a generic leader that builds the
+//! placement, scatters dataset blocks, hands out pair work, sequences
+//! barriers and collects results ([`leader`]), and generic workers that
+//! delegate the compute/exchange protocol to a [`DistributedApp`] plugin
+//! ([`worker`], [`app`]).
 //!
-//! The end-to-end flows live in [`driver`]:
-//! * [`driver::run_distributed_pcit`] — the paper's §5 experiment
-//!   (quorum-exact and quorum-local modes).
-//! * [`driver::run_single_node`] — the single-node baseline.
+//! The engine entry point is [`driver::run_app`]; placement is selected via
+//! [`crate::quorum::Strategy`] (`--strategy {cyclic,grid,full}`). The
+//! in-tree plugins are PCIT ([`crate::apps::pcit`]), all-pairs similarity
+//! ([`crate::apps::similarity`]) and n-body ([`crate::apps::nbody`]).
 //!
-//! Phase structure of quorum-exact PCIT (DESIGN.md §7):
+//! PCIT flows (phase structure of quorum-exact PCIT, DESIGN.md §7):
 //! 1. **Distribute** — rank i receives the standardized blocks of its
 //!    quorum S_i (k·N/P gene rows).
 //! 2. **Correlate** — every block pair computed exactly once by its owner
@@ -20,9 +23,15 @@
 
 pub mod messages;
 pub mod transport;
+pub mod app;
 pub mod worker;
 pub mod leader;
 pub mod driver;
 
-pub use driver::{run_distributed_pcit, run_resilient_pcit, run_single_node, DistributedReport, RankStats};
+pub use app::{DistributedApp, Plan, WorkerCtx};
+pub use driver::{
+    run_app, run_distributed_pcit, run_resilient_pcit, run_single_node, DistributedReport,
+    EngineOptions, EngineReport, RankStats,
+};
+pub use messages::{BlockData, Message, Payload};
 pub use transport::{Endpoint, Transport};

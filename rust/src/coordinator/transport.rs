@@ -178,7 +178,15 @@ mod tests {
         let (t, eps) = Transport::new(2);
         let m = std::sync::Arc::new(Matrix::zeros(8, 8));
         eps[0]
-            .send(1, Message::CorrTile { rows_block: 0, cols_block: 0, transposed: false, tile: m })
+            .send(
+                1,
+                Message::App(crate::coordinator::messages::Payload::CorrTile {
+                    rows_block: 0,
+                    cols_block: 0,
+                    transposed: false,
+                    tile: m,
+                }),
+            )
             .unwrap();
         let sent = eps[0].sent();
         let recvd = t.recv_stats[1].snapshot();

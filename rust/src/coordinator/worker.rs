@@ -1,411 +1,120 @@
-//! Worker rank: holds its quorum's data, executes correlation and
-//! elimination tiles, participates in the ring exchange.
+//! Generic worker rank: receives its quorum's blocks and owned tasks, hands
+//! control to the app plugin's protocol, reports result + stats, drains
+//! until shutdown. All app-specific compute lives in the
+//! [`DistributedApp`] implementation (PCIT, similarity, n-body).
 
+use super::app::{DistributedApp, Plan, WorkerCtx};
 use super::messages::Message;
 use super::transport::Endpoint;
-use crate::allpairs::PairTask;
 use crate::metrics::MemoryAccountant;
-use crate::runtime::{flags_to_mask, Executor};
-use crate::util::timer::ThreadCpuTimer;
-use crate::util::Matrix;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
-/// Execution plan parameters a worker needs (mirrors `RunConfig`).
-#[derive(Clone, Copy, Debug)]
-pub struct Plan {
-    /// Total genes.
-    pub n: usize,
-    /// Number of dataset blocks (= worker count).
-    pub p: usize,
-    /// Nominal block size ceil(n/p).
-    pub block: usize,
-    /// 0 = quorum-exact, 1 = quorum-local (ablation).
-    pub mode: u8,
-    /// true = full PCIT elimination; false = |r| >= threshold cut.
-    pub use_pcit: bool,
-    pub threshold: f32,
-}
-
-impl Plan {
-    pub fn block_range(&self, b: usize) -> std::ops::Range<usize> {
-        let lo = (b * self.block).min(self.n);
-        let hi = ((b + 1) * self.block).min(self.n);
-        lo..hi
+/// Worker entry point. `endpoint.rank` = block_id + 1 (leader is 0).
+///
+/// Any panic inside the worker (protocol violation, app bug) marks the rank
+/// killed on the transport before propagating, so the leader's failure
+/// detection surfaces a clean error instead of polling forever — the same
+/// path an injected `Crash` takes.
+pub fn worker_main(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
+    let transport = Arc::clone(endpoint.transport());
+    let rank = endpoint.rank;
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        worker_run(endpoint, app, plan)
+    }));
+    if let Err(payload) = outcome {
+        transport.kill(rank);
+        std::panic::resume_unwind(payload);
     }
 }
 
-pub const MODE_EXACT: u8 = 0;
-pub const MODE_LOCAL: u8 = 1;
-
-/// Worker entry point. `endpoint.rank` = block_id + 1 (leader is 0).
-pub fn worker_main(endpoint: Endpoint, executor: Executor, plan: Plan) {
+fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
     let my_block = endpoint.rank - 1;
     let mem = MemoryAccountant::new();
-    let mut w = WorkerState {
+    let mut blocks = BTreeMap::new();
+    let mut quorum = Vec::new();
+    let mut pending = VecDeque::new();
+
+    // ---- Phase 0: receive quorum data + task list. ----
+    let tasks = loop {
+        let Some(env) = endpoint.recv() else { return };
+        match env.msg {
+            Message::AssignData { quorum: q, blocks: bs } => {
+                for (bid, off, data) in bs {
+                    mem.alloc(data.nbytes());
+                    blocks.insert(bid, (off, data));
+                }
+                quorum = q;
+            }
+            Message::ComputeTasks { tasks } => break tasks,
+            Message::Crash => {
+                // Mark ourselves dead so the leader's failure detection can
+                // see the loss instead of hanging.
+                endpoint.transport().kill(endpoint.rank);
+                return;
+            }
+            Message::Shutdown => return,
+            // A fast peer's app traffic can outrun the leader's tasks.
+            Message::App(p) => pending.push_back(p),
+            other => panic!("worker {my_block}: unexpected {} in phase 0", other.kind()),
+        }
+    };
+
+    let mut ctx = WorkerCtx {
         ep: endpoint,
-        exec: executor,
         plan,
         my_block,
         mem,
-        blocks: BTreeMap::new(),
-        quorum: Vec::new(),
+        blocks,
+        quorum,
+        tasks,
+        pending,
         corr_tiles: 0,
         elim_tiles: 0,
         phase1_secs: 0.0,
         phase2_secs: 0.0,
-        pending: VecDeque::new(),
     };
-    w.run();
-}
 
-struct WorkerState {
-    ep: Endpoint,
-    exec: Executor,
-    plan: Plan,
-    my_block: usize,
-    mem: Arc<MemoryAccountant>,
-    /// block_id → (global row offset, standardized rows).
-    blocks: BTreeMap<usize, (usize, Matrix)>,
-    quorum: Vec<usize>,
-    corr_tiles: u64,
-    elim_tiles: u64,
-    phase1_secs: f64,
-    phase2_secs: f64,
-    /// Messages that arrived ahead of the phase that consumes them.
-    /// Point-to-point channels are FIFO per (sender, receiver) but there is
-    /// no global order across senders: a fast peer's `CorrTile` can land
-    /// before the leader's `ComputeCorr`, and a proceeded neighbor's
-    /// `RingRows` before our own `Proceed`.
-    pending: VecDeque<Message>,
-}
+    // ---- App protocol (compute + exchange + local reduce). ----
+    let Some(result) = app.run_worker(&mut ctx) else {
+        // Shut down / crashed mid-protocol: exit without reporting.
+        return;
+    };
 
-impl WorkerState {
-    fn run(&mut self) {
-        // ---- Phase 0: receive quorum data. ----
-        let tasks = loop {
-            let Some(env) = self.ep.recv() else { return };
-            match env.msg {
-                Message::AssignData { quorum, blocks } => {
-                    for (bid, off, m) in blocks {
-                        self.mem.alloc(m.nbytes());
-                        self.blocks.insert(bid, (off, m));
-                    }
-                    self.quorum = quorum;
-                }
-                Message::ComputeCorr { tasks } => break tasks,
-                Message::Shutdown | Message::Crash => return,
-                // A fast peer's tile can outrun the leader's ComputeCorr.
-                tile @ Message::CorrTile { .. } => self.pending.push_back(tile),
-                other => panic!("worker {}: unexpected {} in phase 0", self.my_block, other.kind()),
-            }
-        };
-
-        match self.plan.mode {
-            MODE_LOCAL => self.run_quorum_local(tasks),
-            _ => self.run_quorum_exact(tasks),
-        }
-    }
-
-    fn block_z(&self, b: usize) -> &Matrix {
-        &self.blocks.get(&b).unwrap_or_else(|| panic!("block {b} not in quorum of {}", self.my_block)).1
-    }
-
-    /// ---- Exact mode: tiles → row homes → ring scan. ----
-    fn run_quorum_exact(&mut self, tasks: Vec<PairTask>) {
-        // Phase timings count *compute* only (executor calls + edge
-        // extraction), not blocking receives: on a testbed with fewer cores
-        // than ranks, recv-wait time is other ranks' compute and would
-        // double-count into the critical path.
-        let sw = ThreadCpuTimer::start();
-        // Phase 1: compute owned correlation tiles (zero-copy reads out of
-        // the quorum blocks), route to row homes. Off-diagonal tiles ship
-        // the *same* buffer to both homes — the column home applies it
-        // transposed on write instead of receiving a transposed copy.
-        for t in &tasks {
-            let tile = Arc::new(self.exec.corr_tile(self.block_z(t.a).view(), self.block_z(t.b).view()));
-            self.corr_tiles += 1;
-            if t.a == t.b {
-                let _ = self.ep.send(t.a + 1, Message::CorrTile {
-                    rows_block: t.a,
-                    cols_block: t.b,
-                    transposed: false,
-                    tile,
-                });
-            } else {
-                let _ = self.ep.send(t.a + 1, Message::CorrTile {
-                    rows_block: t.a,
-                    cols_block: t.b,
-                    transposed: false,
-                    tile: Arc::clone(&tile),
-                });
-                let _ = self.ep.send(t.b + 1, Message::CorrTile {
-                    rows_block: t.b,
-                    cols_block: t.a,
-                    transposed: true,
-                    tile,
-                });
-            }
-        }
-        self.phase1_secs = sw.elapsed_secs();
-        let _ = self.ep.send(0, Message::PhaseDone { phase: 1 });
-
-        // Phase 1b: assemble my row block C[my_block, 0..N] from P tiles.
-        let my_range = self.plan.block_range(self.my_block);
-        let my_rows = my_range.len();
-        let mut row_block = Matrix::zeros(my_rows, self.plan.n);
-        self.mem.alloc(row_block.nbytes());
-        let mut tiles_needed = self.plan.p;
-        while tiles_needed > 0 {
-            let msg = match self.pending.pop_front() {
-                Some(m) => m,
-                None => match self.ep.recv() {
-                    Some(env) => env.msg,
-                    None => return,
-                },
-            };
-            match msg {
-                Message::CorrTile { rows_block, cols_block, transposed, tile } => {
-                    debug_assert_eq!(rows_block, self.my_block);
-                    let c0 = self.plan.block_range(cols_block).start;
-                    if transposed {
-                        row_block.set_block_transposed(0, c0, &tile);
-                    } else {
-                        row_block.set_block(0, c0, &tile);
-                    }
-                    tiles_needed -= 1;
-                }
+    // ---- Report result + stats, then drain until shutdown. ----
+    let (sent_msgs, sent_bytes) = ctx.ep.sent();
+    let (recv_msgs, recv_bytes) = ctx.ep.received();
+    let stats = super::driver::RankStats {
+        rank: ctx.my_block,
+        peak_logical_bytes: ctx.mem.peak_bytes(),
+        corr_tiles: ctx.corr_tiles,
+        elim_tiles: ctx.elim_tiles,
+        sent_msgs,
+        sent_bytes,
+        recv_msgs,
+        recv_bytes,
+        phase1_secs: ctx.phase1_secs,
+        phase2_secs: ctx.phase2_secs,
+        n_items: result.items(),
+    };
+    let _ = ctx.ep.send(0, Message::Result(result));
+    let _ = ctx.ep.send(0, Message::Stats(stats));
+    loop {
+        match ctx.ep.recv() {
+            None => return,
+            Some(env) => match env.msg {
                 Message::Shutdown => return,
-                other => panic!("worker {}: unexpected {} in phase 1b", self.my_block, other.kind()),
-            }
-        }
-        let _ = self.ep.send(0, Message::PhaseDone { phase: 2 });
-
-        // Barrier: wait for Proceed so ring messages don't interleave with
-        // stragglers' tiles. A proceeded neighbor's first RingRows may beat
-        // our Proceed — stash it.
-        loop {
-            let Some(env) = self.ep.recv() else { return };
-            match env.msg {
-                Message::Proceed => break,
-                Message::Shutdown => return,
-                ring @ Message::RingRows { .. } => self.pending.push_back(ring),
-                other => panic!("worker {}: unexpected {} at barrier", self.my_block, other.kind()),
-            }
-        }
-
-        // Phase 2: elimination. Diagonal block first, then the ring.
-        // Compute time accumulated around executor work only (see above).
-        let mut edges: Vec<(usize, usize, f32)> = Vec::new();
-        if self.plan.use_pcit {
-            let sw2 = ThreadCpuTimer::start();
-            self.eliminate_and_collect(&row_block, self.my_block, &row_block, &mut edges);
-            self.phase2_secs += sw2.elapsed_secs();
-            let p = self.plan.p;
-            let mut visiting_block = self.my_block;
-            let mut visiting = row_block.clone();
-            self.mem.alloc(visiting.nbytes());
-            for _step in 1..p {
-                let next = (self.my_block + 1) % p + 1;
-                let sent_bytes = visiting.nbytes();
-                let _ = self.ep.send(next, Message::RingRows { block: visiting_block, rows: visiting });
-                self.mem.free(sent_bytes);
-                let (vb, vr) = loop {
-                    let msg = match self.pending.pop_front() {
-                        Some(m) => m,
-                        None => match self.ep.recv() {
-                            Some(env) => env.msg,
-                            None => return,
-                        },
-                    };
-                    match msg {
-                        Message::RingRows { block, rows } => break (block, rows),
-                        Message::Shutdown => return,
-                        other => panic!("worker {}: unexpected {} in ring", self.my_block, other.kind()),
-                    }
-                };
-                visiting_block = vb;
-                visiting = vr;
-                self.mem.alloc(visiting.nbytes());
-                if self.owns_edge_block(self.my_block, visiting_block) {
-                    let sw2 = ThreadCpuTimer::start();
-                    self.eliminate_and_collect(&row_block, visiting_block, &visiting, &mut edges);
-                    self.phase2_secs += sw2.elapsed_secs();
+                Message::Crash => {
+                    ctx.ep.transport().kill(ctx.ep.rank);
+                    return;
                 }
-            }
-        } else {
-            // Threshold mode: no mediation scan; edges straight from rows.
-            let sw2 = ThreadCpuTimer::start();
-            self.threshold_edges(&row_block, &mut edges);
-            self.phase2_secs += sw2.elapsed_secs();
-        }
-        self.finish(edges);
-    }
-
-    /// Balanced ownership of off-diagonal edge blocks during the ring.
-    fn owns_edge_block(&self, a: usize, b: usize) -> bool {
-        debug_assert_ne!(a, b);
-        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
-        let owner = if (lo + hi) % 2 == 0 { lo } else { hi };
-        owner == a
-    }
-
-    /// Run elimination for edge block (my_block, other_block) and append
-    /// surviving edges. `my_rows`: C[my_block, :]; `other_rows`: C[other, :].
-    fn eliminate_and_collect(
-        &mut self,
-        my_rows: &Matrix,
-        other_block: usize,
-        other_rows: &Matrix,
-        edges: &mut Vec<(usize, usize, f32)>,
-    ) {
-        let my_range = self.plan.block_range(self.my_block);
-        let other_range = self.plan.block_range(other_block);
-        let (a, b) = (my_range.len(), other_range.len());
-        if a == 0 || b == 0 {
-            return;
-        }
-        // cxy: zero-copy window of my rows at the other block's columns.
-        let cxy = my_rows.view_block(0, other_range.start, a, b);
-        let flags = self.exec.pcit_tile(cxy, my_rows.view(), other_rows.view());
-        self.elim_tiles += 1;
-        let mask = flags_to_mask(&flags);
-        let diagonal = other_block == self.my_block;
-        for i in 0..a {
-            for j in 0..b {
-                if diagonal && j <= i {
-                    continue;
-                }
-                if !mask[i * b + j] {
-                    let x = my_range.start + i;
-                    let y = other_range.start + j;
-                    let r = cxy[(i, j)];
-                    edges.push((x.min(y), x.max(y), r));
-                }
-            }
-        }
-    }
-
-    /// |r| >= threshold edges from my row block (emit x < y only).
-    fn threshold_edges(&mut self, my_rows: &Matrix, edges: &mut Vec<(usize, usize, f32)>) {
-        let my_range = self.plan.block_range(self.my_block);
-        for i in 0..my_range.len() {
-            let x = my_range.start + i;
-            let row = my_rows.row(i);
-            for (y, &r) in row.iter().enumerate().skip(x + 1) {
-                if r.abs() >= self.plan.threshold {
-                    edges.push((x, y, r));
-                }
-            }
-        }
-    }
-
-    /// ---- Local mode: everything from quorum-local data. ----
-    fn run_quorum_local(&mut self, tasks: Vec<PairTask>) {
-        let sw = ThreadCpuTimer::start();
-        let mut edges: Vec<(usize, usize, f32)> = Vec::new();
-        // Mediator panel: all quorum genes, concatenated.
-        let quorum = self.quorum.clone();
-        let panel: Vec<(usize, usize)> = quorum.iter().map(|&b| {
-            let r = self.plan.block_range(b);
-            (b, r.len())
-        }).collect();
-        for t in &tasks {
-            let (a_len, b_len) = (self.block_z(t.a).rows(), self.block_z(t.b).rows());
-            if a_len == 0 || b_len == 0 {
-                continue;
-            }
-            // Tiles read the quorum blocks in place — no per-task clones.
-            let cxy = self.exec.corr_tile(self.block_z(t.a).view(), self.block_z(t.b).view());
-            self.corr_tiles += 1;
-            if self.plan.use_pcit {
-                // r(x, z) and r(y, z) for z over the quorum panel.
-                let panel_cols: usize = panel.iter().map(|&(_, l)| l).sum();
-                let mut rxz = Matrix::zeros(a_len, panel_cols);
-                let mut ryz = Matrix::zeros(b_len, panel_cols);
-                let mut c0 = 0usize;
-                for &(qb, qlen) in &panel {
-                    if qlen == 0 {
-                        continue;
-                    }
-                    let ta = self.exec.corr_tile(self.block_z(t.a).view(), self.block_z(qb).view());
-                    let tb = self.exec.corr_tile(self.block_z(t.b).view(), self.block_z(qb).view());
-                    self.corr_tiles += 2;
-                    rxz.set_block(0, c0, &ta);
-                    ryz.set_block(0, c0, &tb);
-                    c0 += qlen;
-                }
-                let flags = self.exec.pcit_tile(cxy.view(), rxz.view(), ryz.view());
-                self.elim_tiles += 1;
-                let mask = flags_to_mask(&flags);
-                self.collect_task_edges(t, &cxy, Some(&mask), &mut edges);
-            } else {
-                self.collect_task_edges(t, &cxy, None, &mut edges);
-            }
-        }
-        self.phase2_secs = sw.elapsed_secs();
-        self.finish(edges);
-    }
-
-    fn collect_task_edges(
-        &self,
-        t: &PairTask,
-        cxy: &Matrix,
-        mask: Option<&[bool]>,
-        edges: &mut Vec<(usize, usize, f32)>,
-    ) {
-        let ra = self.plan.block_range(t.a);
-        let rb = self.plan.block_range(t.b);
-        let b_len = rb.len();
-        for i in 0..ra.len() {
-            for j in 0..b_len {
-                if t.a == t.b && j <= i {
-                    continue;
-                }
-                if let Some(m) = mask {
-                    if m[i * b_len + j] {
-                        continue;
-                    }
-                }
-                let r = cxy[(i, j)];
-                if !self.plan.use_pcit && r.abs() < self.plan.threshold {
-                    continue;
-                }
-                let x = ra.start + i;
-                let y = rb.start + j;
-                edges.push((x.min(y), x.max(y), r));
-            }
-        }
-    }
-
-    fn finish(&mut self, edges: Vec<(usize, usize, f32)>) {
-        let (sent_msgs, sent_bytes) = self.ep.sent();
-        let (recv_msgs, recv_bytes) = self.ep.received();
-        let stats = super::driver::RankStats {
-            rank: self.my_block,
-            peak_logical_bytes: self.mem.peak_bytes(),
-            corr_tiles: self.corr_tiles,
-            elim_tiles: self.elim_tiles,
-            sent_msgs,
-            sent_bytes,
-            recv_msgs,
-            recv_bytes,
-            phase1_secs: self.phase1_secs,
-            phase2_secs: self.phase2_secs,
-            n_edges: edges.len() as u64,
-        };
-        let _ = self.ep.send(0, Message::Edges { edges });
-        let _ = self.ep.send(0, Message::Stats(stats));
-        // Drain until shutdown.
-        loop {
-            match self.ep.recv() {
-                None => return,
-                Some(env) => match env.msg {
-                    Message::Shutdown => return,
-                    Message::RingRows { .. } => continue, // late ring traffic
-                    other => panic!("worker {}: unexpected {} after finish", self.my_block, other.kind()),
-                },
-            }
+                Message::App(_) => continue, // late exchange traffic
+                other => panic!(
+                    "worker {}: unexpected {} after finish",
+                    ctx.my_block,
+                    other.kind()
+                ),
+            },
         }
     }
 }

@@ -54,6 +54,21 @@ impl Partition {
         e / self.block
     }
 
+    /// Blocks rank `rank` must hold under a placement: `(block id, element
+    /// range)` per quorum member, sorted by block id.
+    pub fn blocks_for(&self, q: &dyn crate::quorum::QuorumSystem, rank: usize) -> Vec<(usize, Range<usize>)> {
+        q.quorum(rank).into_iter().map(|b| (b, self.range(b))).collect()
+    }
+
+    /// Bytes rank `rank` holds for its placed blocks at `elem_bytes` per
+    /// element — the placement-generic memory accounting behind Fig. 2-R.
+    pub fn placement_bytes(&self, q: &dyn crate::quorum::QuorumSystem, rank: usize, elem_bytes: usize) -> u64 {
+        self.blocks_for(q, rank)
+            .iter()
+            .map(|(_, r)| (r.len() * elem_bytes) as u64)
+            .sum()
+    }
+
     /// Union of all ranges covers 0..n exactly once (Eq. 5).
     pub fn verify(&self) -> bool {
         let mut next = 0usize;
@@ -107,6 +122,30 @@ mod tests {
             let d = pt.dataset_of(e);
             assert!(pt.range(d).contains(&e), "element {e} dataset {d}");
         }
+    }
+
+    #[test]
+    fn placement_blocks_follow_quorum() {
+        use crate::quorum::Strategy;
+        let pt = Partition::new(100, 8);
+        for s in Strategy::all() {
+            let q = s.build(8).unwrap();
+            for rank in 0..8 {
+                let blocks = pt.blocks_for(q.as_ref(), rank);
+                assert_eq!(
+                    blocks.iter().map(|(b, _)| *b).collect::<Vec<_>>(),
+                    q.quorum(rank),
+                    "strategy={}",
+                    s.name()
+                );
+                let bytes = pt.placement_bytes(q.as_ref(), rank, 4);
+                let expect: u64 = blocks.iter().map(|(_, r)| (r.len() * 4) as u64).sum();
+                assert_eq!(bytes, expect);
+            }
+        }
+        // Full replication holds all N elements.
+        let full = Strategy::Full.build(8).unwrap();
+        assert_eq!(pt.placement_bytes(full.as_ref(), 0, 4), 400);
     }
 
     #[test]

@@ -1,18 +1,22 @@
 //! `quorall` — launcher CLI for the cyclic-quorum all-pairs engine.
 //!
 //! Subcommands:
-//! * `quorum`  — generate/inspect quorum sets, emit the P = 4..111 table
-//! * `pcit`    — run distributed (or single-node) PCIT on synthetic/CSV data
-//! * `nbody`   — quorum-decomposed n-body demo
-//! * `sim`     — analytic cluster-model predictions (Figure 2 extrapolation)
-//! * `info`    — environment/runtime report
+//! * `quorum`     — generate/inspect quorum sets, emit the P = 4..111 table
+//! * `pcit`       — run distributed (or single-node) PCIT on synthetic/CSV data
+//! * `similarity` — distributed all-pairs similarity (top-k report)
+//! * `nbody`      — placement-decomposed n-body demo
+//! * `sim`        — analytic cluster-model predictions (Figure 2 extrapolation)
+//! * `info`       — environment/runtime report
+//!
+//! The distributed commands take `--strategy {cyclic,grid,full}` to select
+//! the placement the engine runs under.
 
 use quorall::cli::{App, ArgSpec, Command, ParseOutcome, Parsed};
 use quorall::config::{BackendKind, DatasetConfig, PcitMode, RunConfig};
-use quorall::coordinator::{run_distributed_pcit, run_single_node};
+use quorall::coordinator::{run_distributed_pcit, run_single_node, EngineOptions};
 use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
 use quorall::metrics::Table;
-use quorall::quorum::{self, CyclicQuorumSet};
+use quorall::quorum::{self, CyclicQuorumSet, Strategy};
 use quorall::util::bytes::format_bytes;
 use quorall::util::timer::format_secs;
 
@@ -34,6 +38,7 @@ fn app() -> App {
                 .arg(ArgSpec::opt("genes", "synthetic gene count", "512"))
                 .arg(ArgSpec::opt("samples", "synthetic sample count", "32"))
                 .arg(ArgSpec::opt("mode", "single | quorum-exact | quorum-local", "quorum-exact"))
+                .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
                 .arg(ArgSpec::opt("backend", "native | xla", "native"))
                 .arg(ArgSpec::opt("seed", "dataset seed", "42"))
                 .arg(ArgSpec::opt("csv", "load expression CSV instead of synthetic", ""))
@@ -41,9 +46,20 @@ fn app() -> App {
                 .arg(ArgSpec::flag("verify", "also run single-node and compare")),
         )
         .command(
-            Command::new("nbody", "quorum-decomposed n-body simulation")
+            Command::new("similarity", "distributed all-pairs similarity (top-k report)")
+                .arg(ArgSpec::opt("subjects", "number of feature vectors", "256"))
+                .arg(ArgSpec::opt("dim", "embedding dimension", "64"))
+                .arg(ArgSpec::opt("ranks", "simulated ranks", "8"))
+                .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
+                .arg(ArgSpec::opt("topk", "pairs to report", "10"))
+                .arg(ArgSpec::opt("seed", "feature seed", "42"))
+                .arg(ArgSpec::opt("backend", "native | xla", "native")),
+        )
+        .command(
+            Command::new("nbody", "placement-decomposed n-body simulation")
                 .arg(ArgSpec::opt("bodies", "number of bodies", "256"))
                 .arg(ArgSpec::opt("ranks", "simulated ranks", "8"))
+                .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
                 .arg(ArgSpec::opt("steps", "leapfrog steps", "50"))
                 .arg(ArgSpec::opt("dt", "time step", "0.001"))
                 .arg(ArgSpec::opt("threads", "pool threads", "4")),
@@ -52,6 +68,7 @@ fn app() -> App {
             Command::new("sim", "analytic cluster predictions (Fig. 2 extrapolation)")
                 .arg(ArgSpec::opt("genes", "gene count", "2000"))
                 .arg(ArgSpec::opt("samples", "sample count", "48"))
+                .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
                 .arg(ArgSpec::opt("max-ranks", "largest P to predict", "64")),
         )
         .command(
@@ -79,6 +96,7 @@ fn main() {
             let result = match p.command {
                 "quorum" => cmd_quorum(&p),
                 "pcit" => cmd_pcit(&p),
+                "similarity" => cmd_similarity(&p),
                 "dataset" => cmd_dataset(&p),
                 "nbody" => cmd_nbody(&p),
                 "sim" => cmd_sim(&p),
@@ -165,11 +183,14 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
     } else {
         let mode = PcitMode::parse(p.get_str("mode").unwrap_or("quorum-exact"))
             .ok_or_else(|| anyhow::anyhow!("bad --mode"))?;
+        let strategy = Strategy::parse(p.get_str("strategy").unwrap_or("cyclic"))
+            .ok_or_else(|| anyhow::anyhow!("bad --strategy (cyclic | grid | full)"))?;
         let backend = BackendKind::parse(p.get_str("backend").unwrap_or("native"))
             .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
         let cfg = RunConfig {
             ranks: p.get_usize("ranks")?,
             mode,
+            strategy,
             backend,
             seed: p.get_u64("seed")?,
             dataset: DatasetConfig::Synthetic {
@@ -206,10 +227,11 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
         load_dataset(p)?
     };
     println!(
-        "PCIT: N = {} genes, M = {} samples, mode = {}, backend = {}, ranks = {}",
+        "PCIT: N = {} genes, M = {} samples, mode = {}, strategy = {}, backend = {}, ranks = {}",
         dataset.genes(),
         dataset.samples(),
         cfg.mode.name(),
+        cfg.strategy.name(),
         cfg.backend.name(),
         cfg.ranks
     );
@@ -269,38 +291,100 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_similarity(p: &Parsed) -> anyhow::Result<()> {
+    use quorall::apps::similarity::{run_distributed_similarity, top_pairs};
+    use quorall::util::prng::Rng;
+    use quorall::util::Matrix;
+
+    let n = p.get_usize("subjects")?;
+    let dim = p.get_usize("dim")?;
+    let ranks = p.get_usize("ranks")?;
+    let k = p.get_usize("topk")?;
+    let strategy = Strategy::parse(p.get_str("strategy").unwrap_or("cyclic"))
+        .ok_or_else(|| anyhow::anyhow!("bad --strategy (cyclic | grid | full)"))?;
+    let backend = BackendKind::parse(p.get_str("backend").unwrap_or("native"))
+        .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
+    let exec = quorall::runtime::executor_for(backend, std::path::Path::new("artifacts"))?;
+
+    let mut rng = Rng::new(p.get_u64("seed")?);
+    let features = Matrix::from_fn(n, dim, |_, _| rng.normal_f32());
+    println!(
+        "similarity: N = {n} × dim = {dim}, strategy = {}, ranks = {ranks}, backend = {}",
+        strategy.name(),
+        exec.name()
+    );
+    let opts = EngineOptions::new(ranks, strategy);
+    let (sim, rep) = run_distributed_similarity(&features, &exec, &opts)?;
+    println!(
+        "distributed similarity ({}) in {} | replication k = {} | peak mem/rank {} | comm {}",
+        rep.strategy.name(),
+        format_secs(rep.wall_secs),
+        rep.max_quorum_size,
+        format_bytes(rep.peak_bytes_per_rank),
+        format_bytes(rep.total_comm_bytes)
+    );
+    let top = top_pairs(&sim, k);
+    println!("top-{k} most similar pairs:");
+    for (x, y, s) in &top {
+        println!("  ({x:4}, {y:4})  sim = {s:.4}");
+    }
+    Ok(())
+}
+
 fn cmd_nbody(p: &Parsed) -> anyhow::Result<()> {
     use quorall::apps::nbody;
     let n = p.get_usize("bodies")?;
     let ranks = p.get_usize("ranks")?;
     let steps = p.get_usize("steps")?;
     let dt = p.get_f64("dt")?;
+    let strategy = Strategy::parse(p.get_str("strategy").unwrap_or("cyclic"))
+        .ok_or_else(|| anyhow::anyhow!("bad --strategy (cyclic | grid | full)"))?;
     let pool = quorall::pool::ThreadPool::new(p.get_usize("threads")?);
     let mut bodies = nbody::Bodies::random(n, 42);
     let e0 = bodies.total_energy();
-    let sw = quorall::util::timer::Stopwatch::start();
-    let drift = nbody::simulate(&mut bodies, ranks, steps, dt, &pool)?;
+
+    // One engine pass first: the distributed path with measured stats; its
+    // forces then seed the simulation (no duplicate first force pass).
+    let opts = EngineOptions::new(ranks, strategy);
+    let (forces, rep) = nbody::run_distributed_nbody(&bodies, &opts)?;
     println!(
-        "n-body: {n} bodies, {ranks} ranks, {steps} steps in {} | E0 = {e0:.4}, relative energy drift = {drift:.2e}",
+        "distributed forces ({}): peak mem/rank {} | comm {}",
+        rep.strategy.name(),
+        format_bytes(rep.peak_bytes_per_rank),
+        format_bytes(rep.total_comm_bytes)
+    );
+
+    let sw = quorall::util::timer::Stopwatch::start();
+    let drift =
+        nbody::simulate_with_initial_forces(&mut bodies, ranks, strategy, steps, dt, &pool, forces)?;
+    println!(
+        "n-body: {n} bodies, {ranks} ranks ({} placement), {steps} steps in {} | E0 = {e0:.4}, relative energy drift = {drift:.2e}",
+        strategy.name(),
         format_secs(sw.elapsed_secs())
     );
     Ok(())
 }
 
 fn cmd_sim(p: &Parsed) -> anyhow::Result<()> {
-    use quorall::sim::{predict_quorum, predict_single, ClusterModel};
+    use quorall::sim::{predict_placement, predict_single, ClusterModel};
     let n = p.get_usize("genes")?;
     let m = p.get_usize("samples")?;
     let maxp = p.get_usize("max-ranks")?;
+    let strategy = Strategy::parse(p.get_str("strategy").unwrap_or("cyclic"))
+        .ok_or_else(|| anyhow::anyhow!("bad --strategy (cyclic | grid | full)"))?;
     let model = ClusterModel::default();
     let single = predict_single(n, m, 16, &model);
     let mut t = Table::new(
-        &format!("cluster-model predictions (N = {n}, M = {m}; single-node 16T = {})", format_secs(single.total_secs)),
+        &format!(
+            "cluster-model predictions (N = {n}, M = {m}, {} placement; single-node 16T = {})",
+            strategy.name(),
+            format_secs(single.total_secs)
+        ),
         &["P", "nodes", "total", "speedup", "mem/rank"],
     );
     let mut pp = 4;
     while pp <= maxp {
-        let pred = predict_quorum(n, m, pp, &model)?;
+        let pred = predict_placement(n, m, pp, strategy, &model)?;
         t.row(vec![
             pp.to_string(),
             pred.nodes.to_string(),

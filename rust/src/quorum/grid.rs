@@ -71,6 +71,13 @@ impl GridQuorumSet {
         (0..self.p).map(|i| self.quorum(i).len()).max().unwrap_or(0)
     }
 
+    /// Membership without materializing the quorum: `d` is in `i`'s quorum
+    /// iff they share a grid row or a grid column.
+    pub fn contains(&self, i: usize, d: usize) -> bool {
+        debug_assert!(i < self.p && d < self.p);
+        i / self.cols == d / self.cols || i % self.cols == d % self.cols
+    }
+
     /// Every two quorums intersect (Maekawa's property).
     pub fn verify_intersection_property(&self) -> bool {
         for i in 0..self.p {
@@ -85,28 +92,15 @@ impl GridQuorumSet {
         true
     }
 
-    /// Does the system have the paper's all-pairs property? (Generally NO —
-    /// this is the point of the comparison: intersection alone is weaker.)
-    pub fn has_all_pairs_property(&self) -> bool {
-        for a in 0..self.p {
-            for b in a..self.p {
-                let hosted = (0..self.p).any(|i| {
-                    let q = self.quorum(i);
-                    q.binary_search(&a).is_ok() && q.binary_search(&b).is_ok()
-                });
-                if !hosted {
-                    return false;
-                }
-            }
-        }
-        true
-    }
+    // The all-pairs check lives on the `QuorumSystem` trait
+    // (`quorum::system`), shared by every placement — one implementation of
+    // the engine's key validity predicate.
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quorum::CyclicQuorumSet;
+    use crate::quorum::{CyclicQuorumSet, QuorumSystem};
 
     #[test]
     fn grid_dimensions() {

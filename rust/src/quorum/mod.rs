@@ -10,6 +10,9 @@
 //! * [`cyclic`] — [`CyclicQuorumSet`]: quorum generation, membership, and
 //!   verification of the intersection/cover/all-pairs properties.
 //! * [`analysis`] — replication profiles vs the atom/force baselines.
+//! * [`system`] — the [`QuorumSystem`] placement trait ([`CyclicQuorumSet`],
+//!   [`GridQuorumSet`], [`FullReplication`]) and the runtime-selectable
+//!   [`Strategy`] behind `--strategy {cyclic,grid,full}`.
 
 pub mod gf;
 pub mod singer;
@@ -18,10 +21,12 @@ pub mod search;
 pub mod tables;
 pub mod cyclic;
 pub mod grid;
+pub mod system;
 pub mod analysis;
 
 pub use analysis::{quorum_replication, report, QuorumReport, ReplicationProfile};
 pub use cyclic::CyclicQuorumSet;
 pub use grid::GridQuorumSet;
+pub use system::{FullReplication, QuorumSystem, Strategy};
 pub use diffset::{is_relaxed_difference_set, lower_bound_k};
 pub use search::{find_base_set, SearchParams};

@@ -1,0 +1,292 @@
+//! Placement abstraction: a [`QuorumSystem`] says which dataset blocks each
+//! process holds. The engine (assignment, scatter, memory accounting, the
+//! analytic model) is written against this trait, so the paper's comparison
+//! — cyclic quorums vs dual-array grids vs full replication — is a runtime
+//! choice ([`Strategy`]), not three code paths.
+
+use super::cyclic::CyclicQuorumSet;
+use super::grid::GridQuorumSet;
+
+/// A placement of P datasets over P processes.
+///
+/// `quorum(i)` must return a sorted, deduplicated list of dataset ids.
+/// A placement is usable for all-pairs work iff `has_all_pairs_property`
+/// holds — the engine verifies this when building the pair assignment and
+/// reports a clean error otherwise.
+pub trait QuorumSystem: Send + Sync + std::fmt::Debug {
+    /// Number of processes (= datasets) in the system.
+    fn processes(&self) -> usize;
+
+    /// Datasets held by process `i`, sorted ascending.
+    fn quorum(&self, i: usize) -> Vec<usize>;
+
+    /// Short placement name for reports ("cyclic", "grid", "full").
+    fn name(&self) -> &'static str;
+
+    /// Does process `i` hold dataset `d`?
+    fn contains(&self, i: usize, d: usize) -> bool {
+        self.quorum(i).binary_search(&d).is_ok()
+    }
+
+    /// Largest per-process quorum — the replication factor that drives
+    /// memory per process (paper Fig. 2 right).
+    fn max_quorum_size(&self) -> usize {
+        (0..self.processes()).map(|i| self.quorum(i).len()).max().unwrap_or(0)
+    }
+
+    /// Processes whose quorum contains dataset `d`.
+    fn holders(&self, d: usize) -> Vec<usize> {
+        (0..self.processes()).filter(|&i| self.contains(i, d)).collect()
+    }
+
+    /// Processes holding *both* datasets — the candidate owners of pair
+    /// work (a, b).
+    fn pair_hosts(&self, a: usize, b: usize) -> Vec<usize> {
+        (0..self.processes())
+            .filter(|&i| self.contains(i, a) && self.contains(i, b))
+            .collect()
+    }
+
+    /// Every unordered dataset pair (incl. self-pairs) hosted somewhere
+    /// (paper Eq. 16) — the property the engine needs.
+    fn has_all_pairs_property(&self) -> bool {
+        let p = self.processes();
+        for a in 0..p {
+            for b in a..p {
+                if self.pair_hosts(a, b).is_empty() {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl QuorumSystem for CyclicQuorumSet {
+    fn processes(&self) -> usize {
+        CyclicQuorumSet::processes(self)
+    }
+
+    fn quorum(&self, i: usize) -> Vec<usize> {
+        CyclicQuorumSet::quorum(self, i)
+    }
+
+    fn name(&self) -> &'static str {
+        "cyclic"
+    }
+
+    fn contains(&self, i: usize, d: usize) -> bool {
+        CyclicQuorumSet::contains(self, i, d)
+    }
+
+    fn max_quorum_size(&self) -> usize {
+        self.quorum_size()
+    }
+
+    fn pair_hosts(&self, a: usize, b: usize) -> Vec<usize> {
+        CyclicQuorumSet::pair_hosts(self, a, b)
+    }
+}
+
+impl QuorumSystem for GridQuorumSet {
+    fn processes(&self) -> usize {
+        GridQuorumSet::processes(self)
+    }
+
+    fn quorum(&self, i: usize) -> Vec<usize> {
+        GridQuorumSet::quorum(self, i)
+    }
+
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn contains(&self, i: usize, d: usize) -> bool {
+        GridQuorumSet::contains(self, i, d)
+    }
+
+    fn max_quorum_size(&self) -> usize {
+        GridQuorumSet::max_quorum_size(self)
+    }
+}
+
+/// The no-savings baseline: every process holds every dataset (the
+/// "all-data" / generalized-framework placement the paper improves on).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FullReplication {
+    p: usize,
+}
+
+impl FullReplication {
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1, "P must be >= 1");
+        Self { p }
+    }
+}
+
+impl QuorumSystem for FullReplication {
+    fn processes(&self) -> usize {
+        self.p
+    }
+
+    fn quorum(&self, _i: usize) -> Vec<usize> {
+        (0..self.p).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn contains(&self, _i: usize, d: usize) -> bool {
+        d < self.p
+    }
+
+    fn max_quorum_size(&self) -> usize {
+        self.p
+    }
+
+    fn has_all_pairs_property(&self) -> bool {
+        true
+    }
+}
+
+/// Which placement the engine should use — selectable via
+/// `--strategy {cyclic,grid,full}` and `[run] strategy` in configs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Cyclic quorums (the paper): one array of ~√P blocks per process.
+    Cyclic,
+    /// Maekawa grid / dual-array baseline: ~2√P blocks per process.
+    Grid,
+    /// Full replication: every process holds everything.
+    Full,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cyclic" | "quorum" => Some(Strategy::Cyclic),
+            "grid" | "dual-array" => Some(Strategy::Grid),
+            "full" | "all-data" => Some(Strategy::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Cyclic => "cyclic",
+            Strategy::Grid => "grid",
+            Strategy::Full => "full",
+        }
+    }
+
+    pub fn all() -> [Strategy; 3] {
+        [Strategy::Cyclic, Strategy::Grid, Strategy::Full]
+    }
+
+    /// Build the placement for P processes.
+    pub fn build(&self, p: usize) -> anyhow::Result<Box<dyn QuorumSystem>> {
+        anyhow::ensure!(p >= 1, "placement needs P >= 1");
+        Ok(match self {
+            Strategy::Cyclic => Box::new(CyclicQuorumSet::for_processes(p)?),
+            Strategy::Grid => Box::new(GridQuorumSet::for_processes(p)),
+            Strategy::Full => Box::new(FullReplication::new(p)),
+        })
+    }
+
+    /// Build a placement whose pairs are covered by >= `r` quorums (for
+    /// redundant assignment / failure tolerance).
+    pub fn build_redundant(&self, p: usize, r: usize) -> anyhow::Result<Box<dyn QuorumSystem>> {
+        anyhow::ensure!(r >= 1, "redundancy must be >= 1");
+        match self {
+            Strategy::Cyclic => Ok(Box::new(CyclicQuorumSet::with_redundancy(p, r)?)),
+            Strategy::Full => {
+                anyhow::ensure!(r <= p, "redundancy {r} impossible for P = {p}");
+                Ok(Box::new(FullReplication::new(p)))
+            }
+            Strategy::Grid => {
+                anyhow::bail!("grid placement has no r-fold redundancy construction")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_and_names() {
+        assert_eq!(Strategy::parse("cyclic"), Some(Strategy::Cyclic));
+        assert_eq!(Strategy::parse("grid"), Some(Strategy::Grid));
+        assert_eq!(Strategy::parse("full"), Some(Strategy::Full));
+        assert_eq!(Strategy::parse("dual-array"), Some(Strategy::Grid));
+        assert_eq!(Strategy::parse("bogus"), None);
+        for s in Strategy::all() {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
+    }
+
+    #[test]
+    fn full_replication_holds_everything() {
+        let f = FullReplication::new(6);
+        assert_eq!(f.max_quorum_size(), 6);
+        assert!(f.has_all_pairs_property());
+        for i in 0..6 {
+            assert_eq!(f.quorum(i), vec![0, 1, 2, 3, 4, 5]);
+            for d in 0..6 {
+                assert!(f.contains(i, d));
+            }
+        }
+        assert_eq!(f.pair_hosts(1, 4).len(), 6);
+    }
+
+    #[test]
+    fn trait_agrees_with_inherent_cyclic() {
+        let c = CyclicQuorumSet::for_processes(13).unwrap();
+        let q: &dyn QuorumSystem = &c;
+        assert_eq!(q.processes(), 13);
+        assert_eq!(q.max_quorum_size(), c.quorum_size());
+        for i in 0..13 {
+            assert_eq!(q.quorum(i), c.quorum(i));
+            for d in 0..13 {
+                assert_eq!(q.contains(i, d), c.contains(i, d), "i={i} d={d}");
+            }
+        }
+        assert!(q.has_all_pairs_property());
+    }
+
+    #[test]
+    fn trait_agrees_with_inherent_grid() {
+        let g = GridQuorumSet::for_processes(10);
+        let q: &dyn QuorumSystem = &g;
+        assert_eq!(q.max_quorum_size(), g.max_quorum_size());
+        for i in 0..10 {
+            assert_eq!(q.quorum(i), g.quorum(i));
+            for d in 0..10 {
+                assert_eq!(q.contains(i, d), g.quorum(i).binary_search(&d).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn bench_sizes_have_all_pairs_for_every_strategy() {
+        // The figure2_memory comparison needs all three placements valid at
+        // the paper's P ∈ {4, 8, 16}.
+        for p in [4usize, 8, 16] {
+            for s in Strategy::all() {
+                let q = s.build(p).unwrap();
+                assert!(q.has_all_pairs_property(), "P={p} strategy={}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cyclic_is_smallest_at_p8() {
+        let c = Strategy::Cyclic.build(8).unwrap();
+        let g = Strategy::Grid.build(8).unwrap();
+        let f = Strategy::Full.build(8).unwrap();
+        assert!(c.max_quorum_size() < g.max_quorum_size());
+        assert!(g.max_quorum_size() < f.max_quorum_size());
+    }
+}

@@ -15,7 +15,7 @@
 
 use crate::allpairs::{OwnerPolicy, PairAssignment};
 use crate::data::Partition;
-use crate::quorum::CyclicQuorumSet;
+use crate::quorum::{CyclicQuorumSet, Strategy};
 use crate::util::ceil_div;
 
 /// Modeled hardware parameters (calibrated from a measured run).
@@ -68,12 +68,27 @@ pub struct Prediction {
     pub mem_bytes_per_rank: u64,
 }
 
-/// Predict the quorum-exact run at (n genes, m samples, p ranks).
+/// Predict the quorum-exact run at (n genes, m samples, p ranks) with the
+/// paper's cyclic placement.
 pub fn predict_quorum(n: usize, m: usize, p: usize, model: &ClusterModel) -> anyhow::Result<Prediction> {
-    let q = CyclicQuorumSet::for_processes(p)?;
-    let assignment = PairAssignment::build(&q, OwnerPolicy::LeastLoaded);
+    predict_placement(n, m, p, Strategy::Cyclic, model)
+}
+
+/// Predict the run under any placement: the distribution volume and memory
+/// follow the placement's replication factor (max quorum size), the compute
+/// phases follow the placement's actual pair-assignment loads — so cyclic,
+/// grid, and full replication are compared on the same analytic footing.
+pub fn predict_placement(
+    n: usize,
+    m: usize,
+    p: usize,
+    strategy: Strategy,
+    model: &ClusterModel,
+) -> anyhow::Result<Prediction> {
+    let q = strategy.build(p)?;
+    let assignment = PairAssignment::try_build(q.as_ref(), OwnerPolicy::LeastLoaded)?;
     let part = Partition::new(n, p);
-    let k = q.quorum_size();
+    let k = q.max_quorum_size();
     let block = part.block_size();
 
     // Distribution: leader streams k·block·m floats to each rank, pipelined
@@ -200,6 +215,21 @@ mod tests {
         let cal = calibrate(1500, 48, 8, pred.corr_secs, pred.scan_secs, base.threads_per_rank, &base).unwrap();
         assert!((cal.corr_rate / base.corr_rate - 1.0).abs() < 1e-9);
         assert!((cal.scan_rate / base.scan_rate - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn placement_memory_ordering() {
+        // Cyclic's distribution+memory must undercut grid, which undercuts
+        // full replication, at the paper's node counts.
+        let m = ClusterModel::default();
+        for p in [8usize, 16] {
+            let cyc = predict_placement(2000, 48, p, Strategy::Cyclic, &m).unwrap();
+            let grid = predict_placement(2000, 48, p, Strategy::Grid, &m).unwrap();
+            let full = predict_placement(2000, 48, p, Strategy::Full, &m).unwrap();
+            assert!(cyc.mem_bytes_per_rank < grid.mem_bytes_per_rank, "P={p}");
+            assert!(grid.mem_bytes_per_rank < full.mem_bytes_per_rank, "P={p}");
+            assert!(cyc.distribute_secs < full.distribute_secs, "P={p}");
+        }
     }
 
     #[test]

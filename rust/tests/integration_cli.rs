@@ -77,6 +77,37 @@ fn pcit_writes_edges_csv() {
 }
 
 #[test]
+fn pcit_strategy_grid_identical() {
+    let out = quorall()
+        .args([
+            "pcit", "--ranks", "4", "--genes", "64", "--samples", "16", "--strategy", "grid",
+            "--verify",
+        ])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{text}");
+    assert!(text.contains("strategy = grid"), "{text}");
+    assert!(text.contains("IDENTICAL"), "{text}");
+}
+
+#[test]
+fn similarity_command_runs_all_strategies() {
+    for strategy in ["cyclic", "grid", "full"] {
+        let out = quorall()
+            .args([
+                "similarity", "--subjects", "48", "--dim", "16", "--ranks", "4", "--topk", "5",
+                "--strategy", strategy,
+            ])
+            .output()
+            .unwrap();
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(out.status.success(), "strategy {strategy}: {text}");
+        assert!(text.contains("top-5"), "strategy {strategy}: {text}");
+    }
+}
+
+#[test]
 fn nbody_runs() {
     let out = quorall()
         .args(["nbody", "--bodies", "64", "--ranks", "4", "--steps", "5"])

@@ -1,0 +1,196 @@
+//! Integration: the app-agnostic engine — pluggable placement strategies
+//! (cyclic / grid / full), app parity against single-node paths, and
+//! failure injection (the transport's killed path must surface a clean
+//! leader error, never a hang).
+
+use quorall::apps::nbody::{forces_direct, forces_quorum, run_distributed_nbody, Bodies};
+use quorall::apps::similarity::{
+    run_distributed_similarity, similarity_direct, similarity_quorum,
+};
+use quorall::apps::{DistMode, PcitApp};
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{
+    run_app, run_distributed_pcit, run_single_node, EngineOptions,
+};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::pcit::standardize_rows;
+use quorall::pool::ThreadPool;
+use quorall::quorum::Strategy;
+use quorall::runtime::{Executor, NativeBackend};
+use quorall::util::prng::Rng;
+use quorall::util::Matrix;
+use std::sync::Arc;
+
+fn exec() -> Executor {
+    Arc::new(NativeBackend::new())
+}
+
+fn dataset(genes: usize) -> ExpressionDataset {
+    ExpressionDataset::generate(SyntheticSpec {
+        genes,
+        samples: 24,
+        modules: 6,
+        noise: 0.5,
+        seed: 91,
+    })
+}
+
+// ---- PCIT under every placement strategy ----
+
+#[test]
+fn pcit_identical_under_all_strategies() {
+    let d = dataset(96);
+    let single = run_single_node(&d, 2, None);
+    for strategy in Strategy::all() {
+        for ranks in [4usize, 8] {
+            let cfg = RunConfig {
+                ranks,
+                mode: PcitMode::QuorumExact,
+                strategy,
+                ..RunConfig::default()
+            };
+            let rep = run_distributed_pcit(&cfg, &d, exec()).unwrap();
+            assert!(
+                rep.network.same_edges(&single.network),
+                "strategy {} P={ranks}: {} vs {} edges",
+                strategy.name(),
+                rep.network.n_edges(),
+                single.network.n_edges()
+            );
+        }
+    }
+}
+
+#[test]
+fn strategy_memory_ordering_measured() {
+    // The Fig. 2-R comparison as measured peaks: cyclic < grid < full at
+    // P = 8 (cyclic k = 4 < grid 5 < full 8 input blocks per rank).
+    let d = dataset(128);
+    let mut peaks = Vec::new();
+    for strategy in Strategy::all() {
+        let cfg = RunConfig {
+            ranks: 8,
+            mode: PcitMode::QuorumExact,
+            strategy,
+            ..RunConfig::default()
+        };
+        let rep = run_distributed_pcit(&cfg, &d, exec()).unwrap();
+        peaks.push((strategy.name(), rep.peak_bytes_per_rank));
+    }
+    let get = |name: &str| peaks.iter().find(|(n, _)| *n == name).unwrap().1;
+    assert!(
+        get("cyclic") < get("grid"),
+        "cyclic must beat grid (dual arrays): {peaks:?}"
+    );
+    assert!(
+        get("grid") < get("full"),
+        "grid must beat full replication: {peaks:?}"
+    );
+}
+
+// ---- Similarity parity (bitwise across strategies) ----
+
+#[test]
+fn similarity_parity_all_strategies() {
+    let mut rng = Rng::new(3);
+    let f = Matrix::from_fn(60, 16, |_, _| rng.normal_f32());
+    let pool = ThreadPool::new(2);
+    let e = exec();
+    let direct = similarity_direct(&f);
+    let pooled = similarity_quorum(&f, 8, &e, &pool).unwrap();
+    for strategy in Strategy::all() {
+        let opts = EngineOptions::new(8, strategy);
+        let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+        // Tiles are placement-independent dot products: bitwise equal to
+        // the in-process pooled path, tight against the direct matmul.
+        assert_eq!(
+            sim.as_slice(),
+            pooled.as_slice(),
+            "strategy {} differs from pooled path",
+            strategy.name()
+        );
+        assert!(
+            direct.max_abs_diff(&sim) < 1e-5,
+            "strategy {} drifts from direct: {}",
+            strategy.name(),
+            direct.max_abs_diff(&sim)
+        );
+        assert_eq!(rep.stats.len(), 8);
+        assert!(rep.total_comm_bytes > 0);
+        assert!(rep.peak_bytes_per_rank > 0);
+    }
+}
+
+// ---- N-body parity ----
+
+#[test]
+fn nbody_parity_all_strategies() {
+    let b = Bodies::random(60, 7);
+    let pool = ThreadPool::new(2);
+    let direct = forces_direct(&b);
+    let pooled = forces_quorum(&b, 8, &pool).unwrap();
+    for strategy in Strategy::all() {
+        let opts = EngineOptions::new(8, strategy);
+        let (f, rep) = run_distributed_nbody(&b, &opts).unwrap();
+        for i in 0..b.n {
+            for dim in 0..3 {
+                assert!(
+                    (f[i][dim] - direct[i][dim]).abs() < 1e-9 * (1.0 + direct[i][dim].abs()),
+                    "strategy {} body {i} dim {dim}: {} vs {}",
+                    strategy.name(),
+                    f[i][dim],
+                    direct[i][dim]
+                );
+            }
+        }
+        if strategy == Strategy::Cyclic {
+            // Same kernel, same task sets, same rank-ascending reduce order
+            // as the pooled path ⇒ bitwise identical forces.
+            for i in 0..b.n {
+                assert_eq!(f[i], pooled[i], "body {i} not bitwise equal");
+            }
+        }
+        assert_eq!(rep.stats.len(), 8);
+        assert!(rep.total_comm_bytes > 0);
+    }
+}
+
+// ---- Failure injection: clean errors, no hangs ----
+
+fn pcit_app(d: &ExpressionDataset, mode: DistMode) -> Arc<PcitApp> {
+    Arc::new(PcitApp::new(standardize_rows(&d.expr), exec(), mode, true, 0.85))
+}
+
+#[test]
+fn killed_rank_mid_exact_phase_errors_cleanly() {
+    // Rank 2 crashes after receiving its data; the exact-mode barrier can
+    // never complete. The leader must detect the loss, unblock every
+    // worker, and surface an error — not hang.
+    let d = dataset(48);
+    let mut opts = EngineOptions::new(5, Strategy::Cyclic);
+    opts.kill = vec![2];
+    let err = run_app(pcit_app(&d, DistMode::Exact), &opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 2") && msg.contains("crashed"), "unexpected error: {msg}");
+}
+
+#[test]
+fn killed_rank_during_gather_errors_cleanly() {
+    // Local mode has no barrier; the loss shows up as a missing result.
+    let d = dataset(48);
+    let mut opts = EngineOptions::new(5, Strategy::Cyclic);
+    opts.kill = vec![1];
+    let err = run_app(pcit_app(&d, DistMode::Local), &opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 1") && msg.contains("crashed"), "unexpected error: {msg}");
+}
+
+#[test]
+fn resilient_runs_reject_barrier_apps() {
+    let d = dataset(48);
+    let mut opts = EngineOptions::new(5, Strategy::Cyclic);
+    opts.kill = vec![1];
+    opts.tolerate_kills = true;
+    let err = run_app(pcit_app(&d, DistMode::Exact), &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("barrier-free"));
+}
