@@ -1,18 +1,53 @@
 //! Table T-C — communication volume per decomposition (§1.2 context), with
 //! the modeled volumes cross-checked against the *measured* transport
-//! byte counters of real distributed runs.
+//! byte counters of real distributed runs — including a per-strategy
+//! (cyclic / grid / full) measured-vs-model comparison where the
+//! synchronous similarity protocol is modeled message-by-message and must
+//! agree with `EngineReport::total_comm_bytes` within tolerance.
 //!
 //! Run: `cargo bench --bench comm_volume [-- --quick]`
 
-use quorall::allpairs::comm;
+use quorall::allpairs::{comm, OwnerPolicy, PairAssignment};
+use quorall::apps::similarity::run_distributed_similarity;
 use quorall::benchkit;
 use quorall::config::{PcitMode, RunConfig};
-use quorall::coordinator::run_distributed_pcit;
+use quorall::coordinator::messages::HEADER_BYTES;
+use quorall::coordinator::{run_distributed_pcit, EngineOptions};
 use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::data::Partition;
 use quorall::metrics::Table;
-use quorall::runtime::NativeBackend;
+use quorall::quorum::Strategy;
+use quorall::runtime::{Executor, NativeBackend};
 use quorall::util::bytes::format_bytes;
+use quorall::util::prng::Rng;
+use quorall::util::Matrix;
 use std::sync::Arc;
+
+/// Model every message of a synchronous similarity engine run: AssignData
+/// (placed blocks), ComputeTasks (16 B/pair), one Result of owned tiles,
+/// Stats (fixed 128 B body), Shutdown — each under a 64 B control header.
+fn model_similarity_bytes(n: usize, dim: usize, p: usize, strategy: Strategy) -> anyhow::Result<u64> {
+    let q = strategy.build(p)?;
+    let part = Partition::new(n, p);
+    let assignment = PairAssignment::try_build(q.as_ref(), OwnerPolicy::LeastLoaded)?;
+    let mut total = 0u64;
+    for rank in 0..p {
+        let tasks = assignment.tasks_for(rank);
+        // AssignData: the rank's placed blocks of dim-wide f32 rows.
+        total += HEADER_BYTES + part.placement_bytes(q.as_ref(), rank, 4 * dim);
+        total += HEADER_BYTES + 16 * tasks.len() as u64;
+        // Result: one (row0, col0, tile) entry per owned non-empty pair.
+        let tiles: u64 = tasks
+            .iter()
+            .filter(|t| part.len(t.a) > 0 && part.len(t.b) > 0)
+            .map(|t| 16 + (part.len(t.a) * part.len(t.b) * 4) as u64)
+            .sum();
+        total += HEADER_BYTES + tiles;
+        // Stats + Shutdown.
+        total += HEADER_BYTES + 128 + HEADER_BYTES;
+    }
+    Ok(total)
+}
 
 fn main() -> anyhow::Result<()> {
     // Model table across P for fixed N.
@@ -67,6 +102,46 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     benchkit::emit(&meas_t);
+
+    // Per-strategy measured transport bytes vs the message-by-message
+    // model, on the similarity app (its synchronous protocol — scatter,
+    // tasks, one Result of tiles, stats, shutdown — is exactly modelable).
+    let exec: Executor = Arc::new(NativeBackend::new());
+    let n_sim = if quick { 160 } else { 320 };
+    let dim = 32;
+    let mut rng = Rng::new(5);
+    let features = Matrix::from_fn(n_sim, dim, |_, _| rng.normal_f32());
+    let p8 = 8usize;
+    let mut strat_t = Table::new(
+        &format!("measured vs modeled transport bytes, similarity, N = {n_sim}, dim = {dim}, P = {p8}"),
+        &["strategy", "measured total", "model total", "delta"],
+    );
+    for strategy in Strategy::all() {
+        let mut opts = EngineOptions::new(p8, strategy);
+        // The model counts the synchronous protocol's messages; pipelined
+        // runs add one header per streamed chunk.
+        opts.pipeline = false;
+        let (_sim, rep) = run_distributed_similarity(&features, &exec, &opts)?;
+        let model = model_similarity_bytes(n_sim, dim, p8, strategy)?;
+        let delta = (rep.total_comm_bytes as f64 - model as f64).abs() / model as f64;
+        strat_t.row(vec![
+            strategy.name().into(),
+            format_bytes(rep.total_comm_bytes),
+            format_bytes(model),
+            format!("{:.2}%", 100.0 * delta),
+        ]);
+        if strategy == Strategy::Cyclic {
+            assert!(
+                delta < 0.02,
+                "cyclic P = {p8}: measured {} vs modeled {} transport bytes disagree by {:.2}% (tolerance 2%)",
+                rep.total_comm_bytes,
+                model,
+                100.0 * delta
+            );
+        }
+    }
+    benchkit::emit(&strat_t);
+
     println!("expected shape: quorum sweep volume = 0 extra input elements; ring moves corr rows");
     println!("(an output-data cost all exact-PCIT distributions share), while atom re-streams inputs.");
     Ok(())

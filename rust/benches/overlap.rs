@@ -1,0 +1,180 @@
+//! Compute/transfer overlap — synchronous vs pipelined transport.
+//!
+//! The paper's 7x-on-8-nodes figure depends on the cyclic-quorum ring
+//! hiding communication behind elimination work. This bench measures that
+//! directly: quorum-exact PCIT at P ∈ {4, 8}, once with the synchronous
+//! point-to-point transport (every ring step blocks on recv) and once with
+//! the pipelined transport (forward-before-compute double buffering +
+//! streamed result chunks). Reported per mode: wall clock, critical path,
+//! summed blocked-recv time across ranks, and the overlap ratio
+//! (1 − Σ blocked / (P · wall)).
+//!
+//! Pipelining must never change results — parity is asserted here on the
+//! surviving edge set and on the streamed similarity matrix (bitwise).
+//! Emits `BENCH_overlap.json`; asserts blocked-recv time at P = 8 is
+//! strictly lower with pipelining on.
+//!
+//! Run: `cargo bench --bench overlap [-- --quick]`
+
+use quorall::apps::similarity::run_distributed_similarity;
+use quorall::benchkit;
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{run_distributed_pcit, DistributedReport, EngineOptions};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::metrics::Table;
+use quorall::quorum::Strategy;
+use quorall::runtime::{Executor, NativeBackend};
+use quorall::util::json::Json;
+use quorall::util::prng::Rng;
+use quorall::util::timer::format_secs;
+use quorall::util::Matrix;
+use std::sync::Arc;
+
+fn mode_name(pipeline: bool) -> &'static str {
+    if pipeline {
+        "pipelined"
+    } else {
+        "sync"
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = benchkit::quick_mode();
+    let genes = if quick { 192 } else { 384 };
+    // Best-of-3 in both modes: blocked-recv is compared strictly below, so
+    // damp scheduler noise on small (2-core CI) boxes.
+    let reps = 3;
+    let dataset = ExpressionDataset::generate(SyntheticSpec {
+        genes,
+        samples: 32,
+        modules: 8,
+        noise: 0.6,
+        seed: 7,
+    });
+    let exec: Executor = Arc::new(NativeBackend::new());
+
+    let mut table = Table::new(
+        &format!("blocked-recv vs overlap, quorum-exact PCIT, N = {genes} (best of {reps})"),
+        &["P", "transport", "wall", "critical path", "blocked recv (sum)", "overlap", "edges"],
+    );
+
+    // blocked[(P, pipelined)] = best (min) summed blocked-recv seconds.
+    let mut blocked: Vec<((usize, bool), f64)> = Vec::new();
+    for &ranks in &[4usize, 8] {
+        let mut networks: Vec<quorall::pcit::Network> = Vec::new();
+        for pipeline in [false, true] {
+            let mut best: Option<DistributedReport> = None;
+            for _ in 0..reps {
+                let cfg = RunConfig {
+                    ranks,
+                    mode: PcitMode::QuorumExact,
+                    pipeline,
+                    ..RunConfig::default()
+                };
+                let rep = run_distributed_pcit(&cfg, &dataset, Arc::clone(&exec))?;
+                let better = match &best {
+                    None => true,
+                    Some(b) => rep.recv_blocked_secs < b.recv_blocked_secs,
+                };
+                if better {
+                    best = Some(rep);
+                }
+            }
+            let rep = best.expect("at least one rep ran");
+            table.row(vec![
+                ranks.to_string(),
+                mode_name(pipeline).into(),
+                format_secs(rep.wall_secs),
+                format_secs(rep.critical_path_secs),
+                format_secs(rep.recv_blocked_secs),
+                format!("{:.1}%", 100.0 * rep.overlap_ratio),
+                rep.network.n_edges().to_string(),
+            ]);
+            blocked.push(((ranks, pipeline), rep.recv_blocked_secs));
+            networks.push(rep.network);
+        }
+        // Parity: pipelining must not change the surviving edge set.
+        assert!(
+            networks[0].same_edges(&networks[1]),
+            "P = {ranks}: pipelined PCIT diverged from synchronous"
+        );
+    }
+    benchkit::emit(&table);
+
+    // Streamed-gather overlap for a barrier-free app: all-pairs similarity
+    // at P = 8, with bitwise parity between the two transports.
+    let mut rng = Rng::new(11);
+    let n_sim = if quick { 192 } else { 320 };
+    let features = Matrix::from_fn(n_sim, 48, |_, _| rng.normal_f32());
+    let mut sim_table = Table::new(
+        &format!("streamed result gather, all-pairs similarity, N = {n_sim}, P = 8"),
+        &["transport", "wall", "blocked recv (sum)", "overlap", "peak mem/rank (bytes)"],
+    );
+    let mut sims: Vec<Matrix> = Vec::new();
+    for pipeline in [false, true] {
+        let mut opts = EngineOptions::new(8, Strategy::Cyclic);
+        opts.pipeline = pipeline;
+        let (sim, rep) = run_distributed_similarity(&features, &exec, &opts)?;
+        sim_table.row(vec![
+            mode_name(pipeline).into(),
+            format_secs(rep.wall_secs),
+            format_secs(rep.recv_blocked_secs),
+            format!("{:.1}%", 100.0 * rep.overlap_ratio),
+            rep.peak_bytes_per_rank.to_string(),
+        ]);
+        sims.push(sim);
+    }
+    assert_eq!(
+        sims[0].as_slice(),
+        sims[1].as_slice(),
+        "pipelined similarity diverged from synchronous"
+    );
+    benchkit::emit(&sim_table);
+
+    let get = |ranks: usize, pipeline: bool| -> f64 {
+        blocked
+            .iter()
+            .find(|((p, pi), _)| *p == ranks && *pi == pipeline)
+            .map(|(_, b)| *b)
+            .unwrap_or(f64::NAN)
+    };
+    let (sync_p8, pipe_p8) = (get(8, false), get(8, true));
+    println!(
+        "P = 8 blocked-recv: sync {} | pipelined {} ({}x less waiting)",
+        format_secs(sync_p8),
+        format_secs(pipe_p8),
+        if pipe_p8 > 0.0 { format!("{:.1}", sync_p8 / pipe_p8) } else { "inf".into() }
+    );
+    let payload = benchkit::json_payload(
+        "overlap",
+        vec![
+            ("quick", Json::Bool(quick)),
+            ("blocked_sync_p4", Json::Num(get(4, false))),
+            ("blocked_pipelined_p4", Json::Num(get(4, true))),
+            ("blocked_sync_p8", Json::Num(sync_p8)),
+            ("blocked_pipelined_p8", Json::Num(pipe_p8)),
+            ("pipelined_blocked_lower_p8", Json::Bool(pipe_p8 < sync_p8)),
+        ],
+        &[&table, &sim_table],
+    );
+    benchkit::write_json(std::path::Path::new("BENCH_overlap.json"), &payload)?;
+    println!("expected shape: forward-before-compute hides the neighbor's transfer behind the");
+    println!("elimination scan, so summed blocked-recv time collapses while edges stay identical.");
+    // Full runs assert the strict inequality (the claim the JSON records).
+    // --quick CI runs only record it: on tiny oversubscribed runners the
+    // comparison is scheduler-dependent, and a noisy measurement failing a
+    // hard assert would block CI without indicating a code defect — the
+    // `pipelined_blocked_lower_p8` flag in BENCH_overlap.json still tells
+    // the truth either way.
+    if !quick {
+        assert!(
+            pipe_p8 < sync_p8,
+            "pipelined blocked-recv ({pipe_p8:.6}s) must be strictly below synchronous ({sync_p8:.6}s) at P = 8"
+        );
+    } else if pipe_p8 >= sync_p8 {
+        println!(
+            "WARNING: quick run measured pipelined blocked-recv ({pipe_p8:.6}s) not below sync ({sync_p8:.6}s) — likely scheduler noise; see BENCH_overlap.json"
+        );
+    }
+    Ok(())
+}

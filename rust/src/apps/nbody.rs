@@ -238,9 +238,24 @@ impl DistributedApp for NbodyApp {
             // Partial-force buffers are held until the single Result send —
             // account them so the placement memory comparison sees the same
             // working-set definition as the other plugins.
-            ctx.mem.alloc(((fa.len() + fb.len()) * 24) as u64);
-            partials.push((ctx.block_range(t.a).start, fa));
-            partials.push((ctx.block_range(t.b).start, fb));
+            let bytes = ((fa.len() + fb.len()) * 24) as u64;
+            ctx.mem.alloc(bytes);
+            if ctx.pipeline() {
+                // Send-ahead: stream each task's partial forces to the
+                // leader while the next block pair computes. The leader
+                // merges chunks in compute order, so the rank-ascending,
+                // task-order reduce stays bitwise identical.
+                let chunk = Payload::Forces(vec![
+                    (ctx.block_range(t.a).start, fa),
+                    (ctx.block_range(t.b).start, fb),
+                ]);
+                if ctx.stream_result(chunk) {
+                    ctx.mem.free(bytes);
+                }
+            } else {
+                partials.push((ctx.block_range(t.a).start, fa));
+                partials.push((ctx.block_range(t.b).start, fb));
+            }
         }
         ctx.phase1_secs = sw.elapsed_secs();
         Some(Payload::Forces(partials))

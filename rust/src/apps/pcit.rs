@@ -95,7 +95,11 @@ impl PcitApp {
         ctx.mem.alloc(row_block.nbytes());
         let mut tiles_needed = p;
         while tiles_needed > 0 {
-            match ctx.recv_app()? {
+            // Stash-aware receive: only tiles can arrive here today (no
+            // rank enters the ring before the barrier releases everyone),
+            // but waiting for the phase's own payload kind keeps the loop
+            // correct under any future send-ahead reordering.
+            match ctx.recv_app_where(|p| matches!(p, Payload::CorrTile { .. }))? {
                 Payload::CorrTile { rows_block: rb, cols_block, transposed, tile } => {
                     debug_assert_eq!(rb, me);
                     let c0 = ctx.block_range(cols_block).start;
@@ -106,7 +110,7 @@ impl PcitApp {
                     }
                     tiles_needed -= 1;
                 }
-                other => panic!("worker {me}: unexpected {} in phase 1b", other.kind()),
+                _ => unreachable!("recv_app_where returned a non-tile payload"),
             }
         }
         ctx.phase_done(2);
@@ -122,30 +126,7 @@ impl PcitApp {
         // Compute time accumulated around executor work only (see above).
         let mut edges: Vec<(usize, usize, f32)> = Vec::new();
         if self.use_pcit {
-            let sw2 = ThreadCpuTimer::start();
-            self.eliminate_and_collect(ctx, &row_block, me, &row_block, &mut edges);
-            ctx.phase2_secs += sw2.elapsed_secs();
-            let mut visiting_block = me;
-            let mut visiting = row_block.clone();
-            ctx.mem.alloc(visiting.nbytes());
-            for _step in 1..p {
-                let next = (me + 1) % p;
-                let sent_bytes = visiting.nbytes();
-                ctx.send_to_rank(next, Payload::RingRows { block: visiting_block, rows: visiting });
-                ctx.mem.free(sent_bytes);
-                let (vb, vr) = match ctx.recv_app()? {
-                    Payload::RingRows { block, rows } => (block, rows),
-                    other => panic!("worker {me}: unexpected {} in ring", other.kind()),
-                };
-                visiting_block = vb;
-                visiting = vr;
-                ctx.mem.alloc(visiting.nbytes());
-                if owns_edge_block(me, visiting_block) {
-                    let sw2 = ThreadCpuTimer::start();
-                    self.eliminate_and_collect(ctx, &row_block, visiting_block, &visiting, &mut edges);
-                    ctx.phase2_secs += sw2.elapsed_secs();
-                }
-            }
+            self.ring_scan(ctx, &row_block, &mut edges)?;
         } else {
             // Threshold mode: no mediation scan; edges straight from rows.
             let sw2 = ThreadCpuTimer::start();
@@ -153,6 +134,66 @@ impl PcitApp {
             ctx.phase2_secs += sw2.elapsed_secs();
         }
         Some(Payload::Edges(edges))
+    }
+
+    /// Phase 2 ring: rotate row blocks around the ring, running the
+    /// elimination scan on owned edge blocks. The transport mode picks the
+    /// transfer ordering:
+    ///
+    /// * **synchronous** — compute on the visiting block, then forward it;
+    ///   every receive waits out the predecessor's full compute step.
+    /// * **pipelined** — forward the visiting block to the successor
+    ///   *before* computing on it (double buffering), so each step's
+    ///   elimination hides the neighbor's transfer. When send-ahead credit
+    ///   is exhausted the step falls back to compute-first ordering.
+    ///
+    /// Both orderings run the identical elimination sequence (diagonal,
+    /// then ring arrivals — per-pair FIFO keeps arrival order fixed), so
+    /// the surviving edge set is bitwise identical. `None` = shutdown.
+    fn ring_scan(
+        &self,
+        ctx: &mut WorkerCtx,
+        row_block: &Matrix,
+        edges: &mut Vec<(usize, usize, f32)>,
+    ) -> Option<()> {
+        let me = ctx.my_block;
+        let p = ctx.plan.p;
+        let next = (me + 1) % p;
+        let mut visiting_block = me;
+        let mut visiting: Arc<Matrix> = Arc::new(row_block.clone());
+        ctx.mem.alloc(visiting.nbytes());
+        for step in 0..p {
+            let last = step == p - 1;
+            let forward = |ctx: &WorkerCtx, block: usize, rows: &Arc<Matrix>| {
+                ctx.send_to_rank(next, Payload::RingRows { block, rows: Arc::clone(rows) });
+            };
+            let forwarded_early = !last && ctx.pipeline() && ctx.can_send_ahead(next);
+            if forwarded_early {
+                forward(ctx, visiting_block, &visiting);
+            }
+            if step == 0 || owns_edge_block(me, visiting_block) {
+                let sw = ThreadCpuTimer::start();
+                self.eliminate_and_collect(ctx, row_block, visiting_block, &visiting, edges);
+                ctx.phase2_secs += sw.elapsed_secs();
+            }
+            if last {
+                break;
+            }
+            if !forwarded_early {
+                forward(ctx, visiting_block, &visiting);
+            }
+            ctx.mem.free(visiting.nbytes());
+            match ctx.recv_app_where(|p| matches!(p, Payload::RingRows { .. }))? {
+                Payload::RingRows { block, rows } => {
+                    visiting_block = block;
+                    visiting = rows;
+                }
+                _ => unreachable!("recv_app_where returned a non-ring payload"),
+            }
+            ctx.mem.alloc(visiting.nbytes());
+        }
+        ctx.mem.free(visiting.nbytes());
+        Some(())
     }
 
     /// Run elimination for edge block (my_block, other_block) and append

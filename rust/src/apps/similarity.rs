@@ -158,7 +158,20 @@ impl DistributedApp for SimilarityApp {
             let tile = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view());
             ctx.corr_tiles += 1;
             ctx.mem.alloc(tile.nbytes());
-            tiles.push((ra.start, rb.start, tile));
+            if ctx.pipeline() {
+                // Send-ahead: ship each tile to the leader as soon as it is
+                // computed, overlapping the leader's gather/merge with the
+                // remaining tile compute (and dropping it from this rank's
+                // working set). A credit-stashed tile stays accounted (the
+                // later backlog flush is invisible to the accountant —
+                // conservative: peak is never understated).
+                let bytes = tile.nbytes();
+                if ctx.stream_result(Payload::Tiles(vec![(ra.start, rb.start, tile)])) {
+                    ctx.mem.free(bytes);
+                }
+            } else {
+                tiles.push((ra.start, rb.start, tile));
+            }
         }
         ctx.phase1_secs = sw.elapsed_secs();
         Some(Payload::Tiles(tiles))

@@ -8,6 +8,7 @@
 //! threads_per_rank = 2  # pool threads inside each rank
 //! mode = "quorum-exact" # single | quorum-exact | quorum-local
 //! strategy = "cyclic"   # cyclic | grid | full (placement)
+//! pipeline = "off"      # on | off (overlap compute with ring exchange)
 //! backend = "native"    # native | xla
 //! block = 64            # tile edge for pair blocks
 //! seed = 42
@@ -104,6 +105,15 @@ impl DatasetConfig {
     }
 }
 
+/// Parse a `--pipeline` / `run.pipeline` value.
+pub fn parse_pipeline(s: &str) -> Option<bool> {
+    match s {
+        "on" | "true" | "1" => Some(true),
+        "off" | "false" | "0" => Some(false),
+        _ => None,
+    }
+}
+
 /// Complete, validated run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -113,6 +123,9 @@ pub struct RunConfig {
     /// Placement strategy: cyclic quorums (the paper), grid (dual-array
     /// baseline), or full replication.
     pub strategy: Strategy,
+    /// Pipelined transport: overlap tile compute with the ring exchange /
+    /// result gather. Bitwise-identical output to the synchronous path.
+    pub pipeline: bool,
     pub backend: BackendKind,
     pub block: usize,
     pub seed: u64,
@@ -130,6 +143,7 @@ impl Default for RunConfig {
             threads_per_rank: 1,
             mode: PcitMode::QuorumExact,
             strategy: Strategy::Cyclic,
+            pipeline: crate::coordinator::pipeline_default(),
             backend: BackendKind::Native,
             block: 64,
             seed: 42,
@@ -159,6 +173,12 @@ impl RunConfig {
         }
         if let Some(s) = doc.get_str("run", "strategy") {
             cfg.strategy = Strategy::parse(s).ok_or_else(|| bad(format!("bad run.strategy: {s}")))?;
+        }
+        if let Some(s) = doc.get_str("run", "pipeline") {
+            cfg.pipeline = parse_pipeline(s)
+                .ok_or_else(|| bad(format!("bad run.pipeline: {s} (want \"on\" | \"off\")")))?;
+        } else if let Some(b) = doc.get_bool("run", "pipeline") {
+            cfg.pipeline = b;
         }
         if let Some(s) = doc.get_str("run", "backend") {
             cfg.backend = BackendKind::parse(s).ok_or_else(|| bad(format!("bad run.backend: {s}")))?;
@@ -305,6 +325,20 @@ threshold = 0.9
         assert!(RunConfig::from_doc(&doc("[run]\nstrategy = \"bogus\"")).is_err());
         assert!(RunConfig::from_doc(&doc("[pcit]\nthreshold = 1.5")).is_err());
         assert!(RunConfig::from_doc(&doc("[dataset]\nkind = \"synthetic\"\nsamples = 1")).is_err());
+    }
+
+    #[test]
+    fn pipeline_key_parses() {
+        let cfg = RunConfig::from_doc(&doc("[run]\npipeline = \"on\"")).unwrap();
+        assert!(cfg.pipeline);
+        let cfg = RunConfig::from_doc(&doc("[run]\npipeline = \"off\"")).unwrap();
+        assert!(!cfg.pipeline);
+        let cfg = RunConfig::from_doc(&doc("[run]\npipeline = true")).unwrap();
+        assert!(cfg.pipeline);
+        assert!(RunConfig::from_doc(&doc("[run]\npipeline = \"sideways\"")).is_err());
+        assert_eq!(parse_pipeline("on"), Some(true));
+        assert_eq!(parse_pipeline("off"), Some(false));
+        assert_eq!(parse_pipeline("bogus"), None);
     }
 
     #[test]

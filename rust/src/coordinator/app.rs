@@ -27,6 +27,10 @@ pub struct Plan {
     pub p: usize,
     /// Nominal block size ceil(n/p).
     pub block: usize,
+    /// Pipelined transport: apps overlap compute with communication
+    /// (forward-before-compute ring, streamed result chunks). Must be
+    /// bitwise-identical to the synchronous protocol.
+    pub pipeline: bool,
 }
 
 impl Plan {
@@ -93,12 +97,21 @@ pub struct WorkerCtx {
     pub quorum: Vec<usize>,
     /// Pair tasks owned by this rank (take with `std::mem::take`).
     pub tasks: Vec<PairTask>,
-    /// App payloads that arrived ahead of the phase that consumes them.
-    /// Point-to-point channels are FIFO per (sender, receiver) but there is
-    /// no global order across senders: a fast peer's tile can land before
-    /// the leader's ComputeTasks, and a proceeded neighbor's ring rows
-    /// before our own Proceed.
+    /// The stash-aware prefetch queue: app payloads that arrived ahead of
+    /// the phase that consumes them. Point-to-point channels are FIFO per
+    /// (sender, receiver) but there is no global order across senders: a
+    /// fast peer's tile can land before the leader's ComputeTasks, a
+    /// proceeded neighbor's ring rows before our own Proceed, and — with
+    /// pipelining — a send-ahead block before the payload an earlier phase
+    /// is still waiting on. [`WorkerCtx::recv_app_where`] replays stashed
+    /// payloads in arrival order before blocking on the wire.
     pub(super) pending: VecDeque<Payload>,
+    /// Result chunks that could not be streamed (send-ahead credit
+    /// exhausted), held in compute order: flushed ahead of the next chunk
+    /// once credit returns, or folded into the final Result.
+    pub(super) result_stash: Option<Payload>,
+    /// Items already streamed to the leader (counted into `n_items`).
+    pub(super) streamed_items: u64,
     // ---- stats the app fills in (reported by the engine) ----
     pub corr_tiles: u64,
     pub elim_tiles: u64,
@@ -142,30 +155,95 @@ impl WorkerCtx {
             .unwrap_or_else(|| panic!("block {b} not in quorum of {}", self.my_block))
     }
 
+    /// Whether this run uses the pipelined (overlap) transport protocol.
+    pub fn pipeline(&self) -> bool {
+        self.plan.pipeline
+    }
+
+    /// Whether a send-ahead to the worker holding `block` is within the
+    /// transport's in-flight credit. Pipelined apps consult this before
+    /// forwarding ahead of their compute; when credit is out they fall back
+    /// to the synchronous (compute-first) ordering, which bounds queue
+    /// memory without ever changing results.
+    pub fn can_send_ahead(&self, block: usize) -> bool {
+        self.ep.can_send_ahead(block + 1)
+    }
+
     /// Send app traffic to the worker holding block id `block`.
     pub fn send_to_rank(&self, block: usize, payload: Payload) {
         let _ = self.ep.send(block + 1, Message::App(payload));
     }
 
+    /// Stream a slice of this rank's result to the leader ahead of the
+    /// final Result (pipelined mode): the leader merges chunks in arrival
+    /// order, overlapping its gather with our remaining compute. Returns
+    /// true if the chunk left this rank; false means credit was exhausted
+    /// and the chunk was stashed. A stashed backlog is flushed — merged
+    /// *ahead* of the next chunk, as one message — as soon as credit
+    /// returns, so the leader always sees items in compute order and a
+    /// transient credit miss does not disable streaming for the rest of
+    /// the run.
+    pub fn stream_result(&mut self, chunk: Payload) -> bool {
+        if self.ep.can_send_ahead(0) {
+            let full = self.finish_result(chunk);
+            self.streamed_items += full.items();
+            let _ = self.ep.send(0, Message::ResultChunk(full));
+            return true;
+        }
+        match &mut self.result_stash {
+            Some(acc) => acc.merge(chunk),
+            None => self.result_stash = Some(chunk),
+        }
+        false
+    }
+
+    /// Fold the app's returned payload into any credit-stashed chunks,
+    /// yielding the complete remainder for the final Result message.
+    pub(super) fn finish_result(&mut self, returned: Payload) -> Payload {
+        match self.result_stash.take() {
+            Some(mut acc) => {
+                acc.merge(returned);
+                acc
+            }
+            None => returned,
+        }
+    }
+
     /// Next app payload (pending first). `None` = shutdown/crash: the app
     /// must return `None` from `run_worker` so the worker exits cleanly.
     pub fn recv_app(&mut self) -> Option<Payload> {
-        if let Some(p) = self.pending.pop_front() {
-            return Some(p);
+        self.recv_app_where(|_| true)
+    }
+
+    /// Next app payload matching `want`, replaying stashed arrivals in
+    /// order first; anything received that does not match is stashed for
+    /// the phase that wants it. With pipelining, a send-ahead neighbor can
+    /// be a full step ahead of us, so a phase must be able to wait for
+    /// *its* payload kind without losing out-of-order arrivals.
+    pub fn recv_app_where(&mut self, want: impl Fn(&Payload) -> bool) -> Option<Payload> {
+        if let Some(i) = self.pending.iter().position(&want) {
+            return self.pending.remove(i);
         }
-        let env = self.ep.recv()?;
-        match env.msg {
-            Message::App(p) => Some(p),
-            Message::Shutdown => None,
-            Message::Crash => {
-                self.ep.transport().kill(self.ep.rank);
-                None
+        loop {
+            let env = self.ep.recv()?;
+            match env.msg {
+                Message::App(p) => {
+                    if want(&p) {
+                        return Some(p);
+                    }
+                    self.pending.push_back(p);
+                }
+                Message::Shutdown => return None,
+                Message::Crash => {
+                    self.ep.transport().kill(self.ep.rank);
+                    return None;
+                }
+                other => panic!(
+                    "worker {}: unexpected {} while awaiting app traffic",
+                    self.my_block,
+                    other.kind()
+                ),
             }
-            other => panic!(
-                "worker {}: unexpected {} while awaiting app traffic",
-                self.my_block,
-                other.kind()
-            ),
         }
     }
 
@@ -201,5 +279,118 @@ fn block_kind(b: &BlockData) -> &'static str {
     match b {
         BlockData::Rows(_) => "rows",
         BlockData::Bodies { .. } => "bodies",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::Transport;
+    use crate::coordinator::Endpoint;
+
+    fn ctx_for(ep: Endpoint) -> WorkerCtx {
+        WorkerCtx {
+            my_block: ep.rank - 1,
+            ep,
+            plan: Plan { n: 8, p: 2, block: 4, pipeline: true },
+            mem: MemoryAccountant::new(),
+            blocks: BTreeMap::new(),
+            quorum: Vec::new(),
+            tasks: Vec::new(),
+            pending: VecDeque::new(),
+            result_stash: None,
+            streamed_items: 0,
+            corr_tiles: 0,
+            elim_tiles: 0,
+            phase1_secs: 0.0,
+            phase2_secs: 0.0,
+        }
+    }
+
+    fn ring(block: usize) -> Payload {
+        Payload::RingRows { block, rows: Arc::new(Matrix::zeros(2, 8)) }
+    }
+
+    #[test]
+    fn early_ring_rows_stash_across_barrier_in_order() {
+        // A proceeded (or pipelined send-ahead) neighbor's ring rows land
+        // before our own Proceed: the barrier must stash them and recv_app
+        // must replay them in arrival order afterwards.
+        let (_t, mut eps) = Transport::new(3);
+        let peer = eps.pop().unwrap(); // rank 2
+        let me = eps.pop().unwrap(); // rank 1
+        let leader = eps.pop().unwrap(); // rank 0
+        peer.send(1, Message::App(ring(1))).unwrap();
+        peer.send(1, Message::App(ring(0))).unwrap();
+        leader.send(1, Message::Proceed).unwrap();
+
+        let mut ctx = ctx_for(me);
+        assert!(ctx.barrier(), "barrier must release on Proceed");
+        assert_eq!(ctx.pending.len(), 2, "both early payloads stashed");
+        for expect in [1usize, 0] {
+            match ctx.recv_app().unwrap() {
+                Payload::RingRows { block, .. } => assert_eq!(block, expect),
+                other => panic!("wrong payload {}", other.kind()),
+            }
+        }
+    }
+
+    #[test]
+    fn recv_app_where_skips_and_keeps_non_matching() {
+        let (_t, mut eps) = Transport::new(3);
+        let peer = eps.pop().unwrap();
+        let me = eps.pop().unwrap();
+        let _leader = eps.pop().unwrap();
+        peer.send(
+            1,
+            Message::App(Payload::CorrTile {
+                rows_block: 0,
+                cols_block: 1,
+                transposed: false,
+                tile: Arc::new(Matrix::zeros(2, 2)),
+            }),
+        )
+        .unwrap();
+        peer.send(1, Message::App(ring(7))).unwrap();
+
+        let mut ctx = ctx_for(me);
+        // Ask for ring rows first: the earlier tile must be stashed, not lost.
+        match ctx.recv_app_where(|p| matches!(p, Payload::RingRows { .. })).unwrap() {
+            Payload::RingRows { block, .. } => assert_eq!(block, 7),
+            other => panic!("wrong payload {}", other.kind()),
+        }
+        match ctx.recv_app().unwrap() {
+            Payload::CorrTile { cols_block, .. } => assert_eq!(cols_block, 1),
+            other => panic!("wrong payload {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn stream_result_stashes_then_flushes_in_order() {
+        let (_t, mut eps) = Transport::with_credit(2, 1);
+        let me = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+
+        assert!(ctx.stream_result(Payload::Edges(vec![(0, 1, 0.1)])));
+        // Leader has not dequeued: credit (1) exhausted → stash, in order.
+        assert!(!ctx.stream_result(Payload::Edges(vec![(2, 3, 0.2)])));
+        assert!(!ctx.stream_result(Payload::Edges(vec![(4, 5, 0.3)])));
+        leader.recv().unwrap();
+        // Credit back: the backlog flushes *ahead of* the new chunk, as one
+        // message, so the leader still sees items in compute order.
+        assert!(ctx.stream_result(Payload::Edges(vec![(6, 7, 0.4)])));
+        assert_eq!(ctx.streamed_items, 4);
+        match leader.recv().unwrap().msg {
+            Message::ResultChunk(Payload::Edges(e)) => {
+                assert_eq!(e, vec![(2, 3, 0.2), (4, 5, 0.3), (6, 7, 0.4)]);
+            }
+            other => panic!("wrong message {}", other.kind()),
+        }
+        // Nothing left stashed: the final Result is just the remainder.
+        match ctx.finish_result(Payload::Edges(vec![(8, 9, 0.5)])) {
+            Payload::Edges(e) => assert_eq!(e, vec![(8, 9, 0.5)]),
+            other => panic!("wrong payload {}", other.kind()),
+        }
     }
 }

@@ -33,6 +33,10 @@ pub struct RankStats {
     pub recv_bytes: u64,
     pub phase1_secs: f64,
     pub phase2_secs: f64,
+    /// Wall time this rank spent actually blocked inside transport
+    /// receives (scatter wait, barrier, ring stalls). The overlap a
+    /// pipelined transport buys shows up as this number shrinking.
+    pub recv_blocked_secs: f64,
     /// Result items this rank reported (edges, tiles, force blocks).
     pub n_items: u64,
 }
@@ -53,6 +57,24 @@ pub struct EngineOptions {
     /// Resilient mode: gather from survivors instead of erroring on a
     /// killed rank. Requires an app without barrier phases.
     pub tolerate_kills: bool,
+    /// Pipelined transport: overlap tile compute with the ring exchange /
+    /// result gather (forward-before-compute, streamed result chunks).
+    /// Bitwise-identical to the synchronous protocol for every in-tree app.
+    pub pipeline: bool,
+    /// Max in-flight messages a pipelined sender may leave queued at one
+    /// destination before falling back to synchronous ordering.
+    pub send_ahead_credit: usize,
+}
+
+/// Process-wide pipeline default: `QUORALL_PIPELINE=on|1` flips every
+/// engine run built through [`EngineOptions::new`] / `RunConfig` defaults
+/// to the pipelined transport (how CI runs the integration suite down both
+/// paths). Explicit `--pipeline` / `opts.pipeline` settings win.
+pub fn pipeline_default() -> bool {
+    std::env::var("QUORALL_PIPELINE")
+        .ok()
+        .and_then(|v| crate::config::parse_pipeline(&v))
+        .unwrap_or(false)
 }
 
 impl EngineOptions {
@@ -64,6 +86,8 @@ impl EngineOptions {
             redundancy: 1,
             kill: Vec::new(),
             tolerate_kills: false,
+            pipeline: pipeline_default(),
+            send_ahead_credit: crate::coordinator::transport::DEFAULT_SEND_AHEAD_CREDIT,
         }
     }
 }
@@ -88,6 +112,12 @@ pub struct EngineReport {
     pub peak_bytes_per_rank: u64,
     /// Total bytes moved through the transport.
     pub total_comm_bytes: u64,
+    /// Sum over ranks of wall time spent blocked inside transport receives.
+    pub recv_blocked_secs: f64,
+    /// Fraction of aggregate worker wall time **not** spent blocked in a
+    /// receive: 1 − Σ blocked / (P · wall). 1.0 = perfect overlap (workers
+    /// never waited on the transport).
+    pub overlap_ratio: f64,
 }
 
 /// Run `app` on a simulated cluster of `opts.ranks` workers under the
@@ -149,9 +179,9 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
         ((0..p).map(|w| assignment.tasks_for(w)).collect::<Vec<_>>(), im)
     };
 
-    let plan = Plan { n, p, block: ceil_div(n, p) };
+    let plan = Plan { n, p, block: ceil_div(n, p), pipeline: opts.pipeline };
     let sw = Stopwatch::start();
-    let (transport, mut endpoints) = Transport::new(p + 1);
+    let (transport, mut endpoints) = Transport::with_credit(p + 1, opts.send_ahead_credit);
     // endpoints[0] = leader; spawn workers on 1..=p.
     let leader_ep = endpoints.remove(0);
     let mut handles = Vec::with_capacity(p);
@@ -208,6 +238,13 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
         .iter()
         .map(|s| s.phase1_secs + s.phase2_secs)
         .fold(0.0f64, f64::max);
+    let blocked: f64 = outcome.stats.iter().map(|s| s.recv_blocked_secs).sum();
+    let worker_secs = p as f64 * wall;
+    let overlap = if worker_secs > 0.0 {
+        (1.0 - blocked / worker_secs).clamp(0.0, 1.0)
+    } else {
+        1.0
+    };
 
     Ok(EngineReport {
         results: outcome.results,
@@ -219,6 +256,8 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
         assignment_imbalance: imbalance,
         peak_bytes_per_rank: peak,
         total_comm_bytes: bytes,
+        recv_blocked_secs: blocked,
+        overlap_ratio: overlap,
     })
 }
 
@@ -236,6 +275,10 @@ pub struct DistributedReport {
     pub peak_bytes_per_rank: u64,
     /// Total bytes moved through the transport.
     pub total_comm_bytes: u64,
+    /// Sum over ranks of wall time blocked inside transport receives.
+    pub recv_blocked_secs: f64,
+    /// See [`EngineReport::overlap_ratio`].
+    pub overlap_ratio: f64,
 }
 
 /// Collect the per-rank edge payloads of a PCIT engine run into a network.
@@ -273,7 +316,8 @@ pub fn run_distributed_pcit(
         cfg.use_pcit_significance,
         cfg.threshold as f32,
     ));
-    let opts = EngineOptions::new(cfg.ranks, cfg.strategy);
+    let mut opts = EngineOptions::new(cfg.ranks, cfg.strategy);
+    opts.pipeline = cfg.pipeline;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -285,6 +329,8 @@ pub fn run_distributed_pcit(
         assignment_imbalance: rep.assignment_imbalance,
         peak_bytes_per_rank: rep.peak_bytes_per_rank,
         total_comm_bytes: rep.total_comm_bytes,
+        recv_blocked_secs: rep.recv_blocked_secs,
+        overlap_ratio: rep.overlap_ratio,
     })
 }
 
@@ -325,6 +371,7 @@ pub fn run_resilient_pcit(
     opts.redundancy = redundancy;
     opts.kill = kill.to_vec();
     opts.tolerate_kills = true;
+    opts.pipeline = cfg.pipeline;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -336,6 +383,8 @@ pub fn run_resilient_pcit(
         assignment_imbalance: rep.assignment_imbalance,
         peak_bytes_per_rank: rep.peak_bytes_per_rank,
         total_comm_bytes: rep.total_comm_bytes,
+        recv_blocked_secs: rep.recv_blocked_secs,
+        overlap_ratio: rep.overlap_ratio,
     })
 }
 

@@ -67,10 +67,16 @@ pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Res
         let _ = ep.send(w + 1, Message::ComputeTasks { tasks });
     }
 
+    // Streamed result chunks (pipelined apps), folded per rank in arrival
+    // order; a rank's closing Result completes the payload. An app may
+    // stream after its last barrier, so chunks can start landing while the
+    // leader is still sequencing phases — the map spans both loops.
+    let mut partial: BTreeMap<usize, Payload> = BTreeMap::new();
+
     // ---- Barrier phases the app asked for. ----
     let phases = lp.app.sync_phases();
     if !phases.is_empty() {
-        wait_phases(ep, p, &phases)?;
+        wait_phases(ep, p, &phases, &mut partial)?;
         for w in 0..p {
             let _ = ep.send(w + 1, Message::Proceed);
         }
@@ -89,12 +95,21 @@ pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Res
             Some(env) => {
                 let rank = env.from.wrapping_sub(1);
                 match env.msg {
+                    Message::ResultChunk(payload) => {
+                        anyhow::ensure!(
+                            need_result.contains(&rank),
+                            "leader: unexpected result chunk from rank {rank}"
+                        );
+                        fold_chunk(ep, p, &mut partial, rank, payload)?;
+                    }
                     Message::Result(payload) => {
                         anyhow::ensure!(
                             need_result.remove(&rank),
                             "leader: unexpected result from rank {rank}"
                         );
-                        results.push((rank, payload));
+                        fold_chunk(ep, p, &mut partial, rank, payload)?;
+                        let full = partial.remove(&rank).expect("fold_chunk always inserts");
+                        results.push((rank, full));
                     }
                     Message::Stats(s) => {
                         anyhow::ensure!(
@@ -136,7 +151,14 @@ pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Res
 
 /// Wait until every worker has reported each of the listed phases, erroring
 /// cleanly (after unblocking all workers) if a rank we are waiting on dies.
-fn wait_phases(ep: &Endpoint, p: usize, phases: &[u8]) -> anyhow::Result<()> {
+/// Result chunks streamed by fast ranks that are already past their last
+/// barrier are folded into `partial` rather than treated as a violation.
+fn wait_phases(
+    ep: &Endpoint,
+    p: usize,
+    phases: &[u8],
+    partial: &mut BTreeMap<usize, Payload>,
+) -> anyhow::Result<()> {
     let mut left: BTreeMap<u8, BTreeSet<usize>> =
         phases.iter().map(|&ph| (ph, (0..p).collect())).collect();
     while left.values().any(|s| !s.is_empty()) {
@@ -151,6 +173,9 @@ fn wait_phases(ep: &Endpoint, p: usize, phases: &[u8]) -> anyhow::Result<()> {
                         s.remove(&rank),
                         "leader: duplicate phase-{phase} report from rank {rank}"
                     );
+                }
+                Message::ResultChunk(payload) => {
+                    fold_chunk(ep, p, partial, env.from.wrapping_sub(1), payload)?;
                 }
                 other => {
                     abort(ep, p);
@@ -171,6 +196,37 @@ fn wait_phases(ep: &Endpoint, p: usize, phases: &[u8]) -> anyhow::Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// Fold a payload onto `rank`'s accumulated streamed partial, preserving
+/// chunk arrival order — the single spelling of the chunk-ordering
+/// invariant for both ResultChunk and the closing Result. A chunk that
+/// cannot merge (kind mismatch, non-list payload) is a protocol bug and
+/// surfaces as a clean abort + error, never a leader-side panic.
+fn fold_chunk(
+    ep: &Endpoint,
+    p: usize,
+    partial: &mut BTreeMap<usize, Payload>,
+    rank: usize,
+    payload: Payload,
+) -> anyhow::Result<()> {
+    let folded = match partial.remove(&rank) {
+        Some(mut acc) => {
+            if !acc.mergeable_with(&payload) {
+                abort(ep, p);
+                anyhow::bail!(
+                    "leader: rank {rank} streamed a {} chunk onto a {} result",
+                    payload.kind(),
+                    acc.kind()
+                );
+            }
+            acc.merge(payload);
+            acc
+        }
+        None => payload,
+    };
+    partial.insert(rank, folded);
     Ok(())
 }
 

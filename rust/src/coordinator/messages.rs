@@ -61,8 +61,11 @@ pub enum Payload {
         transposed: bool,
         tile: Arc<Matrix>,
     },
-    /// Ring step: a full row block `C[block, 0..N]`.
-    RingRows { block: usize, rows: Matrix },
+    /// Ring step: a full row block `C[block, 0..N]`. The `Arc` lets the
+    /// pipelined ring forward a block to the successor *before* computing
+    /// on it without a copy (the sync path just moves the handle along);
+    /// `nbytes` still accounts the full block per send.
+    RingRows { block: usize, rows: Arc<Matrix> },
     /// Surviving edges (global element ids) with correlations.
     Edges(Vec<(usize, usize, f32)>),
     /// Similarity tiles for leader-side assembly: `(row0, col0, tile)`.
@@ -103,6 +106,34 @@ impl Payload {
             Payload::Forces(parts) => parts.len() as u64,
         }
     }
+
+    /// Whether `other` can be appended onto this payload: both must be the
+    /// same list-shaped result kind. The leader checks this before folding
+    /// a streamed chunk so a protocol bug surfaces as a clean error.
+    pub fn mergeable_with(&self, other: &Payload) -> bool {
+        matches!(
+            (self, other),
+            (Payload::Edges(_), Payload::Edges(_))
+                | (Payload::Tiles(_), Payload::Tiles(_))
+                | (Payload::Forces(_), Payload::Forces(_))
+        )
+    }
+
+    /// Append `other` onto this payload, preserving item order — how the
+    /// leader (and the worker's credit-exhausted fallback stash) reassemble
+    /// a result streamed as [`Message::ResultChunk`]s. Only list-shaped
+    /// result payloads merge ([`Payload::mergeable_with`]); anything else
+    /// panics — that is a protocol bug, same as an unexpected message kind
+    /// (the leader pre-checks and errors instead; worker-side panics are
+    /// caught and surfaced through the killed-rank path).
+    pub fn merge(&mut self, other: Payload) {
+        match (self, other) {
+            (Payload::Edges(a), Payload::Edges(b)) => a.extend(b),
+            (Payload::Tiles(a), Payload::Tiles(b)) => a.extend(b),
+            (Payload::Forces(a), Payload::Forces(b)) => a.extend(b),
+            (a, b) => panic!("cannot merge {} chunk into {} result", b.kind(), a.kind()),
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -119,6 +150,11 @@ pub enum Message {
     App(Payload),
     /// Worker → leader: this rank's reduced result.
     Result(Payload),
+    /// Worker → leader: a streamed slice of the rank's result (pipelined
+    /// mode). Chunks from one rank arrive in send order (per-pair FIFO) and
+    /// are merged at the leader; the closing [`Message::Result`] carries
+    /// whatever the worker had not streamed yet.
+    ResultChunk(Payload),
     /// Worker → leader: per-rank stats at completion.
     Stats(crate::coordinator::driver::RankStats),
     /// Leader → worker: phase barrier release.
@@ -141,7 +177,7 @@ impl Message {
                 blocks.iter().map(|(_, _, d)| d.nbytes()).sum::<u64>()
             }
             Message::ComputeTasks { tasks } => (tasks.len() * 16) as u64,
-            Message::App(p) | Message::Result(p) => p.nbytes(),
+            Message::App(p) | Message::Result(p) | Message::ResultChunk(p) => p.nbytes(),
             Message::Stats(_) => 128,
             Message::Proceed | Message::PhaseDone { .. } | Message::Shutdown | Message::Crash => 0,
         };
@@ -154,6 +190,7 @@ impl Message {
             Message::ComputeTasks { .. } => "compute-tasks",
             Message::App(p) => p.kind(),
             Message::Result(_) => "result",
+            Message::ResultChunk(_) => "result-chunk",
             Message::Stats(_) => "stats",
             Message::Proceed => "proceed",
             Message::PhaseDone { .. } => "phase-done",
@@ -191,6 +228,39 @@ mod tests {
         assert_eq!(bodies.nbytes(), 4 * 8 + 4 * 24);
         assert_eq!(bodies.len(), 4);
         assert!(!bodies.is_empty());
+    }
+
+    #[test]
+    fn merge_preserves_order() {
+        let mut r = Payload::Edges(vec![(0, 1, 0.5)]);
+        r.merge(Payload::Edges(vec![(2, 3, 0.7), (4, 5, 0.9)]));
+        match r {
+            Payload::Edges(e) => assert_eq!(e, vec![(0, 1, 0.5), (2, 3, 0.7), (4, 5, 0.9)]),
+            other => panic!("wrong kind {}", other.kind()),
+        }
+        let chunk = Message::ResultChunk(Payload::Forces(vec![(0, vec![[1.0; 3]; 2])]));
+        assert_eq!(chunk.kind(), "result-chunk");
+        assert_eq!(chunk.payload_bytes(), HEADER_BYTES + 8 + 48);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot merge")]
+    fn merge_rejects_kind_mismatch() {
+        let mut r = Payload::Edges(vec![]);
+        r.merge(Payload::Tiles(vec![]));
+    }
+
+    #[test]
+    fn mergeable_with_matches_merge_support() {
+        let edges = Payload::Edges(vec![]);
+        let tiles = Payload::Tiles(vec![]);
+        let forces = Payload::Forces(vec![]);
+        let ring = Payload::RingRows { block: 0, rows: Arc::new(Matrix::zeros(1, 1)) };
+        assert!(edges.mergeable_with(&Payload::Edges(vec![])));
+        assert!(tiles.mergeable_with(&Payload::Tiles(vec![])));
+        assert!(forces.mergeable_with(&Payload::Forces(vec![])));
+        assert!(!edges.mergeable_with(&tiles));
+        assert!(!ring.mergeable_with(&ring));
     }
 
     #[test]

@@ -13,6 +13,14 @@
 //! in-tree plugins are PCIT ([`crate::apps::pcit`]), all-pairs similarity
 //! ([`crate::apps::similarity`]) and n-body ([`crate::apps::nbody`]).
 //!
+//! Transport modes (`--pipeline {on,off}`): the synchronous protocol blocks
+//! on every receive; the pipelined protocol overlaps tile compute with the
+//! ring exchange (forward-before-compute double buffering) and streams
+//! result chunks to the leader under a bounded send-ahead credit. Both
+//! modes are bitwise-identical in output for every in-tree app; the overlap
+//! shows up as `RankStats::recv_blocked_secs` shrinking (the
+//! `EngineReport::overlap_ratio` metric, `benches/overlap.rs`).
+//!
 //! PCIT flows (phase structure of quorum-exact PCIT, DESIGN.md §7):
 //! 1. **Distribute** — rank i receives the standardized blocks of its
 //!    quorum S_i (k·N/P gene rows).
@@ -30,8 +38,8 @@ pub mod driver;
 
 pub use app::{DistributedApp, Plan, WorkerCtx};
 pub use driver::{
-    run_app, run_distributed_pcit, run_resilient_pcit, run_single_node, DistributedReport,
-    EngineOptions, EngineReport, RankStats,
+    pipeline_default, run_app, run_distributed_pcit, run_resilient_pcit, run_single_node,
+    DistributedReport, EngineOptions, EngineReport, RankStats,
 };
 pub use messages::{BlockData, Message, Payload};
 pub use transport::{Endpoint, Transport};

@@ -5,12 +5,29 @@
 //! global and per-rank) so communication-volume claims are measured, not
 //! modeled. Failure injection: a rank can be "killed" — sends to it vanish
 //! (byte-counted), and its queue raises `Disconnected` for receivers.
+//!
+//! Pipelining support: each rank **owns** its receive queue (no lock on the
+//! hot receive path — a rank's receiver is only ever used by its own
+//! thread), receives can be non-blocking ([`Endpoint::try_recv`]), time
+//! actually spent blocked inside a receive is accounted per rank (the
+//! overlap-ratio metric in `EngineReport`), and per-destination in-flight
+//! message counts bound how far ahead a pipelined sender may run
+//! ([`Endpoint::can_send_ahead`]).
 
 use super::messages::Message;
 use crate::metrics::CommStats;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Default send-ahead credit: how many of its own messages a pipelined
+/// sender may leave queued at one destination before falling back to
+/// synchronous (compute-first) ordering. Bounds transport memory (at most
+/// P · credit messages per queue) the way a real non-blocking MPI
+/// implementation bounds outstanding `MPI_Isend`s.
+pub const DEFAULT_SEND_AHEAD_CREDIT: usize = 4;
 
 /// A routed message.
 pub struct Envelope {
@@ -28,12 +45,25 @@ pub struct Transport {
     /// Per-rank sent-byte counters (indexed by sender).
     pub send_stats: Vec<Arc<CommStats>>,
     killed: Vec<Arc<AtomicBool>>,
+    /// `in_flight[from][to]`: messages sent by `from`, queued at `to`, not
+    /// yet dequeued. Per-(sender, destination) so one rank's send-ahead
+    /// credit never depends on unrelated ranks' traffic (P workers can each
+    /// stream to the leader without starving each other).
+    in_flight: Vec<Vec<AtomicU64>>,
+    /// Send-ahead credit per (sender, destination) pair (see
+    /// [`DEFAULT_SEND_AHEAD_CREDIT`]).
+    credit: usize,
 }
 
 impl Transport {
     /// Create a transport with `n_endpoints` ranks (incl. leader at 0).
     /// Returns the transport plus one [`Endpoint`] per rank.
     pub fn new(n_endpoints: usize) -> (Arc<Transport>, Vec<Endpoint>) {
+        Self::with_credit(n_endpoints, DEFAULT_SEND_AHEAD_CREDIT)
+    }
+
+    /// [`Transport::new`] with an explicit send-ahead credit.
+    pub fn with_credit(n_endpoints: usize, credit: usize) -> (Arc<Transport>, Vec<Endpoint>) {
         let mut senders = Vec::with_capacity(n_endpoints);
         let mut receivers = Vec::with_capacity(n_endpoints);
         for _ in 0..n_endpoints {
@@ -47,14 +77,21 @@ impl Transport {
             recv_stats: (0..n_endpoints).map(|_| Arc::new(CommStats::default())).collect(),
             send_stats: (0..n_endpoints).map(|_| Arc::new(CommStats::default())).collect(),
             killed: (0..n_endpoints).map(|_| Arc::new(AtomicBool::new(false))).collect(),
+            in_flight: (0..n_endpoints)
+                .map(|_| (0..n_endpoints).map(|_| AtomicU64::new(0)).collect())
+                .collect(),
+            // credit 0 is honored: can_send_ahead is always false, giving
+            // synchronous ordering even with pipelining requested.
+            credit,
         });
         let endpoints = receivers
             .into_iter()
             .enumerate()
             .map(|(rank, rx)| Endpoint {
                 rank,
-                rx: Mutex::new(rx),
+                rx,
                 transport: Arc::clone(&transport),
+                blocked_nanos: Cell::new(0),
             })
             .collect();
         (transport, endpoints)
@@ -73,6 +110,11 @@ impl Transport {
         self.killed[rank].load(Ordering::SeqCst)
     }
 
+    /// Messages sent by `from`, queued at `to`, not yet dequeued by it.
+    pub fn in_flight(&self, from: usize, to: usize) -> u64 {
+        self.in_flight[from][to].load(Ordering::Relaxed)
+    }
+
     fn send(&self, from: usize, to: usize, msg: Message) -> Result<(), SendError> {
         assert!(to < self.n_endpoints, "rank {to} out of range");
         let bytes = msg.payload_bytes();
@@ -81,9 +123,13 @@ impl Transport {
             return Err(SendError::Killed(to));
         }
         self.recv_stats[to].record(bytes);
+        self.in_flight[from][to].fetch_add(1, Ordering::Relaxed);
         self.senders[to]
             .send(Envelope { from, to, msg })
-            .map_err(|_| SendError::Disconnected(to))
+            .map_err(|_| {
+                self.in_flight[from][to].fetch_sub(1, Ordering::Relaxed);
+                SendError::Disconnected(to)
+            })
     }
 
     /// Total (messages, bytes) received across all ranks.
@@ -118,11 +164,16 @@ impl std::fmt::Display for SendError {
 
 impl std::error::Error for SendError {}
 
-/// A rank's handle: receive queue + send access.
+/// A rank's handle: an **owned** receive queue + send access. The receiver
+/// belongs to exactly one thread, so receives take no lock; the endpoint is
+/// `Send` but deliberately not `Sync`.
 pub struct Endpoint {
     pub rank: usize,
-    rx: Mutex<Receiver<Envelope>>,
+    rx: Receiver<Envelope>,
     transport: Arc<Transport>,
+    /// Nanoseconds this rank has spent blocked inside a receive (only time
+    /// actually waiting — a receive satisfied from the queue costs zero).
+    blocked_nanos: Cell<u64>,
 }
 
 impl Endpoint {
@@ -130,14 +181,67 @@ impl Endpoint {
         self.transport.send(self.rank, to, msg)
     }
 
-    /// Blocking receive. Returns None when all senders are gone.
+    /// Blocking receive. Returns None when all senders are gone. Time spent
+    /// actually waiting is added to [`Endpoint::blocked_secs`].
     pub fn recv(&self) -> Option<Envelope> {
-        self.rx.lock().unwrap().recv().ok()
+        match self.rx.try_recv() {
+            Ok(env) => {
+                self.dequeued(&env);
+                return Some(env);
+            }
+            Err(TryRecvError::Disconnected) => return None,
+            Err(TryRecvError::Empty) => {}
+        }
+        let start = Instant::now();
+        let out = self.rx.recv().ok();
+        self.block(start);
+        if let Some(env) = &out {
+            self.dequeued(env);
+        }
+        out
     }
 
-    /// Receive with timeout.
+    /// Non-blocking receive: `None` when the queue is currently empty (or
+    /// all senders are gone) — never waits, never counts blocked time.
+    pub fn try_recv(&self) -> Option<Envelope> {
+        let env = self.rx.try_recv().ok()?;
+        self.dequeued(&env);
+        Some(env)
+    }
+
+    /// Receive with timeout (blocked time accounted like [`Endpoint::recv`]).
     pub fn recv_timeout(&self, d: std::time::Duration) -> Option<Envelope> {
-        self.rx.lock().unwrap().recv_timeout(d).ok()
+        if let Some(env) = self.try_recv() {
+            return Some(env);
+        }
+        let start = Instant::now();
+        let out = self.rx.recv_timeout(d).ok();
+        self.block(start);
+        if let Some(env) = &out {
+            self.dequeued(env);
+        }
+        out
+    }
+
+    fn dequeued(&self, env: &Envelope) {
+        self.transport.in_flight[env.from][self.rank].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn block(&self, start: Instant) {
+        let nanos = start.elapsed().as_nanos() as u64;
+        self.blocked_nanos.set(self.blocked_nanos.get() + nanos);
+    }
+
+    /// Seconds this rank has spent blocked inside receives so far.
+    pub fn blocked_secs(&self) -> f64 {
+        self.blocked_nanos.get() as f64 * 1e-9
+    }
+
+    /// Whether this rank may queue one more message at `to` without
+    /// exceeding its own send-ahead credit there (other ranks' traffic to
+    /// `to` does not count against us).
+    pub fn can_send_ahead(&self, to: usize) -> bool {
+        self.transport.in_flight(self.rank, to) < self.transport.credit as u64
     }
 
     pub fn transport(&self) -> &Arc<Transport> {
@@ -222,5 +326,55 @@ mod tests {
             got += 1;
         }
         h.join().unwrap();
+    }
+
+    #[test]
+    fn try_recv_never_blocks() {
+        let (_t, eps) = Transport::new(2);
+        assert!(eps[1].try_recv().is_none());
+        eps[0].send(1, Message::Proceed).unwrap();
+        assert_eq!(eps[1].try_recv().unwrap().msg.kind(), "proceed");
+        assert!(eps[1].try_recv().is_none());
+        // Draining via try_recv must not register blocked time.
+        assert_eq!(eps[1].blocked_secs(), 0.0);
+    }
+
+    #[test]
+    fn blocked_time_counts_only_waits() {
+        let (_t, mut eps) = Transport::new(2);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        // Queue already non-empty: the receive is free.
+        e0.send(1, Message::Proceed).unwrap();
+        e1.recv().unwrap();
+        assert_eq!(e1.blocked_secs(), 0.0);
+        // Empty queue: the receive must wait for the sender and count it.
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            e0.send(1, Message::Proceed).unwrap();
+            e0 // keep the sender's endpoint alive until after the recv
+        });
+        e1.recv().unwrap();
+        assert!(e1.blocked_secs() >= 0.010, "blocked {}", e1.blocked_secs());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn in_flight_and_send_ahead_credit() {
+        let (t, eps) = Transport::new(3);
+        assert_eq!(t.in_flight(0, 1), 0);
+        assert!(eps[0].can_send_ahead(1));
+        for _ in 0..DEFAULT_SEND_AHEAD_CREDIT {
+            eps[0].send(1, Message::Proceed).unwrap();
+        }
+        assert_eq!(t.in_flight(0, 1), DEFAULT_SEND_AHEAD_CREDIT as u64);
+        // Credit exhausted: a pipelined sender must fall back to
+        // compute-first ordering (sends themselves still succeed).
+        assert!(!eps[0].can_send_ahead(1));
+        // Per-(sender, destination): rank 2's credit at rank 1 is its own.
+        assert!(eps[2].can_send_ahead(1));
+        eps[1].recv().unwrap();
+        assert_eq!(t.in_flight(0, 1), DEFAULT_SEND_AHEAD_CREDIT as u64 - 1);
+        assert!(eps[0].can_send_ahead(1));
     }
 }

@@ -69,6 +69,8 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         quorum,
         tasks,
         pending,
+        result_stash: None,
+        streamed_items: 0,
         corr_tiles: 0,
         elim_tiles: 0,
         phase1_secs: 0.0,
@@ -80,6 +82,9 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         // Shut down / crashed mid-protocol: exit without reporting.
         return;
     };
+    // Anything the app could not stream (send-ahead credit ran out) rides
+    // in the final Result, ahead of the app's returned remainder.
+    let result = ctx.finish_result(result);
 
     // ---- Report result + stats, then drain until shutdown. ----
     let (sent_msgs, sent_bytes) = ctx.ep.sent();
@@ -95,7 +100,8 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         recv_bytes,
         phase1_secs: ctx.phase1_secs,
         phase2_secs: ctx.phase2_secs,
-        n_items: result.items(),
+        recv_blocked_secs: ctx.ep.blocked_secs(),
+        n_items: ctx.streamed_items + result.items(),
     };
     let _ = ctx.ep.send(0, Message::Result(result));
     let _ = ctx.ep.send(0, Message::Stats(stats));

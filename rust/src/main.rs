@@ -39,6 +39,7 @@ fn app() -> App {
                 .arg(ArgSpec::opt("samples", "synthetic sample count", "32"))
                 .arg(ArgSpec::opt("mode", "single | quorum-exact | quorum-local", "quorum-exact"))
                 .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
+                .arg(ArgSpec::opt("pipeline", "overlap compute with ring exchange: on | off", ""))
                 .arg(ArgSpec::opt("backend", "native | xla", "native"))
                 .arg(ArgSpec::opt("seed", "dataset seed", "42"))
                 .arg(ArgSpec::opt("csv", "load expression CSV instead of synthetic", ""))
@@ -51,6 +52,7 @@ fn app() -> App {
                 .arg(ArgSpec::opt("dim", "embedding dimension", "64"))
                 .arg(ArgSpec::opt("ranks", "simulated ranks", "8"))
                 .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
+                .arg(ArgSpec::opt("pipeline", "overlap compute with result gather: on | off", ""))
                 .arg(ArgSpec::opt("topk", "pairs to report", "10"))
                 .arg(ArgSpec::opt("seed", "feature seed", "42"))
                 .arg(ArgSpec::opt("backend", "native | xla", "native")),
@@ -60,6 +62,7 @@ fn app() -> App {
                 .arg(ArgSpec::opt("bodies", "number of bodies", "256"))
                 .arg(ArgSpec::opt("ranks", "simulated ranks", "8"))
                 .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
+                .arg(ArgSpec::opt("pipeline", "overlap compute with result gather: on | off", ""))
                 .arg(ArgSpec::opt("steps", "leapfrog steps", "50"))
                 .arg(ArgSpec::opt("dt", "time step", "0.001"))
                 .arg(ArgSpec::opt("threads", "pool threads", "4")),
@@ -161,6 +164,17 @@ fn cmd_quorum(p: &Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `--pipeline` tri-state: `""` inherits the config / `QUORALL_PIPELINE`
+/// default, `on`/`off` are explicit.
+fn parse_pipeline_flag(p: &Parsed) -> anyhow::Result<Option<bool>> {
+    match p.get_str("pipeline").unwrap_or("") {
+        "" => Ok(None),
+        s => quorall::config::parse_pipeline(s)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("bad --pipeline: {s} (on | off)")),
+    }
+}
+
 fn load_dataset(p: &Parsed) -> anyhow::Result<ExpressionDataset> {
     let csv = p.get_str("csv").unwrap_or("");
     if !csv.is_empty() {
@@ -178,7 +192,7 @@ fn load_dataset(p: &Parsed) -> anyhow::Result<ExpressionDataset> {
 }
 
 fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
-    let cfg = if let Some(path) = p.get_str("config").filter(|s| !s.is_empty()) {
+    let mut cfg = if let Some(path) = p.get_str("config").filter(|s| !s.is_empty()) {
         RunConfig::from_file(std::path::Path::new(path)).map_err(|e| anyhow::anyhow!("{e}"))?
     } else {
         let mode = PcitMode::parse(p.get_str("mode").unwrap_or("quorum-exact"))
@@ -204,6 +218,9 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
         cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
         cfg
     };
+    if let Some(b) = parse_pipeline_flag(p)? {
+        cfg.pipeline = b;
+    }
 
     // A config file fully describes the dataset; flags otherwise.
     let dataset = if p.get_str("config").filter(|s| !s.is_empty()).is_some() {
@@ -227,11 +244,12 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
         load_dataset(p)?
     };
     println!(
-        "PCIT: N = {} genes, M = {} samples, mode = {}, strategy = {}, backend = {}, ranks = {}",
+        "PCIT: N = {} genes, M = {} samples, mode = {}, strategy = {}, pipeline = {}, backend = {}, ranks = {}",
         dataset.genes(),
         dataset.samples(),
         cfg.mode.name(),
         cfg.strategy.name(),
+        if cfg.pipeline { "on" } else { "off" },
         cfg.backend.name(),
         cfg.ranks
     );
@@ -250,12 +268,14 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
     let exec = quorall::runtime::executor_for(cfg.backend, &cfg.artifacts_dir)?;
     let rep = run_distributed_pcit(&cfg, &dataset, exec)?;
     println!(
-        "distributed: {} edges in {} | k = {} | peak mem/rank {} | comm {}",
+        "distributed: {} edges in {} | k = {} | peak mem/rank {} | comm {} | blocked-recv {} (overlap {:.1}%)",
         rep.network.n_edges(),
         format_secs(rep.wall_secs),
         rep.quorum_size,
         format_bytes(rep.peak_bytes_per_rank),
-        format_bytes(rep.total_comm_bytes)
+        format_bytes(rep.total_comm_bytes),
+        format_secs(rep.recv_blocked_secs),
+        100.0 * rep.overlap_ratio
     );
     let mut t = Table::new("per-rank stats", &["rank", "corr_tiles", "elim_tiles", "peak_mem", "sent", "recv"]);
     for s in &rep.stats {
@@ -308,20 +328,26 @@ fn cmd_similarity(p: &Parsed) -> anyhow::Result<()> {
 
     let mut rng = Rng::new(p.get_u64("seed")?);
     let features = Matrix::from_fn(n, dim, |_, _| rng.normal_f32());
+    let mut opts = EngineOptions::new(ranks, strategy);
+    if let Some(b) = parse_pipeline_flag(p)? {
+        opts.pipeline = b;
+    }
     println!(
-        "similarity: N = {n} × dim = {dim}, strategy = {}, ranks = {ranks}, backend = {}",
+        "similarity: N = {n} × dim = {dim}, strategy = {}, pipeline = {}, ranks = {ranks}, backend = {}",
         strategy.name(),
+        if opts.pipeline { "on" } else { "off" },
         exec.name()
     );
-    let opts = EngineOptions::new(ranks, strategy);
     let (sim, rep) = run_distributed_similarity(&features, &exec, &opts)?;
     println!(
-        "distributed similarity ({}) in {} | replication k = {} | peak mem/rank {} | comm {}",
+        "distributed similarity ({}) in {} | replication k = {} | peak mem/rank {} | comm {} | blocked-recv {} (overlap {:.1}%)",
         rep.strategy.name(),
         format_secs(rep.wall_secs),
         rep.max_quorum_size,
         format_bytes(rep.peak_bytes_per_rank),
-        format_bytes(rep.total_comm_bytes)
+        format_bytes(rep.total_comm_bytes),
+        format_secs(rep.recv_blocked_secs),
+        100.0 * rep.overlap_ratio
     );
     let top = top_pairs(&sim, k);
     println!("top-{k} most similar pairs:");
@@ -345,13 +371,18 @@ fn cmd_nbody(p: &Parsed) -> anyhow::Result<()> {
 
     // One engine pass first: the distributed path with measured stats; its
     // forces then seed the simulation (no duplicate first force pass).
-    let opts = EngineOptions::new(ranks, strategy);
+    let mut opts = EngineOptions::new(ranks, strategy);
+    if let Some(b) = parse_pipeline_flag(p)? {
+        opts.pipeline = b;
+    }
     let (forces, rep) = nbody::run_distributed_nbody(&bodies, &opts)?;
     println!(
-        "distributed forces ({}): peak mem/rank {} | comm {}",
+        "distributed forces ({}, pipeline = {}): peak mem/rank {} | comm {} | blocked-recv {}",
         rep.strategy.name(),
+        if opts.pipeline { "on" } else { "off" },
         format_bytes(rep.peak_bytes_per_rank),
-        format_bytes(rep.total_comm_bytes)
+        format_bytes(rep.total_comm_bytes),
+        format_secs(rep.recv_blocked_secs)
     );
 
     let sw = quorall::util::timer::Stopwatch::start();

@@ -52,6 +52,33 @@ fn pcit_small_run_with_verify() {
 }
 
 #[test]
+fn pcit_pipeline_flag_verifies_identical() {
+    let out = quorall()
+        .args([
+            "pcit", "--ranks", "4", "--genes", "96", "--samples", "20", "--pipeline", "on",
+            "--verify",
+        ])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {text}\nstderr: {err}");
+    assert!(text.contains("pipeline = on"), "{text}");
+    assert!(text.contains("blocked-recv"), "{text}");
+    assert!(text.contains("IDENTICAL"), "{text}");
+}
+
+#[test]
+fn pcit_rejects_bad_pipeline_value() {
+    let out = quorall()
+        .args(["pcit", "--ranks", "4", "--genes", "64", "--pipeline", "sideways"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bad --pipeline"));
+}
+
+#[test]
 fn pcit_writes_edges_csv() {
     let dir = std::env::temp_dir().join("quorall-cli-test");
     std::fs::create_dir_all(&dir).unwrap();

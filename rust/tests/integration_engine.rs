@@ -10,7 +10,8 @@ use quorall::apps::similarity::{
 use quorall::apps::{DistMode, PcitApp};
 use quorall::config::{PcitMode, RunConfig};
 use quorall::coordinator::{
-    run_app, run_distributed_pcit, run_single_node, EngineOptions,
+    run_app, run_distributed_pcit, run_single_node, BlockData, DistributedApp, EngineOptions,
+    Payload, WorkerCtx,
 };
 use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
 use quorall::pcit::standardize_rows;
@@ -152,6 +153,175 @@ fn nbody_parity_all_strategies() {
         }
         assert_eq!(rep.stats.len(), 8);
         assert!(rep.total_comm_bytes > 0);
+    }
+}
+
+// ---- Pipelined transport: bitwise parity with the synchronous path ----
+
+#[test]
+fn pcit_pipelined_bitwise_identical_to_sync() {
+    // The forward-before-compute ring must run the identical elimination
+    // sequence: same surviving edges, same correlation values, bit for bit,
+    // under every placement strategy.
+    let d = dataset(96);
+    for strategy in Strategy::all() {
+        for ranks in [4usize, 8] {
+            let mut nets = Vec::new();
+            for pipeline in [false, true] {
+                let cfg = RunConfig {
+                    ranks,
+                    mode: PcitMode::QuorumExact,
+                    strategy,
+                    pipeline,
+                    ..RunConfig::default()
+                };
+                nets.push(run_distributed_pcit(&cfg, &d, exec()).unwrap().network);
+            }
+            assert_eq!(
+                nets[0].edges,
+                nets[1].edges,
+                "strategy {} P={ranks}: pipelined edges differ from sync",
+                strategy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn similarity_pipelined_bitwise_identical_to_sync() {
+    let mut rng = Rng::new(17);
+    let f = Matrix::from_fn(60, 16, |_, _| rng.normal_f32());
+    let e = exec();
+    for strategy in Strategy::all() {
+        let mut sims = Vec::new();
+        for pipeline in [false, true] {
+            let mut opts = EngineOptions::new(8, strategy);
+            opts.pipeline = pipeline;
+            let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+            assert!(rep.recv_blocked_secs >= 0.0);
+            assert!((0.0..=1.0).contains(&rep.overlap_ratio));
+            sims.push(sim);
+        }
+        assert_eq!(
+            sims[0].as_slice(),
+            sims[1].as_slice(),
+            "strategy {}: streamed similarity differs from sync",
+            strategy.name()
+        );
+    }
+}
+
+#[test]
+fn nbody_pipelined_bitwise_identical_to_sync() {
+    let b = Bodies::random(60, 7);
+    for strategy in Strategy::all() {
+        let mut forces = Vec::new();
+        for pipeline in [false, true] {
+            let mut opts = EngineOptions::new(8, strategy);
+            opts.pipeline = pipeline;
+            forces.push(run_distributed_nbody(&b, &opts).unwrap().0);
+        }
+        for i in 0..b.n {
+            assert_eq!(
+                forces[0][i],
+                forces[1][i],
+                "strategy {} body {i}: streamed reduce differs from sync",
+                strategy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_parity_survives_credit_exhaustion() {
+    // Credit 1 forces the send-ahead paths into their fallbacks (ring:
+    // compute-first ordering; streaming: stash into the final Result) —
+    // results must stay bitwise identical anyway.
+    let mut rng = Rng::new(23);
+    let f = Matrix::from_fn(50, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    let sync = {
+        let mut opts = EngineOptions::new(8, Strategy::Cyclic);
+        opts.pipeline = false;
+        run_distributed_similarity(&f, &e, &opts).unwrap().0
+    };
+    let mut opts = EngineOptions::new(8, Strategy::Cyclic);
+    opts.pipeline = true;
+    opts.send_ahead_credit = 1;
+    let (starved, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+    assert_eq!(sync.as_slice(), starved.as_slice());
+    let items: u64 = rep.stats.iter().map(|s| s.n_items).sum();
+    // Streamed + stashed chunks must still account every owned tile:
+    // P(P+1)/2 = 36 pairs at P = 8.
+    assert_eq!(items, 36);
+
+    // Same starvation for the ring: with credit 1 every ring step falls
+    // back to compute-first ordering, which is exactly the sync protocol.
+    let d = dataset(64);
+    let cfg = RunConfig {
+        ranks: 5,
+        mode: PcitMode::QuorumExact,
+        pipeline: false,
+        ..RunConfig::default()
+    };
+    let base = run_distributed_pcit(&cfg, &d, exec()).unwrap().network;
+    let mut opts = EngineOptions::new(5, Strategy::Cyclic);
+    opts.pipeline = true;
+    opts.send_ahead_credit = 1;
+    let rep = run_app(pcit_app(&d, DistMode::Exact), &opts).unwrap();
+    let mut all_edges: Vec<(usize, usize, f32)> = Vec::new();
+    for (_, payload) in rep.results {
+        match payload {
+            quorall::coordinator::Payload::Edges(e) => all_edges.extend(e),
+            other => panic!("unexpected payload {}", other.kind()),
+        }
+    }
+    let starved_net = quorall::pcit::Network::new(64, all_edges);
+    assert_eq!(base.edges, starved_net.edges);
+}
+
+#[test]
+fn streaming_before_a_barrier_is_folded_not_fatal() {
+    // A fast rank may stream result chunks while the leader is still
+    // sequencing another rank's barrier phases; the leader must fold them
+    // (in compute order) instead of aborting with "unexpected message".
+    struct StreamyApp;
+    impl DistributedApp for StreamyApp {
+        fn name(&self) -> &'static str {
+            "streamy"
+        }
+        fn elements(&self) -> usize {
+            8
+        }
+        fn make_block(&self, range: std::ops::Range<usize>) -> BlockData {
+            BlockData::Rows(Matrix::zeros(range.len(), 4))
+        }
+        fn sync_phases(&self) -> Vec<u8> {
+            vec![1]
+        }
+        fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+            let me = ctx.my_block;
+            // Stream before reporting the phase: the chunk reaches the
+            // leader mid-wait_phases.
+            ctx.stream_result(Payload::Edges(vec![(me, me + 10, 0.5)]));
+            ctx.phase_done(1);
+            if !ctx.barrier() {
+                return None;
+            }
+            Some(Payload::Edges(vec![(me, me + 20, 0.9)]))
+        }
+    }
+    let mut opts = EngineOptions::new(4, Strategy::Cyclic);
+    opts.pipeline = true;
+    let rep = run_app(Arc::new(StreamyApp), &opts).unwrap();
+    assert_eq!(rep.results.len(), 4);
+    for (rank, payload) in rep.results {
+        match payload {
+            Payload::Edges(e) => {
+                assert_eq!(e, vec![(rank, rank + 10, 0.5), (rank, rank + 20, 0.9)]);
+            }
+            other => panic!("rank {rank}: wrong payload {}", other.kind()),
+        }
     }
 }
 
