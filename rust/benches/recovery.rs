@@ -1,0 +1,118 @@
+//! Mid-run crash recovery cost vs redundancy r.
+//!
+//! The paper's cyclic quorums give r-fold data replication; this bench
+//! makes the resulting fault tolerance measurable: quorum-local PCIT
+//! (threshold mode — pairwise-exact, so parity is bitwise) at P = 9, one
+//! rank killed mid-compute (`compute:1`), for r ∈ {2, 3}. Reported per r:
+//! the failure-free wall clock, the recovered-run wall clock, the recovery
+//! overhead ratio, and how many orphaned tasks surviving hosts recomputed.
+//! Both transports are exercised (sync orphans everything the victim
+//! owned; pipelined only the unstreamed suffix).
+//!
+//! Parity is asserted: the recovered network must equal the failure-free
+//! one edge-for-edge. Emits `BENCH_recovery.json`.
+//!
+//! Run: `cargo bench --bench recovery [-- --quick]`
+
+use quorall::benchkit;
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{run_resilient_pcit_at, KillAt};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::metrics::Table;
+use quorall::runtime::{Executor, NativeBackend};
+use quorall::util::json::Json;
+use quorall::util::timer::format_secs;
+use std::sync::Arc;
+
+const P: usize = 9;
+const VICTIM: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let quick = benchkit::quick_mode();
+    let genes = if quick { 144 } else { 288 };
+    let dataset = ExpressionDataset::generate(SyntheticSpec {
+        genes,
+        samples: 32,
+        modules: 8,
+        noise: 0.6,
+        seed: 7,
+    });
+    let exec: Executor = Arc::new(NativeBackend::new());
+
+    let mut table = Table::new(
+        &format!(
+            "mid-run recovery cost, quorum-local PCIT (threshold), N = {genes}, P = {P}, kill rank {VICTIM} at compute:1"
+        ),
+        &["r", "transport", "wall clean", "wall recovered", "overhead", "recovered tasks"],
+    );
+
+    let mut meta: Vec<(&str, Json)> = vec![("quick", Json::Bool(quick))];
+    let mut overheads: Vec<((usize, bool), f64)> = Vec::new();
+    for &r in &[2usize, 3] {
+        for pipeline in [false, true] {
+            let cfg = RunConfig {
+                ranks: P,
+                mode: PcitMode::QuorumLocal,
+                pipeline,
+                use_pcit_significance: false,
+                threshold: 0.5,
+                ..RunConfig::default()
+            };
+            let clean = run_resilient_pcit_at(
+                &cfg,
+                &dataset,
+                Arc::clone(&exec),
+                r,
+                &[],
+                KillAt::Scatter,
+            )?;
+            let recovered = run_resilient_pcit_at(
+                &cfg,
+                &dataset,
+                Arc::clone(&exec),
+                r,
+                &[VICTIM],
+                KillAt::Compute { tasks: 1 },
+            )?;
+            // Parity: the recovered network must be byte-for-byte complete.
+            assert_eq!(
+                clean.network.edges, recovered.network.edges,
+                "r = {r} pipeline = {pipeline}: recovered network diverged"
+            );
+            assert_eq!(recovered.dead_ranks, vec![VICTIM]);
+            let overhead = if clean.wall_secs > 0.0 {
+                recovered.wall_secs / clean.wall_secs
+            } else {
+                1.0
+            };
+            overheads.push(((r, pipeline), overhead));
+            table.row(vec![
+                r.to_string(),
+                if pipeline { "pipelined" } else { "sync" }.into(),
+                format_secs(clean.wall_secs),
+                format_secs(recovered.wall_secs),
+                format!("{overhead:.2}x"),
+                recovered.recovered_tasks.to_string(),
+            ]);
+        }
+    }
+    benchkit::emit(&table);
+
+    let keys: Vec<String> = overheads
+        .iter()
+        .map(|((r, pipeline), _)| {
+            format!("overhead_r{r}_{}", if *pipeline { "pipelined" } else { "sync" })
+        })
+        .collect();
+    for (key, (_, ov)) in keys.iter().zip(overheads.iter()) {
+        meta.push((key.as_str(), Json::Num(*ov)));
+    }
+    let payload = benchkit::json_payload("recovery", meta, &[&table]);
+    benchkit::write_json(std::path::Path::new("BENCH_recovery.json"), &payload)?;
+    println!("expected shape: recovery re-runs only the victim's orphaned tasks on surviving");
+    println!("hosts (the r-fold placement already holds the blocks — no data movement), so the");
+    println!("overhead stays a modest multiple of the per-rank task share plus the 25ms-poll");
+    println!("detection latency, and shrinks further under the pipelined transport where the");
+    println!("victim's streamed prefix needs no recomputation.");
+    Ok(())
+}

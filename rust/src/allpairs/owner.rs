@@ -217,6 +217,40 @@ impl RedundantAssignment {
         out
     }
 
+    /// Tasks whose *primary* owner (`owners(a, b)[0]`) is `process` — the
+    /// exactly-once work list resilient runs execute. Replication buys
+    /// surviving hosts for every pair, not duplicated compute: backup
+    /// owners only run a task when the leader re-assigns it after the
+    /// primary dies mid-run.
+    pub fn primary_tasks_for(&self, process: usize) -> Vec<PairTask> {
+        let mut out = Vec::new();
+        for a in 0..self.p {
+            for b in a..self.p {
+                if self.owners[PairAssignment::index(self.p, a, b)].first() == Some(&process) {
+                    out.push(PairTask { a, b });
+                }
+            }
+        }
+        out
+    }
+
+    /// Load imbalance of the primary assignment (max/mean, 1.0 = perfect).
+    pub fn primary_imbalance(&self) -> f64 {
+        let mut load = vec![0usize; self.p];
+        for os in &self.owners {
+            if let Some(&o) = os.first() {
+                load[o] += 1;
+            }
+        }
+        let max = *load.iter().max().unwrap_or(&0) as f64;
+        let mean = load.iter().sum::<usize>() as f64 / self.p.max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
     /// Is every pair still owned by at least one process outside `dead`?
     pub fn covers_with_failures(&self, dead: &[usize]) -> bool {
         self.owners
@@ -242,6 +276,7 @@ fn pair_hash(a: usize, b: usize) -> u64 {
 mod tests {
     use super::*;
     use crate::prop::forall;
+    use crate::quorum::CyclicQuorumSet;
 
     fn q(p: usize) -> CyclicQuorumSet {
         CyclicQuorumSet::for_processes(p).unwrap()
@@ -299,6 +334,27 @@ mod tests {
         let mut all: Vec<PairTask> = (0..13).flat_map(|pr| a.tasks_for(pr)).collect();
         all.sort();
         assert_eq!(all, super::super::all_pair_tasks(13));
+    }
+
+    #[test]
+    fn primary_tasks_partition_all_pairs() {
+        // The primary assignment of an r-fold cover is exactly-once: every
+        // pair appears in precisely one rank's primary task list, and the
+        // primary is always the first listed owner.
+        for p in [9usize, 13] {
+            let qs = CyclicQuorumSet::with_redundancy(p, 2).unwrap();
+            let r = RedundantAssignment::build(&qs, 2);
+            let mut all: Vec<PairTask> = (0..p).flat_map(|pr| r.primary_tasks_for(pr)).collect();
+            all.sort();
+            assert_eq!(all, super::super::all_pair_tasks(p), "P={p}");
+            for pr in 0..p {
+                for t in r.primary_tasks_for(pr) {
+                    assert_eq!(r.owners(t.a, t.b)[0], pr);
+                }
+            }
+            assert!(r.primary_imbalance() >= 1.0);
+            assert!(r.primary_imbalance() < 2.5, "imbalance {}", r.primary_imbalance());
+        }
     }
 
     #[test]

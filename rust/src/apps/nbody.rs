@@ -223,43 +223,81 @@ impl DistributedApp for NbodyApp {
         }
     }
 
+    fn recoverable(&self) -> bool {
+        // A block pair's partial forces depend only on the two blocks'
+        // masses/positions — any rank hosting both reproduces them
+        // bitwise, and the leader splices recovered partials back in the
+        // dead rank's task order, keeping the f64 reduce order identical.
+        true
+    }
+
+    fn run_recovery_task(
+        &self,
+        ctx: &mut WorkerCtx,
+        task: crate::allpairs::PairTask,
+    ) -> Payload {
+        Payload::Forces(task_partials(ctx, &task).unwrap_or_default())
+    }
+
     fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
         let tasks = std::mem::take(&mut ctx.tasks);
         let sw = ThreadCpuTimer::start();
         let mut partials: Vec<(usize, Vec<[f64; 3]>)> = Vec::new();
         for t in &tasks {
-            let (ma, pa) = ctx.block_bodies(t.a);
-            let (mb, pb) = ctx.block_bodies(t.b);
-            if ma.is_empty() && mb.is_empty() {
-                continue;
+            if !ctx.begin_task() {
+                // Injected mid-compute crash: exit without reporting.
+                return None;
             }
-            let (fa, fb) = pair_forces(ma, pa, mb, pb, t.a == t.b);
-            ctx.corr_tiles += 1;
+            let Some(mut pair) = task_partials(ctx, t) else {
+                ctx.complete_task(*t);
+                continue; // both blocks empty: nothing to report
+            };
+            debug_assert_eq!(pair.len(), 2);
             // Partial-force buffers are held until the single Result send —
             // account them so the placement memory comparison sees the same
             // working-set definition as the other plugins.
-            let bytes = ((fa.len() + fb.len()) * 24) as u64;
+            let bytes: u64 = pair.iter().map(|(_, f)| (f.len() * 24) as u64).sum();
             ctx.mem.alloc(bytes);
+            // Completion is recorded before the chunk streams so the
+            // chunk's provenance tags cover this task.
+            ctx.complete_task(*t);
             if ctx.pipeline() {
                 // Send-ahead: stream each task's partial forces to the
                 // leader while the next block pair computes. The leader
                 // merges chunks in compute order, so the rank-ascending,
                 // task-order reduce stays bitwise identical.
-                let chunk = Payload::Forces(vec![
-                    (ctx.block_range(t.a).start, fa),
-                    (ctx.block_range(t.b).start, fb),
-                ]);
+                let chunk = Payload::Forces(std::mem::take(&mut pair));
                 if ctx.stream_result(chunk) {
                     ctx.mem.free(bytes);
                 }
             } else {
-                partials.push((ctx.block_range(t.a).start, fa));
-                partials.push((ctx.block_range(t.b).start, fb));
+                partials.append(&mut pair);
             }
         }
         ctx.phase1_secs = sw.elapsed_secs();
         Some(Payload::Forces(partials))
     }
+}
+
+/// One owned task's partial forces — `(block offset, forces)` for both
+/// blocks, Newton's third law applied inside the pair. The single per-task
+/// code path shared by the worker loop and mid-run recovery, so a
+/// re-assigned task reproduces the dead rank's partials bitwise.
+fn task_partials(
+    ctx: &mut WorkerCtx,
+    t: &crate::allpairs::PairTask,
+) -> Option<Vec<(usize, Vec<[f64; 3]>)>> {
+    let (ma, pa) = ctx.block_bodies(t.a);
+    let (mb, pb) = ctx.block_bodies(t.b);
+    if ma.is_empty() && mb.is_empty() {
+        return None;
+    }
+    let (fa, fb) = pair_forces(ma, pa, mb, pb, t.a == t.b);
+    ctx.corr_tiles += 1;
+    Some(vec![
+        (ctx.block_range(t.a).start, fa),
+        (ctx.block_range(t.b).start, fb),
+    ])
 }
 
 /// Run one force computation on the distributed engine and reduce the

@@ -62,8 +62,13 @@ impl PcitApp {
         // the *same* buffer to both homes — the column home applies it
         // transposed on write instead of receiving a transposed copy.
         for t in &tasks {
+            if !ctx.begin_task() {
+                // Injected mid-compute crash: exit without reporting.
+                return None;
+            }
             let tile = Arc::new(self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view()));
             ctx.corr_tiles += 1;
+            ctx.complete_task(*t);
             if t.a == t.b {
                 ctx.send_to_rank(t.a, Payload::CorrTile {
                     rows_block: t.a,
@@ -252,47 +257,82 @@ impl PcitApp {
         let tasks = std::mem::take(&mut ctx.tasks);
         let sw = ThreadCpuTimer::start();
         let mut edges: Vec<(usize, usize, f32)> = Vec::new();
-        // Mediator panel: all quorum genes, concatenated.
-        let quorum = ctx.quorum.clone();
-        let panel: Vec<(usize, usize)> = quorum
-            .iter()
-            .map(|&b| (b, ctx.block_range(b).len()))
-            .collect();
         for t in &tasks {
-            let (a_len, b_len) = (ctx.block_rows(t.a).rows(), ctx.block_rows(t.b).rows());
-            if a_len == 0 || b_len == 0 {
-                continue;
+            if !ctx.begin_task() {
+                // Injected mid-compute crash: exit without reporting.
+                return None;
             }
-            // Tiles read the quorum blocks in place — no per-task clones.
-            let cxy = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view());
-            ctx.corr_tiles += 1;
-            if self.use_pcit {
-                // r(x, z) and r(y, z) for z over the quorum panel.
-                let panel_cols: usize = panel.iter().map(|&(_, l)| l).sum();
-                let mut rxz = Matrix::zeros(a_len, panel_cols);
-                let mut ryz = Matrix::zeros(b_len, panel_cols);
-                let mut c0 = 0usize;
-                for &(qb, qlen) in &panel {
-                    if qlen == 0 {
-                        continue;
-                    }
-                    let ta = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(qb).view());
-                    let tb = self.exec.corr_tile(ctx.block_rows(t.b).view(), ctx.block_rows(qb).view());
-                    ctx.corr_tiles += 2;
-                    rxz.set_block(0, c0, &ta);
-                    ryz.set_block(0, c0, &tb);
-                    c0 += qlen;
-                }
-                let flags = self.exec.pcit_tile(cxy.view(), rxz.view(), ryz.view());
-                ctx.elim_tiles += 1;
-                let mask = flags_to_mask(&flags);
-                self.collect_task_edges(ctx, t, &cxy, Some(&mask), &mut edges);
+            let mut task_edges: Vec<(usize, usize, f32)> = Vec::new();
+            self.local_task_edges(ctx, t, &mut task_edges);
+            ctx.complete_task(*t);
+            if ctx.pipeline() {
+                // Stream each task's edges (with its provenance tag) so the
+                // leader's gather overlaps the remaining tasks and its task
+                // ledger limits a mid-run death to the unreported suffix.
+                // Chunks merge at the leader in compute order — bitwise
+                // identical to the synchronous single-Result path.
+                ctx.stream_result(Payload::Edges(task_edges));
             } else {
-                self.collect_task_edges(ctx, t, &cxy, None, &mut edges);
+                edges.extend(task_edges);
             }
         }
         ctx.phase2_secs = sw.elapsed_secs();
         Some(Payload::Edges(edges))
+    }
+
+    /// One quorum-local task: the edges of block pair `t`, with the
+    /// tolerance scan restricted to the computing rank's quorum genes.
+    /// Shared by the worker loop and mid-run recovery
+    /// ([`DistributedApp::run_recovery_task`]), so a re-assigned task runs
+    /// the identical per-task code path. Note the mediator panel is the
+    /// *computing* rank's quorum: in threshold mode (no panel) recovered
+    /// edges are bitwise-identical; in full-PCIT local mode they carry the
+    /// recovering host's panel, matching the ablation's approximation
+    /// semantics.
+    fn local_task_edges(
+        &self,
+        ctx: &mut WorkerCtx,
+        t: &crate::allpairs::PairTask,
+        edges: &mut Vec<(usize, usize, f32)>,
+    ) {
+        let (a_len, b_len) = (ctx.block_rows(t.a).rows(), ctx.block_rows(t.b).rows());
+        if a_len == 0 || b_len == 0 {
+            return;
+        }
+        // Tiles read the quorum blocks in place — no per-task clones.
+        let cxy = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view());
+        ctx.corr_tiles += 1;
+        if self.use_pcit {
+            // Mediator panel: all quorum genes, concatenated.
+            let panel: Vec<(usize, usize)> = ctx
+                .quorum
+                .clone()
+                .into_iter()
+                .map(|b| (b, ctx.block_range(b).len()))
+                .collect();
+            // r(x, z) and r(y, z) for z over the quorum panel.
+            let panel_cols: usize = panel.iter().map(|&(_, l)| l).sum();
+            let mut rxz = Matrix::zeros(a_len, panel_cols);
+            let mut ryz = Matrix::zeros(b_len, panel_cols);
+            let mut c0 = 0usize;
+            for &(qb, qlen) in &panel {
+                if qlen == 0 {
+                    continue;
+                }
+                let ta = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(qb).view());
+                let tb = self.exec.corr_tile(ctx.block_rows(t.b).view(), ctx.block_rows(qb).view());
+                ctx.corr_tiles += 2;
+                rxz.set_block(0, c0, &ta);
+                ryz.set_block(0, c0, &tb);
+                c0 += qlen;
+            }
+            let flags = self.exec.pcit_tile(cxy.view(), rxz.view(), ryz.view());
+            ctx.elim_tiles += 1;
+            let mask = flags_to_mask(&flags);
+            self.collect_task_edges(ctx, t, &cxy, Some(&mask), edges);
+        } else {
+            self.collect_task_edges(ctx, t, &cxy, None, edges);
+        }
     }
 
     fn collect_task_edges(
@@ -358,11 +398,32 @@ impl DistributedApp for PcitApp {
         }
     }
 
-    fn reduce_tolerates_duplicates(&self) -> bool {
-        // Local mode's edge sets deduplicate in `Network::new`; exact mode's
-        // phase-1b counts exactly P tiles per row home and must not see
-        // duplicates.
+    fn recoverable(&self) -> bool {
+        // Local mode is task-granular (each pair's edges computable in
+        // isolation from quorum blocks). Exact mode is not: tiles route to
+        // row homes (the phase-1b P-tiles-per-home invariant) and the
+        // phase-2 ring requires every rank, so a mid-run death there
+        // aborts cleanly instead of recovering.
         self.mode == DistMode::Local
+    }
+
+    fn recovery_is_bitwise(&self) -> bool {
+        // Threshold mode is pairwise-exact anywhere; full-PCIT local mode
+        // eliminates against the computing rank's quorum panel, so a
+        // recovered task's edges legitimately differ from the original
+        // owner's (the ablation's approximation semantics).
+        !self.use_pcit
+    }
+
+    fn run_recovery_task(
+        &self,
+        ctx: &mut WorkerCtx,
+        task: crate::allpairs::PairTask,
+    ) -> Payload {
+        debug_assert_eq!(self.mode, DistMode::Local, "only local mode is recoverable");
+        let mut edges = Vec::new();
+        self.local_task_edges(ctx, &task, &mut edges);
+        Payload::Edges(edges)
     }
 
     fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {

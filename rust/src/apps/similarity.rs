@@ -144,20 +144,37 @@ impl DistributedApp for SimilarityApp {
         BlockData::Rows(self.z.block(range.start, 0, range.len(), self.z.cols()))
     }
 
+    fn recoverable(&self) -> bool {
+        // Each tile is an isolated strict-order dot product over the two
+        // blocks — any rank hosting both reproduces it bitwise.
+        true
+    }
+
+    fn run_recovery_task(
+        &self,
+        ctx: &mut WorkerCtx,
+        task: crate::allpairs::PairTask,
+    ) -> Payload {
+        Payload::Tiles(self.task_tile(ctx, &task).into_iter().collect())
+    }
+
     fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
         let tasks = std::mem::take(&mut ctx.tasks);
         let sw = ThreadCpuTimer::start();
         let mut tiles: Vec<(usize, usize, Matrix)> = Vec::new();
         for t in &tasks {
-            let ra = ctx.block_range(t.a);
-            let rb = ctx.block_range(t.b);
-            if ra.is_empty() || rb.is_empty() {
-                continue;
+            if !ctx.begin_task() {
+                // Injected mid-compute crash: exit without reporting.
+                return None;
             }
-            // Zero-copy: tiles read straight from the placement blocks.
-            let tile = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view());
-            ctx.corr_tiles += 1;
+            let Some((r0, c0, tile)) = self.task_tile(ctx, t) else {
+                ctx.complete_task(*t);
+                continue; // empty trailing block: nothing to report
+            };
             ctx.mem.alloc(tile.nbytes());
+            // Completion is recorded before the chunk streams so the
+            // chunk's provenance tags cover this task.
+            ctx.complete_task(*t);
             if ctx.pipeline() {
                 // Send-ahead: ship each tile to the leader as soon as it is
                 // computed, overlapping the leader's gather/merge with the
@@ -166,15 +183,37 @@ impl DistributedApp for SimilarityApp {
                 // later backlog flush is invisible to the accountant —
                 // conservative: peak is never understated).
                 let bytes = tile.nbytes();
-                if ctx.stream_result(Payload::Tiles(vec![(ra.start, rb.start, tile)])) {
+                if ctx.stream_result(Payload::Tiles(vec![(r0, c0, tile)])) {
                     ctx.mem.free(bytes);
                 }
             } else {
-                tiles.push((ra.start, rb.start, tile));
+                tiles.push((r0, c0, tile));
             }
         }
         ctx.phase1_secs = sw.elapsed_secs();
         Some(Payload::Tiles(tiles))
+    }
+}
+
+impl SimilarityApp {
+    /// One owned task's tile (`None` for empty trailing blocks) — the
+    /// single per-task code path shared by the worker loop and mid-run
+    /// recovery, so a re-assigned task reproduces the dead rank's tile
+    /// bitwise.
+    fn task_tile(
+        &self,
+        ctx: &mut WorkerCtx,
+        t: &crate::allpairs::PairTask,
+    ) -> Option<(usize, usize, Matrix)> {
+        let ra = ctx.block_range(t.a);
+        let rb = ctx.block_range(t.b);
+        if ra.is_empty() || rb.is_empty() {
+            return None;
+        }
+        // Zero-copy: tiles read straight from the placement blocks.
+        let tile = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view());
+        ctx.corr_tiles += 1;
+        Some((ra.start, rb.start, tile))
     }
 }
 

@@ -12,6 +12,10 @@
 //! backend = "native"    # native | xla
 //! block = 64            # tile edge for pair blocks
 //! seed = 42
+//! redundancy = 2        # r-fold data replication (resilient runs)
+//! kill = "4"            # failure injection: ranks to crash ("2,5" for two)
+//! kill_at = "compute:1" # scatter | compute:<k> | gather
+//! recover = "on"        # re-assign a dead rank's tasks mid-run
 //!
 //! [dataset]
 //! kind = "synthetic"    # synthetic | csv
@@ -27,6 +31,7 @@
 //! ```
 
 use super::parser::{ConfigError, TomlDoc};
+use crate::coordinator::KillAt;
 use crate::quorum::Strategy;
 use std::path::PathBuf;
 
@@ -114,6 +119,15 @@ pub fn parse_pipeline(s: &str) -> Option<bool> {
     }
 }
 
+/// Parse a comma-separated rank list (`--kill 4` / `--kill 2,5`). An empty
+/// string is an empty list.
+pub fn parse_kill_list(s: &str) -> Option<Vec<usize>> {
+    if s.trim().is_empty() {
+        return Some(Vec::new());
+    }
+    s.split(',').map(|t| t.trim().parse().ok()).collect()
+}
+
 /// Complete, validated run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -129,6 +143,16 @@ pub struct RunConfig {
     pub backend: BackendKind,
     pub block: usize,
     pub seed: u64,
+    /// Data-replication factor r for resilient runs: pairs are placed on
+    /// >= r hosting quorums; compute stays exactly-once.
+    pub redundancy: usize,
+    /// Ranks to crash (failure injection), at the `kill_at` phase.
+    pub kill: Vec<usize>,
+    /// Injection phase: `scatter | compute:<k> | gather`.
+    pub kill_at: KillAt,
+    /// Mid-run crash recovery: re-assign a dead rank's unfinished tasks to
+    /// surviving quorum hosts instead of aborting (`--recover {on,off}`).
+    pub recover: bool,
     pub dataset: DatasetConfig,
     /// PCIT significance variant: true = full PCIT, false = plain |r| cutoff.
     pub use_pcit_significance: bool,
@@ -147,6 +171,10 @@ impl Default for RunConfig {
             backend: BackendKind::Native,
             block: 64,
             seed: 42,
+            redundancy: 1,
+            kill: Vec::new(),
+            kill_at: KillAt::Scatter,
+            recover: false,
             dataset: DatasetConfig::Synthetic { genes: 512, samples: 32, modules: 8, noise: 0.6 },
             use_pcit_significance: true,
             threshold: 0.85,
@@ -188,6 +216,26 @@ impl RunConfig {
         }
         if let Some(v) = doc.get_usize("run", "seed") {
             cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_usize("run", "redundancy") {
+            cfg.redundancy = v;
+        }
+        if let Some(s) = doc.get_str("run", "kill") {
+            cfg.kill = parse_kill_list(s)
+                .ok_or_else(|| bad(format!("bad run.kill: {s} (want e.g. \"2\" or \"2,5\")")))?;
+        } else if let Some(v) = doc.get_usize("run", "kill") {
+            cfg.kill = vec![v];
+        }
+        if let Some(s) = doc.get_str("run", "kill_at") {
+            cfg.kill_at = KillAt::parse(s).ok_or_else(|| {
+                bad(format!("bad run.kill_at: {s} (want scatter | compute:<k> | gather)"))
+            })?;
+        }
+        if let Some(s) = doc.get_str("run", "recover") {
+            cfg.recover = parse_pipeline(s)
+                .ok_or_else(|| bad(format!("bad run.recover: {s} (want \"on\" | \"off\")")))?;
+        } else if let Some(b) = doc.get_bool("run", "recover") {
+            cfg.recover = b;
         }
         if let Some(s) = doc.get_str("run", "artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(s);
@@ -248,6 +296,17 @@ impl RunConfig {
         }
         if !(0.0..=1.0).contains(&self.threshold) {
             return Err(format!("pcit.threshold must be in [0,1] (got {})", self.threshold));
+        }
+        if self.redundancy == 0 {
+            return Err("run.redundancy must be >= 1".into());
+        }
+        if let Some(&k) = self.kill.iter().find(|&&k| k >= self.ranks) {
+            return Err(format!("run.kill rank {k} out of range (ranks = {})", self.ranks));
+        }
+        for (i, &k) in self.kill.iter().enumerate() {
+            if self.kill[..i].contains(&k) {
+                return Err(format!("run.kill targets rank {k} twice"));
+            }
         }
         if let DatasetConfig::Synthetic { genes, samples, .. } = self.dataset {
             if genes < 2 {
@@ -339,6 +398,37 @@ threshold = 0.9
         assert_eq!(parse_pipeline("on"), Some(true));
         assert_eq!(parse_pipeline("off"), Some(false));
         assert_eq!(parse_pipeline("bogus"), None);
+    }
+
+    #[test]
+    fn recovery_keys_parse() {
+        let cfg = RunConfig::from_doc(&doc(
+            "[run]\nranks = 9\nredundancy = 2\nkill = \"4\"\nkill_at = \"compute:1\"\nrecover = \"on\"",
+        ))
+        .unwrap();
+        assert_eq!(cfg.redundancy, 2);
+        assert_eq!(cfg.kill, vec![4]);
+        assert_eq!(cfg.kill_at, KillAt::Compute { tasks: 1 });
+        assert!(cfg.recover);
+        let cfg = RunConfig::from_doc(&doc("[run]\nranks = 9\nkill = \"2,5\"\nrecover = true"))
+            .unwrap();
+        assert_eq!(cfg.kill, vec![2, 5]);
+        assert!(cfg.recover);
+        // Integer form of kill.
+        let cfg = RunConfig::from_doc(&doc("[run]\nranks = 9\nkill = 3")).unwrap();
+        assert_eq!(cfg.kill, vec![3]);
+        assert_eq!(parse_kill_list(""), Some(Vec::new()));
+        assert_eq!(parse_kill_list("1, 2"), Some(vec![1, 2]));
+        assert_eq!(parse_kill_list("1,x"), None);
+    }
+
+    #[test]
+    fn recovery_keys_validated() {
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nredundancy = 0")).is_err());
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nkill = \"9\"")).is_err());
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nkill = \"2,2\"")).is_err());
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nkill_at = \"bogus\"")).is_err());
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nrecover = \"sideways\"")).is_err());
     }
 
     #[test]

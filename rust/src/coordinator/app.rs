@@ -9,8 +9,8 @@
 //! blocks and owned pair tasks. PCIT, all-pairs similarity, and n-body are
 //! the three in-tree plugins.
 
-use super::messages::{BlockData, Message, Payload};
-use super::transport::Endpoint;
+use super::messages::{BlockData, KillAt, Message, Payload};
+use super::transport::{endpoint_of, Endpoint};
 use crate::allpairs::PairTask;
 use crate::metrics::MemoryAccountant;
 use crate::util::Matrix;
@@ -66,20 +66,48 @@ pub trait DistributedApp: Send + Sync {
         Vec::new()
     }
 
-    /// Whether the app's result reduction tolerates the same pair being
-    /// computed by multiple ranks (required for redundant, r > 1,
-    /// assignment). Default false: summing reducers (n-body forces) and
-    /// count-exact protocols (PCIT exact's P-tiles-per-home invariant)
-    /// would silently corrupt under duplicates; only apps whose reduce
-    /// deduplicates (e.g. PCIT-local's edge set) opt in.
-    fn reduce_tolerates_duplicates(&self) -> bool {
+    /// Whether the engine may recover this app's crashed ranks mid-run by
+    /// re-assigning unfinished pair tasks to surviving hosts. Requires
+    /// task-granular results: each task's payload must be computable in
+    /// isolation — no inter-worker exchange, no cross-task coupling — and
+    /// bitwise-identical on any rank hosting both of the task's blocks
+    /// (how [`DistributedApp::run_recovery_task`] reproduces a dead rank's
+    /// output exactly). Barrier phases are fine; PCIT-exact's tile routing
+    /// + ring is the canonical counter-example and stays `false`.
+    fn recoverable(&self) -> bool {
         false
+    }
+
+    /// Whether [`DistributedApp::run_recovery_task`] reproduces the
+    /// original owner's payload bitwise — what the leader's
+    /// duplicate-recovery parity assert relies on. Default true; apps
+    /// whose recovery is only approximate (full-PCIT local mode: the
+    /// mediator panel is the computing rank's quorum) opt out, and
+    /// differing duplicates are then tolerated without asserting.
+    fn recovery_is_bitwise(&self) -> bool {
+        true
+    }
+
+    /// Compute one re-assigned task on behalf of a dead rank and return
+    /// its result payload (leader-directed work stealing). When
+    /// [`DistributedApp::recovery_is_bitwise`] holds (the default), the
+    /// payload must be bitwise-identical to what the original owner would
+    /// have produced for the same task, so the leader can splice it into
+    /// the dead rank's result at the task's original position. Only
+    /// called when [`DistributedApp::recoverable`] returns true. Note:
+    /// recovery compute runs after the assignee's Stats already reported,
+    /// so its tile counters are not reflected in any `RankStats` — the
+    /// leader's `recovered_tasks` is the accounting for recovered work.
+    fn run_recovery_task(&self, ctx: &mut WorkerCtx, task: PairTask) -> Payload {
+        let _ = (ctx, task);
+        panic!("{}: app does not support mid-run task recovery", self.name())
     }
 
     /// The worker protocol: compute this rank's owned pair tasks
     /// (`ctx.tasks`) over its quorum blocks, exchanging app traffic as
     /// needed, and return the rank's result payload. Return `None` when a
-    /// receive reports shutdown/crash — the worker exits without reporting.
+    /// receive reports shutdown/crash (or [`WorkerCtx::begin_task`] says
+    /// injected failure strikes) — the worker exits without reporting.
     fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload>;
 }
 
@@ -112,6 +140,20 @@ pub struct WorkerCtx {
     pub(super) result_stash: Option<Payload>,
     /// Items already streamed to the leader (counted into `n_items`).
     pub(super) streamed_items: u64,
+    /// Injected failure plan for this rank (None = healthy).
+    pub(super) kill_at: Option<KillAt>,
+    /// Simulated crash tripped: the rank stops reporting and exits.
+    pub(super) dead: bool,
+    /// Tasks completed since the last streamed chunk — the provenance tags
+    /// the next [`Message::ResultChunk`] carries so the leader's task
+    /// ledger knows which work a mid-run death can no longer orphan.
+    pub(super) task_tags: Vec<PairTask>,
+    /// Tasks completed so far (drives `compute:<k>` failure injection).
+    pub(super) completed_tasks: usize,
+    /// Late task grants ([`Message::Reassign`]) that arrived while the app
+    /// protocol was still running (e.g. stashed at a barrier); processed
+    /// after this rank's own result is reported.
+    pub(super) pending_reassign: VecDeque<(usize, Vec<PairTask>)>,
     // ---- stats the app fills in (reported by the engine) ----
     pub corr_tiles: u64,
     pub elim_tiles: u64,
@@ -166,12 +208,46 @@ impl WorkerCtx {
     /// to the synchronous (compute-first) ordering, which bounds queue
     /// memory without ever changing results.
     pub fn can_send_ahead(&self, block: usize) -> bool {
-        self.ep.can_send_ahead(block + 1)
+        self.ep.can_send_ahead(endpoint_of(block))
     }
 
     /// Send app traffic to the worker holding block id `block`.
     pub fn send_to_rank(&self, block: usize, payload: Payload) {
-        let _ = self.ep.send(block + 1, Message::App(payload));
+        let _ = self.ep.send(endpoint_of(block), Message::App(payload));
+    }
+
+    /// Begin the next owned task. Returns false when injected failure says
+    /// this rank dies now (`--kill-at compute:<k>`: after completing — and,
+    /// pipelined, reporting — k tasks); the app must then return `None`
+    /// from `run_worker` so the worker exits without reporting, exactly
+    /// like a real mid-compute crash.
+    pub fn begin_task(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        if let Some(KillAt::Compute { tasks }) = self.kill_at {
+            if self.completed_tasks >= tasks {
+                self.die();
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Record completion of task `t`: provenance for the next streamed
+    /// chunk (the leader's task ledger) and the counter `compute:<k>`
+    /// failure injection trips on. Apps call this after computing a task's
+    /// payload and *before* streaming it, so the chunk's tags cover it.
+    pub fn complete_task(&mut self, t: PairTask) {
+        self.completed_tasks += 1;
+        self.task_tags.push(t);
+    }
+
+    /// Simulate this rank's death: mark it killed on the transport (the
+    /// leader's failure detection sees the loss) and stop reporting.
+    pub(super) fn die(&mut self) {
+        self.dead = true;
+        self.ep.transport().kill(self.ep.rank);
     }
 
     /// Stream a slice of this rank's result to the leader ahead of the
@@ -184,10 +260,19 @@ impl WorkerCtx {
     /// transient credit miss does not disable streaming for the rest of
     /// the run.
     pub fn stream_result(&mut self, chunk: Payload) -> bool {
+        if self.dead {
+            // A crashed rank reports nothing (belt and braces: apps return
+            // `None` from `run_worker` before reaching another stream).
+            return false;
+        }
         if self.ep.can_send_ahead(0) {
             let full = self.finish_result(chunk);
+            // Tags cover every task completed since the last chunk left —
+            // including tasks whose chunks were credit-stashed, which this
+            // send flushes in compute order.
+            let tasks = std::mem::take(&mut self.task_tags);
             self.streamed_items += full.items();
-            let _ = self.ep.send(0, Message::ResultChunk(full));
+            let _ = self.ep.send(0, Message::ResultChunk { payload: full, tasks });
             return true;
         }
         match &mut self.result_stash {
@@ -234,9 +319,15 @@ impl WorkerCtx {
                     self.pending.push_back(p);
                 }
                 Message::Shutdown => return None,
-                Message::Crash => {
-                    self.ep.transport().kill(self.ep.rank);
+                Message::Crash { .. } => {
+                    self.die();
                     return None;
+                }
+                // A late task grant can land while the app protocol is
+                // still mid-exchange; it is queued and honored after this
+                // rank's own result is reported.
+                Message::Reassign { for_rank, tasks } => {
+                    self.pending_reassign.push_back((for_rank, tasks));
                 }
                 other => panic!(
                     "worker {}: unexpected {} while awaiting app traffic",
@@ -260,11 +351,17 @@ impl WorkerCtx {
             match env.msg {
                 Message::Proceed => return true,
                 Message::Shutdown => return false,
-                Message::Crash => {
-                    self.ep.transport().kill(self.ep.rank);
+                Message::Crash { .. } => {
+                    self.die();
                     return false;
                 }
                 Message::App(p) => self.pending.push_back(p),
+                // A mid-run death elsewhere can hand us recovery work while
+                // we wait for the leader's Proceed; stash it for after our
+                // own result is reported.
+                Message::Reassign { for_rank, tasks } => {
+                    self.pending_reassign.push_back((for_rank, tasks));
+                }
                 other => panic!(
                     "worker {}: unexpected {} at barrier",
                     self.my_block,
@@ -290,7 +387,7 @@ mod tests {
 
     fn ctx_for(ep: Endpoint) -> WorkerCtx {
         WorkerCtx {
-            my_block: ep.rank - 1,
+            my_block: crate::coordinator::transport::rank_of(ep.rank),
             ep,
             plan: Plan { n: 8, p: 2, block: 4, pipeline: true },
             mem: MemoryAccountant::new(),
@@ -300,6 +397,11 @@ mod tests {
             pending: VecDeque::new(),
             result_stash: None,
             streamed_items: 0,
+            kill_at: None,
+            dead: false,
+            task_tags: Vec::new(),
+            completed_tasks: 0,
+            pending_reassign: VecDeque::new(),
             corr_tiles: 0,
             elim_tiles: 0,
             phase1_secs: 0.0,
@@ -382,7 +484,7 @@ mod tests {
         assert!(ctx.stream_result(Payload::Edges(vec![(6, 7, 0.4)])));
         assert_eq!(ctx.streamed_items, 4);
         match leader.recv().unwrap().msg {
-            Message::ResultChunk(Payload::Edges(e)) => {
+            Message::ResultChunk { payload: Payload::Edges(e), .. } => {
                 assert_eq!(e, vec![(2, 3, 0.2), (4, 5, 0.3), (6, 7, 0.4)]);
             }
             other => panic!("wrong message {}", other.kind()),
@@ -392,5 +494,54 @@ mod tests {
             Payload::Edges(e) => assert_eq!(e, vec![(8, 9, 0.5)]),
             other => panic!("wrong payload {}", other.kind()),
         }
+    }
+
+    #[test]
+    fn chunk_tags_cover_stashed_tasks_in_order() {
+        // Provenance tags must ride the chunk that actually carries the
+        // task's items — including tasks whose chunks were credit-stashed
+        // and flushed later.
+        let (_t, mut eps) = Transport::with_credit(2, 1);
+        let me = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        let t = |a, b| PairTask { a, b };
+
+        ctx.complete_task(t(0, 0));
+        assert!(ctx.stream_result(Payload::Edges(vec![(0, 0, 0.1)])));
+        ctx.complete_task(t(0, 1));
+        // Credit (1) exhausted: payload stashed, tag retained for the flush.
+        assert!(!ctx.stream_result(Payload::Edges(vec![(0, 1, 0.2)])));
+        match leader.recv().unwrap().msg {
+            Message::ResultChunk { tasks, .. } => assert_eq!(tasks, vec![t(0, 0)]),
+            other => panic!("wrong message {}", other.kind()),
+        }
+        ctx.complete_task(t(1, 1));
+        assert!(ctx.stream_result(Payload::Edges(vec![(1, 1, 0.3)])));
+        match leader.recv().unwrap().msg {
+            Message::ResultChunk { payload: Payload::Edges(e), tasks } => {
+                assert_eq!(e, vec![(0, 1, 0.2), (1, 1, 0.3)]);
+                assert_eq!(tasks, vec![t(0, 1), t(1, 1)]);
+            }
+            other => panic!("wrong message {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn compute_kill_trips_after_k_tasks() {
+        let (_t, mut eps) = Transport::new(2);
+        let me = eps.pop().unwrap();
+        let _leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        ctx.kill_at = Some(KillAt::Compute { tasks: 2 });
+        assert!(ctx.begin_task());
+        ctx.complete_task(PairTask { a: 0, b: 0 });
+        assert!(ctx.begin_task());
+        ctx.complete_task(PairTask { a: 0, b: 1 });
+        // Third task never starts: the rank dies, marked on the transport.
+        assert!(!ctx.begin_task());
+        assert!(ctx.ep.transport().is_killed(ctx.ep.rank));
+        // A dead rank reports nothing.
+        assert!(!ctx.stream_result(Payload::Edges(vec![(9, 9, 0.9)])));
     }
 }

@@ -4,8 +4,8 @@
 
 use super::app::{DistributedApp, Plan};
 use super::leader::{leader_main, LeaderOutcome, LeaderPlan};
-use super::messages::Payload;
-use super::transport::Transport;
+use super::messages::{KillAt, Payload};
+use super::transport::{endpoint_of, Transport};
 use super::worker::worker_main;
 use crate::allpairs::{OwnerPolicy, PairAssignment, RedundantAssignment};
 use crate::apps::pcit::{DistMode, PcitApp};
@@ -50,13 +50,21 @@ pub struct EngineOptions {
     pub strategy: Strategy,
     /// Pair-ownership policy.
     pub policy: OwnerPolicy,
-    /// Owners per pair (1 = exactly-once; > 1 needs an r-fold placement).
+    /// Data-replication factor r: pairs are placed on >= r hosting quorums
+    /// (r > 1 builds the r-fold placement). Compute stays exactly-once —
+    /// each pair has one *primary* owner; the extra hosts are standby.
     pub redundancy: usize,
-    /// Ranks to crash right after data delivery (failure injection).
+    /// Ranks to crash (failure injection), at the phase in `kill_at`.
     pub kill: Vec<usize>,
-    /// Resilient mode: gather from survivors instead of erroring on a
-    /// killed rank. Requires an app without barrier phases.
-    pub tolerate_kills: bool,
+    /// Which phase the injected crashes strike at (`--kill-at`).
+    pub kill_at: KillAt,
+    /// Mid-run crash recovery (`--recover on`): when a rank dies, the
+    /// leader re-assigns its unfinished tasks to surviving ranks that
+    /// already host the needed blocks, instead of aborting. Requires a
+    /// task-granular app ([`DistributedApp::recoverable`]); with r >= 2
+    /// every single failure is survivable and the recovered output is
+    /// bitwise-identical to the failure-free run.
+    pub recover: bool,
     /// Pipelined transport: overlap tile compute with the ring exchange /
     /// result gather (forward-before-compute, streamed result chunks).
     /// Bitwise-identical to the synchronous protocol for every in-tree app.
@@ -85,7 +93,8 @@ impl EngineOptions {
             policy: OwnerPolicy::LeastLoaded,
             redundancy: 1,
             kill: Vec::new(),
-            tolerate_kills: false,
+            kill_at: KillAt::Scatter,
+            recover: false,
             pipeline: pipeline_default(),
             send_ahead_credit: crate::coordinator::transport::DEFAULT_SEND_AHEAD_CREDIT,
         }
@@ -115,9 +124,28 @@ pub struct EngineReport {
     /// Sum over ranks of wall time spent blocked inside transport receives.
     pub recv_blocked_secs: f64,
     /// Fraction of aggregate worker wall time **not** spent blocked in a
-    /// receive: 1 − Σ blocked / (P · wall). 1.0 = perfect overlap (workers
-    /// never waited on the transport).
+    /// receive: 1 − Σ blocked / (survivors · wall). 1.0 = perfect overlap
+    /// (workers never waited on the transport). Survivors == P on a
+    /// failure-free run; dead ranks report no blocked time and are
+    /// excluded from both numerator and denominator.
     pub overlap_ratio: f64,
+    /// Tasks recomputed by surviving ranks after mid-run deaths.
+    pub recovered_tasks: u64,
+    /// Ranks that died during the run (injected or crashed), ascending.
+    pub dead_ranks: Vec<usize>,
+}
+
+/// Overlap ratio 1 − blocked / (P · wall), clamped to [0, 1]. Degenerate
+/// runs — zero or near-zero wall time from a tiny P, empty task lists, or
+/// a coarse clock — report 1.0 (nothing waited) instead of leaking a
+/// NaN/inf into `BENCH_overlap.json`.
+pub fn overlap_ratio(ranks: usize, wall_secs: f64, blocked_secs: f64) -> f64 {
+    let worker_secs = ranks as f64 * wall_secs;
+    if !worker_secs.is_finite() || worker_secs <= f64::EPSILON {
+        return 1.0;
+    }
+    let blocked = if blocked_secs.is_finite() { blocked_secs.max(0.0) } else { 0.0 };
+    (1.0 - blocked / worker_secs).clamp(0.0, 1.0)
 }
 
 /// Run `app` on a simulated cluster of `opts.ranks` workers under the
@@ -130,30 +158,28 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
         opts.kill.iter().all(|&k| k < p),
         "kill ranks out of range (P = {p})"
     );
-    if opts.tolerate_kills && !opts.kill.is_empty() {
-        anyhow::ensure!(
-            app.sync_phases().is_empty(),
-            "{}: resilient runs need a barrier-free app protocol",
-            app.name()
-        );
+    // A duplicate target would mean crashing an already-dead rank — reject
+    // here so the leader's injection sends can never silently fail.
+    for (i, &k) in opts.kill.iter().enumerate() {
+        anyhow::ensure!(!opts.kill[..i].contains(&k), "kill list targets rank {k} twice");
     }
-    anyhow::ensure!(
-        opts.redundancy <= 1 || app.reduce_tolerates_duplicates(),
-        "{}: redundant (r = {}) assignment computes pairs multiple times, which this app's reduce does not tolerate",
-        app.name(),
-        opts.redundancy
-    );
     let n = app.elements();
 
-    // Placement + per-rank task lists (exactly-once or redundant).
+    // Placement + per-rank task lists. Compute is always exactly-once:
+    // with r > 1 the *placement* replicates data (every pair has >= r
+    // hosting quorums) but each pair still has a single primary owner —
+    // the extra hosts only run a task when the leader re-assigns it after
+    // a mid-run death. Duplicate results can then only arise from
+    // recovery races, which the leader deduplicates task-by-task
+    // (first-writer-wins with a bitwise parity assert).
     let quorum = if opts.redundancy > 1 {
         opts.strategy.build_redundant(p, opts.redundancy)?
     } else {
         opts.strategy.build(p)?
     };
-    let (tasks, imbalance) = if opts.redundancy > 1 {
-        let assignment = RedundantAssignment::build(quorum.as_ref(), opts.redundancy);
-        if opts.tolerate_kills {
+    let (tasks, imbalance, recovery) = if opts.recover || opts.redundancy > 1 {
+        let assignment = RedundantAssignment::build(quorum.as_ref(), opts.redundancy.max(1));
+        if opts.recover && !opts.kill.is_empty() {
             // Validated on the exact instance the engine executes: every
             // pair must retain at least one surviving owner.
             anyhow::ensure!(
@@ -163,21 +189,27 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
                 opts.kill
             );
         }
-        ((0..p).map(|w| assignment.tasks_for(w)).collect::<Vec<_>>(), 1.0)
+        let tasks: Vec<_> = (0..p).map(|w| assignment.primary_tasks_for(w)).collect();
+        let im = assignment.primary_imbalance();
+        (tasks, im, opts.recover.then_some(assignment))
     } else {
         let assignment = PairAssignment::try_build(quorum.as_ref(), opts.policy)?;
-        if opts.tolerate_kills {
-            // Exactly-once ownership: a killed rank that owns any pair
-            // would silently lose its results.
+        let im = assignment.imbalance();
+        ((0..p).map(|w| assignment.tasks_for(w)).collect::<Vec<_>>(), im, None)
+    };
+
+    // An injection that can never fire (the victim owns too few tasks for
+    // `compute:<k>` to trip) would be a silent no-op while the victim still
+    // counts as doomed for recovery assignee selection — reject it.
+    if let KillAt::Compute { tasks: k } = opts.kill_at {
+        for &victim in &opts.kill {
             anyhow::ensure!(
-                opts.kill.iter().all(|&k| assignment.tasks_for(k).is_empty()),
-                "insufficient redundancy: some pair is owned only by killed ranks (r = 1, kill = {:?})",
-                opts.kill
+                tasks[victim].len() > k,
+                "kill-at compute:{k} can never fire: rank {victim} only owns {} tasks",
+                tasks[victim].len()
             );
         }
-        let im = assignment.imbalance();
-        ((0..p).map(|w| assignment.tasks_for(w)).collect::<Vec<_>>(), im)
-    };
+    }
 
     let plan = Plan { n, p, block: ceil_div(n, p), pipeline: opts.pipeline };
     let sw = Stopwatch::start();
@@ -203,14 +235,15 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
             quorum: quorum.as_ref(),
             tasks,
             kill: opts.kill.clone(),
-            tolerate_kills: opts.tolerate_kills,
+            kill_at: opts.kill_at,
+            recovery,
         },
     );
     if lead.is_err() {
         // Unblock any worker still waiting before joining (leader error
         // paths already broadcast Shutdown; this covers early send errors).
         for w in 0..p {
-            let _ = leader_ep.send(w + 1, super::messages::Message::Shutdown);
+            let _ = leader_ep.send(endpoint_of(w), super::messages::Message::Shutdown);
         }
     }
     let mut worker_panicked = false;
@@ -239,12 +272,10 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
         .map(|s| s.phase1_secs + s.phase2_secs)
         .fold(0.0f64, f64::max);
     let blocked: f64 = outcome.stats.iter().map(|s| s.recv_blocked_secs).sum();
-    let worker_secs = p as f64 * wall;
-    let overlap = if worker_secs > 0.0 {
-        (1.0 - blocked / worker_secs).clamp(0.0, 1.0)
-    } else {
-        1.0
-    };
+    // Dead ranks report no stats, so their blocked time is absent from the
+    // numerator — the denominator must count survivors only (== p on a
+    // failure-free run) or recovered runs would overstate overlap.
+    let overlap = overlap_ratio(outcome.stats.len(), wall, blocked);
 
     Ok(EngineReport {
         results: outcome.results,
@@ -258,6 +289,8 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
         total_comm_bytes: bytes,
         recv_blocked_secs: blocked,
         overlap_ratio: overlap,
+        recovered_tasks: outcome.recovered_tasks,
+        dead_ranks: outcome.dead_ranks,
     })
 }
 
@@ -279,6 +312,10 @@ pub struct DistributedReport {
     pub recv_blocked_secs: f64,
     /// See [`EngineReport::overlap_ratio`].
     pub overlap_ratio: f64,
+    /// Tasks recomputed by surviving ranks after mid-run deaths.
+    pub recovered_tasks: u64,
+    /// Ranks that died during the run, ascending.
+    pub dead_ranks: Vec<usize>,
 }
 
 /// Collect the per-rank edge payloads of a PCIT engine run into a network.
@@ -318,6 +355,10 @@ pub fn run_distributed_pcit(
     ));
     let mut opts = EngineOptions::new(cfg.ranks, cfg.strategy);
     opts.pipeline = cfg.pipeline;
+    opts.redundancy = cfg.redundancy;
+    opts.kill = cfg.kill.clone();
+    opts.kill_at = cfg.kill_at;
+    opts.recover = cfg.recover;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -331,24 +372,30 @@ pub fn run_distributed_pcit(
         total_comm_bytes: rep.total_comm_bytes,
         recv_blocked_secs: rep.recv_blocked_secs,
         overlap_ratio: rep.overlap_ratio,
+        recovered_tasks: rep.recovered_tasks,
+        dead_ranks: rep.dead_ranks,
     })
 }
 
-/// Resilient quorum-local run with task redundancy and injected failures
-/// (paper §6 future work).
+/// Resilient run with r-fold data replication and injected failures
+/// (paper §6 future work, closing the ROADMAP's r-fold recovery item).
 ///
-/// Every pair task is assigned to up to `redundancy` hosting ranks; the
-/// ranks in `kill` crash right after receiving their data, before doing any
-/// work. The engine validates (on the assignment it actually executes, via
-/// [`RedundantAssignment::covers_with_failures`]) that every pair retains
-/// one surviving owner, so the gathered network is complete — duplicate
-/// pair results deduplicate in `Network::new`.
+/// The placement hosts every pair on >= `redundancy` quorums, but compute
+/// stays exactly-once: each pair has a single primary owner. The ranks in
+/// `kill` crash at the injected phase; whenever a rank dies mid-run the
+/// leader re-assigns its *unfinished* tasks (per its ledger of streamed
+/// result provenance) to surviving hosts, so the run completes with a
+/// network bitwise-identical to the failure-free one in threshold mode.
+/// In full-PCIT quorum-local mode the recovered network is approximate
+/// (the mediator panel is the computing rank's quorum), matching the
+/// ablation's semantics. The engine validates up front, on the assignment
+/// it actually executes ([`RedundantAssignment::covers_with_failures`]),
+/// that every pair retains a surviving owner.
 ///
-/// Quorum-local only: the exact mode's ring requires every rank.
-///
-/// r >= 2 needs every pair hosted by >= r quorums: the optimal (λ = 1)
-/// sets host each pair exactly once, so redundancy uses the r-fold cover
-/// (quorum size ~r·k — replication is the price of fault tolerance).
+/// The mode follows `cfg.mode`: quorum-local recovers; quorum-exact runs
+/// are accepted (no upfront barrier-phase rejection) but abort with a
+/// clean error if a rank actually dies — the exact ring is not
+/// task-granular.
 pub fn run_resilient_pcit(
     cfg: &RunConfig,
     dataset: &ExpressionDataset,
@@ -356,21 +403,37 @@ pub fn run_resilient_pcit(
     redundancy: usize,
     kill: &[usize],
 ) -> anyhow::Result<DistributedReport> {
+    run_resilient_pcit_at(cfg, dataset, executor, redundancy, kill, KillAt::Scatter)
+}
+
+/// [`run_resilient_pcit`] with an explicit injection phase
+/// (`scatter | compute:<k> | gather`).
+pub fn run_resilient_pcit_at(
+    cfg: &RunConfig,
+    dataset: &ExpressionDataset,
+    executor: Executor,
+    redundancy: usize,
+    kill: &[usize],
+    kill_at: KillAt,
+) -> anyhow::Result<DistributedReport> {
+    anyhow::ensure!(cfg.mode != PcitMode::Single, "use run_single_node for single mode");
     let p = cfg.ranks;
     let n = dataset.genes();
     let sw = Stopwatch::start();
     let z = standardize_rows(&dataset.expr);
+    let mode = if cfg.mode == PcitMode::QuorumExact { DistMode::Exact } else { DistMode::Local };
     let app = Arc::new(PcitApp::new(
         z,
         executor,
-        DistMode::Local,
+        mode,
         cfg.use_pcit_significance,
         cfg.threshold as f32,
     ));
-    let mut opts = EngineOptions::new(p, Strategy::Cyclic);
+    let mut opts = EngineOptions::new(p, cfg.strategy);
     opts.redundancy = redundancy;
     opts.kill = kill.to_vec();
-    opts.tolerate_kills = true;
+    opts.kill_at = kill_at;
+    opts.recover = true;
     opts.pipeline = cfg.pipeline;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
@@ -385,6 +448,8 @@ pub fn run_resilient_pcit(
         total_comm_bytes: rep.total_comm_bytes,
         recv_blocked_secs: rep.recv_blocked_secs,
         overlap_ratio: rep.overlap_ratio,
+        recovered_tasks: rep.recovered_tasks,
+        dead_ranks: rep.dead_ranks,
     })
 }
 
@@ -514,6 +579,46 @@ mod tests {
             r13.peak_bytes_per_rank,
             r4.peak_bytes_per_rank
         );
+    }
+
+    #[test]
+    fn overlap_ratio_degenerate_cases_stay_finite() {
+        // Zero / near-zero wall time (tiny P, empty task lists, coarse
+        // clocks) must clamp, never NaN/inf.
+        assert_eq!(overlap_ratio(4, 0.0, 0.0), 1.0);
+        assert_eq!(overlap_ratio(4, 0.0, 1.0), 1.0);
+        assert_eq!(overlap_ratio(0, 1.0, 0.5), 1.0);
+        assert_eq!(overlap_ratio(4, f64::EPSILON / 8.0, 0.0), 1.0);
+        // Blocked exceeding the aggregate clamps to 0, not negative.
+        assert_eq!(overlap_ratio(2, 1.0, 5.0), 0.0);
+        // Garbage inputs stay in range.
+        assert_eq!(overlap_ratio(4, f64::NAN, 1.0), 1.0);
+        let r = overlap_ratio(4, 1.0, f64::NAN);
+        assert!((0.0..=1.0).contains(&r));
+        // The healthy case is the plain formula.
+        let r = overlap_ratio(4, 1.0, 1.0);
+        assert!((r - 0.75).abs() < 1e-12);
+        assert!(overlap_ratio(8, 2.0, 4.0).is_finite());
+    }
+
+    #[test]
+    fn duplicate_kill_targets_rejected() {
+        // Regression: a double-kill used to reach the leader and silently
+        // drop the second Crash send; now it is rejected up front.
+        let d = dataset(48);
+        let app = Arc::new(PcitApp::new(
+            crate::pcit::standardize_rows(&d.expr),
+            Arc::new(NativeBackend::new()),
+            DistMode::Local,
+            false,
+            0.5,
+        ));
+        let mut opts = EngineOptions::new(5, Strategy::Cyclic);
+        opts.kill = vec![2, 2];
+        opts.recover = true;
+        opts.redundancy = 2;
+        let err = run_app(app, &opts).unwrap_err();
+        assert!(format!("{err:#}").contains("twice"), "{err:#}");
     }
 
     #[test]

@@ -1,18 +1,31 @@
 //! Leader rank: scatters placement blocks, hands out pair tasks, sequences
 //! the app's barrier phases, gathers results and stats — app-agnostically.
 //!
-//! Failure handling: a worker that receives `Crash` marks itself killed on
-//! the transport before exiting. All leader waits poll with a short timeout
-//! and, whenever progress stalls, check whether any rank they are still
-//! waiting on is dead; if so the leader broadcasts `Shutdown` (unblocking
-//! every worker stuck in a receive) and surfaces a clean error instead of
-//! hanging.
+//! Failure handling: a worker that receives `Crash` (or panics) marks
+//! itself killed on the transport before exiting. All leader waits poll
+//! with a short timeout and, whenever progress stalls, check whether any
+//! rank they are still waiting on is dead.
+//!
+//! * Without a recovery plan, a death broadcasts `Shutdown` (unblocking
+//!   every worker stuck in a receive) and surfaces a clean error instead
+//!   of hanging — the fail-fast behavior.
+//! * With a recovery plan ([`LeaderPlan::recovery`]), the leader instead
+//!   consults its **task ledger** — per-rank assigned task lists folded
+//!   against the provenance tags on every streamed [`Message::ResultChunk`]
+//!   — to find the dead rank's *unfinished* tasks, re-assigns each to a
+//!   surviving backup owner (a rank whose quorum hosts both blocks, so the
+//!   data is already resident), and splices the per-task
+//!   [`Message::RecoveredResult`]s back into the dead rank's result at
+//!   their original positions. Assembly order is exactly what the dead
+//!   rank would have produced, so recovered runs are bitwise-identical to
+//!   failure-free runs for every task-granular app.
 
 use super::app::{DistributedApp, Plan};
-use super::messages::{BlockData, Message, Payload};
-use super::transport::Endpoint;
-use crate::allpairs::PairTask;
+use super::messages::{BlockData, KillAt, Message, Payload};
+use super::transport::{endpoint_of, rank_of, Endpoint};
+use crate::allpairs::{PairTask, RedundantAssignment};
 use crate::data::Partition;
+use std::collections::btree_map::Entry;
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
 
@@ -21,29 +34,443 @@ const POLL: Duration = Duration::from_millis(25);
 
 /// Everything the leader returns.
 pub struct LeaderOutcome {
-    /// Per-rank result payloads, sorted by rank (survivors only).
+    /// Per-rank result payloads, sorted by rank. A dead-but-recovered
+    /// rank's entry carries its spliced-together payload under its own
+    /// rank id; ranks that died with nothing to contribute are absent.
     pub results: Vec<(usize, Payload)>,
     pub stats: Vec<super::driver::RankStats>,
+    /// Tasks recomputed by surviving ranks after mid-run deaths.
+    pub recovered_tasks: u64,
+    /// Ranks that died during the run (injected or crashed), ascending.
+    pub dead_ranks: Vec<usize>,
 }
 
 /// Leader-side inputs: the app, its placement, and precomputed per-rank
-/// task lists (exactly-once or redundant — the leader does not care).
+/// task lists (the leader does not care how they were balanced).
 pub struct LeaderPlan<'a> {
     pub app: &'a dyn DistributedApp,
     pub quorum: &'a dyn crate::quorum::QuorumSystem,
-    /// tasks[rank] = pair tasks that rank owns.
+    /// tasks[rank] = pair tasks that rank owns (assignment order — the
+    /// order its result items appear in, which recovery must preserve).
     pub tasks: Vec<Vec<PairTask>>,
-    /// Ranks to crash right after data delivery (failure injection).
+    /// Ranks to crash (failure injection), at the phase below.
     pub kill: Vec<usize>,
-    /// When true (resilient runs), killed ranks are excluded from the
-    /// gather; when false any dead rank is an error.
-    pub tolerate_kills: bool,
+    /// Which phase the injected crashes strike at.
+    pub kill_at: KillAt,
+    /// Present on resilient runs: per-pair backup owners used to re-assign
+    /// a dead rank's unfinished tasks to surviving hosts. `None` keeps the
+    /// fail-fast behavior (any death aborts the run).
+    pub recovery: Option<RedundantAssignment>,
 }
 
-/// Run the leader protocol on endpoint 0; workers listen on 1..=P.
+/// Per-dead-rank orphan bookkeeping.
+struct Orphans {
+    /// Unfinished tasks, in the rank's original assignment order.
+    tasks: Vec<PairTask>,
+    /// Recovered payloads by task (first writer wins; late duplicates are
+    /// parity-asserted and dropped).
+    got: BTreeMap<PairTask, Payload>,
+    /// All orphans recovered and the rank's result spliced into `results`.
+    finalized: bool,
+}
+
+/// Leader gather state: the task ledger, the streamed partials, and the
+/// recovery machinery. One instance spans phase sync and the result
+/// gather — chunks can land in either loop.
+struct Gather {
+    p: usize,
+    app_name: String,
+    app_recoverable: bool,
+    /// Whether duplicate recovered results must be bitwise-identical
+    /// ([`DistributedApp::recovery_is_bitwise`]); approximate-recovery
+    /// apps tolerate differing duplicates (first writer still wins).
+    parity_strict: bool,
+    /// The task ledger: tasks[rank] as assigned, in assignment order.
+    assigned: Vec<Vec<PairTask>>,
+    /// Ledger provenance: tasks confirmed complete per rank (chunk tags;
+    /// a closing Result completes everything).
+    done: Vec<BTreeSet<PairTask>>,
+    /// Streamed result chunks folded per rank in arrival order.
+    partial: BTreeMap<usize, Payload>,
+    need_result: BTreeSet<usize>,
+    need_stats: BTreeSet<usize>,
+    result_done: Vec<bool>,
+    results: Vec<(usize, Payload)>,
+    stats: Vec<super::driver::RankStats>,
+    /// Backup owners per pair — `Some` enables mid-run recovery.
+    recovery: Option<RedundantAssignment>,
+    /// Ranks doomed by injection (never chosen as recovery assignees).
+    known_kill: Vec<usize>,
+    /// Dead ranks and their orphan state.
+    dead: BTreeMap<usize, Orphans>,
+    /// Re-assigned tasks per assignee (load balance + re-orphaning when an
+    /// assignee dies too): assignee -> [(original rank, task)].
+    delegated: BTreeMap<usize, Vec<(usize, PairTask)>>,
+    /// Recovery work handed to each rank so far (assignee choice balance).
+    reassign_load: Vec<usize>,
+    recovered_tasks: u64,
+}
+
+impl Gather {
+    fn new(
+        p: usize,
+        app: &dyn DistributedApp,
+        tasks: Vec<Vec<PairTask>>,
+        known_kill: Vec<usize>,
+        recovery: Option<RedundantAssignment>,
+    ) -> Self {
+        Gather {
+            p,
+            app_name: app.name().to_string(),
+            app_recoverable: app.recoverable(),
+            parity_strict: app.recovery_is_bitwise(),
+            assigned: tasks,
+            done: vec![BTreeSet::new(); p],
+            partial: BTreeMap::new(),
+            need_result: (0..p).collect(),
+            need_stats: (0..p).collect(),
+            result_done: vec![false; p],
+            results: Vec::new(),
+            stats: Vec::new(),
+            recovery,
+            known_kill,
+            dead: BTreeMap::new(),
+            delegated: BTreeMap::new(),
+            reassign_load: vec![0; p],
+            recovered_tasks: 0,
+        }
+    }
+
+    /// Fold a payload onto `rank`'s accumulated streamed partial,
+    /// preserving chunk arrival order — the single spelling of the
+    /// chunk-ordering invariant for both ResultChunk and the closing
+    /// Result. A chunk that cannot merge (kind mismatch) is a protocol bug
+    /// and surfaces as a clean abort + error, never a leader-side panic.
+    fn fold(&mut self, ep: &Endpoint, rank: usize, payload: Payload) -> anyhow::Result<()> {
+        let folded = match self.partial.remove(&rank) {
+            Some(mut acc) => {
+                if !acc.mergeable_with(&payload) {
+                    abort(ep, self.p);
+                    anyhow::bail!(
+                        "leader: rank {rank} streamed a {} chunk onto a {} result",
+                        payload.kind(),
+                        acc.kind()
+                    );
+                }
+                acc.merge(payload);
+                acc
+            }
+            None => payload,
+        };
+        self.partial.insert(rank, folded);
+        Ok(())
+    }
+
+    fn on_chunk(
+        &mut self,
+        ep: &Endpoint,
+        rank: usize,
+        payload: Payload,
+        tasks: Vec<PairTask>,
+    ) -> anyhow::Result<()> {
+        if self.dead.contains_key(&rank) {
+            // Late chunk from a rank already declared dead: its tasks were
+            // re-assigned the moment the death was discovered, and the
+            // recovered payloads are bitwise-identical, so the duplicate
+            // is dropped — first writer (the re-assignment) wins. Per-task
+            // parity is asserted on the RecoveredResult path instead.
+            crate::log_warn!(
+                "leader: dropping late result chunk from dead rank {rank} ({} tagged tasks)",
+                tasks.len()
+            );
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.need_result.contains(&rank),
+            "leader: unexpected result chunk from rank {rank}"
+        );
+        self.fold(ep, rank, payload)?;
+        self.done[rank].extend(tasks);
+        Ok(())
+    }
+
+    fn on_result(&mut self, ep: &Endpoint, rank: usize, payload: Payload) -> anyhow::Result<()> {
+        if self.dead.contains_key(&rank) {
+            crate::log_warn!("leader: dropping late result from dead rank {rank}");
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.need_result.remove(&rank),
+            "leader: unexpected result from rank {rank}"
+        );
+        self.fold(ep, rank, payload)?;
+        let full = self.partial.remove(&rank).expect("fold always inserts");
+        self.results.push((rank, full));
+        self.result_done[rank] = true;
+        let all = self.assigned[rank].clone();
+        self.done[rank].extend(all);
+        Ok(())
+    }
+
+    fn on_stats(
+        &mut self,
+        rank: usize,
+        s: super::driver::RankStats,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.need_stats.remove(&rank),
+            "leader: unexpected stats from rank {rank}"
+        );
+        self.stats.push(s);
+        Ok(())
+    }
+
+    /// A surviving rank delivered one re-assigned task's result on behalf
+    /// of dead rank `for_rank`. First writer wins; a duplicate (possible
+    /// when an assignee dies after sending but before the leader noticed)
+    /// must be bitwise-identical — the parity assert on the paper's
+    /// replication claim.
+    fn on_recovered(
+        &mut self,
+        from: usize,
+        for_rank: usize,
+        task: PairTask,
+        payload: Payload,
+    ) -> anyhow::Result<()> {
+        if let Some(v) = self.delegated.get_mut(&from) {
+            if let Some(i) = v.iter().position(|&(o, t)| o == for_rank && t == task) {
+                v.remove(i);
+            }
+        }
+        let mut newly = false;
+        {
+            let Some(orph) = self.dead.get_mut(&for_rank) else {
+                anyhow::bail!(
+                    "leader: rank {from} recovered a task for rank {for_rank}, which is not dead"
+                );
+            };
+            anyhow::ensure!(
+                orph.tasks.contains(&task),
+                "leader: recovered task ({}, {}) is not an orphan of rank {for_rank}",
+                task.a,
+                task.b
+            );
+            match orph.got.entry(task) {
+                Entry::Occupied(e) => {
+                    // Parity assert: with bitwise recovery, any duplicate
+                    // must reproduce the first writer's bytes exactly —
+                    // the operational form of the replication claim.
+                    // Approximate-recovery apps (full-PCIT local panels)
+                    // legitimately differ, so only the strict case asserts.
+                    if self.parity_strict {
+                        let same = e.get().parity_eq(&payload);
+                        if !same {
+                            crate::log_warn!(
+                                "leader: duplicate recovery of task ({}, {}) for rank {for_rank} is NOT bitwise-identical",
+                                task.a,
+                                task.b
+                            );
+                        }
+                        debug_assert!(
+                            same,
+                            "duplicate recovered result for task ({}, {}) must be bitwise-identical",
+                            task.a,
+                            task.b
+                        );
+                    }
+                }
+                Entry::Vacant(v) => {
+                    v.insert(payload);
+                    newly = true;
+                }
+            }
+        }
+        if newly {
+            self.recovered_tasks += 1;
+        }
+        self.try_finalize(for_rank)
+    }
+
+    /// Once every orphan of dead rank `d` is recovered, splice: the rank's
+    /// streamed partial (tasks it reported before dying, in task order)
+    /// followed by the recovered payloads in original task order — exactly
+    /// the payload the rank itself would have produced.
+    fn try_finalize(&mut self, d: usize) -> anyhow::Result<()> {
+        let Some(orph) = self.dead.get_mut(&d) else { return Ok(()) };
+        if orph.finalized || !orph.tasks.iter().all(|t| orph.got.contains_key(t)) {
+            return Ok(());
+        }
+        orph.finalized = true;
+        let tasks = orph.tasks.clone();
+        let mut acc: Option<Payload> = self.partial.remove(&d);
+        for t in &tasks {
+            let payload = orph.got.remove(t).expect("completeness checked above");
+            acc = Some(match acc {
+                None => payload,
+                Some(mut a) => {
+                    anyhow::ensure!(
+                        a.mergeable_with(&payload),
+                        "leader: recovered {} payload cannot splice into rank {d}'s {} result",
+                        payload.kind(),
+                        a.kind()
+                    );
+                    a.merge(payload);
+                    a
+                }
+            });
+        }
+        if !self.result_done[d] {
+            if let Some(payload) = acc {
+                self.results.push((d, payload));
+            }
+        }
+        Ok(())
+    }
+
+    /// Declare rank `d` dead: excuse it from the gather, compute its
+    /// orphans from the ledger (plus any recovery work previously
+    /// delegated *to* it), and re-assign every orphan to a surviving
+    /// backup owner of the pair.
+    fn on_death(&mut self, d: usize, ep: &Endpoint) -> anyhow::Result<()> {
+        self.need_result.remove(&d);
+        self.need_stats.remove(&d);
+        let own: Vec<PairTask> = self.assigned[d]
+            .iter()
+            .filter(|t| !self.done[d].contains(*t))
+            .copied()
+            .collect();
+        let redelegate: Vec<(usize, PairTask)> = self
+            .delegated
+            .remove(&d)
+            .unwrap_or_default()
+            .into_iter()
+            .filter(|(orig, t)| {
+                // Skip tasks whose recovery already landed from elsewhere
+                // (a finalized rank's `got` has been drained into its
+                // spliced result, so finalized counts as recovered too).
+                match self.dead.get(orig) {
+                    Some(o) => !o.finalized && !o.got.contains_key(t),
+                    None => true,
+                }
+            })
+            .collect();
+        self.dead.insert(
+            d,
+            Orphans { tasks: own.clone(), got: BTreeMap::new(), finalized: false },
+        );
+        crate::log_warn!(
+            "leader: rank {d} died mid-run; re-assigning {} unfinished tasks to surviving hosts",
+            own.len() + redelegate.len()
+        );
+
+        // Choose a surviving backup owner per orphan (least recovery load,
+        // then smallest rank — deterministic), batching sends per
+        // (assignee, original rank).
+        let mut batches: BTreeMap<(usize, usize), Vec<PairTask>> = BTreeMap::new();
+        let orphans = own.into_iter().map(|t| (d, t)).chain(redelegate);
+        for (orig, t) in orphans {
+            let owners: Vec<usize> = self
+                .recovery
+                .as_ref()
+                .expect("on_death is only called with a recovery plan")
+                .owners(t.a, t.b)
+                .to_vec();
+            let assignee = owners
+                .into_iter()
+                .filter(|&c| {
+                    !self.dead.contains_key(&c)
+                        && !self.known_kill.contains(&c)
+                        && !ep.transport().is_killed(endpoint_of(c))
+                })
+                .min_by_key(|&c| (self.reassign_load[c], c));
+            let Some(c) = assignee else {
+                anyhow::bail!(
+                    "insufficient redundancy: pair ({}, {}) died with rank {orig} and has no surviving host (dead: {:?})",
+                    t.a,
+                    t.b,
+                    self.dead.keys().collect::<Vec<_>>()
+                );
+            };
+            self.reassign_load[c] += 1;
+            self.delegated.entry(c).or_default().push((orig, t));
+            batches.entry((c, orig)).or_default().push(t);
+        }
+        for ((assignee, orig), tasks) in batches {
+            if let Err(e) =
+                ep.send(endpoint_of(assignee), Message::Reassign { for_rank: orig, tasks })
+            {
+                // The assignee died in the window since we filtered on the
+                // killed flag; its own death discovery re-orphans these.
+                crate::log_warn!(
+                    "leader: Reassign to rank {assignee} failed ({e}); awaiting its death discovery"
+                );
+            }
+        }
+        // No orphans at all (everything was streamed before the death):
+        // promote the partial straight to a final result.
+        self.try_finalize(d)
+    }
+
+    /// Ranks the leader currently awaits something from that are newly
+    /// marked killed on the transport (`extra` adds loop-specific waits,
+    /// e.g. outstanding phase reports).
+    fn newly_dead(&self, ep: &Endpoint, extra: impl IntoIterator<Item = usize>) -> Vec<usize> {
+        let mut awaited: BTreeSet<usize> =
+            self.need_result.union(&self.need_stats).copied().collect();
+        for (a, v) in &self.delegated {
+            if !v.is_empty() {
+                awaited.insert(*a);
+            }
+        }
+        awaited.extend(extra);
+        awaited
+            .into_iter()
+            .filter(|&r| {
+                !self.dead.contains_key(&r) && ep.transport().is_killed(endpoint_of(r))
+            })
+            .collect()
+    }
+
+    /// Route newly discovered deaths: recover when a plan + a recoverable
+    /// app allow it, otherwise unblock every worker and surface a clean
+    /// error (`context` keeps the fail-fast messages loop-specific).
+    fn handle_deaths(
+        &mut self,
+        ep: &Endpoint,
+        dead: Vec<usize>,
+        context: &str,
+    ) -> anyhow::Result<()> {
+        for d in dead {
+            if self.recovery.is_none() {
+                abort(ep, self.p);
+                anyhow::bail!("rank {d} crashed before {context}; aborting the run");
+            }
+            if !self.app_recoverable {
+                abort(ep, self.p);
+                anyhow::bail!(
+                    "rank {d} crashed mid-run, but app '{}' cannot recover (its results are not task-granular); aborting the run",
+                    self.app_name
+                );
+            }
+            if let Err(e) = self.on_death(d, ep) {
+                abort(ep, self.p);
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    fn recovery_pending(&self) -> bool {
+        self.dead.values().any(|o| !o.finalized)
+    }
+}
+
+/// Run the leader protocol on endpoint 0; worker rank w listens on
+/// `endpoint_of(w)`.
 pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Result<LeaderOutcome> {
     let p = plan.p;
     let part = Partition::new(plan.n, p);
+    let mut g = Gather::new(p, lp.app, lp.tasks.clone(), lp.kill.clone(), lp.recovery);
 
     // ---- Scatter placement blocks. ----
     for w in 0..p {
@@ -55,69 +482,49 @@ pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Res
         // Derive the quorum list from the very blocks being shipped — the
         // two can never disagree.
         let quorum: Vec<usize> = blocks.iter().map(|(b, _, _)| *b).collect();
-        ep.send(w + 1, Message::AssignData { quorum, blocks })
+        ep.send(endpoint_of(w), Message::AssignData { quorum, blocks })
             .map_err(|e| anyhow::anyhow!("scatter to rank {w}: {e}"))?;
     }
 
-    // ---- Failure injection, then pair work (exactly-once or redundant). ----
+    // ---- Failure injection, then pair work. ----
     for &k in &lp.kill {
-        let _ = ep.send(k + 1, Message::Crash);
+        if let Err(e) = ep.send(endpoint_of(k), Message::Crash { at: lp.kill_at }) {
+            // The engine validates the kill list (in range, no duplicate
+            // targets), so an injection send can only fail if the target
+            // somehow died first — a bug worth surfacing, not swallowing.
+            crate::log_warn!("leader: failure injection for rank {k} failed: {e}");
+            debug_assert!(false, "failure injection for rank {k} failed: {e}");
+        }
     }
     for (w, tasks) in lp.tasks.into_iter().enumerate() {
-        let _ = ep.send(w + 1, Message::ComputeTasks { tasks });
+        // A scatter-killed rank may already be dead; that expected failure
+        // is deliberately ignored (the injection send itself is asserted).
+        let _ = ep.send(endpoint_of(w), Message::ComputeTasks { tasks });
     }
-
-    // Streamed result chunks (pipelined apps), folded per rank in arrival
-    // order; a rank's closing Result completes the payload. An app may
-    // stream after its last barrier, so chunks can start landing while the
-    // leader is still sequencing phases — the map spans both loops.
-    let mut partial: BTreeMap<usize, Payload> = BTreeMap::new();
 
     // ---- Barrier phases the app asked for. ----
     let phases = lp.app.sync_phases();
     if !phases.is_empty() {
-        wait_phases(ep, p, &phases, &mut partial)?;
+        wait_phases(ep, p, &phases, &mut g)?;
         for w in 0..p {
-            let _ = ep.send(w + 1, Message::Proceed);
+            let _ = ep.send(endpoint_of(w), Message::Proceed);
         }
     }
 
-    // ---- Gather results + stats from expected ranks. ----
-    let expected: BTreeSet<usize> = (0..p)
-        .filter(|r| !(lp.tolerate_kills && lp.kill.contains(r)))
-        .collect();
-    let mut need_result = expected.clone();
-    let mut need_stats = expected;
-    let mut results: Vec<(usize, Payload)> = Vec::new();
-    let mut stats: Vec<super::driver::RankStats> = Vec::new();
-    while !need_result.is_empty() || !need_stats.is_empty() {
+    // ---- Gather results + stats; serve recovery until complete. ----
+    while !g.need_result.is_empty() || !g.need_stats.is_empty() || g.recovery_pending() {
         match ep.recv_timeout(POLL) {
             Some(env) => {
-                let rank = env.from.wrapping_sub(1);
+                let rank = rank_of(env.from);
                 match env.msg {
-                    Message::ResultChunk(payload) => {
-                        anyhow::ensure!(
-                            need_result.contains(&rank),
-                            "leader: unexpected result chunk from rank {rank}"
-                        );
-                        fold_chunk(ep, p, &mut partial, rank, payload)?;
+                    Message::ResultChunk { payload, tasks } => {
+                        g.on_chunk(ep, rank, payload, tasks)?;
                     }
-                    Message::Result(payload) => {
-                        anyhow::ensure!(
-                            need_result.remove(&rank),
-                            "leader: unexpected result from rank {rank}"
-                        );
-                        fold_chunk(ep, p, &mut partial, rank, payload)?;
-                        let full = partial.remove(&rank).expect("fold_chunk always inserts");
-                        results.push((rank, full));
+                    Message::Result(payload) => g.on_result(ep, rank, payload)?,
+                    Message::RecoveredResult { for_rank, task, payload } => {
+                        g.on_recovered(rank, for_rank, task, payload)?;
                     }
-                    Message::Stats(s) => {
-                        anyhow::ensure!(
-                            need_stats.remove(&rank),
-                            "leader: unexpected stats from rank {rank}"
-                        );
-                        stats.push(s);
-                    }
+                    Message::Stats(s) => g.on_stats(rank, s)?,
                     Message::PhaseDone { .. } => { /* stragglers after the barrier */ }
                     other => {
                         abort(ep, p);
@@ -126,113 +533,89 @@ pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Res
                 }
             }
             None => {
-                if let Some(&dead) = need_result
-                    .iter()
-                    .chain(need_stats.iter())
-                    .find(|&&r| ep.transport().is_killed(r + 1))
-                {
-                    abort(ep, p);
-                    anyhow::bail!(
-                        "rank {dead} crashed before reporting its result; aborting the run"
-                    );
-                }
+                let dead = g.newly_dead(ep, std::iter::empty());
+                g.handle_deaths(ep, dead, "reporting its result")?;
             }
         }
     }
-    results.sort_by_key(|(r, _)| *r);
-    stats.sort_by_key(|s| s.rank);
+    g.results.sort_by_key(|(r, _)| *r);
+    g.stats.sort_by_key(|s| s.rank);
 
     for w in 0..p {
-        let _ = ep.send(w + 1, Message::Shutdown);
+        let _ = ep.send(endpoint_of(w), Message::Shutdown);
     }
 
-    Ok(LeaderOutcome { results, stats })
+    Ok(LeaderOutcome {
+        results: g.results,
+        stats: g.stats,
+        recovered_tasks: g.recovered_tasks,
+        dead_ranks: g.dead.keys().copied().collect(),
+    })
 }
 
-/// Wait until every worker has reported each of the listed phases, erroring
-/// cleanly (after unblocking all workers) if a rank we are waiting on dies.
-/// Result chunks streamed by fast ranks that are already past their last
-/// barrier are folded into `partial` rather than treated as a violation.
+/// Wait until every live worker has reported each of the listed phases.
+/// A rank that dies mid-phase is excused (and recovered) when a recovery
+/// plan allows it; otherwise the leader unblocks all workers and errors
+/// cleanly. Result chunks streamed by fast ranks that are already past
+/// their last barrier are folded into the gather state rather than treated
+/// as a violation.
 fn wait_phases(
     ep: &Endpoint,
     p: usize,
     phases: &[u8],
-    partial: &mut BTreeMap<usize, Payload>,
+    g: &mut Gather,
 ) -> anyhow::Result<()> {
     let mut left: BTreeMap<u8, BTreeSet<usize>> =
         phases.iter().map(|&ph| (ph, (0..p).collect())).collect();
     while left.values().any(|s| !s.is_empty()) {
         match ep.recv_timeout(POLL) {
-            Some(env) => match env.msg {
-                Message::PhaseDone { phase } => {
-                    let rank = env.from.wrapping_sub(1);
-                    let s = left
-                        .get_mut(&phase)
-                        .ok_or_else(|| anyhow::anyhow!("leader: unexpected phase {phase}"))?;
-                    anyhow::ensure!(
-                        s.remove(&rank),
-                        "leader: duplicate phase-{phase} report from rank {rank}"
-                    );
+            Some(env) => {
+                let rank = rank_of(env.from);
+                match env.msg {
+                    Message::PhaseDone { phase } => {
+                        if g.dead.contains_key(&rank) {
+                            continue; // straggler report sent before dying
+                        }
+                        let s = left
+                            .get_mut(&phase)
+                            .ok_or_else(|| anyhow::anyhow!("leader: unexpected phase {phase}"))?;
+                        anyhow::ensure!(
+                            s.remove(&rank),
+                            "leader: duplicate phase-{phase} report from rank {rank}"
+                        );
+                    }
+                    Message::ResultChunk { payload, tasks } => {
+                        g.on_chunk(ep, rank, payload, tasks)?;
+                    }
+                    Message::RecoveredResult { for_rank, task, payload } => {
+                        g.on_recovered(rank, for_rank, task, payload)?;
+                    }
+                    other => {
+                        abort(ep, p);
+                        anyhow::bail!("leader: unexpected {} during phase sync", other.kind());
+                    }
                 }
-                Message::ResultChunk(payload) => {
-                    fold_chunk(ep, p, partial, env.from.wrapping_sub(1), payload)?;
-                }
-                other => {
-                    abort(ep, p);
-                    anyhow::bail!("leader: unexpected {} during phase sync", other.kind());
-                }
-            },
+            }
             None => {
-                if let Some(&dead) = left
-                    .values()
-                    .flatten()
-                    .find(|&&r| ep.transport().is_killed(r + 1))
-                {
-                    abort(ep, p);
-                    anyhow::bail!(
-                        "rank {dead} crashed before completing a sync phase; aborting the run"
-                    );
+                let awaited: Vec<usize> = left.values().flatten().copied().collect();
+                let dead = g.newly_dead(ep, awaited);
+                if !dead.is_empty() {
+                    g.handle_deaths(ep, dead.clone(), "completing a sync phase")?;
+                    for s in left.values_mut() {
+                        for d in &dead {
+                            s.remove(d);
+                        }
+                    }
                 }
             }
         }
     }
-    Ok(())
-}
-
-/// Fold a payload onto `rank`'s accumulated streamed partial, preserving
-/// chunk arrival order — the single spelling of the chunk-ordering
-/// invariant for both ResultChunk and the closing Result. A chunk that
-/// cannot merge (kind mismatch, non-list payload) is a protocol bug and
-/// surfaces as a clean abort + error, never a leader-side panic.
-fn fold_chunk(
-    ep: &Endpoint,
-    p: usize,
-    partial: &mut BTreeMap<usize, Payload>,
-    rank: usize,
-    payload: Payload,
-) -> anyhow::Result<()> {
-    let folded = match partial.remove(&rank) {
-        Some(mut acc) => {
-            if !acc.mergeable_with(&payload) {
-                abort(ep, p);
-                anyhow::bail!(
-                    "leader: rank {rank} streamed a {} chunk onto a {} result",
-                    payload.kind(),
-                    acc.kind()
-                );
-            }
-            acc.merge(payload);
-            acc
-        }
-        None => payload,
-    };
-    partial.insert(rank, folded);
     Ok(())
 }
 
 /// Unblock every worker (stuck receives get the Shutdown) before erroring.
 fn abort(ep: &Endpoint, p: usize) {
     for w in 0..p {
-        let _ = ep.send(w + 1, Message::Shutdown);
+        let _ = ep.send(endpoint_of(w), Message::Shutdown);
     }
 }

@@ -46,6 +46,43 @@ impl BlockData {
     }
 }
 
+/// Where failure injection kills a rank (`--kill-at`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillAt {
+    /// On data delivery, before any task runs (the pre-recovery behavior).
+    Scatter,
+    /// Mid-compute, after completing (and, pipelined, reporting) `tasks`
+    /// pair tasks — the interesting case for mid-run recovery.
+    Compute { tasks: usize },
+    /// After all tasks complete, before the final Result reports — in
+    /// pipelined mode most of the work has already streamed, so recovery
+    /// only recomputes the unstreamed tail.
+    Gather,
+}
+
+impl KillAt {
+    /// Parse `scatter | compute[:<k>] | gather` (`compute` = `compute:1`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scatter" => Some(KillAt::Scatter),
+            "gather" => Some(KillAt::Gather),
+            "compute" => Some(KillAt::Compute { tasks: 1 }),
+            _ => s
+                .strip_prefix("compute:")
+                .and_then(|k| k.parse().ok())
+                .map(|tasks| KillAt::Compute { tasks }),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            KillAt::Scatter => "scatter".into(),
+            KillAt::Compute { tasks } => format!("compute:{tasks}"),
+            KillAt::Gather => "gather".into(),
+        }
+    }
+}
+
 /// App-level traffic: worker ↔ worker exchange and worker → leader results.
 #[derive(Debug)]
 pub enum Payload {
@@ -119,6 +156,46 @@ impl Payload {
         )
     }
 
+    /// Bitwise equality for *result* payloads — the duplicate-result parity
+    /// check mid-run recovery relies on: a task recomputed by a surviving
+    /// host must reproduce the original owner's bytes exactly, so when two
+    /// copies of one task's result reach the leader the first writer wins
+    /// and the loser is asserted identical. Exchange payloads (routed corr
+    /// tiles, ring rows) never reach this path and compare false.
+    pub fn parity_eq(&self, other: &Payload) -> bool {
+        fn f32_bits(a: &[f32], b: &[f32]) -> bool {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        match (self, other) {
+            (Payload::Edges(a), Payload::Edges(b)) => {
+                a.len() == b.len()
+                    && a.iter()
+                        .zip(b.iter())
+                        .all(|(x, y)| x.0 == y.0 && x.1 == y.1 && x.2.to_bits() == y.2.to_bits())
+            }
+            (Payload::Tiles(a), Payload::Tiles(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b.iter()).all(|((r0, c0, t), (s0, d0, u))| {
+                        r0 == s0
+                            && c0 == d0
+                            && t.shape() == u.shape()
+                            && f32_bits(t.as_slice(), u.as_slice())
+                    })
+            }
+            (Payload::Forces(a), Payload::Forces(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b.iter()).all(|((o, fa), (q, fb))| {
+                        o == q
+                            && fa.len() == fb.len()
+                            && fa.iter().zip(fb.iter()).all(|(x, y)| {
+                                (0..3).all(|d| x[d].to_bits() == y[d].to_bits())
+                            })
+                    })
+            }
+            _ => false,
+        }
+    }
+
     /// Append `other` onto this payload, preserving item order — how the
     /// leader (and the worker's credit-exhausted fallback stash) reassemble
     /// a result streamed as [`Message::ResultChunk`]s. Only list-shaped
@@ -148,13 +225,27 @@ pub enum Message {
     ComputeTasks { tasks: Vec<PairTask> },
     /// Worker → worker: app exchange traffic (tiles, ring rows, …).
     App(Payload),
-    /// Worker → leader: this rank's reduced result.
+    /// Worker → leader: this rank's reduced result. Implicitly completes
+    /// every task the rank was assigned (the ledger needs no tags here).
     Result(Payload),
     /// Worker → leader: a streamed slice of the rank's result (pipelined
     /// mode). Chunks from one rank arrive in send order (per-pair FIFO) and
     /// are merged at the leader; the closing [`Message::Result`] carries
-    /// whatever the worker had not streamed yet.
-    ResultChunk(Payload),
+    /// whatever the worker had not streamed yet. `tasks` lists the pair
+    /// tasks this chunk completes, in task order — the provenance the
+    /// leader's task ledger folds so a mid-run death only orphans work
+    /// that was never reported.
+    ResultChunk { payload: Payload, tasks: Vec<PairTask> },
+    /// Leader → surviving worker: recompute these tasks on behalf of dead
+    /// rank `for_rank` (mid-run recovery). Accepted as a late grant at any
+    /// point of the worker protocol; executed after the worker's own result
+    /// is reported.
+    Reassign { for_rank: usize, tasks: Vec<PairTask> },
+    /// Worker → leader: one re-assigned task's result, computed on behalf
+    /// of dead rank `for_rank`. Per-task granularity lets the leader slot
+    /// recovered payloads back into the dead rank's original task order, so
+    /// assembly stays bitwise-identical to the failure-free run.
+    RecoveredResult { for_rank: usize, task: PairTask, payload: Payload },
     /// Worker → leader: per-rank stats at completion.
     Stats(crate::coordinator::driver::RankStats),
     /// Leader → worker: phase barrier release.
@@ -163,10 +254,10 @@ pub enum Message {
     PhaseDone { phase: u8 },
     /// Leader → worker: all done, exit.
     Shutdown,
-    /// Failure injection: the receiving worker dies immediately without
-    /// reporting anything (simulates a crashed rank) and marks itself
-    /// killed on the transport so the leader can detect the loss.
-    Crash,
+    /// Failure injection: `at` says when the receiving worker dies
+    /// (simulating a crashed rank). It always marks itself killed on the
+    /// transport so the leader can detect the loss.
+    Crash { at: KillAt },
 }
 
 impl Message {
@@ -177,9 +268,15 @@ impl Message {
                 blocks.iter().map(|(_, _, d)| d.nbytes()).sum::<u64>()
             }
             Message::ComputeTasks { tasks } => (tasks.len() * 16) as u64,
-            Message::App(p) | Message::Result(p) | Message::ResultChunk(p) => p.nbytes(),
+            Message::App(p) | Message::Result(p) => p.nbytes(),
+            Message::ResultChunk { payload, tasks } => payload.nbytes() + (tasks.len() * 16) as u64,
+            Message::Reassign { tasks, .. } => (tasks.len() * 16) as u64,
+            Message::RecoveredResult { payload, .. } => 16 + payload.nbytes(),
             Message::Stats(_) => 128,
-            Message::Proceed | Message::PhaseDone { .. } | Message::Shutdown | Message::Crash => 0,
+            Message::Proceed
+            | Message::PhaseDone { .. }
+            | Message::Shutdown
+            | Message::Crash { .. } => 0,
         };
         HEADER_BYTES + body
     }
@@ -190,12 +287,14 @@ impl Message {
             Message::ComputeTasks { .. } => "compute-tasks",
             Message::App(p) => p.kind(),
             Message::Result(_) => "result",
-            Message::ResultChunk(_) => "result-chunk",
+            Message::ResultChunk { .. } => "result-chunk",
+            Message::Reassign { .. } => "reassign",
+            Message::RecoveredResult { .. } => "recovered-result",
             Message::Stats(_) => "stats",
             Message::Proceed => "proceed",
             Message::PhaseDone { .. } => "phase-done",
             Message::Shutdown => "shutdown",
-            Message::Crash => "crash",
+            Message::Crash { .. } => "crash",
         }
     }
 }
@@ -238,7 +337,10 @@ mod tests {
             Payload::Edges(e) => assert_eq!(e, vec![(0, 1, 0.5), (2, 3, 0.7), (4, 5, 0.9)]),
             other => panic!("wrong kind {}", other.kind()),
         }
-        let chunk = Message::ResultChunk(Payload::Forces(vec![(0, vec![[1.0; 3]; 2])]));
+        let chunk = Message::ResultChunk {
+            payload: Payload::Forces(vec![(0, vec![[1.0; 3]; 2])]),
+            tasks: Vec::new(),
+        };
         assert_eq!(chunk.kind(), "result-chunk");
         assert_eq!(chunk.payload_bytes(), HEADER_BYTES + 8 + 48);
     }
@@ -269,6 +371,55 @@ mod tests {
         assert_eq!(Message::Shutdown.kind(), "shutdown");
         assert_eq!(Message::App(Payload::Edges(vec![])).kind(), "edges");
         assert_eq!(Message::Result(Payload::Tiles(vec![])).kind(), "result");
+        assert_eq!(Message::Crash { at: KillAt::Scatter }.kind(), "crash");
+        assert_eq!(
+            Message::Reassign { for_rank: 2, tasks: vec![PairTask { a: 0, b: 1 }] }.kind(),
+            "reassign"
+        );
+        assert_eq!(
+            Message::RecoveredResult {
+                for_rank: 2,
+                task: PairTask { a: 0, b: 1 },
+                payload: Payload::Edges(vec![]),
+            }
+            .kind(),
+            "recovered-result"
+        );
         assert_eq!(Payload::Forces(vec![]).items(), 0);
+    }
+
+    #[test]
+    fn kill_at_parses() {
+        assert_eq!(KillAt::parse("scatter"), Some(KillAt::Scatter));
+        assert_eq!(KillAt::parse("gather"), Some(KillAt::Gather));
+        assert_eq!(KillAt::parse("compute"), Some(KillAt::Compute { tasks: 1 }));
+        assert_eq!(KillAt::parse("compute:3"), Some(KillAt::Compute { tasks: 3 }));
+        assert_eq!(KillAt::parse("compute:x"), None);
+        assert_eq!(KillAt::parse("bogus"), None);
+        assert_eq!(KillAt::Compute { tasks: 3 }.name(), "compute:3");
+        assert_eq!(KillAt::parse(&KillAt::Gather.name()), Some(KillAt::Gather));
+    }
+
+    #[test]
+    fn parity_eq_is_bitwise_on_result_payloads() {
+        let e1 = Payload::Edges(vec![(0, 1, 0.5)]);
+        let e2 = Payload::Edges(vec![(0, 1, 0.5)]);
+        let e3 = Payload::Edges(vec![(0, 1, 0.5000001)]);
+        assert!(e1.parity_eq(&e2));
+        assert!(!e1.parity_eq(&e3));
+        assert!(!e1.parity_eq(&Payload::Tiles(vec![])));
+        let t1 = Payload::Tiles(vec![(0, 4, Matrix::zeros(2, 2))]);
+        let t2 = Payload::Tiles(vec![(0, 4, Matrix::zeros(2, 2))]);
+        let t3 = Payload::Tiles(vec![(4, 0, Matrix::zeros(2, 2))]);
+        assert!(t1.parity_eq(&t2));
+        assert!(!t1.parity_eq(&t3));
+        let f1 = Payload::Forces(vec![(8, vec![[1.0, 2.0, 3.0]])]);
+        let f2 = Payload::Forces(vec![(8, vec![[1.0, 2.0, 3.0]])]);
+        let f3 = Payload::Forces(vec![(8, vec![[1.0, 2.0, 3.1]])]);
+        assert!(f1.parity_eq(&f2));
+        assert!(!f1.parity_eq(&f3));
+        // Exchange payloads never compare equal (not result-shaped).
+        let ring = Payload::RingRows { block: 0, rows: Arc::new(Matrix::zeros(1, 1)) };
+        assert!(!ring.parity_eq(&ring));
     }
 }

@@ -21,6 +21,17 @@
 //! shows up as `RankStats::recv_blocked_secs` shrinking (the
 //! `EngineReport::overlap_ratio` metric, `benches/overlap.rs`).
 //!
+//! Fault tolerance (`--recover {on,off}`, `--kill`/`--kill-at` injection):
+//! the cyclic-quorum placement's r-fold data replication is operational,
+//! not just a locality trick. Resilient runs keep compute exactly-once
+//! (one primary owner per pair over the r-fold placement); when a rank
+//! dies mid-run the leader consults its task ledger — streamed result
+//! chunks carry per-task provenance — and re-assigns only the dead rank's
+//! *unfinished* tasks to surviving ranks that already host the needed
+//! blocks. Recovered results are spliced back in original task order, so
+//! the output is bitwise-identical to the failure-free run for every
+//! task-granular app (PCIT-local, similarity, n-body).
+//!
 //! PCIT flows (phase structure of quorum-exact PCIT, DESIGN.md §7):
 //! 1. **Distribute** — rank i receives the standardized blocks of its
 //!    quorum S_i (k·N/P gene rows).
@@ -38,8 +49,9 @@ pub mod driver;
 
 pub use app::{DistributedApp, Plan, WorkerCtx};
 pub use driver::{
-    pipeline_default, run_app, run_distributed_pcit, run_resilient_pcit, run_single_node,
-    DistributedReport, EngineOptions, EngineReport, RankStats,
+    overlap_ratio, pipeline_default, run_app, run_distributed_pcit, run_resilient_pcit,
+    run_resilient_pcit_at, run_single_node, DistributedReport, EngineOptions, EngineReport,
+    RankStats,
 };
-pub use messages::{BlockData, Message, Payload};
-pub use transport::{Endpoint, Transport};
+pub use messages::{BlockData, KillAt, Message, Payload};
+pub use transport::{endpoint_of, rank_of, Endpoint, Transport};

@@ -29,6 +29,25 @@ use std::time::Instant;
 /// implementation bounds outstanding `MPI_Isend`s.
 pub const DEFAULT_SEND_AHEAD_CREDIT: usize = 4;
 
+/// Endpoint index of worker rank `r`: the leader owns endpoint 0; worker
+/// rank `r` (= dataset block `r`) listens on endpoint `r + 1`. Every
+/// rank→endpoint translation in the engine goes through this pair of
+/// conversions — hand-rolled `r + 1` arithmetic at call sites is how
+/// off-by-one killed-rank scans happen.
+#[inline]
+pub const fn endpoint_of(rank: usize) -> usize {
+    rank + 1
+}
+
+/// Worker rank of endpoint `ep` — inverse of [`endpoint_of`]. Panics on
+/// endpoint 0 (the leader), which is never a valid worker rank, so a
+/// mixed-up translation fails loudly instead of silently shifting ranks.
+#[inline]
+pub fn rank_of(endpoint: usize) -> usize {
+    assert!(endpoint >= 1, "endpoint 0 is the leader, not a worker rank");
+    endpoint - 1
+}
+
 /// A routed message.
 pub struct Envelope {
     pub from: usize,
@@ -263,6 +282,20 @@ impl Endpoint {
 mod tests {
     use super::*;
     use crate::util::Matrix;
+
+    #[test]
+    fn endpoint_rank_conversion_round_trips() {
+        for r in 0..16 {
+            assert_eq!(rank_of(endpoint_of(r)), r);
+        }
+        assert_eq!(endpoint_of(0), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "endpoint 0 is the leader")]
+    fn rank_of_rejects_the_leader_endpoint() {
+        let _ = rank_of(0);
+    }
 
     #[test]
     fn point_to_point_delivery() {

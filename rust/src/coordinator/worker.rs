@@ -1,16 +1,19 @@
 //! Generic worker rank: receives its quorum's blocks and owned tasks, hands
-//! control to the app plugin's protocol, reports result + stats, drains
-//! until shutdown. All app-specific compute lives in the
-//! [`DistributedApp`] implementation (PCIT, similarity, n-body).
+//! control to the app plugin's protocol, reports result + stats, then keeps
+//! serving late task grants ([`Message::Reassign`] — mid-run recovery work
+//! on behalf of dead ranks) until shutdown. All app-specific compute lives
+//! in the [`DistributedApp`] implementation (PCIT, similarity, n-body).
 
 use super::app::{DistributedApp, Plan, WorkerCtx};
-use super::messages::Message;
-use super::transport::Endpoint;
+use super::messages::{KillAt, Message};
+use super::transport::{rank_of, Endpoint};
+use crate::allpairs::PairTask;
 use crate::metrics::MemoryAccountant;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
-/// Worker entry point. `endpoint.rank` = block_id + 1 (leader is 0).
+/// Worker entry point. `endpoint.rank` = `endpoint_of(block_id)` (leader
+/// owns endpoint 0).
 ///
 /// Any panic inside the worker (protocol violation, app bug) marks the rank
 /// killed on the transport before propagating, so the leader's failure
@@ -29,11 +32,12 @@ pub fn worker_main(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan)
 }
 
 fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
-    let my_block = endpoint.rank - 1;
+    let my_block = rank_of(endpoint.rank);
     let mem = MemoryAccountant::new();
     let mut blocks = BTreeMap::new();
     let mut quorum = Vec::new();
     let mut pending = VecDeque::new();
+    let mut kill_at = None;
 
     // ---- Phase 0: receive quorum data + task list. ----
     let tasks = loop {
@@ -47,12 +51,18 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
                 quorum = q;
             }
             Message::ComputeTasks { tasks } => break tasks,
-            Message::Crash => {
-                // Mark ourselves dead so the leader's failure detection can
-                // see the loss instead of hanging.
-                endpoint.transport().kill(endpoint.rank);
-                return;
-            }
+            Message::Crash { at } => match at {
+                // Scatter-phase injection dies on delivery, before any
+                // work — marked killed so the leader's failure detection
+                // sees the loss instead of hanging.
+                KillAt::Scatter => {
+                    endpoint.transport().kill(endpoint.rank);
+                    return;
+                }
+                // Mid-run injection arms the plan; the crash fires from
+                // begin_task (compute) or after the app returns (gather).
+                other => kill_at = Some(other),
+            },
             Message::Shutdown => return,
             // A fast peer's app traffic can outrun the leader's tasks.
             Message::App(p) => pending.push_back(p),
@@ -71,6 +81,11 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         pending,
         result_stash: None,
         streamed_items: 0,
+        kill_at,
+        dead: false,
+        task_tags: Vec::new(),
+        completed_tasks: 0,
+        pending_reassign: VecDeque::new(),
         corr_tiles: 0,
         elim_tiles: 0,
         phase1_secs: 0.0,
@@ -82,11 +97,21 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         // Shut down / crashed mid-protocol: exit without reporting.
         return;
     };
+    if ctx.dead {
+        return;
+    }
+    // Gather-phase injection: all the work happened, but the rank dies
+    // before its final Result reports — everything not already streamed is
+    // lost and must be recovered by surviving hosts.
+    if ctx.kill_at == Some(KillAt::Gather) {
+        ctx.die();
+        return;
+    }
     // Anything the app could not stream (send-ahead credit ran out) rides
     // in the final Result, ahead of the app's returned remainder.
     let result = ctx.finish_result(result);
 
-    // ---- Report result + stats, then drain until shutdown. ----
+    // ---- Report result + stats. ----
     let (sent_msgs, sent_bytes) = ctx.ep.sent();
     let (recv_msgs, recv_bytes) = ctx.ep.received();
     let stats = super::driver::RankStats {
@@ -105,16 +130,25 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
     };
     let _ = ctx.ep.send(0, Message::Result(result));
     let _ = ctx.ep.send(0, Message::Stats(stats));
+
+    // ---- Serve recovery work, drain until shutdown. ----
+    // Grants stashed mid-protocol first (arrival order), then the wire.
+    while let Some((for_rank, tasks)) = ctx.pending_reassign.pop_front() {
+        recover_tasks(app.as_ref(), &mut ctx, for_rank, tasks);
+    }
     loop {
         match ctx.ep.recv() {
             None => return,
             Some(env) => match env.msg {
                 Message::Shutdown => return,
-                Message::Crash => {
-                    ctx.ep.transport().kill(ctx.ep.rank);
+                Message::Crash { .. } => {
+                    ctx.die();
                     return;
                 }
                 Message::App(_) => continue, // late exchange traffic
+                Message::Reassign { for_rank, tasks } => {
+                    recover_tasks(app.as_ref(), &mut ctx, for_rank, tasks);
+                }
                 other => panic!(
                     "worker {}: unexpected {} after finish",
                     ctx.my_block,
@@ -122,5 +156,20 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
                 ),
             },
         }
+    }
+}
+
+/// Execute a late task grant: recompute each task on behalf of the dead
+/// rank and ship per-task results so the leader can splice them into the
+/// dead rank's payload at their original positions.
+fn recover_tasks(
+    app: &dyn DistributedApp,
+    ctx: &mut WorkerCtx,
+    for_rank: usize,
+    tasks: Vec<PairTask>,
+) {
+    for task in tasks {
+        let payload = app.run_recovery_task(ctx, task);
+        let _ = ctx.ep.send(0, Message::RecoveredResult { for_rank, task, payload });
     }
 }

@@ -13,7 +13,7 @@
 
 use quorall::cli::{App, ArgSpec, Command, ParseOutcome, Parsed};
 use quorall::config::{BackendKind, DatasetConfig, PcitMode, RunConfig};
-use quorall::coordinator::{run_distributed_pcit, run_single_node, EngineOptions};
+use quorall::coordinator::{run_distributed_pcit, run_single_node, EngineOptions, KillAt};
 use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
 use quorall::metrics::Table;
 use quorall::quorum::{self, CyclicQuorumSet, Strategy};
@@ -40,6 +40,10 @@ fn app() -> App {
                 .arg(ArgSpec::opt("mode", "single | quorum-exact | quorum-local", "quorum-exact"))
                 .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
                 .arg(ArgSpec::opt("pipeline", "overlap compute with ring exchange: on | off", ""))
+                .arg(ArgSpec::opt("redundancy", "owners per pair (r-fold placement)", ""))
+                .arg(ArgSpec::opt("kill", "failure injection: ranks to crash, e.g. 4 or 2,5", ""))
+                .arg(ArgSpec::opt("kill-at", "injection phase: scatter | compute:<k> | gather", ""))
+                .arg(ArgSpec::opt("recover", "re-assign a dead rank's tasks mid-run: on | off", ""))
                 .arg(ArgSpec::opt("backend", "native | xla", "native"))
                 .arg(ArgSpec::opt("seed", "dataset seed", "42"))
                 .arg(ArgSpec::opt("csv", "load expression CSV instead of synthetic", ""))
@@ -53,6 +57,10 @@ fn app() -> App {
                 .arg(ArgSpec::opt("ranks", "simulated ranks", "8"))
                 .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
                 .arg(ArgSpec::opt("pipeline", "overlap compute with result gather: on | off", ""))
+                .arg(ArgSpec::opt("redundancy", "owners per pair (r-fold placement)", ""))
+                .arg(ArgSpec::opt("kill", "failure injection: ranks to crash, e.g. 4 or 2,5", ""))
+                .arg(ArgSpec::opt("kill-at", "injection phase: scatter | compute:<k> | gather", ""))
+                .arg(ArgSpec::opt("recover", "re-assign a dead rank's tasks mid-run: on | off", ""))
                 .arg(ArgSpec::opt("topk", "pairs to report", "10"))
                 .arg(ArgSpec::opt("seed", "feature seed", "42"))
                 .arg(ArgSpec::opt("backend", "native | xla", "native")),
@@ -63,6 +71,10 @@ fn app() -> App {
                 .arg(ArgSpec::opt("ranks", "simulated ranks", "8"))
                 .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
                 .arg(ArgSpec::opt("pipeline", "overlap compute with result gather: on | off", ""))
+                .arg(ArgSpec::opt("redundancy", "owners per pair (r-fold placement)", ""))
+                .arg(ArgSpec::opt("kill", "failure injection: ranks to crash, e.g. 4 or 2,5", ""))
+                .arg(ArgSpec::opt("kill-at", "injection phase: scatter | compute:<k> | gather", ""))
+                .arg(ArgSpec::opt("recover", "re-assign a dead rank's tasks mid-run: on | off", ""))
                 .arg(ArgSpec::opt("steps", "leapfrog steps", "50"))
                 .arg(ArgSpec::opt("dt", "time step", "0.001"))
                 .arg(ArgSpec::opt("threads", "pool threads", "4")),
@@ -175,6 +187,81 @@ fn parse_pipeline_flag(p: &Parsed) -> anyhow::Result<Option<bool>> {
     }
 }
 
+/// Failure-injection / recovery flags shared by the distributed commands.
+/// Every field is tri-state (`None` = flag not passed — inherit the config
+/// / engine default), so an explicit `--kill-at scatter` or
+/// `--redundancy 1` still overrides a config file.
+struct ResilienceFlags {
+    redundancy: Option<usize>,
+    kill: Option<Vec<usize>>,
+    kill_at: Option<KillAt>,
+    recover: Option<bool>,
+}
+
+fn parse_resilience_flags(p: &Parsed) -> anyhow::Result<ResilienceFlags> {
+    let redundancy = match p.get_str("redundancy").unwrap_or("") {
+        "" => None,
+        s => match s.parse::<usize>() {
+            Ok(r) if r >= 1 => Some(r),
+            _ => anyhow::bail!("bad --redundancy: {s} (want an integer >= 1)"),
+        },
+    };
+    let kill = match p.get_str("kill").unwrap_or("") {
+        "" => None,
+        s => Some(
+            quorall::config::parse_kill_list(s)
+                .ok_or_else(|| anyhow::anyhow!("bad --kill: {s} (want e.g. 4 or 2,5)"))?,
+        ),
+    };
+    let kill_at = match p.get_str("kill-at").unwrap_or("") {
+        "" => None,
+        s => Some(KillAt::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("bad --kill-at: {s} (scatter | compute:<k> | gather)")
+        })?),
+    };
+    let recover = match p.get_str("recover").unwrap_or("") {
+        "" => None,
+        s => Some(
+            quorall::config::parse_pipeline(s)
+                .ok_or_else(|| anyhow::anyhow!("bad --recover: {s} (on | off)"))?,
+        ),
+    };
+    Ok(ResilienceFlags { redundancy, kill, kill_at, recover })
+}
+
+impl ResilienceFlags {
+    fn apply_to_opts(&self, opts: &mut EngineOptions) {
+        if let Some(r) = self.redundancy {
+            opts.redundancy = r;
+        }
+        if let Some(kill) = &self.kill {
+            opts.kill = kill.clone();
+        }
+        if let Some(at) = self.kill_at {
+            opts.kill_at = at;
+        }
+        if let Some(r) = self.recover {
+            opts.recover = r;
+        }
+    }
+
+    /// Same tri-state overlay for a `RunConfig` (the pcit command path).
+    fn apply_to_cfg(&self, cfg: &mut RunConfig) {
+        if let Some(r) = self.redundancy {
+            cfg.redundancy = r;
+        }
+        if let Some(kill) = &self.kill {
+            cfg.kill = kill.clone();
+        }
+        if let Some(at) = self.kill_at {
+            cfg.kill_at = at;
+        }
+        if let Some(r) = self.recover {
+            cfg.recover = r;
+        }
+    }
+}
+
 fn load_dataset(p: &Parsed) -> anyhow::Result<ExpressionDataset> {
     let csv = p.get_str("csv").unwrap_or("");
     if !csv.is_empty() {
@@ -221,6 +308,8 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
     if let Some(b) = parse_pipeline_flag(p)? {
         cfg.pipeline = b;
     }
+    parse_resilience_flags(p)?.apply_to_cfg(&mut cfg);
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
     // A config file fully describes the dataset; flags otherwise.
     let dataset = if p.get_str("config").filter(|s| !s.is_empty()).is_some() {
@@ -265,8 +354,24 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
         return Ok(());
     }
 
+    if cfg.recover || !cfg.kill.is_empty() {
+        println!(
+            "resilience: r = {}, kill = {:?} at {}, recover = {}",
+            cfg.redundancy,
+            cfg.kill,
+            cfg.kill_at.name(),
+            if cfg.recover { "on" } else { "off" }
+        );
+    }
+
     let exec = quorall::runtime::executor_for(cfg.backend, &cfg.artifacts_dir)?;
     let rep = run_distributed_pcit(&cfg, &dataset, exec)?;
+    if !rep.dead_ranks.is_empty() {
+        println!(
+            "recovered from dead ranks {:?}: {} tasks re-assigned to surviving hosts",
+            rep.dead_ranks, rep.recovered_tasks
+        );
+    }
     println!(
         "distributed: {} edges in {} | k = {} | peak mem/rank {} | comm {} | blocked-recv {} (overlap {:.1}%)",
         rep.network.n_edges(),
@@ -332,6 +437,7 @@ fn cmd_similarity(p: &Parsed) -> anyhow::Result<()> {
     if let Some(b) = parse_pipeline_flag(p)? {
         opts.pipeline = b;
     }
+    parse_resilience_flags(p)?.apply_to_opts(&mut opts);
     println!(
         "similarity: N = {n} × dim = {dim}, strategy = {}, pipeline = {}, ranks = {ranks}, backend = {}",
         strategy.name(),
@@ -339,6 +445,12 @@ fn cmd_similarity(p: &Parsed) -> anyhow::Result<()> {
         exec.name()
     );
     let (sim, rep) = run_distributed_similarity(&features, &exec, &opts)?;
+    if !rep.dead_ranks.is_empty() {
+        println!(
+            "recovered from dead ranks {:?}: {} tasks re-assigned to surviving hosts",
+            rep.dead_ranks, rep.recovered_tasks
+        );
+    }
     println!(
         "distributed similarity ({}) in {} | replication k = {} | peak mem/rank {} | comm {} | blocked-recv {} (overlap {:.1}%)",
         rep.strategy.name(),
@@ -375,6 +487,7 @@ fn cmd_nbody(p: &Parsed) -> anyhow::Result<()> {
     if let Some(b) = parse_pipeline_flag(p)? {
         opts.pipeline = b;
     }
+    parse_resilience_flags(p)?.apply_to_opts(&mut opts);
     let (forces, rep) = nbody::run_distributed_nbody(&bodies, &opts)?;
     println!(
         "distributed forces ({}, pipeline = {}): peak mem/rank {} | comm {} | blocked-recv {}",
@@ -384,6 +497,12 @@ fn cmd_nbody(p: &Parsed) -> anyhow::Result<()> {
         format_bytes(rep.total_comm_bytes),
         format_secs(rep.recv_blocked_secs)
     );
+    if !rep.dead_ranks.is_empty() {
+        println!(
+            "recovered from dead ranks {:?}: {} tasks re-assigned to surviving hosts",
+            rep.dead_ranks, rep.recovered_tasks
+        );
+    }
 
     let sw = quorall::util::timer::Stopwatch::start();
     let drift =

@@ -69,6 +69,34 @@ fn pcit_pipeline_flag_verifies_identical() {
 }
 
 #[test]
+fn pcit_recovers_from_mid_run_kill() {
+    // Quorum-local threshold run with r = 2, rank 4 killed after its first
+    // task: the leader must re-assign the orphans and finish cleanly.
+    let out = quorall()
+        .args([
+            "pcit", "--ranks", "9", "--genes", "90", "--samples", "20", "--mode", "quorum-local",
+            "--redundancy", "2", "--kill", "4", "--kill-at", "compute:1", "--recover", "on",
+        ])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {text}\nstderr: {err}");
+    assert!(text.contains("recovered from dead ranks [4]"), "{text}");
+}
+
+#[test]
+fn pcit_rejects_bad_kill_at_value() {
+    let out = quorall()
+        .args(["pcit", "--ranks", "4", "--genes", "64", "--kill-at", "sideways"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("kill-at"), "{err}");
+}
+
+#[test]
 fn pcit_rejects_bad_pipeline_value() {
     let out = quorall()
         .args(["pcit", "--ranks", "4", "--genes", "64", "--pipeline", "sideways"])

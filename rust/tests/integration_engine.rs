@@ -356,11 +356,20 @@ fn killed_rank_during_gather_errors_cleanly() {
 }
 
 #[test]
-fn resilient_runs_reject_barrier_apps() {
-    let d = dataset(48);
-    let mut opts = EngineOptions::new(5, Strategy::Cyclic);
-    opts.kill = vec![1];
-    opts.tolerate_kills = true;
+fn unrecoverable_app_mid_run_death_aborts_cleanly() {
+    // Barrier-phase apps are no longer rejected up front: exact-mode PCIT
+    // runs under a recovery plan, but its tile routing + ring are not
+    // task-granular, so an actual death must surface a clean error (not a
+    // hang, not a categorical "barrier-free apps only" refusal).
+    let d = dataset(90);
+    let mut opts = EngineOptions::new(9, Strategy::Cyclic);
+    opts.kill = vec![4];
+    opts.recover = true;
+    opts.redundancy = 2;
     let err = run_app(pcit_app(&d, DistMode::Exact), &opts).unwrap_err();
-    assert!(format!("{err:#}").contains("barrier-free"));
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("cannot recover") && msg.contains("rank 4"),
+        "unexpected error: {msg}"
+    );
 }

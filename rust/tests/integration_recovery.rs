@@ -1,0 +1,346 @@
+//! Integration: mid-run crash recovery. A rank killed at any phase
+//! (scatter / compute / gather) has its unfinished tasks re-assigned to
+//! surviving quorum hosts via the leader's task ledger, and the recovered
+//! output is **bitwise identical** to the failure-free run — the paper's
+//! r-fold replication made operational, for every task-granular app, under
+//! both placements with natural multi-host coverage and both transports.
+//!
+//! Run with `QUORALL_PIPELINE=on` and `=off` (CI does both): the ledger's
+//! provenance tags only exist in pipelined mode, so the two runs exercise
+//! different orphan sets (streamed prefix vs everything).
+
+use quorall::apps::nbody::{run_distributed_nbody, Bodies};
+use quorall::apps::similarity::run_distributed_similarity;
+use quorall::apps::{DistMode, PcitApp};
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{
+    run_app, run_resilient_pcit_at, run_single_node, BlockData, DistributedApp, EngineOptions,
+    KillAt, Payload, WorkerCtx,
+};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::pcit::standardize_rows;
+use quorall::quorum::Strategy;
+use quorall::runtime::{Executor, NativeBackend};
+use quorall::util::prng::Rng;
+use quorall::util::Matrix;
+use std::sync::Arc;
+
+fn exec() -> Executor {
+    Arc::new(NativeBackend::new())
+}
+
+fn dataset(genes: usize) -> ExpressionDataset {
+    ExpressionDataset::generate(SyntheticSpec {
+        genes,
+        samples: 24,
+        modules: 5,
+        noise: 0.5,
+        seed: 77,
+    })
+}
+
+/// Kill phases under test: before any work, after one completed task, and
+/// after all compute but before the final Result.
+const KILL_PHASES: [KillAt; 3] =
+    [KillAt::Scatter, KillAt::Compute { tasks: 1 }, KillAt::Gather];
+
+/// Placements with >= 2 hosts for every pair at P = 9: the cyclic r-fold
+/// cover and the 3×3 grid's natural row∪column coverage.
+const STRATEGIES: [Strategy; 2] = [Strategy::Cyclic, Strategy::Grid];
+
+const P: usize = 9;
+const VICTIM: usize = 4;
+
+fn recovery_opts(strategy: Strategy, pipeline: bool) -> EngineOptions {
+    let mut opts = EngineOptions::new(P, strategy);
+    opts.pipeline = pipeline;
+    opts.redundancy = 2;
+    opts.recover = true;
+    opts
+}
+
+// ---- Similarity: bitwise matrix parity across the full kill matrix ----
+
+#[test]
+fn similarity_recovery_bitwise_identical() {
+    let mut rng = Rng::new(5);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            let base_opts = recovery_opts(strategy, pipeline);
+            let (base, base_rep) = run_distributed_similarity(&f, &e, &base_opts).unwrap();
+            assert!(base_rep.dead_ranks.is_empty());
+            for kill_at in KILL_PHASES {
+                let mut opts = recovery_opts(strategy, pipeline);
+                opts.kill = vec![VICTIM];
+                opts.kill_at = kill_at;
+                let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+                assert_eq!(
+                    sim.as_slice(),
+                    base.as_slice(),
+                    "strategy {} pipeline {pipeline} kill_at {}: recovered matrix differs",
+                    strategy.name(),
+                    kill_at.name()
+                );
+                assert_eq!(rep.dead_ranks, vec![VICTIM]);
+                assert_eq!(rep.stats.len(), P - 1, "dead rank must not report stats");
+            }
+        }
+    }
+}
+
+// ---- N-body: bitwise force parity (f64 reduce order preserved) ----
+
+#[test]
+fn nbody_recovery_bitwise_identical() {
+    let b = Bodies::random(54, 7);
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            let base_opts = recovery_opts(strategy, pipeline);
+            let (base, _) = run_distributed_nbody(&b, &base_opts).unwrap();
+            for kill_at in KILL_PHASES {
+                let mut opts = recovery_opts(strategy, pipeline);
+                opts.kill = vec![VICTIM];
+                opts.kill_at = kill_at;
+                let (forces, rep) = run_distributed_nbody(&b, &opts).unwrap();
+                for i in 0..b.n {
+                    assert_eq!(
+                        forces[i],
+                        base[i],
+                        "strategy {} pipeline {pipeline} kill_at {}: body {i} forces differ",
+                        strategy.name(),
+                        kill_at.name()
+                    );
+                }
+                assert_eq!(rep.dead_ranks, vec![VICTIM]);
+            }
+        }
+    }
+}
+
+// ---- PCIT (quorum-local, threshold mode = pairwise-exact) ----
+
+fn pcit_cfg(strategy: Strategy, pipeline: bool) -> RunConfig {
+    RunConfig {
+        ranks: P,
+        mode: PcitMode::QuorumLocal,
+        strategy,
+        pipeline,
+        use_pcit_significance: false, // threshold mode: pairwise-exact
+        threshold: 0.5,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn pcit_recovery_bitwise_identical() {
+    let d = dataset(90);
+    let single = run_single_node(&d, 2, Some(0.5));
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            let cfg = pcit_cfg(strategy, pipeline);
+            let base =
+                run_resilient_pcit_at(&cfg, &d, exec(), 2, &[], KillAt::Scatter).unwrap();
+            assert!(base.network.same_edges(&single.network));
+            for kill_at in KILL_PHASES {
+                let rep =
+                    run_resilient_pcit_at(&cfg, &d, exec(), 2, &[VICTIM], kill_at).unwrap();
+                assert_eq!(
+                    rep.network.edges,
+                    base.network.edges,
+                    "strategy {} pipeline {pipeline} kill_at {}: recovered network differs",
+                    strategy.name(),
+                    kill_at.name()
+                );
+                assert_eq!(rep.dead_ranks, vec![VICTIM]);
+                if kill_at == KillAt::Scatter {
+                    assert!(rep.recovered_tasks > 0, "scatter kill loses every task");
+                }
+            }
+        }
+    }
+}
+
+// ---- Mid-compute kill orphans only the unreported suffix (pipelined) ----
+
+#[test]
+fn pipelined_ledger_limits_orphans_to_unreported_tasks() {
+    // With streaming on, a rank killed after completing (and streaming) k
+    // tasks must only have its *remaining* tasks recomputed — the ledger's
+    // provenance folding at work. The victim's first task was streamed, so
+    // recovered_tasks < its full task count.
+    let mut rng = Rng::new(11);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    let full = {
+        let mut opts = recovery_opts(Strategy::Cyclic, true);
+        opts.kill = vec![VICTIM];
+        opts.kill_at = KillAt::Scatter;
+        let (_, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+        rep.recovered_tasks
+    };
+    assert!(full > 1, "victim needs >= 2 tasks for this test (got {full})");
+    let mut opts = recovery_opts(Strategy::Cyclic, true);
+    opts.kill = vec![VICTIM];
+    opts.kill_at = KillAt::Compute { tasks: 1 };
+    let (_, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+    assert_eq!(
+        rep.recovered_tasks,
+        full - 1,
+        "one streamed task must be excused from recovery"
+    );
+}
+
+// ---- Ineffective injection is rejected, not silently ignored ----
+
+#[test]
+fn impossible_compute_kill_rejected() {
+    // compute:50 can never fire at P = 9 (each rank owns ~5 tasks); the
+    // engine must reject it instead of running a no-op injection while
+    // still treating the victim as doomed for assignee selection.
+    let mut rng = Rng::new(9);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    let mut opts = recovery_opts(Strategy::Cyclic, false);
+    opts.kill = vec![VICTIM];
+    opts.kill_at = KillAt::Compute { tasks: 50 };
+    let err = run_distributed_similarity(&f, &e, &opts).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("can never fire"),
+        "unexpected error: {err:#}"
+    );
+}
+
+// ---- Insufficient redundancy still aborts with a clean error ----
+
+#[test]
+fn insufficient_redundancy_aborts_cleanly() {
+    // r = 1 leaves each pair with a single owner: killing one that owns
+    // work is unrecoverable and must be rejected up front.
+    let mut rng = Rng::new(3);
+    let f = Matrix::from_fn(40, 8, |_, _| rng.normal_f32());
+    let e = exec();
+    let mut opts = EngineOptions::new(7, Strategy::Cyclic);
+    opts.redundancy = 1;
+    opts.recover = true;
+    opts.kill = vec![0];
+    let err = run_distributed_similarity(&f, &e, &opts).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("insufficient redundancy"),
+        "unexpected error: {err:#}"
+    );
+}
+
+// ---- Barrier-phase apps are accepted and recover ----
+
+/// A task-granular app *with* a sync phase: proves the engine no longer
+/// categorically rejects barrier-phase apps for resilient runs — the old
+/// "barrier-free apps only" restriction is gone. Survivors stash the late
+/// task grant at the barrier and serve it after their own result.
+struct PhasedApp;
+
+impl DistributedApp for PhasedApp {
+    fn name(&self) -> &'static str {
+        "phased"
+    }
+
+    fn elements(&self) -> usize {
+        2 * P
+    }
+
+    fn make_block(&self, range: std::ops::Range<usize>) -> BlockData {
+        BlockData::Rows(Matrix::zeros(range.len(), 4))
+    }
+
+    fn sync_phases(&self) -> Vec<u8> {
+        vec![1]
+    }
+
+    fn recoverable(&self) -> bool {
+        true
+    }
+
+    fn run_recovery_task(&self, _ctx: &mut WorkerCtx, t: quorall::allpairs::PairTask) -> Payload {
+        Payload::Edges(vec![(t.a, t.b, 1.0)])
+    }
+
+    fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+        let tasks = std::mem::take(&mut ctx.tasks);
+        let mut edges = Vec::new();
+        for t in &tasks {
+            if !ctx.begin_task() {
+                return None;
+            }
+            edges.push((t.a, t.b, 1.0f32));
+            ctx.complete_task(*t);
+        }
+        ctx.phase_done(1);
+        if !ctx.barrier() {
+            return None;
+        }
+        Some(Payload::Edges(edges))
+    }
+}
+
+#[test]
+fn barrier_phase_app_recovers_mid_run() {
+    let mut opts = recovery_opts(Strategy::Cyclic, false);
+    opts.kill = vec![VICTIM];
+    opts.kill_at = KillAt::Compute { tasks: 1 };
+    let rep = run_app(Arc::new(PhasedApp), &opts).unwrap();
+    assert_eq!(rep.dead_ranks, vec![VICTIM]);
+    assert!(rep.recovered_tasks > 0);
+    // Every pair task reported exactly once across all per-rank payloads.
+    let mut seen: Vec<(usize, usize)> = Vec::new();
+    for (rank, payload) in &rep.results {
+        match payload {
+            Payload::Edges(e) => seen.extend(e.iter().map(|&(a, b, _)| (a, b))),
+            other => panic!("rank {rank}: wrong payload {}", other.kind()),
+        }
+    }
+    seen.sort_unstable();
+    let expect: Vec<(usize, usize)> = (0..P)
+        .flat_map(|a| (a..P).map(move |b| (a, b)))
+        .collect();
+    assert_eq!(seen, expect, "recovered run must cover all pairs exactly once");
+}
+
+// ---- Unrecoverable apps: clean abort, not a hang ----
+
+#[test]
+fn exact_pcit_mid_compute_death_aborts_cleanly() {
+    let d = dataset(90);
+    let app = Arc::new(PcitApp::new(
+        standardize_rows(&d.expr),
+        exec(),
+        DistMode::Exact,
+        true,
+        0.85,
+    ));
+    let mut opts = recovery_opts(Strategy::Cyclic, false);
+    opts.kill = vec![VICTIM];
+    opts.kill_at = KillAt::Compute { tasks: 1 };
+    let err = run_app(app, &opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("cannot recover"), "unexpected error: {msg}");
+}
+
+// ---- Full-PCIT local mode recovers (approximately, like the ablation) ----
+
+#[test]
+fn full_pcit_local_mode_recovers_close_to_single() {
+    let d = dataset(80);
+    let single = run_single_node(&d, 2, None);
+    let cfg = RunConfig {
+        ranks: 8,
+        mode: PcitMode::QuorumLocal,
+        use_pcit_significance: true,
+        ..RunConfig::default()
+    };
+    let rep = run_resilient_pcit_at(&cfg, &d, exec(), 2, &[3], KillAt::Compute { tasks: 1 })
+        .unwrap();
+    let j = rep.network.jaccard(&single.network);
+    assert!(j > 0.4, "jaccard {j}");
+    assert_eq!(rep.dead_ranks, vec![3]);
+}

@@ -1,5 +1,9 @@
 //! Integration: quorum redundancy + failure injection (paper §6 future
 //! work) — the system completes correct networks despite crashed ranks.
+//! Resilient runs keep compute exactly-once (one primary owner per pair
+//! over the r-fold placement); a dead rank's unfinished tasks are
+//! re-assigned to surviving hosts mid-run. Mid-run kill phases and the
+//! bitwise-parity matrix live in `integration_recovery.rs`.
 
 use quorall::allpairs::RedundantAssignment;
 use quorall::config::{PcitMode, RunConfig};
@@ -94,6 +98,10 @@ fn resilient_run_survives_crash() {
         single.network.n_edges()
     );
     assert_eq!(rep.stats.len(), p - 1, "only survivors report");
+    assert_eq!(rep.dead_ranks, vec![victim]);
+    // A scatter-killed rank computed nothing: every one of its primary
+    // tasks must have been re-assigned and recovered.
+    assert!(rep.recovered_tasks > 0, "recovery must have re-run the victim's tasks");
 }
 
 #[test]
