@@ -23,18 +23,43 @@ use quorall::util::prng::Rng;
 use quorall::util::Matrix;
 use std::sync::Arc;
 
-/// Model every message of a synchronous similarity engine run: AssignData
-/// (placed blocks), ComputeTasks (16 B/pair), one Result of owned tiles,
-/// Stats (fixed 128 B body), Shutdown — each under a 64 B control header.
+/// Modeled scatter bytes of a monolithic similarity run: one AssignData
+/// header per rank, plus each distinct block's payload exactly **once** —
+/// block buffers are Arc-shared across replica owners, so replica
+/// deliveries ride inside the already-headed message for free.
+fn model_scatter_bytes(n: usize, dim: usize, p: usize) -> u64 {
+    let part = Partition::new(n, p);
+    p as u64 * HEADER_BYTES
+        + (0..p).map(|b| (part.len(b) * 4 * dim) as u64).sum::<u64>()
+}
+
+/// What the scatter would cost if every (block, holder) replica shipped
+/// its own copy — the pre-Arc accounting, kept as the shrink baseline.
+fn model_replicated_scatter_bytes(
+    n: usize,
+    dim: usize,
+    p: usize,
+    strategy: Strategy,
+) -> anyhow::Result<u64> {
+    let q = strategy.build(p)?;
+    let part = Partition::new(n, p);
+    Ok((0..p)
+        .map(|rank| HEADER_BYTES + part.placement_bytes(q.as_ref(), rank, 4 * dim))
+        .sum())
+}
+
+/// Model every message of a synchronous, monolithic-scatter similarity
+/// engine run: AssignData (each distinct block's payload once — see
+/// [`model_scatter_bytes`]), ComputeTasks (16 B/pair), one Result of owned
+/// tiles, Stats (fixed 128 B body), Shutdown — each under a 64 B control
+/// header.
 fn model_similarity_bytes(n: usize, dim: usize, p: usize, strategy: Strategy) -> anyhow::Result<u64> {
     let q = strategy.build(p)?;
     let part = Partition::new(n, p);
     let assignment = PairAssignment::try_build(q.as_ref(), OwnerPolicy::LeastLoaded)?;
-    let mut total = 0u64;
+    let mut total = model_scatter_bytes(n, dim, p);
     for rank in 0..p {
         let tasks = assignment.tasks_for(rank);
-        // AssignData: the rank's placed blocks of dim-wide f32 rows.
-        total += HEADER_BYTES + part.placement_bytes(q.as_ref(), rank, 4 * dim);
         total += HEADER_BYTES + 16 * tasks.len() as u64;
         // Result: one (row0, col0, tile) entry per owned non-empty pair.
         let tiles: u64 = tasks
@@ -118,9 +143,12 @@ fn main() -> anyhow::Result<()> {
     );
     for strategy in Strategy::all() {
         let mut opts = EngineOptions::new(p8, strategy);
-        // The model counts the synchronous protocol's messages; pipelined
-        // runs add one header per streamed chunk.
+        // The model counts the synchronous, monolithic protocol's
+        // messages; pipelined runs add one header per streamed chunk and
+        // the streamed scatter swaps AssignData for TasksAhead +
+        // per-block messages.
         opts.pipeline = false;
+        opts.streamed_scatter = false;
         let (_sim, rep) = run_distributed_similarity(&features, &exec, &opts)?;
         let model = model_similarity_bytes(n_sim, dim, p8, strategy)?;
         let delta = (rep.total_comm_bytes as f64 - model as f64).abs() / model as f64;
@@ -130,6 +158,25 @@ fn main() -> anyhow::Result<()> {
             format_bytes(model),
             format!("{:.2}%", 100.0 * delta),
         ]);
+        // Arc-shared scatter: measured scatter traffic must match the
+        // once-per-block model exactly, and shrink strictly below what
+        // once-per-replica shipping would have cost (every placement at
+        // P = 8 replicates each block onto >= 2 holders).
+        let scatter_model = model_scatter_bytes(n_sim, dim, p8);
+        assert_eq!(
+            rep.scatter_comm_bytes,
+            scatter_model,
+            "{}: measured scatter bytes diverge from the once-per-block model",
+            strategy.name()
+        );
+        let replicated = model_replicated_scatter_bytes(n_sim, dim, p8, strategy)?;
+        assert!(
+            rep.scatter_comm_bytes < replicated,
+            "{}: Arc-shared scatter ({} B) must undercut per-replica shipping ({} B)",
+            strategy.name(),
+            rep.scatter_comm_bytes,
+            replicated
+        );
         if strategy == Strategy::Cyclic {
             assert!(
                 delta < 0.02,

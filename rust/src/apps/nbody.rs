@@ -244,8 +244,9 @@ impl DistributedApp for NbodyApp {
         let sw = ThreadCpuTimer::start();
         let mut partials: Vec<(usize, Vec<[f64; 3]>)> = Vec::new();
         for t in &tasks {
-            if !ctx.begin_task() {
-                // Injected mid-compute crash: exit without reporting.
+            if !ctx.begin_task(t) {
+                // Injected mid-compute crash (or shutdown while awaiting
+                // streamed blocks): exit without reporting.
                 return None;
             }
             let Some(mut pair) = task_partials(ctx, t) else {

@@ -62,8 +62,9 @@ impl PcitApp {
         // the *same* buffer to both homes — the column home applies it
         // transposed on write instead of receiving a transposed copy.
         for t in &tasks {
-            if !ctx.begin_task() {
-                // Injected mid-compute crash: exit without reporting.
+            if !ctx.begin_task(t) {
+                // Injected mid-compute crash (or shutdown while awaiting
+                // streamed blocks): exit without reporting.
                 return None;
             }
             let tile = Arc::new(self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view()));
@@ -258,12 +259,16 @@ impl PcitApp {
         let sw = ThreadCpuTimer::start();
         let mut edges: Vec<(usize, usize, f32)> = Vec::new();
         for t in &tasks {
-            if !ctx.begin_task() {
-                // Injected mid-compute crash: exit without reporting.
+            if !ctx.begin_task(t) {
+                // Injected mid-compute crash (or shutdown while awaiting
+                // streamed blocks): exit without reporting.
                 return None;
             }
             let mut task_edges: Vec<(usize, usize, f32)> = Vec::new();
-            self.local_task_edges(ctx, t, &mut task_edges);
+            if !self.local_task_edges(ctx, t, &mut task_edges) {
+                // Shutdown arrived while awaiting the quorum panel.
+                return None;
+            }
             ctx.complete_task(*t);
             if ctx.pipeline() {
                 // Stream each task's edges (with its provenance tag) so the
@@ -288,16 +293,27 @@ impl PcitApp {
     /// *computing* rank's quorum: in threshold mode (no panel) recovered
     /// edges are bitwise-identical; in full-PCIT local mode they carry the
     /// recovering host's panel, matching the ablation's approximation
-    /// semantics.
+    /// semantics. Returns false when shutdown arrived while awaiting
+    /// streamed panel blocks (the caller must stop without reporting).
     fn local_task_edges(
         &self,
         ctx: &mut WorkerCtx,
         t: &crate::allpairs::PairTask,
         edges: &mut Vec<(usize, usize, f32)>,
-    ) {
+    ) -> bool {
+        if self.use_pcit {
+            // Full-PCIT local mode scans the rank's entire quorum panel,
+            // so the whole placement must be resident before this task can
+            // run — under the streamed scatter, await the trailing blocks
+            // (the pair blocks themselves were awaited by begin_task).
+            let panel_blocks = ctx.quorum.clone();
+            if !ctx.ensure_blocks(&panel_blocks) {
+                return false;
+            }
+        }
         let (a_len, b_len) = (ctx.block_rows(t.a).rows(), ctx.block_rows(t.b).rows());
         if a_len == 0 || b_len == 0 {
-            return;
+            return true;
         }
         // Tiles read the quorum blocks in place — no per-task clones.
         let cxy = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view());
@@ -333,6 +349,7 @@ impl PcitApp {
         } else {
             self.collect_task_edges(ctx, t, &cxy, None, edges);
         }
+        true
     }
 
     fn collect_task_edges(
@@ -422,7 +439,9 @@ impl DistributedApp for PcitApp {
     ) -> Payload {
         debug_assert_eq!(self.mode, DistMode::Local, "only local mode is recoverable");
         let mut edges = Vec::new();
-        self.local_task_edges(ctx, &task, &mut edges);
+        // A false return means shutdown arrived while awaiting streamed
+        // panel blocks; the empty payload's send fails harmlessly.
+        let _ = self.local_task_edges(ctx, &task, &mut edges);
         Payload::Edges(edges)
     }
 

@@ -12,7 +12,7 @@
 
 use crate::allpairs::{OwnerPolicy, PairAssignment};
 use crate::coordinator::app::{DistributedApp, WorkerCtx};
-use crate::coordinator::driver::{run_app, EngineOptions, EngineReport};
+use crate::coordinator::driver::{run_app_with_sink, EngineOptions, EngineReport};
 use crate::coordinator::messages::{BlockData, Payload};
 use crate::data::Partition;
 use crate::pool::ThreadPool;
@@ -163,8 +163,9 @@ impl DistributedApp for SimilarityApp {
         let sw = ThreadCpuTimer::start();
         let mut tiles: Vec<(usize, usize, Matrix)> = Vec::new();
         for t in &tasks {
-            if !ctx.begin_task() {
-                // Injected mid-compute crash: exit without reporting.
+            if !ctx.begin_task(t) {
+                // Injected mid-compute crash (or shutdown while awaiting
+                // streamed blocks): exit without reporting.
                 return None;
             }
             let Some((r0, c0, tile)) = self.task_tile(ctx, t) else {
@@ -222,9 +223,16 @@ impl SimilarityApp {
 /// measured per-rank comm/memory stats — the numbers the placement
 /// comparison (`--strategy {cyclic,grid,full}`) is about.
 ///
-/// Tile values are bitwise-independent of the placement (each pair is the
-/// same strict-order dot product wherever it is computed), so the result is
-/// bitwise identical across strategies and to [`similarity_quorum`].
+/// Assembly is **incremental**: tiles are written into the N×N matrix the
+/// moment their `ResultChunk` reaches the leader (via the engine's result
+/// sink) instead of after the gather completes, so leader-side assembly
+/// overlaps the workers' remaining compute and no per-rank tile lists are
+/// ever retained. Arrival order across ranks is irrelevant — every tile
+/// (and its transposed mirror) writes a disjoint matrix region, and tile
+/// values are bitwise-independent of the placement (each pair is the same
+/// strict-order dot product wherever it is computed) — so the result is
+/// bitwise identical across strategies, scatter modes, transports, and to
+/// [`similarity_quorum`].
 pub fn run_distributed_similarity(
     features: &Matrix,
     executor: &Executor,
@@ -232,23 +240,24 @@ pub fn run_distributed_similarity(
 ) -> anyhow::Result<(Matrix, EngineReport)> {
     let n = features.rows();
     let app = Arc::new(SimilarityApp::new(features, Arc::clone(executor)));
-    let rep = run_app(app, opts)?;
     let mut s = Matrix::zeros(n, n);
-    for (rank, payload) in &rep.results {
+    let mut assemble = |rank: usize, payload: Payload| -> anyhow::Result<()> {
         match payload {
             Payload::Tiles(tiles) => {
                 for (r0, c0, tile) in tiles {
-                    s.set_block(*r0, *c0, tile);
+                    s.set_block(r0, c0, &tile);
                     if r0 != c0 {
                         // Mirror written transpose-on-the-fly; diagonal
                         // self-tiles are already bitwise symmetric.
-                        s.set_block_transposed(*c0, *r0, tile);
+                        s.set_block_transposed(c0, r0, &tile);
                     }
                 }
+                Ok(())
             }
             other => anyhow::bail!("similarity: rank {rank} returned {} payload", other.kind()),
         }
-    }
+    };
+    let rep = run_app_with_sink(app, opts, Some(&mut assemble))?;
     Ok((s, rep))
 }
 

@@ -10,4 +10,6 @@ pub mod parser;
 pub mod schema;
 
 pub use parser::{ConfigError, TomlDoc, TomlValue};
-pub use schema::{parse_kill_list, parse_pipeline, BackendKind, DatasetConfig, PcitMode, RunConfig};
+pub use schema::{
+    parse_kill_list, parse_pipeline, parse_scatter, BackendKind, DatasetConfig, PcitMode, RunConfig,
+};

@@ -9,6 +9,7 @@
 //! mode = "quorum-exact" # single | quorum-exact | quorum-local
 //! strategy = "cyclic"   # cyclic | grid | full (placement)
 //! pipeline = "off"      # on | off (overlap compute with ring exchange)
+//! scatter = "monolithic" # streamed | monolithic (block-granular scatter)
 //! backend = "native"    # native | xla
 //! block = 64            # tile edge for pair blocks
 //! seed = 42
@@ -119,6 +120,16 @@ pub fn parse_pipeline(s: &str) -> Option<bool> {
     }
 }
 
+/// Parse a `--scatter` / `run.scatter` / `QUORALL_SCATTER` value: true =
+/// streamed block-granular scatter, false = monolithic `AssignData`.
+pub fn parse_scatter(s: &str) -> Option<bool> {
+    match s {
+        "streamed" | "on" | "true" | "1" => Some(true),
+        "monolithic" | "off" | "false" | "0" => Some(false),
+        _ => None,
+    }
+}
+
 /// Parse a comma-separated rank list (`--kill 4` / `--kill 2,5`). An empty
 /// string is an empty list.
 pub fn parse_kill_list(s: &str) -> Option<Vec<usize>> {
@@ -140,6 +151,10 @@ pub struct RunConfig {
     /// Pipelined transport: overlap tile compute with the ring exchange /
     /// result gather. Bitwise-identical output to the synchronous path.
     pub pipeline: bool,
+    /// Streamed block-granular scatter (`--scatter streamed`): workers
+    /// start a task the moment its blocks land instead of waiting for the
+    /// whole quorum. Bitwise-identical output to the monolithic scatter.
+    pub streamed_scatter: bool,
     pub backend: BackendKind,
     pub block: usize,
     pub seed: u64,
@@ -168,6 +183,7 @@ impl Default for RunConfig {
             mode: PcitMode::QuorumExact,
             strategy: Strategy::Cyclic,
             pipeline: crate::coordinator::pipeline_default(),
+            streamed_scatter: crate::coordinator::scatter_default(),
             backend: BackendKind::Native,
             block: 64,
             seed: 42,
@@ -207,6 +223,13 @@ impl RunConfig {
                 .ok_or_else(|| bad(format!("bad run.pipeline: {s} (want \"on\" | \"off\")")))?;
         } else if let Some(b) = doc.get_bool("run", "pipeline") {
             cfg.pipeline = b;
+        }
+        if let Some(s) = doc.get_str("run", "scatter") {
+            cfg.streamed_scatter = parse_scatter(s).ok_or_else(|| {
+                bad(format!("bad run.scatter: {s} (want \"streamed\" | \"monolithic\")"))
+            })?;
+        } else if let Some(b) = doc.get_bool("run", "scatter") {
+            cfg.streamed_scatter = b;
         }
         if let Some(s) = doc.get_str("run", "backend") {
             cfg.backend = BackendKind::parse(s).ok_or_else(|| bad(format!("bad run.backend: {s}")))?;
@@ -398,6 +421,22 @@ threshold = 0.9
         assert_eq!(parse_pipeline("on"), Some(true));
         assert_eq!(parse_pipeline("off"), Some(false));
         assert_eq!(parse_pipeline("bogus"), None);
+    }
+
+    #[test]
+    fn scatter_key_parses() {
+        let cfg = RunConfig::from_doc(&doc("[run]\nscatter = \"streamed\"")).unwrap();
+        assert!(cfg.streamed_scatter);
+        let cfg = RunConfig::from_doc(&doc("[run]\nscatter = \"monolithic\"")).unwrap();
+        assert!(!cfg.streamed_scatter);
+        let cfg = RunConfig::from_doc(&doc("[run]\nscatter = true")).unwrap();
+        assert!(cfg.streamed_scatter);
+        assert!(RunConfig::from_doc(&doc("[run]\nscatter = \"sideways\"")).is_err());
+        assert_eq!(parse_scatter("streamed"), Some(true));
+        assert_eq!(parse_scatter("on"), Some(true));
+        assert_eq!(parse_scatter("monolithic"), Some(false));
+        assert_eq!(parse_scatter("off"), Some(false));
+        assert_eq!(parse_scatter("bogus"), None);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! blocks and owned pair tasks. PCIT, all-pairs similarity, and n-body are
 //! the three in-tree plugins.
 
-use super::messages::{BlockData, KillAt, Message, Payload};
+use super::messages::{BlockData, KillAt, Message, Payload, PlacedBlock};
 use super::transport::{endpoint_of, Endpoint};
 use crate::allpairs::PairTask;
 use crate::metrics::MemoryAccountant;
@@ -17,6 +17,7 @@ use crate::util::Matrix;
 use std::collections::{BTreeMap, VecDeque};
 use std::ops::Range;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// App-agnostic execution plan shared by leader and workers.
 #[derive(Clone, Copy, Debug)]
@@ -31,6 +32,16 @@ pub struct Plan {
     /// (forward-before-compute ring, streamed result chunks). Must be
     /// bitwise-identical to the synchronous protocol.
     pub pipeline: bool,
+    /// Streamed block-granular scatter: the leader ships task lists up
+    /// front ([`Message::TasksAhead`]) and individual [`Message::AssignBlock`]s
+    /// in first-task-need order; workers start a task the moment its
+    /// inputs have landed ([`WorkerCtx::ensure_blocks`]) instead of
+    /// blocking in phase 0 for the whole quorum. Must be
+    /// bitwise-identical to the monolithic scatter.
+    pub streamed_scatter: bool,
+    /// Run start reference — workers stamp
+    /// `RankStats::time_to_first_task_secs` against it.
+    pub t0: Instant,
 }
 
 impl Plan {
@@ -119,8 +130,10 @@ pub struct WorkerCtx {
     /// This rank's dataset block id (= rank index, 0-based).
     pub my_block: usize,
     pub mem: Arc<MemoryAccountant>,
-    /// block_id → (global element offset, block data).
-    pub(super) blocks: BTreeMap<usize, (usize, BlockData)>,
+    /// block_id → (global element offset, block data). Under the streamed
+    /// scatter this fills block by block as [`Message::AssignBlock`]s land;
+    /// [`WorkerCtx::ensure_blocks`] pumps the wire for missing entries.
+    pub(super) blocks: BTreeMap<usize, (usize, Arc<BlockData>)>,
     /// Quorum (block ids) this rank holds.
     pub quorum: Vec<usize>,
     /// Pair tasks owned by this rank (take with `std::mem::take`).
@@ -154,6 +167,13 @@ pub struct WorkerCtx {
     /// protocol was still running (e.g. stashed at a barrier); processed
     /// after this rank's own result is reported.
     pub(super) pending_reassign: VecDeque<(usize, Vec<PairTask>)>,
+    /// Wall time spent waiting on scatter deliveries: phase 0 for the
+    /// monolithic path, [`WorkerCtx::ensure_blocks`] waits for the
+    /// streamed path. The window the streamed scatter exists to shrink.
+    pub(super) scatter_blocked_secs: f64,
+    /// Seconds from run start ([`Plan::t0`]) to this rank's first started
+    /// task (`None` until then, and forever for a rank with no tasks).
+    pub(super) time_to_first_task: Option<f64>,
     // ---- stats the app fills in (reported by the engine) ----
     pub corr_tiles: u64,
     pub elim_tiles: u64,
@@ -167,9 +187,11 @@ impl WorkerCtx {
     }
 
     /// Row-matrix contents of a held block (panics if the block is not in
-    /// this rank's quorum or is not row data).
+    /// this rank's quorum or has not landed yet — apps await streamed
+    /// blocks through [`WorkerCtx::begin_task`] / [`WorkerCtx::ensure_blocks`]
+    /// before reading them).
     pub fn block_rows(&self, b: usize) -> &Matrix {
-        match &self.block_data(b).1 {
+        match self.block_data(b).1.as_ref() {
             BlockData::Rows(m) => m,
             other => panic!(
                 "worker {}: block {b} holds {} data, expected rows",
@@ -181,7 +203,7 @@ impl WorkerCtx {
 
     /// Particle contents of a held block.
     pub fn block_bodies(&self, b: usize) -> (&[f64], &[[f64; 3]]) {
-        match &self.block_data(b).1 {
+        match self.block_data(b).1.as_ref() {
             BlockData::Bodies { mass, pos } => (mass, pos),
             other => panic!(
                 "worker {}: block {b} holds {} data, expected bodies",
@@ -191,7 +213,7 @@ impl WorkerCtx {
         }
     }
 
-    fn block_data(&self, b: usize) -> &(usize, BlockData) {
+    fn block_data(&self, b: usize) -> &(usize, Arc<BlockData>) {
         self.blocks
             .get(&b)
             .unwrap_or_else(|| panic!("block {b} not in quorum of {}", self.my_block))
@@ -216,12 +238,38 @@ impl WorkerCtx {
         let _ = self.ep.send(endpoint_of(block), Message::App(payload));
     }
 
-    /// Begin the next owned task. Returns false when injected failure says
-    /// this rank dies now (`--kill-at compute:<k>`: after completing — and,
-    /// pipelined, reporting — k tasks); the app must then return `None`
-    /// from `run_worker` so the worker exits without reporting, exactly
-    /// like a real mid-compute crash.
-    pub fn begin_task(&mut self) -> bool {
+    /// Begin owned task `t`. Waits until the task's two input blocks have
+    /// landed (under the streamed scatter later blocks may still be in
+    /// flight; the monolithic path holds the full quorum already, so the
+    /// wait is free), then returns false when injected failure says this
+    /// rank dies now (`--kill-at compute:<k>`: after completing — and,
+    /// pipelined, reporting — k tasks) or when shutdown arrived while
+    /// waiting; the app must then return `None` from `run_worker` so the
+    /// worker exits without reporting, exactly like a real mid-compute
+    /// crash.
+    pub fn begin_task(&mut self, t: &PairTask) -> bool {
+        if !self.injection_says_alive() {
+            return false;
+        }
+        // Dependency-driven eager start: wait only for THIS task's inputs.
+        if !self.ensure_blocks(&[t.a, t.b]) {
+            return false;
+        }
+        // Re-check: the injection can arrive (streamed mode delivers Crash
+        // ahead of the block stream) while the inputs were pumped in.
+        if !self.injection_says_alive() {
+            return false;
+        }
+        if self.time_to_first_task.is_none() {
+            self.time_to_first_task = Some(self.plan.t0.elapsed().as_secs_f64());
+        }
+        true
+    }
+
+    /// `--kill-at compute:<k>` check shared by both ends of
+    /// [`WorkerCtx::begin_task`]: false = this rank just died (or already
+    /// was dead).
+    fn injection_says_alive(&mut self) -> bool {
         if self.dead {
             return false;
         }
@@ -232,6 +280,58 @@ impl WorkerCtx {
             }
         }
         true
+    }
+
+    /// Block until every listed block id is resident, pumping the wire and
+    /// stashing everything else that arrives (app payloads in order, late
+    /// task grants, injected crash arming). Immediate (and free) when all
+    /// blocks already landed — the monolithic scatter's case. Returns
+    /// false on shutdown / crash; the app must then return `None` from
+    /// `run_worker`. Time actually spent waiting here is accounted as
+    /// `RankStats::scatter_blocked_secs`.
+    pub fn ensure_blocks(&mut self, ids: &[usize]) -> bool {
+        loop {
+            if self.dead {
+                return false;
+            }
+            if ids.iter().all(|b| self.blocks.contains_key(b)) {
+                return true;
+            }
+            let sw = Instant::now();
+            let env = self.ep.recv();
+            self.scatter_blocked_secs += sw.elapsed().as_secs_f64();
+            let Some(env) = env else { return false };
+            match env.msg {
+                Message::AssignBlock(pb) => self.insert_block(pb),
+                Message::App(p) => self.pending.push_back(p),
+                Message::Reassign { for_rank, tasks } => {
+                    self.pending_reassign.push_back((for_rank, tasks));
+                }
+                Message::Shutdown => return false,
+                Message::Crash { at } => match at {
+                    // Scatter-phase injection dies on delivery.
+                    KillAt::Scatter => {
+                        self.die();
+                        return false;
+                    }
+                    // Mid-run injection arms the plan (streamed mode: the
+                    // Crash rides ahead of the block stream, so it lands
+                    // here rather than in phase 0).
+                    other => self.kill_at = Some(other),
+                },
+                other => panic!(
+                    "worker {}: unexpected {} awaiting scatter blocks",
+                    self.my_block,
+                    other.kind()
+                ),
+            }
+        }
+    }
+
+    /// Stash one scatter delivery (idempotent: a duplicate delivery of an
+    /// already-held block is dropped without re-charging memory).
+    pub(super) fn insert_block(&mut self, pb: PlacedBlock) {
+        stash_block(&mut self.blocks, &self.mem, pb);
     }
 
     /// Record completion of task `t`: provenance for the next streamed
@@ -329,6 +429,10 @@ impl WorkerCtx {
                 Message::Reassign { for_rank, tasks } => {
                     self.pending_reassign.push_back((for_rank, tasks));
                 }
+                // Streamed scatter: blocks this rank's tasks did not need
+                // yet (standby replicas for recovery, panel blocks) keep
+                // landing during the app protocol.
+                Message::AssignBlock(pb) => self.insert_block(pb),
                 other => panic!(
                     "worker {}: unexpected {} while awaiting app traffic",
                     self.my_block,
@@ -362,6 +466,9 @@ impl WorkerCtx {
                 Message::Reassign { for_rank, tasks } => {
                     self.pending_reassign.push_back((for_rank, tasks));
                 }
+                // Streamed scatter: trailing blocks can land at any
+                // blocking point, the barrier included.
+                Message::AssignBlock(pb) => self.insert_block(pb),
                 other => panic!(
                     "worker {}: unexpected {} at barrier",
                     self.my_block,
@@ -379,6 +486,21 @@ fn block_kind(b: &BlockData) -> &'static str {
     }
 }
 
+/// Insert one scatter delivery into a worker's block map, charging logical
+/// memory exactly once per distinct held block (replica re-deliveries are
+/// dropped). Shared by the phase-0 loop and every mid-protocol stash
+/// point.
+pub(super) fn stash_block(
+    blocks: &mut BTreeMap<usize, (usize, Arc<BlockData>)>,
+    mem: &MemoryAccountant,
+    pb: PlacedBlock,
+) {
+    if let std::collections::btree_map::Entry::Vacant(v) = blocks.entry(pb.block) {
+        mem.alloc(pb.data.nbytes());
+        v.insert((pb.offset, pb.data));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,7 +511,14 @@ mod tests {
         WorkerCtx {
             my_block: crate::coordinator::transport::rank_of(ep.rank),
             ep,
-            plan: Plan { n: 8, p: 2, block: 4, pipeline: true },
+            plan: Plan {
+                n: 8,
+                p: 2,
+                block: 4,
+                pipeline: true,
+                streamed_scatter: true,
+                t0: Instant::now(),
+            },
             mem: MemoryAccountant::new(),
             blocks: BTreeMap::new(),
             quorum: Vec::new(),
@@ -402,10 +531,21 @@ mod tests {
             task_tags: Vec::new(),
             completed_tasks: 0,
             pending_reassign: VecDeque::new(),
+            scatter_blocked_secs: 0.0,
+            time_to_first_task: None,
             corr_tiles: 0,
             elim_tiles: 0,
             phase1_secs: 0.0,
             phase2_secs: 0.0,
+        }
+    }
+
+    fn placed(block: usize, rows: usize, first: bool) -> PlacedBlock {
+        PlacedBlock {
+            block,
+            offset: block * 4,
+            data: Arc::new(BlockData::Rows(Matrix::zeros(rows, 4))),
+            first,
         }
     }
 
@@ -533,15 +673,101 @@ mod tests {
         let me = eps.pop().unwrap();
         let _leader = eps.pop().unwrap();
         let mut ctx = ctx_for(me);
+        ctx.insert_block(placed(0, 4, true));
+        ctx.insert_block(placed(1, 4, false));
         ctx.kill_at = Some(KillAt::Compute { tasks: 2 });
-        assert!(ctx.begin_task());
-        ctx.complete_task(PairTask { a: 0, b: 0 });
-        assert!(ctx.begin_task());
-        ctx.complete_task(PairTask { a: 0, b: 1 });
+        let t00 = PairTask { a: 0, b: 0 };
+        let t01 = PairTask { a: 0, b: 1 };
+        assert!(ctx.begin_task(&t00));
+        ctx.complete_task(t00);
+        assert!(ctx.begin_task(&t01));
+        ctx.complete_task(t01);
         // Third task never starts: the rank dies, marked on the transport.
-        assert!(!ctx.begin_task());
+        assert!(!ctx.begin_task(&PairTask { a: 1, b: 1 }));
         assert!(ctx.ep.transport().is_killed(ctx.ep.rank));
         // A dead rank reports nothing.
         assert!(!ctx.stream_result(Payload::Edges(vec![(9, 9, 0.9)])));
+    }
+
+    #[test]
+    fn ensure_blocks_pumps_and_stashes_in_order() {
+        // Waiting for a streamed block must not lose anything that arrives
+        // ahead of it: app payloads stash in arrival order, a late task
+        // grant queues, and the block itself lands in the map.
+        let (_t, mut eps) = Transport::new(3);
+        let peer = eps.pop().unwrap(); // rank 2
+        let me = eps.pop().unwrap(); // rank 1
+        let leader = eps.pop().unwrap(); // rank 0
+        peer.send(1, Message::App(ring(3))).unwrap();
+        leader
+            .send(1, Message::Reassign { for_rank: 5, tasks: vec![PairTask { a: 0, b: 1 }] })
+            .unwrap();
+        leader.send(1, Message::AssignBlock(placed(1, 4, true))).unwrap();
+
+        let mut ctx = ctx_for(me);
+        ctx.insert_block(placed(0, 4, true));
+        assert!(ctx.ensure_blocks(&[0, 1]));
+        assert!(ctx.blocks.contains_key(&1));
+        assert_eq!(ctx.pending_reassign.len(), 1);
+        match ctx.recv_app().unwrap() {
+            Payload::RingRows { block, .. } => assert_eq!(block, 3),
+            other => panic!("wrong payload {}", other.kind()),
+        }
+        // Re-ensuring already-resident blocks is free (no receive).
+        assert!(ctx.ensure_blocks(&[0, 1]));
+    }
+
+    #[test]
+    fn ensure_blocks_arms_injection_and_dies_on_scatter_kill() {
+        // A Crash riding ahead of the block stream arms (compute:<k>) or
+        // fires (scatter) from inside the block wait — the streamed-mode
+        // delivery point for failure injection.
+        let (_t, mut eps) = Transport::new(2);
+        let me = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        leader.send(1, Message::Crash { at: KillAt::Compute { tasks: 1 } }).unwrap();
+        leader.send(1, Message::AssignBlock(placed(0, 4, true))).unwrap();
+        assert!(ctx.ensure_blocks(&[0]));
+        assert_eq!(ctx.kill_at, Some(KillAt::Compute { tasks: 1 }));
+
+        let (_t2, mut eps2) = Transport::new(2);
+        let me2 = eps2.pop().unwrap();
+        let leader2 = eps2.pop().unwrap();
+        let mut ctx2 = ctx_for(me2);
+        leader2.send(1, Message::Crash { at: KillAt::Scatter }).unwrap();
+        assert!(!ctx2.ensure_blocks(&[0]));
+        assert!(ctx2.dead);
+        assert!(ctx2.ep.transport().is_killed(ctx2.ep.rank));
+    }
+
+    #[test]
+    fn duplicate_block_delivery_charges_memory_once() {
+        let (_t, mut eps) = Transport::new(2);
+        let me = eps.pop().unwrap();
+        let _leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        ctx.insert_block(placed(2, 4, true));
+        let once = ctx.mem.peak_bytes();
+        assert!(once > 0);
+        ctx.insert_block(placed(2, 4, false));
+        assert_eq!(ctx.mem.peak_bytes(), once, "replica re-delivery must not re-charge");
+    }
+
+    #[test]
+    fn begin_task_records_time_to_first_task_once() {
+        let (_t, mut eps) = Transport::new(2);
+        let me = eps.pop().unwrap();
+        let _leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        ctx.insert_block(placed(0, 4, true));
+        assert!(ctx.time_to_first_task.is_none());
+        let t = PairTask { a: 0, b: 0 };
+        assert!(ctx.begin_task(&t));
+        let first = ctx.time_to_first_task.expect("stamped on first task");
+        assert!(first >= 0.0 && first.is_finite());
+        ctx.complete_task(t);
+        assert!(ctx.begin_task(&t));
+        assert_eq!(ctx.time_to_first_task, Some(first), "stamp must not move");
     }
 }

@@ -3,7 +3,7 @@
 //! built on it, and the single-node baseline.
 
 use super::app::{DistributedApp, Plan};
-use super::leader::{leader_main, LeaderOutcome, LeaderPlan};
+use super::leader::{leader_main, LeaderOutcome, LeaderPlan, ResultSink};
 use super::messages::{KillAt, Payload};
 use super::transport::{endpoint_of, Transport};
 use super::worker::worker_main;
@@ -37,6 +37,14 @@ pub struct RankStats {
     /// receives (scatter wait, barrier, ring stalls). The overlap a
     /// pipelined transport buys shows up as this number shrinking.
     pub recv_blocked_secs: f64,
+    /// Wall time spent waiting specifically on scatter deliveries (phase 0
+    /// for the monolithic path, `WorkerCtx::ensure_blocks` waits for the
+    /// streamed path) — a subset of `recv_blocked_secs`, and the window
+    /// the streamed scatter exists to shrink.
+    pub scatter_blocked_secs: f64,
+    /// Seconds from run start to this rank's first started task (0 for a
+    /// rank with no tasks).
+    pub time_to_first_task_secs: f64,
     /// Result items this rank reported (edges, tiles, force blocks).
     pub n_items: u64,
 }
@@ -69,6 +77,12 @@ pub struct EngineOptions {
     /// result gather (forward-before-compute, streamed result chunks).
     /// Bitwise-identical to the synchronous protocol for every in-tree app.
     pub pipeline: bool,
+    /// Streamed block-granular scatter (`--scatter streamed`): task lists
+    /// ship ahead of the data and blocks stream in first-task-need order,
+    /// so workers start computing the moment their first task's inputs
+    /// land instead of idling through the whole quorum transfer.
+    /// Bitwise-identical to the monolithic scatter for every in-tree app.
+    pub streamed_scatter: bool,
     /// Max in-flight messages a pipelined sender may leave queued at one
     /// destination before falling back to synchronous ordering.
     pub send_ahead_credit: usize,
@@ -85,6 +99,18 @@ pub fn pipeline_default() -> bool {
         .unwrap_or(false)
 }
 
+/// Process-wide scatter default: `QUORALL_SCATTER=streamed` flips every
+/// engine run built through [`EngineOptions::new`] / `RunConfig` defaults
+/// to the streamed block-granular scatter (how CI runs the integration
+/// suite down both paths). Explicit `--scatter` / `opts.streamed_scatter`
+/// settings win.
+pub fn scatter_default() -> bool {
+    std::env::var("QUORALL_SCATTER")
+        .ok()
+        .and_then(|v| crate::config::parse_scatter(&v))
+        .unwrap_or(false)
+}
+
 impl EngineOptions {
     pub fn new(ranks: usize, strategy: Strategy) -> Self {
         Self {
@@ -96,6 +122,7 @@ impl EngineOptions {
             kill_at: KillAt::Scatter,
             recover: false,
             pipeline: pipeline_default(),
+            streamed_scatter: scatter_default(),
             send_ahead_credit: crate::coordinator::transport::DEFAULT_SEND_AHEAD_CREDIT,
         }
     }
@@ -121,8 +148,21 @@ pub struct EngineReport {
     pub peak_bytes_per_rank: u64,
     /// Total bytes moved through the transport.
     pub total_comm_bytes: u64,
+    /// Scatter traffic (`AssignData` / `AssignBlock`) through the
+    /// transport. Block buffers are Arc-shared across replica owners, so
+    /// each distinct block's payload counts once; replica deliveries add a
+    /// header each.
+    pub scatter_comm_bytes: u64,
     /// Sum over ranks of wall time spent blocked inside transport receives.
     pub recv_blocked_secs: f64,
+    /// Sum over ranks of wall time spent waiting specifically on scatter
+    /// deliveries — the idle window the streamed scatter shrinks.
+    pub scatter_blocked_secs: f64,
+    /// Max over ranks of time from run start to the rank's first started
+    /// task (the scatter-latency straggler), clamped like
+    /// [`overlap_ratio`]: degenerate zero-wall-time runs report 0 instead
+    /// of leaking NaN/inf into `BENCH_scatter.json`.
+    pub time_to_first_task_secs: f64,
     /// Fraction of aggregate worker wall time **not** spent blocked in a
     /// receive: 1 − Σ blocked / (survivors · wall). 1.0 = perfect overlap
     /// (workers never waited on the transport). Survivors == P on a
@@ -148,10 +188,46 @@ pub fn overlap_ratio(ranks: usize, wall_secs: f64, blocked_secs: f64) -> f64 {
     (1.0 - blocked / worker_secs).clamp(0.0, 1.0)
 }
 
+/// Max over ranks of the per-rank time-to-first-task, with the same
+/// degenerate-case treatment [`overlap_ratio`] got: a non-finite or
+/// negative per-rank stamp (zero-wall-time runs, coarse clocks, a rank
+/// that never started a task and reports 0) clamps to 0 rather than
+/// leaking NaN/inf into `BENCH_scatter.json`.
+pub fn time_to_first_task_secs(stats: &[RankStats]) -> f64 {
+    stats
+        .iter()
+        .map(|s| {
+            let t = s.time_to_first_task_secs;
+            if t.is_finite() && t > 0.0 {
+                t
+            } else {
+                0.0
+            }
+        })
+        .fold(0.0, f64::max)
+}
+
 /// Run `app` on a simulated cluster of `opts.ranks` workers under the
 /// chosen placement strategy: scatter placement blocks, assign pair work,
 /// sequence the app's barriers, gather per-rank results and stats.
 pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Result<EngineReport> {
+    run_app_with_sink(app, opts, None)
+}
+
+/// [`run_app`] with an optional incremental result sink: every accepted
+/// result payload (streamed chunk, final remainder, recovered splice) is
+/// handed to `sink(rank, payload)` the moment the leader's ledger accepts
+/// it — overlapping result assembly with the remaining compute — and
+/// `EngineReport::results` comes back empty; the caller owns assembly.
+/// Payloads from one rank arrive in compute order, but the interleaving
+/// *across* ranks is arrival order, so the sink must be order-insensitive
+/// across ranks (similarity tiles are: every tile writes a disjoint
+/// region).
+pub fn run_app_with_sink(
+    app: Arc<dyn DistributedApp>,
+    opts: &EngineOptions,
+    sink: Option<&mut ResultSink<'_>>,
+) -> anyhow::Result<EngineReport> {
     let p = opts.ranks;
     anyhow::ensure!(p >= 1, "engine needs at least one rank");
     anyhow::ensure!(
@@ -211,7 +287,14 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
         }
     }
 
-    let plan = Plan { n, p, block: ceil_div(n, p), pipeline: opts.pipeline };
+    let plan = Plan {
+        n,
+        p,
+        block: ceil_div(n, p),
+        pipeline: opts.pipeline,
+        streamed_scatter: opts.streamed_scatter,
+        t0: std::time::Instant::now(),
+    };
     let sw = Stopwatch::start();
     let (transport, mut endpoints) = Transport::with_credit(p + 1, opts.send_ahead_credit);
     // endpoints[0] = leader; spawn workers on 1..=p.
@@ -237,6 +320,7 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
             kill: opts.kill.clone(),
             kill_at: opts.kill_at,
             recovery,
+            sink,
         },
     );
     if lead.is_err() {
@@ -276,6 +360,8 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
     // numerator — the denominator must count survivors only (== p on a
     // failure-free run) or recovered runs would overstate overlap.
     let overlap = overlap_ratio(outcome.stats.len(), wall, blocked);
+    let scatter_blocked: f64 = outcome.stats.iter().map(|s| s.scatter_blocked_secs).sum();
+    let first_task = time_to_first_task_secs(&outcome.stats);
 
     Ok(EngineReport {
         results: outcome.results,
@@ -287,7 +373,10 @@ pub fn run_app(app: Arc<dyn DistributedApp>, opts: &EngineOptions) -> anyhow::Re
         assignment_imbalance: imbalance,
         peak_bytes_per_rank: peak,
         total_comm_bytes: bytes,
+        scatter_comm_bytes: transport.scatter_bytes(),
         recv_blocked_secs: blocked,
+        scatter_blocked_secs: scatter_blocked,
+        time_to_first_task_secs: first_task,
         overlap_ratio: overlap,
         recovered_tasks: outcome.recovered_tasks,
         dead_ranks: outcome.dead_ranks,
@@ -308,8 +397,14 @@ pub struct DistributedReport {
     pub peak_bytes_per_rank: u64,
     /// Total bytes moved through the transport.
     pub total_comm_bytes: u64,
+    /// See [`EngineReport::scatter_comm_bytes`].
+    pub scatter_comm_bytes: u64,
     /// Sum over ranks of wall time blocked inside transport receives.
     pub recv_blocked_secs: f64,
+    /// See [`EngineReport::scatter_blocked_secs`].
+    pub scatter_blocked_secs: f64,
+    /// See [`EngineReport::time_to_first_task_secs`].
+    pub time_to_first_task_secs: f64,
     /// See [`EngineReport::overlap_ratio`].
     pub overlap_ratio: f64,
     /// Tasks recomputed by surviving ranks after mid-run deaths.
@@ -355,6 +450,7 @@ pub fn run_distributed_pcit(
     ));
     let mut opts = EngineOptions::new(cfg.ranks, cfg.strategy);
     opts.pipeline = cfg.pipeline;
+    opts.streamed_scatter = cfg.streamed_scatter;
     opts.redundancy = cfg.redundancy;
     opts.kill = cfg.kill.clone();
     opts.kill_at = cfg.kill_at;
@@ -370,7 +466,10 @@ pub fn run_distributed_pcit(
         assignment_imbalance: rep.assignment_imbalance,
         peak_bytes_per_rank: rep.peak_bytes_per_rank,
         total_comm_bytes: rep.total_comm_bytes,
+        scatter_comm_bytes: rep.scatter_comm_bytes,
         recv_blocked_secs: rep.recv_blocked_secs,
+        scatter_blocked_secs: rep.scatter_blocked_secs,
+        time_to_first_task_secs: rep.time_to_first_task_secs,
         overlap_ratio: rep.overlap_ratio,
         recovered_tasks: rep.recovered_tasks,
         dead_ranks: rep.dead_ranks,
@@ -435,6 +534,7 @@ pub fn run_resilient_pcit_at(
     opts.kill_at = kill_at;
     opts.recover = true;
     opts.pipeline = cfg.pipeline;
+    opts.streamed_scatter = cfg.streamed_scatter;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -446,7 +546,10 @@ pub fn run_resilient_pcit_at(
         assignment_imbalance: rep.assignment_imbalance,
         peak_bytes_per_rank: rep.peak_bytes_per_rank,
         total_comm_bytes: rep.total_comm_bytes,
+        scatter_comm_bytes: rep.scatter_comm_bytes,
         recv_blocked_secs: rep.recv_blocked_secs,
+        scatter_blocked_secs: rep.scatter_blocked_secs,
+        time_to_first_task_secs: rep.time_to_first_task_secs,
         overlap_ratio: rep.overlap_ratio,
         recovered_tasks: rep.recovered_tasks,
         dead_ranks: rep.dead_ranks,
@@ -599,6 +702,25 @@ mod tests {
         let r = overlap_ratio(4, 1.0, 1.0);
         assert!((r - 0.75).abs() < 1e-12);
         assert!(overlap_ratio(8, 2.0, 4.0).is_finite());
+    }
+
+    #[test]
+    fn time_to_first_task_degenerate_cases_stay_finite() {
+        // Same treatment overlap_ratio() got: zero-wall-time runs, coarse
+        // clocks and garbage per-rank stamps must clamp, never NaN/inf.
+        let stat = |t: f64| RankStats { time_to_first_task_secs: t, ..RankStats::default() };
+        assert_eq!(time_to_first_task_secs(&[]), 0.0);
+        assert_eq!(time_to_first_task_secs(&[stat(0.0)]), 0.0);
+        assert_eq!(time_to_first_task_secs(&[stat(-1.0)]), 0.0);
+        assert_eq!(time_to_first_task_secs(&[stat(f64::NAN)]), 0.0);
+        assert_eq!(time_to_first_task_secs(&[stat(f64::INFINITY)]), 0.0);
+        // The healthy case is the straggler (max over ranks); a rank that
+        // never started a task (stamp 0) does not drag the max down.
+        let t = time_to_first_task_secs(&[stat(0.25), stat(0.0), stat(0.75)]);
+        assert_eq!(t, 0.75);
+        assert!(time_to_first_task_secs(&[stat(1e-9)]).is_finite());
+        // Mixed garbage + healthy: garbage clamps out, max survives.
+        assert_eq!(time_to_first_task_secs(&[stat(f64::NAN), stat(0.5)]), 0.5);
     }
 
     #[test]

@@ -1,6 +1,29 @@
 //! Leader rank: scatters placement blocks, hands out pair tasks, sequences
 //! the app's barrier phases, gathers results and stats — app-agnostically.
 //!
+//! Scatter modes (`--scatter {streamed,monolithic}`):
+//!
+//! * **monolithic** — one [`Message::AssignData`] per worker carrying its
+//!   whole quorum, then [`Message::ComputeTasks`]; a worker cannot start
+//!   until its entire placement has landed.
+//! * **streamed** — task lists ship up front ([`Message::TasksAhead`]),
+//!   then individual [`Message::AssignBlock`]s in *first-task-need* order
+//!   (blocks a worker's earliest tasks touch go first; pure standby
+//!   replicas go last), credit-paced per destination so a slow worker
+//!   flow-controls its own stream. Workers start a task the moment its
+//!   inputs land, so time-to-first-task stops growing with quorum size.
+//!
+//! Either way every distinct block is materialized **once** and Arc-shared
+//! across its replica owners ([`PlacedBlock`]) — the leader no longer calls
+//! `make_block` once per (block, holder) pair, and scatter bytes count each
+//! block's payload once ([`super::Transport::scatter_bytes`]).
+//!
+//! Because streamed workers can finish (and stream result chunks, phase
+//! reports, even final results) while later blocks are still leaving the
+//! leader, all three leader loops — scatter pump, phase wait, gather —
+//! share one message dispatcher over the same gather/ledger state; a
+//! message is never "unexpected" just because it raced a faster loop.
+//!
 //! Failure handling: a worker that receives `Crash` (or panics) marks
 //! itself killed on the transport before exiting. All leader waits poll
 //! with a short timeout and, whenever progress stalls, check whether any
@@ -14,29 +37,48 @@
 //!   against the provenance tags on every streamed [`Message::ResultChunk`]
 //!   — to find the dead rank's *unfinished* tasks, re-assigns each to a
 //!   surviving backup owner (a rank whose quorum hosts both blocks, so the
-//!   data is already resident), and splices the per-task
-//!   [`Message::RecoveredResult`]s back into the dead rank's result at
-//!   their original positions. Assembly order is exactly what the dead
-//!   rank would have produced, so recovered runs are bitwise-identical to
-//!   failure-free runs for every task-granular app.
+//!   data is already resident — under the streamed scatter the replacement
+//!   owner's own block stream already carries everything a re-assigned
+//!   task needs, so masking a scatter-phase death costs zero extra scatter
+//!   traffic), and splices the per-task [`Message::RecoveredResult`]s back
+//!   into the dead rank's result at their original positions. Assembly
+//!   order is exactly what the dead rank would have produced, so recovered
+//!   runs are bitwise-identical to failure-free runs for every
+//!   task-granular app.
 
 use super::app::{DistributedApp, Plan};
-use super::messages::{BlockData, KillAt, Message, Payload};
-use super::transport::{endpoint_of, rank_of, Endpoint};
+use super::messages::{BlockData, KillAt, Message, Payload, PlacedBlock};
+use super::transport::{endpoint_of, rank_of, Endpoint, Envelope};
 use crate::allpairs::{PairTask, RedundantAssignment};
 use crate::data::Partition;
 use std::collections::btree_map::Entry;
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::ops::Range;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Poll interval for failure detection while waiting on workers.
 const POLL: Duration = Duration::from_millis(25);
+
+/// Nap while every unfinished block stream is credit-blocked and nothing
+/// is arriving — short enough that a worker dequeue resumes the stream
+/// almost immediately, long enough not to spin a core away from workers.
+const SCATTER_NAP: Duration = Duration::from_micros(100);
+
+/// Incremental result consumer: called with `(rank, payload)` the moment
+/// the leader's ledger accepts a result payload (streamed chunk, final
+/// remainder, recovered splice). Chunks from one rank arrive in compute
+/// order; *across* ranks the order is arrival order, so sinks must be
+/// order-insensitive across ranks (e.g. similarity tiles, which write
+/// disjoint matrix regions).
+pub type ResultSink<'s> = dyn FnMut(usize, Payload) -> anyhow::Result<()> + 's;
 
 /// Everything the leader returns.
 pub struct LeaderOutcome {
     /// Per-rank result payloads, sorted by rank. A dead-but-recovered
     /// rank's entry carries its spliced-together payload under its own
     /// rank id; ranks that died with nothing to contribute are absent.
+    /// Empty when a [`LeaderPlan::sink`] consumed the payloads instead.
     pub results: Vec<(usize, Payload)>,
     pub stats: Vec<super::driver::RankStats>,
     /// Tasks recomputed by surviving ranks after mid-run deaths.
@@ -47,7 +89,7 @@ pub struct LeaderOutcome {
 
 /// Leader-side inputs: the app, its placement, and precomputed per-rank
 /// task lists (the leader does not care how they were balanced).
-pub struct LeaderPlan<'a> {
+pub struct LeaderPlan<'a, 's> {
     pub app: &'a dyn DistributedApp,
     pub quorum: &'a dyn crate::quorum::QuorumSystem,
     /// tasks[rank] = pair tasks that rank owns (assignment order — the
@@ -61,6 +103,9 @@ pub struct LeaderPlan<'a> {
     /// a dead rank's unfinished tasks to surviving hosts. `None` keeps the
     /// fail-fast behavior (any death aborts the run).
     pub recovery: Option<RedundantAssignment>,
+    /// Present when the caller assembles results incrementally as they
+    /// arrive ([`ResultSink`]); `LeaderOutcome::results` then stays empty.
+    pub sink: Option<&'a mut ResultSink<'s>>,
 }
 
 /// Per-dead-rank orphan bookkeeping.
@@ -75,9 +120,9 @@ struct Orphans {
 }
 
 /// Leader gather state: the task ledger, the streamed partials, and the
-/// recovery machinery. One instance spans phase sync and the result
-/// gather — chunks can land in either loop.
-struct Gather {
+/// recovery machinery. One instance spans the whole run — scatter pump,
+/// phase sync and the result gather — chunks can land in any loop.
+struct Gather<'a, 's> {
     p: usize,
     app_name: String,
     app_recoverable: bool,
@@ -90,13 +135,16 @@ struct Gather {
     /// Ledger provenance: tasks confirmed complete per rank (chunk tags;
     /// a closing Result completes everything).
     done: Vec<BTreeSet<PairTask>>,
-    /// Streamed result chunks folded per rank in arrival order.
+    /// Streamed result chunks folded per rank in arrival order (unused
+    /// when a sink consumes payloads on arrival).
     partial: BTreeMap<usize, Payload>,
     need_result: BTreeSet<usize>,
     need_stats: BTreeSet<usize>,
     result_done: Vec<bool>,
     results: Vec<(usize, Payload)>,
     stats: Vec<super::driver::RankStats>,
+    /// Incremental consumer — `Some` disables payload retention.
+    sink: Option<&'a mut ResultSink<'s>>,
     /// Backup owners per pair — `Some` enables mid-run recovery.
     recovery: Option<RedundantAssignment>,
     /// Ranks doomed by injection (never chosen as recovery assignees).
@@ -109,15 +157,20 @@ struct Gather {
     /// Recovery work handed to each rank so far (assignee choice balance).
     reassign_load: Vec<usize>,
     recovered_tasks: u64,
+    /// Outstanding barrier phases: phase -> ranks still to report. Lives
+    /// here (not in a loop local) because phase reports can reach any
+    /// leader loop once the scatter streams.
+    phases_left: BTreeMap<u8, BTreeSet<usize>>,
 }
 
-impl Gather {
+impl<'a, 's> Gather<'a, 's> {
     fn new(
         p: usize,
         app: &dyn DistributedApp,
         tasks: Vec<Vec<PairTask>>,
         known_kill: Vec<usize>,
         recovery: Option<RedundantAssignment>,
+        sink: Option<&'a mut ResultSink<'s>>,
     ) -> Self {
         Gather {
             p,
@@ -132,21 +185,32 @@ impl Gather {
             result_done: vec![false; p],
             results: Vec::new(),
             stats: Vec::new(),
+            sink,
             recovery,
             known_kill,
             dead: BTreeMap::new(),
             delegated: BTreeMap::new(),
             reassign_load: vec![0; p],
             recovered_tasks: 0,
+            phases_left: app.sync_phases().iter().map(|&ph| (ph, (0..p).collect())).collect(),
         }
     }
 
     /// Fold a payload onto `rank`'s accumulated streamed partial,
     /// preserving chunk arrival order — the single spelling of the
     /// chunk-ordering invariant for both ResultChunk and the closing
-    /// Result. A chunk that cannot merge (kind mismatch) is a protocol bug
-    /// and surfaces as a clean abort + error, never a leader-side panic.
+    /// Result. With a sink, the payload is handed over instead of
+    /// retained (incremental assembly). A chunk that cannot merge (kind
+    /// mismatch) is a protocol bug and surfaces as a clean abort + error,
+    /// never a leader-side panic.
     fn fold(&mut self, ep: &Endpoint, rank: usize, payload: Payload) -> anyhow::Result<()> {
+        if let Some(sink) = &mut self.sink {
+            if let Err(e) = sink(rank, payload) {
+                abort(ep, self.p);
+                return Err(e);
+            }
+            return Ok(());
+        }
         let folded = match self.partial.remove(&rank) {
             Some(mut acc) => {
                 if !acc.mergeable_with(&payload) {
@@ -204,8 +268,10 @@ impl Gather {
             "leader: unexpected result from rank {rank}"
         );
         self.fold(ep, rank, payload)?;
-        let full = self.partial.remove(&rank).expect("fold always inserts");
-        self.results.push((rank, full));
+        if self.sink.is_none() {
+            let full = self.partial.remove(&rank).expect("fold always inserts");
+            self.results.push((rank, full));
+        }
         self.result_done[rank] = true;
         let all = self.assigned[rank].clone();
         self.done[rank].extend(all);
@@ -223,6 +289,25 @@ impl Gather {
         );
         self.stats.push(s);
         Ok(())
+    }
+
+    fn on_phase_done(&mut self, rank: usize, phase: u8) -> anyhow::Result<()> {
+        if self.dead.contains_key(&rank) {
+            return Ok(()); // straggler report sent before dying
+        }
+        let s = self
+            .phases_left
+            .get_mut(&phase)
+            .ok_or_else(|| anyhow::anyhow!("leader: unexpected phase {phase}"))?;
+        anyhow::ensure!(
+            s.remove(&rank),
+            "leader: duplicate phase-{phase} report from rank {rank}"
+        );
+        Ok(())
+    }
+
+    fn phases_pending(&self) -> bool {
+        self.phases_left.values().any(|s| !s.is_empty())
     }
 
     /// A surviving rank delivered one re-assigned task's result on behalf
@@ -294,7 +379,9 @@ impl Gather {
     /// Once every orphan of dead rank `d` is recovered, splice: the rank's
     /// streamed partial (tasks it reported before dying, in task order)
     /// followed by the recovered payloads in original task order — exactly
-    /// the payload the rank itself would have produced.
+    /// the payload the rank itself would have produced. With a sink, the
+    /// streamed prefix was already handed over on arrival, so only the
+    /// recovered payloads flow out here (still in original task order).
     fn try_finalize(&mut self, d: usize) -> anyhow::Result<()> {
         let Some(orph) = self.dead.get_mut(&d) else { return Ok(()) };
         if orph.finalized || !orph.tasks.iter().all(|t| orph.got.contains_key(t)) {
@@ -302,9 +389,18 @@ impl Gather {
         }
         orph.finalized = true;
         let tasks = orph.tasks.clone();
-        let mut acc: Option<Payload> = self.partial.remove(&d);
+        let mut recovered = Vec::with_capacity(tasks.len());
         for t in &tasks {
-            let payload = orph.got.remove(t).expect("completeness checked above");
+            recovered.push(orph.got.remove(t).expect("completeness checked above"));
+        }
+        if let Some(sink) = &mut self.sink {
+            for payload in recovered {
+                sink(d, payload)?;
+            }
+            return Ok(());
+        }
+        let mut acc: Option<Payload> = self.partial.remove(&d);
+        for payload in recovered {
             acc = Some(match acc {
                 None => payload,
                 Some(mut a) => {
@@ -327,13 +423,16 @@ impl Gather {
         Ok(())
     }
 
-    /// Declare rank `d` dead: excuse it from the gather, compute its
-    /// orphans from the ledger (plus any recovery work previously
-    /// delegated *to* it), and re-assign every orphan to a surviving
-    /// backup owner of the pair.
+    /// Declare rank `d` dead: excuse it from the gather (and any barrier
+    /// phase), compute its orphans from the ledger (plus any recovery work
+    /// previously delegated *to* it), and re-assign every orphan to a
+    /// surviving backup owner of the pair.
     fn on_death(&mut self, d: usize, ep: &Endpoint) -> anyhow::Result<()> {
         self.need_result.remove(&d);
         self.need_stats.remove(&d);
+        for s in self.phases_left.values_mut() {
+            s.remove(&d);
+        }
         let own: Vec<PairTask> = self.assigned[d]
             .iter()
             .filter(|t| !self.done[d].contains(*t))
@@ -411,10 +510,10 @@ impl Gather {
         self.try_finalize(d)
     }
 
-    /// Ranks the leader currently awaits something from that are newly
-    /// marked killed on the transport (`extra` adds loop-specific waits,
-    /// e.g. outstanding phase reports).
-    fn newly_dead(&self, ep: &Endpoint, extra: impl IntoIterator<Item = usize>) -> Vec<usize> {
+    /// Ranks the leader currently awaits something from (results, stats,
+    /// delegated recovery work, outstanding phase reports) that are newly
+    /// marked killed on the transport.
+    fn newly_dead(&self, ep: &Endpoint) -> Vec<usize> {
         let mut awaited: BTreeSet<usize> =
             self.need_result.union(&self.need_stats).copied().collect();
         for (a, v) in &self.delegated {
@@ -422,7 +521,9 @@ impl Gather {
                 awaited.insert(*a);
             }
         }
-        awaited.extend(extra);
+        for s in self.phases_left.values() {
+            awaited.extend(s.iter().copied());
+        }
         awaited
             .into_iter()
             .filter(|&r| {
@@ -463,49 +564,175 @@ impl Gather {
     fn recovery_pending(&self) -> bool {
         self.dead.values().any(|o| !o.finalized)
     }
+
+    /// Route one incoming message — shared verbatim by the scatter pump,
+    /// the phase wait and the result gather.
+    fn dispatch(&mut self, ep: &Endpoint, env: Envelope) -> anyhow::Result<()> {
+        let rank = rank_of(env.from);
+        match env.msg {
+            Message::ResultChunk { payload, tasks } => self.on_chunk(ep, rank, payload, tasks),
+            Message::Result(payload) => self.on_result(ep, rank, payload),
+            Message::RecoveredResult { for_rank, task, payload } => {
+                self.on_recovered(rank, for_rank, task, payload)
+            }
+            Message::Stats(s) => self.on_stats(rank, s),
+            Message::PhaseDone { phase } => self.on_phase_done(rank, phase),
+            other => {
+                abort(ep, self.p);
+                anyhow::bail!("leader: unexpected {} at the leader", other.kind());
+            }
+        }
+    }
+
+    /// Wait up to [`POLL`] for one message; on timeout, sweep for newly
+    /// dead ranks (`context` flavors the fail-fast error).
+    fn pump(&mut self, ep: &Endpoint, context: &str) -> anyhow::Result<()> {
+        match ep.recv_timeout(POLL) {
+            Some(env) => self.dispatch(ep, env),
+            None => {
+                let dead = self.newly_dead(ep);
+                self.handle_deaths(ep, dead, context)
+            }
+        }
+    }
 }
 
 /// Run the leader protocol on endpoint 0; worker rank w listens on
 /// `endpoint_of(w)`.
-pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Result<LeaderOutcome> {
+pub fn leader_main(
+    ep: &Endpoint,
+    plan: Plan,
+    lp: LeaderPlan<'_, '_>,
+) -> anyhow::Result<LeaderOutcome> {
     let p = plan.p;
     let part = Partition::new(plan.n, p);
-    let mut g = Gather::new(p, lp.app, lp.tasks.clone(), lp.kill.clone(), lp.recovery);
+    let LeaderPlan { app, quorum, tasks, kill, kill_at, recovery, sink } = lp;
+    let mut g = Gather::new(p, app, tasks.clone(), kill.clone(), recovery, sink);
 
-    // ---- Scatter placement blocks. ----
-    for w in 0..p {
-        let blocks: Vec<(usize, usize, BlockData)> = part
-            .blocks_for(lp.quorum, w)
-            .into_iter()
-            .map(|(b, r)| (b, r.start, lp.app.make_block(r)))
-            .collect();
-        // Derive the quorum list from the very blocks being shipped — the
-        // two can never disagree.
-        let quorum: Vec<usize> = blocks.iter().map(|(b, _, _)| *b).collect();
-        ep.send(endpoint_of(w), Message::AssignData { quorum, blocks })
-            .map_err(|e| anyhow::anyhow!("scatter to rank {w}: {e}"))?;
-    }
-
-    // ---- Failure injection, then pair work. ----
-    for &k in &lp.kill {
-        if let Err(e) = ep.send(endpoint_of(k), Message::Crash { at: lp.kill_at }) {
-            // The engine validates the kill list (in range, no duplicate
-            // targets), so an injection send can only fail if the target
-            // somehow died first — a bug worth surfacing, not swallowing.
-            crate::log_warn!("leader: failure injection for rank {k} failed: {e}");
-            debug_assert!(false, "failure injection for rank {k} failed: {e}");
+    // Materialize each distinct block exactly once, Arc-shared across its
+    // replica owners. Exactly one *delivered* send per block carries the
+    // accounted payload (`first`): the flag is granted only once a send
+    // succeeds (`carried`), so a delivery lost to a freshly-killed rank
+    // does not eat the block's one-time accounting and leave every
+    // surviving replica header-only.
+    let mut made: BTreeMap<usize, Arc<BlockData>> = BTreeMap::new();
+    let mut carried: BTreeSet<usize> = BTreeSet::new();
+    let mut make = |b: usize, r: Range<usize>| -> Arc<BlockData> {
+        match made.entry(b) {
+            Entry::Occupied(e) => Arc::clone(e.get()),
+            Entry::Vacant(v) => Arc::clone(v.insert(Arc::new(app.make_block(r)))),
         }
-    }
-    for (w, tasks) in lp.tasks.into_iter().enumerate() {
-        // A scatter-killed rank may already be dead; that expected failure
-        // is deliberately ignored (the injection send itself is asserted).
-        let _ = ep.send(endpoint_of(w), Message::ComputeTasks { tasks });
+    };
+
+    if plan.streamed_scatter {
+        // ---- Streamed scatter: tasks up front, blocks by first need. ----
+        // Injection is delivered FIRST, exactly like the monolithic path
+        // delivers it ahead of ComputeTasks: phase 0 arms (or fires) it
+        // before any task can start, so injection semantics cannot depend
+        // on the scatter mode. A scatter-phase death then strikes while
+        // the blocks are still in flight.
+        inject_kills(ep, &kill, kill_at);
+        for w in 0..p {
+            let msg = Message::TasksAhead { quorum: quorum.quorum(w), tasks: tasks[w].clone() };
+            if let Err(e) = ep.send(endpoint_of(w), msg) {
+                // A scatter-killed rank can already be dead; only an
+                // unexplained failure aborts the run.
+                if !kill.contains(&w) {
+                    anyhow::bail!("scatter to rank {w}: {e}");
+                }
+            }
+        }
+        let mut queues: Vec<VecDeque<(usize, Range<usize>)>> = (0..p)
+            .map(|w| need_order(&part.blocks_for(quorum, w), &tasks[w]))
+            .collect();
+        loop {
+            let mut all_done = true;
+            let mut progressed = false;
+            for (w, queue) in queues.iter_mut().enumerate() {
+                let dst = endpoint_of(w);
+                if ep.transport().is_killed(dst) {
+                    // Scatter-phase death: the rest of this stream is moot
+                    // (recovery re-assigns the rank's tasks to hosts whose
+                    // own streams already carry the needed blocks).
+                    queue.clear();
+                }
+                // Credit-paced: each destination flow-controls its own
+                // stream without starving anyone else's.
+                while ep.can_send_ahead(dst) {
+                    let Some((b, r)) = queue.pop_front() else { break };
+                    let data = make(b, r.clone());
+                    let first = !carried.contains(&b);
+                    let pb = PlacedBlock { block: b, offset: r.start, data, first };
+                    if ep.send(dst, Message::AssignBlock(pb)).is_err() {
+                        // The destination died under us; the payload never
+                        // landed, so the block's one-time accounting is
+                        // still up for grabs by a surviving replica.
+                        queue.clear();
+                        break;
+                    }
+                    if first {
+                        carried.insert(b);
+                    }
+                    progressed = true;
+                }
+                all_done &= queue.is_empty();
+            }
+            if all_done {
+                break;
+            }
+            if progressed {
+                continue;
+            }
+            // Every unfinished stream is credit-blocked: service arrivals
+            // (fast workers may already be streaming chunks or phase
+            // reports), sweep for deaths, then give workers a moment to
+            // drain their queues.
+            let mut serviced = false;
+            while let Some(env) = ep.try_recv() {
+                g.dispatch(ep, env)?;
+                serviced = true;
+            }
+            if !serviced {
+                let dead = g.newly_dead(ep);
+                g.handle_deaths(ep, dead, "completing the scatter")?;
+                std::thread::sleep(SCATTER_NAP);
+            }
+        }
+    } else {
+        // ---- Monolithic scatter: whole quorum, then the task list. ----
+        for w in 0..p {
+            let blocks: Vec<PlacedBlock> = part
+                .blocks_for(quorum, w)
+                .into_iter()
+                .map(|(b, r)| {
+                    let offset = r.start;
+                    let data = make(b, r);
+                    PlacedBlock { block: b, offset, data, first: carried.insert(b) }
+                })
+                .collect();
+            // Derive the quorum list from the very blocks being shipped —
+            // the two can never disagree.
+            let q: Vec<usize> = blocks.iter().map(|pb| pb.block).collect();
+            // Unlike the streamed path this send cannot race an injected
+            // death (Crash is delivered after AssignData), so a failure
+            // aborts without first-flag repair.
+            ep.send(endpoint_of(w), Message::AssignData { quorum: q, blocks })
+                .map_err(|e| anyhow::anyhow!("scatter to rank {w}: {e}"))?;
+        }
+        inject_kills(ep, &kill, kill_at);
+        for (w, tasks) in tasks.into_iter().enumerate() {
+            // A scatter-killed rank may already be dead; that expected
+            // failure is deliberately ignored (the injection send itself
+            // is asserted).
+            let _ = ep.send(endpoint_of(w), Message::ComputeTasks { tasks });
+        }
     }
 
     // ---- Barrier phases the app asked for. ----
-    let phases = lp.app.sync_phases();
-    if !phases.is_empty() {
-        wait_phases(ep, p, &phases, &mut g)?;
+    if !g.phases_left.is_empty() {
+        while g.phases_pending() {
+            g.pump(ep, "completing a sync phase")?;
+        }
         for w in 0..p {
             let _ = ep.send(endpoint_of(w), Message::Proceed);
         }
@@ -513,30 +740,7 @@ pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Res
 
     // ---- Gather results + stats; serve recovery until complete. ----
     while !g.need_result.is_empty() || !g.need_stats.is_empty() || g.recovery_pending() {
-        match ep.recv_timeout(POLL) {
-            Some(env) => {
-                let rank = rank_of(env.from);
-                match env.msg {
-                    Message::ResultChunk { payload, tasks } => {
-                        g.on_chunk(ep, rank, payload, tasks)?;
-                    }
-                    Message::Result(payload) => g.on_result(ep, rank, payload)?,
-                    Message::RecoveredResult { for_rank, task, payload } => {
-                        g.on_recovered(rank, for_rank, task, payload)?;
-                    }
-                    Message::Stats(s) => g.on_stats(rank, s)?,
-                    Message::PhaseDone { .. } => { /* stragglers after the barrier */ }
-                    other => {
-                        abort(ep, p);
-                        anyhow::bail!("leader: unexpected {} gathering results", other.kind());
-                    }
-                }
-            }
-            None => {
-                let dead = g.newly_dead(ep, std::iter::empty());
-                g.handle_deaths(ep, dead, "reporting its result")?;
-            }
-        }
+        g.pump(ep, "reporting its result")?;
     }
     g.results.sort_by_key(|(r, _)| *r);
     g.stats.sort_by_key(|s| s.rank);
@@ -553,69 +757,79 @@ pub fn leader_main(ep: &Endpoint, plan: Plan, lp: LeaderPlan<'_>) -> anyhow::Res
     })
 }
 
-/// Wait until every live worker has reported each of the listed phases.
-/// A rank that dies mid-phase is excused (and recovered) when a recovery
-/// plan allows it; otherwise the leader unblocks all workers and errors
-/// cleanly. Result chunks streamed by fast ranks that are already past
-/// their last barrier are folded into the gather state rather than treated
-/// as a violation.
-fn wait_phases(
-    ep: &Endpoint,
-    p: usize,
-    phases: &[u8],
-    g: &mut Gather,
-) -> anyhow::Result<()> {
-    let mut left: BTreeMap<u8, BTreeSet<usize>> =
-        phases.iter().map(|&ph| (ph, (0..p).collect())).collect();
-    while left.values().any(|s| !s.is_empty()) {
-        match ep.recv_timeout(POLL) {
-            Some(env) => {
-                let rank = rank_of(env.from);
-                match env.msg {
-                    Message::PhaseDone { phase } => {
-                        if g.dead.contains_key(&rank) {
-                            continue; // straggler report sent before dying
-                        }
-                        let s = left
-                            .get_mut(&phase)
-                            .ok_or_else(|| anyhow::anyhow!("leader: unexpected phase {phase}"))?;
-                        anyhow::ensure!(
-                            s.remove(&rank),
-                            "leader: duplicate phase-{phase} report from rank {rank}"
-                        );
-                    }
-                    Message::ResultChunk { payload, tasks } => {
-                        g.on_chunk(ep, rank, payload, tasks)?;
-                    }
-                    Message::RecoveredResult { for_rank, task, payload } => {
-                        g.on_recovered(rank, for_rank, task, payload)?;
-                    }
-                    other => {
-                        abort(ep, p);
-                        anyhow::bail!("leader: unexpected {} during phase sync", other.kind());
-                    }
-                }
-            }
-            None => {
-                let awaited: Vec<usize> = left.values().flatten().copied().collect();
-                let dead = g.newly_dead(ep, awaited);
-                if !dead.is_empty() {
-                    g.handle_deaths(ep, dead.clone(), "completing a sync phase")?;
-                    for s in left.values_mut() {
-                        for d in &dead {
-                            s.remove(d);
-                        }
-                    }
+/// Deliver the failure injections. The engine validates the kill list (in
+/// range, no duplicate targets), so an injection send can only fail if the
+/// target somehow died first — a bug worth surfacing, not swallowing.
+fn inject_kills(ep: &Endpoint, kill: &[usize], kill_at: KillAt) {
+    for &k in kill {
+        if let Err(e) = ep.send(endpoint_of(k), Message::Crash { at: kill_at }) {
+            crate::log_warn!("leader: failure injection for rank {k} failed: {e}");
+            debug_assert!(false, "failure injection for rank {k} failed: {e}");
+        }
+    }
+}
+
+/// A rank's placed blocks ordered by the first owned task that needs them;
+/// blocks no task touches (pure standby replicas, only read by recovery
+/// work) stream last.
+fn need_order(
+    placed: &[(usize, Range<usize>)],
+    tasks: &[PairTask],
+) -> VecDeque<(usize, Range<usize>)> {
+    let held: BTreeMap<usize, Range<usize>> = placed.iter().cloned().collect();
+    let mut seen = BTreeSet::new();
+    let mut out = VecDeque::with_capacity(placed.len());
+    for t in tasks {
+        for b in [t.a, t.b] {
+            if let Some(r) = held.get(&b) {
+                if seen.insert(b) {
+                    out.push_back((b, r.clone()));
                 }
             }
         }
     }
-    Ok(())
+    for (b, r) in placed {
+        if seen.insert(*b) {
+            out.push_back((*b, r.clone()));
+        }
+    }
+    out
 }
 
 /// Unblock every worker (stuck receives get the Shutdown) before erroring.
 fn abort(ep: &Endpoint, p: usize) {
     for w in 0..p {
         let _ = ep.send(endpoint_of(w), Message::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn need_order_puts_first_task_inputs_first() {
+        let placed: Vec<(usize, Range<usize>)> =
+            vec![(0, 0..4), (1, 4..8), (3, 12..16), (5, 20..24)];
+        let tasks = vec![
+            PairTask { a: 3, b: 1 },
+            PairTask { a: 1, b: 1 },
+            PairTask { a: 0, b: 3 },
+        ];
+        let order: Vec<usize> = need_order(&placed, &tasks).into_iter().map(|(b, _)| b).collect();
+        // 3 and 1 are the first task's inputs; 0 joins at task 3; block 5
+        // (no task touches it — standby data) streams last.
+        assert_eq!(order, vec![3, 1, 0, 5]);
+    }
+
+    #[test]
+    fn need_order_ignores_tasks_outside_the_placement() {
+        // Defensive: a task referencing a block this rank does not hold
+        // (cannot happen for well-formed assignments) must not inject a
+        // bogus queue entry.
+        let placed: Vec<(usize, Range<usize>)> = vec![(2, 0..4)];
+        let tasks = vec![PairTask { a: 2, b: 7 }];
+        let order: Vec<usize> = need_order(&placed, &tasks).into_iter().map(|(b, _)| b).collect();
+        assert_eq!(order, vec![2]);
     }
 }

@@ -46,6 +46,42 @@ impl BlockData {
     }
 }
 
+/// One placed dataset block as shipped by the scatter (monolithic
+/// [`Message::AssignData`] or streamed [`Message::AssignBlock`]).
+///
+/// The `Arc` shares a single leader-side materialization across every
+/// replica owner of the block — the leader calls
+/// [`crate::coordinator::DistributedApp::make_block`] once per *block*, not
+/// once per (block, holder) pair. Exactly one delivery per block carries
+/// `first = true` and is accounted at full payload bytes; replica
+/// deliveries re-use the same buffer and cost only the control header, the
+/// way a zero-copy shared-memory scatter (or a bcast counted at its root)
+/// would. Worker-side *logical* memory accounting still charges every held
+/// replica in full ([`BlockData::nbytes`]), so the paper's memory-per-rank
+/// comparison is unaffected.
+#[derive(Clone, Debug)]
+pub struct PlacedBlock {
+    /// Dataset block id (= owning rank index).
+    pub block: usize,
+    /// Global element offset of the block's first element.
+    pub offset: usize,
+    pub data: Arc<BlockData>,
+    /// Whether this delivery is the one that carries the buffer.
+    pub first: bool,
+}
+
+impl PlacedBlock {
+    /// Wire bytes this delivery accounts for (replicas ride for the
+    /// header alone).
+    pub fn wire_bytes(&self) -> u64 {
+        if self.first {
+            self.data.nbytes()
+        } else {
+            0
+        }
+    }
+}
+
 /// Where failure injection kills a rank (`--kill-at`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KillAt {
@@ -215,13 +251,29 @@ impl Payload {
 
 #[derive(Debug)]
 pub enum Message {
-    /// Leader → worker: your quorum's dataset blocks.
-    /// `(block_id, global_element_offset, data)` per quorum member.
+    /// Leader → worker: your quorum's dataset blocks, as one monolithic
+    /// scatter message (`--scatter monolithic`). Block buffers are
+    /// Arc-shared across replica owners ([`PlacedBlock`]).
     AssignData {
         quorum: Vec<usize>,
-        blocks: Vec<(usize, usize, BlockData)>,
+        blocks: Vec<PlacedBlock>,
     },
-    /// Leader → worker: compute these block pairs.
+    /// Leader → worker: your task list *and* quorum, ahead of any block
+    /// data (streamed scatter). The worker may start a task the moment
+    /// that task's blocks have landed instead of waiting for the whole
+    /// quorum; [`Message::AssignBlock`] deliveries follow in
+    /// first-task-need order.
+    TasksAhead {
+        quorum: Vec<usize>,
+        tasks: Vec<PairTask>,
+    },
+    /// Leader → worker: one placed dataset block (streamed scatter).
+    /// Workers stash arrivals they do not need yet
+    /// (`WorkerCtx::ensure_blocks`); the stream is credit-paced by the
+    /// transport's per-(sender, destination) in-flight accounting.
+    AssignBlock(PlacedBlock),
+    /// Leader → worker: compute these block pairs (monolithic scatter —
+    /// the streamed path carries tasks in [`Message::TasksAhead`]).
     ComputeTasks { tasks: Vec<PairTask> },
     /// Worker → worker: app exchange traffic (tiles, ring rows, …).
     App(Payload),
@@ -265,8 +317,12 @@ impl Message {
     pub fn payload_bytes(&self) -> u64 {
         let body = match self {
             Message::AssignData { blocks, .. } => {
-                blocks.iter().map(|(_, _, d)| d.nbytes()).sum::<u64>()
+                blocks.iter().map(|pb| pb.wire_bytes()).sum::<u64>()
             }
+            Message::TasksAhead { quorum, tasks } => {
+                (quorum.len() * 8 + tasks.len() * 16) as u64
+            }
+            Message::AssignBlock(pb) => pb.wire_bytes(),
             Message::ComputeTasks { tasks } => (tasks.len() * 16) as u64,
             Message::App(p) | Message::Result(p) => p.nbytes(),
             Message::ResultChunk { payload, tasks } => payload.nbytes() + (tasks.len() * 16) as u64,
@@ -284,6 +340,8 @@ impl Message {
     pub fn kind(&self) -> &'static str {
         match self {
             Message::AssignData { .. } => "assign-data",
+            Message::TasksAhead { .. } => "tasks-ahead",
+            Message::AssignBlock(_) => "assign-block",
             Message::ComputeTasks { .. } => "compute-tasks",
             Message::App(p) => p.kind(),
             Message::Result(_) => "result",
@@ -386,6 +444,47 @@ mod tests {
             "recovered-result"
         );
         assert_eq!(Payload::Forces(vec![]).items(), 0);
+    }
+
+    #[test]
+    fn placed_block_accounting_shares_replicas() {
+        // The first delivery carries the buffer; replicas of the same Arc
+        // ride for the header alone — the accounting behind the
+        // "materialize each block once" scatter claim.
+        let data = Arc::new(BlockData::Rows(Matrix::zeros(4, 8)));
+        let first = PlacedBlock { block: 2, offset: 8, data: Arc::clone(&data), first: true };
+        let replica = PlacedBlock { block: 2, offset: 8, data, first: false };
+        assert_eq!(first.wire_bytes(), 4 * 8 * 4);
+        assert_eq!(replica.wire_bytes(), 0);
+        assert_eq!(
+            Message::AssignBlock(first).payload_bytes(),
+            HEADER_BYTES + 4 * 8 * 4
+        );
+        assert_eq!(Message::AssignBlock(replica).payload_bytes(), HEADER_BYTES);
+    }
+
+    #[test]
+    fn assign_data_counts_first_deliveries_only() {
+        let data = Arc::new(BlockData::Rows(Matrix::zeros(3, 4)));
+        let msg = Message::AssignData {
+            quorum: vec![0, 1],
+            blocks: vec![
+                PlacedBlock { block: 0, offset: 0, data: Arc::clone(&data), first: true },
+                PlacedBlock { block: 1, offset: 3, data, first: false },
+            ],
+        };
+        assert_eq!(msg.payload_bytes(), HEADER_BYTES + 3 * 4 * 4);
+        assert_eq!(msg.kind(), "assign-data");
+    }
+
+    #[test]
+    fn tasks_ahead_accounting_and_kind() {
+        let msg = Message::TasksAhead {
+            quorum: vec![0, 1, 2],
+            tasks: vec![PairTask { a: 0, b: 1 }; 5],
+        };
+        assert_eq!(msg.payload_bytes(), HEADER_BYTES + 3 * 8 + 5 * 16);
+        assert_eq!(msg.kind(), "tasks-ahead");
     }
 
     #[test]

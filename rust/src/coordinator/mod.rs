@@ -21,6 +21,17 @@
 //! shows up as `RankStats::recv_blocked_secs` shrinking (the
 //! `EngineReport::overlap_ratio` metric, `benches/overlap.rs`).
 //!
+//! Scatter modes (`--scatter {streamed,monolithic}`, env `QUORALL_SCATTER`):
+//! the monolithic scatter ships each worker its whole quorum as one
+//! `AssignData` before any task may start; the streamed scatter sends task
+//! lists up front (`TasksAhead`) and individual `AssignBlock`s in
+//! first-task-need order — each distinct block materialized **once** and
+//! Arc-shared across replica owners — so a worker starts its first task the
+//! moment that task's inputs land (`WorkerCtx::ensure_blocks`). Both modes
+//! are bitwise-identical in output; the win shows up as
+//! `EngineReport::{time_to_first_task_secs, scatter_blocked_secs}`
+//! shrinking (`benches/scatter.rs`).
+//!
 //! Fault tolerance (`--recover {on,off}`, `--kill`/`--kill-at` injection):
 //! the cyclic-quorum placement's r-fold data replication is operational,
 //! not just a locality trick. Resilient runs keep compute exactly-once
@@ -49,9 +60,10 @@ pub mod driver;
 
 pub use app::{DistributedApp, Plan, WorkerCtx};
 pub use driver::{
-    overlap_ratio, pipeline_default, run_app, run_distributed_pcit, run_resilient_pcit,
-    run_resilient_pcit_at, run_single_node, DistributedReport, EngineOptions, EngineReport,
-    RankStats,
+    overlap_ratio, pipeline_default, run_app, run_app_with_sink, run_distributed_pcit,
+    run_resilient_pcit, run_resilient_pcit_at, run_single_node, scatter_default,
+    time_to_first_task_secs, DistributedReport, EngineOptions, EngineReport, RankStats,
 };
-pub use messages::{BlockData, KillAt, Message, Payload};
+pub use leader::ResultSink;
+pub use messages::{BlockData, KillAt, Message, Payload, PlacedBlock};
 pub use transport::{endpoint_of, rank_of, Endpoint, Transport};

@@ -13,6 +13,15 @@
 //! overlap-ratio metric in `EngineReport`), and per-destination in-flight
 //! message counts bound how far ahead a pipelined sender may run
 //! ([`Endpoint::can_send_ahead`]).
+//!
+//! Scatter traffic rides the same per-(sender, destination) in-flight
+//! credit: the leader's streamed block scatter consults
+//! [`Endpoint::can_send_ahead`] before each `AssignBlock`, so a slow worker
+//! paces its own stream without starving anyone else's. Delivered scatter
+//! bytes (`AssignData` / `AssignBlock`) are additionally totalled in
+//! [`Transport::scatter_bytes`] — with Arc-shared block buffers each
+//! distinct block's payload counts once, which is what the `comm_volume`
+//! bench asserts against the per-replica model.
 
 use super::messages::Message;
 use crate::metrics::CommStats;
@@ -72,6 +81,8 @@ pub struct Transport {
     /// Send-ahead credit per (sender, destination) pair (see
     /// [`DEFAULT_SEND_AHEAD_CREDIT`]).
     credit: usize,
+    /// Delivered scatter bytes (`AssignData` / `AssignBlock` payloads).
+    scatter_bytes: AtomicU64,
 }
 
 impl Transport {
@@ -102,6 +113,7 @@ impl Transport {
             // credit 0 is honored: can_send_ahead is always false, giving
             // synchronous ordering even with pipelining requested.
             credit,
+            scatter_bytes: AtomicU64::new(0),
         });
         let endpoints = receivers
             .into_iter()
@@ -142,6 +154,9 @@ impl Transport {
             return Err(SendError::Killed(to));
         }
         self.recv_stats[to].record(bytes);
+        if matches!(msg, Message::AssignData { .. } | Message::AssignBlock(_)) {
+            self.scatter_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
         self.in_flight[from][to].fetch_add(1, Ordering::Relaxed);
         self.senders[to]
             .send(Envelope { from, to, msg })
@@ -149,6 +164,14 @@ impl Transport {
                 self.in_flight[from][to].fetch_sub(1, Ordering::Relaxed);
                 SendError::Disconnected(to)
             })
+    }
+
+    /// Total delivered scatter bytes (`AssignData` / `AssignBlock`,
+    /// headers included). With Arc-shared block buffers every distinct
+    /// block's payload is counted exactly once; replica deliveries add a
+    /// header each.
+    pub fn scatter_bytes(&self) -> u64 {
+        self.scatter_bytes.load(Ordering::Relaxed)
     }
 
     /// Total (messages, bytes) received across all ranks.
@@ -390,6 +413,36 @@ mod tests {
         e1.recv().unwrap();
         assert!(e1.blocked_secs() >= 0.010, "blocked {}", e1.blocked_secs());
         h.join().unwrap();
+    }
+
+    #[test]
+    fn scatter_bytes_counted_separately() {
+        use crate::coordinator::messages::{BlockData, PlacedBlock, HEADER_BYTES};
+        let (t, eps) = Transport::new(3);
+        assert_eq!(t.scatter_bytes(), 0);
+        let data = std::sync::Arc::new(BlockData::Rows(Matrix::zeros(2, 4)));
+        eps[0]
+            .send(
+                1,
+                Message::AssignBlock(PlacedBlock {
+                    block: 0,
+                    offset: 0,
+                    data: std::sync::Arc::clone(&data),
+                    first: true,
+                }),
+            )
+            .unwrap();
+        eps[0]
+            .send(
+                2,
+                Message::AssignBlock(PlacedBlock { block: 0, offset: 0, data, first: false }),
+            )
+            .unwrap();
+        // First delivery carries the buffer; the replica adds one header.
+        assert_eq!(t.scatter_bytes(), 2 * HEADER_BYTES + 2 * 4 * 4);
+        // Non-scatter traffic does not count.
+        eps[0].send(1, Message::Proceed).unwrap();
+        assert_eq!(t.scatter_bytes(), 2 * HEADER_BYTES + 2 * 4 * 4);
     }
 
     #[test]

@@ -1,16 +1,27 @@
-//! Generic worker rank: receives its quorum's blocks and owned tasks, hands
-//! control to the app plugin's protocol, reports result + stats, then keeps
-//! serving late task grants ([`Message::Reassign`] — mid-run recovery work
-//! on behalf of dead ranks) until shutdown. All app-specific compute lives
-//! in the [`DistributedApp`] implementation (PCIT, similarity, n-body).
+//! Generic worker rank: learns its quorum + owned tasks, hands control to
+//! the app plugin's protocol, reports result + stats, then keeps serving
+//! late task grants ([`Message::Reassign`] — mid-run recovery work on
+//! behalf of dead ranks) until shutdown. All app-specific compute lives in
+//! the [`DistributedApp`] implementation (PCIT, similarity, n-body).
+//!
+//! Phase 0 tolerates every scatter shape: the monolithic path delivers one
+//! `AssignData` followed by `ComputeTasks`; the streamed path delivers
+//! `TasksAhead` (task list + quorum, ending phase 0 immediately) with
+//! `AssignBlock`s trickling in afterwards — in *any* interleaving with app
+//! traffic, crash injection, and recovery grants. Blocks that have not
+//! landed yet are awaited lazily at first use ([`WorkerCtx::begin_task`] /
+//! [`WorkerCtx::ensure_blocks`]), which is what lets a worker start its
+//! first task the moment that task's inputs arrive instead of idling
+//! through the whole scatter.
 
-use super::app::{DistributedApp, Plan, WorkerCtx};
+use super::app::{stash_block, DistributedApp, Plan, WorkerCtx};
 use super::messages::{KillAt, Message};
 use super::transport::{rank_of, Endpoint};
 use crate::allpairs::PairTask;
 use crate::metrics::MemoryAccountant;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Worker entry point. `endpoint.rank` = `endpoint_of(block_id)` (leader
 /// owns endpoint 0).
@@ -37,19 +48,30 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
     let mut blocks = BTreeMap::new();
     let mut quorum = Vec::new();
     let mut pending = VecDeque::new();
+    let mut pending_reassign = VecDeque::new();
     let mut kill_at = None;
+    let mut scatter_wait = 0.0f64;
 
-    // ---- Phase 0: receive quorum data + task list. ----
+    // ---- Phase 0: learn quorum + task list (stash everything else). ----
     let tasks = loop {
-        let Some(env) = endpoint.recv() else { return };
+        let sw = Instant::now();
+        let env = endpoint.recv();
+        scatter_wait += sw.elapsed().as_secs_f64();
+        let Some(env) = env else { return };
         match env.msg {
             Message::AssignData { quorum: q, blocks: bs } => {
-                for (bid, off, data) in bs {
-                    mem.alloc(data.nbytes());
-                    blocks.insert(bid, (off, data));
+                for pb in bs {
+                    stash_block(&mut blocks, &mem, pb);
                 }
                 quorum = q;
             }
+            // Streamed scatter: tasks + quorum arrive ahead of any data;
+            // phase 0 ends here and blocks are awaited at first use.
+            Message::TasksAhead { quorum: q, tasks } => {
+                quorum = q;
+                break tasks;
+            }
+            Message::AssignBlock(pb) => stash_block(&mut blocks, &mem, pb),
             Message::ComputeTasks { tasks } => break tasks,
             Message::Crash { at } => match at {
                 // Scatter-phase injection dies on delivery, before any
@@ -66,6 +88,11 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
             Message::Shutdown => return,
             // A fast peer's app traffic can outrun the leader's tasks.
             Message::App(p) => pending.push_back(p),
+            // A mid-run death elsewhere can hand us recovery work before
+            // our own tasks arrive; honored after our result is reported.
+            Message::Reassign { for_rank, tasks } => {
+                pending_reassign.push_back((for_rank, tasks));
+            }
             other => panic!("worker {my_block}: unexpected {} in phase 0", other.kind()),
         }
     };
@@ -85,7 +112,9 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         dead: false,
         task_tags: Vec::new(),
         completed_tasks: 0,
-        pending_reassign: VecDeque::new(),
+        pending_reassign,
+        scatter_blocked_secs: scatter_wait,
+        time_to_first_task: None,
         corr_tiles: 0,
         elim_tiles: 0,
         phase1_secs: 0.0,
@@ -126,6 +155,8 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         phase1_secs: ctx.phase1_secs,
         phase2_secs: ctx.phase2_secs,
         recv_blocked_secs: ctx.ep.blocked_secs(),
+        scatter_blocked_secs: ctx.scatter_blocked_secs,
+        time_to_first_task_secs: ctx.time_to_first_task.unwrap_or(0.0),
         n_items: ctx.streamed_items + result.items(),
     };
     let _ = ctx.ep.send(0, Message::Result(result));
@@ -134,7 +165,9 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
     // ---- Serve recovery work, drain until shutdown. ----
     // Grants stashed mid-protocol first (arrival order), then the wire.
     while let Some((for_rank, tasks)) = ctx.pending_reassign.pop_front() {
-        recover_tasks(app.as_ref(), &mut ctx, for_rank, tasks);
+        if !recover_tasks(app.as_ref(), &mut ctx, for_rank, tasks) {
+            return;
+        }
     }
     loop {
         match ctx.ep.recv() {
@@ -146,8 +179,13 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
                     return;
                 }
                 Message::App(_) => continue, // late exchange traffic
+                // Trailing streamed blocks (standby data this rank's own
+                // tasks never touched) — kept resident for recovery work.
+                Message::AssignBlock(pb) => ctx.insert_block(pb),
                 Message::Reassign { for_rank, tasks } => {
-                    recover_tasks(app.as_ref(), &mut ctx, for_rank, tasks);
+                    if !recover_tasks(app.as_ref(), &mut ctx, for_rank, tasks) {
+                        return;
+                    }
                 }
                 other => panic!(
                     "worker {}: unexpected {} after finish",
@@ -161,15 +199,185 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
 
 /// Execute a late task grant: recompute each task on behalf of the dead
 /// rank and ship per-task results so the leader can splice them into the
-/// dead rank's payload at their original positions.
+/// dead rank's payload at their original positions. Under the streamed
+/// scatter the needed blocks may still be in flight — await them first.
+/// Returns false when shutdown arrived mid-grant (the worker exits).
 fn recover_tasks(
     app: &dyn DistributedApp,
     ctx: &mut WorkerCtx,
     for_rank: usize,
     tasks: Vec<PairTask>,
-) {
+) -> bool {
     for task in tasks {
+        if !ctx.ensure_blocks(&[task.a, task.b]) {
+            return false;
+        }
         let payload = app.run_recovery_task(ctx, task);
         let _ = ctx.ep.send(0, Message::RecoveredResult { for_rank, task, payload });
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::{BlockData, Payload, PlacedBlock};
+    use crate::coordinator::transport::{endpoint_of, Transport};
+    use crate::util::Matrix;
+
+    /// Toy task-granular app: each task's "result" is the sum of the first
+    /// element of its two blocks — enough to prove which blocks were
+    /// resident when the task ran.
+    struct SumApp;
+
+    impl DistributedApp for SumApp {
+        fn name(&self) -> &'static str {
+            "sum"
+        }
+
+        fn elements(&self) -> usize {
+            4
+        }
+
+        fn make_block(&self, range: std::ops::Range<usize>) -> BlockData {
+            BlockData::Rows(Matrix::from_fn(range.len(), 1, |r, _| (range.start + r) as f32))
+        }
+
+        fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+            let tasks = std::mem::take(&mut ctx.tasks);
+            let mut edges = Vec::new();
+            for t in &tasks {
+                if !ctx.begin_task(t) {
+                    return None;
+                }
+                let a = ctx.block_rows(t.a)[(0, 0)];
+                let b = ctx.block_rows(t.b)[(0, 0)];
+                edges.push((t.a, t.b, a + b));
+                ctx.complete_task(*t);
+            }
+            Some(Payload::Edges(edges))
+        }
+    }
+
+    fn placed(block: usize, value: f32, first: bool) -> PlacedBlock {
+        PlacedBlock {
+            block,
+            offset: block * 2,
+            data: Arc::new(BlockData::Rows(Matrix::from_fn(2, 1, |_, _| value))),
+            first,
+        }
+    }
+
+    fn plan(streamed: bool) -> Plan {
+        Plan {
+            n: 4,
+            p: 2,
+            block: 2,
+            pipeline: false,
+            streamed_scatter: streamed,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Drive a full worker through phase 0 + SumApp with the given leader
+    /// message sequence; returns the worker's Result edges.
+    fn drive(streamed: bool, msgs: Vec<Message>) -> Vec<(usize, usize, f32)> {
+        let (_t, mut eps) = Transport::new(2);
+        let worker_ep = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let h =
+            std::thread::spawn(move || worker_main(worker_ep, Arc::new(SumApp), plan(streamed)));
+        for m in msgs {
+            leader.send(endpoint_of(0), m).unwrap();
+        }
+        let mut edges = None;
+        for _ in 0..2 {
+            match leader.recv().expect("worker must report").msg {
+                Message::Result(Payload::Edges(e)) => edges = Some(e),
+                Message::Stats(_) => {}
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        leader.send(endpoint_of(0), Message::Shutdown).unwrap();
+        h.join().unwrap();
+        edges.expect("result seen")
+    }
+
+    #[test]
+    fn streamed_phase0_tolerates_blocks_before_tasks_ahead() {
+        // Adversarial interleaving: both blocks land before TasksAhead.
+        // Phase 0 must stash them and still break on the task list.
+        let edges = drive(
+            true,
+            vec![
+                Message::AssignBlock(placed(0, 1.0, true)),
+                Message::AssignBlock(placed(1, 2.0, true)),
+                Message::TasksAhead {
+                    quorum: vec![0, 1],
+                    tasks: vec![PairTask { a: 0, b: 1 }],
+                },
+            ],
+        );
+        assert_eq!(edges, vec![(0, 1, 3.0)]);
+    }
+
+    #[test]
+    fn streamed_blocks_after_tasks_ahead_are_awaited() {
+        // The real streamed flow: tasks first, blocks trickle in ordered
+        // by first-task need. begin_task must wait for exactly the blocks
+        // the next task touches.
+        let edges = drive(
+            true,
+            vec![
+                Message::TasksAhead {
+                    quorum: vec![0, 1],
+                    tasks: vec![PairTask { a: 1, b: 1 }, PairTask { a: 0, b: 1 }],
+                },
+                Message::AssignBlock(placed(1, 5.0, true)),
+                Message::AssignBlock(placed(0, 3.0, true)),
+            ],
+        );
+        assert_eq!(edges, vec![(1, 1, 10.0), (0, 1, 8.0)]);
+    }
+
+    #[test]
+    fn assign_blocks_interleave_with_compute_tasks() {
+        // Out-of-order AssignBlock/ComputeTasks interleaving: granular
+        // blocks paired with the monolithic task terminator (block,
+        // tasks, block) must work — the stash does not care which scatter
+        // shape produced the messages.
+        let edges = drive(
+            false,
+            vec![
+                Message::AssignBlock(placed(0, 4.0, true)),
+                Message::ComputeTasks { tasks: vec![PairTask { a: 0, b: 1 }] },
+                Message::AssignBlock(placed(1, 6.0, true)),
+            ],
+        );
+        assert_eq!(edges, vec![(0, 1, 10.0)]);
+    }
+
+    #[test]
+    fn streamed_scatter_kill_dies_without_reporting() {
+        // Crash{Scatter} riding between TasksAhead and the blocks must
+        // kill the rank from inside the block wait: no Result, killed
+        // flag set.
+        let (_t, mut eps) = Transport::new(2);
+        let worker_ep = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let h = std::thread::spawn(move || worker_main(worker_ep, Arc::new(SumApp), plan(true)));
+        leader
+            .send(
+                endpoint_of(0),
+                Message::TasksAhead { quorum: vec![0, 1], tasks: vec![PairTask { a: 0, b: 1 }] },
+            )
+            .unwrap();
+        leader.send(endpoint_of(0), Message::Crash { at: KillAt::Scatter }).unwrap();
+        h.join().unwrap();
+        assert!(leader.transport().is_killed(endpoint_of(0)));
+        assert!(
+            leader.recv_timeout(std::time::Duration::from_millis(50)).is_none(),
+            "a scatter-killed rank must not report"
+        );
     }
 }

@@ -40,6 +40,7 @@ fn app() -> App {
                 .arg(ArgSpec::opt("mode", "single | quorum-exact | quorum-local", "quorum-exact"))
                 .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
                 .arg(ArgSpec::opt("pipeline", "overlap compute with ring exchange: on | off", ""))
+                .arg(ArgSpec::opt("scatter", "block scatter: streamed | monolithic", ""))
                 .arg(ArgSpec::opt("redundancy", "owners per pair (r-fold placement)", ""))
                 .arg(ArgSpec::opt("kill", "failure injection: ranks to crash, e.g. 4 or 2,5", ""))
                 .arg(ArgSpec::opt("kill-at", "injection phase: scatter | compute:<k> | gather", ""))
@@ -57,6 +58,7 @@ fn app() -> App {
                 .arg(ArgSpec::opt("ranks", "simulated ranks", "8"))
                 .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
                 .arg(ArgSpec::opt("pipeline", "overlap compute with result gather: on | off", ""))
+                .arg(ArgSpec::opt("scatter", "block scatter: streamed | monolithic", ""))
                 .arg(ArgSpec::opt("redundancy", "owners per pair (r-fold placement)", ""))
                 .arg(ArgSpec::opt("kill", "failure injection: ranks to crash, e.g. 4 or 2,5", ""))
                 .arg(ArgSpec::opt("kill-at", "injection phase: scatter | compute:<k> | gather", ""))
@@ -71,6 +73,7 @@ fn app() -> App {
                 .arg(ArgSpec::opt("ranks", "simulated ranks", "8"))
                 .arg(ArgSpec::opt("strategy", "placement: cyclic | grid | full", "cyclic"))
                 .arg(ArgSpec::opt("pipeline", "overlap compute with result gather: on | off", ""))
+                .arg(ArgSpec::opt("scatter", "block scatter: streamed | monolithic", ""))
                 .arg(ArgSpec::opt("redundancy", "owners per pair (r-fold placement)", ""))
                 .arg(ArgSpec::opt("kill", "failure injection: ranks to crash, e.g. 4 or 2,5", ""))
                 .arg(ArgSpec::opt("kill-at", "injection phase: scatter | compute:<k> | gather", ""))
@@ -184,6 +187,17 @@ fn parse_pipeline_flag(p: &Parsed) -> anyhow::Result<Option<bool>> {
         s => quorall::config::parse_pipeline(s)
             .map(Some)
             .ok_or_else(|| anyhow::anyhow!("bad --pipeline: {s} (on | off)")),
+    }
+}
+
+/// `--scatter` tri-state: `""` inherits the config / `QUORALL_SCATTER`
+/// default, `streamed`/`monolithic` are explicit.
+fn parse_scatter_flag(p: &Parsed) -> anyhow::Result<Option<bool>> {
+    match p.get_str("scatter").unwrap_or("") {
+        "" => Ok(None),
+        s => quorall::config::parse_scatter(s)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("bad --scatter: {s} (streamed | monolithic)")),
     }
 }
 
@@ -308,6 +322,9 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
     if let Some(b) = parse_pipeline_flag(p)? {
         cfg.pipeline = b;
     }
+    if let Some(b) = parse_scatter_flag(p)? {
+        cfg.streamed_scatter = b;
+    }
     parse_resilience_flags(p)?.apply_to_cfg(&mut cfg);
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
@@ -333,12 +350,13 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
         load_dataset(p)?
     };
     println!(
-        "PCIT: N = {} genes, M = {} samples, mode = {}, strategy = {}, pipeline = {}, backend = {}, ranks = {}",
+        "PCIT: N = {} genes, M = {} samples, mode = {}, strategy = {}, pipeline = {}, scatter = {}, backend = {}, ranks = {}",
         dataset.genes(),
         dataset.samples(),
         cfg.mode.name(),
         cfg.strategy.name(),
         if cfg.pipeline { "on" } else { "off" },
+        if cfg.streamed_scatter { "streamed" } else { "monolithic" },
         cfg.backend.name(),
         cfg.ranks
     );
@@ -373,14 +391,16 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
         );
     }
     println!(
-        "distributed: {} edges in {} | k = {} | peak mem/rank {} | comm {} | blocked-recv {} (overlap {:.1}%)",
+        "distributed: {} edges in {} | k = {} | peak mem/rank {} | comm {} (scatter {}) | blocked-recv {} (overlap {:.1}%) | first task at {}",
         rep.network.n_edges(),
         format_secs(rep.wall_secs),
         rep.quorum_size,
         format_bytes(rep.peak_bytes_per_rank),
         format_bytes(rep.total_comm_bytes),
+        format_bytes(rep.scatter_comm_bytes),
         format_secs(rep.recv_blocked_secs),
-        100.0 * rep.overlap_ratio
+        100.0 * rep.overlap_ratio,
+        format_secs(rep.time_to_first_task_secs)
     );
     let mut t = Table::new("per-rank stats", &["rank", "corr_tiles", "elim_tiles", "peak_mem", "sent", "recv"]);
     for s in &rep.stats {
@@ -437,11 +457,15 @@ fn cmd_similarity(p: &Parsed) -> anyhow::Result<()> {
     if let Some(b) = parse_pipeline_flag(p)? {
         opts.pipeline = b;
     }
+    if let Some(b) = parse_scatter_flag(p)? {
+        opts.streamed_scatter = b;
+    }
     parse_resilience_flags(p)?.apply_to_opts(&mut opts);
     println!(
-        "similarity: N = {n} × dim = {dim}, strategy = {}, pipeline = {}, ranks = {ranks}, backend = {}",
+        "similarity: N = {n} × dim = {dim}, strategy = {}, pipeline = {}, scatter = {}, ranks = {ranks}, backend = {}",
         strategy.name(),
         if opts.pipeline { "on" } else { "off" },
+        if opts.streamed_scatter { "streamed" } else { "monolithic" },
         exec.name()
     );
     let (sim, rep) = run_distributed_similarity(&features, &exec, &opts)?;
@@ -486,6 +510,9 @@ fn cmd_nbody(p: &Parsed) -> anyhow::Result<()> {
     let mut opts = EngineOptions::new(ranks, strategy);
     if let Some(b) = parse_pipeline_flag(p)? {
         opts.pipeline = b;
+    }
+    if let Some(b) = parse_scatter_flag(p)? {
+        opts.streamed_scatter = b;
     }
     parse_resilience_flags(p)?.apply_to_opts(&mut opts);
     let (forces, rep) = nbody::run_distributed_nbody(&bodies, &opts)?;

@@ -69,6 +69,33 @@ fn pcit_pipeline_flag_verifies_identical() {
 }
 
 #[test]
+fn pcit_scatter_flag_verifies_identical() {
+    let out = quorall()
+        .args([
+            "pcit", "--ranks", "4", "--genes", "96", "--samples", "20", "--scatter", "streamed",
+            "--verify",
+        ])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {text}\nstderr: {err}");
+    assert!(text.contains("scatter = streamed"), "{text}");
+    assert!(text.contains("first task at"), "{text}");
+    assert!(text.contains("IDENTICAL"), "{text}");
+}
+
+#[test]
+fn pcit_rejects_bad_scatter_value() {
+    let out = quorall()
+        .args(["pcit", "--ranks", "4", "--genes", "64", "--scatter", "sideways"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bad --scatter"));
+}
+
+#[test]
 fn pcit_recovers_from_mid_run_kill() {
     // Quorum-local threshold run with r = 2, rank 4 killed after its first
     // task: the leader must re-assign the orphans and finish cleanly.

@@ -325,6 +325,126 @@ fn streaming_before_a_barrier_is_folded_not_fatal() {
     }
 }
 
+// ---- Streamed scatter: bitwise parity with the monolithic path ----
+
+#[test]
+fn streamed_scatter_bitwise_identical_to_monolithic() {
+    // All three apps × every strategy × both transports at P = 8: the
+    // dependency-driven eager start must never change a single bit — the
+    // per-task compute sequence is identical, only the idle window before
+    // it shrinks.
+    let d = dataset(96);
+    let mut rng = Rng::new(29);
+    let f = Matrix::from_fn(60, 16, |_, _| rng.normal_f32());
+    let b = Bodies::random(60, 7);
+    let e = exec();
+    for strategy in Strategy::all() {
+        for pipeline in [false, true] {
+            // PCIT quorum-exact: identical surviving edge set.
+            let mut nets = Vec::new();
+            for streamed in [false, true] {
+                let cfg = RunConfig {
+                    ranks: 8,
+                    mode: PcitMode::QuorumExact,
+                    strategy,
+                    pipeline,
+                    streamed_scatter: streamed,
+                    ..RunConfig::default()
+                };
+                nets.push(run_distributed_pcit(&cfg, &d, exec()).unwrap().network);
+            }
+            assert_eq!(
+                nets[0].edges,
+                nets[1].edges,
+                "strategy {} pipeline {pipeline}: streamed-scatter PCIT differs",
+                strategy.name()
+            );
+
+            // Similarity: bitwise matrix parity + sane scatter metrics.
+            let mut sims = Vec::new();
+            for streamed in [false, true] {
+                let mut opts = EngineOptions::new(8, strategy);
+                opts.pipeline = pipeline;
+                opts.streamed_scatter = streamed;
+                let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+                assert!(rep.scatter_comm_bytes > 0);
+                assert!(rep.scatter_blocked_secs >= 0.0);
+                assert!(
+                    rep.time_to_first_task_secs.is_finite()
+                        && rep.time_to_first_task_secs >= 0.0
+                );
+                sims.push(sim);
+            }
+            assert_eq!(
+                sims[0].as_slice(),
+                sims[1].as_slice(),
+                "strategy {} pipeline {pipeline}: streamed-scatter similarity differs",
+                strategy.name()
+            );
+
+            // N-body: bitwise force parity (f64 reduce order preserved).
+            let mut forces = Vec::new();
+            for streamed in [false, true] {
+                let mut opts = EngineOptions::new(8, strategy);
+                opts.pipeline = pipeline;
+                opts.streamed_scatter = streamed;
+                forces.push(run_distributed_nbody(&b, &opts).unwrap().0);
+            }
+            for i in 0..b.n {
+                assert_eq!(
+                    forces[0][i],
+                    forces[1][i],
+                    "strategy {} pipeline {pipeline} body {i}: streamed-scatter forces differ",
+                    strategy.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_scatter_full_local_pcit_awaits_the_panel() {
+    // Full-PCIT quorum-local mode scans the rank's entire quorum panel per
+    // task, so under the streamed scatter the first task must wait for the
+    // whole placement (WorkerCtx::ensure_blocks on the panel) — and the
+    // resulting network must match the monolithic run exactly (panel =
+    // owner's quorum, independent of how the blocks arrived).
+    let d = dataset(80);
+    let mut nets = Vec::new();
+    for streamed in [false, true] {
+        let cfg = RunConfig {
+            ranks: 8,
+            mode: PcitMode::QuorumLocal,
+            streamed_scatter: streamed,
+            use_pcit_significance: true,
+            ..RunConfig::default()
+        };
+        nets.push(run_distributed_pcit(&cfg, &d, exec()).unwrap().network);
+    }
+    assert_eq!(nets[0].edges, nets[1].edges, "quorum-local full PCIT differs across scatter modes");
+}
+
+#[test]
+fn streamed_scatter_parity_survives_credit_starvation() {
+    // Credit 1 throttles the leader's block stream to one in-flight
+    // message per worker — the slowest possible streamed scatter must
+    // still deliver everything and stay bitwise-identical.
+    let mut rng = Rng::new(31);
+    let f = Matrix::from_fn(50, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    let base = {
+        let mut opts = EngineOptions::new(8, Strategy::Cyclic);
+        opts.streamed_scatter = false;
+        run_distributed_similarity(&f, &e, &opts).unwrap().0
+    };
+    let mut opts = EngineOptions::new(8, Strategy::Cyclic);
+    opts.streamed_scatter = true;
+    opts.pipeline = true;
+    opts.send_ahead_credit = 1;
+    let (starved, _) = run_distributed_similarity(&f, &e, &opts).unwrap();
+    assert_eq!(base.as_slice(), starved.as_slice());
+}
+
 // ---- Failure injection: clean errors, no hangs ----
 
 fn pcit_app(d: &ExpressionDataset, mode: DistMode) -> Arc<PcitApp> {

@@ -162,6 +162,118 @@ fn pcit_recovery_bitwise_identical() {
     }
 }
 
+// ---- Streamed scatter: the kill matrix must stay bitwise identical ----
+
+#[test]
+fn streamed_scatter_similarity_recovery_bitwise_identical() {
+    // Under the streamed scatter a `--kill-at scatter` death strikes while
+    // blocks are still in flight; the leader masks it by re-assigning the
+    // victim's tasks to backup owners whose own block streams already
+    // carry everything needed — no re-streaming, and the matrix must stay
+    // bitwise identical to the failure-free *monolithic* run (one compare
+    // covers both scatter-mode parity and recovery parity).
+    let mut rng = Rng::new(5);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    let (base, _) = run_distributed_similarity(&f, &e, &{
+        let mut o = recovery_opts(Strategy::Cyclic, false);
+        o.streamed_scatter = false;
+        o
+    })
+    .unwrap();
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            for kill_at in KILL_PHASES {
+                let mut opts = recovery_opts(strategy, pipeline);
+                opts.streamed_scatter = true;
+                opts.kill = vec![VICTIM];
+                opts.kill_at = kill_at;
+                let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+                assert_eq!(
+                    sim.as_slice(),
+                    base.as_slice(),
+                    "strategy {} pipeline {pipeline} kill_at {}: streamed-scatter recovered matrix differs",
+                    strategy.name(),
+                    kill_at.name()
+                );
+                assert_eq!(rep.dead_ranks, vec![VICTIM]);
+                assert_eq!(rep.stats.len(), P - 1, "dead rank must not report stats");
+                // A delivery lost to the freshly-killed victim must not eat
+                // a block's one-time payload accounting: every one of the
+                // N×dim f32s still ships (with its `first` flag) to some
+                // surviving replica.
+                assert!(
+                    rep.scatter_comm_bytes >= (54 * 12 * 4) as u64,
+                    "kill_at {}: scatter bytes {} lost a block's payload",
+                    kill_at.name(),
+                    rep.scatter_comm_bytes
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_scatter_pcit_recovery_bitwise_identical() {
+    // Same matrix for threshold-mode quorum-local PCIT, against the
+    // failure-free monolithic network.
+    let d = dataset(90);
+    let mut base_cfg = pcit_cfg(Strategy::Cyclic, false);
+    base_cfg.streamed_scatter = false;
+    let base = run_resilient_pcit_at(&base_cfg, &d, exec(), 2, &[], KillAt::Scatter).unwrap();
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            let mut cfg = pcit_cfg(strategy, pipeline);
+            cfg.streamed_scatter = true;
+            for kill_at in KILL_PHASES {
+                let rep =
+                    run_resilient_pcit_at(&cfg, &d, exec(), 2, &[VICTIM], kill_at).unwrap();
+                assert_eq!(
+                    rep.network.edges,
+                    base.network.edges,
+                    "strategy {} pipeline {pipeline} kill_at {}: streamed-scatter recovered network differs",
+                    strategy.name(),
+                    kill_at.name()
+                );
+                assert_eq!(rep.dead_ranks, vec![VICTIM]);
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_scatter_nbody_scatter_kill_bitwise_identical() {
+    // F64 reduce order must survive a scatter-phase death under the
+    // streamed scatter (the recovered partials splice in the dead rank's
+    // original task order).
+    let b = Bodies::random(54, 7);
+    let (base, _) = run_distributed_nbody(&b, &{
+        let mut o = recovery_opts(Strategy::Cyclic, false);
+        o.streamed_scatter = false;
+        o
+    })
+    .unwrap();
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            let mut opts = recovery_opts(strategy, pipeline);
+            opts.streamed_scatter = true;
+            opts.kill = vec![VICTIM];
+            opts.kill_at = KillAt::Scatter;
+            let (forces, rep) = run_distributed_nbody(&b, &opts).unwrap();
+            for i in 0..b.n {
+                assert_eq!(
+                    forces[i],
+                    base[i],
+                    "strategy {} pipeline {pipeline} body {i}: streamed-scatter recovered forces differ",
+                    strategy.name()
+                );
+            }
+            assert_eq!(rep.dead_ranks, vec![VICTIM]);
+            assert!(rep.recovered_tasks > 0, "scatter kill loses every task");
+        }
+    }
+}
+
 // ---- Mid-compute kill orphans only the unreported suffix (pipelined) ----
 
 #[test]
@@ -269,7 +381,7 @@ impl DistributedApp for PhasedApp {
         let tasks = std::mem::take(&mut ctx.tasks);
         let mut edges = Vec::new();
         for t in &tasks {
-            if !ctx.begin_task() {
+            if !ctx.begin_task(t) {
                 return None;
             }
             edges.push((t.a, t.b, 1.0f32));
