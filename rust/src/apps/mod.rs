@@ -6,9 +6,106 @@
 //! (biometric all-pairs similarity, §1 [2]) and [`nbody`] (molecular-
 //! dynamics-style force accumulation, §1). All three run under any
 //! placement strategy (`--strategy {cyclic,grid,full}`).
+//!
+//! [`app_from_spec`] is the process-mode half of the plugin contract: the
+//! TCP launcher ships each worker process an opaque
+//! [`crate::coordinator::DistributedApp::worker_spec`] blob in its join
+//! Welcome, and `quorall worker --join ...` rebuilds the worker-side app
+//! from it here. Worker-side instances carry no dataset — blocks arrive
+//! through the scatter — so only the compute knobs are encoded.
 
 pub mod nbody;
 pub mod pcit;
 pub mod similarity;
 
 pub use pcit::{DistMode, PcitApp};
+
+use crate::coordinator::DistributedApp;
+use crate::runtime::NativeBackend;
+use crate::util::Matrix;
+use std::sync::Arc;
+
+/// Worker-spec app tags (`spec[0]`).
+pub(crate) const SPEC_PCIT: u8 = 0;
+pub(crate) const SPEC_SIMILARITY: u8 = 1;
+pub(crate) const SPEC_NBODY: u8 = 2;
+/// Worker-spec executor tags (`spec[1]`). Only the native backend is
+/// spec-encodable: the XLA backend needs an artifacts directory the spec
+/// deliberately does not carry, so XLA runs stay in thread mode.
+pub(crate) const EXEC_NATIVE: u8 = 0;
+
+/// Executor tag for a [`crate::runtime::TileExecutor::name`], or `None`
+/// when the backend cannot be rebuilt from a spec (disables process mode).
+pub(crate) fn exec_spec_tag(name: &str) -> Option<u8> {
+    (name == "native").then_some(EXEC_NATIVE)
+}
+
+/// Rebuild a worker-side app from a
+/// [`crate::coordinator::DistributedApp::worker_spec`] blob. Leader-only
+/// methods (`elements`, `make_block`) must not be called on the returned
+/// instance — the worker protocol never does.
+pub fn app_from_spec(spec: &[u8]) -> anyhow::Result<Arc<dyn DistributedApp>> {
+    anyhow::ensure!(spec.len() >= 2, "worker spec too short ({} bytes)", spec.len());
+    let exec: crate::runtime::Executor = match spec[1] {
+        EXEC_NATIVE => Arc::new(NativeBackend::new()),
+        t => anyhow::bail!("worker spec: unknown executor tag {t}"),
+    };
+    match spec[0] {
+        SPEC_PCIT => {
+            anyhow::ensure!(
+                spec.len() == 8,
+                "pcit worker spec must be 8 bytes, got {}",
+                spec.len()
+            );
+            let mode = match spec[2] {
+                0 => DistMode::Exact,
+                1 => DistMode::Local,
+                t => anyhow::bail!("worker spec: unknown pcit mode tag {t}"),
+            };
+            let use_pcit = spec[3] != 0;
+            let threshold =
+                f32::from_bits(u32::from_le_bytes([spec[4], spec[5], spec[6], spec[7]]));
+            Ok(Arc::new(PcitApp::new(Matrix::zeros(0, 0), exec, mode, use_pcit, threshold)))
+        }
+        SPEC_SIMILARITY => {
+            anyhow::ensure!(spec.len() == 2, "similarity worker spec must be 2 bytes");
+            Ok(Arc::new(similarity::SimilarityApp::new(&Matrix::zeros(0, 0), exec)))
+        }
+        SPEC_NBODY => {
+            anyhow::ensure!(spec.len() == 2, "nbody worker spec must be 2 bytes");
+            let empty = nbody::Bodies { n: 0, mass: Vec::new(), pos: Vec::new(), vel: Vec::new() };
+            Ok(Arc::new(nbody::NbodyApp::new(&empty)))
+        }
+        t => anyhow::bail!("worker spec: unknown app tag {t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_round_trip_through_the_registry() {
+        let exec: crate::runtime::Executor = Arc::new(NativeBackend::new());
+        let pcit =
+            PcitApp::new(Matrix::zeros(4, 4), Arc::clone(&exec), DistMode::Local, false, 0.625);
+        let spec = pcit.worker_spec().expect("native pcit is spec-encodable");
+        assert_eq!(app_from_spec(&spec).unwrap().name(), "pcit");
+
+        let sim = similarity::SimilarityApp::new(&Matrix::zeros(3, 3), Arc::clone(&exec));
+        let spec = sim.worker_spec().expect("native similarity is spec-encodable");
+        assert_eq!(app_from_spec(&spec).unwrap().name(), "similarity");
+
+        let nb = nbody::NbodyApp::new(&nbody::Bodies::random(5, 1));
+        let spec = nb.worker_spec().expect("nbody is spec-encodable");
+        assert_eq!(app_from_spec(&spec).unwrap().name(), "nbody");
+    }
+
+    #[test]
+    fn garbage_specs_are_rejected() {
+        assert!(app_from_spec(&[]).is_err());
+        assert!(app_from_spec(&[9, 0]).is_err());
+        assert!(app_from_spec(&[SPEC_PCIT, 7, 0, 0, 0, 0, 0, 0]).is_err());
+        assert!(app_from_spec(&[SPEC_PCIT, 0]).is_err());
+    }
+}

@@ -278,6 +278,11 @@ impl DistributedApp for NbodyApp {
         ctx.phase1_secs = sw.elapsed_secs();
         Some(Payload::Forces(partials))
     }
+
+    fn worker_spec(&self) -> Option<Vec<u8>> {
+        // Workers need nothing beyond the blocks the scatter delivers.
+        Some(vec![crate::apps::SPEC_NBODY, crate::apps::EXEC_NATIVE])
+    }
 }
 
 /// One owned task's partial forces — `(block offset, forces)` for both

@@ -451,6 +451,20 @@ impl DistributedApp for PcitApp {
             DistMode::Local => self.run_local(ctx),
         }
     }
+
+    fn worker_spec(&self) -> Option<Vec<u8>> {
+        // Workers rebuild from the compute knobs only: the standardized
+        // matrix stays leader-side (blocks arrive through the scatter).
+        let exec = crate::apps::exec_spec_tag(self.exec.name())?;
+        let mut out = vec![crate::apps::SPEC_PCIT, exec];
+        out.push(match self.mode {
+            DistMode::Exact => 0,
+            DistMode::Local => 1,
+        });
+        out.push(self.use_pcit as u8);
+        out.extend_from_slice(&self.threshold.to_bits().to_le_bytes());
+        Some(out)
+    }
 }
 
 #[cfg(test)]

@@ -194,6 +194,13 @@ impl DistributedApp for SimilarityApp {
         ctx.phase1_secs = sw.elapsed_secs();
         Some(Payload::Tiles(tiles))
     }
+
+    fn worker_spec(&self) -> Option<Vec<u8>> {
+        // Workers rebuild from the executor tag alone: the normalized
+        // matrix stays leader-side (blocks arrive through the scatter).
+        let exec = crate::apps::exec_spec_tag(self.exec.name())?;
+        Some(vec![crate::apps::SPEC_SIMILARITY, exec])
+    }
 }
 
 impl SimilarityApp {

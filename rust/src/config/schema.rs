@@ -15,8 +15,13 @@
 //! seed = 42
 //! redundancy = 2        # r-fold data replication (resilient runs)
 //! kill = "4"            # failure injection: ranks to crash ("2,5" for two)
-//! kill_at = "compute:1" # scatter | compute:<k> | gather
+//! kill_at = "compute:1" # scatter | compute:<k> | gather | disconnect[:<k>]
+//!                       # ("compute:1,gather" = per-victim phases for kill = "2,5")
 //! recover = "on"        # re-assign a dead rank's tasks mid-run
+//! transport = "memory"  # memory | tcp (loopback sockets, heartbeat detection)
+//! heartbeat_ms = 25     # TCP heartbeat interval
+//! heartbeat_timeout_ms = 1000 # silence before a peer is declared dead
+//! processes = "off"     # TCP only: one OS process per rank (the launcher)
 //!
 //! [dataset]
 //! kind = "synthetic"    # synthetic | csv
@@ -32,7 +37,7 @@
 //! ```
 
 use super::parser::{ConfigError, TomlDoc};
-use crate::coordinator::KillAt;
+use crate::coordinator::{HeartbeatConfig, KillAt, TransportKind};
 use crate::quorum::Strategy;
 use std::path::PathBuf;
 
@@ -139,6 +144,15 @@ pub fn parse_kill_list(s: &str) -> Option<Vec<usize>> {
     s.split(',').map(|t| t.trim().parse().ok()).collect()
 }
 
+/// Parse a comma-separated phase list (`--kill-at compute:1,gather`): one
+/// phase per `--kill` victim. An empty string is an empty list.
+pub fn parse_kill_at_list(s: &str) -> Option<Vec<KillAt>> {
+    if s.trim().is_empty() {
+        return Some(Vec::new());
+    }
+    s.split(',').map(|t| KillAt::parse(t.trim())).collect()
+}
+
 /// Complete, validated run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -163,11 +177,26 @@ pub struct RunConfig {
     pub redundancy: usize,
     /// Ranks to crash (failure injection), at the `kill_at` phase.
     pub kill: Vec<usize>,
-    /// Injection phase: `scatter | compute:<k> | gather`.
+    /// Injection phase: `scatter | compute:<k> | gather | disconnect[:<k>]`.
+    /// Applied to every `kill` victim unless `kill_at_list` is set.
     pub kill_at: KillAt,
+    /// Per-victim injection phases (`kill_at = "compute:1,gather"`): zipped
+    /// with `kill`, so different ranks die in different phases of one run.
+    /// Empty = every victim uses `kill_at`.
+    pub kill_at_list: Vec<KillAt>,
     /// Mid-run crash recovery: re-assign a dead rank's unfinished tasks to
     /// surviving quorum hosts instead of aborting (`--recover {on,off}`).
     pub recover: bool,
+    /// Transport backend: in-memory channels (the default) or real loopback
+    /// TCP sockets with heartbeat failure detection.
+    pub transport: TransportKind,
+    /// TCP heartbeat interval (milliseconds). Ignored by the memory backend.
+    pub heartbeat_ms: u64,
+    /// Silence window (milliseconds) before a TCP peer is declared dead.
+    pub heartbeat_timeout_ms: u64,
+    /// TCP only: launch each rank as its own OS process (`quorall worker
+    /// --join <addr> --rank <r>`) instead of an in-process thread.
+    pub tcp_processes: bool,
     pub dataset: DatasetConfig,
     /// PCIT significance variant: true = full PCIT, false = plain |r| cutoff.
     pub use_pcit_significance: bool,
@@ -190,7 +219,12 @@ impl Default for RunConfig {
             redundancy: 1,
             kill: Vec::new(),
             kill_at: KillAt::Scatter,
+            kill_at_list: Vec::new(),
             recover: false,
+            transport: crate::coordinator::transport_default(),
+            heartbeat_ms: HeartbeatConfig::default().interval_ms,
+            heartbeat_timeout_ms: HeartbeatConfig::default().timeout_ms,
+            tcp_processes: false,
             dataset: DatasetConfig::Synthetic { genes: 512, samples: 32, modules: 8, noise: 0.6 },
             use_pcit_significance: true,
             threshold: 0.85,
@@ -250,15 +284,39 @@ impl RunConfig {
             cfg.kill = vec![v];
         }
         if let Some(s) = doc.get_str("run", "kill_at") {
-            cfg.kill_at = KillAt::parse(s).ok_or_else(|| {
-                bad(format!("bad run.kill_at: {s} (want scatter | compute:<k> | gather)"))
+            let phases = parse_kill_at_list(s).filter(|v| !v.is_empty()).ok_or_else(|| {
+                bad(format!(
+                    "bad run.kill_at: {s} (want scatter | compute:<k> | gather | disconnect[:<k>], \
+                     comma-separated for one phase per kill victim)"
+                ))
             })?;
+            if phases.len() == 1 {
+                cfg.kill_at = phases[0];
+            } else {
+                cfg.kill_at_list = phases;
+            }
         }
         if let Some(s) = doc.get_str("run", "recover") {
             cfg.recover = parse_pipeline(s)
                 .ok_or_else(|| bad(format!("bad run.recover: {s} (want \"on\" | \"off\")")))?;
         } else if let Some(b) = doc.get_bool("run", "recover") {
             cfg.recover = b;
+        }
+        if let Some(s) = doc.get_str("run", "transport") {
+            cfg.transport = TransportKind::parse(s)
+                .ok_or_else(|| bad(format!("bad run.transport: {s} (want \"memory\" | \"tcp\")")))?;
+        }
+        if let Some(v) = doc.get_usize("run", "heartbeat_ms") {
+            cfg.heartbeat_ms = v as u64;
+        }
+        if let Some(v) = doc.get_usize("run", "heartbeat_timeout_ms") {
+            cfg.heartbeat_timeout_ms = v as u64;
+        }
+        if let Some(s) = doc.get_str("run", "processes") {
+            cfg.tcp_processes = parse_pipeline(s)
+                .ok_or_else(|| bad(format!("bad run.processes: {s} (want \"on\" | \"off\")")))?;
+        } else if let Some(b) = doc.get_bool("run", "processes") {
+            cfg.tcp_processes = b;
         }
         if let Some(s) = doc.get_str("run", "artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(s);
@@ -330,6 +388,25 @@ impl RunConfig {
             if self.kill[..i].contains(&k) {
                 return Err(format!("run.kill targets rank {k} twice"));
             }
+        }
+        if !self.kill_at_list.is_empty() && self.kill_at_list.len() != self.kill.len() {
+            return Err(format!(
+                "run.kill_at lists {} phases for {} kill victims",
+                self.kill_at_list.len(),
+                self.kill.len()
+            ));
+        }
+        if self.heartbeat_ms == 0 {
+            return Err("run.heartbeat_ms must be >= 1".into());
+        }
+        if self.heartbeat_timeout_ms < self.heartbeat_ms {
+            return Err(format!(
+                "run.heartbeat_timeout_ms ({}) must be >= run.heartbeat_ms ({})",
+                self.heartbeat_timeout_ms, self.heartbeat_ms
+            ));
+        }
+        if self.tcp_processes && self.transport != TransportKind::Tcp {
+            return Err("run.processes = \"on\" requires run.transport = \"tcp\"".into());
         }
         if let DatasetConfig::Synthetic { genes, samples, .. } = self.dataset {
             if genes < 2 {
@@ -468,6 +545,58 @@ threshold = 0.9
         assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nkill = \"2,2\"")).is_err());
         assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nkill_at = \"bogus\"")).is_err());
         assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nrecover = \"sideways\"")).is_err());
+    }
+
+    #[test]
+    fn transport_keys_parse() {
+        let cfg = RunConfig::from_doc(&doc(
+            "[run]\ntransport = \"tcp\"\nheartbeat_ms = 10\nheartbeat_timeout_ms = 200",
+        ))
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        assert_eq!(cfg.heartbeat_ms, 10);
+        assert_eq!(cfg.heartbeat_timeout_ms, 200);
+        let cfg =
+            RunConfig::from_doc(&doc("[run]\ntransport = \"tcp\"\nprocesses = \"on\"")).unwrap();
+        assert!(cfg.tcp_processes);
+        assert!(RunConfig::from_doc(&doc("[run]\ntransport = \"carrier-pigeon\"")).is_err());
+        assert!(
+            RunConfig::from_doc(&doc("[run]\ntransport = \"memory\"\nprocesses = \"on\"")).is_err(),
+            "process mode without the TCP transport must be rejected"
+        );
+        assert!(RunConfig::from_doc(&doc("[run]\nheartbeat_ms = 0")).is_err());
+        assert!(RunConfig::from_doc(&doc(
+            "[run]\nheartbeat_ms = 100\nheartbeat_timeout_ms = 50"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn per_victim_kill_phases_parse() {
+        let cfg = RunConfig::from_doc(&doc(
+            "[run]\nranks = 9\nkill = \"2,5\"\nkill_at = \"compute:1,gather\"",
+        ))
+        .unwrap();
+        assert!(cfg.kill_at_list == vec![KillAt::Compute { tasks: 1 }, KillAt::Gather]);
+        // A single phase stays the broadcast default.
+        let cfg =
+            RunConfig::from_doc(&doc("[run]\nranks = 9\nkill = \"2,5\"\nkill_at = \"gather\""))
+                .unwrap();
+        assert!(cfg.kill_at_list.is_empty());
+        assert_eq!(cfg.kill_at, KillAt::Gather);
+        // Disconnect flavor.
+        let cfg = RunConfig::from_doc(&doc(
+            "[run]\nranks = 9\nkill = \"4\"\nkill_at = \"disconnect:2\"",
+        ))
+        .unwrap();
+        assert_eq!(cfg.kill_at, KillAt::Disconnect { tasks: 2 });
+        // Phase count must match the victim count.
+        assert!(RunConfig::from_doc(&doc(
+            "[run]\nranks = 9\nkill = \"4\"\nkill_at = \"compute:1,gather\""
+        ))
+        .is_err());
+        assert_eq!(parse_kill_at_list(""), Some(Vec::new()));
+        assert!(parse_kill_at_list("compute:1,bogus").is_none());
     }
 
     #[test]

@@ -120,6 +120,16 @@ pub trait DistributedApp: Send + Sync {
     /// receive reports shutdown/crash (or [`WorkerCtx::begin_task`] says
     /// injected failure strikes) — the worker exits without reporting.
     fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload>;
+
+    /// Opaque blob from which a *worker-side* instance of this app can be
+    /// rebuilt in a separate OS process (`crate::apps::app_from_spec`) —
+    /// only the knobs `run_worker` / `run_recovery_task` need, never the
+    /// dataset (workers receive their blocks through the scatter). `None`
+    /// (the default) means the app cannot run under the TCP process
+    /// launcher; thread mode and the memory transport are unaffected.
+    fn worker_spec(&self) -> Option<Vec<u8>> {
+        None
+    }
 }
 
 /// Per-worker state and engine services available to an app's
@@ -266,16 +276,22 @@ impl WorkerCtx {
         true
     }
 
-    /// `--kill-at compute:<k>` check shared by both ends of
-    /// [`WorkerCtx::begin_task`]: false = this rank just died (or already
-    /// was dead).
+    /// `--kill-at compute:<k>` / `disconnect:<k>` check shared by both
+    /// ends of [`WorkerCtx::begin_task`]: false = this rank just died (or
+    /// already was dead). A `compute` kill announces itself (kill flag /
+    /// socket shutdown); a `disconnect` kill goes dark without any goodbye,
+    /// leaving detection to the leader's heartbeat timeout.
     fn injection_says_alive(&mut self) -> bool {
         if self.dead {
             return false;
         }
-        if let Some(KillAt::Compute { tasks }) = self.kill_at {
-            if self.completed_tasks >= tasks {
-                self.die();
+        if let Some(k) = self.kill_at.as_ref().and_then(KillAt::compute_trigger) {
+            if self.completed_tasks >= k {
+                if matches!(self.kill_at, Some(KillAt::Disconnect { .. })) {
+                    self.die_dark();
+                } else {
+                    self.die();
+                }
                 return false;
             }
         }
@@ -348,6 +364,17 @@ impl WorkerCtx {
     pub(super) fn die(&mut self) {
         self.dead = true;
         self.ep.transport().kill(self.ep.rank);
+    }
+
+    /// Simulate a hard disconnect (`--kill-at disconnect:<k>`): die
+    /// *without any goodbye*. Over TCP the sockets stay open but fall
+    /// silent, so the leader only learns of the death when its heartbeat
+    /// timeout expires; on the memory transport this degrades to the
+    /// ordinary kill flag (documented stand-in — there is no wire to go
+    /// silent on).
+    pub(super) fn die_dark(&mut self) {
+        self.dead = true;
+        self.ep.go_dark();
     }
 
     /// Stream a slice of this rank's result to the leader ahead of the

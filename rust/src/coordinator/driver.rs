@@ -5,7 +5,9 @@
 use super::app::{DistributedApp, Plan};
 use super::leader::{leader_main, LeaderOutcome, LeaderPlan, ResultSink};
 use super::messages::{KillAt, Payload};
-use super::transport::{endpoint_of, Transport};
+use super::tcp::{self, HeartbeatConfig, TcpLeader};
+use super::transport::{endpoint_of, Endpoint, Transport, TransportHealth, TransportKind};
+use super::wire;
 use super::worker::worker_main;
 use crate::allpairs::{OwnerPolicy, PairAssignment, RedundantAssignment};
 use crate::apps::pcit::{DistMode, PcitApp};
@@ -19,6 +21,7 @@ use crate::runtime::Executor;
 use crate::util::ceil_div;
 use crate::util::timer::Stopwatch;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Per-rank execution statistics (sent worker → leader at completion).
 #[derive(Clone, Copy, Debug, Default)]
@@ -66,6 +69,11 @@ pub struct EngineOptions {
     pub kill: Vec<usize>,
     /// Which phase the injected crashes strike at (`--kill-at`).
     pub kill_at: KillAt,
+    /// Per-victim injection phases: when non-empty it must match `kill` in
+    /// length and is zipped with it, so one run can kill different ranks in
+    /// different phases (the multi-failure soak, `--kill 2,5 --kill-at
+    /// compute:1,gather`). Empty = every victim uses `kill_at`.
+    pub kill_at_list: Vec<KillAt>,
     /// Mid-run crash recovery (`--recover on`): when a rank dies, the
     /// leader re-assigns its unfinished tasks to surviving ranks that
     /// already host the needed blocks, instead of aborting. Requires a
@@ -86,6 +94,26 @@ pub struct EngineOptions {
     /// Max in-flight messages a pipelined sender may leave queued at one
     /// destination before falling back to synchronous ordering.
     pub send_ahead_credit: usize,
+    /// Transport backend (`--transport {memory,tcp}`, env
+    /// `QUORALL_TRANSPORT`): in-memory channels, or real loopback TCP
+    /// sockets speaking the length-prefixed wire codec with per-connection
+    /// heartbeats and disconnect-driven failure detection. Both backends
+    /// produce bitwise-identical app output.
+    pub transport: TransportKind,
+    /// TCP only: launch ranks as separate OS processes (`quorall worker
+    /// --join <addr> --rank <r>`) instead of in-process threads. Requires a
+    /// spec-reconstructible app ([`DistributedApp::worker_spec`]).
+    pub tcp_processes: bool,
+    /// TCP process mode: worker binary to spawn (default: this executable).
+    pub worker_bin: Option<std::path::PathBuf>,
+    /// TCP only: heartbeat beacon period per connection (`--heartbeat-ms`).
+    pub heartbeat_ms: u64,
+    /// TCP only: a peer silent (no frame of any kind) for longer than this
+    /// is declared dead (`--heartbeat-timeout-ms`).
+    pub heartbeat_timeout_ms: u64,
+    /// TCP only: join-handshake deadline; workers dial with capped
+    /// exponential backoff until it expires (`--join-timeout-ms`).
+    pub join_timeout_ms: u64,
 }
 
 /// Process-wide pipeline default: `QUORALL_PIPELINE=on|1` flips every
@@ -111,6 +139,17 @@ pub fn scatter_default() -> bool {
         .unwrap_or(false)
 }
 
+/// Process-wide transport default: `QUORALL_TRANSPORT=tcp` flips every
+/// engine run built through [`EngineOptions::new`] / `RunConfig` defaults
+/// to the loopback TCP backend (how CI runs the integration suite down
+/// both backends). Explicit `--transport` / `opts.transport` settings win.
+pub fn transport_default() -> TransportKind {
+    std::env::var("QUORALL_TRANSPORT")
+        .ok()
+        .and_then(|v| TransportKind::parse(&v))
+        .unwrap_or(TransportKind::Memory)
+}
+
 impl EngineOptions {
     pub fn new(ranks: usize, strategy: Strategy) -> Self {
         Self {
@@ -120,10 +159,17 @@ impl EngineOptions {
             redundancy: 1,
             kill: Vec::new(),
             kill_at: KillAt::Scatter,
+            kill_at_list: Vec::new(),
             recover: false,
             pipeline: pipeline_default(),
             streamed_scatter: scatter_default(),
             send_ahead_credit: crate::coordinator::transport::DEFAULT_SEND_AHEAD_CREDIT,
+            transport: transport_default(),
+            tcp_processes: false,
+            worker_bin: None,
+            heartbeat_ms: HeartbeatConfig::default().interval_ms,
+            heartbeat_timeout_ms: HeartbeatConfig::default().timeout_ms,
+            join_timeout_ms: 10_000,
         }
     }
 }
@@ -173,6 +219,13 @@ pub struct EngineReport {
     pub recovered_tasks: u64,
     /// Ranks that died during the run (injected or crashed), ascending.
     pub dead_ranks: Vec<usize>,
+    /// Transport backend the run used.
+    pub transport: TransportKind,
+    /// Failure-detector observability (leader's view): per-rank
+    /// last-heartbeat age, per-death detection latency and cause, and the
+    /// join handshake's reconnect-attempt count. The memory backend
+    /// reports injected kills with zero latency.
+    pub health: TransportHealth,
 }
 
 /// Overlap ratio 1 − blocked / (P · wall), clamped to [0, 1]. Degenerate
@@ -274,14 +327,29 @@ pub fn run_app_with_sink(
         ((0..p).map(|w| assignment.tasks_for(w)).collect::<Vec<_>>(), im, None)
     };
 
+    // Per-victim injection phases: an explicit list is zipped with `kill`;
+    // empty broadcasts the single `kill_at` (the pre-multi-failure shape).
+    let kill_plan: Vec<(usize, KillAt)> = if opts.kill_at_list.is_empty() {
+        opts.kill.iter().map(|&k| (k, opts.kill_at)).collect()
+    } else {
+        anyhow::ensure!(
+            opts.kill_at_list.len() == opts.kill.len(),
+            "kill-at list has {} phases for {} kill targets",
+            opts.kill_at_list.len(),
+            opts.kill.len()
+        );
+        opts.kill.iter().copied().zip(opts.kill_at_list.iter().copied()).collect()
+    };
     // An injection that can never fire (the victim owns too few tasks for
-    // `compute:<k>` to trip) would be a silent no-op while the victim still
-    // counts as doomed for recovery assignee selection — reject it.
-    if let KillAt::Compute { tasks: k } = opts.kill_at {
-        for &victim in &opts.kill {
+    // `compute:<k>` / `disconnect:<k>` to trip) would be a silent no-op
+    // while the victim still counts as doomed for recovery assignee
+    // selection — reject it.
+    for &(victim, at) in &kill_plan {
+        if let Some(k) = at.compute_trigger() {
             anyhow::ensure!(
                 tasks[victim].len() > k,
-                "kill-at compute:{k} can never fire: rank {victim} only owns {} tasks",
+                "kill-at {} can never fire: rank {victim} only owns {} tasks",
+                at.name(),
                 tasks[victim].len()
             );
         }
@@ -296,19 +364,7 @@ pub fn run_app_with_sink(
         t0: std::time::Instant::now(),
     };
     let sw = Stopwatch::start();
-    let (transport, mut endpoints) = Transport::with_credit(p + 1, opts.send_ahead_credit);
-    // endpoints[0] = leader; spawn workers on 1..=p.
-    let leader_ep = endpoints.remove(0);
-    let mut handles = Vec::with_capacity(p);
-    for ep in endpoints {
-        let app_ref = Arc::clone(&app);
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("quorall-rank-{}", ep.rank))
-                .spawn(move || worker_main(ep, app_ref, plan))
-                .expect("spawn worker"),
-        );
-    }
+    let (transport, leader_ep, mut workers) = launch_cluster(&app, opts, plan)?;
 
     let lead = leader_main(
         &leader_ep,
@@ -317,8 +373,7 @@ pub fn run_app_with_sink(
             app: app.as_ref(),
             quorum: quorum.as_ref(),
             tasks,
-            kill: opts.kill.clone(),
-            kill_at: opts.kill_at,
+            kill: kill_plan,
             recovery,
             sink,
         },
@@ -330,10 +385,7 @@ pub fn run_app_with_sink(
             let _ = leader_ep.send(endpoint_of(w), super::messages::Message::Shutdown);
         }
     }
-    let mut worker_panicked = false;
-    for h in handles {
-        worker_panicked |= h.join().is_err();
-    }
+    let worker_panicked = workers.join();
     // Surface the leader's diagnosis (which rank died, in which phase)
     // ahead of the bare join failure: a panicking worker marks itself
     // killed, so the leader error is the informative one.
@@ -348,7 +400,19 @@ pub fn run_app_with_sink(
         Err(e) => return Err(e),
     };
     let wall = sw.elapsed_secs();
-    let (_msgs, bytes) = transport.total_received();
+    let health = transport.health();
+    // Total transport traffic: the in-memory backend's shared counters see
+    // every endpoint, but over TCP each endpoint only observes its own
+    // sockets — the cluster total is the gathered per-rank receive counters
+    // plus the leader's own (a dead rank's partial traffic is absent, a
+    // documented undercount).
+    let bytes = match transport.kind() {
+        TransportKind::Memory => transport.total_received().1,
+        TransportKind::Tcp => {
+            let worker_bytes: u64 = outcome.stats.iter().map(|s| s.recv_bytes).sum();
+            worker_bytes + transport.total_received().1
+        }
+    };
     let peak = outcome.stats.iter().map(|s| s.peak_logical_bytes).max().unwrap_or(0);
     let critical = outcome
         .stats
@@ -380,7 +444,166 @@ pub fn run_app_with_sink(
         overlap_ratio: overlap,
         recovered_tasks: outcome.recovered_tasks,
         dead_ranks: outcome.dead_ranks,
+        transport: transport.kind(),
+        health,
     })
+}
+
+/// Worker handles for the launch shapes of [`launch_cluster`].
+enum Workers {
+    Threads(Vec<std::thread::JoinHandle<()>>),
+    Processes(Vec<std::process::Child>),
+}
+
+impl Workers {
+    /// Join/reap every worker; true if any thread panicked.
+    fn join(&mut self) -> bool {
+        match self {
+            Workers::Threads(handles) => {
+                let mut panicked = false;
+                for h in handles.drain(..) {
+                    panicked |= h.join().is_err();
+                }
+                panicked
+            }
+            Workers::Processes(children) => {
+                // Workers exit on their own after Shutdown; a dark
+                // (disconnect-injected) victim parks instead, so force-kill
+                // anything still alive after a grace period. Exit statuses
+                // are not a failure signal here: the leader's outcome is
+                // the authority (a worker crash surfaces as a detected
+                // death), and the forced kill makes nonzero statuses
+                // expected.
+                let deadline = Instant::now() + Duration::from_secs(10);
+                loop {
+                    let mut alive = false;
+                    for c in children.iter_mut() {
+                        alive |= matches!(c.try_wait(), Ok(None));
+                    }
+                    if !alive || Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                for c in children.iter_mut() {
+                    if matches!(c.try_wait(), Ok(None)) {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                }
+                false
+            }
+        }
+    }
+}
+
+/// Stand up the cluster for one engine run: build the transport backend and
+/// launch the P workers — in-process threads for the memory backend and TCP
+/// thread mode, separate OS processes (`quorall worker --join <addr>
+/// --rank <r>`) for TCP process mode.
+fn launch_cluster(
+    app: &Arc<dyn DistributedApp>,
+    opts: &EngineOptions,
+    plan: Plan,
+) -> anyhow::Result<(Arc<Transport>, Endpoint, Workers)> {
+    let p = opts.ranks;
+    match opts.transport {
+        TransportKind::Memory => {
+            let (transport, mut endpoints) = Transport::with_credit(p + 1, opts.send_ahead_credit);
+            // endpoints[0] = leader; spawn workers on 1..=p.
+            let leader_ep = endpoints.remove(0);
+            let mut handles = Vec::with_capacity(p);
+            for ep in endpoints {
+                let app_ref = Arc::clone(app);
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("quorall-rank-{}", ep.rank))
+                        .spawn(move || worker_main(ep, app_ref, plan))
+                        .expect("spawn worker"),
+                );
+            }
+            Ok((transport, leader_ep, Workers::Threads(handles)))
+        }
+        TransportKind::Tcp => {
+            let hb = HeartbeatConfig {
+                interval_ms: opts.heartbeat_ms,
+                timeout_ms: opts.heartbeat_timeout_ms,
+            };
+            let join_timeout = Duration::from_millis(opts.join_timeout_ms);
+            let leader = TcpLeader::bind(p + 1, opts.send_ahead_credit, hb, join_timeout)?;
+            let addr = leader.addr().to_string();
+            if opts.tcp_processes {
+                let spec = app.worker_spec().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "app '{}' cannot run in separate processes (no worker spec); \
+                         use TCP thread mode or the memory transport",
+                        app.name()
+                    )
+                })?;
+                let setup = wire::encode_setup(
+                    plan.n,
+                    p,
+                    plan.block,
+                    plan.pipeline,
+                    plan.streamed_scatter,
+                    &spec,
+                );
+                let bin = match &opts.worker_bin {
+                    Some(b) => b.clone(),
+                    None => std::env::current_exe()?,
+                };
+                let mut children: Vec<std::process::Child> = Vec::with_capacity(p);
+                for w in 0..p {
+                    let spawned = std::process::Command::new(&bin)
+                        .arg("worker")
+                        .arg("--join")
+                        .arg(&addr)
+                        .arg("--rank")
+                        .arg(w.to_string())
+                        .spawn();
+                    match spawned {
+                        Ok(child) => children.push(child),
+                        Err(e) => {
+                            for c in &mut children {
+                                let _ = c.kill();
+                                let _ = c.wait();
+                            }
+                            anyhow::bail!("spawn worker process {w} via {}: {e}", bin.display());
+                        }
+                    }
+                }
+                match leader.accept(&setup) {
+                    Ok((transport, leader_ep)) => {
+                        Ok((transport, leader_ep, Workers::Processes(children)))
+                    }
+                    Err(e) => {
+                        for c in &mut children {
+                            let _ = c.kill();
+                            let _ = c.wait();
+                        }
+                        Err(e)
+                    }
+                }
+            } else {
+                let mut handles = Vec::with_capacity(p);
+                for w in 0..p {
+                    let app_ref = Arc::clone(app);
+                    let addr = addr.clone();
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("quorall-rank-{w}"))
+                            .spawn(move || match tcp::join(&addr, endpoint_of(w), join_timeout) {
+                                Ok(joined) => worker_main(joined.endpoint, app_ref, plan),
+                                Err(e) => panic!("rank {w} failed to join the TCP cluster: {e:#}"),
+                            })
+                            .expect("spawn worker"),
+                    );
+                }
+                let (transport, leader_ep) = leader.accept(&[])?;
+                Ok((transport, leader_ep, Workers::Threads(handles)))
+            }
+        }
+    }
 }
 
 /// Result of a distributed PCIT run.
@@ -411,6 +634,10 @@ pub struct DistributedReport {
     pub recovered_tasks: u64,
     /// Ranks that died during the run, ascending.
     pub dead_ranks: Vec<usize>,
+    /// Transport backend the run used.
+    pub transport: TransportKind,
+    /// See [`EngineReport::health`].
+    pub health: TransportHealth,
 }
 
 /// Collect the per-rank edge payloads of a PCIT engine run into a network.
@@ -454,7 +681,12 @@ pub fn run_distributed_pcit(
     opts.redundancy = cfg.redundancy;
     opts.kill = cfg.kill.clone();
     opts.kill_at = cfg.kill_at;
+    opts.kill_at_list = cfg.kill_at_list.clone();
     opts.recover = cfg.recover;
+    opts.transport = cfg.transport;
+    opts.tcp_processes = cfg.tcp_processes;
+    opts.heartbeat_ms = cfg.heartbeat_ms;
+    opts.heartbeat_timeout_ms = cfg.heartbeat_timeout_ms;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -473,6 +705,8 @@ pub fn run_distributed_pcit(
         overlap_ratio: rep.overlap_ratio,
         recovered_tasks: rep.recovered_tasks,
         dead_ranks: rep.dead_ranks,
+        transport: rep.transport,
+        health: rep.health,
     })
 }
 
@@ -535,6 +769,10 @@ pub fn run_resilient_pcit_at(
     opts.recover = true;
     opts.pipeline = cfg.pipeline;
     opts.streamed_scatter = cfg.streamed_scatter;
+    opts.transport = cfg.transport;
+    opts.tcp_processes = cfg.tcp_processes;
+    opts.heartbeat_ms = cfg.heartbeat_ms;
+    opts.heartbeat_timeout_ms = cfg.heartbeat_timeout_ms;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -553,6 +791,8 @@ pub fn run_resilient_pcit_at(
         overlap_ratio: rep.overlap_ratio,
         recovered_tasks: rep.recovered_tasks,
         dead_ranks: rep.dead_ranks,
+        transport: rep.transport,
+        health: rep.health,
     })
 }
 

@@ -95,10 +95,10 @@ pub struct LeaderPlan<'a, 's> {
     /// tasks[rank] = pair tasks that rank owns (assignment order — the
     /// order its result items appear in, which recovery must preserve).
     pub tasks: Vec<Vec<PairTask>>,
-    /// Ranks to crash (failure injection), at the phase below.
-    pub kill: Vec<usize>,
-    /// Which phase the injected crashes strike at.
-    pub kill_at: KillAt,
+    /// Ranks to crash (failure injection), each with its own phase — one
+    /// run can strike different ranks in different phases (the
+    /// multi-failure soak).
+    pub kill: Vec<(usize, KillAt)>,
     /// Present on resilient runs: per-pair backup owners used to re-assign
     /// a dead rank's unfinished tasks to surviving hosts. `None` keeps the
     /// fail-fast behavior (any death aborts the run).
@@ -606,8 +606,9 @@ pub fn leader_main(
 ) -> anyhow::Result<LeaderOutcome> {
     let p = plan.p;
     let part = Partition::new(plan.n, p);
-    let LeaderPlan { app, quorum, tasks, kill, kill_at, recovery, sink } = lp;
-    let mut g = Gather::new(p, app, tasks.clone(), kill.clone(), recovery, sink);
+    let LeaderPlan { app, quorum, tasks, kill, recovery, sink } = lp;
+    let doomed: Vec<usize> = kill.iter().map(|&(k, _)| k).collect();
+    let mut g = Gather::new(p, app, tasks.clone(), doomed.clone(), recovery, sink);
 
     // Materialize each distinct block exactly once, Arc-shared across its
     // replica owners. Exactly one *delivered* send per block carries the
@@ -631,13 +632,13 @@ pub fn leader_main(
         // before any task can start, so injection semantics cannot depend
         // on the scatter mode. A scatter-phase death then strikes while
         // the blocks are still in flight.
-        inject_kills(ep, &kill, kill_at);
+        inject_kills(ep, &kill);
         for w in 0..p {
             let msg = Message::TasksAhead { quorum: quorum.quorum(w), tasks: tasks[w].clone() };
             if let Err(e) = ep.send(endpoint_of(w), msg) {
                 // A scatter-killed rank can already be dead; only an
                 // unexplained failure aborts the run.
-                if !kill.contains(&w) {
+                if !doomed.contains(&w) {
                     anyhow::bail!("scatter to rank {w}: {e}");
                 }
             }
@@ -719,7 +720,7 @@ pub fn leader_main(
             ep.send(endpoint_of(w), Message::AssignData { quorum: q, blocks })
                 .map_err(|e| anyhow::anyhow!("scatter to rank {w}: {e}"))?;
         }
-        inject_kills(ep, &kill, kill_at);
+        inject_kills(ep, &kill);
         for (w, tasks) in tasks.into_iter().enumerate() {
             // A scatter-killed rank may already be dead; that expected
             // failure is deliberately ignored (the injection send itself
@@ -760,9 +761,9 @@ pub fn leader_main(
 /// Deliver the failure injections. The engine validates the kill list (in
 /// range, no duplicate targets), so an injection send can only fail if the
 /// target somehow died first — a bug worth surfacing, not swallowing.
-fn inject_kills(ep: &Endpoint, kill: &[usize], kill_at: KillAt) {
-    for &k in kill {
-        if let Err(e) = ep.send(endpoint_of(k), Message::Crash { at: kill_at }) {
+fn inject_kills(ep: &Endpoint, kill: &[(usize, KillAt)]) {
+    for &(k, at) in kill {
+        if let Err(e) = ep.send(endpoint_of(k), Message::Crash { at }) {
             crate::log_warn!("leader: failure injection for rank {k} failed: {e}");
             debug_assert!(false, "failure injection for rank {k} failed: {e}");
         }

@@ -94,19 +94,34 @@ pub enum KillAt {
     /// pipelined mode most of the work has already streamed, so recovery
     /// only recomputes the unstreamed tail.
     Gather,
+    /// Mid-compute hard disconnect, after completing `tasks` pair tasks:
+    /// the victim goes dark **without any goodbye** — no kill flag raised
+    /// for the leader's benefit, no socket close. On the TCP transport its
+    /// connections stay open but silent, so the leader only learns of the
+    /// death when the heartbeat timeout expires (the production failure
+    /// mode). On the in-memory transport, which has no wire to go silent
+    /// on, this degrades to the ordinary kill flag — a documented stand-in.
+    Disconnect { tasks: usize },
 }
 
 impl KillAt {
-    /// Parse `scatter | compute[:<k>] | gather` (`compute` = `compute:1`).
+    /// Parse `scatter | compute[:<k>] | gather | disconnect[:<k>]`
+    /// (`compute` = `compute:1`, `disconnect` = `disconnect:1`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "scatter" => Some(KillAt::Scatter),
             "gather" => Some(KillAt::Gather),
             "compute" => Some(KillAt::Compute { tasks: 1 }),
-            _ => s
-                .strip_prefix("compute:")
-                .and_then(|k| k.parse().ok())
-                .map(|tasks| KillAt::Compute { tasks }),
+            "disconnect" => Some(KillAt::Disconnect { tasks: 1 }),
+            _ => {
+                if let Some(k) = s.strip_prefix("compute:") {
+                    k.parse().ok().map(|tasks| KillAt::Compute { tasks })
+                } else if let Some(k) = s.strip_prefix("disconnect:") {
+                    k.parse().ok().map(|tasks| KillAt::Disconnect { tasks })
+                } else {
+                    None
+                }
+            }
         }
     }
 
@@ -115,6 +130,16 @@ impl KillAt {
             KillAt::Scatter => "scatter".into(),
             KillAt::Compute { tasks } => format!("compute:{tasks}"),
             KillAt::Gather => "gather".into(),
+            KillAt::Disconnect { tasks } => format!("disconnect:{tasks}"),
+        }
+    }
+
+    /// How many completed tasks arm a mid-compute injection (`compute:<k>`
+    /// / `disconnect:<k>`); `None` for the phase-edge kills.
+    pub fn compute_trigger(&self) -> Option<usize> {
+        match self {
+            KillAt::Compute { tasks } | KillAt::Disconnect { tasks } => Some(*tasks),
+            KillAt::Scatter | KillAt::Gather => None,
         }
     }
 }
@@ -497,6 +522,14 @@ mod tests {
         assert_eq!(KillAt::parse("bogus"), None);
         assert_eq!(KillAt::Compute { tasks: 3 }.name(), "compute:3");
         assert_eq!(KillAt::parse(&KillAt::Gather.name()), Some(KillAt::Gather));
+        assert_eq!(KillAt::parse("disconnect"), Some(KillAt::Disconnect { tasks: 1 }));
+        assert_eq!(KillAt::parse("disconnect:4"), Some(KillAt::Disconnect { tasks: 4 }));
+        assert_eq!(KillAt::parse("disconnect:x"), None);
+        assert_eq!(KillAt::Disconnect { tasks: 4 }.name(), "disconnect:4");
+        assert_eq!(KillAt::Scatter.compute_trigger(), None);
+        assert_eq!(KillAt::Gather.compute_trigger(), None);
+        assert_eq!(KillAt::Compute { tasks: 2 }.compute_trigger(), Some(2));
+        assert_eq!(KillAt::Disconnect { tasks: 2 }.compute_trigger(), Some(2));
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! The distributed coordinator (L3) — the paper's system contribution,
 //! split into an app-agnostic engine and app plugins.
 //!
-//! Simulated cluster: one OS thread per "MPI rank", channel transport with
-//! byte accounting ([`transport`]), a generic leader that builds the
+//! Cluster model: one endpoint per "MPI rank" over a byte-accounted
+//! [`Transport`] backend ([`transport`]), a generic leader that builds the
 //! placement, scatters dataset blocks, hands out pair work, sequences
 //! barriers and collects results ([`leader`]), and generic workers that
 //! delegate the compute/exchange protocol to a [`DistributedApp`] plugin
@@ -13,7 +13,21 @@
 //! in-tree plugins are PCIT ([`crate::apps::pcit`]), all-pairs similarity
 //! ([`crate::apps::similarity`]) and n-body ([`crate::apps::nbody`]).
 //!
-//! Transport modes (`--pipeline {on,off}`): the synchronous protocol blocks
+//! Transport backends (`--transport {memory,tcp}`, env `QUORALL_TRANSPORT`):
+//! the memory backend runs every rank as an in-process thread over channels;
+//! the TCP backend speaks a hand-rolled length-prefixed wire codec
+//! ([`wire`]) over real sockets ([`tcp`]) — leader-address join handshake
+//! (capped-backoff dial, Hello/Welcome/Mesh/Ready), per-connection
+//! heartbeats, and a heartbeat-timeout failure detector that feeds the same
+//! task ledger as the injected-kill path, so a rank that *disconnects*
+//! (dies without a goodbye, `--kill-at disconnect`) is discovered and
+//! recovered bitwise-identically. `--processes on` launches each rank as
+//! its own OS process (`quorall worker --join <addr> --rank <r>`) instead
+//! of a thread. Detector observability (last-heartbeat ages, per-death
+//! detection latency and cause, reconnect attempts) lands in
+//! `EngineReport::health` ([`TransportHealth`]).
+//!
+//! Pipeline modes (`--pipeline {on,off}`): the synchronous protocol blocks
 //! on every receive; the pipelined protocol overlaps tile compute with the
 //! ring exchange (forward-before-compute double buffering) and streams
 //! result chunks to the leader under a bounded send-ahead credit. Both
@@ -53,6 +67,8 @@
 
 pub mod messages;
 pub mod transport;
+pub mod wire;
+pub mod tcp;
 pub mod app;
 pub mod worker;
 pub mod leader;
@@ -62,8 +78,12 @@ pub use app::{DistributedApp, Plan, WorkerCtx};
 pub use driver::{
     overlap_ratio, pipeline_default, run_app, run_app_with_sink, run_distributed_pcit,
     run_resilient_pcit, run_resilient_pcit_at, run_single_node, scatter_default,
-    time_to_first_task_secs, DistributedReport, EngineOptions, EngineReport, RankStats,
+    time_to_first_task_secs, transport_default, DistributedReport, EngineOptions, EngineReport,
+    RankStats,
 };
 pub use leader::ResultSink;
 pub use messages::{BlockData, KillAt, Message, Payload, PlacedBlock};
-pub use transport::{endpoint_of, rank_of, Endpoint, Transport};
+pub use tcp::HeartbeatConfig;
+pub use transport::{
+    endpoint_of, rank_of, DeadRankDetection, Endpoint, Transport, TransportHealth, TransportKind,
+};

@@ -1,0 +1,777 @@
+//! TCP socket backend for the [`super::transport::Transport`] abstraction.
+//!
+//! Topology: the leader (endpoint 0) binds a listener; each worker dials
+//! it with capped exponential backoff and introduces itself with a
+//! [`Frame::Hello`] carrying its own mesh-listener port. Once every worker
+//! has joined, the leader answers each with a [`Frame::Welcome`] (cluster
+//! shape, credit + heartbeat config, peer address table, opaque setup
+//! blob), the workers establish a full worker↔worker mesh (dial peers with
+//! a smaller endpoint id, accept the rest; first frame on a mesh
+//! connection is [`Frame::Mesh`]), confirm with [`Frame::Ready`], and the
+//! leader's `accept` returns. From then on every rank has one socket per
+//! peer and the engine above sees ordinary [`Endpoint`] semantics.
+//!
+//! Each process runs, per connection, a **reader thread** (feeds decoded
+//! [`Frame::Msg`] frames into the rank's owned receive queue, returns
+//! send-ahead credit on [`Frame::Ack`], and treats EOF / a socket error as
+//! a death: `socket-closed`), plus one **heartbeat thread** (a
+//! [`Frame::Heartbeat`] on every connection each interval) and one
+//! **monitor thread** (a peer silent for longer than the timeout is
+//! declared dead: `heartbeat-timeout`, and its connection is shut down).
+//! Any arriving frame counts as liveness, so a busy peer that is pushing
+//! data but too backed up to heartbeat is never falsely declared dead.
+//! Detection simply raises the same per-rank killed flag the in-memory
+//! backend's `kill` sets — the leader's existing recovery ledger polls
+//! that flag and needs no transport-specific code.
+//!
+//! The `disconnect` kill flavor ([`TcpBackend::go_dark`]) stops the
+//! heartbeat thread but leaves every socket open and silent, so peers get
+//! no EOF and must discover the death via heartbeat timeout — the
+//! production failure mode of a hung host, as opposed to a crashed
+//! process whose kernel at least closes its sockets.
+
+use super::transport::{rank_of, DeadRankDetection, Endpoint, Envelope, Transport, TransportHealth};
+use super::wire::{self, Frame};
+use crate::metrics::CommStats;
+use std::io::ErrorKind;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Heartbeat knobs (`--heartbeat-ms` / `--heartbeat-timeout-ms`).
+#[derive(Clone, Copy, Debug)]
+pub struct HeartbeatConfig {
+    /// Beacon period per connection.
+    pub interval_ms: u64,
+    /// A peer silent (no frame of any kind) for longer than this is dead.
+    pub timeout_ms: u64,
+}
+
+impl Default for HeartbeatConfig {
+    fn default() -> Self {
+        HeartbeatConfig { interval_ms: 25, timeout_ms: 1000 }
+    }
+}
+
+/// First dial retry delay; doubles per attempt up to [`DIAL_BACKOFF_CAP`].
+const DIAL_BACKOFF_START: Duration = Duration::from_millis(10);
+const DIAL_BACKOFF_CAP: Duration = Duration::from_millis(500);
+
+/// Process-wide flag set by [`TcpBackend::go_dark`]. The `worker`
+/// subcommand checks it after its worker loop returns: a dark victim must
+/// park instead of exiting, because process exit would close its sockets
+/// and hand every peer a cheap EOF instead of the heartbeat-timeout
+/// detection the disconnect injection exists to exercise.
+static WENT_DARK: AtomicBool = AtomicBool::new(false);
+
+/// Did any endpoint in this process go dark (injected hard disconnect)?
+pub fn went_dark() -> bool {
+    WENT_DARK.load(Ordering::SeqCst)
+}
+
+/// One established connection. Writers serialize on `w` (one `write_all`
+/// per encoded frame, so frames never interleave); the original handle is
+/// kept for `shutdown`, which unblocks the reader thread from anywhere.
+struct Conn {
+    peer: usize,
+    stream: TcpStream,
+    w: Mutex<TcpStream>,
+}
+
+impl Conn {
+    fn new(peer: usize, stream: TcpStream) -> std::io::Result<Arc<Conn>> {
+        stream.set_nodelay(true)?;
+        let w = stream.try_clone()?;
+        Ok(Arc::new(Conn { peer, stream, w: Mutex::new(w) }))
+    }
+
+    fn write(&self, frame: &[u8]) -> std::io::Result<()> {
+        let mut w = self.w.lock().unwrap();
+        wire::write_frame(&mut *w, frame)
+    }
+
+    fn shutdown(&self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
+/// State shared by the backend handle and its detached reader / heartbeat
+/// / monitor threads. Threads hold `Arc<Shared>`, never `Arc<Transport>`,
+/// so dropping the transport (which stops the threads) is not a cycle.
+struct Shared {
+    n: usize,
+    local: usize,
+    conns: Vec<Option<Arc<Conn>>>,
+    killed: Vec<Arc<AtomicBool>>,
+    in_flight: Arc<Vec<Vec<AtomicU64>>>,
+    recv_stats: Vec<Arc<CommStats>>,
+    /// Per-peer nanoseconds-since-`t0` of the last observed frame.
+    last_seen: Vec<AtomicU64>,
+    t0: Instant,
+    /// Normal teardown in progress: sockets closing is expected, not death.
+    stop: AtomicBool,
+    /// A `Shutdown` broadcast was sent: peers dropping their sockets from
+    /// here on is the run ending, not a failure to record.
+    closing: AtomicBool,
+    /// This endpoint went dark (injected disconnect): no heartbeats, no
+    /// detection records, sockets deliberately left open.
+    dark: AtomicBool,
+    hb: HeartbeatConfig,
+    detections: Mutex<Vec<DeadRankDetection>>,
+    reconnects: AtomicU64,
+}
+
+impl Shared {
+    fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    fn touch(&self, peer: usize) {
+        self.last_seen[peer].store(self.now_ns(), Ordering::Relaxed);
+    }
+
+    /// Declare `peer` dead with the given cause, unless this process is
+    /// tearing down (stop/closing) or is itself the injected-dark victim.
+    /// First declaration wins; the latency is measured from the peer's
+    /// last observed liveness.
+    fn mark_dead(&self, peer: usize, cause: &'static str) {
+        if self.stop.load(Ordering::SeqCst)
+            || self.closing.load(Ordering::SeqCst)
+            || self.dark.load(Ordering::SeqCst)
+        {
+            return;
+        }
+        if self.killed[peer].swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // The leader (endpoint 0) is not a worker rank; its loss aborts
+        // the run rather than entering the recovery ledger.
+        if peer >= 1 {
+            let latency =
+                self.now_ns().saturating_sub(self.last_seen[peer].load(Ordering::Relaxed));
+            self.detections.lock().unwrap().push(DeadRankDetection {
+                rank: rank_of(peer),
+                latency_secs: latency as f64 * 1e-9,
+                cause,
+            });
+        }
+    }
+}
+
+/// One process-local view of the TCP cluster (the `Backend::Tcp` payload).
+pub struct TcpBackend {
+    shared: Arc<Shared>,
+}
+
+impl TcpBackend {
+    pub(super) fn write_to(&self, to: usize, frame: &[u8]) -> std::io::Result<()> {
+        match &self.shared.conns[to] {
+            Some(c) => c.write(frame),
+            None => Err(std::io::Error::new(
+                ErrorKind::NotConnected,
+                format!("no connection to endpoint {to}"),
+            )),
+        }
+    }
+
+    /// Consumer-side credit return: tell `to` that this endpoint dequeued
+    /// one of its messages. Best-effort — a dead sender needs no credit.
+    pub(super) fn ack(&self, to: usize, local: usize) {
+        if self.shared.killed[to].load(Ordering::SeqCst) {
+            return;
+        }
+        if let Some(c) = &self.shared.conns[to] {
+            let _ = c.write(&wire::encode_frame(&Frame::Ack { from: local }));
+        }
+    }
+
+    /// A `Shutdown` broadcast started: stop recording socket closes as
+    /// deaths.
+    pub(super) fn begin_close(&self) {
+        self.shared.closing.store(true, Ordering::SeqCst);
+    }
+
+    /// Backend half of [`Transport::kill`]: killing the local endpoint
+    /// closes every connection (peers get EOF — death with a broken
+    /// socket); killing a remote endpoint closes the connection to it.
+    pub(super) fn on_kill(&self, endpoint: usize) {
+        if endpoint == self.shared.local {
+            for c in self.shared.conns.iter().flatten() {
+                c.shutdown();
+            }
+        } else if let Some(c) = &self.shared.conns[endpoint] {
+            c.shutdown();
+        }
+    }
+
+    /// Injected hard disconnect: stop heartbeating but keep every socket
+    /// open and silent, forcing peers onto the heartbeat-timeout path.
+    pub(super) fn go_dark(&self) {
+        self.shared.dark.store(true, Ordering::SeqCst);
+        WENT_DARK.store(true, Ordering::SeqCst);
+    }
+
+    pub(super) fn health(&self, n: usize) -> TransportHealth {
+        let s = &self.shared;
+        let now = s.now_ns();
+        let mut ages = Vec::new();
+        for ep in 1..n {
+            if ep != s.local && s.conns[ep].is_some() {
+                let age = now.saturating_sub(s.last_seen[ep].load(Ordering::Relaxed));
+                ages.push((rank_of(ep), age as f64 * 1e-9));
+            }
+        }
+        TransportHealth {
+            backend: "tcp",
+            last_heartbeat_age_secs: ages,
+            detections: s.detections.lock().unwrap().clone(),
+            reconnect_attempts: s.reconnects.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for TcpBackend {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if !self.shared.dark.load(Ordering::SeqCst) {
+            for c in self.shared.conns.iter().flatten() {
+                c.shutdown();
+            }
+        }
+    }
+}
+
+// ---- per-connection / per-process threads ------------------------------
+
+fn reader_loop(shared: Arc<Shared>, conn: Arc<Conn>, tx: Sender<Envelope>) {
+    let mut stream = match conn.stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            shared.mark_dead(conn.peer, "socket-closed");
+            return;
+        }
+    };
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(Some(body)) => {
+                shared.touch(conn.peer);
+                match wire::decode_frame(&body) {
+                    Ok(Frame::Msg { from, msg }) => {
+                        // Actual wire bytes: body plus the length prefix.
+                        shared.recv_stats[shared.local].record(body.len() as u64 + 4);
+                        let env = Envelope { from, to: shared.local, msg };
+                        if tx.send(env).is_err() {
+                            return; // consumer gone — teardown
+                        }
+                    }
+                    Ok(Frame::Ack { .. }) => {
+                        // The peer dequeued one of our messages: one unit
+                        // of send-ahead credit comes back.
+                        shared.in_flight[shared.local][conn.peer].fetch_sub(1, Ordering::Relaxed);
+                    }
+                    Ok(Frame::Heartbeat { .. }) => {}
+                    Ok(_) => {} // stray handshake frame post-setup: ignore
+                    Err(_) => {
+                        shared.mark_dead(conn.peer, "codec-error");
+                        conn.shutdown();
+                        return;
+                    }
+                }
+            }
+            Ok(None) | Err(_) => {
+                shared.mark_dead(conn.peer, "socket-closed");
+                return;
+            }
+        }
+    }
+}
+
+fn heartbeat_loop(shared: Arc<Shared>) {
+    let interval = Duration::from_millis(shared.hb.interval_ms.max(1));
+    loop {
+        thread::sleep(interval);
+        if shared.stop.load(Ordering::SeqCst) || shared.dark.load(Ordering::SeqCst) {
+            return;
+        }
+        let frame = wire::encode_frame(&Frame::Heartbeat { from: shared.local });
+        for c in shared.conns.iter().flatten() {
+            if !shared.killed[c.peer].load(Ordering::SeqCst) {
+                let _ = c.write(&frame);
+            }
+        }
+    }
+}
+
+fn monitor_loop(shared: Arc<Shared>) {
+    let timeout_ns = shared.hb.timeout_ms.max(1) * 1_000_000;
+    let poll =
+        Duration::from_millis((shared.hb.timeout_ms / 4).clamp(1, shared.hb.interval_ms.max(1)));
+    loop {
+        thread::sleep(poll);
+        if shared.stop.load(Ordering::SeqCst) || shared.dark.load(Ordering::SeqCst) {
+            return;
+        }
+        let now = shared.now_ns();
+        for c in shared.conns.iter().flatten() {
+            if shared.killed[c.peer].load(Ordering::SeqCst) {
+                continue;
+            }
+            if now.saturating_sub(shared.last_seen[c.peer].load(Ordering::Relaxed)) > timeout_ns {
+                shared.mark_dead(c.peer, "heartbeat-timeout");
+                c.shutdown();
+            }
+        }
+    }
+}
+
+/// Assemble the process-local transport once every connection is
+/// established, and start its reader / heartbeat / monitor threads.
+fn build_transport(
+    local: usize,
+    n: usize,
+    credit: usize,
+    hb: HeartbeatConfig,
+    conns: Vec<Option<Arc<Conn>>>,
+    reconnects: u64,
+) -> (Arc<Transport>, Endpoint) {
+    let killed: Vec<Arc<AtomicBool>> =
+        (0..n).map(|_| Arc::new(AtomicBool::new(false))).collect();
+    let in_flight: Arc<Vec<Vec<AtomicU64>>> = Arc::new(
+        (0..n).map(|_| (0..n).map(|_| AtomicU64::new(0)).collect()).collect(),
+    );
+    let recv_stats: Vec<Arc<CommStats>> =
+        (0..n).map(|_| Arc::new(CommStats::default())).collect();
+    let send_stats: Vec<Arc<CommStats>> =
+        (0..n).map(|_| Arc::new(CommStats::default())).collect();
+    let t0 = Instant::now();
+    let shared = Arc::new(Shared {
+        n,
+        local,
+        conns,
+        killed: killed.clone(),
+        in_flight: Arc::clone(&in_flight),
+        recv_stats: recv_stats.clone(),
+        last_seen: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        t0,
+        stop: AtomicBool::new(false),
+        closing: AtomicBool::new(false),
+        dark: AtomicBool::new(false),
+        hb,
+        detections: Mutex::new(Vec::new()),
+        reconnects: AtomicU64::new(reconnects),
+    });
+    let (tx, rx) = channel();
+    for c in shared.conns.iter().flatten() {
+        let _ = c.stream.set_read_timeout(None);
+        shared.touch(c.peer);
+        let h = thread::Builder::new()
+            .name(format!("quorall-tcp-rx-{}-{}", local, c.peer))
+            .spawn({
+                let shared = Arc::clone(&shared);
+                let conn = Arc::clone(c);
+                let tx = tx.clone();
+                move || reader_loop(shared, conn, tx)
+            });
+        h.expect("spawn reader thread");
+    }
+    drop(tx);
+    thread::Builder::new()
+        .name(format!("quorall-tcp-hb-{local}"))
+        .spawn({
+            let shared = Arc::clone(&shared);
+            move || heartbeat_loop(shared)
+        })
+        .expect("spawn heartbeat thread");
+    thread::Builder::new()
+        .name(format!("quorall-tcp-mon-{local}"))
+        .spawn({
+            let shared = Arc::clone(&shared);
+            move || monitor_loop(shared)
+        })
+        .expect("spawn monitor thread");
+    Transport::from_tcp(
+        n,
+        credit,
+        local,
+        killed,
+        in_flight,
+        recv_stats,
+        send_stats,
+        TcpBackend { shared },
+        rx,
+    )
+}
+
+// ---- handshake helpers -------------------------------------------------
+
+fn accept_with_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+    what: &str,
+) -> anyhow::Result<TcpStream> {
+    listener.set_nonblocking(true)?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                listener.set_nonblocking(false)?;
+                s.set_nonblocking(false)?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                anyhow::ensure!(Instant::now() < deadline, "timed out waiting for {what}");
+                thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Dial with capped exponential backoff until the deadline. Returns the
+/// stream plus the number of attempts the loop needed (1 = first try).
+fn dial_backoff(addr: &str, deadline: Instant) -> anyhow::Result<(TcpStream, u64)> {
+    let mut delay = DIAL_BACKOFF_START;
+    let mut attempts = 0u64;
+    loop {
+        attempts += 1;
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok((s, attempts)),
+            Err(e) => {
+                anyhow::ensure!(
+                    Instant::now() + delay < deadline,
+                    "dial {addr} failed after {attempts} attempts: {e}"
+                );
+                thread::sleep(delay);
+                delay = (delay * 2).min(DIAL_BACKOFF_CAP);
+            }
+        }
+    }
+}
+
+/// Read one decoded frame from a handshake stream (read timeout applies).
+fn expect_frame(stream: &mut TcpStream, what: &str) -> anyhow::Result<Frame> {
+    match wire::read_frame(stream)? {
+        Some(body) => Ok(wire::decode_frame(&body)?),
+        None => anyhow::bail!("connection closed while waiting for {what}"),
+    }
+}
+
+// ---- leader setup ------------------------------------------------------
+
+/// Leader side of the join handshake: bind, publish the address, then
+/// [`TcpLeader::accept`] the whole cluster.
+pub struct TcpLeader {
+    listener: TcpListener,
+    n: usize,
+    credit: usize,
+    hb: HeartbeatConfig,
+    join_timeout: Duration,
+}
+
+impl TcpLeader {
+    /// Bind the leader listener on loopback (`n_endpoints` includes the
+    /// leader itself). `addr` is what workers pass to [`join`].
+    pub fn bind(
+        n_endpoints: usize,
+        credit: usize,
+        hb: HeartbeatConfig,
+        join_timeout: Duration,
+    ) -> anyhow::Result<TcpLeader> {
+        anyhow::ensure!(n_endpoints >= 2, "a TCP cluster needs at least one worker");
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        Ok(TcpLeader { listener, n: n_endpoints, credit, hb, join_timeout })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("listener has a local addr")
+    }
+
+    /// Accept all `n - 1` workers, run the Welcome/mesh/Ready handshake,
+    /// and return the leader's transport. `setup` is an opaque blob handed
+    /// to every worker in its Welcome (the process launcher packs the plan
+    /// and app spec into it; thread mode passes empty).
+    pub fn accept(self, setup: &[u8]) -> anyhow::Result<(Arc<Transport>, Endpoint)> {
+        let deadline = Instant::now() + self.join_timeout;
+        let mut joined: Vec<Option<(TcpStream, String)>> = (0..self.n).map(|_| None).collect();
+        let mut reconnects = 0u64;
+        for _ in 1..self.n {
+            let mut stream = accept_with_deadline(&self.listener, deadline, "worker join")?;
+            stream.set_read_timeout(Some(self.join_timeout))?;
+            let frame = expect_frame(&mut stream, "hello")?;
+            let Frame::Hello { endpoint, listen_port, attempts } = frame else {
+                anyhow::bail!("expected hello, got {}", frame.kind());
+            };
+            anyhow::ensure!(
+                (1..self.n).contains(&endpoint),
+                "hello from invalid endpoint {endpoint} (cluster has {})",
+                self.n
+            );
+            anyhow::ensure!(joined[endpoint].is_none(), "endpoint {endpoint} joined twice");
+            let mesh_addr = format!("{}:{}", stream.peer_addr()?.ip(), listen_port);
+            reconnects += attempts.saturating_sub(1);
+            joined[endpoint] = Some((stream, mesh_addr));
+        }
+        let peers: Vec<(usize, String)> = joined
+            .iter()
+            .enumerate()
+            .filter_map(|(ep, j)| j.as_ref().map(|(_, addr)| (ep, addr.clone())))
+            .collect();
+        let welcome = wire::encode_frame(&Frame::Welcome {
+            n_endpoints: self.n,
+            credit: self.credit,
+            hb_interval_ms: self.hb.interval_ms,
+            hb_timeout_ms: self.hb.timeout_ms,
+            peers,
+            setup: setup.to_vec(),
+        });
+        for (stream, _) in joined.iter_mut().flatten() {
+            wire::write_frame(stream, &welcome)?;
+        }
+        // Wait for every worker to finish its mesh before declaring the
+        // cluster up (heartbeats may already be interleaved — skip them).
+        for (ep, slot) in joined.iter_mut().enumerate() {
+            let Some((stream, _)) = slot else { continue };
+            loop {
+                let frame = expect_frame(stream, "ready")?;
+                match frame {
+                    Frame::Ready { endpoint } => {
+                        anyhow::ensure!(endpoint == ep, "ready from wrong endpoint {endpoint}");
+                        break;
+                    }
+                    Frame::Heartbeat { .. } => continue,
+                    f => anyhow::bail!("expected ready from endpoint {ep}, got {}", f.kind()),
+                }
+            }
+        }
+        let mut conns: Vec<Option<Arc<Conn>>> = (0..self.n).map(|_| None).collect();
+        for (ep, slot) in joined.into_iter().enumerate() {
+            if let Some((stream, _)) = slot {
+                conns[ep] = Some(Conn::new(ep, stream)?);
+            }
+        }
+        Ok(build_transport(0, self.n, self.credit, self.hb, conns, reconnects))
+    }
+}
+
+// ---- worker setup ------------------------------------------------------
+
+/// What a worker gets back from [`join`]: its transport plus the leader's
+/// opaque setup blob (empty in thread mode).
+pub struct JoinedWorker {
+    pub transport: Arc<Transport>,
+    pub endpoint: Endpoint,
+    pub setup: Vec<u8>,
+}
+
+/// Worker side of the join handshake (`quorall worker --join <addr>
+/// --rank <r>` lands here, as do the driver's thread-mode workers).
+/// `endpoint` is the worker's endpoint id (`endpoint_of(rank)`).
+pub fn join(leader: &str, endpoint: usize, join_timeout: Duration) -> anyhow::Result<JoinedWorker> {
+    anyhow::ensure!(endpoint >= 1, "endpoint 0 is the leader");
+    let deadline = Instant::now() + join_timeout;
+    let mesh_listener = TcpListener::bind("127.0.0.1:0")?;
+    let listen_port = mesh_listener.local_addr()?.port();
+    let (mut leader_stream, attempts) = dial_backoff(leader, deadline)?;
+    leader_stream.set_nodelay(true)?;
+    leader_stream.set_read_timeout(Some(join_timeout))?;
+    wire::write_frame(
+        &mut leader_stream,
+        &wire::encode_frame(&Frame::Hello { endpoint, listen_port, attempts }),
+    )?;
+    let frame = expect_frame(&mut leader_stream, "welcome")?;
+    let Frame::Welcome { n_endpoints, credit, hb_interval_ms, hb_timeout_ms, peers, setup } = frame
+    else {
+        anyhow::bail!("expected welcome, got {}", frame.kind());
+    };
+    anyhow::ensure!(endpoint < n_endpoints, "endpoint {endpoint} outside cluster {n_endpoints}");
+    let hb = HeartbeatConfig { interval_ms: hb_interval_ms, timeout_ms: hb_timeout_ms };
+    let mut reconnects = attempts.saturating_sub(1);
+    let mut conns: Vec<Option<Arc<Conn>>> = (0..n_endpoints).map(|_| None).collect();
+    conns[0] = Some(Conn::new(0, leader_stream)?);
+    // Mesh: dial every worker peer with a smaller endpoint id (its
+    // listener is guaranteed bound — the leader learned the port from its
+    // Hello), introduce ourselves with a Mesh frame…
+    for (peer, addr) in peers.iter().filter(|(p, _)| *p != endpoint && *p < endpoint) {
+        let (mut s, tries) = dial_backoff(addr, deadline)?;
+        reconnects += tries.saturating_sub(1);
+        s.set_nodelay(true)?;
+        wire::write_frame(&mut s, &wire::encode_frame(&Frame::Mesh { from: endpoint }))?;
+        conns[*peer] = Some(Conn::new(*peer, s)?);
+    }
+    // …and accept every peer with a larger id (they dial us).
+    let expected: Vec<usize> =
+        peers.iter().filter(|(p, _)| *p > endpoint).map(|(p, _)| *p).collect();
+    let mut pending = expected.len();
+    while pending > 0 {
+        let mut s = accept_with_deadline(&mesh_listener, deadline, "mesh peer")?;
+        s.set_read_timeout(Some(join_timeout))?;
+        let frame = expect_frame(&mut s, "mesh")?;
+        let Frame::Mesh { from } = frame else {
+            anyhow::bail!("expected mesh, got {}", frame.kind());
+        };
+        anyhow::ensure!(
+            expected.contains(&from) && conns[from].is_none(),
+            "unexpected mesh connection from endpoint {from}"
+        );
+        conns[from] = Some(Conn::new(from, s)?);
+        pending -= 1;
+    }
+    if let Some(c) = &conns[0] {
+        c.write(&wire::encode_frame(&Frame::Ready { endpoint }))?;
+    }
+    let (transport, ep) = build_transport(endpoint, n_endpoints, credit, hb, conns, reconnects);
+    Ok(JoinedWorker { transport, endpoint: ep, setup })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::Message;
+    use crate::coordinator::transport::{SendError, TransportKind, DEFAULT_SEND_AHEAD_CREDIT};
+
+    /// Stand up a loopback cluster of `n` endpoints (leader + n-1 worker
+    /// threads) and return every rank's (transport, endpoint).
+    fn cluster(n: usize, hb: HeartbeatConfig) -> Vec<(Arc<Transport>, Endpoint)> {
+        let leader =
+            TcpLeader::bind(n, DEFAULT_SEND_AHEAD_CREDIT, hb, Duration::from_secs(10)).unwrap();
+        let addr = leader.addr().to_string();
+        let joins: Vec<_> = (1..n)
+            .map(|ep| {
+                let addr = addr.clone();
+                thread::spawn(move || join(&addr, ep, Duration::from_secs(10)).unwrap())
+            })
+            .collect();
+        let mut out = vec![leader.accept(&[]).unwrap()];
+        for j in joins {
+            let w = j.join().unwrap();
+            out.push((w.transport, w.endpoint));
+        }
+        out.sort_by_key(|(_, ep)| ep.rank);
+        out
+    }
+
+    fn wait_until(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if f() {
+                return true;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+        f()
+    }
+
+    #[test]
+    fn loopback_point_to_point_and_byte_parity() {
+        let cl = cluster(3, HeartbeatConfig::default());
+        assert_eq!(cl[0].0.kind(), TransportKind::Tcp);
+        cl[0].1.send(1, Message::Proceed).unwrap();
+        let env = cl[1].1.recv().unwrap();
+        assert_eq!(env.from, 0);
+        assert_eq!(env.to, 1);
+        assert_eq!(env.msg.kind(), "proceed");
+        // Worker→worker rides the mesh, not the leader.
+        cl[1].1.send(2, Message::PhaseDone { phase: 1 }).unwrap();
+        assert_eq!(cl[2].1.recv().unwrap().msg.kind(), "phase-done");
+        // Sender and receiver count the same wire bytes for a message.
+        let sent = cl[0].1.sent();
+        assert!(
+            wait_until(Duration::from_secs(2), || cl[1].1.received().1 >= sent.1),
+            "receiver saw {} of {} sent bytes",
+            cl[1].1.received().1,
+            sent.1
+        );
+    }
+
+    #[test]
+    fn ack_frames_return_send_ahead_credit() {
+        let cl = cluster(2, HeartbeatConfig::default());
+        for _ in 0..DEFAULT_SEND_AHEAD_CREDIT {
+            cl[0].1.send(1, Message::Proceed).unwrap();
+        }
+        assert_eq!(cl[0].0.in_flight(0, 1), DEFAULT_SEND_AHEAD_CREDIT as u64);
+        assert!(!cl[0].1.can_send_ahead(1));
+        cl[1].1.recv().unwrap();
+        // The dequeue's Ack travels back and returns one credit.
+        assert!(
+            wait_until(Duration::from_secs(2), || cl[0].1.can_send_ahead(1)),
+            "credit never returned; in flight {}",
+            cl[0].0.in_flight(0, 1)
+        );
+    }
+
+    #[test]
+    fn broken_socket_is_detected_as_death() {
+        let cl = cluster(3, HeartbeatConfig::default());
+        // Worker rank 0 (endpoint 1) dies with a goodbye-less socket close.
+        cl[1].0.kill(1);
+        assert!(
+            wait_until(Duration::from_secs(2), || cl[0].0.is_killed(1)),
+            "leader never noticed the broken socket"
+        );
+        let h = cl[0].0.health();
+        assert_eq!(h.backend, "tcp");
+        assert_eq!(h.detections.len(), 1);
+        assert_eq!(h.detections[0].rank, 0);
+        assert_eq!(h.detections[0].cause, "socket-closed");
+        assert_eq!(cl[0].1.send(1, Message::Proceed).unwrap_err(), SendError::Killed(1));
+        // The surviving worker still works.
+        cl[0].1.send(2, Message::Proceed).unwrap();
+        assert_eq!(cl[2].1.recv().unwrap().msg.kind(), "proceed");
+    }
+
+    #[test]
+    fn silent_socket_is_detected_by_heartbeat_timeout() {
+        let hb = HeartbeatConfig { interval_ms: 10, timeout_ms: 150 };
+        let cl = cluster(3, hb);
+        // Endpoint 1 goes dark: sockets stay open, heartbeats stop.
+        cl[1].1.go_dark();
+        assert!(
+            wait_until(Duration::from_secs(5), || cl[0].0.is_killed(1)),
+            "leader never timed out the silent socket"
+        );
+        let h = cl[0].0.health();
+        assert_eq!(h.detections.len(), 1, "detections: {:?}", h.detections);
+        assert_eq!(h.detections[0].rank, 0);
+        assert_eq!(h.detections[0].cause, "heartbeat-timeout");
+        // Detection latency is at least the configured timeout (the victim
+        // was last seen just before going dark) and reported as such.
+        assert!(
+            h.detections[0].latency_secs >= 0.140,
+            "latency {} below timeout",
+            h.detections[0].latency_secs
+        );
+        // Peers time the victim out too, independently of the leader.
+        assert!(wait_until(Duration::from_secs(5), || cl[2].0.is_killed(1)));
+    }
+
+    #[test]
+    fn health_reports_fresh_heartbeats_for_live_ranks() {
+        let hb = HeartbeatConfig { interval_ms: 10, timeout_ms: 500 };
+        let cl = cluster(3, hb);
+        thread::sleep(Duration::from_millis(100));
+        let h = cl[0].0.health();
+        assert_eq!(h.last_heartbeat_age_secs.len(), 2);
+        for (rank, age) in &h.last_heartbeat_age_secs {
+            assert!(*age < 0.25, "rank {rank} heartbeat age {age} too old");
+        }
+        assert!(h.detections.is_empty());
+    }
+
+    #[test]
+    fn join_rejects_bad_endpoint() {
+        let leader = TcpLeader::bind(
+            2,
+            DEFAULT_SEND_AHEAD_CREDIT,
+            HeartbeatConfig::default(),
+            Duration::from_secs(2),
+        )
+        .unwrap();
+        let addr = leader.addr().to_string();
+        let j = thread::spawn(move || join(&addr, 5, Duration::from_secs(2)));
+        assert!(leader.accept(&[]).is_err());
+        assert!(j.join().unwrap().is_err());
+    }
+}

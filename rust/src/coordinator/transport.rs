@@ -1,18 +1,32 @@
-//! In-process channel transport playing MPI's role.
+//! Transport abstraction playing MPI's role: an in-memory channel backend
+//! and a real TCP socket backend behind one interface.
 //!
 //! Rank 0 is the leader; ranks 1..=P are workers (worker w simulates MPI
 //! rank w-1 of the paper's job). Every send is counted (messages + bytes,
 //! global and per-rank) so communication-volume claims are measured, not
-//! modeled. Failure injection: a rank can be "killed" — sends to it vanish
-//! (byte-counted), and its queue raises `Disconnected` for receivers.
+//! modeled.
+//!
+//! The **memory** backend ([`Transport::with_credit`]) is the original
+//! in-process mpsc transport: sends are queue pushes, bytes are the logical
+//! accounting model (Arc-shared scatter buffers count once), and failure
+//! injection is a `kill` flag. The **TCP** backend (`coordinator/tcp.rs`,
+//! [`crate::coordinator::tcp::TcpLeader`]) runs every rank over real
+//! sockets with the hand-rolled wire codec (`coordinator/wire.rs`): bytes
+//! are actual encoded frame bytes (replicas physically ship their
+//! payloads), failure is discovered from a broken socket (reader EOF) or a
+//! silent one (heartbeat timeout), and `kill` maps to socket shutdown.
+//! Either way the engine above sees the same [`Endpoint`] semantics.
 //!
 //! Pipelining support: each rank **owns** its receive queue (no lock on the
 //! hot receive path — a rank's receiver is only ever used by its own
-//! thread), receives can be non-blocking ([`Endpoint::try_recv`]), time
-//! actually spent blocked inside a receive is accounted per rank (the
+//! thread; the TCP backend's per-connection reader threads feed the same
+//! owned queue), receives can be non-blocking ([`Endpoint::try_recv`]),
+//! time actually spent blocked inside a receive is accounted per rank (the
 //! overlap-ratio metric in `EngineReport`), and per-destination in-flight
 //! message counts bound how far ahead a pipelined sender may run
-//! ([`Endpoint::can_send_ahead`]).
+//! ([`Endpoint::can_send_ahead`]). On TCP the in-flight count decrements
+//! when the consumer's dequeue sends an `Ack` frame back — same
+//! "queued until dequeued" semantics, measured over the wire.
 //!
 //! Scatter traffic rides the same per-(sender, destination) in-flight
 //! credit: the leader's streamed block scatter consults
@@ -20,8 +34,8 @@
 //! paces its own stream without starving anyone else's. Delivered scatter
 //! bytes (`AssignData` / `AssignBlock`) are additionally totalled in
 //! [`Transport::scatter_bytes`] — with Arc-shared block buffers each
-//! distinct block's payload counts once, which is what the `comm_volume`
-//! bench asserts against the per-replica model.
+//! distinct block's payload counts once on the memory backend, while the
+//! TCP backend counts what actually crossed the socket.
 
 use super::messages::Message;
 use crate::metrics::CommStats;
@@ -37,6 +51,37 @@ use std::time::Instant;
 /// P · credit messages per queue) the way a real non-blocking MPI
 /// implementation bounds outstanding `MPI_Isend`s.
 pub const DEFAULT_SEND_AHEAD_CREDIT: usize = 4;
+
+/// Which transport backend an engine run uses (`--transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels (threads simulate ranks) — the default.
+    Memory,
+    /// Real TCP sockets with the length-prefixed wire codec, join
+    /// handshake, and heartbeat failure detection. Ranks run as threads
+    /// over loopback by default; the process launcher
+    /// (`EngineOptions::tcp_processes`) spawns them as separate OS
+    /// processes (`quorall worker --join <leader-addr> --rank <r>`).
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse `memory | mem | tcp`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "memory" | "mem" => Some(TransportKind::Memory),
+            "tcp" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Memory => "memory",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
 
 /// Endpoint index of worker rank `r`: the leader owns endpoint 0; worker
 /// rank `r` (= dataset block `r`) listens on endpoint `r + 1`. Every
@@ -64,30 +109,74 @@ pub struct Envelope {
     pub msg: Message,
 }
 
-/// Shared transport state.
+/// How one dead rank was discovered, with the failure detector's latency.
+#[derive(Clone, Debug)]
+pub struct DeadRankDetection {
+    /// Worker rank that died.
+    pub rank: usize,
+    /// Seconds between the rank's last observed liveness (frame arrival /
+    /// heartbeat) and the moment the detector declared it dead. For a
+    /// heartbeat-timeout detection this is ≈ the configured timeout; for a
+    /// broken socket it is near zero.
+    pub latency_secs: f64,
+    /// `"heartbeat-timeout"` (silent socket), `"socket-closed"` (broken
+    /// socket / EOF), or `"injected"` (memory-backend kill flag).
+    pub cause: &'static str,
+}
+
+/// Failure-detector observability snapshot ([`Transport::health`]): what
+/// `EngineReport`/`DistributedReport` surface per run.
+#[derive(Clone, Debug, Default)]
+pub struct TransportHealth {
+    /// Backend name (`memory` / `tcp`).
+    pub backend: &'static str,
+    /// Per worker rank: seconds since the last observed liveness signal at
+    /// snapshot time (empty on the memory backend, which has no wire).
+    pub last_heartbeat_age_secs: Vec<(usize, f64)>,
+    /// One record per dead rank the detector declared, in detection order.
+    pub detections: Vec<DeadRankDetection>,
+    /// Total extra join/dial attempts the capped-exponential-backoff
+    /// connect loops needed beyond the first try (0 = every connection
+    /// landed immediately).
+    pub reconnect_attempts: u64,
+}
+
+/// Transport backend: the concrete machinery behind [`Transport`]'s
+/// uniform accounting (send/recv stats, killed flags, in-flight credit).
+pub(super) enum Backend {
+    /// In-process mpsc queues, indexed by destination endpoint.
+    Memory { senders: Vec<Sender<Envelope>> },
+    /// Real sockets (one process-local view of the cluster).
+    Tcp(super::tcp::TcpBackend),
+}
+
+/// Shared transport state (one instance per process; the memory backend's
+/// single instance is shared by every rank thread, a TCP instance is one
+/// rank's local view of the cluster).
 pub struct Transport {
-    n_endpoints: usize,
-    senders: Vec<Sender<Envelope>>,
+    pub(super) n_endpoints: usize,
     /// Per-rank received-byte counters (indexed by receiver).
     pub recv_stats: Vec<Arc<CommStats>>,
     /// Per-rank sent-byte counters (indexed by sender).
     pub send_stats: Vec<Arc<CommStats>>,
-    killed: Vec<Arc<AtomicBool>>,
+    pub(super) killed: Vec<Arc<AtomicBool>>,
     /// `in_flight[from][to]`: messages sent by `from`, queued at `to`, not
     /// yet dequeued. Per-(sender, destination) so one rank's send-ahead
     /// credit never depends on unrelated ranks' traffic (P workers can each
-    /// stream to the leader without starving each other).
-    in_flight: Vec<Vec<AtomicU64>>,
+    /// stream to the leader without starving each other). On TCP only the
+    /// local endpoint's row is maintained (decremented by `Ack` frames).
+    pub(super) in_flight: Arc<Vec<Vec<AtomicU64>>>,
     /// Send-ahead credit per (sender, destination) pair (see
     /// [`DEFAULT_SEND_AHEAD_CREDIT`]).
-    credit: usize,
+    pub(super) credit: usize,
     /// Delivered scatter bytes (`AssignData` / `AssignBlock` payloads).
-    scatter_bytes: AtomicU64,
+    pub(super) scatter_bytes: AtomicU64,
+    pub(super) backend: Backend,
 }
 
 impl Transport {
-    /// Create a transport with `n_endpoints` ranks (incl. leader at 0).
-    /// Returns the transport plus one [`Endpoint`] per rank.
+    /// Create an in-memory transport with `n_endpoints` ranks (incl. leader
+    /// at 0). Returns the transport plus one [`Endpoint`] per rank.
     pub fn new(n_endpoints: usize) -> (Arc<Transport>, Vec<Endpoint>) {
         Self::with_credit(n_endpoints, DEFAULT_SEND_AHEAD_CREDIT)
     }
@@ -103,17 +192,19 @@ impl Transport {
         }
         let transport = Arc::new(Transport {
             n_endpoints,
-            senders,
             recv_stats: (0..n_endpoints).map(|_| Arc::new(CommStats::default())).collect(),
             send_stats: (0..n_endpoints).map(|_| Arc::new(CommStats::default())).collect(),
             killed: (0..n_endpoints).map(|_| Arc::new(AtomicBool::new(false))).collect(),
-            in_flight: (0..n_endpoints)
-                .map(|_| (0..n_endpoints).map(|_| AtomicU64::new(0)).collect())
-                .collect(),
+            in_flight: Arc::new(
+                (0..n_endpoints)
+                    .map(|_| (0..n_endpoints).map(|_| AtomicU64::new(0)).collect())
+                    .collect(),
+            ),
             // credit 0 is honored: can_send_ahead is always false, giving
             // synchronous ordering even with pipelining requested.
             credit,
             scatter_bytes: AtomicU64::new(0),
+            backend: Backend::Memory { senders },
         });
         let endpoints = receivers
             .into_iter()
@@ -128,13 +219,64 @@ impl Transport {
         (transport, endpoints)
     }
 
+    /// Assemble a transport around an established TCP backend (one
+    /// process-local view; used by the TCP setup paths in
+    /// `coordinator/tcp.rs`). `local` is this process's endpoint id.
+    pub(super) fn from_tcp(
+        n_endpoints: usize,
+        credit: usize,
+        local: usize,
+        killed: Vec<Arc<AtomicBool>>,
+        in_flight: Arc<Vec<Vec<AtomicU64>>>,
+        recv_stats: Vec<Arc<CommStats>>,
+        send_stats: Vec<Arc<CommStats>>,
+        backend: super::tcp::TcpBackend,
+        rx: Receiver<Envelope>,
+    ) -> (Arc<Transport>, Endpoint) {
+        let transport = Arc::new(Transport {
+            n_endpoints,
+            recv_stats,
+            send_stats,
+            killed,
+            in_flight,
+            credit,
+            scatter_bytes: AtomicU64::new(0),
+            backend: Backend::Tcp(backend),
+        });
+        let ep = Endpoint {
+            rank: local,
+            rx,
+            transport: Arc::clone(&transport),
+            blocked_nanos: Cell::new(0),
+        };
+        (transport, ep)
+    }
+
     pub fn endpoints(&self) -> usize {
         self.n_endpoints
     }
 
-    /// Mark a rank as failed: subsequent sends to it are dropped.
+    /// Which backend this transport runs on.
+    pub fn kind(&self) -> TransportKind {
+        match &self.backend {
+            Backend::Memory { .. } => TransportKind::Memory,
+            Backend::Tcp(_) => TransportKind::Tcp,
+        }
+    }
+
+    /// Mark a rank as failed. Backend-specific semantics: on the memory
+    /// backend this raises the kill flag (sends to the rank are dropped);
+    /// on TCP it additionally maps to **socket shutdown** — killing the
+    /// local endpoint closes every connection (peers discover the death
+    /// from the broken socket), killing a remote endpoint closes the
+    /// connection to it.
     pub fn kill(&self, rank: usize) {
-        self.killed[rank].store(true, Ordering::SeqCst);
+        let fresh = !self.killed[rank].swap(true, Ordering::SeqCst);
+        if let Backend::Tcp(t) = &self.backend {
+            if fresh {
+                t.on_kill(rank);
+            }
+        }
     }
 
     pub fn is_killed(&self, rank: usize) -> bool {
@@ -148,33 +290,68 @@ impl Transport {
 
     fn send(&self, from: usize, to: usize, msg: Message) -> Result<(), SendError> {
         assert!(to < self.n_endpoints, "rank {to} out of range");
-        let bytes = msg.payload_bytes();
-        self.send_stats[from].record(bytes);
-        if self.is_killed(to) {
-            return Err(SendError::Killed(to));
+        match &self.backend {
+            Backend::Memory { senders } => {
+                let bytes = msg.payload_bytes();
+                self.send_stats[from].record(bytes);
+                if self.is_killed(to) {
+                    return Err(SendError::Killed(to));
+                }
+                self.recv_stats[to].record(bytes);
+                if matches!(msg, Message::AssignData { .. } | Message::AssignBlock(_)) {
+                    self.scatter_bytes.fetch_add(bytes, Ordering::Relaxed);
+                }
+                self.in_flight[from][to].fetch_add(1, Ordering::Relaxed);
+                senders[to].send(Envelope { from, to, msg }).map_err(|_| {
+                    self.in_flight[from][to].fetch_sub(1, Ordering::Relaxed);
+                    SendError::Disconnected(to)
+                })
+            }
+            Backend::Tcp(t) => {
+                let scatter =
+                    matches!(msg, Message::AssignData { .. } | Message::AssignBlock(_));
+                // A Shutdown broadcast means the run is tearing down:
+                // peers dropping their sockets from here on is normal, not
+                // a death to record.
+                if matches!(msg, Message::Shutdown) {
+                    t.begin_close();
+                }
+                let frame =
+                    super::wire::encode_frame(&super::wire::Frame::Msg { from, msg });
+                let bytes = frame.len() as u64;
+                self.send_stats[from].record(bytes);
+                if self.is_killed(to) {
+                    return Err(SendError::Killed(to));
+                }
+                if scatter {
+                    self.scatter_bytes.fetch_add(bytes, Ordering::Relaxed);
+                }
+                self.in_flight[from][to].fetch_add(1, Ordering::Relaxed);
+                t.write_to(to, &frame).map_err(|_| {
+                    self.in_flight[from][to].fetch_sub(1, Ordering::Relaxed);
+                    // A failed write is how a sender discovers a broken
+                    // peer socket — same observable as the memory
+                    // backend's killed-flag drop.
+                    self.killed[to].store(true, Ordering::SeqCst);
+                    SendError::Killed(to)
+                })
+            }
         }
-        self.recv_stats[to].record(bytes);
-        if matches!(msg, Message::AssignData { .. } | Message::AssignBlock(_)) {
-            self.scatter_bytes.fetch_add(bytes, Ordering::Relaxed);
-        }
-        self.in_flight[from][to].fetch_add(1, Ordering::Relaxed);
-        self.senders[to]
-            .send(Envelope { from, to, msg })
-            .map_err(|_| {
-                self.in_flight[from][to].fetch_sub(1, Ordering::Relaxed);
-                SendError::Disconnected(to)
-            })
     }
 
     /// Total delivered scatter bytes (`AssignData` / `AssignBlock`,
     /// headers included). With Arc-shared block buffers every distinct
-    /// block's payload is counted exactly once; replica deliveries add a
-    /// header each.
+    /// block's payload is counted exactly once on the memory backend;
+    /// the TCP backend counts encoded frame bytes (replicas physically
+    /// ship their payloads over the socket).
     pub fn scatter_bytes(&self) -> u64 {
         self.scatter_bytes.load(Ordering::Relaxed)
     }
 
-    /// Total (messages, bytes) received across all ranks.
+    /// Total (messages, bytes) received across all ranks this instance can
+    /// see — every rank on the memory backend, the local endpoint only on
+    /// TCP (each process has its own view; the driver sums gathered
+    /// per-rank stats instead).
     pub fn total_received(&self) -> (u64, u64) {
         let mut msgs = 0;
         let mut bytes = 0;
@@ -185,11 +362,38 @@ impl Transport {
         }
         (msgs, bytes)
     }
+
+    /// Failure-detector snapshot: per-rank last-heartbeat ages, detection
+    /// records for dead ranks, reconnect-attempt counts. The memory
+    /// backend reports kill-flag state as `injected` detections with no
+    /// latency (it has no wire to measure).
+    pub fn health(&self) -> TransportHealth {
+        match &self.backend {
+            Backend::Memory { .. } => {
+                let detections = (1..self.n_endpoints)
+                    .filter(|&ep| self.is_killed(ep))
+                    .map(|ep| DeadRankDetection {
+                        rank: rank_of(ep),
+                        latency_secs: 0.0,
+                        cause: "injected",
+                    })
+                    .collect();
+                TransportHealth {
+                    backend: "memory",
+                    last_heartbeat_age_secs: Vec::new(),
+                    detections,
+                    reconnect_attempts: 0,
+                }
+            }
+            Backend::Tcp(t) => t.health(self.n_endpoints),
+        }
+    }
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SendError {
-    /// Destination was killed by failure injection.
+    /// Destination was killed by failure injection (or, on TCP, its socket
+    /// is broken).
     Killed(usize),
     /// Destination endpoint dropped (normal shutdown ordering).
     Disconnected(usize),
@@ -265,8 +469,17 @@ impl Endpoint {
         out
     }
 
+    /// Consumer-side dequeue bookkeeping: the memory backend decrements the
+    /// shared in-flight counter directly; the TCP backend returns the
+    /// sender's send-ahead credit by writing an `Ack` frame back over the
+    /// connection the message came in on.
     fn dequeued(&self, env: &Envelope) {
-        self.transport.in_flight[env.from][self.rank].fetch_sub(1, Ordering::Relaxed);
+        match &self.transport.backend {
+            Backend::Memory { .. } => {
+                self.transport.in_flight[env.from][self.rank].fetch_sub(1, Ordering::Relaxed);
+            }
+            Backend::Tcp(t) => t.ack(env.from, self.rank),
+        }
     }
 
     fn block(&self, start: Instant) {
@@ -288,6 +501,28 @@ impl Endpoint {
 
     pub fn transport(&self) -> &Arc<Transport> {
         &self.transport
+    }
+
+    /// Go dark: die **without any goodbye** — the `disconnect` kill
+    /// flavor. On TCP the endpoint stops heartbeating but its sockets stay
+    /// open and silent (the leaked transport handle keeps them alive), so
+    /// peers only discover the death via heartbeat timeout. The memory
+    /// backend has no wire to go silent on, so this degrades to the
+    /// ordinary kill flag.
+    pub fn go_dark(&self) {
+        match &self.transport.backend {
+            Backend::Memory { .. } => self.transport.kill(self.rank),
+            Backend::Tcp(t) => {
+                self.transport.killed[self.rank].store(true, Ordering::SeqCst);
+                t.go_dark();
+                // Keep the sockets open-but-silent until process exit:
+                // dropping the transport would close them and hand peers a
+                // tidy EOF, which is exactly what a hard disconnect does
+                // not do. Leaks one transport per injected disconnect, by
+                // design.
+                std::mem::forget(Arc::clone(&self.transport));
+            }
+        }
     }
 
     /// (messages, bytes) received by this rank so far.
@@ -318,6 +553,17 @@ mod tests {
     #[should_panic(expected = "endpoint 0 is the leader")]
     fn rank_of_rejects_the_leader_endpoint() {
         let _ = rank_of(0);
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("memory"), Some(TransportKind::Memory));
+        assert_eq!(TransportKind::parse("mem"), Some(TransportKind::Memory));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("udp"), None);
+        assert_eq!(TransportKind::Memory.name(), "memory");
+        assert_eq!(TransportKind::Tcp.name(), "tcp");
+        assert_eq!(TransportKind::parse(TransportKind::Tcp.name()), Some(TransportKind::Tcp));
     }
 
     #[test]
@@ -363,6 +609,28 @@ mod tests {
         assert_eq!(err, SendError::Killed(1));
         // Nothing delivered.
         assert!(eps[1].recv_timeout(std::time::Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn memory_health_reports_kills_as_injected() {
+        let (t, _eps) = Transport::new(4);
+        assert_eq!(t.kind(), TransportKind::Memory);
+        assert!(t.health().detections.is_empty());
+        t.kill(endpoint_of(2));
+        let h = t.health();
+        assert_eq!(h.backend, "memory");
+        assert_eq!(h.detections.len(), 1);
+        assert_eq!(h.detections[0].rank, 2);
+        assert_eq!(h.detections[0].cause, "injected");
+        assert_eq!(h.reconnect_attempts, 0);
+    }
+
+    #[test]
+    fn memory_go_dark_degrades_to_kill_flag() {
+        let (t, eps) = Transport::new(3);
+        eps[1].go_dark();
+        assert!(t.is_killed(1));
+        assert_eq!(eps[0].send(1, Message::Proceed).unwrap_err(), SendError::Killed(1));
     }
 
     #[test]

@@ -5,15 +5,20 @@
 //! * `pcit`       — run distributed (or single-node) PCIT on synthetic/CSV data
 //! * `similarity` — distributed all-pairs similarity (top-k report)
 //! * `nbody`      — placement-decomposed n-body demo
+//! * `worker`     — join a TCP leader as one rank (spawned by the process launcher)
 //! * `sim`        — analytic cluster-model predictions (Figure 2 extrapolation)
 //! * `info`       — environment/runtime report
 //!
 //! The distributed commands take `--strategy {cyclic,grid,full}` to select
-//! the placement the engine runs under.
+//! the placement the engine runs under, and `--transport {memory,tcp}` to
+//! run the ranks over in-process channels or real loopback sockets with
+//! heartbeat failure detection.
 
 use quorall::cli::{App, ArgSpec, Command, ParseOutcome, Parsed};
 use quorall::config::{BackendKind, DatasetConfig, PcitMode, RunConfig};
-use quorall::coordinator::{run_distributed_pcit, run_single_node, EngineOptions, KillAt};
+use quorall::coordinator::{
+    run_distributed_pcit, run_single_node, EngineOptions, KillAt, TransportKind,
+};
 use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
 use quorall::metrics::Table;
 use quorall::quorum::{self, CyclicQuorumSet, Strategy};
@@ -43,8 +48,28 @@ fn app() -> App {
                 .arg(ArgSpec::opt("scatter", "block scatter: streamed | monolithic", ""))
                 .arg(ArgSpec::opt("redundancy", "owners per pair (r-fold placement)", ""))
                 .arg(ArgSpec::opt("kill", "failure injection: ranks to crash, e.g. 4 or 2,5", ""))
-                .arg(ArgSpec::opt("kill-at", "injection phase: scatter | compute:<k> | gather", ""))
+                .arg(ArgSpec::opt(
+                    "kill-at",
+                    "phase: scatter | compute:<k> | gather | disconnect[:<k>] (comma-list = one per victim)",
+                    "",
+                ))
                 .arg(ArgSpec::opt("recover", "re-assign a dead rank's tasks mid-run: on | off", ""))
+                .arg(ArgSpec::opt(
+                    "transport",
+                    "rank transport: memory | tcp (loopback sockets)",
+                    "",
+                ))
+                .arg(ArgSpec::opt(
+                    "processes",
+                    "TCP only: one OS process per rank (the launcher): on | off",
+                    "",
+                ))
+                .arg(ArgSpec::opt("heartbeat-ms", "TCP heartbeat interval (ms)", ""))
+                .arg(ArgSpec::opt(
+                    "heartbeat-timeout-ms",
+                    "TCP silence window before a peer is declared dead (ms)",
+                    "",
+                ))
                 .arg(ArgSpec::opt("backend", "native | xla", "native"))
                 .arg(ArgSpec::opt("seed", "dataset seed", "42"))
                 .arg(ArgSpec::opt("csv", "load expression CSV instead of synthetic", ""))
@@ -61,8 +86,28 @@ fn app() -> App {
                 .arg(ArgSpec::opt("scatter", "block scatter: streamed | monolithic", ""))
                 .arg(ArgSpec::opt("redundancy", "owners per pair (r-fold placement)", ""))
                 .arg(ArgSpec::opt("kill", "failure injection: ranks to crash, e.g. 4 or 2,5", ""))
-                .arg(ArgSpec::opt("kill-at", "injection phase: scatter | compute:<k> | gather", ""))
+                .arg(ArgSpec::opt(
+                    "kill-at",
+                    "phase: scatter | compute:<k> | gather | disconnect[:<k>] (comma-list = one per victim)",
+                    "",
+                ))
                 .arg(ArgSpec::opt("recover", "re-assign a dead rank's tasks mid-run: on | off", ""))
+                .arg(ArgSpec::opt(
+                    "transport",
+                    "rank transport: memory | tcp (loopback sockets)",
+                    "",
+                ))
+                .arg(ArgSpec::opt(
+                    "processes",
+                    "TCP only: one OS process per rank (the launcher): on | off",
+                    "",
+                ))
+                .arg(ArgSpec::opt("heartbeat-ms", "TCP heartbeat interval (ms)", ""))
+                .arg(ArgSpec::opt(
+                    "heartbeat-timeout-ms",
+                    "TCP silence window before a peer is declared dead (ms)",
+                    "",
+                ))
                 .arg(ArgSpec::opt("topk", "pairs to report", "10"))
                 .arg(ArgSpec::opt("seed", "feature seed", "42"))
                 .arg(ArgSpec::opt("backend", "native | xla", "native")),
@@ -76,11 +121,44 @@ fn app() -> App {
                 .arg(ArgSpec::opt("scatter", "block scatter: streamed | monolithic", ""))
                 .arg(ArgSpec::opt("redundancy", "owners per pair (r-fold placement)", ""))
                 .arg(ArgSpec::opt("kill", "failure injection: ranks to crash, e.g. 4 or 2,5", ""))
-                .arg(ArgSpec::opt("kill-at", "injection phase: scatter | compute:<k> | gather", ""))
+                .arg(ArgSpec::opt(
+                    "kill-at",
+                    "phase: scatter | compute:<k> | gather | disconnect[:<k>] (comma-list = one per victim)",
+                    "",
+                ))
                 .arg(ArgSpec::opt("recover", "re-assign a dead rank's tasks mid-run: on | off", ""))
+                .arg(ArgSpec::opt(
+                    "transport",
+                    "rank transport: memory | tcp (loopback sockets)",
+                    "",
+                ))
+                .arg(ArgSpec::opt(
+                    "processes",
+                    "TCP only: one OS process per rank (the launcher): on | off",
+                    "",
+                ))
+                .arg(ArgSpec::opt("heartbeat-ms", "TCP heartbeat interval (ms)", ""))
+                .arg(ArgSpec::opt(
+                    "heartbeat-timeout-ms",
+                    "TCP silence window before a peer is declared dead (ms)",
+                    "",
+                ))
                 .arg(ArgSpec::opt("steps", "leapfrog steps", "50"))
                 .arg(ArgSpec::opt("dt", "time step", "0.001"))
                 .arg(ArgSpec::opt("threads", "pool threads", "4")),
+        )
+        .command(
+            Command::new(
+                "worker",
+                "join a TCP leader as one worker rank (spawned by the process launcher)",
+            )
+            .arg(ArgSpec::req("join", "leader address (host:port)"))
+            .arg(ArgSpec::req("rank", "worker rank to claim"))
+            .arg(ArgSpec::opt(
+                "join-timeout-ms",
+                "give up dialing the leader after this long",
+                "10000",
+            )),
         )
         .command(
             Command::new("sim", "analytic cluster predictions (Fig. 2 extrapolation)")
@@ -117,6 +195,7 @@ fn main() {
                 "similarity" => cmd_similarity(&p),
                 "dataset" => cmd_dataset(&p),
                 "nbody" => cmd_nbody(&p),
+                "worker" => cmd_worker(&p),
                 "sim" => cmd_sim(&p),
                 "info" => cmd_info(),
                 _ => unreachable!(),
@@ -201,15 +280,21 @@ fn parse_scatter_flag(p: &Parsed) -> anyhow::Result<Option<bool>> {
     }
 }
 
-/// Failure-injection / recovery flags shared by the distributed commands.
-/// Every field is tri-state (`None` = flag not passed — inherit the config
-/// / engine default), so an explicit `--kill-at scatter` or
-/// `--redundancy 1` still overrides a config file.
+/// Failure-injection / recovery / transport flags shared by the
+/// distributed commands. Every field is tri-state (`None` = flag not
+/// passed — inherit the config / engine default), so an explicit
+/// `--kill-at scatter` or `--transport memory` still overrides a config
+/// file. `--kill-at` takes a comma list with one phase per `--kill`
+/// victim; a single phase applies to all of them.
 struct ResilienceFlags {
     redundancy: Option<usize>,
     kill: Option<Vec<usize>>,
-    kill_at: Option<KillAt>,
+    kill_at: Option<Vec<KillAt>>,
     recover: Option<bool>,
+    transport: Option<TransportKind>,
+    processes: Option<bool>,
+    heartbeat_ms: Option<u64>,
+    heartbeat_timeout_ms: Option<u64>,
 }
 
 fn parse_resilience_flags(p: &Parsed) -> anyhow::Result<ResilienceFlags> {
@@ -229,9 +314,16 @@ fn parse_resilience_flags(p: &Parsed) -> anyhow::Result<ResilienceFlags> {
     };
     let kill_at = match p.get_str("kill-at").unwrap_or("") {
         "" => None,
-        s => Some(KillAt::parse(s).ok_or_else(|| {
-            anyhow::anyhow!("bad --kill-at: {s} (scatter | compute:<k> | gather)")
-        })?),
+        s => Some(
+            quorall::config::parse_kill_at_list(s)
+                .filter(|v| !v.is_empty())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "bad --kill-at: {s} (scatter | compute:<k> | gather | disconnect[:<k>], \
+                         comma-separated for one phase per --kill victim)"
+                    )
+                })?,
+        ),
     };
     let recover = match p.get_str("recover").unwrap_or("") {
         "" => None,
@@ -240,7 +332,38 @@ fn parse_resilience_flags(p: &Parsed) -> anyhow::Result<ResilienceFlags> {
                 .ok_or_else(|| anyhow::anyhow!("bad --recover: {s} (on | off)"))?,
         ),
     };
-    Ok(ResilienceFlags { redundancy, kill, kill_at, recover })
+    let transport = match p.get_str("transport").unwrap_or("") {
+        "" => None,
+        s => Some(
+            TransportKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("bad --transport: {s} (memory | tcp)"))?,
+        ),
+    };
+    let processes = match p.get_str("processes").unwrap_or("") {
+        "" => None,
+        s => Some(
+            quorall::config::parse_pipeline(s)
+                .ok_or_else(|| anyhow::anyhow!("bad --processes: {s} (on | off)"))?,
+        ),
+    };
+    let heartbeat_ms = match p.get_str("heartbeat-ms").unwrap_or("") {
+        "" => None,
+        _ => Some(p.get_u64("heartbeat-ms")?),
+    };
+    let heartbeat_timeout_ms = match p.get_str("heartbeat-timeout-ms").unwrap_or("") {
+        "" => None,
+        _ => Some(p.get_u64("heartbeat-timeout-ms")?),
+    };
+    Ok(ResilienceFlags {
+        redundancy,
+        kill,
+        kill_at,
+        recover,
+        transport,
+        processes,
+        heartbeat_ms,
+        heartbeat_timeout_ms,
+    })
 }
 
 impl ResilienceFlags {
@@ -251,11 +374,28 @@ impl ResilienceFlags {
         if let Some(kill) = &self.kill {
             opts.kill = kill.clone();
         }
-        if let Some(at) = self.kill_at {
-            opts.kill_at = at;
+        if let Some(phases) = &self.kill_at {
+            if phases.len() == 1 {
+                opts.kill_at = phases[0];
+                opts.kill_at_list.clear();
+            } else {
+                opts.kill_at_list = phases.clone();
+            }
         }
         if let Some(r) = self.recover {
             opts.recover = r;
+        }
+        if let Some(t) = self.transport {
+            opts.transport = t;
+        }
+        if let Some(b) = self.processes {
+            opts.tcp_processes = b;
+        }
+        if let Some(ms) = self.heartbeat_ms {
+            opts.heartbeat_ms = ms;
+        }
+        if let Some(ms) = self.heartbeat_timeout_ms {
+            opts.heartbeat_timeout_ms = ms;
         }
     }
 
@@ -267,11 +407,28 @@ impl ResilienceFlags {
         if let Some(kill) = &self.kill {
             cfg.kill = kill.clone();
         }
-        if let Some(at) = self.kill_at {
-            cfg.kill_at = at;
+        if let Some(phases) = &self.kill_at {
+            if phases.len() == 1 {
+                cfg.kill_at = phases[0];
+                cfg.kill_at_list.clear();
+            } else {
+                cfg.kill_at_list = phases.clone();
+            }
         }
         if let Some(r) = self.recover {
             cfg.recover = r;
+        }
+        if let Some(t) = self.transport {
+            cfg.transport = t;
+        }
+        if let Some(b) = self.processes {
+            cfg.tcp_processes = b;
+        }
+        if let Some(ms) = self.heartbeat_ms {
+            cfg.heartbeat_ms = ms;
+        }
+        if let Some(ms) = self.heartbeat_timeout_ms {
+            cfg.heartbeat_timeout_ms = ms;
         }
     }
 }
@@ -350,13 +507,14 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
         load_dataset(p)?
     };
     println!(
-        "PCIT: N = {} genes, M = {} samples, mode = {}, strategy = {}, pipeline = {}, scatter = {}, backend = {}, ranks = {}",
+        "PCIT: N = {} genes, M = {} samples, mode = {}, strategy = {}, pipeline = {}, scatter = {}, transport = {}, backend = {}, ranks = {}",
         dataset.genes(),
         dataset.samples(),
         cfg.mode.name(),
         cfg.strategy.name(),
         if cfg.pipeline { "on" } else { "off" },
         if cfg.streamed_scatter { "streamed" } else { "monolithic" },
+        cfg.transport.name(),
         cfg.backend.name(),
         cfg.ranks
     );
@@ -389,6 +547,12 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
             "recovered from dead ranks {:?}: {} tasks re-assigned to surviving hosts",
             rep.dead_ranks, rep.recovered_tasks
         );
+        for d in &rep.health.detections {
+            println!(
+                "  failure detector: rank {} dead ({}, detection latency {:.3}s)",
+                d.rank, d.cause, d.latency_secs
+            );
+        }
     }
     println!(
         "distributed: {} edges in {} | k = {} | peak mem/rank {} | comm {} (scatter {}) | blocked-recv {} (overlap {:.1}%) | first task at {}",
@@ -539,6 +703,32 @@ fn cmd_nbody(p: &Parsed) -> anyhow::Result<()> {
         strategy.name(),
         format_secs(sw.elapsed_secs())
     );
+    Ok(())
+}
+
+/// `quorall worker --join <addr> --rank <r>`: one rank of a TCP process
+/// cluster. The launcher (the leader process) spawns these; the join
+/// Welcome's setup blob carries the plan shape and the app spec, so the
+/// worker needs no dataset or config of its own — blocks arrive through
+/// the scatter like on any other transport.
+fn cmd_worker(p: &Parsed) -> anyhow::Result<()> {
+    use quorall::coordinator::{endpoint_of, tcp, wire, Plan};
+    use std::time::{Duration, Instant};
+
+    let leader = p.get_str("join").unwrap_or_default().to_string();
+    let rank = p.get_usize("rank")?;
+    let timeout = Duration::from_millis(p.get_u64("join-timeout-ms")?);
+    let joined = tcp::join(&leader, endpoint_of(rank), timeout)?;
+    let (n, ranks, block, pipeline, streamed_scatter, spec) = wire::decode_setup(&joined.setup)?;
+    let app = quorall::apps::app_from_spec(&spec)?;
+    let plan = Plan { n, p: ranks, block, pipeline, streamed_scatter, t0: Instant::now() };
+    quorall::coordinator::worker::worker_main(joined.endpoint, app, plan);
+    // An injected hard disconnect must leave this process's sockets open
+    // and silent (peers detect it by heartbeat timeout, not EOF): park
+    // until the launcher reaps us instead of exiting.
+    while tcp::went_dark() {
+        std::thread::sleep(Duration::from_secs(1));
+    }
     Ok(())
 }
 

@@ -1,0 +1,361 @@
+//! Integration: the TCP loopback transport must be observationally
+//! equivalent to the in-memory transport — bitwise-identical app output
+//! across every app × placement × protocol × scatter combination — while
+//! adding what only real sockets can give: heartbeat failure detection of
+//! a rank that goes dark without any goodbye (`--kill-at disconnect`),
+//! and disconnect-driven recovery through the same task ledger the
+//! in-memory kill flag feeds. Also the multi-failure soak: two ranks
+//! killed in *different phases* of one run, with cascade re-orphaning
+//! (work delegated to a rank that later dies itself is re-orphaned, not
+//! lost), asserted by exactly-once pair coverage.
+
+use quorall::apps::nbody::{run_distributed_nbody, Bodies};
+use quorall::apps::similarity::run_distributed_similarity;
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{
+    run_app, run_resilient_pcit_at, BlockData, DistributedApp, EngineOptions, KillAt, Payload,
+    TransportKind, WorkerCtx,
+};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::quorum::Strategy;
+use quorall::runtime::{Executor, NativeBackend};
+use quorall::util::prng::Rng;
+use quorall::util::Matrix;
+use std::sync::Arc;
+
+const P: usize = 9; // square, so the grid placement is natural
+const STRATEGIES: [Strategy; 3] = [Strategy::Cyclic, Strategy::Grid, Strategy::Full];
+
+fn exec() -> Executor {
+    Arc::new(NativeBackend::new())
+}
+
+fn opts(strategy: Strategy, pipeline: bool, streamed: bool, kind: TransportKind) -> EngineOptions {
+    let mut o = EngineOptions::new(P, strategy);
+    o.pipeline = pipeline;
+    o.streamed_scatter = streamed;
+    o.transport = kind;
+    o
+}
+
+// ---- Bitwise parity: every combination, memory vs TCP loopback ----
+
+#[test]
+fn tcp_similarity_matches_memory_bitwise_full_matrix() {
+    let mut rng = Rng::new(21);
+    let f = Matrix::from_fn(45, 8, |_, _| rng.normal_f32());
+    let e = exec();
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            for streamed in [false, true] {
+                let (base, base_rep) = run_distributed_similarity(
+                    &f,
+                    &e,
+                    &opts(strategy, pipeline, streamed, TransportKind::Memory),
+                )
+                .unwrap();
+                let (sim, rep) = run_distributed_similarity(
+                    &f,
+                    &e,
+                    &opts(strategy, pipeline, streamed, TransportKind::Tcp),
+                )
+                .unwrap();
+                assert_eq!(
+                    sim.as_slice(),
+                    base.as_slice(),
+                    "strategy {} pipeline {pipeline} streamed {streamed}: TCP matrix diverged",
+                    strategy.name()
+                );
+                assert_eq!(base_rep.transport, TransportKind::Memory);
+                assert_eq!(rep.transport, TransportKind::Tcp);
+                assert_eq!(rep.health.backend, "tcp");
+                assert!(rep.health.detections.is_empty(), "failure-free run detected a death");
+                assert!(
+                    rep.total_comm_bytes > 0 && rep.scatter_comm_bytes > 0,
+                    "socket byte accounting must survive the backend swap"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tcp_nbody_matches_memory_bitwise_full_matrix() {
+    let b = Bodies::random(45, 7);
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            for streamed in [false, true] {
+                let mem = opts(strategy, pipeline, streamed, TransportKind::Memory);
+                let (base, _) = run_distributed_nbody(&b, &mem).unwrap();
+                let tcp = opts(strategy, pipeline, streamed, TransportKind::Tcp);
+                let (forces, rep) = run_distributed_nbody(&b, &tcp).unwrap();
+                for i in 0..b.n {
+                    assert_eq!(
+                        forces[i],
+                        base[i],
+                        "strategy {} pipeline {pipeline} streamed {streamed}: body {i} forces diverged over TCP",
+                        strategy.name()
+                    );
+                }
+                assert_eq!(rep.transport, TransportKind::Tcp);
+            }
+        }
+    }
+}
+
+fn pcit_cfg(strategy: Strategy, pipeline: bool, streamed: bool, kind: TransportKind) -> RunConfig {
+    RunConfig {
+        ranks: P,
+        mode: PcitMode::QuorumLocal,
+        strategy,
+        pipeline,
+        streamed_scatter: streamed,
+        use_pcit_significance: false, // threshold mode: pairwise-exact
+        threshold: 0.5,
+        transport: kind,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn tcp_pcit_matches_memory_bitwise_full_matrix() {
+    let d = ExpressionDataset::generate(SyntheticSpec {
+        genes: 72,
+        samples: 24,
+        modules: 5,
+        noise: 0.5,
+        seed: 77,
+    });
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            for streamed in [false, true] {
+                let base_cfg = pcit_cfg(strategy, pipeline, streamed, TransportKind::Memory);
+                let base =
+                    run_resilient_pcit_at(&base_cfg, &d, exec(), 2, &[], KillAt::Scatter).unwrap();
+                let cfg = pcit_cfg(strategy, pipeline, streamed, TransportKind::Tcp);
+                let rep = run_resilient_pcit_at(&cfg, &d, exec(), 2, &[], KillAt::Scatter).unwrap();
+                assert_eq!(
+                    rep.network.edges,
+                    base.network.edges,
+                    "strategy {} pipeline {pipeline} streamed {streamed}: TCP network diverged",
+                    strategy.name()
+                );
+                assert_eq!(rep.transport, TransportKind::Tcp);
+            }
+        }
+    }
+}
+
+// ---- Disconnect: heartbeat-timeout detection + bitwise recovery ----
+
+#[test]
+fn tcp_disconnect_detected_by_heartbeat_timeout_and_recovered_bitwise() {
+    let mut rng = Rng::new(5);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    const VICTIM: usize = 4;
+    for pipeline in [false, true] {
+        // Failure-free memory baseline: the recovery target.
+        let mut base_opts = opts(Strategy::Cyclic, pipeline, false, TransportKind::Memory);
+        base_opts.redundancy = 2;
+        base_opts.recover = true;
+        let (base, _) = run_distributed_similarity(&f, &e, &base_opts).unwrap();
+
+        // TCP run where the victim goes dark mid-compute without any
+        // goodbye: its sockets stay open but silent, so the leader can
+        // only learn of the death from the heartbeat timeout.
+        let mut o = opts(Strategy::Cyclic, pipeline, false, TransportKind::Tcp);
+        o.redundancy = 2;
+        o.recover = true;
+        o.kill = vec![VICTIM];
+        o.kill_at = KillAt::Disconnect { tasks: 1 };
+        o.heartbeat_ms = 10;
+        o.heartbeat_timeout_ms = 200;
+        let (sim, rep) = run_distributed_similarity(&f, &e, &o).unwrap();
+        assert_eq!(
+            sim.as_slice(),
+            base.as_slice(),
+            "pipeline {pipeline}: disconnect-recovered matrix diverged"
+        );
+        assert_eq!(rep.dead_ranks, vec![VICTIM]);
+        assert!(rep.recovered_tasks > 0, "the victim's unfinished tasks must be recomputed");
+        assert_eq!(rep.stats.len(), P - 1, "a dark rank must not report stats");
+        let det = rep
+            .health
+            .detections
+            .iter()
+            .find(|d| d.rank == VICTIM)
+            .expect("the failure detector must record the victim's death");
+        assert_eq!(
+            det.cause, "heartbeat-timeout",
+            "a silent-socket death must be found by the heartbeat timeout, not an EOF"
+        );
+        assert!(
+            det.latency_secs >= 0.15,
+            "detection latency {} below the 200 ms silence window",
+            det.latency_secs
+        );
+    }
+}
+
+// ---- Multi-failure soak: two ranks, two different phases, one run ----
+
+fn soak_opts(strategy: Strategy, pipeline: bool, kind: TransportKind) -> EngineOptions {
+    let mut o = opts(strategy, pipeline, false, kind);
+    o.redundancy = 2;
+    o.recover = true;
+    o.kill = vec![2, 5];
+    o.kill_at_list = vec![KillAt::Compute { tasks: 1 }, KillAt::Gather];
+    o
+}
+
+#[test]
+fn multi_failure_soak_bitwise_identical() {
+    let mut rng = Rng::new(5);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    for strategy in [Strategy::Cyclic, Strategy::Grid] {
+        for pipeline in [false, true] {
+            let mut base_opts = opts(strategy, pipeline, false, TransportKind::Memory);
+            base_opts.redundancy = 2;
+            base_opts.recover = true;
+            let (base, _) = run_distributed_similarity(&f, &e, &base_opts).unwrap();
+            for kind in [TransportKind::Memory, TransportKind::Tcp] {
+                let (sim, rep) =
+                    run_distributed_similarity(&f, &e, &soak_opts(strategy, pipeline, kind))
+                        .unwrap();
+                assert_eq!(
+                    sim.as_slice(),
+                    base.as_slice(),
+                    "strategy {} pipeline {pipeline} transport {}: soak-recovered matrix diverged",
+                    strategy.name(),
+                    kind.name()
+                );
+                assert_eq!(rep.dead_ranks, vec![2, 5]);
+                assert_eq!(rep.stats.len(), P - 2, "both victims must be excused from stats");
+                assert!(rep.recovered_tasks > 0);
+                // One detection record per dead rank, in detection order.
+                let mut detected: Vec<usize> =
+                    rep.health.detections.iter().map(|d| d.rank).collect();
+                detected.sort_unstable();
+                assert_eq!(detected, vec![2, 5], "transport {}", kind.name());
+            }
+        }
+    }
+}
+
+/// Minimal task-granular app whose payload *is* its task list — every pair
+/// reported exactly once is the sharpest possible probe of cascade
+/// re-orphaning (a task first delegated to rank 5, which then dies at the
+/// gather, must be re-delegated and still appear exactly once).
+struct EdgeApp;
+
+impl DistributedApp for EdgeApp {
+    fn name(&self) -> &'static str {
+        "edges"
+    }
+
+    fn elements(&self) -> usize {
+        2 * P
+    }
+
+    fn make_block(&self, range: std::ops::Range<usize>) -> BlockData {
+        BlockData::Rows(Matrix::zeros(range.len(), 4))
+    }
+
+    fn recoverable(&self) -> bool {
+        true
+    }
+
+    fn run_recovery_task(&self, _ctx: &mut WorkerCtx, t: quorall::allpairs::PairTask) -> Payload {
+        Payload::Edges(vec![(t.a, t.b, 1.0)])
+    }
+
+    fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+        let tasks = std::mem::take(&mut ctx.tasks);
+        let mut edges = Vec::new();
+        for t in &tasks {
+            if !ctx.begin_task(t) {
+                return None;
+            }
+            edges.push((t.a, t.b, 1.0f32));
+            ctx.complete_task(*t);
+        }
+        Some(Payload::Edges(edges))
+    }
+}
+
+#[test]
+fn multi_failure_soak_covers_every_pair_exactly_once() {
+    for kind in [TransportKind::Memory, TransportKind::Tcp] {
+        let rep = run_app(Arc::new(EdgeApp), &soak_opts(Strategy::Cyclic, false, kind)).unwrap();
+        assert_eq!(rep.dead_ranks, vec![2, 5]);
+        assert!(rep.recovered_tasks > 0);
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        for (rank, payload) in &rep.results {
+            match payload {
+                Payload::Edges(e) => seen.extend(e.iter().map(|&(a, b, _)| (a, b))),
+                other => panic!("rank {rank}: wrong payload {}", other.kind()),
+            }
+        }
+        seen.sort_unstable();
+        let expect: Vec<(usize, usize)> =
+            (0..P).flat_map(|a| (a..P).map(move |b| (a, b))).collect();
+        assert_eq!(
+            seen,
+            expect,
+            "transport {}: double failure must still cover all pairs exactly once",
+            kind.name()
+        );
+    }
+}
+
+// ---- Failure-detector observability on the memory backend ----
+
+#[test]
+fn memory_backend_reports_injected_detections() {
+    let mut rng = Rng::new(9);
+    let f = Matrix::from_fn(45, 8, |_, _| rng.normal_f32());
+    let e = exec();
+    let mut o = opts(Strategy::Cyclic, false, false, TransportKind::Memory);
+    o.redundancy = 2;
+    o.recover = true;
+    o.kill = vec![3];
+    o.kill_at = KillAt::Compute { tasks: 1 };
+    let (_, rep) = run_distributed_similarity(&f, &e, &o).unwrap();
+    assert_eq!(rep.health.backend, "memory");
+    assert_eq!(rep.health.detections.len(), 1);
+    assert_eq!(rep.health.detections[0].rank, 3);
+    assert_eq!(
+        rep.health.detections[0].cause, "injected",
+        "the memory backend has no wire: a kill flag is its only detector"
+    );
+    assert_eq!(rep.health.reconnect_attempts, 0);
+}
+
+// ---- Process mode: real OS processes joined over the wire ----
+
+#[test]
+fn tcp_process_mode_matches_memory_bitwise() {
+    let mut rng = Rng::new(17);
+    let f = Matrix::from_fn(32, 8, |_, _| rng.normal_f32());
+    let e = exec();
+    let mut base_opts = EngineOptions::new(4, Strategy::Cyclic);
+    base_opts.transport = TransportKind::Memory;
+    let (base, _) = run_distributed_similarity(&f, &e, &base_opts).unwrap();
+
+    let mut o = EngineOptions::new(4, Strategy::Cyclic);
+    o.transport = TransportKind::Tcp;
+    o.tcp_processes = true;
+    // The test harness is not the CLI: point the launcher at the real
+    // `quorall` binary Cargo built for this test run.
+    o.worker_bin = Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_quorall")));
+    let (sim, rep) = run_distributed_similarity(&f, &e, &o).unwrap();
+    assert_eq!(
+        sim.as_slice(),
+        base.as_slice(),
+        "process-mode similarity diverged from the in-memory run"
+    );
+    assert_eq!(rep.transport, TransportKind::Tcp);
+    assert_eq!(rep.stats.len(), 4, "every worker process must report stats");
+}
