@@ -1,0 +1,192 @@
+//! Work stealing vs static assignment under a deterministically slow rank.
+//!
+//! The steal scheduler turns the r-fold placement into a speed feature:
+//! when a rank drains its queue, the leader re-grants queued (not yet
+//! started) tasks from the most-backlogged rank to idle ranks that already
+//! hold the needed blocks — zero extra scatter traffic. This bench makes
+//! the win measurable: P = 8, rank 3 throttled 4x (it sleeps three extra
+//! task-times before every task after its first), all three task-granular
+//! apps. For each app it runs the unthrottled static baseline (the parity
+//! target), the throttled static run, and the throttled stealing run.
+//!
+//! Asserted, not just reported: the stealing wall clock strictly beats the
+//! throttled static one, tasks actually got stolen, and both throttled
+//! runs are bitwise-identical to the unthrottled static output.
+//!
+//! Emits `BENCH_stealing.json`.
+//!
+//! Run: `cargo bench --bench stealing [-- --quick]`
+
+use quorall::apps::nbody::{run_distributed_nbody, Bodies};
+use quorall::apps::similarity::run_distributed_similarity;
+use quorall::benchkit;
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{run_resilient_pcit_at, EngineOptions, KillAt};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::metrics::Table;
+use quorall::quorum::Strategy;
+use quorall::runtime::{Executor, NativeBackend};
+use quorall::util::json::Json;
+use quorall::util::prng::Rng;
+use quorall::util::timer::format_secs;
+use quorall::util::Matrix;
+use std::sync::Arc;
+use std::time::Instant;
+
+const P: usize = 8;
+const SLOW: usize = 3;
+const FACTOR: u32 = 4;
+
+/// One measured configuration: (wall seconds, stolen tasks, mean
+/// grant-to-result latency) plus the app output handed back for parity.
+struct Run<T> {
+    wall: f64,
+    stolen: u64,
+    latency: f64,
+    out: T,
+}
+
+fn opts(steal: bool, throttled: bool) -> EngineOptions {
+    let mut o = EngineOptions::new(P, Strategy::Cyclic);
+    o.redundancy = 2;
+    o.recover = true;
+    o.steal = steal;
+    o.steal_batch = 2;
+    o.throttle = throttled.then_some((SLOW, FACTOR));
+    o
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = benchkit::quick_mode();
+    let (n_sim, dim) = if quick { (480, 128) } else { (1440, 320) };
+    let n_bodies = if quick { 800 } else { 1600 };
+    let genes = if quick { 192 } else { 384 };
+
+    let mut rng = Rng::new(41);
+    let feats = Matrix::from_fn(n_sim, dim, |_, _| rng.normal_f32());
+    let bodies = Bodies::random(n_bodies, 11);
+    let dataset = ExpressionDataset::generate(SyntheticSpec {
+        genes,
+        samples: 32,
+        modules: 8,
+        noise: 0.6,
+        seed: 7,
+    });
+    let exec: Executor = Arc::new(NativeBackend::new());
+
+    let mut table = Table::new(
+        &format!(
+            "work stealing vs static assignment, P = {P}, rank {SLOW} throttled {FACTOR}x"
+        ),
+        &["app", "wall static", "wall throttled", "wall stealing", "speedup", "stolen", "grant latency"],
+    );
+    let mut meta: Vec<(&str, Json)> = vec![("quick", Json::Bool(quick))];
+    let mut speedups: Vec<(&'static str, f64)> = Vec::new();
+
+    // Each closure runs one configuration of one app and returns the
+    // measured Run; the driver below sequences baseline/static/stealing
+    // and asserts parity + the strict win.
+    let sim = |steal: bool, throttled: bool| -> anyhow::Result<Run<Vec<f32>>> {
+        let e = Arc::clone(&exec);
+        let t0 = Instant::now();
+        let (m, rep) = run_distributed_similarity(&feats, &e, &opts(steal, throttled))?;
+        Ok(Run {
+            wall: t0.elapsed().as_secs_f64(),
+            stolen: rep.stolen_tasks,
+            latency: rep.steal_latency_secs,
+            out: m.as_slice().to_vec(),
+        })
+    };
+    let nbody = |steal: bool, throttled: bool| -> anyhow::Result<Run<Vec<[f64; 3]>>> {
+        let t0 = Instant::now();
+        let (f, rep) = run_distributed_nbody(&bodies, &opts(steal, throttled))?;
+        Ok(Run {
+            wall: t0.elapsed().as_secs_f64(),
+            stolen: rep.stolen_tasks,
+            latency: rep.steal_latency_secs,
+            out: f,
+        })
+    };
+    let pcit = |steal: bool, throttled: bool| -> anyhow::Result<Run<Vec<(usize, usize, f32)>>> {
+        let cfg = RunConfig {
+            ranks: P,
+            mode: PcitMode::QuorumLocal,
+            use_pcit_significance: false, // threshold mode: pairwise-exact
+            threshold: 0.5,
+            steal,
+            steal_batch: 2,
+            throttle: throttled.then_some((SLOW, FACTOR)),
+            ..RunConfig::default()
+        };
+        let t0 = Instant::now();
+        let rep =
+            run_resilient_pcit_at(&cfg, &dataset, Arc::clone(&exec), 2, &[], KillAt::Scatter)?;
+        Ok(Run {
+            wall: t0.elapsed().as_secs_f64(),
+            stolen: rep.stolen_tasks,
+            latency: rep.steal_latency_secs,
+            out: rep.network.edges,
+        })
+    };
+
+    // measure::<T> sequences the three runs for one app.
+    fn measure<T: PartialEq>(
+        app: &'static str,
+        run: impl Fn(bool, bool) -> anyhow::Result<Run<T>>,
+        table: &mut Table,
+        speedups: &mut Vec<(&'static str, f64)>,
+    ) -> anyhow::Result<()> {
+        let base = run(false, false)?; // unthrottled static: parity target
+        let fixed = run(false, true)?; // throttled, no stealing
+        let steal = run(true, true)?; // throttled, stealing on
+        assert!(
+            fixed.out == base.out,
+            "{app}: throttled static run is not bitwise-identical"
+        );
+        assert!(
+            steal.out == base.out,
+            "{app}: stolen-task splice changed bits"
+        );
+        assert!(
+            steal.stolen > 0,
+            "{app}: a {FACTOR}x-throttled rank must get stolen from"
+        );
+        assert!(
+            steal.wall < fixed.wall,
+            "{app}: stealing wall {} must strictly beat static wall {}",
+            format_secs(steal.wall),
+            format_secs(fixed.wall)
+        );
+        let speedup = fixed.wall / steal.wall;
+        speedups.push((app, speedup));
+        table.row(vec![
+            app.into(),
+            format_secs(base.wall),
+            format_secs(fixed.wall),
+            format_secs(steal.wall),
+            format!("{speedup:.2}x"),
+            steal.stolen.to_string(),
+            format_secs(steal.latency),
+        ]);
+        Ok(())
+    }
+
+    measure("similarity", sim, &mut table, &mut speedups)?;
+    measure("nbody", nbody, &mut table, &mut speedups)?;
+    measure("pcit-threshold", pcit, &mut table, &mut speedups)?;
+    benchkit::emit(&table);
+
+    let keys: Vec<String> =
+        speedups.iter().map(|(app, _)| format!("speedup_{app}")).collect();
+    for (key, (_, s)) in keys.iter().zip(speedups.iter()) {
+        meta.push((key.as_str(), Json::Num(*s)));
+    }
+    let payload = benchkit::json_payload("stealing", meta, &[&table]);
+    benchkit::write_json(std::path::Path::new("BENCH_stealing.json"), &payload)?;
+    println!("expected shape: with one rank {FACTOR}x slow, the static run's wall clock is the");
+    println!("slow rank's serialized queue, while stealing moves the queued tail to idle ranks");
+    println!("that already hold the blocks (no extra scatter bytes) — the wall clock drops");
+    println!("toward the unthrottled baseline plus one throttled task, and the output stays");
+    println!("bitwise-identical because stolen results splice in original task order.");
+    Ok(())
+}

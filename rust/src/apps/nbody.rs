@@ -249,6 +249,10 @@ impl DistributedApp for NbodyApp {
                 // streamed blocks): exit without reporting.
                 return None;
             }
+            if ctx.task_revoked(t) {
+                // Stolen by an idle rank: the thief computes and reports it.
+                continue;
+            }
             let Some(mut pair) = task_partials(ctx, t) else {
                 ctx.complete_task(*t);
                 continue; // both blocks empty: nothing to report
@@ -262,7 +266,7 @@ impl DistributedApp for NbodyApp {
             // Completion is recorded before the chunk streams so the
             // chunk's provenance tags cover this task.
             ctx.complete_task(*t);
-            if ctx.pipeline() {
+            if ctx.per_task_results() {
                 // Send-ahead: stream each task's partial forces to the
                 // leader while the next block pair computes. The leader
                 // merges chunks in compute order, so the rank-ascending,

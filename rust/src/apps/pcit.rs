@@ -264,13 +264,17 @@ impl PcitApp {
                 // streamed blocks): exit without reporting.
                 return None;
             }
+            if ctx.task_revoked(t) {
+                // Stolen by an idle rank: the thief computes and reports it.
+                continue;
+            }
             let mut task_edges: Vec<(usize, usize, f32)> = Vec::new();
             if !self.local_task_edges(ctx, t, &mut task_edges) {
                 // Shutdown arrived while awaiting the quorum panel.
                 return None;
             }
             ctx.complete_task(*t);
-            if ctx.pipeline() {
+            if ctx.per_task_results() {
                 // Stream each task's edges (with its provenance tag) so the
                 // leader's gather overlaps the remaining tasks and its task
                 // ledger limits a mid-run death to the unreported suffix.

@@ -168,6 +168,10 @@ impl DistributedApp for SimilarityApp {
                 // streamed blocks): exit without reporting.
                 return None;
             }
+            if ctx.task_revoked(t) {
+                // Stolen by an idle rank: the thief computes and reports it.
+                continue;
+            }
             let Some((r0, c0, tile)) = self.task_tile(ctx, t) else {
                 ctx.complete_task(*t);
                 continue; // empty trailing block: nothing to report
@@ -176,7 +180,7 @@ impl DistributedApp for SimilarityApp {
             // Completion is recorded before the chunk streams so the
             // chunk's provenance tags cover this task.
             ctx.complete_task(*t);
-            if ctx.pipeline() {
+            if ctx.per_task_results() {
                 // Send-ahead: ship each tile to the leader as soon as it is
                 // computed, overlapping the leader's gather/merge with the
                 // remaining tile compute (and dropping it from this rank's

@@ -11,6 +11,6 @@ pub mod schema;
 
 pub use parser::{ConfigError, TomlDoc, TomlValue};
 pub use schema::{
-    parse_kill_at_list, parse_kill_list, parse_pipeline, parse_scatter, BackendKind, DatasetConfig,
-    PcitMode, RunConfig,
+    parse_kill_at_list, parse_kill_list, parse_pipeline, parse_scatter, parse_steal,
+    parse_throttle, BackendKind, DatasetConfig, PcitMode, RunConfig,
 };

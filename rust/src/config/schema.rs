@@ -18,6 +18,9 @@
 //! kill_at = "compute:1" # scatter | compute:<k> | gather | disconnect[:<k>]
 //!                       # ("compute:1,gather" = per-victim phases for kill = "2,5")
 //! recover = "on"        # re-assign a dead rank's tasks mid-run
+//! steal = "off"         # on | off (re-grant queued tasks to idle ranks)
+//! steal_batch = 2       # max queued tasks one steal grant may move
+//! throttle = "3:4"      # deterministic slow rank: <rank>:<factor>
 //! transport = "memory"  # memory | tcp (loopback sockets, heartbeat detection)
 //! heartbeat_ms = 25     # TCP heartbeat interval
 //! heartbeat_timeout_ms = 1000 # silence before a peer is declared dead
@@ -135,6 +138,22 @@ pub fn parse_scatter(s: &str) -> Option<bool> {
     }
 }
 
+/// Parse a `--steal` / `run.steal` / `QUORALL_STEAL` value.
+pub fn parse_steal(s: &str) -> Option<bool> {
+    parse_pipeline(s)
+}
+
+/// Parse a `--throttle` / `run.throttle` value: `<rank>:<factor>`, e.g.
+/// `"3:4"` makes rank 3 sleep 3× its previous task time before each task
+/// (a 4× deterministic straggler). An empty string is no throttle.
+pub fn parse_throttle(s: &str) -> Option<Option<(usize, u32)>> {
+    if s.trim().is_empty() {
+        return Some(None);
+    }
+    let (rank, factor) = s.split_once(':')?;
+    Some(Some((rank.trim().parse().ok()?, factor.trim().parse().ok()?)))
+}
+
 /// Parse a comma-separated rank list (`--kill 4` / `--kill 2,5`). An empty
 /// string is an empty list.
 pub fn parse_kill_list(s: &str) -> Option<Vec<usize>> {
@@ -197,6 +216,13 @@ pub struct RunConfig {
     /// TCP only: launch each rank as its own OS process (`quorall worker
     /// --join <addr> --rank <r>`) instead of an in-process thread.
     pub tcp_processes: bool,
+    /// Work stealing (`--steal {on,off}`): re-grant queued tasks from
+    /// backlogged ranks to idle ones that already host the needed blocks.
+    pub steal: bool,
+    /// Max queued tasks one steal grant may move (`--steal-batch <k>`).
+    pub steal_batch: usize,
+    /// Deterministic slow-rank injection (`--throttle <rank>:<factor>`).
+    pub throttle: Option<(usize, u32)>,
     pub dataset: DatasetConfig,
     /// PCIT significance variant: true = full PCIT, false = plain |r| cutoff.
     pub use_pcit_significance: bool,
@@ -225,6 +251,9 @@ impl Default for RunConfig {
             heartbeat_ms: HeartbeatConfig::default().interval_ms,
             heartbeat_timeout_ms: HeartbeatConfig::default().timeout_ms,
             tcp_processes: false,
+            steal: crate::coordinator::steal_default(),
+            steal_batch: 2,
+            throttle: None,
             dataset: DatasetConfig::Synthetic { genes: 512, samples: 32, modules: 8, noise: 0.6 },
             use_pcit_significance: true,
             threshold: 0.85,
@@ -318,6 +347,19 @@ impl RunConfig {
         } else if let Some(b) = doc.get_bool("run", "processes") {
             cfg.tcp_processes = b;
         }
+        if let Some(s) = doc.get_str("run", "steal") {
+            cfg.steal = parse_steal(s)
+                .ok_or_else(|| bad(format!("bad run.steal: {s} (want \"on\" | \"off\")")))?;
+        } else if let Some(b) = doc.get_bool("run", "steal") {
+            cfg.steal = b;
+        }
+        if let Some(v) = doc.get_usize("run", "steal_batch") {
+            cfg.steal_batch = v;
+        }
+        if let Some(s) = doc.get_str("run", "throttle") {
+            cfg.throttle = parse_throttle(s)
+                .ok_or_else(|| bad(format!("bad run.throttle: {s} (want \"<rank>:<factor>\")")))?;
+        }
         if let Some(s) = doc.get_str("run", "artifacts_dir") {
             cfg.artifacts_dir = PathBuf::from(s);
         }
@@ -407,6 +449,20 @@ impl RunConfig {
         }
         if self.tcp_processes && self.transport != TransportKind::Tcp {
             return Err("run.processes = \"on\" requires run.transport = \"tcp\"".into());
+        }
+        if self.steal_batch == 0 {
+            return Err("run.steal_batch must be >= 1".into());
+        }
+        if let Some((r, f)) = self.throttle {
+            if r >= self.ranks {
+                return Err(format!(
+                    "run.throttle rank {r} out of range (ranks = {})",
+                    self.ranks
+                ));
+            }
+            if f < 1 {
+                return Err(format!("run.throttle factor must be >= 1 (got {f})"));
+            }
         }
         if let DatasetConfig::Synthetic { genes, samples, .. } = self.dataset {
             if genes < 2 {
@@ -597,6 +653,40 @@ threshold = 0.9
         .is_err());
         assert_eq!(parse_kill_at_list(""), Some(Vec::new()));
         assert!(parse_kill_at_list("compute:1,bogus").is_none());
+    }
+
+    #[test]
+    fn steal_keys_parse() {
+        let cfg = RunConfig::from_doc(&doc("[run]\nsteal = \"on\"\nsteal_batch = 3")).unwrap();
+        assert!(cfg.steal);
+        assert_eq!(cfg.steal_batch, 3);
+        let cfg = RunConfig::from_doc(&doc("[run]\nsteal = true")).unwrap();
+        assert!(cfg.steal);
+        assert!(RunConfig::from_doc(&doc("[run]\nsteal = \"sideways\"")).is_err());
+        assert!(RunConfig::from_doc(&doc("[run]\nsteal_batch = 0")).is_err());
+        assert_eq!(parse_steal("on"), Some(true));
+        assert_eq!(parse_steal("off"), Some(false));
+        assert_eq!(parse_steal("bogus"), None);
+    }
+
+    #[test]
+    fn throttle_key_parses_and_validates() {
+        let cfg = RunConfig::from_doc(&doc("[run]\nranks = 8\nthrottle = \"3:4\"")).unwrap();
+        assert_eq!(cfg.throttle, Some((3, 4)));
+        // Regression: the rank index is validated against P at parse time,
+        // like run.kill — a typo'd rank must not silently no-op.
+        let err = RunConfig::from_doc(&doc("[run]\nranks = 8\nthrottle = \"8:4\"")).unwrap_err();
+        assert!(err.msg.contains("out of range"), "{}", err.msg);
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nthrottle = \"3:0\"")).is_err());
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nthrottle = \"3\"")).is_err());
+        assert!(RunConfig::from_doc(&doc("[run]\nranks = 8\nthrottle = \"x:4\"")).is_err());
+        // Factor 1 = no slowdown, but a valid way to spell "off".
+        let cfg = RunConfig::from_doc(&doc("[run]\nranks = 8\nthrottle = \"0:1\"")).unwrap();
+        assert_eq!(cfg.throttle, Some((0, 1)));
+        assert_eq!(parse_throttle(""), Some(None));
+        assert_eq!(parse_throttle("2:10"), Some(Some((2, 10))));
+        assert_eq!(parse_throttle("2"), None);
+        assert_eq!(parse_throttle("a:b"), None);
     }
 
     #[test]

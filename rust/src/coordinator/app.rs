@@ -39,6 +39,17 @@ pub struct Plan {
     /// blocking in phase 0 for the whole quorum. Must be
     /// bitwise-identical to the monolithic scatter.
     pub streamed_scatter: bool,
+    /// Work stealing: workers report per-task progress, poll for
+    /// [`Message::Revoke`]s at every task boundary, and stream results at
+    /// task granularity so the leader can re-grant queued tasks of a
+    /// straggler to idle ranks that already hold the blocks. Must be
+    /// bitwise-identical to the static schedule.
+    pub steal: bool,
+    /// Deterministic straggler injection (`--throttle <rank>:<factor>`):
+    /// the given rank sleeps `(factor - 1) ×` its previous task's measured
+    /// compute time before each task after the first, making it run
+    /// `factor`× slower without changing any computed byte.
+    pub throttle: Option<(usize, u32)>,
     /// Run start reference — workers stamp
     /// `RankStats::time_to_first_task_secs` against it.
     pub t0: Instant,
@@ -177,6 +188,25 @@ pub struct WorkerCtx {
     /// protocol was still running (e.g. stashed at a barrier); processed
     /// after this rank's own result is reported.
     pub(super) pending_reassign: VecDeque<(usize, Vec<PairTask>)>,
+    /// Owned tasks the leader revoked ([`Message::Revoke`]) because an idle
+    /// rank stole them; [`WorkerCtx::begin_task`] still returns true for
+    /// them but [`WorkerCtx::task_revoked`] tells the app to skip.
+    pub(super) revoked: std::collections::BTreeSet<PairTask>,
+    /// A Proceed consumed by the steal poll ahead of the barrier that
+    /// wants it; [`WorkerCtx::barrier`] drains this first.
+    pub(super) banked_proceed: bool,
+    /// Start stamp of the task currently between `begin_task` and
+    /// `complete_task` (drives the per-task timing stats and the throttle).
+    pub(super) task_start: Option<Instant>,
+    /// Measured compute seconds of the most recent completed task — the
+    /// unit the `--throttle` sleep multiplies.
+    pub(super) last_task_secs: f64,
+    /// Per-rank task-execution timing (skew visibility): count, min, max
+    /// and total seconds across this rank's completed tasks.
+    pub(super) tasks_executed: u64,
+    pub(super) task_exec_min: f64,
+    pub(super) task_exec_max: f64,
+    pub(super) task_exec_sum: f64,
     /// Wall time spent waiting on scatter deliveries: phase 0 for the
     /// monolithic path, [`WorkerCtx::ensure_blocks`] waits for the
     /// streamed path. The window the streamed scatter exists to shrink.
@@ -258,22 +288,101 @@ impl WorkerCtx {
     /// worker exits without reporting, exactly like a real mid-compute
     /// crash.
     pub fn begin_task(&mut self, t: &PairTask) -> bool {
+        if self.plan.steal {
+            // Drain control traffic non-blockingly: a Revoke must be seen
+            // before this task starts, or the steal degenerates into
+            // duplicated work (still bitwise-safe, but wasted).
+            self.poll_control();
+            // Progress heartbeat: tags not yet carried by a streamed chunk
+            // (credit-stashed, or a task that produced no payload) ride a
+            // TasksDone so the leader's backlog estimate stays fresh.
+            if !self.dead && !self.task_tags.is_empty() {
+                let _ = self.ep.send(0, Message::TasksDone { tasks: self.task_tags.clone() });
+            }
+        }
         if !self.injection_says_alive() {
             return false;
+        }
+        if self.task_revoked(t) {
+            // Stolen: the app skips it (no block wait, no throttle sleep).
+            return true;
         }
         // Dependency-driven eager start: wait only for THIS task's inputs.
         if !self.ensure_blocks(&[t.a, t.b]) {
             return false;
         }
         // Re-check: the injection can arrive (streamed mode delivers Crash
-        // ahead of the block stream) while the inputs were pumped in.
+        // ahead of the block stream) while the inputs were pumped in, and a
+        // Revoke can land while we waited on the wire.
         if !self.injection_says_alive() {
             return false;
+        }
+        if self.task_revoked(t) {
+            return true;
         }
         if self.time_to_first_task.is_none() {
             self.time_to_first_task = Some(self.plan.t0.elapsed().as_secs_f64());
         }
+        // Deterministic straggler injection: run `factor`× slower by
+        // sleeping (factor - 1)× the previous task's measured compute time
+        // (the first task rides free — there is nothing to scale yet).
+        if let Some((rank, factor)) = self.plan.throttle {
+            if rank == self.my_block && factor > 1 && self.last_task_secs > 0.0 {
+                let pause = self.last_task_secs * (factor - 1) as f64;
+                std::thread::sleep(std::time::Duration::from_secs_f64(pause));
+            }
+        }
+        self.task_start = Some(Instant::now());
         true
+    }
+
+    /// Whether owned task `t` was stolen out from under this rank
+    /// ([`Message::Revoke`]): the app must skip it — an idle rank computes
+    /// and reports it instead. Always false with stealing off.
+    pub fn task_revoked(&self, t: &PairTask) -> bool {
+        self.plan.steal && self.revoked.contains(t)
+    }
+
+    /// Whether the app should report results at task granularity
+    /// (streamed chunks) instead of one monolithic Result. True when
+    /// pipelining — the original streaming mode — and under work stealing,
+    /// where the leader needs task-tagged payloads to splice a stolen
+    /// task's result back into the victim's original task order.
+    pub fn per_task_results(&self) -> bool {
+        self.plan.pipeline || self.plan.steal
+    }
+
+    /// Drain everything already on the wire without blocking (work
+    /// stealing's task-boundary poll): revokes take effect, blocks land,
+    /// app traffic and late grants stash, crash injections arm or fire.
+    fn poll_control(&mut self) {
+        while let Some(env) = self.ep.try_recv() {
+            match env.msg {
+                Message::Revoke { tasks } => self.revoked.extend(tasks),
+                Message::AssignBlock(pb) => self.insert_block(pb),
+                Message::App(p) => self.pending.push_back(p),
+                Message::Reassign { for_rank, tasks } => {
+                    self.pending_reassign.push_back((for_rank, tasks));
+                }
+                Message::Proceed => self.banked_proceed = true,
+                Message::Shutdown => {
+                    self.dead = true;
+                    return;
+                }
+                Message::Crash { at } => match at {
+                    KillAt::Scatter => {
+                        self.die();
+                        return;
+                    }
+                    other => self.kill_at = Some(other),
+                },
+                other => panic!(
+                    "worker {}: unexpected {} polling at task boundary",
+                    self.my_block,
+                    other.kind()
+                ),
+            }
+        }
     }
 
     /// `--kill-at compute:<k>` / `disconnect:<k>` check shared by both
@@ -281,7 +390,7 @@ impl WorkerCtx {
     /// already was dead). A `compute` kill announces itself (kill flag /
     /// socket shutdown); a `disconnect` kill goes dark without any goodbye,
     /// leaving detection to the leader's heartbeat timeout.
-    fn injection_says_alive(&mut self) -> bool {
+    pub(super) fn injection_says_alive(&mut self) -> bool {
         if self.dead {
             return false;
         }
@@ -324,6 +433,9 @@ impl WorkerCtx {
                     self.pending_reassign.push_back((for_rank, tasks));
                 }
                 Message::Shutdown => return false,
+                // A steal can revoke queued tasks while we wait on inputs
+                // for an earlier one.
+                Message::Revoke { tasks } => self.revoked.extend(tasks),
                 Message::Crash { at } => match at {
                     // Scatter-phase injection dies on delivery.
                     KillAt::Scatter => {
@@ -357,6 +469,14 @@ impl WorkerCtx {
     pub fn complete_task(&mut self, t: PairTask) {
         self.completed_tasks += 1;
         self.task_tags.push(t);
+        if let Some(start) = self.task_start.take() {
+            let secs = start.elapsed().as_secs_f64();
+            self.last_task_secs = secs;
+            self.tasks_executed += 1;
+            self.task_exec_min = self.task_exec_min.min(secs);
+            self.task_exec_max = self.task_exec_max.max(secs);
+            self.task_exec_sum += secs;
+        }
     }
 
     /// Simulate this rank's death: mark it killed on the transport (the
@@ -392,7 +512,13 @@ impl WorkerCtx {
             // `None` from `run_worker` before reaching another stream).
             return false;
         }
-        if self.ep.can_send_ahead(0) {
+        // Stealing needs task-exact provenance: the leader attributes a
+        // chunk's payload to its last tag (how a victim's copy of a stolen
+        // task is diverted for the first-writer-wins race), so chunks must
+        // never be credit-merged across payload-bearing tasks — leader-bound
+        // sends bypass the credit check on steal runs (the leader drains
+        // continuously; pacing only bounded its queue).
+        if self.ep.can_send_ahead(0) || self.plan.steal {
             let full = self.finish_result(chunk);
             // Tags cover every task completed since the last chunk left —
             // including tasks whose chunks were credit-stashed, which this
@@ -460,6 +586,7 @@ impl WorkerCtx {
                 // yet (standby replicas for recovery, panel blocks) keep
                 // landing during the app protocol.
                 Message::AssignBlock(pb) => self.insert_block(pb),
+                Message::Revoke { tasks } => self.revoked.extend(tasks),
                 other => panic!(
                     "worker {}: unexpected {} while awaiting app traffic",
                     self.my_block,
@@ -477,6 +604,11 @@ impl WorkerCtx {
     /// Block until the leader's Proceed (stashing early app traffic).
     /// Returns false on shutdown/crash — propagate by returning `None`.
     pub fn barrier(&mut self) -> bool {
+        if self.banked_proceed {
+            // The steal poll drained our Proceed ahead of this barrier.
+            self.banked_proceed = false;
+            return true;
+        }
         loop {
             let Some(env) = self.ep.recv() else { return false };
             match env.msg {
@@ -496,6 +628,7 @@ impl WorkerCtx {
                 // Streamed scatter: trailing blocks can land at any
                 // blocking point, the barrier included.
                 Message::AssignBlock(pb) => self.insert_block(pb),
+                Message::Revoke { tasks } => self.revoked.extend(tasks),
                 other => panic!(
                     "worker {}: unexpected {} at barrier",
                     self.my_block,
@@ -544,6 +677,8 @@ mod tests {
                 block: 4,
                 pipeline: true,
                 streamed_scatter: true,
+                steal: false,
+                throttle: None,
                 t0: Instant::now(),
             },
             mem: MemoryAccountant::new(),
@@ -558,6 +693,14 @@ mod tests {
             task_tags: Vec::new(),
             completed_tasks: 0,
             pending_reassign: VecDeque::new(),
+            revoked: std::collections::BTreeSet::new(),
+            banked_proceed: false,
+            task_start: None,
+            last_task_secs: 0.0,
+            tasks_executed: 0,
+            task_exec_min: f64::INFINITY,
+            task_exec_max: 0.0,
+            task_exec_sum: 0.0,
             scatter_blocked_secs: 0.0,
             time_to_first_task: None,
             corr_tiles: 0,
@@ -779,6 +922,65 @@ mod tests {
         assert!(once > 0);
         ctx.insert_block(placed(2, 4, false));
         assert_eq!(ctx.mem.peak_bytes(), once, "replica re-delivery must not re-charge");
+    }
+
+    #[test]
+    fn revoked_task_skips_and_proceed_banks_at_the_poll() {
+        let (_t, mut eps) = Transport::new(2);
+        let me = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        ctx.plan.steal = true;
+        ctx.insert_block(placed(0, 4, true));
+        let own = PairTask { a: 0, b: 0 };
+        let stolen = PairTask { a: 0, b: 1 };
+        leader.send(1, Message::Revoke { tasks: vec![stolen] }).unwrap();
+        leader.send(1, Message::Proceed).unwrap();
+        // The task-boundary poll sees the revoke (block 1 never held — a
+        // missed revoke would hang waiting for it) and banks the Proceed.
+        assert!(ctx.begin_task(&stolen));
+        assert!(ctx.task_revoked(&stolen));
+        assert!(ctx.task_start.is_none(), "a revoked task never starts timing");
+        assert!(ctx.barrier(), "banked Proceed releases the barrier");
+        assert!(ctx.begin_task(&own));
+        assert!(!ctx.task_revoked(&own));
+        ctx.complete_task(own);
+        assert_eq!(ctx.tasks_executed, 1);
+        assert!(ctx.task_exec_min.is_finite());
+        assert!(ctx.task_exec_min <= ctx.task_exec_max);
+        assert!(ctx.task_exec_sum >= ctx.task_exec_max);
+    }
+
+    #[test]
+    fn per_task_results_on_for_pipeline_or_steal() {
+        let (_t, mut eps) = Transport::new(2);
+        let me = eps.pop().unwrap();
+        let _leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        assert!(ctx.per_task_results(), "pipelined mode streams per task");
+        ctx.plan.pipeline = false;
+        assert!(!ctx.per_task_results());
+        ctx.plan.steal = true;
+        assert!(ctx.per_task_results(), "stealing forces task-granular results");
+    }
+
+    #[test]
+    fn begin_task_heartbeats_unstreamed_tags_when_stealing() {
+        let (_t, mut eps) = Transport::new(2);
+        let me = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        ctx.plan.steal = true;
+        ctx.insert_block(placed(0, 4, true));
+        let own = PairTask { a: 0, b: 0 };
+        // A task that produced no chunk (empty tile / credit stash) leaves
+        // its tag behind; the next begin_task reports it as TasksDone.
+        ctx.complete_task(own);
+        assert!(ctx.begin_task(&own));
+        match leader.recv().unwrap().msg {
+            Message::TasksDone { tasks } => assert_eq!(tasks, vec![own]),
+            other => panic!("wrong message {}", other.kind()),
+        }
     }
 
     #[test]

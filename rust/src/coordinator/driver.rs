@@ -50,6 +50,16 @@ pub struct RankStats {
     pub time_to_first_task_secs: f64,
     /// Result items this rank reported (edges, tiles, force blocks).
     pub n_items: u64,
+    /// Pair tasks this rank actually executed (own + recovered + stolen).
+    pub tasks_executed: u64,
+    /// Fastest single task-execution time on this rank (0 if no tasks).
+    pub task_exec_min_secs: f64,
+    /// Slowest single task-execution time on this rank.
+    pub task_exec_max_secs: f64,
+    /// Total task-execution seconds; mean = total / tasks_executed. The
+    /// min/max/mean triple is the per-rank compute-time skew the
+    /// work-stealing scheduler exists to flatten.
+    pub task_exec_total_secs: f64,
 }
 
 /// Engine knobs shared by every app.
@@ -114,6 +124,22 @@ pub struct EngineOptions {
     /// TCP only: join-handshake deadline; workers dial with capped
     /// exponential backoff until it expires (`--join-timeout-ms`).
     pub join_timeout_ms: u64,
+    /// Work stealing (`--steal on`, env `QUORALL_STEAL`): when a rank
+    /// drains its queue the leader re-grants *queued, not-yet-started*
+    /// tasks from the most-backlogged rank to the idle one — but only
+    /// tasks whose blocks the thief already holds under the placement, so
+    /// a steal moves zero scatter traffic. First-writer-wins parity
+    /// asserts keep a steal racing the original owner bitwise-identical.
+    /// Requires a task-granular app ([`DistributedApp::recoverable`]);
+    /// silently off otherwise.
+    pub steal: bool,
+    /// Max queued tasks one steal grant may move (`--steal-batch`).
+    pub steal_batch: usize,
+    /// Deterministic slow-rank injection (`--throttle <rank>:<factor>`):
+    /// the rank sleeps (factor − 1) × its previous task's execution time
+    /// before each task after its first, simulating a straggler without
+    /// changing any computed value.
+    pub throttle: Option<(usize, u32)>,
 }
 
 /// Process-wide pipeline default: `QUORALL_PIPELINE=on|1` flips every
@@ -150,6 +176,17 @@ pub fn transport_default() -> TransportKind {
         .unwrap_or(TransportKind::Memory)
 }
 
+/// Process-wide steal default: `QUORALL_STEAL=on|1` flips every engine run
+/// built through [`EngineOptions::new`] / `RunConfig` defaults to the
+/// work-stealing scheduler (how CI runs the integration suite down both
+/// paths). Explicit `--steal` / `opts.steal` settings win.
+pub fn steal_default() -> bool {
+    std::env::var("QUORALL_STEAL")
+        .ok()
+        .and_then(|v| crate::config::parse_steal(&v))
+        .unwrap_or(false)
+}
+
 impl EngineOptions {
     pub fn new(ranks: usize, strategy: Strategy) -> Self {
         Self {
@@ -170,6 +207,9 @@ impl EngineOptions {
             heartbeat_ms: HeartbeatConfig::default().interval_ms,
             heartbeat_timeout_ms: HeartbeatConfig::default().timeout_ms,
             join_timeout_ms: 10_000,
+            steal: steal_default(),
+            steal_batch: 2,
+            throttle: None,
         }
     }
 }
@@ -217,6 +257,12 @@ pub struct EngineReport {
     pub overlap_ratio: f64,
     /// Tasks recomputed by surviving ranks after mid-run deaths.
     pub recovered_tasks: u64,
+    /// Queued tasks the work-stealing scheduler re-granted from backlogged
+    /// ranks to idle ones (counted at grant time; 0 with `--steal off`).
+    pub stolen_tasks: u64,
+    /// Mean seconds from a steal grant to that task's result arriving at
+    /// the leader (0 if nothing was stolen).
+    pub steal_latency_secs: f64,
     /// Ranks that died during the run (injected or crashed), ascending.
     pub dead_ranks: Vec<usize>,
     /// Transport backend the run used.
@@ -292,6 +338,12 @@ pub fn run_app_with_sink(
     for (i, &k) in opts.kill.iter().enumerate() {
         anyhow::ensure!(!opts.kill[..i].contains(&k), "kill list targets rank {k} twice");
     }
+    if let Some((r, f)) = opts.throttle {
+        anyhow::ensure!(r < p, "throttle rank {r} out of range (P = {p})");
+        anyhow::ensure!(f >= 1, "throttle factor must be >= 1 (got {f})");
+    }
+    // Stealing needs the task-granular replay machinery recovery built.
+    let steal = opts.steal && app.recoverable();
     let n = app.elements();
 
     // Placement + per-rank task lists. Compute is always exactly-once:
@@ -344,13 +396,18 @@ pub fn run_app_with_sink(
     // `compute:<k>` / `disconnect:<k>` to trip) would be a silent no-op
     // while the victim still counts as doomed for recovery assignee
     // selection — reject it.
+    // Under stealing a rank can execute more tasks than it owns (stolen
+    // grants count toward the trigger), so the per-rank bound relaxes to
+    // the total task count — the steal × kill matrix tests rely on exactly
+    // that to crash a thief mid-steal.
+    let total_tasks: usize = tasks.iter().map(|t| t.len()).sum();
     for &(victim, at) in &kill_plan {
         if let Some(k) = at.compute_trigger() {
+            let bound = if steal { total_tasks } else { tasks[victim].len() };
             anyhow::ensure!(
-                tasks[victim].len() > k,
-                "kill-at {} can never fire: rank {victim} only owns {} tasks",
-                at.name(),
-                tasks[victim].len()
+                bound > k,
+                "kill-at {} can never fire: rank {victim} can execute at most {bound} tasks",
+                at.name()
             );
         }
     }
@@ -361,6 +418,8 @@ pub fn run_app_with_sink(
         block: ceil_div(n, p),
         pipeline: opts.pipeline,
         streamed_scatter: opts.streamed_scatter,
+        steal,
+        throttle: opts.throttle,
         t0: std::time::Instant::now(),
     };
     let sw = Stopwatch::start();
@@ -375,6 +434,7 @@ pub fn run_app_with_sink(
             tasks,
             kill: kill_plan,
             recovery,
+            steal_batch: opts.steal_batch,
             sink,
         },
     );
@@ -443,6 +503,8 @@ pub fn run_app_with_sink(
         time_to_first_task_secs: first_task,
         overlap_ratio: overlap,
         recovered_tasks: outcome.recovered_tasks,
+        stolen_tasks: outcome.stolen_tasks,
+        steal_latency_secs: outcome.steal_latency_secs,
         dead_ranks: outcome.dead_ranks,
         transport: transport.kind(),
         health,
@@ -546,6 +608,8 @@ fn launch_cluster(
                     plan.block,
                     plan.pipeline,
                     plan.streamed_scatter,
+                    plan.steal,
+                    plan.throttle,
                     &spec,
                 );
                 let bin = match &opts.worker_bin {
@@ -632,6 +696,10 @@ pub struct DistributedReport {
     pub overlap_ratio: f64,
     /// Tasks recomputed by surviving ranks after mid-run deaths.
     pub recovered_tasks: u64,
+    /// See [`EngineReport::stolen_tasks`].
+    pub stolen_tasks: u64,
+    /// See [`EngineReport::steal_latency_secs`].
+    pub steal_latency_secs: f64,
     /// Ranks that died during the run, ascending.
     pub dead_ranks: Vec<usize>,
     /// Transport backend the run used.
@@ -687,6 +755,9 @@ pub fn run_distributed_pcit(
     opts.tcp_processes = cfg.tcp_processes;
     opts.heartbeat_ms = cfg.heartbeat_ms;
     opts.heartbeat_timeout_ms = cfg.heartbeat_timeout_ms;
+    opts.steal = cfg.steal;
+    opts.steal_batch = cfg.steal_batch;
+    opts.throttle = cfg.throttle;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -704,6 +775,8 @@ pub fn run_distributed_pcit(
         time_to_first_task_secs: rep.time_to_first_task_secs,
         overlap_ratio: rep.overlap_ratio,
         recovered_tasks: rep.recovered_tasks,
+        stolen_tasks: rep.stolen_tasks,
+        steal_latency_secs: rep.steal_latency_secs,
         dead_ranks: rep.dead_ranks,
         transport: rep.transport,
         health: rep.health,
@@ -773,6 +846,9 @@ pub fn run_resilient_pcit_at(
     opts.tcp_processes = cfg.tcp_processes;
     opts.heartbeat_ms = cfg.heartbeat_ms;
     opts.heartbeat_timeout_ms = cfg.heartbeat_timeout_ms;
+    opts.steal = cfg.steal;
+    opts.steal_batch = cfg.steal_batch;
+    opts.throttle = cfg.throttle;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -790,6 +866,8 @@ pub fn run_resilient_pcit_at(
         time_to_first_task_secs: rep.time_to_first_task_secs,
         overlap_ratio: rep.overlap_ratio,
         recovered_tasks: rep.recovered_tasks,
+        stolen_tasks: rep.stolen_tasks,
+        steal_latency_secs: rep.steal_latency_secs,
         dead_ranks: rep.dead_ranks,
         transport: rep.transport,
         health: rep.health,

@@ -55,7 +55,7 @@ use std::collections::btree_map::Entry;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::ops::Range;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Poll interval for failure detection while waiting on workers.
 const POLL: Duration = Duration::from_millis(25);
@@ -85,6 +85,11 @@ pub struct LeaderOutcome {
     pub recovered_tasks: u64,
     /// Ranks that died during the run (injected or crashed), ascending.
     pub dead_ranks: Vec<usize>,
+    /// Tasks the work-stealing scheduler revoked from backlogged ranks and
+    /// granted to idle replica hosts (counted at grant time).
+    pub stolen_tasks: u64,
+    /// Mean grant-to-result latency across completed steals (seconds).
+    pub steal_latency_secs: f64,
 }
 
 /// Leader-side inputs: the app, its placement, and precomputed per-rank
@@ -106,6 +111,9 @@ pub struct LeaderPlan<'a, 's> {
     /// Present when the caller assembles results incrementally as they
     /// arrive ([`ResultSink`]); `LeaderOutcome::results` then stays empty.
     pub sink: Option<&'a mut ResultSink<'s>>,
+    /// Max queued tasks one steal revokes from a victim (`--steal-batch`).
+    /// Only read when the plan enables stealing.
+    pub steal_batch: usize,
 }
 
 /// Per-dead-rank orphan bookkeeping.
@@ -116,6 +124,33 @@ struct Orphans {
     /// parity-asserted and dropped).
     got: BTreeMap<PairTask, Payload>,
     /// All orphans recovered and the rank's result spliced into `results`.
+    finalized: bool,
+}
+
+/// Work-stealing configuration (present iff the run steals).
+struct StealCfg {
+    /// Max queued tasks one steal revokes from a victim.
+    batch: usize,
+    /// (a, b) → every rank whose quorum holds both blocks — the thief
+    /// eligibility predicate. Broader than the r-fold recovery owner set:
+    /// any resident host can execute a stolen task with zero extra scatter
+    /// traffic.
+    hosts: BTreeMap<(usize, usize), Vec<usize>>,
+}
+
+/// Per-*live*-victim steal ledger. `tasks` is always a contiguous suffix
+/// of the victim's assignment order (steals only bite from the tail, never
+/// past a completed or started task), so the victim's final payload —
+/// streamed prefix + own Result remainder — splices with the stolen
+/// payloads in original task order exactly like dead-rank recovery does.
+struct StealBook {
+    /// Stolen tasks, in the victim's original assignment order.
+    tasks: Vec<PairTask>,
+    /// Stolen payloads by task: the thief's recovered result, or the
+    /// victim's own chunk when it raced the revoke (first writer wins,
+    /// duplicates parity-asserted).
+    got: BTreeMap<PairTask, Payload>,
+    /// Victim result spliced with all stolen payloads.
     finalized: bool,
 }
 
@@ -157,6 +192,18 @@ struct Gather<'a, 's> {
     /// Recovery work handed to each rank so far (assignee choice balance).
     reassign_load: Vec<usize>,
     recovered_tasks: u64,
+    /// Work stealing enabled (`Some`): policy knobs + residency map.
+    steal: Option<StealCfg>,
+    /// Live victims' stolen-task ledgers.
+    stolen: BTreeMap<usize, StealBook>,
+    /// Tasks stolen so far (counted at grant — deterministic even when a
+    /// victim later races the revoke).
+    stolen_tasks: u64,
+    /// Grant stamps of in-flight steals (drained into the latency sums on
+    /// first arrival of each stolen task's payload).
+    steal_grants: BTreeMap<PairTask, Instant>,
+    steal_latency_sum: f64,
+    steal_latency_n: u64,
     /// Outstanding barrier phases: phase -> ranks still to report. Lives
     /// here (not in a loop local) because phase reports can reach any
     /// leader loop once the scatter streams.
@@ -171,6 +218,7 @@ impl<'a, 's> Gather<'a, 's> {
         known_kill: Vec<usize>,
         recovery: Option<RedundantAssignment>,
         sink: Option<&'a mut ResultSink<'s>>,
+        steal: Option<StealCfg>,
     ) -> Self {
         Gather {
             p,
@@ -192,6 +240,12 @@ impl<'a, 's> Gather<'a, 's> {
             delegated: BTreeMap::new(),
             reassign_load: vec![0; p],
             recovered_tasks: 0,
+            steal,
+            stolen: BTreeMap::new(),
+            stolen_tasks: 0,
+            steal_grants: BTreeMap::new(),
+            steal_latency_sum: 0.0,
+            steal_latency_n: 0,
             phases_left: app.sync_phases().iter().map(|&ph| (ph, (0..p).collect())).collect(),
         }
     }
@@ -253,8 +307,71 @@ impl<'a, 's> Gather<'a, 's> {
             self.need_result.contains(&rank),
             "leader: unexpected result chunk from rank {rank}"
         );
+        // Work stealing: a chunk whose payload belongs to a *stolen* task
+        // means the victim computed it before the revoke landed. Steal-mode
+        // chunks are per-task (never credit-merged across tasks), so the
+        // payload is attributable to the last tag: divert it into the steal
+        // book — first writer wins against the thief's copy — instead of
+        // folding it into the victim's kept prefix, which must stay exactly
+        // the non-stolen tasks for the final splice to preserve order.
+        if let Some(book) = self.stolen.get(&rank) {
+            if !book.finalized {
+                if let Some(&last) = tasks.last().filter(|t| book.tasks.contains(t)) {
+                    let thief_won = book.got.contains_key(&last);
+                    let stolen: Vec<PairTask> = book.tasks.clone();
+                    for t in &tasks {
+                        if !stolen.contains(t) {
+                            self.done[rank].insert(*t);
+                        }
+                    }
+                    let parity_strict = self.parity_strict;
+                    let book = self.stolen.get_mut(&rank).expect("checked above");
+                    match book.got.entry(last) {
+                        Entry::Occupied(e) => {
+                            debug_assert!(thief_won);
+                            assert_duplicate_parity(parity_strict, e.get(), &payload, last, rank);
+                        }
+                        Entry::Vacant(slot) => {
+                            slot.insert(payload);
+                        }
+                    }
+                    return Ok(());
+                }
+                // Non-stolen payload: fold it, but any stolen tag riding
+                // along (a revoked task that produced no payload) stays
+                // un-done — the thief's grant covers it.
+                let stolen: Vec<PairTask> = book.tasks.clone();
+                self.fold(ep, rank, payload)?;
+                for t in tasks {
+                    if !stolen.contains(&t) {
+                        self.done[rank].insert(t);
+                    }
+                }
+                return Ok(());
+            }
+        }
         self.fold(ep, rank, payload)?;
         self.done[rank].extend(tasks);
+        Ok(())
+    }
+
+    /// Progress heartbeat ([`Message::TasksDone`]): tasks completed whose
+    /// payloads did not ride a chunk yet. Stolen tags are ignored — their
+    /// completion is accounted through the steal book.
+    fn on_tasks_done(&mut self, rank: usize, tasks: Vec<PairTask>) -> anyhow::Result<()> {
+        if self.dead.contains_key(&rank) {
+            return Ok(());
+        }
+        if let Some(book) = self.stolen.get(&rank) {
+            let stolen: Vec<PairTask> = book.tasks.clone();
+            for t in tasks {
+                if !stolen.contains(&t) {
+                    self.done[rank].insert(t);
+                }
+            }
+        } else {
+            self.done[rank].extend(tasks);
+        }
         Ok(())
     }
 
@@ -268,13 +385,19 @@ impl<'a, 's> Gather<'a, 's> {
             "leader: unexpected result from rank {rank}"
         );
         self.fold(ep, rank, payload)?;
-        if self.sink.is_none() {
+        // A steal victim's result is only its kept prefix: defer emission
+        // until every stolen payload has landed and the splice can run.
+        let steal_open = self.stolen.get(&rank).map_or(false, |b| !b.finalized);
+        if self.sink.is_none() && !steal_open {
             let full = self.partial.remove(&rank).expect("fold always inserts");
             self.results.push((rank, full));
         }
         self.result_done[rank] = true;
         let all = self.assigned[rank].clone();
         self.done[rank].extend(all);
+        if steal_open {
+            self.finalize_steal(rank)?;
+        }
         Ok(())
     }
 
@@ -327,13 +450,45 @@ impl<'a, 's> Gather<'a, 's> {
                 v.remove(i);
             }
         }
-        let mut newly = false;
-        {
-            let Some(orph) = self.dead.get_mut(&for_rank) else {
+        // Steal latency: first arrival of a granted task's payload closes
+        // the grant-to-result window (also when the victim died after the
+        // grant and the payload lands through the dead-rank path).
+        if let Some(t0) = self.steal_grants.remove(&task) {
+            self.steal_latency_sum += t0.elapsed().as_secs_f64();
+            self.steal_latency_n += 1;
+        }
+        if !self.dead.contains_key(&for_rank) {
+            // Live victim: this is a stolen task's payload from a thief.
+            let parity_strict = self.parity_strict;
+            let Some(book) = self.stolen.get_mut(&for_rank) else {
                 anyhow::bail!(
                     "leader: rank {from} recovered a task for rank {for_rank}, which is not dead"
                 );
             };
+            if book.finalized || !book.tasks.contains(&task) {
+                // The steal already resolved (splice done, or the victim
+                // won the race and the book moved on) — drop the straggler.
+                crate::log_warn!(
+                    "leader: dropping late stolen result ({}, {}) for rank {for_rank}",
+                    task.a,
+                    task.b
+                );
+                return Ok(());
+            }
+            match book.got.entry(task) {
+                Entry::Occupied(e) => {
+                    assert_duplicate_parity(parity_strict, e.get(), &payload, task, for_rank);
+                }
+                Entry::Vacant(slot) => {
+                    slot.insert(payload);
+                }
+            }
+            return self.finalize_steal(for_rank);
+        }
+        let mut newly = false;
+        {
+            let parity_strict = self.parity_strict;
+            let orph = self.dead.get_mut(&for_rank).expect("checked above");
             anyhow::ensure!(
                 orph.tasks.contains(&task),
                 "leader: recovered task ({}, {}) is not an orphan of rank {for_rank}",
@@ -347,22 +502,7 @@ impl<'a, 's> Gather<'a, 's> {
                     // the operational form of the replication claim.
                     // Approximate-recovery apps (full-PCIT local panels)
                     // legitimately differ, so only the strict case asserts.
-                    if self.parity_strict {
-                        let same = e.get().parity_eq(&payload);
-                        if !same {
-                            crate::log_warn!(
-                                "leader: duplicate recovery of task ({}, {}) for rank {for_rank} is NOT bitwise-identical",
-                                task.a,
-                                task.b
-                            );
-                        }
-                        debug_assert!(
-                            same,
-                            "duplicate recovered result for task ({}, {}) must be bitwise-identical",
-                            task.a,
-                            task.b
-                        );
-                    }
+                    assert_duplicate_parity(parity_strict, e.get(), &payload, task, for_rank);
                 }
                 Entry::Vacant(v) => {
                     v.insert(payload);
@@ -423,6 +563,169 @@ impl<'a, 's> Gather<'a, 's> {
         Ok(())
     }
 
+    /// Queued (not done, not already stolen) tasks remaining at rank `v` —
+    /// the victim-selection backlog metric.
+    fn backlog(&self, v: usize) -> usize {
+        let stolen = self.stolen.get(&v).map_or(0, |b| b.tasks.len());
+        self.assigned[v].len().saturating_sub(self.done[v].len() + stolen)
+    }
+
+    /// Any live victim still owed a stolen payload (keeps the gather loop
+    /// alive until every steal splices).
+    fn steal_pending(&self) -> bool {
+        self.stolen.values().any(|b| !b.finalized)
+    }
+
+    /// The work-stealing scheduler: for every idle rank (own result
+    /// reported, no outstanding grants), revoke up to `batch` queued tasks
+    /// from the most-backlogged victim whose tasks the thief can host
+    /// (both blocks resident via r-fold placement — zero extra scatter
+    /// traffic) and grant them as a [`Message::Reassign`], the same late
+    /// grant a death would send. Steals only bite from the *tail* of the
+    /// victim's assignment order and never cross a completed or
+    /// first-undone (likely in-flight) task, so the stolen set stays a
+    /// contiguous suffix and the final splice preserves task order.
+    fn try_steal(&mut self, ep: &Endpoint) {
+        if self.steal.is_none() || !self.app_recoverable {
+            return;
+        }
+        for thief in 0..self.p {
+            if !self.result_done[thief]
+                || self.dead.contains_key(&thief)
+                || self.delegated.get(&thief).map_or(false, |v| !v.is_empty())
+                || ep.transport().is_killed(endpoint_of(thief))
+            {
+                continue;
+            }
+            // Victims by backlog, descending (ties: lowest rank) — only
+            // ranks still computing with at least two queued tasks (the
+            // earliest undone task is likely in flight and never stolen).
+            let mut victims: Vec<usize> = (0..self.p)
+                .filter(|&v| {
+                    v != thief
+                        && self.need_result.contains(&v)
+                        && !self.dead.contains_key(&v)
+                        && self.backlog(v) >= 2
+                })
+                .collect();
+            victims.sort_by_key(|&v| (std::cmp::Reverse(self.backlog(v)), v));
+            for v in victims {
+                let take = self.steal_suffix(thief, v);
+                if take.is_empty() {
+                    continue;
+                }
+                let now = Instant::now();
+                for &t in &take {
+                    self.steal_grants.insert(t, now);
+                    self.delegated.entry(thief).or_default().push((v, t));
+                }
+                self.reassign_load[thief] += take.len();
+                self.stolen_tasks += take.len() as u64;
+                let book = self.stolen.entry(v).or_insert_with(|| StealBook {
+                    tasks: Vec::new(),
+                    got: BTreeMap::new(),
+                    finalized: false,
+                });
+                // Prepend: the new steal sits just ahead of the previously
+                // stolen suffix in the victim's assignment order.
+                let mut tasks = take.clone();
+                tasks.extend(book.tasks.iter().copied());
+                book.tasks = tasks;
+                crate::log_info!(
+                    "leader: rank {thief} steals {} queued task(s) from rank {v} (backlog {})",
+                    take.len(),
+                    self.backlog(v)
+                );
+                // Both sends tolerate failure: a rank dying in this window
+                // is discovered by the failure detector, and the steal
+                // either re-orphans (thief death) or resolves through the
+                // dead-victim path.
+                let _ = ep.send(endpoint_of(v), Message::Revoke { tasks: take.clone() });
+                let _ = ep
+                    .send(endpoint_of(thief), Message::Reassign { for_rank: v, tasks: take });
+                break;
+            }
+        }
+    }
+
+    /// Pick the tasks one steal takes: walk backwards from the victim's
+    /// current stolen suffix (or its queue tail), collecting up to `batch`
+    /// tasks the thief hosts, stopping at any task that is done, first
+    /// undone, or not resident on the thief — which keeps the stolen set a
+    /// contiguous, thief-computable suffix.
+    fn steal_suffix(&self, thief: usize, v: usize) -> Vec<PairTask> {
+        let cfg = self.steal.as_ref().expect("caller checked");
+        let a = &self.assigned[v];
+        let suffix_start = match self.stolen.get(&v).and_then(|b| b.tasks.first()) {
+            Some(first) => a.iter().position(|t| t == first).unwrap_or(a.len()),
+            None => a.len(),
+        };
+        let first_undone =
+            a.iter().position(|t| !self.done[v].contains(t)).unwrap_or(a.len());
+        let mut take = Vec::new();
+        let mut i = suffix_start;
+        while i > 0 && take.len() < cfg.batch {
+            let t = a[i - 1];
+            if i - 1 <= first_undone || self.done[v].contains(&t) {
+                break;
+            }
+            let key = (t.a.min(t.b), t.a.max(t.b));
+            if !cfg.hosts.get(&key).map_or(false, |hs| hs.contains(&thief)) {
+                break;
+            }
+            take.push(t);
+            i -= 1;
+        }
+        take.reverse();
+        take
+    }
+
+    /// Once steal victim `v` has reported its own Result (its kept prefix)
+    /// and every stolen task's payload has landed, splice: prefix followed
+    /// by the stolen payloads in original task order — bitwise what the
+    /// victim alone would have produced under the static schedule.
+    fn finalize_steal(&mut self, v: usize) -> anyhow::Result<()> {
+        if !self.result_done[v] {
+            return Ok(());
+        }
+        let Some(book) = self.stolen.get_mut(&v) else { return Ok(()) };
+        if book.finalized || !book.tasks.iter().all(|t| book.got.contains_key(t)) {
+            return Ok(());
+        }
+        book.finalized = true;
+        let tasks = book.tasks.clone();
+        let mut stolen_payloads = Vec::with_capacity(tasks.len());
+        for t in &tasks {
+            stolen_payloads.push(book.got.remove(t).expect("completeness checked above"));
+        }
+        if let Some(sink) = &mut self.sink {
+            for payload in stolen_payloads {
+                sink(v, payload)?;
+            }
+            return Ok(());
+        }
+        let mut acc: Option<Payload> = self.partial.remove(&v);
+        for payload in stolen_payloads {
+            acc = Some(match acc {
+                None => payload,
+                Some(mut a) => {
+                    anyhow::ensure!(
+                        a.mergeable_with(&payload),
+                        "leader: stolen {} payload cannot splice into rank {v}'s {} result",
+                        payload.kind(),
+                        a.kind()
+                    );
+                    a.merge(payload);
+                    a
+                }
+            });
+        }
+        if let Some(payload) = acc {
+            self.results.push((v, payload));
+        }
+        Ok(())
+    }
+
     /// Declare rank `d` dead: excuse it from the gather (and any barrier
     /// phase), compute its orphans from the ledger (plus any recovery work
     /// previously delegated *to* it), and re-assign every orphan to a
@@ -438,6 +741,20 @@ impl<'a, 's> Gather<'a, 's> {
             .filter(|t| !self.done[d].contains(*t))
             .copied()
             .collect();
+        // A steal victim dying carries its book over: payloads already
+        // recovered (thief results, diverted victim chunks) seed the orphan
+        // ledger, and tasks still granted to a *live* thief need no fresh
+        // re-assignment — the thief's RecoveredResult now lands through the
+        // dead-rank path.
+        let seed_got = self.stolen.remove(&d).map(|b| b.got).unwrap_or_default();
+        let delegated_away: BTreeSet<PairTask> = self
+            .delegated
+            .iter()
+            .filter(|&(thief, _)| !self.dead.contains_key(thief))
+            .flat_map(|(_, v)| v.iter())
+            .filter(|&&(orig, _)| orig == d)
+            .map(|&(_, t)| t)
+            .collect();
         let redelegate: Vec<(usize, PairTask)> = self
             .delegated
             .remove(&d)
@@ -446,27 +763,34 @@ impl<'a, 's> Gather<'a, 's> {
             .filter(|(orig, t)| {
                 // Skip tasks whose recovery already landed from elsewhere
                 // (a finalized rank's `got` has been drained into its
-                // spliced result, so finalized counts as recovered too).
+                // spliced result, so finalized counts as recovered too) —
+                // checking both the dead ledger and, for a dead thief's
+                // grants from a still-live steal victim, its steal book.
                 match self.dead.get(orig) {
                     Some(o) => !o.finalized && !o.got.contains_key(t),
-                    None => true,
+                    None => match self.stolen.get(orig) {
+                        Some(b) => !b.finalized && !b.got.contains_key(t),
+                        None => true,
+                    },
                 }
             })
             .collect();
-        self.dead.insert(
-            d,
-            Orphans { tasks: own.clone(), got: BTreeMap::new(), finalized: false },
-        );
+        let assign_own: Vec<PairTask> = own
+            .iter()
+            .filter(|t| !seed_got.contains_key(t) && !delegated_away.contains(t))
+            .copied()
+            .collect();
+        self.dead.insert(d, Orphans { tasks: own, got: seed_got, finalized: false });
         crate::log_warn!(
             "leader: rank {d} died mid-run; re-assigning {} unfinished tasks to surviving hosts",
-            own.len() + redelegate.len()
+            assign_own.len() + redelegate.len()
         );
 
         // Choose a surviving backup owner per orphan (least recovery load,
         // then smallest rank — deterministic), batching sends per
         // (assignee, original rank).
         let mut batches: BTreeMap<(usize, usize), Vec<PairTask>> = BTreeMap::new();
-        let orphans = own.into_iter().map(|t| (d, t)).chain(redelegate);
+        let orphans = assign_own.into_iter().map(|t| (d, t)).chain(redelegate);
         for (orig, t) in orphans {
             let owners: Vec<usize> = self
                 .recovery
@@ -570,18 +894,23 @@ impl<'a, 's> Gather<'a, 's> {
     fn dispatch(&mut self, ep: &Endpoint, env: Envelope) -> anyhow::Result<()> {
         let rank = rank_of(env.from);
         match env.msg {
-            Message::ResultChunk { payload, tasks } => self.on_chunk(ep, rank, payload, tasks),
-            Message::Result(payload) => self.on_result(ep, rank, payload),
+            Message::ResultChunk { payload, tasks } => self.on_chunk(ep, rank, payload, tasks)?,
+            Message::Result(payload) => self.on_result(ep, rank, payload)?,
             Message::RecoveredResult { for_rank, task, payload } => {
-                self.on_recovered(rank, for_rank, task, payload)
+                self.on_recovered(rank, for_rank, task, payload)?
             }
-            Message::Stats(s) => self.on_stats(rank, s),
-            Message::PhaseDone { phase } => self.on_phase_done(rank, phase),
+            Message::TasksDone { tasks } => self.on_tasks_done(rank, tasks)?,
+            Message::Stats(s) => self.on_stats(rank, s)?,
+            Message::PhaseDone { phase } => self.on_phase_done(rank, phase)?,
             other => {
                 abort(ep, self.p);
                 anyhow::bail!("leader: unexpected {} at the leader", other.kind());
             }
         }
+        // Every ledger movement — a result freeing a thief, fresh progress
+        // sharpening backlogs, a recovered steal — can open a steal window.
+        self.try_steal(ep);
+        Ok(())
     }
 
     /// Wait up to [`POLL`] for one message; on timeout, sweep for newly
@@ -591,10 +920,42 @@ impl<'a, 's> Gather<'a, 's> {
             Some(env) => self.dispatch(ep, env),
             None => {
                 let dead = self.newly_dead(ep);
-                self.handle_deaths(ep, dead, context)
+                self.handle_deaths(ep, dead, context)?;
+                self.try_steal(ep);
+                Ok(())
             }
         }
     }
+}
+
+/// First-writer-wins duplicate check shared by every recovery/steal path:
+/// with bitwise recovery the duplicate must reproduce the first writer's
+/// bytes exactly (the operational form of the replication claim);
+/// approximate-recovery apps legitimately differ and only warn.
+fn assert_duplicate_parity(
+    parity_strict: bool,
+    existing: &Payload,
+    dup: &Payload,
+    task: PairTask,
+    for_rank: usize,
+) {
+    if !parity_strict {
+        return;
+    }
+    let same = existing.parity_eq(dup);
+    if !same {
+        crate::log_warn!(
+            "leader: duplicate result for task ({}, {}) of rank {for_rank} is NOT bitwise-identical",
+            task.a,
+            task.b
+        );
+    }
+    debug_assert!(
+        same,
+        "duplicate result for task ({}, {}) of rank {for_rank} must be bitwise-identical",
+        task.a,
+        task.b
+    );
 }
 
 /// Run the leader protocol on endpoint 0; worker rank w listens on
@@ -606,9 +967,22 @@ pub fn leader_main(
 ) -> anyhow::Result<LeaderOutcome> {
     let p = plan.p;
     let part = Partition::new(plan.n, p);
-    let LeaderPlan { app, quorum, tasks, kill, recovery, sink } = lp;
+    let LeaderPlan { app, quorum, tasks, kill, recovery, sink, steal_batch } = lp;
     let doomed: Vec<usize> = kill.iter().map(|&(k, _)| k).collect();
-    let mut g = Gather::new(p, app, tasks.clone(), doomed.clone(), recovery, sink);
+    // Work stealing: precompute the full residency map — every rank whose
+    // quorum hosts both of a pair's blocks can execute that pair's task
+    // with zero extra scatter traffic (broader than the r-fold recovery
+    // owner subset).
+    let steal_cfg = (plan.steal && app.recoverable() && steal_batch > 0).then(|| {
+        let mut hosts: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for a in 0..p {
+            for b in a..p {
+                hosts.insert((a, b), quorum.pair_hosts(a, b));
+            }
+        }
+        StealCfg { batch: steal_batch, hosts }
+    });
+    let mut g = Gather::new(p, app, tasks.clone(), doomed.clone(), recovery, sink, steal_cfg);
 
     // Materialize each distinct block exactly once, Arc-shared across its
     // replica owners. Exactly one *delivered* send per block carries the
@@ -739,8 +1113,12 @@ pub fn leader_main(
         }
     }
 
-    // ---- Gather results + stats; serve recovery until complete. ----
-    while !g.need_result.is_empty() || !g.need_stats.is_empty() || g.recovery_pending() {
+    // ---- Gather results + stats; serve recovery + steals to the end. ----
+    while !g.need_result.is_empty()
+        || !g.need_stats.is_empty()
+        || g.recovery_pending()
+        || g.steal_pending()
+    {
         g.pump(ep, "reporting its result")?;
     }
     g.results.sort_by_key(|(r, _)| *r);
@@ -755,6 +1133,12 @@ pub fn leader_main(
         stats: g.stats,
         recovered_tasks: g.recovered_tasks,
         dead_ranks: g.dead.keys().copied().collect(),
+        stolen_tasks: g.stolen_tasks,
+        steal_latency_secs: if g.steal_latency_n > 0 {
+            g.steal_latency_sum / g.steal_latency_n as f64
+        } else {
+            0.0
+        },
     })
 }
 

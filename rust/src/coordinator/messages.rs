@@ -323,6 +323,19 @@ pub enum Message {
     /// recovered payloads back into the dead rank's original task order, so
     /// assembly stays bitwise-identical to the failure-free run.
     RecoveredResult { for_rank: usize, task: PairTask, payload: Payload },
+    /// Worker → leader: progress heartbeat — tasks completed since the
+    /// last streamed chunk left (work stealing). Sent piggybacked on the
+    /// compute loop (next `begin_task`) so the leader's backlog estimate
+    /// stays fresh even when a result chunk is credit-stashed or a task
+    /// produced no payload. Tags may duplicate a later chunk's; the ledger
+    /// fold is idempotent.
+    TasksDone { tasks: Vec<PairTask> },
+    /// Leader → worker: these queued, not-yet-started tasks were stolen
+    /// and granted to an idle rank — skip them. Checked non-blockingly at
+    /// every `begin_task`; a task already past that point races the
+    /// revoke, and the leader's first-writer-wins parity assert keeps the
+    /// duplicate bitwise-identical.
+    Revoke { tasks: Vec<PairTask> },
     /// Worker → leader: per-rank stats at completion.
     Stats(crate::coordinator::driver::RankStats),
     /// Leader → worker: phase barrier release.
@@ -353,6 +366,7 @@ impl Message {
             Message::ResultChunk { payload, tasks } => payload.nbytes() + (tasks.len() * 16) as u64,
             Message::Reassign { tasks, .. } => (tasks.len() * 16) as u64,
             Message::RecoveredResult { payload, .. } => 16 + payload.nbytes(),
+            Message::TasksDone { tasks } | Message::Revoke { tasks } => (tasks.len() * 16) as u64,
             Message::Stats(_) => 128,
             Message::Proceed
             | Message::PhaseDone { .. }
@@ -373,6 +387,8 @@ impl Message {
             Message::ResultChunk { .. } => "result-chunk",
             Message::Reassign { .. } => "reassign",
             Message::RecoveredResult { .. } => "recovered-result",
+            Message::TasksDone { .. } => "tasks-done",
+            Message::Revoke { .. } => "revoke",
             Message::Stats(_) => "stats",
             Message::Proceed => "proceed",
             Message::PhaseDone { .. } => "phase-done",
@@ -468,6 +484,12 @@ mod tests {
             .kind(),
             "recovered-result"
         );
+        let done = Message::TasksDone { tasks: vec![PairTask { a: 0, b: 1 }; 3] };
+        assert_eq!(done.kind(), "tasks-done");
+        assert_eq!(done.payload_bytes(), HEADER_BYTES + 3 * 16);
+        let revoke = Message::Revoke { tasks: vec![PairTask { a: 2, b: 5 }] };
+        assert_eq!(revoke.kind(), "revoke");
+        assert_eq!(revoke.payload_bytes(), HEADER_BYTES + 16);
         assert_eq!(Payload::Forces(vec![]).items(), 0);
     }
 

@@ -77,7 +77,7 @@ pub mod driver;
 pub use app::{DistributedApp, Plan, WorkerCtx};
 pub use driver::{
     overlap_ratio, pipeline_default, run_app, run_app_with_sink, run_distributed_pcit,
-    run_resilient_pcit, run_resilient_pcit_at, run_single_node, scatter_default,
+    run_resilient_pcit, run_resilient_pcit_at, run_single_node, scatter_default, steal_default,
     time_to_first_task_secs, transport_default, DistributedReport, EngineOptions, EngineReport,
     RankStats,
 };

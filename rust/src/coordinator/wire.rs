@@ -376,6 +376,10 @@ fn put_stats(out: &mut Vec<u8>, s: &RankStats) {
     put_f64(out, s.scatter_blocked_secs);
     put_f64(out, s.time_to_first_task_secs);
     put_u64(out, s.n_items);
+    put_u64(out, s.tasks_executed);
+    put_f64(out, s.task_exec_min_secs);
+    put_f64(out, s.task_exec_max_secs);
+    put_f64(out, s.task_exec_total_secs);
 }
 
 fn take_stats(r: &mut Reader<'_>) -> anyhow::Result<RankStats> {
@@ -394,6 +398,10 @@ fn take_stats(r: &mut Reader<'_>) -> anyhow::Result<RankStats> {
         scatter_blocked_secs: r.take_f64()?,
         time_to_first_task_secs: r.take_f64()?,
         n_items: r.take_u64()?,
+        tasks_executed: r.take_u64()?,
+        task_exec_min_secs: r.take_f64()?,
+        task_exec_max_secs: r.take_f64()?,
+        task_exec_total_secs: r.take_f64()?,
     })
 }
 
@@ -462,6 +470,14 @@ pub fn encode_message(msg: &Message) -> Vec<u8> {
             put_u8(&mut out, 13);
             put_kill_at(&mut out, at);
         }
+        Message::TasksDone { tasks } => {
+            put_u8(&mut out, 14);
+            put_tasks(&mut out, tasks);
+        }
+        Message::Revoke { tasks } => {
+            put_u8(&mut out, 15);
+            put_tasks(&mut out, tasks);
+        }
     }
     out
 }
@@ -499,6 +515,8 @@ fn take_message(r: &mut Reader<'_>) -> anyhow::Result<Message> {
         11 => Message::PhaseDone { phase: r.take_u8()? },
         12 => Message::Shutdown,
         13 => Message::Crash { at: take_kill_at(r)? },
+        14 => Message::TasksDone { tasks: take_tasks(r)? },
+        15 => Message::Revoke { tasks: take_tasks(r)? },
         t => anyhow::bail!("wire: unknown message tag {t}"),
     })
 }
@@ -676,12 +694,15 @@ pub fn write_frame(stream: &mut impl Write, frame: &[u8]) -> std::io::Result<()>
 /// Setup-blob helpers for the process-mode launcher: the driver packs the
 /// engine [`super::app::Plan`] scalars plus the app's opaque worker spec
 /// into the Welcome frame, and the `worker` subcommand unpacks them.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_setup(
     n: usize,
     p: usize,
     block: usize,
     pipeline: bool,
     streamed_scatter: bool,
+    steal: bool,
+    throttle: Option<(usize, u32)>,
     app_spec: &[u8],
 ) -> Vec<u8> {
     let mut out = Vec::new();
@@ -690,21 +711,40 @@ pub fn encode_setup(
     put_usize(&mut out, block);
     put_bool(&mut out, pipeline);
     put_bool(&mut out, streamed_scatter);
+    put_bool(&mut out, steal);
+    match throttle {
+        Some((rank, factor)) => {
+            put_bool(&mut out, true);
+            put_usize(&mut out, rank);
+            put_u64(&mut out, factor as u64);
+        }
+        None => put_bool(&mut out, false),
+    }
     put_bytes(&mut out, app_spec);
     out
 }
 
-/// Inverse of [`encode_setup`]: `(n, p, block, pipeline, streamed, spec)`.
-pub fn decode_setup(buf: &[u8]) -> anyhow::Result<(usize, usize, usize, bool, bool, Vec<u8>)> {
+/// Inverse of [`encode_setup`]:
+/// `(n, p, block, pipeline, streamed, steal, throttle, spec)`.
+#[allow(clippy::type_complexity)]
+pub fn decode_setup(
+    buf: &[u8],
+) -> anyhow::Result<(usize, usize, usize, bool, bool, bool, Option<(usize, u32)>, Vec<u8>)> {
     let mut r = Reader::new(buf);
     let n = r.take_usize()?;
     let p = r.take_usize()?;
     let block = r.take_usize()?;
     let pipeline = r.take_bool()?;
     let streamed = r.take_bool()?;
+    let steal = r.take_bool()?;
+    let throttle = if r.take_bool()? {
+        Some((r.take_usize()?, r.take_u64()? as u32))
+    } else {
+        None
+    };
     let spec = r.take_bytes()?;
     r.finish()?;
-    Ok((n, p, block, pipeline, streamed, spec))
+    Ok((n, p, block, pipeline, streamed, steal, throttle, spec))
 }
 
 #[cfg(test)]
@@ -790,7 +830,13 @@ mod tests {
                 scatter_blocked_secs: 0.03125,
                 time_to_first_task_secs: 0.5,
                 n_items: 42,
+                tasks_executed: 7,
+                task_exec_min_secs: 0.001,
+                task_exec_max_secs: 0.25,
+                task_exec_total_secs: 0.375,
             }),
+            Message::TasksDone { tasks: vec![task(1, 2), task(3, 5)] },
+            Message::Revoke { tasks: vec![task(4, 6)] },
             Message::Proceed,
             Message::PhaseDone { phase: 2 },
             Message::Shutdown,
@@ -908,9 +954,17 @@ mod tests {
 
     #[test]
     fn setup_blob_round_trips() {
-        let blob = encode_setup(100, 8, 13, true, false, &[9, 8, 7]);
-        let (n, p, block, pipe, streamed, spec) = decode_setup(&blob).unwrap();
+        let blob = encode_setup(100, 8, 13, true, false, true, Some((3, 4)), &[9, 8, 7]);
+        let (n, p, block, pipe, streamed, steal, throttle, spec) = decode_setup(&blob).unwrap();
         assert_eq!((n, p, block, pipe, streamed), (100, 8, 13, true, false));
+        assert!(steal);
+        assert_eq!(throttle, Some((3, 4)));
         assert_eq!(spec, vec![9, 8, 7]);
+        // No throttle round-trips as None.
+        let blob = encode_setup(10, 4, 3, false, true, false, None, &[]);
+        let (.., steal, throttle, spec) = decode_setup(&blob).unwrap();
+        assert!(!steal);
+        assert_eq!(throttle, None);
+        assert!(spec.is_empty());
     }
 }

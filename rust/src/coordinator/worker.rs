@@ -49,6 +49,7 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
     let mut quorum = Vec::new();
     let mut pending = VecDeque::new();
     let mut pending_reassign = VecDeque::new();
+    let mut revoked = std::collections::BTreeSet::new();
     let mut kill_at = None;
     let mut scatter_wait = 0.0f64;
 
@@ -93,6 +94,9 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
             Message::Reassign { for_rank, tasks } => {
                 pending_reassign.push_back((for_rank, tasks));
             }
+            // Defensive: per-pair FIFO means a Revoke cannot outrun the
+            // task list that precedes it, but stashing is free.
+            Message::Revoke { tasks } => revoked.extend(tasks),
             other => panic!("worker {my_block}: unexpected {} in phase 0", other.kind()),
         }
     };
@@ -113,6 +117,14 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         task_tags: Vec::new(),
         completed_tasks: 0,
         pending_reassign,
+        revoked,
+        banked_proceed: false,
+        task_start: None,
+        last_task_secs: 0.0,
+        tasks_executed: 0,
+        task_exec_min: f64::INFINITY,
+        task_exec_max: 0.0,
+        task_exec_sum: 0.0,
         scatter_blocked_secs: scatter_wait,
         time_to_first_task: None,
         corr_tiles: 0,
@@ -158,6 +170,10 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         scatter_blocked_secs: ctx.scatter_blocked_secs,
         time_to_first_task_secs: ctx.time_to_first_task.unwrap_or(0.0),
         n_items: ctx.streamed_items + result.items(),
+        tasks_executed: ctx.tasks_executed,
+        task_exec_min_secs: if ctx.tasks_executed > 0 { ctx.task_exec_min } else { 0.0 },
+        task_exec_max_secs: ctx.task_exec_max,
+        task_exec_total_secs: ctx.task_exec_sum,
     };
     let _ = ctx.ep.send(0, Message::Result(result));
     let _ = ctx.ep.send(0, Message::Stats(stats));
@@ -179,6 +195,11 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
                     return;
                 }
                 Message::App(_) => continue, // late exchange traffic
+                // A revoke that lost the race with our final Result: every
+                // revoked task was already reported, nothing to undo — the
+                // leader's first-writer-wins parity check absorbs the
+                // duplicate from the thief.
+                Message::Revoke { .. } => continue,
                 // Trailing streamed blocks (standby data this rank's own
                 // tasks never touched) — kept resident for recovery work.
                 Message::AssignBlock(pb) => ctx.insert_block(pb),
@@ -209,11 +230,21 @@ fn recover_tasks(
     tasks: Vec<PairTask>,
 ) -> bool {
     for task in tasks {
+        // Under stealing, a granted (stolen) task counts toward the
+        // `compute:<k>` injection trigger, so a thief can die while
+        // holding stolen work — the cascade re-orphan path. Gated on the
+        // steal flag so plain death-recovery behavior is unchanged.
+        if ctx.plan.steal && !ctx.injection_says_alive() {
+            return false;
+        }
         if !ctx.ensure_blocks(&[task.a, task.b]) {
             return false;
         }
         let payload = app.run_recovery_task(ctx, task);
         let _ = ctx.ep.send(0, Message::RecoveredResult { for_rank, task, payload });
+        if ctx.plan.steal {
+            ctx.completed_tasks += 1;
+        }
     }
     true
 }
@@ -275,6 +306,8 @@ mod tests {
             block: 2,
             pipeline: false,
             streamed_scatter: streamed,
+            steal: false,
+            throttle: None,
             t0: Instant::now(),
         }
     }

@@ -54,6 +54,13 @@ fn app() -> App {
                     "",
                 ))
                 .arg(ArgSpec::opt("recover", "re-assign a dead rank's tasks mid-run: on | off", ""))
+                .arg(ArgSpec::opt("steal", "re-grant queued tasks to idle ranks: on | off", ""))
+                .arg(ArgSpec::opt("steal-batch", "max queued tasks one steal grant may move", ""))
+                .arg(ArgSpec::opt(
+                    "throttle",
+                    "deterministic slow rank: <rank>:<factor>, e.g. 3:4",
+                    "",
+                ))
                 .arg(ArgSpec::opt(
                     "transport",
                     "rank transport: memory | tcp (loopback sockets)",
@@ -92,6 +99,13 @@ fn app() -> App {
                     "",
                 ))
                 .arg(ArgSpec::opt("recover", "re-assign a dead rank's tasks mid-run: on | off", ""))
+                .arg(ArgSpec::opt("steal", "re-grant queued tasks to idle ranks: on | off", ""))
+                .arg(ArgSpec::opt("steal-batch", "max queued tasks one steal grant may move", ""))
+                .arg(ArgSpec::opt(
+                    "throttle",
+                    "deterministic slow rank: <rank>:<factor>, e.g. 3:4",
+                    "",
+                ))
                 .arg(ArgSpec::opt(
                     "transport",
                     "rank transport: memory | tcp (loopback sockets)",
@@ -127,6 +141,13 @@ fn app() -> App {
                     "",
                 ))
                 .arg(ArgSpec::opt("recover", "re-assign a dead rank's tasks mid-run: on | off", ""))
+                .arg(ArgSpec::opt("steal", "re-grant queued tasks to idle ranks: on | off", ""))
+                .arg(ArgSpec::opt("steal-batch", "max queued tasks one steal grant may move", ""))
+                .arg(ArgSpec::opt(
+                    "throttle",
+                    "deterministic slow rank: <rank>:<factor>, e.g. 3:4",
+                    "",
+                ))
                 .arg(ArgSpec::opt(
                     "transport",
                     "rank transport: memory | tcp (loopback sockets)",
@@ -291,6 +312,10 @@ struct ResilienceFlags {
     kill: Option<Vec<usize>>,
     kill_at: Option<Vec<KillAt>>,
     recover: Option<bool>,
+    steal: Option<bool>,
+    steal_batch: Option<usize>,
+    /// Outer `None` = flag not passed; `Some(t)` = explicit throttle.
+    throttle: Option<Option<(usize, u32)>>,
     transport: Option<TransportKind>,
     processes: Option<bool>,
     heartbeat_ms: Option<u64>,
@@ -332,6 +357,27 @@ fn parse_resilience_flags(p: &Parsed) -> anyhow::Result<ResilienceFlags> {
                 .ok_or_else(|| anyhow::anyhow!("bad --recover: {s} (on | off)"))?,
         ),
     };
+    let steal = match p.get_str("steal").unwrap_or("") {
+        "" => None,
+        s => Some(
+            quorall::config::parse_steal(s)
+                .ok_or_else(|| anyhow::anyhow!("bad --steal: {s} (on | off)"))?,
+        ),
+    };
+    let steal_batch = match p.get_str("steal-batch").unwrap_or("") {
+        "" => None,
+        s => match s.parse::<usize>() {
+            Ok(k) if k >= 1 => Some(k),
+            _ => anyhow::bail!("bad --steal-batch: {s} (want an integer >= 1)"),
+        },
+    };
+    let throttle = match p.get_str("throttle").unwrap_or("") {
+        "" => None,
+        s => Some(
+            quorall::config::parse_throttle(s)
+                .ok_or_else(|| anyhow::anyhow!("bad --throttle: {s} (want <rank>:<factor>)"))?,
+        ),
+    };
     let transport = match p.get_str("transport").unwrap_or("") {
         "" => None,
         s => Some(
@@ -359,6 +405,9 @@ fn parse_resilience_flags(p: &Parsed) -> anyhow::Result<ResilienceFlags> {
         kill,
         kill_at,
         recover,
+        steal,
+        steal_batch,
+        throttle,
         transport,
         processes,
         heartbeat_ms,
@@ -384,6 +433,15 @@ impl ResilienceFlags {
         }
         if let Some(r) = self.recover {
             opts.recover = r;
+        }
+        if let Some(s) = self.steal {
+            opts.steal = s;
+        }
+        if let Some(k) = self.steal_batch {
+            opts.steal_batch = k;
+        }
+        if let Some(t) = self.throttle {
+            opts.throttle = t;
         }
         if let Some(t) = self.transport {
             opts.transport = t;
@@ -417,6 +475,15 @@ impl ResilienceFlags {
         }
         if let Some(r) = self.recover {
             cfg.recover = r;
+        }
+        if let Some(s) = self.steal {
+            cfg.steal = s;
+        }
+        if let Some(k) = self.steal_batch {
+            cfg.steal_batch = k;
+        }
+        if let Some(t) = self.throttle {
+            cfg.throttle = t;
         }
         if let Some(t) = self.transport {
             cfg.transport = t;
@@ -539,6 +606,17 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
             if cfg.recover { "on" } else { "off" }
         );
     }
+    if cfg.steal || cfg.throttle.is_some() {
+        println!(
+            "scheduling: steal = {} (batch {}), throttle = {}",
+            if cfg.steal { "on" } else { "off" },
+            cfg.steal_batch,
+            match cfg.throttle {
+                Some((r, f)) => format!("rank {r} at {f}x"),
+                None => "none".into(),
+            }
+        );
+    }
 
     let exec = quorall::runtime::executor_for(cfg.backend, &cfg.artifacts_dir)?;
     let rep = run_distributed_pcit(&cfg, &dataset, exec)?;
@@ -553,6 +631,13 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
                 d.rank, d.cause, d.latency_secs
             );
         }
+    }
+    if rep.stolen_tasks > 0 {
+        println!(
+            "work stealing: {} tasks re-granted to idle ranks (mean grant-to-result {})",
+            rep.stolen_tasks,
+            format_secs(rep.steal_latency_secs)
+        );
     }
     println!(
         "distributed: {} edges in {} | k = {} | peak mem/rank {} | comm {} (scatter {}) | blocked-recv {} (overlap {:.1}%) | first task at {}",
@@ -719,9 +804,19 @@ fn cmd_worker(p: &Parsed) -> anyhow::Result<()> {
     let rank = p.get_usize("rank")?;
     let timeout = Duration::from_millis(p.get_u64("join-timeout-ms")?);
     let joined = tcp::join(&leader, endpoint_of(rank), timeout)?;
-    let (n, ranks, block, pipeline, streamed_scatter, spec) = wire::decode_setup(&joined.setup)?;
+    let (n, ranks, block, pipeline, streamed_scatter, steal, throttle, spec) =
+        wire::decode_setup(&joined.setup)?;
     let app = quorall::apps::app_from_spec(&spec)?;
-    let plan = Plan { n, p: ranks, block, pipeline, streamed_scatter, t0: Instant::now() };
+    let plan = Plan {
+        n,
+        p: ranks,
+        block,
+        pipeline,
+        streamed_scatter,
+        steal,
+        throttle,
+        t0: Instant::now(),
+    };
     quorall::coordinator::worker::worker_main(joined.endpoint, app, plan);
     // An injected hard disconnect must leave this process's sockets open
     // and silent (peers detect it by heartbeat timeout, not EOF): park

@@ -248,6 +248,10 @@ fn pipelined_parity_survives_credit_exhaustion() {
     let mut opts = EngineOptions::new(8, Strategy::Cyclic);
     opts.pipeline = true;
     opts.send_ahead_credit = 1;
+    // Stolen tasks report through RecoveredResult rather than streamed
+    // chunks, which would make the per-rank item count timing-dependent —
+    // pin stealing off so the accounting below stays exact.
+    opts.steal = false;
     let (starved, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
     assert_eq!(sync.as_slice(), starved.as_slice());
     let items: u64 = rep.stats.iter().map(|s| s.n_items).sum();

@@ -9,6 +9,7 @@
 //! provenance tags only exist in pipelined mode, so the two runs exercise
 //! different orphan sets (streamed prefix vs everything).
 
+use quorall::allpairs::RedundantAssignment;
 use quorall::apps::nbody::{run_distributed_nbody, Bodies};
 use quorall::apps::similarity::run_distributed_similarity;
 use quorall::apps::{DistMode, PcitApp};
@@ -285,8 +286,12 @@ fn pipelined_ledger_limits_orphans_to_unreported_tasks() {
     let mut rng = Rng::new(11);
     let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
     let e = exec();
+    // Work stealing would drain the victim's queue through a different
+    // channel and make the orphan count timing-dependent — pin it off so
+    // the ledger arithmetic below stays exact.
     let full = {
         let mut opts = recovery_opts(Strategy::Cyclic, true);
+        opts.steal = false;
         opts.kill = vec![VICTIM];
         opts.kill_at = KillAt::Scatter;
         let (_, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
@@ -294,6 +299,7 @@ fn pipelined_ledger_limits_orphans_to_unreported_tasks() {
     };
     assert!(full > 1, "victim needs >= 2 tasks for this test (got {full})");
     let mut opts = recovery_opts(Strategy::Cyclic, true);
+    opts.steal = false;
     opts.kill = vec![VICTIM];
     opts.kill_at = KillAt::Compute { tasks: 1 };
     let (_, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
@@ -384,6 +390,11 @@ impl DistributedApp for PhasedApp {
             if !ctx.begin_task(t) {
                 return None;
             }
+            if ctx.task_revoked(t) {
+                // Stolen by an idle rank (QUORALL_STEAL=on lane): the thief
+                // reports it; including it here would double-count the pair.
+                continue;
+            }
             edges.push((t.a, t.b, 1.0f32));
             ctx.complete_task(*t);
         }
@@ -455,4 +466,198 @@ fn full_pcit_local_mode_recovers_close_to_single() {
     let j = rep.network.jaccard(&single.network);
     assert!(j > 0.4, "jaccard {j}");
     assert_eq!(rep.dead_ranks, vec![3]);
+}
+
+// ---- Work stealing × failure injection ----
+//
+// The steal scheduler re-grants a slow rank's queued tasks to idle ranks
+// that already hold the blocks (zero extra scatter traffic). These tests
+// pin down its composition with the kill matrix: a victim that dies after
+// being stolen from, a thief that dies holding stolen grants, and stealing
+// under the streamed scatter — all bitwise-identical to the failure-free
+// static run.
+
+/// Total pair tasks at P = 9 (self-pairs included): P(P+1)/2.
+const TOTAL_TASKS: u64 = (P * (P + 1) / 2) as u64;
+
+#[test]
+fn stealing_drains_throttled_rank_bitwise_identical() {
+    let mut rng = Rng::new(5);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    // Static unthrottled baseline: the parity target.
+    let mut base_opts = recovery_opts(Strategy::Cyclic, false);
+    base_opts.steal = false;
+    let (base, _) = run_distributed_similarity(&f, &e, &base_opts).unwrap();
+    for pipeline in [false, true] {
+        let mut opts = recovery_opts(Strategy::Cyclic, pipeline);
+        opts.steal = true;
+        opts.steal_batch = 2;
+        opts.throttle = Some((VICTIM, 200));
+        let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+        assert_eq!(
+            sim.as_slice(),
+            base.as_slice(),
+            "pipeline {pipeline}: stolen-task splice changed bits"
+        );
+        assert!(
+            rep.stolen_tasks > 0,
+            "pipeline {pipeline}: a 200x-throttled rank must get stolen from"
+        );
+        assert!(rep.steal_latency_secs >= 0.0);
+        assert!(rep.dead_ranks.is_empty());
+        // Per-rank execution skew (satellite): every task ran somewhere.
+        // Stolen tasks execute through the recovery path and are not in
+        // the per-rank own-queue counters, so the sum may fall short of
+        // the pair count by at most the stolen count (and a task whose
+        // revocation lost the race may be counted by its original owner).
+        let executed: u64 = rep.stats.iter().map(|s| s.tasks_executed).sum();
+        assert!(
+            executed + rep.stolen_tasks >= TOTAL_TASKS && executed <= TOTAL_TASKS,
+            "pipeline {pipeline}: {executed} executed + {} stolen vs {TOTAL_TASKS} tasks",
+            rep.stolen_tasks
+        );
+        for s in &rep.stats {
+            if s.tasks_executed > 0 {
+                assert!(s.task_exec_min_secs <= s.task_exec_max_secs);
+                assert!(s.task_exec_total_secs >= s.task_exec_max_secs);
+            }
+        }
+    }
+}
+
+#[test]
+fn steal_victim_death_bitwise_identical() {
+    // The throttled rank gets stolen from, then dies. Its stolen-away
+    // tasks are already delegated (the thieves keep them); only the
+    // remainder re-orphans through the ledger — and the splice must still
+    // be bitwise-perfect.
+    let mut rng = Rng::new(5);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    let mut base_opts = recovery_opts(Strategy::Cyclic, false);
+    base_opts.steal = false;
+    let (base, _) = run_distributed_similarity(&f, &e, &base_opts).unwrap();
+    for pipeline in [false, true] {
+        let mut opts = recovery_opts(Strategy::Cyclic, pipeline);
+        opts.steal = true;
+        opts.steal_batch = 2;
+        opts.throttle = Some((VICTIM, 200));
+        opts.kill = vec![VICTIM];
+        opts.kill_at = KillAt::Compute { tasks: 2 };
+        let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+        assert_eq!(
+            sim.as_slice(),
+            base.as_slice(),
+            "pipeline {pipeline}: post-steal death recovery changed bits"
+        );
+        assert_eq!(rep.dead_ranks, vec![VICTIM]);
+        assert_eq!(rep.stats.len(), P - 1, "dead rank must not report stats");
+        assert!(
+            rep.stolen_tasks > 0,
+            "pipeline {pipeline}: the victim sleeps ~200 task-times before \
+             its second task — the idle ranks must steal its tail first"
+        );
+    }
+}
+
+#[test]
+fn steal_thief_death_reorphans_through_cascade() {
+    // Grid placement at P = 9: a generic block pair (different row and
+    // column) has exactly two hosts, so a two-host tail task in the
+    // throttled victim's queue can only ever be granted to its one co-host
+    // — which makes the thief deterministic. Arm that thief with
+    // `compute:<its own task count>`: the trigger is unreachable from its
+    // own queue (the last own-task check sees count-1) and first fires at
+    // the check before its first stolen task, i.e. exactly when it holds a
+    // stolen grant. The grant must then re-orphan through the cascade.
+    let quorum = Strategy::Grid.build_redundant(P, 2).unwrap();
+    let assign = RedundantAssignment::build(quorum.as_ref(), 2);
+    // Pick a victim whose queue *tail* holds a two-host task. Index >= 2:
+    // the scheduler never revokes the task a rank is computing (nor the
+    // one the stale ledger still thinks it is), so only the tail from the
+    // third slot on is reliably stealable.
+    let (victim, t_star) = (0..P)
+        .find_map(|v| {
+            let vt = assign.primary_tasks_for(v);
+            if vt.len() < 4 {
+                return None;
+            }
+            vt[2..]
+                .iter()
+                .rev()
+                .find(|t| quorum.pair_hosts(t.a, t.b).len() == 2)
+                .map(|t| (v, *t))
+        })
+        .expect("some rank must own a two-host tail task under the 3x3 grid");
+    let thief = *quorum
+        .pair_hosts(t_star.a, t_star.b)
+        .iter()
+        .find(|&&h| h != victim)
+        .unwrap();
+    let own = assign.primary_tasks_for(thief).len();
+
+    let mut rng = Rng::new(5);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    for pipeline in [false, true] {
+        let mut base_opts = recovery_opts(Strategy::Grid, pipeline);
+        base_opts.steal = false;
+        let (base, _) = run_distributed_similarity(&f, &e, &base_opts).unwrap();
+
+        let mut opts = recovery_opts(Strategy::Grid, pipeline);
+        opts.steal = true;
+        opts.steal_batch = 2;
+        opts.throttle = Some((victim, 300));
+        opts.kill = vec![thief];
+        opts.kill_at = KillAt::Compute { tasks: own };
+        let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+        assert_eq!(
+            sim.as_slice(),
+            base.as_slice(),
+            "pipeline {pipeline}: thief-death re-orphaning changed bits"
+        );
+        assert_eq!(
+            rep.dead_ranks,
+            vec![thief],
+            "pipeline {pipeline}: the kill trigger needs a stolen grant to fire"
+        );
+        assert!(rep.stolen_tasks > 0);
+    }
+}
+
+#[test]
+fn steal_composes_with_streamed_scatter_and_recovery() {
+    // Stealing while blocks are still streaming and a third rank dies at
+    // scatter: thief eligibility comes from the placement, so a granted
+    // task may have to wait on the thief's in-flight block stream — and
+    // the result must still match the failure-free monolithic static run.
+    const SCATTER_VICTIM: usize = 1;
+    let mut rng = Rng::new(5);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    let mut base_opts = recovery_opts(Strategy::Cyclic, false);
+    base_opts.steal = false;
+    base_opts.streamed_scatter = false;
+    let (base, _) = run_distributed_similarity(&f, &e, &base_opts).unwrap();
+    for pipeline in [false, true] {
+        let mut opts = recovery_opts(Strategy::Cyclic, pipeline);
+        opts.streamed_scatter = true;
+        opts.steal = true;
+        opts.steal_batch = 2;
+        opts.throttle = Some((VICTIM, 200));
+        opts.kill = vec![SCATTER_VICTIM];
+        opts.kill_at = KillAt::Scatter;
+        let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+        assert_eq!(
+            sim.as_slice(),
+            base.as_slice(),
+            "pipeline {pipeline}: steal under streamed scatter changed bits"
+        );
+        assert_eq!(rep.dead_ranks, vec![SCATTER_VICTIM]);
+        assert!(
+            rep.stolen_tasks > 0,
+            "pipeline {pipeline}: the throttled rank must still get stolen from"
+        );
+    }
 }

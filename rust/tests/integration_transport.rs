@@ -278,6 +278,11 @@ impl DistributedApp for EdgeApp {
             if !ctx.begin_task(t) {
                 return None;
             }
+            if ctx.task_revoked(t) {
+                // Stolen by an idle rank (QUORALL_STEAL=on lane): the thief
+                // reports it; including it here would double-count the pair.
+                continue;
+            }
             edges.push((t.a, t.b, 1.0f32));
             ctx.complete_task(*t);
         }
