@@ -1,0 +1,229 @@
+//! Full-spectrum failure recovery cost: detection→re-route latency for
+//! the exact-mode PCIT ring, rejoin-vs-reassign wall time for a transient
+//! disconnect, and the coverage a degraded run salvages when redundancy
+//! is exhausted.
+//!
+//! Three tables at P = 9:
+//!
+//! 1. **Detection → re-route.** Rank 4 killed at `compute:1` under
+//!    quorum-local (ledger-only recovery) and quorum-exact (ring
+//!    re-routing + substitute row injection) PCIT. Rows record the
+//!    failure detector's latency, the ring-splice count, and the
+//!    recovery overhead vs the failure-free wall. Parity is asserted
+//!    edge-for-edge — in exact mode that is the bitwise ring-replay
+//!    claim as data.
+//! 2. **Rejoin vs reassign.** The same similarity disconnect twice:
+//!    permanent (surviving backup owners recompute the victim's queue)
+//!    vs `rejoin_after_ms` (the victim comes back, the leader cancels
+//!    the overlapping reassignment, and the victim resumes from its
+//!    cursor). Both are asserted bitwise against the failure-free
+//!    matrix.
+//! 3. **Degraded coverage.** r = 1 plus one death under
+//!    `--degrade partial`: the run completes the coverable remainder and
+//!    the row records the manifest size and coverage ratio.
+//!
+//! Emits `BENCH_resilience.json`.
+//!
+//! Run: `cargo bench --bench resilience [-- --quick]`
+
+use quorall::benchkit;
+use quorall::apps::similarity::run_distributed_similarity;
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{run_resilient_pcit_at, DegradeMode, EngineOptions, KillAt};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::metrics::Table;
+use quorall::quorum::Strategy;
+use quorall::runtime::{Executor, NativeBackend};
+use quorall::util::json::Json;
+use quorall::util::prng::Rng;
+use quorall::util::timer::format_secs;
+use quorall::util::Matrix;
+use std::sync::Arc;
+
+const P: usize = 9;
+const VICTIM: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let quick = benchkit::quick_mode();
+    let genes = if quick { 144 } else { 288 };
+    let dataset = ExpressionDataset::generate(SyntheticSpec {
+        genes,
+        samples: 32,
+        modules: 8,
+        noise: 0.6,
+        seed: 7,
+    });
+    let exec: Executor = Arc::new(NativeBackend::new());
+    let mut meta: Vec<(&str, Json)> = vec![("quick", Json::Bool(quick))];
+
+    // ---- 1. Detection → re-route latency, local vs exact PCIT ----
+
+    let mut reroute = Table::new(
+        &format!(
+            "failure detection and ring re-routing, PCIT, N = {genes}, P = {P}, kill rank {VICTIM} at compute:1"
+        ),
+        &["mode", "detection", "ring reroutes", "wall clean", "wall recovered", "overhead"],
+    );
+    let mut latencies: Vec<(&str, f64)> = Vec::new();
+    let mut exact_reroutes = 0u64;
+    for (label, mode) in [("local", PcitMode::QuorumLocal), ("exact", PcitMode::QuorumExact)] {
+        let cfg = RunConfig {
+            ranks: P,
+            mode,
+            use_pcit_significance: false,
+            threshold: 0.5,
+            ..RunConfig::default()
+        };
+        let clean =
+            run_resilient_pcit_at(&cfg, &dataset, Arc::clone(&exec), 2, &[], KillAt::Scatter)?;
+        let rec = run_resilient_pcit_at(
+            &cfg,
+            &dataset,
+            Arc::clone(&exec),
+            2,
+            &[VICTIM],
+            KillAt::Compute { tasks: 1 },
+        )?;
+        assert_eq!(
+            clean.network.edges, rec.network.edges,
+            "{label}: recovered network diverged from the failure-free run"
+        );
+        assert_eq!(rec.dead_ranks, vec![VICTIM]);
+        let detection =
+            rec.health.detections.iter().find(|d| d.rank == VICTIM).map_or(0.0, |d| d.latency_secs);
+        if label == "exact" {
+            assert!(rec.ring_reroutes >= 1, "a mid-compute exact death must splice the ring");
+            exact_reroutes = rec.ring_reroutes;
+        }
+        latencies.push((label, detection));
+        let overhead =
+            if clean.wall_secs > 0.0 { rec.wall_secs / clean.wall_secs } else { 1.0 };
+        reroute.row(vec![
+            label.into(),
+            format_secs(detection),
+            rec.ring_reroutes.to_string(),
+            format_secs(clean.wall_secs),
+            format_secs(rec.wall_secs),
+            format!("{overhead:.2}x"),
+        ]);
+    }
+    benchkit::emit(&reroute);
+    for (label, secs) in &latencies {
+        let key: &'static str = match *label {
+            "local" => "reroute_latency_local",
+            _ => "reroute_latency_exact",
+        };
+        meta.push((key, Json::Num(*secs)));
+    }
+    meta.push(("ring_reroutes_exact", Json::Num(exact_reroutes as f64)));
+
+    // ---- 2. Rejoin vs reassign for a transient disconnect ----
+
+    let n = if quick { 120 } else { 360 };
+    let mut rng = Rng::new(11);
+    let f = Matrix::from_fn(n, 48, |_, _| rng.normal_f32());
+    let base_opts = || {
+        let mut o = EngineOptions::new(P, Strategy::Cyclic);
+        o.redundancy = 2;
+        o.recover = true;
+        o
+    };
+    let (clean_sim, _) = run_distributed_similarity(&f, &exec, &base_opts())?;
+
+    let mut reassign_opts = base_opts();
+    reassign_opts.kill = vec![VICTIM];
+    reassign_opts.kill_at = KillAt::Disconnect { tasks: 1 };
+    let (reassign_sim, reassign_rep) = run_distributed_similarity(&f, &exec, &reassign_opts)?;
+    assert_eq!(reassign_sim.as_slice(), clean_sim.as_slice(), "reassign run diverged");
+    assert_eq!(reassign_rep.dead_ranks, vec![VICTIM]);
+    assert!(reassign_rep.rejoined_ranks.is_empty());
+
+    let mut rejoin_opts = reassign_opts.clone();
+    rejoin_opts.rejoin_after_ms = Some(50);
+    let (rejoin_sim, rejoin_rep) = run_distributed_similarity(&f, &exec, &rejoin_opts)?;
+    assert_eq!(rejoin_sim.as_slice(), clean_sim.as_slice(), "rejoin run diverged");
+    assert_eq!(rejoin_rep.rejoined_ranks, vec![VICTIM], "the comeback must be recorded");
+
+    let mut rejoin_table = Table::new(
+        &format!(
+            "rejoin vs reassign, similarity N = {n}, P = {P}, rank {VICTIM} disconnects at compute:1"
+        ),
+        &["flavor", "wall", "recovered tasks", "duplicates"],
+    );
+    rejoin_table.row(vec![
+        "reassign (permanent)".into(),
+        format_secs(reassign_rep.wall_secs),
+        reassign_rep.recovered_tasks.to_string(),
+        reassign_rep.duplicate_results.to_string(),
+    ]);
+    rejoin_table.row(vec![
+        "rejoin (50 ms dark)".into(),
+        format_secs(rejoin_rep.wall_secs),
+        rejoin_rep.recovered_tasks.to_string(),
+        rejoin_rep.duplicate_results.to_string(),
+    ]);
+    benchkit::emit(&rejoin_table);
+    let rejoin_beats = rejoin_rep.wall_secs < reassign_rep.wall_secs;
+    meta.push(("wall_reassign", Json::Num(reassign_rep.wall_secs)));
+    meta.push(("wall_rejoin", Json::Num(rejoin_rep.wall_secs)));
+    meta.push(("rejoin_beats_reassign", Json::Bool(rejoin_beats)));
+
+    // ---- 3. Graceful degradation coverage at exhausted redundancy ----
+
+    let clean_cfg = RunConfig {
+        ranks: P,
+        mode: PcitMode::QuorumLocal,
+        use_pcit_significance: false,
+        threshold: 0.5,
+        ..RunConfig::default()
+    };
+    let clean =
+        run_resilient_pcit_at(&clean_cfg, &dataset, Arc::clone(&exec), 2, &[], KillAt::Scatter)?;
+    let mut degrade_cfg = clean_cfg.clone();
+    degrade_cfg.degrade = DegradeMode::Partial;
+    let deg = run_resilient_pcit_at(
+        &degrade_cfg,
+        &dataset,
+        Arc::clone(&exec),
+        1,
+        &[0],
+        KillAt::Compute { tasks: 1 },
+    )?;
+    assert!(
+        !deg.uncovered_pairs.is_empty(),
+        "r = 1 plus a death must leave some pair uncoverable"
+    );
+    assert!(deg.coverage_ratio > 0.0 && deg.coverage_ratio < 1.0);
+    for e in &deg.network.edges {
+        assert!(
+            clean.network.edges.contains(e),
+            "degraded edge {e:?} absent from the failure-free network"
+        );
+    }
+    let mut degrade_table = Table::new(
+        &format!("graceful degradation, quorum-local PCIT, N = {genes}, r = 1, kill rank 0"),
+        &["degrade", "coverage", "uncovered pairs", "wall"],
+    );
+    degrade_table.row(vec![
+        "partial".into(),
+        format!("{:.4}", deg.coverage_ratio),
+        deg.uncovered_pairs.len().to_string(),
+        format_secs(deg.wall_secs),
+    ]);
+    benchkit::emit(&degrade_table);
+    meta.push(("degraded_coverage_ratio", Json::Num(deg.coverage_ratio)));
+    meta.push(("degraded_uncovered", Json::Num(deg.uncovered_pairs.len() as f64)));
+
+    let payload = benchkit::json_payload(
+        "resilience",
+        meta,
+        &[&reroute, &rejoin_table, &degrade_table],
+    );
+    benchkit::write_json(std::path::Path::new("BENCH_resilience.json"), &payload)?;
+    println!("expected shape: detection is injection-bound on the memory backend (~the 25 ms");
+    println!("leader poll), the exact-mode row pays one ring splice per surviving rotation");
+    println!("neighborhood, rejoin undercuts reassign once the victim's queue outweighs the");
+    println!("dark window (recorded, not asserted — scheduler-dependent on small runs), and");
+    println!("the degraded run trades the dead rank's sole-hosted pairs for completion.");
+    Ok(())
+}

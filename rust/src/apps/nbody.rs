@@ -243,11 +243,25 @@ impl DistributedApp for NbodyApp {
         let tasks = std::mem::take(&mut ctx.tasks);
         let sw = ThreadCpuTimer::start();
         let mut partials: Vec<(usize, Vec<[f64; 3]>)> = Vec::new();
+        let streams_from_start = ctx.per_task_results();
+        let mut prefix_flushed = false;
         for t in &tasks {
             if !ctx.begin_task(t) {
                 // Injected mid-compute crash (or shutdown while awaiting
                 // streamed blocks): exit without reporting.
                 return None;
+            }
+            if !streams_from_start && !prefix_flushed && ctx.per_task_results() {
+                // A rejoin flipped per-task streaming on mid-run: ship the
+                // monolithic prefix as its own chunk *before* this task's,
+                // so its provenance tags are exactly the completed prefix
+                // and the leader can splice around the rejoin overlap.
+                prefix_flushed = true;
+                let prefix = std::mem::take(&mut partials);
+                let bytes: u64 = prefix.iter().map(|(_, f)| (f.len() * 24) as u64).sum();
+                if ctx.stream_result(Payload::Forces(prefix)) {
+                    ctx.mem.free(bytes);
+                }
             }
             if ctx.task_revoked(t) {
                 // Stolen by an idle rank: the thief computes and reports it.

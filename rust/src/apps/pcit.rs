@@ -12,14 +12,45 @@
 //! * **Local mode** (ablation): the tolerance scan is restricted to the
 //!   owner's quorum genes; no inter-worker exchange, which is what makes it
 //!   usable for redundant/failure-tolerant runs.
+//!
+//! Exact mode is additionally *ring-recoverable*: when a rank dies before
+//! the pre-ring barrier, the leader names a live substitute, which re-sends
+//! the victim's phase-1 tiles (homes count distinct column blocks, so
+//! overlap with what the victim managed to send is harmless), rebuilds the
+//! victim's assembled row from the full block set, and plays its ring
+//! position — forwarding its rows at the correct rotation steps and
+//! reporting its edge blocks as recovered task slices. The replay feeds the
+//! elimination the very same inputs in the very same order, so the merged
+//! output is bitwise-identical to the failure-free run.
 
-use crate::coordinator::app::{DistributedApp, WorkerCtx};
+use crate::allpairs::PairTask;
+use crate::coordinator::app::{BarrierWait, DistributedApp, RingEvent, WorkerCtx};
 use crate::coordinator::messages::{BlockData, Payload};
 use crate::runtime::{flags_to_mask, Executor};
 use crate::util::timer::ThreadCpuTimer;
 use crate::util::Matrix;
+use std::collections::{BTreeMap, BTreeSet};
 use std::ops::Range;
 use std::sync::Arc;
+
+/// Ring re-route state accumulated from the leader's orders. All `p`
+/// virtual ring positions keep existing after a death; a dead position is
+/// *played* by its substitute (latest order wins, so a cascade that kills a
+/// substitute simply overwrites the entry).
+#[derive(Default)]
+struct RingSubs {
+    /// Dead position → live substitute rank.
+    subs: BTreeMap<usize, usize>,
+    /// Dead positions THIS rank substitutes → the victim's task list.
+    mine: BTreeMap<usize, Vec<PairTask>>,
+}
+
+impl RingSubs {
+    /// The live rank playing ring position `q`.
+    fn phys(&self, q: usize) -> usize {
+        self.subs.get(&q).copied().unwrap_or(q)
+    }
+}
 
 /// Which distributed PCIT protocol to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -96,50 +127,171 @@ impl PcitApp {
         ctx.phase_done(1);
 
         // Phase 1b: assemble my row block C[my_block, 0..N] from P tiles.
+        // Duplicate-tolerant: a re-routed substitute re-sends the whole of
+        // a dead rank's tile production (it cannot know which subset the
+        // victim shipped before dying), so arrivals are counted by
+        // *distinct* column block, not by message. Re-route orders must be
+        // acted on mid-wait — a substitute blocked here may be waiting for
+        // the very tiles only its own recompute can produce.
         let my_range = ctx.block_range(me);
         let mut row_block = Matrix::zeros(my_range.len(), ctx.plan.n);
         ctx.mem.alloc(row_block.nbytes());
-        let mut tiles_needed = p;
-        while tiles_needed > 0 {
-            // Stash-aware receive: only tiles can arrive here today (no
-            // rank enters the ring before the barrier releases everyone),
-            // but waiting for the phase's own payload kind keeps the loop
-            // correct under any future send-ahead reordering.
-            match ctx.recv_app_where(|p| matches!(p, Payload::CorrTile { .. }))? {
-                Payload::CorrTile { rows_block: rb, cols_block, transposed, tile } => {
+        let mut filled: BTreeSet<usize> = BTreeSet::new();
+        let mut ring = RingSubs::default();
+        while filled.len() < p {
+            match ctx.recv_app_or_reroute(|p| matches!(p, Payload::CorrTile { .. }))? {
+                RingEvent::Payload(Payload::CorrTile { rows_block: rb, cols_block, transposed, tile }) => {
                     debug_assert_eq!(rb, me);
-                    let c0 = ctx.block_range(cols_block).start;
-                    if transposed {
-                        row_block.set_block_transposed(0, c0, &tile);
-                    } else {
-                        row_block.set_block(0, c0, &tile);
+                    if filled.insert(cols_block) {
+                        let c0 = ctx.block_range(cols_block).start;
+                        if transposed {
+                            row_block.set_block_transposed(0, c0, &tile);
+                        } else {
+                            row_block.set_block(0, c0, &tile);
+                        }
                     }
-                    tiles_needed -= 1;
                 }
-                _ => unreachable!("recv_app_where returned a non-tile payload"),
+                RingEvent::Payload(_) => unreachable!("recv returned a non-tile payload"),
+                RingEvent::Reroute => {
+                    self.apply_reroute_orders(ctx, &mut ring, &mut row_block, &mut filled)?;
+                }
             }
         }
         ctx.phase_done(2);
 
         // Barrier: wait for Proceed so ring messages don't interleave with
         // stragglers' tiles (a proceeded neighbor's first ring rows may beat
-        // our Proceed — WorkerCtx stashes them).
-        if !ctx.barrier() {
-            return None;
+        // our Proceed — WorkerCtx stashes them). Re-route-aware: an order
+        // can land while we wait, and a survivor still blocked in 1b may
+        // depend on our substitute-recompute, so it cannot be deferred.
+        loop {
+            match ctx.barrier_or_reroute()? {
+                BarrierWait::Proceed => break,
+                BarrierWait::Reroute => {
+                    self.apply_reroute_orders(ctx, &mut ring, &mut row_block, &mut filled)?;
+                }
+            }
         }
 
         // Phase 2: elimination. Diagonal block first, then the ring.
         // Compute time accumulated around executor work only (see above).
+        // Edge blocks of dead positions this rank substitutes are collected
+        // as per-task slices and reported through the recovery ledger, so
+        // they land at the victim's original rank position in the output.
         let mut edges: Vec<(usize, usize, f32)> = Vec::new();
+        let mut recovered: Vec<(usize, PairTask, Vec<(usize, usize, f32)>)> = Vec::new();
         if self.use_pcit {
-            self.ring_scan(ctx, &row_block, &mut edges)?;
+            self.ring_scan(ctx, &row_block, &ring, &mut edges, &mut recovered)?;
         } else {
             // Threshold mode: no mediation scan; edges straight from rows.
             let sw2 = ThreadCpuTimer::start();
-            self.threshold_edges(ctx, &row_block, &mut edges);
+            self.threshold_edges(ctx, me, &row_block, &mut edges);
             ctx.phase2_secs += sw2.elapsed_secs();
+            for &v in ring.mine.keys() {
+                let row_v = self.rebuild_row(ctx, v)?;
+                let mut task_edges = Vec::new();
+                let sw3 = ThreadCpuTimer::start();
+                self.threshold_edges(ctx, v, &row_v, &mut task_edges);
+                ctx.phase2_secs += sw3.elapsed_secs();
+                ctx.mem.free(row_v.nbytes());
+                recovered.push((v, PairTask { a: v, b: v }, task_edges));
+            }
+        }
+        for (for_rank, task, task_edges) in recovered {
+            ctx.report_recovered(for_rank, task, Payload::Edges(task_edges));
         }
         Some(Payload::Edges(edges))
+    }
+
+    /// Act on the leader's ring re-route orders (drained from the worker
+    /// context). When this rank is the named substitute it re-sends the
+    /// victim's phase-1 tiles to surviving homes — applying any homed here
+    /// directly (there is no self-connection on the wire) — and records the
+    /// dead position for the ring phase. The victim's blocks were granted
+    /// strictly before the order (per-pair FIFO), so they are resident or
+    /// already queued by the time we get here.
+    fn apply_reroute_orders(
+        &self,
+        ctx: &mut WorkerCtx,
+        ring: &mut RingSubs,
+        row_block: &mut Matrix,
+        filled: &mut BTreeSet<usize>,
+    ) -> Option<()> {
+        for (dead, substitute, tasks) in ctx.take_reroutes() {
+            ring.subs.insert(dead, substitute);
+            if substitute != ctx.my_block {
+                // A cascade can re-assign a position we were playing to a
+                // fresh substitute; the latest order wins everywhere.
+                ring.mine.remove(&dead);
+                continue;
+            }
+            let all: Vec<usize> = (0..ctx.plan.p).collect();
+            if !ctx.ensure_blocks(&all) {
+                return None;
+            }
+            let sw = ThreadCpuTimer::start();
+            for t in &tasks {
+                let tile = Arc::new(
+                    self.exec
+                        .corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view()),
+                );
+                ctx.corr_tiles += 1;
+                let deliver = [(t.a, t.b, false), (t.b, t.a, true)];
+                let n_dests = if t.a == t.b { 1 } else { 2 };
+                for &(home, col, transposed) in deliver.iter().take(n_dests) {
+                    if home == ctx.my_block {
+                        if filled.insert(col) {
+                            let c0 = ctx.block_range(col).start;
+                            if transposed {
+                                row_block.set_block_transposed(0, c0, &tile);
+                            } else {
+                                row_block.set_block(0, c0, &tile);
+                            }
+                        }
+                    } else if !ring.subs.contains_key(&home) {
+                        // A dead home's row is rebuilt from scratch by its
+                        // own substitute — nothing to route there.
+                        ctx.send_to_rank(home, Payload::CorrTile {
+                            rows_block: home,
+                            cols_block: col,
+                            transposed,
+                            tile: Arc::clone(&tile),
+                        });
+                    }
+                }
+            }
+            ctx.phase1_secs += sw.elapsed_secs();
+            ring.mine.insert(dead, tasks);
+        }
+        Some(())
+    }
+
+    /// Rebuild a dead rank's assembled row block `C[v, 0..N]` from the full
+    /// block set: per-column corr tiles, exactly what its phase 1b applied.
+    /// Bitwise identity with the victim's assembly relies on corr-tile
+    /// transpose symmetry (see the `corr_tile_transpose_symmetry` test).
+    fn rebuild_row(&self, ctx: &mut WorkerCtx, v: usize) -> Option<Matrix> {
+        let all: Vec<usize> = (0..ctx.plan.p).collect();
+        if !ctx.ensure_blocks(&all) {
+            return None;
+        }
+        let sw = ThreadCpuTimer::start();
+        let vr = ctx.block_range(v);
+        let mut row = Matrix::zeros(vr.len(), ctx.plan.n);
+        ctx.mem.alloc(row.nbytes());
+        for j in 0..ctx.plan.p {
+            let jr = ctx.block_range(j);
+            if vr.len() == 0 || jr.len() == 0 {
+                continue;
+            }
+            let tile = self
+                .exec
+                .corr_tile(ctx.block_rows(v).view(), ctx.block_rows(j).view());
+            ctx.corr_tiles += 1;
+            row.set_block(0, jr.start, &tile);
+        }
+        ctx.phase1_secs += sw.elapsed_secs();
+        Some(row)
     }
 
     /// Phase 2 ring: rotate row blocks around the ring, running the
@@ -156,63 +308,121 @@ impl PcitApp {
     /// Both orderings run the identical elimination sequence (diagonal,
     /// then ring arrivals — per-pair FIFO keeps arrival order fixed), so
     /// the surviving edge set is bitwise identical. `None` = shutdown.
+    ///
+    /// Under a ring re-route this rank plays every dead position it
+    /// substitutes in addition to its own: the step loop stays outermost
+    /// and each step services all played positions, so a position's receive
+    /// (which depends on its predecessor's *previous-step* forward) is
+    /// always satisfied — by the wire, or by the local hand-off slot when
+    /// the predecessor position is played by this same rank (there is no
+    /// self-connection). A row block's id uniquely identifies its content,
+    /// so a same-id copy arriving for a different played position is
+    /// interchangeable.
     fn ring_scan(
         &self,
         ctx: &mut WorkerCtx,
         row_block: &Matrix,
+        ring: &RingSubs,
         edges: &mut Vec<(usize, usize, f32)>,
+        recovered: &mut Vec<(usize, PairTask, Vec<(usize, usize, f32)>)>,
     ) -> Option<()> {
         let me = ctx.my_block;
         let p = ctx.plan.p;
-        let next = (me + 1) % p;
-        let mut visiting_block = me;
-        let mut visiting: Arc<Matrix> = Arc::new(row_block.clone());
-        ctx.mem.alloc(visiting.nbytes());
+        let mut positions: Vec<usize> = vec![me];
+        positions.extend(ring.mine.keys().copied());
+        positions.sort_unstable();
+        // Row blocks read by eliminations at each played position.
+        let mut rows_of: BTreeMap<usize, Matrix> = BTreeMap::new();
+        for &v in ring.mine.keys() {
+            rows_of.insert(v, self.rebuild_row(ctx, v)?);
+        }
+        // Circulation state per played position: (visiting block, rows).
+        let mut visiting: BTreeMap<usize, (usize, Arc<Matrix>)> = BTreeMap::new();
+        for &q in &positions {
+            let rows = if q == me {
+                Arc::new(row_block.clone())
+            } else {
+                Arc::new(rows_of[&q].clone())
+            };
+            ctx.mem.alloc(rows.nbytes());
+            visiting.insert(q, (q, rows));
+        }
+        // Rows forwarded from one played position to an adjacent one.
+        let mut handoff: BTreeMap<usize, Arc<Matrix>> = BTreeMap::new();
         for step in 0..p {
             let last = step == p - 1;
-            let forward = |ctx: &WorkerCtx, block: usize, rows: &Arc<Matrix>| {
-                ctx.send_to_rank(next, Payload::RingRows { block, rows: Arc::clone(rows) });
-            };
-            let forwarded_early = !last && ctx.pipeline() && ctx.can_send_ahead(next);
-            if forwarded_early {
-                forward(ctx, visiting_block, &visiting);
-            }
-            if step == 0 || owns_edge_block(me, visiting_block) {
-                let sw = ThreadCpuTimer::start();
-                self.eliminate_and_collect(ctx, row_block, visiting_block, &visiting, edges);
-                ctx.phase2_secs += sw.elapsed_secs();
-            }
-            if last {
-                break;
-            }
-            if !forwarded_early {
-                forward(ctx, visiting_block, &visiting);
-            }
-            ctx.mem.free(visiting.nbytes());
-            match ctx.recv_app_where(|p| matches!(p, Payload::RingRows { .. }))? {
-                Payload::RingRows { block, rows } => {
-                    visiting_block = block;
-                    visiting = rows;
+            for &q in &positions {
+                if step > 0 {
+                    let expect = (q + p - (step % p)) % p;
+                    let incoming: Arc<Matrix> = match handoff.remove(&expect) {
+                        Some(rows) => rows,
+                        None => match ctx
+                            .recv_app_where(|pl| matches!(pl, Payload::RingRows { block, .. } if *block == expect))?
+                        {
+                            Payload::RingRows { rows, .. } => rows,
+                            _ => unreachable!("recv_app_where returned a non-ring payload"),
+                        },
+                    };
+                    let (_, old) = visiting.insert(q, (expect, Arc::clone(&incoming))).expect("position state");
+                    ctx.mem.free(old.nbytes());
+                    ctx.mem.alloc(incoming.nbytes());
                 }
-                _ => unreachable!("recv_app_where returned a non-ring payload"),
+                let (vb, rows) = {
+                    let (vb, rows) = visiting.get(&q).expect("position state");
+                    (*vb, Arc::clone(rows))
+                };
+                let dest = ring.phys((q + 1) % p);
+                let forward = |ctx: &WorkerCtx, handoff: &mut BTreeMap<usize, Arc<Matrix>>| {
+                    if dest == me {
+                        handoff.insert(vb, Arc::clone(&rows));
+                    } else {
+                        ctx.send_to_rank(dest, Payload::RingRows { block: vb, rows: Arc::clone(&rows) });
+                    }
+                };
+                let forwarded_early =
+                    !last && ctx.pipeline() && (dest == me || ctx.can_send_ahead(dest));
+                if forwarded_early {
+                    forward(ctx, &mut handoff);
+                }
+                if step == 0 || owns_edge_block(q, vb) {
+                    let sw = ThreadCpuTimer::start();
+                    if q == me {
+                        self.eliminate_and_collect(ctx, q, row_block, vb, &rows, edges);
+                    } else {
+                        let mut task_edges = Vec::new();
+                        self.eliminate_and_collect(ctx, q, &rows_of[&q], vb, &rows, &mut task_edges);
+                        recovered.push((q, PairTask { a: q, b: vb }, task_edges));
+                    }
+                    ctx.phase2_secs += sw.elapsed_secs();
+                }
+                if !last && !forwarded_early {
+                    forward(ctx, &mut handoff);
+                }
             }
-            ctx.mem.alloc(visiting.nbytes());
         }
-        ctx.mem.free(visiting.nbytes());
+        for (_, (_, rows)) in visiting {
+            ctx.mem.free(rows.nbytes());
+        }
+        for (_, rows) in rows_of {
+            ctx.mem.free(rows.nbytes());
+        }
         Some(())
     }
 
-    /// Run elimination for edge block (my_block, other_block) and append
-    /// surviving edges. `my_rows`: C[my_block, :]; `other_rows`: C[other, :].
+    /// Run elimination for edge block (home, other_block) and append
+    /// surviving edges. `home` is the ring position being played — this
+    /// rank's own, or a dead position it substitutes. `my_rows`:
+    /// C[home, :]; `other_rows`: C[other, :].
     fn eliminate_and_collect(
         &self,
         ctx: &mut WorkerCtx,
+        home: usize,
         my_rows: &Matrix,
         other_block: usize,
         other_rows: &Matrix,
         edges: &mut Vec<(usize, usize, f32)>,
     ) {
-        let my_range = ctx.block_range(ctx.my_block);
+        let my_range = ctx.block_range(home);
         let other_range = ctx.block_range(other_block);
         let (a, b) = (my_range.len(), other_range.len());
         if a == 0 || b == 0 {
@@ -223,7 +433,7 @@ impl PcitApp {
         let flags = self.exec.pcit_tile(cxy, my_rows.view(), other_rows.view());
         ctx.elim_tiles += 1;
         let mask = flags_to_mask(&flags);
-        let diagonal = other_block == ctx.my_block;
+        let diagonal = other_block == home;
         for i in 0..a {
             for j in 0..b {
                 if diagonal && j <= i {
@@ -239,9 +449,9 @@ impl PcitApp {
         }
     }
 
-    /// |r| >= threshold edges from my row block (emit x < y only).
-    fn threshold_edges(&self, ctx: &WorkerCtx, my_rows: &Matrix, edges: &mut Vec<(usize, usize, f32)>) {
-        let my_range = ctx.block_range(ctx.my_block);
+    /// |r| >= threshold edges from `home`'s row block (emit x < y only).
+    fn threshold_edges(&self, ctx: &WorkerCtx, home: usize, my_rows: &Matrix, edges: &mut Vec<(usize, usize, f32)>) {
+        let my_range = ctx.block_range(home);
         for i in 0..my_range.len() {
             let x = my_range.start + i;
             let row = my_rows.row(i);
@@ -258,11 +468,21 @@ impl PcitApp {
         let tasks = std::mem::take(&mut ctx.tasks);
         let sw = ThreadCpuTimer::start();
         let mut edges: Vec<(usize, usize, f32)> = Vec::new();
+        let streams_from_start = ctx.per_task_results();
+        let mut prefix_flushed = false;
         for t in &tasks {
             if !ctx.begin_task(t) {
                 // Injected mid-compute crash (or shutdown while awaiting
                 // streamed blocks): exit without reporting.
                 return None;
+            }
+            if !streams_from_start && !prefix_flushed && ctx.per_task_results() {
+                // A rejoin flipped per-task streaming on mid-run: ship the
+                // monolithic prefix as its own chunk *before* this task's,
+                // so its provenance tags are exactly the completed prefix
+                // and the leader can splice around the rejoin overlap.
+                prefix_flushed = true;
+                ctx.stream_result(Payload::Edges(std::mem::take(&mut edges)));
             }
             if ctx.task_revoked(t) {
                 // Stolen by an idle rank: the thief computes and reports it.
@@ -421,19 +641,47 @@ impl DistributedApp for PcitApp {
 
     fn recoverable(&self) -> bool {
         // Local mode is task-granular (each pair's edges computable in
-        // isolation from quorum blocks). Exact mode is not: tiles route to
-        // row homes (the phase-1b P-tiles-per-home invariant) and the
-        // phase-2 ring requires every rank, so a mid-run death there
-        // aborts cleanly instead of recovering.
+        // isolation from quorum blocks). Exact mode is not task-granular —
+        // tiles route to row homes and the phase-2 ring involves every
+        // position — so it recovers through the ring re-route protocol
+        // (`ring_recovery`) instead of the per-task ledger.
         self.mode == DistMode::Local
     }
 
+    fn ring_recovery(&self) -> bool {
+        self.mode == DistMode::Exact
+    }
+
+    fn ring_result_tasks(&self, rank: usize, p: usize) -> Vec<PairTask> {
+        // The rank's result production order: the diagonal block first
+        // (ring step 0), then each owned edge block in ring-visit order
+        // (step s sees block (rank - s) mod p). Threshold mode emits the
+        // whole row as the single diagonal task.
+        let mut out = vec![PairTask { a: rank, b: rank }];
+        if self.use_pcit {
+            for s in 1..p {
+                let vb = (rank + p - s) % p;
+                if owns_edge_block(rank, vb) {
+                    out.push(PairTask { a: rank, b: vb });
+                }
+            }
+        }
+        out
+    }
+
     fn recovery_is_bitwise(&self) -> bool {
-        // Threshold mode is pairwise-exact anywhere; full-PCIT local mode
-        // eliminates against the computing rank's quorum panel, so a
-        // recovered task's edges legitimately differ from the original
-        // owner's (the ablation's approximation semantics).
-        !self.use_pcit
+        match self.mode {
+            // Exact-mode recovery replays the original elimination inputs
+            // (rows rebuilt tile-for-tile; corr-tile transpose symmetry
+            // makes the rebuild bitwise — see the unit test), so recovered
+            // slices match the victim's to the last bit.
+            DistMode::Exact => true,
+            // Threshold mode is pairwise-exact anywhere; full-PCIT local
+            // mode eliminates against the computing rank's quorum panel,
+            // so a recovered task's edges legitimately differ from the
+            // original owner's (the ablation's approximation semantics).
+            DistMode::Local => !self.use_pcit,
+        }
     }
 
     fn run_recovery_task(
@@ -441,11 +689,38 @@ impl DistributedApp for PcitApp {
         ctx: &mut WorkerCtx,
         task: crate::allpairs::PairTask,
     ) -> Payload {
-        debug_assert_eq!(self.mode, DistMode::Local, "only local mode is recoverable");
         let mut edges = Vec::new();
-        // A false return means shutdown arrived while awaiting streamed
-        // panel blocks; the empty payload's send fails harmlessly.
-        let _ = self.local_task_edges(ctx, &task, &mut edges);
+        match self.mode {
+            DistMode::Local => {
+                // A false return means shutdown arrived while awaiting
+                // streamed panel blocks; the empty payload's send fails
+                // harmlessly.
+                let _ = self.local_task_edges(ctx, &task, &mut edges);
+            }
+            DistMode::Exact => {
+                // Gather-phase ring recovery: the victim finished its scan
+                // but died before reporting. Rebuild the row blocks its
+                // elimination read and replay that one edge block.
+                let Some(row_a) = self.rebuild_row(ctx, task.a) else {
+                    return Payload::Edges(edges);
+                };
+                if self.use_pcit {
+                    if task.b == task.a {
+                        self.eliminate_and_collect(ctx, task.a, &row_a, task.b, &row_a, &mut edges);
+                    } else {
+                        let Some(row_b) = self.rebuild_row(ctx, task.b) else {
+                            ctx.mem.free(row_a.nbytes());
+                            return Payload::Edges(edges);
+                        };
+                        self.eliminate_and_collect(ctx, task.a, &row_a, task.b, &row_b, &mut edges);
+                        ctx.mem.free(row_b.nbytes());
+                    }
+                } else {
+                    self.threshold_edges(ctx, task.a, &row_a, &mut edges);
+                }
+                ctx.mem.free(row_a.nbytes());
+            }
+        }
         Payload::Edges(edges)
     }
 
@@ -474,6 +749,67 @@ impl DistributedApp for PcitApp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{NativeBackend, TileExecutor};
+
+    #[test]
+    fn corr_tile_transpose_symmetry() {
+        // Ring recovery rebuilds a dead rank's assembled row from
+        // freshly-computed corr tiles, but the victim's own phase 1b
+        // applied some of those tiles *transposed* (column-home
+        // deliveries). Bitwise identity of the rebuild therefore requires
+        // corr_tile(X, Y)[i][j] == corr_tile(Y, X)[j][i] to the last bit,
+        // which holds because each element accumulates over M in the same
+        // order either way.
+        let exec = NativeBackend::new();
+        let m = 13;
+        let mk = |rows: usize, seed: u32| {
+            let mut v = Vec::with_capacity(rows * m);
+            let mut s = seed;
+            for _ in 0..rows * m {
+                s = s.wrapping_mul(1664525).wrapping_add(1013904223);
+                v.push(((s >> 8) as f32 / (1u32 << 24) as f32) - 0.5);
+            }
+            Matrix::from_vec(rows, m, v)
+        };
+        let x = mk(4, 7);
+        let y = mk(5, 19);
+        let xy = exec.corr_tile(x.view(), y.view());
+        let yx = exec.corr_tile(y.view(), x.view());
+        for i in 0..4 {
+            for j in 0..5 {
+                assert_eq!(xy[(i, j)].to_bits(), yx[(j, i)].to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_result_tasks_cover_every_pair_once() {
+        // Union over all ranks = every unordered block pair exactly once,
+        // diagonal first per rank (full-PCIT exact mode).
+        let app = PcitApp::new(
+            Matrix::zeros(0, 0),
+            Arc::new(NativeBackend::new()),
+            DistMode::Exact,
+            true,
+            0.5,
+        );
+        for p in [4usize, 7, 9] {
+            let mut seen = BTreeSet::new();
+            for r in 0..p {
+                let tasks = app.ring_result_tasks(r, p);
+                assert_eq!(tasks[0], PairTask { a: r, b: r }, "diagonal first");
+                for t in tasks {
+                    assert!(
+                        seen.insert((t.a.min(t.b), t.a.max(t.b))),
+                        "pair ({}, {}) reported twice",
+                        t.a,
+                        t.b
+                    );
+                }
+            }
+            assert_eq!(seen.len(), p * (p + 1) / 2, "p={p}");
+        }
+    }
 
     #[test]
     fn edge_block_ownership_balanced() {

@@ -18,6 +18,8 @@
 //! kill_at = "compute:1" # scatter | compute:<k> | gather | disconnect[:<k>]
 //!                       # ("compute:1,gather" = per-victim phases for kill = "2,5")
 //! recover = "on"        # re-assign a dead rank's tasks mid-run
+//! degrade = "abort"     # abort | partial (when redundancy is exhausted)
+//! rejoin_after_ms = 200 # disconnect victims revive + rejoin after this
 //! steal = "off"         # on | off (re-grant queued tasks to idle ranks)
 //! steal_batch = 2       # max queued tasks one steal grant may move
 //! throttle = "3:4"      # deterministic slow rank: <rank>:<factor>
@@ -40,7 +42,7 @@
 //! ```
 
 use super::parser::{ConfigError, TomlDoc};
-use crate::coordinator::{HeartbeatConfig, KillAt, TransportKind};
+use crate::coordinator::{DegradeMode, HeartbeatConfig, KillAt, TransportKind};
 use crate::quorum::Strategy;
 use std::path::PathBuf;
 
@@ -206,6 +208,14 @@ pub struct RunConfig {
     /// Mid-run crash recovery: re-assign a dead rank's unfinished tasks to
     /// surviving quorum hosts instead of aborting (`--recover {on,off}`).
     pub recover: bool,
+    /// When recovery exhausts the redundancy and a pair has no surviving
+    /// host: abort (default) or complete every coverable task and report
+    /// the uncovered remainder (`--degrade {abort,partial}`).
+    pub degrade: DegradeMode,
+    /// Disconnect-injected victims revive their transport and rejoin after
+    /// this many milliseconds (`--rejoin-after-ms`); `None` keeps
+    /// disconnects permanent.
+    pub rejoin_after_ms: Option<u64>,
     /// Transport backend: in-memory channels (the default) or real loopback
     /// TCP sockets with heartbeat failure detection.
     pub transport: TransportKind,
@@ -247,6 +257,8 @@ impl Default for RunConfig {
             kill_at: KillAt::Scatter,
             kill_at_list: Vec::new(),
             recover: false,
+            degrade: DegradeMode::Abort,
+            rejoin_after_ms: None,
             transport: crate::coordinator::transport_default(),
             heartbeat_ms: HeartbeatConfig::default().interval_ms,
             heartbeat_timeout_ms: HeartbeatConfig::default().timeout_ms,
@@ -330,6 +342,13 @@ impl RunConfig {
                 .ok_or_else(|| bad(format!("bad run.recover: {s} (want \"on\" | \"off\")")))?;
         } else if let Some(b) = doc.get_bool("run", "recover") {
             cfg.recover = b;
+        }
+        if let Some(s) = doc.get_str("run", "degrade") {
+            cfg.degrade = DegradeMode::parse(s)
+                .ok_or_else(|| bad(format!("bad run.degrade: {s} (want \"abort\" | \"partial\")")))?;
+        }
+        if let Some(v) = doc.get_usize("run", "rejoin_after_ms") {
+            cfg.rejoin_after_ms = Some(v as u64);
         }
         if let Some(s) = doc.get_str("run", "transport") {
             cfg.transport = TransportKind::parse(s)
@@ -441,11 +460,23 @@ impl RunConfig {
         if self.heartbeat_ms == 0 {
             return Err("run.heartbeat_ms must be >= 1".into());
         }
-        if self.heartbeat_timeout_ms < self.heartbeat_ms {
+        if self.heartbeat_timeout_ms <= self.heartbeat_ms {
+            // Equality is as broken as less-than: a timeout equal to the
+            // beacon period declares every healthy peer dead whenever one
+            // beat is delayed by scheduling jitter.
             return Err(format!(
-                "run.heartbeat_timeout_ms ({}) must be >= run.heartbeat_ms ({})",
+                "run.heartbeat_timeout_ms ({}) must exceed run.heartbeat_ms ({}): a timeout at or \
+                 below the beacon period declares healthy peers dead between beats",
                 self.heartbeat_timeout_ms, self.heartbeat_ms
             ));
+        }
+        if let Some(ms) = self.rejoin_after_ms {
+            if ms == 0 {
+                return Err("run.rejoin_after_ms must be >= 1".into());
+            }
+            if !self.recover {
+                return Err("run.rejoin_after_ms requires run.recover = \"on\"".into());
+            }
         }
         if self.tcp_processes && self.transport != TransportKind::Tcp {
             return Err("run.processes = \"on\" requires run.transport = \"tcp\"".into());
@@ -623,6 +654,43 @@ threshold = 0.9
         assert!(RunConfig::from_doc(&doc("[run]\nheartbeat_ms = 0")).is_err());
         assert!(RunConfig::from_doc(&doc(
             "[run]\nheartbeat_ms = 100\nheartbeat_timeout_ms = 50"
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn heartbeat_timeout_boundary_rejected() {
+        // Exactly equal is as broken as less-than: one jittered beat would
+        // declare a healthy peer dead. The error must name both values.
+        let err = RunConfig::from_doc(&doc(
+            "[run]\nheartbeat_ms = 100\nheartbeat_timeout_ms = 100",
+        ))
+        .unwrap_err();
+        assert!(err.msg.contains("100"), "{}", err.msg);
+        assert!(err.msg.contains("exceed"), "{}", err.msg);
+        // One past the boundary is accepted.
+        let cfg = RunConfig::from_doc(&doc(
+            "[run]\nheartbeat_ms = 100\nheartbeat_timeout_ms = 101",
+        ))
+        .unwrap();
+        assert_eq!(cfg.heartbeat_timeout_ms, 101);
+    }
+
+    #[test]
+    fn degrade_and_rejoin_keys_parse_and_validate() {
+        let cfg = RunConfig::from_doc(&doc("[run]\ndegrade = \"partial\"")).unwrap();
+        assert_eq!(cfg.degrade, DegradeMode::Partial);
+        assert_eq!(RunConfig::default().degrade, DegradeMode::Abort);
+        assert!(RunConfig::from_doc(&doc("[run]\ndegrade = \"sideways\"")).is_err());
+        let cfg = RunConfig::from_doc(&doc(
+            "[run]\nrecover = \"on\"\nrejoin_after_ms = 250",
+        ))
+        .unwrap();
+        assert_eq!(cfg.rejoin_after_ms, Some(250));
+        // Rejoin needs the recovery ledger to reconcile against.
+        assert!(RunConfig::from_doc(&doc("[run]\nrejoin_after_ms = 250")).is_err());
+        assert!(RunConfig::from_doc(&doc(
+            "[run]\nrecover = \"on\"\nrejoin_after_ms = 0"
         ))
         .is_err());
     }

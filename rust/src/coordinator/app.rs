@@ -110,6 +110,31 @@ pub trait DistributedApp: Send + Sync {
         true
     }
 
+    /// Whether a pre-barrier death of this app's ranks can be recovered by
+    /// **ring re-routing**: the leader grants the dead rank's blocks to a
+    /// surviving substitute and broadcasts [`Message::RingReroute`]
+    /// (strictly before Proceed); workers fold the order into their
+    /// rotation so the ring skips the dead rank while the elimination
+    /// replays in the original per-pair FIFO order — output stays bitwise
+    /// identical. Exact-mode PCIT opts in (its results are not
+    /// task-granular, so [`DistributedApp::recoverable`] stays false and
+    /// the task ledger never engages for it).
+    fn ring_recovery(&self) -> bool {
+        false
+    }
+
+    /// For ring-recovery apps: the ordered task list whose results rank
+    /// `rank` reports once the ring completes (its own diagonal pair plus
+    /// every edge pair it eliminated, in ring-visit order). The leader
+    /// uses this to re-grant a rank's result *production* when it dies
+    /// after the ring barrier: the exchange already happened everywhere,
+    /// only the report is lost, so a substitute granted the same blocks
+    /// recomputes and reports the identical slice.
+    fn ring_result_tasks(&self, rank: usize, p: usize) -> Vec<PairTask> {
+        let _ = (rank, p);
+        Vec::new()
+    }
+
     /// Compute one re-assigned task on behalf of a dead rank and return
     /// its result payload (leader-directed work stealing). When
     /// [`DistributedApp::recovery_is_bitwise`] holds (the default), the
@@ -141,6 +166,21 @@ pub trait DistributedApp: Send + Sync {
     fn worker_spec(&self) -> Option<Vec<u8>> {
         None
     }
+}
+
+/// What a reroute-aware receive ([`WorkerCtx::recv_app_or_reroute`])
+/// surfaced: the wanted app payload, or notice that ring re-route orders
+/// are waiting in [`WorkerCtx::take_reroutes`].
+pub enum RingEvent {
+    Payload(Payload),
+    Reroute,
+}
+
+/// What a reroute-aware barrier ([`WorkerCtx::barrier_or_reroute`])
+/// released on.
+pub enum BarrierWait {
+    Proceed,
+    Reroute,
 }
 
 /// Per-worker state and engine services available to an app's
@@ -176,6 +216,20 @@ pub struct WorkerCtx {
     pub(super) streamed_items: u64,
     /// Injected failure plan for this rank (None = healthy).
     pub(super) kill_at: Option<KillAt>,
+    /// Transient-disconnect flavor (`--rejoin-after-ms`): a Disconnect
+    /// injection goes dark for this long, then revives and rejoins instead
+    /// of dying for good.
+    pub(super) rejoin_after_ms: Option<u64>,
+    /// This rank went dark and came back ([`Message::Rejoin`] announced):
+    /// per-task result streaming and revoke handling are forced on so the
+    /// leader can cancel overlap with any in-flight reassignment.
+    pub(super) rejoined: bool,
+    /// Every task completed so far, in completion order — the resume
+    /// cursor a [`Message::Rejoin`] carries.
+    pub(super) done_log: Vec<PairTask>,
+    /// Ring re-route orders ([`Message::RingReroute`]) in arrival order,
+    /// held for the app ([`WorkerCtx::take_reroutes`]).
+    pub(super) reroutes: VecDeque<(usize, usize, Vec<PairTask>)>,
     /// Simulated crash tripped: the rank stops reporting and exits.
     pub(super) dead: bool,
     /// Tasks completed since the last streamed chunk — the provenance tags
@@ -288,15 +342,16 @@ impl WorkerCtx {
     /// worker exits without reporting, exactly like a real mid-compute
     /// crash.
     pub fn begin_task(&mut self, t: &PairTask) -> bool {
-        if self.plan.steal {
+        if self.plan.steal || self.rejoined {
             // Drain control traffic non-blockingly: a Revoke must be seen
-            // before this task starts, or the steal degenerates into
-            // duplicated work (still bitwise-safe, but wasted).
+            // before this task starts, or the steal (or a rejoin's overlap
+            // cancellation) degenerates into duplicated work (still
+            // bitwise-safe, but wasted).
             self.poll_control();
             // Progress heartbeat: tags not yet carried by a streamed chunk
             // (credit-stashed, or a task that produced no payload) ride a
             // TasksDone so the leader's backlog estimate stays fresh.
-            if !self.dead && !self.task_tags.is_empty() {
+            if self.plan.steal && !self.dead && !self.task_tags.is_empty() {
                 let _ = self.ep.send(0, Message::TasksDone { tasks: self.task_tags.clone() });
             }
         }
@@ -338,24 +393,50 @@ impl WorkerCtx {
 
     /// Whether owned task `t` was stolen out from under this rank
     /// ([`Message::Revoke`]): the app must skip it — an idle rank computes
-    /// and reports it instead. Always false with stealing off.
+    /// and reports it instead. Active under work stealing, and after a
+    /// rejoin (the leader revokes tasks it already re-granted elsewhere
+    /// while this rank was dark).
     pub fn task_revoked(&self, t: &PairTask) -> bool {
-        self.plan.steal && self.revoked.contains(t)
+        (self.plan.steal || self.rejoined) && self.revoked.contains(t)
     }
 
     /// Whether the app should report results at task granularity
     /// (streamed chunks) instead of one monolithic Result. True when
-    /// pipelining — the original streaming mode — and under work stealing,
+    /// pipelining — the original streaming mode — under work stealing,
     /// where the leader needs task-tagged payloads to splice a stolen
-    /// task's result back into the victim's original task order.
+    /// task's result back into the victim's original task order, and after
+    /// a rejoin, which flips this on mid-run: the app must then flush its
+    /// accumulated prefix as one tagged chunk before the next per-task
+    /// chunk, so the leader can splice around the reassignment overlap.
     pub fn per_task_results(&self) -> bool {
-        self.plan.pipeline || self.plan.steal
+        self.plan.pipeline || self.plan.steal || self.rejoined
+    }
+
+    /// Whether this rank went through a transient-disconnect rejoin.
+    pub fn has_rejoined(&self) -> bool {
+        self.rejoined
+    }
+
+    /// Drain ring re-route orders received so far — (dead rank,
+    /// substitute, the dead rank's ordered task list) in arrival order.
+    /// The leader broadcasts every re-route strictly before Proceed, so a
+    /// ring app draining this right after its pre-ring barrier sees the
+    /// complete set for the rotation.
+    pub fn take_reroutes(&mut self) -> Vec<(usize, usize, Vec<PairTask>)> {
+        self.reroutes.drain(..).collect()
+    }
+
+    /// Whether a *granted* (recovery) task was revoked. Unlike
+    /// [`WorkerCtx::task_revoked`] this is not gated on the steal flag: a
+    /// rejoin cancels in-flight reassignments on any run shape.
+    pub(super) fn grant_revoked(&self, t: &PairTask) -> bool {
+        self.revoked.contains(t)
     }
 
     /// Drain everything already on the wire without blocking (work
     /// stealing's task-boundary poll): revokes take effect, blocks land,
     /// app traffic and late grants stash, crash injections arm or fire.
-    fn poll_control(&mut self) {
+    pub(super) fn poll_control(&mut self) {
         while let Some(env) = self.ep.try_recv() {
             match env.msg {
                 Message::Revoke { tasks } => self.revoked.extend(tasks),
@@ -365,16 +446,22 @@ impl WorkerCtx {
                     self.pending_reassign.push_back((for_rank, tasks));
                 }
                 Message::Proceed => self.banked_proceed = true,
+                Message::RingReroute { dead, substitute, tasks } => {
+                    self.reroutes.push_back((dead, substitute, tasks));
+                }
                 Message::Shutdown => {
                     self.dead = true;
                     return;
                 }
-                Message::Crash { at } => match at {
+                Message::Crash { at, rejoin_after_ms } => match at {
                     KillAt::Scatter => {
                         self.die();
                         return;
                     }
-                    other => self.kill_at = Some(other),
+                    other => {
+                        self.kill_at = Some(other);
+                        self.rejoin_after_ms = rejoin_after_ms;
+                    }
                 },
                 other => panic!(
                     "worker {}: unexpected {} polling at task boundary",
@@ -397,6 +484,12 @@ impl WorkerCtx {
         if let Some(k) = self.kill_at.as_ref().and_then(KillAt::compute_trigger) {
             if self.completed_tasks >= k {
                 if matches!(self.kill_at, Some(KillAt::Disconnect { .. })) {
+                    if self.rejoin_after_ms.is_some() {
+                        // Transient flavor: dark, back, announce — and the
+                        // rank keeps computing.
+                        self.rejoin();
+                        return true;
+                    }
                     self.die_dark();
                 } else {
                     self.die();
@@ -405,6 +498,26 @@ impl WorkerCtx {
             }
         }
         true
+    }
+
+    /// `--rejoin-after-ms`: the disconnect is transient. Go dark exactly
+    /// like the permanent flavor (the leader may detect the silence and
+    /// reassign in the window), sleep out the partition, revive the
+    /// transport over the sockets the disconnect deliberately left open,
+    /// and announce the comeback with a resume cursor of every task
+    /// completed so far. The leader cancels in-flight reassignment of that
+    /// prefix and revokes here whatever it already re-granted elsewhere,
+    /// so each task keeps exactly one computer.
+    fn rejoin(&mut self) {
+        let ms = self.rejoin_after_ms.take().expect("rejoin window armed");
+        self.kill_at = None; // the injection fired; it must not re-trip
+        self.ep.go_dark();
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+        self.ep.revive_from_dark();
+        let _ = self
+            .ep
+            .send(0, Message::Rejoin { rank: self.my_block, done: self.done_log.clone() });
+        self.rejoined = true;
     }
 
     /// Block until every listed block id is resident, pumping the wire and
@@ -436,7 +549,12 @@ impl WorkerCtx {
                 // A steal can revoke queued tasks while we wait on inputs
                 // for an earlier one.
                 Message::Revoke { tasks } => self.revoked.extend(tasks),
-                Message::Crash { at } => match at {
+                // A ring re-route can land while the substitute still waits
+                // on the dead rank's granted blocks.
+                Message::RingReroute { dead, substitute, tasks } => {
+                    self.reroutes.push_back((dead, substitute, tasks));
+                }
+                Message::Crash { at, rejoin_after_ms } => match at {
                     // Scatter-phase injection dies on delivery.
                     KillAt::Scatter => {
                         self.die();
@@ -445,7 +563,10 @@ impl WorkerCtx {
                     // Mid-run injection arms the plan (streamed mode: the
                     // Crash rides ahead of the block stream, so it lands
                     // here rather than in phase 0).
-                    other => self.kill_at = Some(other),
+                    other => {
+                        self.kill_at = Some(other);
+                        self.rejoin_after_ms = rejoin_after_ms;
+                    }
                 },
                 other => panic!(
                     "worker {}: unexpected {} awaiting scatter blocks",
@@ -469,6 +590,7 @@ impl WorkerCtx {
     pub fn complete_task(&mut self, t: PairTask) {
         self.completed_tasks += 1;
         self.task_tags.push(t);
+        self.done_log.push(t);
         if let Some(start) = self.task_start.take() {
             let secs = start.elapsed().as_secs_f64();
             self.last_task_secs = secs;
@@ -518,7 +640,7 @@ impl WorkerCtx {
         // never be credit-merged across payload-bearing tasks — leader-bound
         // sends bypass the credit check on steal runs (the leader drains
         // continuously; pacing only bounded its queue).
-        if self.ep.can_send_ahead(0) || self.plan.steal {
+        if self.ep.can_send_ahead(0) || self.plan.steal || self.rejoined {
             let full = self.finish_result(chunk);
             // Tags cover every task completed since the last chunk left —
             // including tasks whose chunks were credit-stashed, which this
@@ -587,6 +709,12 @@ impl WorkerCtx {
                 // landing during the app protocol.
                 Message::AssignBlock(pb) => self.insert_block(pb),
                 Message::Revoke { tasks } => self.revoked.extend(tasks),
+                // A ring re-route can arrive while phase 1b still awaits
+                // tiles (the leader reacts to a death the moment it is
+                // detected, which can be mid-exchange).
+                Message::RingReroute { dead, substitute, tasks } => {
+                    self.reroutes.push_back((dead, substitute, tasks));
+                }
                 other => panic!(
                     "worker {}: unexpected {} while awaiting app traffic",
                     self.my_block,
@@ -629,6 +757,12 @@ impl WorkerCtx {
                 // blocking point, the barrier included.
                 Message::AssignBlock(pb) => self.insert_block(pb),
                 Message::Revoke { tasks } => self.revoked.extend(tasks),
+                // A mid-ring death's re-route order arrives while every
+                // survivor waits at the pre-ring barrier — the canonical
+                // delivery point (broadcast strictly before Proceed).
+                Message::RingReroute { dead, substitute, tasks } => {
+                    self.reroutes.push_back((dead, substitute, tasks));
+                }
                 other => panic!(
                     "worker {}: unexpected {} at barrier",
                     self.my_block,
@@ -636,6 +770,110 @@ impl WorkerCtx {
                 ),
             }
         }
+    }
+
+    /// Like [`WorkerCtx::recv_app_where`], but also returns when a ring
+    /// re-route order arrives (or is already stashed). A substitute blocked
+    /// in phase 1b may be waiting for the very tiles only its own
+    /// substitute-recompute can produce, so orders cannot be deferred until
+    /// the next payload shows up — the caller must drain
+    /// [`WorkerCtx::take_reroutes`] and act before waiting again.
+    pub fn recv_app_or_reroute(
+        &mut self,
+        want: impl Fn(&Payload) -> bool,
+    ) -> Option<RingEvent> {
+        if !self.reroutes.is_empty() {
+            return Some(RingEvent::Reroute);
+        }
+        if let Some(i) = self.pending.iter().position(&want) {
+            return self.pending.remove(i).map(RingEvent::Payload);
+        }
+        loop {
+            let env = self.ep.recv()?;
+            match env.msg {
+                Message::App(p) => {
+                    if want(&p) {
+                        return Some(RingEvent::Payload(p));
+                    }
+                    self.pending.push_back(p);
+                }
+                Message::Shutdown => return None,
+                Message::Crash { .. } => {
+                    self.die();
+                    return None;
+                }
+                Message::Reassign { for_rank, tasks } => {
+                    self.pending_reassign.push_back((for_rank, tasks));
+                }
+                Message::AssignBlock(pb) => self.insert_block(pb),
+                Message::Revoke { tasks } => self.revoked.extend(tasks),
+                Message::RingReroute { dead, substitute, tasks } => {
+                    self.reroutes.push_back((dead, substitute, tasks));
+                    return Some(RingEvent::Reroute);
+                }
+                other => panic!(
+                    "worker {}: unexpected {} while awaiting app traffic",
+                    self.my_block,
+                    other.kind()
+                ),
+            }
+        }
+    }
+
+    /// Like [`WorkerCtx::barrier`], but releases on a ring re-route order
+    /// too: a survivor still blocked in 1b may depend on tiles only this
+    /// rank's substitute-recompute can produce, so the leader cannot
+    /// Proceed (and we cannot passively wait for it) until the order is
+    /// acted on. Callers loop until [`BarrierWait::Proceed`].
+    pub fn barrier_or_reroute(&mut self) -> Option<BarrierWait> {
+        if !self.reroutes.is_empty() {
+            return Some(BarrierWait::Reroute);
+        }
+        if self.banked_proceed {
+            self.banked_proceed = false;
+            return Some(BarrierWait::Proceed);
+        }
+        loop {
+            let env = self.ep.recv()?;
+            match env.msg {
+                Message::Proceed => return Some(BarrierWait::Proceed),
+                Message::Shutdown => return None,
+                Message::Crash { .. } => {
+                    self.die();
+                    return None;
+                }
+                Message::App(p) => self.pending.push_back(p),
+                Message::Reassign { for_rank, tasks } => {
+                    self.pending_reassign.push_back((for_rank, tasks));
+                }
+                Message::AssignBlock(pb) => self.insert_block(pb),
+                Message::Revoke { tasks } => self.revoked.extend(tasks),
+                Message::RingReroute { dead, substitute, tasks } => {
+                    self.reroutes.push_back((dead, substitute, tasks));
+                    return Some(BarrierWait::Reroute);
+                }
+                other => panic!(
+                    "worker {}: unexpected {} at barrier",
+                    self.my_block,
+                    other.kind()
+                ),
+            }
+        }
+    }
+
+    /// Report one recovered task slice on behalf of a dead rank. The leader
+    /// splices it into the victim's result at its original rank position —
+    /// the same first-writer-wins ledger as task-granular recovery — so the
+    /// merged output stays ordered exactly as the failure-free run.
+    pub fn report_recovered(&self, for_rank: usize, task: PairTask, payload: Payload) {
+        let _ = self.ep.send(
+            0,
+            Message::RecoveredResult {
+                for_rank,
+                task,
+                payload,
+            },
+        );
     }
 }
 
@@ -689,6 +927,10 @@ mod tests {
             result_stash: None,
             streamed_items: 0,
             kill_at: None,
+            rejoin_after_ms: None,
+            rejoined: false,
+            done_log: Vec::new(),
+            reroutes: VecDeque::new(),
             dead: false,
             task_tags: Vec::new(),
             completed_tasks: 0,
@@ -860,6 +1102,64 @@ mod tests {
     }
 
     #[test]
+    fn disconnect_with_rejoin_goes_dark_then_announces() {
+        let (t, mut eps) = Transport::new(2);
+        let me = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        ctx.plan.pipeline = false;
+        ctx.insert_block(placed(0, 4, true));
+        ctx.insert_block(placed(1, 4, false));
+        ctx.kill_at = Some(KillAt::Disconnect { tasks: 1 });
+        ctx.rejoin_after_ms = Some(5);
+        let t00 = PairTask { a: 0, b: 0 };
+        let t01 = PairTask { a: 0, b: 1 };
+        assert!(!ctx.per_task_results(), "monolithic before the rejoin");
+        assert!(ctx.begin_task(&t00));
+        ctx.complete_task(t00);
+        // The next boundary trips the transient disconnect: dark, sleep,
+        // revive, Rejoin — and the task loop continues.
+        assert!(ctx.begin_task(&t01));
+        assert!(!ctx.dead);
+        assert!(ctx.has_rejoined());
+        assert!(!t.is_killed(1), "revived rank must not stay marked killed");
+        match leader.recv().unwrap().msg {
+            Message::Rejoin { rank, done } => {
+                assert_eq!(rank, 0);
+                assert_eq!(done, vec![t00], "resume cursor carries the prefix");
+            }
+            other => panic!("wrong message {}", other.kind()),
+        }
+        // Per-task streaming is forced from here on, the injection cannot
+        // re-trip, and a post-rejoin Revoke is honored at the boundary.
+        assert!(ctx.per_task_results());
+        ctx.complete_task(t01);
+        leader.send(1, Message::Revoke { tasks: vec![PairTask { a: 1, b: 1 }] }).unwrap();
+        assert!(ctx.begin_task(&PairTask { a: 1, b: 1 }));
+        assert!(ctx.task_revoked(&PairTask { a: 1, b: 1 }));
+    }
+
+    #[test]
+    fn ring_reroutes_stash_at_the_barrier_and_drain_in_order() {
+        let (_t, mut eps) = Transport::new(2);
+        let me = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let mut ctx = ctx_for(me);
+        let t47 = PairTask { a: 4, b: 7 };
+        leader
+            .send(1, Message::RingReroute { dead: 4, substitute: 6, tasks: vec![t47] })
+            .unwrap();
+        leader
+            .send(1, Message::RingReroute { dead: 2, substitute: 0, tasks: Vec::new() })
+            .unwrap();
+        leader.send(1, Message::Proceed).unwrap();
+        assert!(ctx.barrier(), "barrier must release on Proceed");
+        let orders = ctx.take_reroutes();
+        assert_eq!(orders, vec![(4, 6, vec![t47]), (2, 0, Vec::new())]);
+        assert!(ctx.take_reroutes().is_empty(), "drained once");
+    }
+
+    #[test]
     fn ensure_blocks_pumps_and_stashes_in_order() {
         // Waiting for a streamed block must not lose anything that arrives
         // ahead of it: app payloads stash in arrival order, a late task
@@ -896,7 +1196,9 @@ mod tests {
         let me = eps.pop().unwrap();
         let leader = eps.pop().unwrap();
         let mut ctx = ctx_for(me);
-        leader.send(1, Message::Crash { at: KillAt::Compute { tasks: 1 } }).unwrap();
+        leader
+            .send(1, Message::Crash { at: KillAt::Compute { tasks: 1 }, rejoin_after_ms: None })
+            .unwrap();
         leader.send(1, Message::AssignBlock(placed(0, 4, true))).unwrap();
         assert!(ctx.ensure_blocks(&[0]));
         assert_eq!(ctx.kill_at, Some(KillAt::Compute { tasks: 1 }));
@@ -905,7 +1207,9 @@ mod tests {
         let me2 = eps2.pop().unwrap();
         let leader2 = eps2.pop().unwrap();
         let mut ctx2 = ctx_for(me2);
-        leader2.send(1, Message::Crash { at: KillAt::Scatter }).unwrap();
+        leader2
+            .send(1, Message::Crash { at: KillAt::Scatter, rejoin_after_ms: None })
+            .unwrap();
         assert!(!ctx2.ensure_blocks(&[0]));
         assert!(ctx2.dead);
         assert!(ctx2.ep.transport().is_killed(ctx2.ep.rank));

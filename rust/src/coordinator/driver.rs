@@ -4,7 +4,7 @@
 
 use super::app::{DistributedApp, Plan};
 use super::leader::{leader_main, LeaderOutcome, LeaderPlan, ResultSink};
-use super::messages::{KillAt, Payload};
+use super::messages::{DegradeMode, KillAt, Payload};
 use super::tcp::{self, HeartbeatConfig, TcpLeader};
 use super::transport::{endpoint_of, Endpoint, Transport, TransportHealth, TransportKind};
 use super::wire;
@@ -140,6 +140,19 @@ pub struct EngineOptions {
     /// before each task after its first, simulating a straggler without
     /// changing any computed value.
     pub throttle: Option<(usize, u32)>,
+    /// What the leader does when deaths exhaust the r-fold redundancy and
+    /// some pair has no surviving host (`--degrade {abort,partial}`):
+    /// abort the run (default), or complete every coverable task and
+    /// report the uncovered pairs + coverage ratio instead.
+    pub degrade: DegradeMode,
+    /// Rejoin injection flavor (`--rejoin-after-ms`, composes with
+    /// `--kill-at disconnect[:<k>]`): the dark victim revives its
+    /// transport after this many milliseconds and announces a
+    /// [`Rejoin`](super::messages::Message::Rejoin) with its resume cursor;
+    /// the leader re-admits it, cancels in-flight reassignment overlap
+    /// (first-writer-wins), and the run finishes with zero duplicate task
+    /// results. `None` keeps disconnects permanent.
+    pub rejoin_after_ms: Option<u64>,
 }
 
 /// Process-wide pipeline default: `QUORALL_PIPELINE=on|1` flips every
@@ -210,6 +223,8 @@ impl EngineOptions {
             steal: steal_default(),
             steal_batch: 2,
             throttle: None,
+            degrade: DegradeMode::Abort,
+            rejoin_after_ms: None,
         }
     }
 }
@@ -265,6 +280,22 @@ pub struct EngineReport {
     pub steal_latency_secs: f64,
     /// Ranks that died during the run (injected or crashed), ascending.
     pub dead_ranks: Vec<usize>,
+    /// Exact-mode ring re-route orders the leader issued (dead ring
+    /// positions taken over by live substitutes, cascades included).
+    pub ring_reroutes: u64,
+    /// Ranks that went dark and rejoined mid-run (arrival order).
+    pub rejoined_ranks: Vec<usize>,
+    /// Duplicate task results the leader dropped after first-writer-wins
+    /// (recovery races, rejoin overlap, late chunks from dead ranks). A
+    /// rejoin that cancels its reassignment overlap in time reports 0.
+    pub duplicate_results: u64,
+    /// Block-pair tasks no surviving rank could cover, normalized
+    /// (a <= b) and ascending — non-empty only when redundancy was
+    /// exhausted under `--degrade partial`.
+    pub uncovered_pairs: Vec<(usize, usize)>,
+    /// Fraction of pair tasks the run covered: 1.0 on any non-degraded
+    /// run, 1 − uncovered/total under partial degradation.
+    pub coverage_ratio: f64,
     /// Transport backend the run used.
     pub transport: TransportKind,
     /// Failure-detector observability (leader's view): per-rank
@@ -342,6 +373,28 @@ pub fn run_app_with_sink(
         anyhow::ensure!(r < p, "throttle rank {r} out of range (P = {p})");
         anyhow::ensure!(f >= 1, "throttle factor must be >= 1 (got {f})");
     }
+    // A timeout at or below the beacon period would declare every healthy
+    // peer dead between beats (also rejected at CLI/config parse time;
+    // this guards programmatic callers).
+    anyhow::ensure!(
+        opts.heartbeat_timeout_ms > opts.heartbeat_ms,
+        "heartbeat timeout ({} ms) must exceed the heartbeat interval ({} ms)",
+        opts.heartbeat_timeout_ms,
+        opts.heartbeat_ms
+    );
+    if opts.rejoin_after_ms.is_some() {
+        // A rejoiner resumes from its per-task cursor; apps without
+        // task-granular results have nothing to resume.
+        anyhow::ensure!(
+            app.recoverable(),
+            "--rejoin-after-ms requires a task-granular app ('{}' is not)",
+            app.name()
+        );
+        anyhow::ensure!(
+            opts.recover,
+            "--rejoin-after-ms requires recovery on (--recover on)"
+        );
+    }
     // Stealing needs the task-granular replay machinery recovery built.
     let steal = opts.steal && app.recoverable();
     let n = app.elements();
@@ -360,9 +413,16 @@ pub fn run_app_with_sink(
     };
     let (tasks, imbalance, recovery) = if opts.recover || opts.redundancy > 1 {
         let assignment = RedundantAssignment::build(quorum.as_ref(), opts.redundancy.max(1));
-        if opts.recover && !opts.kill.is_empty() {
+        if opts.recover
+            && !opts.kill.is_empty()
+            && opts.degrade != DegradeMode::Partial
+            && !app.ring_recovery()
+        {
             // Validated on the exact instance the engine executes: every
-            // pair must retain at least one surviving owner.
+            // pair must retain at least one surviving owner. Skipped under
+            // partial degradation (uncovered pairs are the point) and for
+            // ring-recovery apps (a substitute rebuilds rows from granted
+            // blocks, so any single survivor covers every pair).
             anyhow::ensure!(
                 assignment.covers_with_failures(&opts.kill),
                 "insufficient redundancy: some pair is owned only by killed ranks (r = {}, kill = {:?})",
@@ -436,6 +496,8 @@ pub fn run_app_with_sink(
             recovery,
             steal_batch: opts.steal_batch,
             sink,
+            degrade: opts.degrade,
+            rejoin_after_ms: opts.rejoin_after_ms,
         },
     );
     if lead.is_err() {
@@ -486,6 +548,11 @@ pub fn run_app_with_sink(
     let overlap = overlap_ratio(outcome.stats.len(), wall, blocked);
     let scatter_blocked: f64 = outcome.stats.iter().map(|s| s.scatter_blocked_secs).sum();
     let first_task = time_to_first_task_secs(&outcome.stats);
+    let coverage = if total_tasks > 0 {
+        1.0 - outcome.uncovered_pairs.len() as f64 / total_tasks as f64
+    } else {
+        1.0
+    };
 
     Ok(EngineReport {
         results: outcome.results,
@@ -506,6 +573,11 @@ pub fn run_app_with_sink(
         stolen_tasks: outcome.stolen_tasks,
         steal_latency_secs: outcome.steal_latency_secs,
         dead_ranks: outcome.dead_ranks,
+        ring_reroutes: outcome.ring_reroutes,
+        rejoined_ranks: outcome.rejoined_ranks,
+        duplicate_results: outcome.duplicate_results,
+        uncovered_pairs: outcome.uncovered_pairs,
+        coverage_ratio: coverage,
         transport: transport.kind(),
         health,
     })
@@ -702,6 +774,16 @@ pub struct DistributedReport {
     pub steal_latency_secs: f64,
     /// Ranks that died during the run, ascending.
     pub dead_ranks: Vec<usize>,
+    /// See [`EngineReport::ring_reroutes`].
+    pub ring_reroutes: u64,
+    /// See [`EngineReport::rejoined_ranks`].
+    pub rejoined_ranks: Vec<usize>,
+    /// See [`EngineReport::duplicate_results`].
+    pub duplicate_results: u64,
+    /// See [`EngineReport::uncovered_pairs`].
+    pub uncovered_pairs: Vec<(usize, usize)>,
+    /// See [`EngineReport::coverage_ratio`].
+    pub coverage_ratio: f64,
     /// Transport backend the run used.
     pub transport: TransportKind,
     /// See [`EngineReport::health`].
@@ -758,6 +840,8 @@ pub fn run_distributed_pcit(
     opts.steal = cfg.steal;
     opts.steal_batch = cfg.steal_batch;
     opts.throttle = cfg.throttle;
+    opts.degrade = cfg.degrade;
+    opts.rejoin_after_ms = cfg.rejoin_after_ms;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -778,6 +862,11 @@ pub fn run_distributed_pcit(
         stolen_tasks: rep.stolen_tasks,
         steal_latency_secs: rep.steal_latency_secs,
         dead_ranks: rep.dead_ranks,
+        ring_reroutes: rep.ring_reroutes,
+        rejoined_ranks: rep.rejoined_ranks,
+        duplicate_results: rep.duplicate_results,
+        uncovered_pairs: rep.uncovered_pairs,
+        coverage_ratio: rep.coverage_ratio,
         transport: rep.transport,
         health: rep.health,
     })
@@ -798,10 +887,11 @@ pub fn run_distributed_pcit(
 /// it actually executes ([`RedundantAssignment::covers_with_failures`]),
 /// that every pair retains a surviving owner.
 ///
-/// The mode follows `cfg.mode`: quorum-local recovers; quorum-exact runs
-/// are accepted (no upfront barrier-phase rejection) but abort with a
-/// clean error if a rank actually dies — the exact ring is not
-/// task-granular.
+/// The mode follows `cfg.mode`: quorum-local recovers task-by-task;
+/// quorum-exact runs recover by **ring re-routing** — a live substitute
+/// takes over the dead rank's ring position (replaying its phase-1 tiles
+/// and rebuilding its panel row from granted blocks), so the recovered
+/// network stays bitwise-identical to the failure-free run there too.
 pub fn run_resilient_pcit(
     cfg: &RunConfig,
     dataset: &ExpressionDataset,
@@ -849,6 +939,8 @@ pub fn run_resilient_pcit_at(
     opts.steal = cfg.steal;
     opts.steal_batch = cfg.steal_batch;
     opts.throttle = cfg.throttle;
+    opts.degrade = cfg.degrade;
+    opts.rejoin_after_ms = cfg.rejoin_after_ms;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -869,6 +961,11 @@ pub fn run_resilient_pcit_at(
         stolen_tasks: rep.stolen_tasks,
         steal_latency_secs: rep.steal_latency_secs,
         dead_ranks: rep.dead_ranks,
+        ring_reroutes: rep.ring_reroutes,
+        rejoined_ranks: rep.rejoined_ranks,
+        duplicate_results: rep.duplicate_results,
+        uncovered_pairs: rep.uncovered_pairs,
+        coverage_ratio: rep.coverage_ratio,
         transport: rep.transport,
         health: rep.health,
     })

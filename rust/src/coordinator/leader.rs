@@ -47,7 +47,7 @@
 //!   task-granular app.
 
 use super::app::{DistributedApp, Plan};
-use super::messages::{BlockData, KillAt, Message, Payload, PlacedBlock};
+use super::messages::{BlockData, DegradeMode, KillAt, Message, Payload, PlacedBlock};
 use super::transport::{endpoint_of, rank_of, Endpoint, Envelope};
 use crate::allpairs::{PairTask, RedundantAssignment};
 use crate::data::Partition;
@@ -90,6 +90,18 @@ pub struct LeaderOutcome {
     pub stolen_tasks: u64,
     /// Mean grant-to-result latency across completed steals (seconds).
     pub steal_latency_secs: f64,
+    /// Ring re-route orders issued (exact-mode recovery), cascades included.
+    pub ring_reroutes: u64,
+    /// Ranks that went dark and later rejoined the mesh.
+    pub rejoined_ranks: Vec<usize>,
+    /// Task payloads that reached the leader more than once (dropped by
+    /// first-writer-wins; parity-asserted where recovery is bitwise). Zero
+    /// on a clean rejoin — every task kept exactly one computer.
+    pub duplicate_results: u64,
+    /// Graceful degradation: block-pair tasks no surviving rank could
+    /// cover, normalized (a <= b) and ascending. Empty unless the run
+    /// exhausted its redundancy under `DegradeMode::Partial`.
+    pub uncovered_pairs: Vec<(usize, usize)>,
 }
 
 /// Leader-side inputs: the app, its placement, and precomputed per-rank
@@ -114,6 +126,14 @@ pub struct LeaderPlan<'a, 's> {
     /// Max queued tasks one steal revokes from a victim (`--steal-batch`).
     /// Only read when the plan enables stealing.
     pub steal_batch: usize,
+    /// What to do when recovery runs out of surviving hosts for a task:
+    /// abort the run (default) or complete every coverable task and report
+    /// the uncovered remainder.
+    pub degrade: DegradeMode,
+    /// Disconnect-style kills re-announce themselves after this many
+    /// milliseconds of silence (the rejoin injection flavor); `None` keeps
+    /// disconnects permanent.
+    pub rejoin_after_ms: Option<u64>,
 }
 
 /// Per-dead-rank orphan bookkeeping.
@@ -159,8 +179,35 @@ struct StealBook {
 /// phase sync and the result gather — chunks can land in any loop.
 struct Gather<'a, 's> {
     p: usize,
+    app: &'a dyn DistributedApp,
     app_name: String,
     app_recoverable: bool,
+    /// Exact-mode ring recovery enabled ([`DistributedApp::ring_recovery`]).
+    app_ring: bool,
+    /// Precomputed [`DistributedApp::ring_result_tasks`] per rank (empty
+    /// vecs for non-ring apps).
+    ring_tasks: Vec<Vec<PairTask>>,
+    /// The block partition — recovery grants materialize blocks from it.
+    part: Partition,
+    /// Blocks each rank holds (quorum placement + recovery grants); grants
+    /// are deduplicated against it so a cascade never re-ships a block.
+    holdings: Vec<BTreeSet<usize>>,
+    /// Ring re-route map: dead position → live substitute (latest wins).
+    ring_subs: BTreeMap<usize, usize>,
+    ring_reroutes: u64,
+    /// True once Proceed was broadcast — a ring death after it is a
+    /// gather-side loss (task-ledger recovery over the result tasks), not
+    /// a re-route.
+    proceeded: bool,
+    degrade: DegradeMode,
+    /// Block-pair tasks abandoned under [`DegradeMode::Partial`].
+    uncovered: BTreeSet<(usize, usize)>,
+    /// Ranks that announced a rejoin (in arrival order, deduplicated).
+    rejoined: Vec<usize>,
+    /// Rejoined-but-previously-declared-dead ranks whose prefix-flush chunk
+    /// has not landed yet; their orphan splice must wait for it.
+    awaiting_prefix: BTreeSet<usize>,
+    duplicate_results: u64,
     /// Whether duplicate recovered results must be bitwise-identical
     /// ([`DistributedApp::recovery_is_bitwise`]); approximate-recovery
     /// apps tolerate differing duplicates (first writer still wins).
@@ -211,19 +258,38 @@ struct Gather<'a, 's> {
 }
 
 impl<'a, 's> Gather<'a, 's> {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         p: usize,
-        app: &dyn DistributedApp,
+        app: &'a dyn DistributedApp,
+        part: Partition,
+        holdings: Vec<BTreeSet<usize>>,
         tasks: Vec<Vec<PairTask>>,
         known_kill: Vec<usize>,
         recovery: Option<RedundantAssignment>,
         sink: Option<&'a mut ResultSink<'s>>,
         steal: Option<StealCfg>,
+        degrade: DegradeMode,
     ) -> Self {
         Gather {
             p,
+            app,
             app_name: app.name().to_string(),
             app_recoverable: app.recoverable(),
+            app_ring: app.ring_recovery(),
+            ring_tasks: (0..p)
+                .map(|r| if app.ring_recovery() { app.ring_result_tasks(r, p) } else { Vec::new() })
+                .collect(),
+            part,
+            holdings,
+            ring_subs: BTreeMap::new(),
+            ring_reroutes: 0,
+            proceeded: false,
+            degrade,
+            uncovered: BTreeSet::new(),
+            rejoined: Vec::new(),
+            awaiting_prefix: BTreeSet::new(),
+            duplicate_results: 0,
             parity_strict: app.recovery_is_bitwise(),
             assigned: tasks,
             done: vec![BTreeSet::new(); p],
@@ -292,6 +358,10 @@ impl<'a, 's> Gather<'a, 's> {
         tasks: Vec<PairTask>,
     ) -> anyhow::Result<()> {
         if self.dead.contains_key(&rank) {
+            if self.rejoined.contains(&rank) {
+                // A re-admitted rank streams into its own orphan ledger.
+                return self.on_rejoined_chunk(ep, rank, payload, tasks);
+            }
             // Late chunk from a rank already declared dead: its tasks were
             // re-assigned the moment the death was discovered, and the
             // recovered payloads are bitwise-identical, so the duplicate
@@ -301,6 +371,7 @@ impl<'a, 's> Gather<'a, 's> {
                 "leader: dropping late result chunk from dead rank {rank} ({} tagged tasks)",
                 tasks.len()
             );
+            self.duplicate_results += tasks.len() as u64;
             return Ok(());
         }
         anyhow::ensure!(
@@ -326,14 +397,19 @@ impl<'a, 's> Gather<'a, 's> {
                     }
                     let parity_strict = self.parity_strict;
                     let book = self.stolen.get_mut(&rank).expect("checked above");
+                    let mut dup = false;
                     match book.got.entry(last) {
                         Entry::Occupied(e) => {
                             debug_assert!(thief_won);
                             assert_duplicate_parity(parity_strict, e.get(), &payload, last, rank);
+                            dup = true;
                         }
                         Entry::Vacant(slot) => {
                             slot.insert(payload);
                         }
+                    }
+                    if dup {
+                        self.duplicate_results += 1;
                     }
                     return Ok(());
                 }
@@ -375,9 +451,84 @@ impl<'a, 's> Gather<'a, 's> {
         Ok(())
     }
 
+    /// Streamed traffic from a rank that was declared dead but rejoined:
+    /// the prefix-flush chunk folds as the rank's kept prefix, and each
+    /// subsequent per-task chunk fills the orphan ledger — first writer
+    /// wins against any re-assignment that beat the cancellation.
+    fn on_rejoined_chunk(
+        &mut self,
+        ep: &Endpoint,
+        rank: usize,
+        payload: Payload,
+        tasks: Vec<PairTask>,
+    ) -> anyhow::Result<()> {
+        let orph = self.dead.get_mut(&rank).expect("caller checked");
+        if orph.finalized {
+            crate::log_warn!(
+                "leader: dropping chunk from rejoined rank {rank}: its result already finalized"
+            );
+            self.duplicate_results += tasks.len() as u64;
+            return Ok(());
+        }
+        if tasks.len() == 1 && orph.tasks.contains(&tasks[0]) {
+            let t = tasks[0];
+            let parity_strict = self.parity_strict;
+            match orph.got.entry(t) {
+                Entry::Occupied(e) => {
+                    assert_duplicate_parity(parity_strict, e.get(), &payload, t, rank);
+                    self.duplicate_results += 1;
+                }
+                Entry::Vacant(slot) => {
+                    slot.insert(payload);
+                }
+            }
+            self.done[rank].insert(t);
+            return self.try_finalize(rank);
+        }
+        // The prefix flush: a chunk whose tags are the tasks completed
+        // before going dark. Folds as the kept prefix the orphan splice
+        // leads with. A pipelined rejoiner's credit backlog flushes merged
+        // with its first post-rejoin task — that task's payload is then
+        // delivered via this fold (in original task order, since it is the
+        // first outstanding orphan), so it leaves the orphan ledger; a
+        // recovered copy that raced it is superseded.
+        self.fold(ep, rank, payload)?;
+        let orph = self.dead.get_mut(&rank).expect("caller checked");
+        let mut superseded = 0u64;
+        for t in &tasks {
+            if orph.tasks.contains(t) {
+                orph.tasks.retain(|x| x != t);
+                if orph.got.remove(t).is_some() {
+                    superseded += 1;
+                }
+            }
+        }
+        self.duplicate_results += superseded;
+        self.done[rank].extend(tasks);
+        self.awaiting_prefix.remove(&rank);
+        self.try_finalize(rank)
+    }
+
     fn on_result(&mut self, ep: &Endpoint, rank: usize, payload: Payload) -> anyhow::Result<()> {
         if self.dead.contains_key(&rank) {
+            if self.rejoined.contains(&rank) {
+                if self.awaiting_prefix.remove(&rank) {
+                    // No prefix-flush chunk preceded the closing Result (a
+                    // pipelined rejoiner streamed from the start, so its
+                    // only unlanded payload is the Result itself — the
+                    // pre-dark credit backlog, or nothing). Fold it as the
+                    // kept prefix and let the orphan splice run.
+                    self.fold(ep, rank, payload)?;
+                    let all = self.assigned[rank].clone();
+                    self.done[rank].extend(all);
+                    return self.try_finalize(rank);
+                }
+                // The prefix already landed as a chunk; the closing Result
+                // is an empty remainder (the splice runs off the ledger).
+                return Ok(());
+            }
             crate::log_warn!("leader: dropping late result from dead rank {rank}");
+            self.duplicate_results += 1;
             return Ok(());
         }
         anyhow::ensure!(
@@ -475,26 +626,59 @@ impl<'a, 's> Gather<'a, 's> {
                 );
                 return Ok(());
             }
+            let mut dup = false;
             match book.got.entry(task) {
                 Entry::Occupied(e) => {
                     assert_duplicate_parity(parity_strict, e.get(), &payload, task, for_rank);
+                    dup = true;
                 }
                 Entry::Vacant(slot) => {
                     slot.insert(payload);
                 }
             }
+            if dup {
+                self.duplicate_results += 1;
+            }
             return self.finalize_steal(for_rank);
         }
         let mut newly = false;
+        let mut dup = false;
         {
             let parity_strict = self.parity_strict;
+            let rejoined = self.rejoined.contains(&for_rank);
+            let degrade_partial = self.degrade == DegradeMode::Partial;
             let orph = self.dead.get_mut(&for_rank).expect("checked above");
-            anyhow::ensure!(
-                orph.tasks.contains(&task),
-                "leader: recovered task ({}, {}) is not an orphan of rank {for_rank}",
-                task.a,
-                task.b
-            );
+            if orph.finalized {
+                // The splice already ran (e.g. a rejoiner's own stream
+                // completed the ledger first) — a late assignee report must
+                // not re-enter the drained `got` or inflate the recovered
+                // count.
+                crate::log_warn!(
+                    "leader: dropping recovered task ({}, {}) after rank {for_rank} finalized",
+                    task.a,
+                    task.b
+                );
+                self.duplicate_results += 1;
+                return Ok(());
+            }
+            if !orph.tasks.contains(&task) {
+                // After a rejoin pruned the ledger (or a degraded run
+                // abandoned the pair), a straggling assignee's recovery can
+                // target a task that is no longer an orphan — drop it.
+                anyhow::ensure!(
+                    rejoined || degrade_partial,
+                    "leader: recovered task ({}, {}) is not an orphan of rank {for_rank}",
+                    task.a,
+                    task.b
+                );
+                crate::log_warn!(
+                    "leader: dropping recovered task ({}, {}) no longer orphaned at rank {for_rank}",
+                    task.a,
+                    task.b
+                );
+                self.duplicate_results += 1;
+                return Ok(());
+            }
             match orph.got.entry(task) {
                 Entry::Occupied(e) => {
                     // Parity assert: with bitwise recovery, any duplicate
@@ -503,12 +687,16 @@ impl<'a, 's> Gather<'a, 's> {
                     // Approximate-recovery apps (full-PCIT local panels)
                     // legitimately differ, so only the strict case asserts.
                     assert_duplicate_parity(parity_strict, e.get(), &payload, task, for_rank);
+                    dup = true;
                 }
                 Entry::Vacant(v) => {
                     v.insert(payload);
                     newly = true;
                 }
             }
+        }
+        if dup {
+            self.duplicate_results += 1;
         }
         if newly {
             self.recovered_tasks += 1;
@@ -523,6 +711,11 @@ impl<'a, 's> Gather<'a, 's> {
     /// streamed prefix was already handed over on arrival, so only the
     /// recovered payloads flow out here (still in original task order).
     fn try_finalize(&mut self, d: usize) -> anyhow::Result<()> {
+        if self.awaiting_prefix.contains(&d) {
+            // A rejoined rank's pre-dark prefix is still in flight; the
+            // splice must lead with it.
+            return Ok(());
+        }
         let Some(orph) = self.dead.get_mut(&d) else { return Ok(()) };
         if orph.finalized || !orph.tasks.iter().all(|t| orph.got.contains_key(t)) {
             return Ok(());
@@ -736,11 +929,19 @@ impl<'a, 's> Gather<'a, 's> {
         for s in self.phases_left.values_mut() {
             s.remove(&d);
         }
-        let own: Vec<PairTask> = self.assigned[d]
-            .iter()
-            .filter(|t| !self.done[d].contains(*t))
-            .copied()
-            .collect();
+        let own: Vec<PairTask> = if self.app_ring {
+            // Exact-mode gather-side death: the victim finished its ring
+            // scan but its result never landed. The orphans are its result
+            // tasks (ring-order edge blocks), replayed from rebuilt rows by
+            // the assignee.
+            if self.result_done[d] { Vec::new() } else { self.ring_tasks[d].clone() }
+        } else {
+            self.assigned[d]
+                .iter()
+                .filter(|t| !self.done[d].contains(*t))
+                .copied()
+                .collect()
+        };
         // A steal victim dying carries its book over: payloads already
         // recovered (thief results, diverted victim chunks) seed the orphan
         // ledger, and tasks still granted to a *live* thief need no fresh
@@ -790,14 +991,21 @@ impl<'a, 's> Gather<'a, 's> {
         // then smallest rank — deterministic), batching sends per
         // (assignee, original rank).
         let mut batches: BTreeMap<(usize, usize), Vec<PairTask>> = BTreeMap::new();
-        let orphans = assign_own.into_iter().map(|t| (d, t)).chain(redelegate);
+        let mut touched: BTreeSet<usize> = BTreeSet::new();
+        let orphans: Vec<(usize, PairTask)> =
+            assign_own.into_iter().map(|t| (d, t)).chain(redelegate).collect();
         for (orig, t) in orphans {
-            let owners: Vec<usize> = self
-                .recovery
-                .as_ref()
-                .expect("on_death is only called with a recovery plan")
-                .owners(t.a, t.b)
-                .to_vec();
+            let owners: Vec<usize> = if self.app_ring {
+                // Ring replay rebuilds both rows from granted raw blocks, so
+                // any survivor qualifies — no quorum-placement constraint.
+                (0..self.p).collect()
+            } else {
+                self.recovery
+                    .as_ref()
+                    .expect("on_death is only called with a recovery plan")
+                    .owners(t.a, t.b)
+                    .to_vec()
+            };
             let assignee = owners
                 .into_iter()
                 .filter(|&c| {
@@ -807,6 +1015,21 @@ impl<'a, 's> Gather<'a, 's> {
                 })
                 .min_by_key(|&c| (self.reassign_load[c], c));
             let Some(c) = assignee else {
+                if self.degrade == DegradeMode::Partial {
+                    // Graceful degradation: record the pair as uncovered,
+                    // drop it from the orphan ledger, and keep the run alive.
+                    crate::log_warn!(
+                        "leader: no surviving host for pair ({}, {}); degrading to partial coverage",
+                        t.a,
+                        t.b
+                    );
+                    self.uncovered.insert((t.a.min(t.b), t.a.max(t.b)));
+                    if let Some(o) = self.dead.get_mut(&orig) {
+                        o.tasks.retain(|x| x != &t);
+                    }
+                    touched.insert(orig);
+                    continue;
+                }
                 anyhow::bail!(
                     "insufficient redundancy: pair ({}, {}) died with rank {orig} and has no surviving host (dead: {:?})",
                     t.a,
@@ -815,6 +1038,9 @@ impl<'a, 's> Gather<'a, 's> {
                 );
             };
             self.reassign_load[c] += 1;
+            if self.app_ring {
+                self.grant_blocks(ep, c);
+            }
             self.delegated.entry(c).or_default().push((orig, t));
             batches.entry((c, orig)).or_default().push(t);
         }
@@ -829,9 +1055,225 @@ impl<'a, 's> Gather<'a, 's> {
                 );
             }
         }
+        // Degrade-partial may have pruned orphan ledgers other than `d`'s —
+        // finalize any that just emptied out.
+        for orig in touched {
+            self.try_finalize(orig)?;
+        }
         // No orphans at all (everything was streamed before the death):
         // promote the partial straight to a final result.
         self.try_finalize(d)
+    }
+
+    /// Grant rank `c` every partition block it does not already hold
+    /// (quorum placement + earlier grants), so it can rebuild arbitrary
+    /// panel rows for ring substitution or ring-task replay. Grants are
+    /// `first: false` — a recovery copy never re-counts a block's one-time
+    /// accounting.
+    fn grant_blocks(&mut self, ep: &Endpoint, c: usize) {
+        let missing: Vec<usize> =
+            (0..self.p).filter(|b| !self.holdings[c].contains(b)).collect();
+        for b in missing {
+            let r = self.part.range(b);
+            let data = Arc::new(self.app.make_block(r.clone()));
+            let pb = PlacedBlock { block: b, offset: r.start, data, first: false };
+            if ep.send(endpoint_of(c), Message::AssignBlock(pb)).is_err() {
+                crate::log_warn!(
+                    "leader: block grant to rank {c} failed; awaiting its death discovery"
+                );
+                return;
+            }
+            self.holdings[c].insert(b);
+        }
+    }
+
+    /// Re-ship every block rank `v` is supposed to hold (its quorum
+    /// placement plus any earlier recovery grants). A streamed scatter
+    /// abandons a dying rank's block queue mid-stream, so a rejoiner can
+    /// come back with holes in its residency and would otherwise wait in
+    /// `ensure_blocks` forever. Duplicate deliveries are idempotent at
+    /// the worker, and `first: false` never re-counts a block's one-time
+    /// accounting.
+    fn reship_blocks(&mut self, ep: &Endpoint, v: usize) {
+        let held: Vec<usize> = self.holdings[v].iter().copied().collect();
+        for b in held {
+            let r = self.part.range(b);
+            let data = Arc::new(self.app.make_block(r.clone()));
+            let pb = PlacedBlock { block: b, offset: r.start, data, first: false };
+            if ep.send(endpoint_of(v), Message::AssignBlock(pb)).is_err() {
+                crate::log_warn!(
+                    "leader: block re-ship to rejoined rank {v} failed; awaiting its death discovery"
+                );
+                return;
+            }
+        }
+    }
+
+    /// Broadcast a ring re-route order for dead position `d`: pick a live
+    /// substitute (prefer ranks already holding block `d`, then least
+    /// recovery load, then smallest rank — deterministic), grant it the
+    /// full block set, and tell every live rank the new successor map.
+    /// AssignBlock strictly precedes RingReroute on the pair (per-pair
+    /// FIFO), so the substitute's grants are resident before it replays
+    /// the victim's phase-1 tile production.
+    fn issue_ring_order(&mut self, ep: &Endpoint, d: usize) -> anyhow::Result<()> {
+        let sub = (0..self.p)
+            .filter(|&c| {
+                !self.dead.contains_key(&c)
+                    && !self.known_kill.contains(&c)
+                    && !ep.transport().is_killed(endpoint_of(c))
+            })
+            .min_by_key(|&c| (!self.holdings[c].contains(&d), self.reassign_load[c], c));
+        let Some(sub) = sub else {
+            anyhow::bail!(
+                "insufficient redundancy: no surviving substitute for ring position {d} (dead: {:?})",
+                self.dead.keys().collect::<Vec<_>>()
+            );
+        };
+        self.reassign_load[sub] += 1;
+        self.grant_blocks(ep, sub);
+        self.ring_subs.insert(d, sub);
+        self.ring_reroutes += 1;
+        let tasks = self.assigned[d].clone();
+        crate::log_warn!(
+            "leader: ring position {d} re-routed to substitute rank {sub} ({} phase-1 task(s) to replay)",
+            tasks.len()
+        );
+        // Doomed-but-alive ranks still get the order: they route ring
+        // traffic until their own kill fires.
+        for w in 0..self.p {
+            if w == d || self.dead.contains_key(&w) || ep.transport().is_killed(endpoint_of(w))
+            {
+                continue;
+            }
+            let msg = Message::RingReroute { dead: d, substitute: sub, tasks: tasks.clone() };
+            if let Err(e) = ep.send(endpoint_of(w), msg) {
+                crate::log_warn!(
+                    "leader: RingReroute to rank {w} failed ({e}); awaiting its death discovery"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// A rank died while the exact-mode ring (or its phase-1 feed) was
+    /// still running: re-route the ring instead of reassigning tasks. The
+    /// substitute replays the victim's phase-1 tiles, rebuilds its panel
+    /// row, walks its ring position, and reports the victim's result
+    /// tasks as [`Message::RecoveredResult`]s — spliced here through the
+    /// same orphan ledger as task-granular recovery, in the victim's
+    /// original elimination order.
+    fn on_ring_death(&mut self, d: usize, ep: &Endpoint) -> anyhow::Result<()> {
+        self.need_result.remove(&d);
+        self.need_stats.remove(&d);
+        for s in self.phases_left.values_mut() {
+            s.remove(&d);
+        }
+        self.dead.insert(
+            d,
+            Orphans { tasks: self.ring_tasks[d].clone(), got: BTreeMap::new(), finalized: false },
+        );
+        self.issue_ring_order(ep, d)?;
+        // Cascade: positions whose substitute just died need a fresh order
+        // (the new substitute rebuilds from scratch; any results the old
+        // one already delivered stay in the ledger, first writer wins).
+        let reissue: Vec<usize> =
+            self.ring_subs.iter().filter(|&(_, &s)| s == d).map(|(&q, _)| q).collect();
+        for q in reissue {
+            crate::log_warn!("leader: substitute for ring position {q} died; re-routing again");
+            self.issue_ring_order(ep, q)?;
+        }
+        Ok(())
+    }
+
+    /// A dark rank came back ([`Message::Rejoin`]): revive its transport
+    /// peer, record the re-admission, and reconcile its resume cursor
+    /// (`done` — the tasks it completed before going dark) against
+    /// whatever recovery got under way while it was out.
+    fn on_rejoin(&mut self, ep: &Endpoint, v: usize, done: Vec<PairTask>) -> anyhow::Result<()> {
+        ep.transport().revive(endpoint_of(v));
+        if !self.rejoined.contains(&v) {
+            self.rejoined.push(v);
+        }
+        crate::log_warn!("leader: rank {v} rejoined with {} completed task(s)", done.len());
+        // Close any residency holes first (per-pair FIFO puts these ahead
+        // of every Revoke below): a streamed scatter dropped the rest of
+        // the rank's block queue when it went dark, and even a fully
+        // superseded rejoiner pumps `ensure_blocks` before it can observe
+        // the revocation of the task it is about to start.
+        self.reship_blocks(ep, v);
+        if !self.dead.contains_key(&v) {
+            // The dark window was shorter than the failure detector:
+            // nothing was re-assigned, the rank just keeps going (its
+            // result switches to per-task streaming, which the live chunk
+            // path absorbs transparently).
+            return Ok(());
+        }
+        // Its Stats report is welcome again either way.
+        self.need_stats.insert(v);
+        if self.dead[&v].finalized {
+            // Every orphan already recovered and spliced — the rejoiner's
+            // entire stream is superseded. Revoke what it still plans to
+            // compute so it idles into its (dropped) closing Result.
+            let not_done: Vec<PairTask> =
+                self.assigned[v].iter().filter(|t| !done.contains(t)).copied().collect();
+            if !not_done.is_empty() {
+                let _ = ep.send(endpoint_of(v), Message::Revoke { tasks: not_done });
+            }
+            return Ok(());
+        }
+        // Prune the resume cursor from the orphan ledger: those payloads
+        // ride the rejoiner's prefix-flush chunk, so a recovered copy that
+        // already landed is superseded (and counted as a duplicate).
+        let orph = self.dead.get_mut(&v).expect("checked above");
+        let mut superseded = 0u64;
+        let old_tasks = std::mem::take(&mut orph.tasks);
+        for t in old_tasks {
+            if done.contains(&t) {
+                if orph.got.remove(&t).is_some() {
+                    superseded += 1;
+                }
+            } else {
+                orph.tasks.push(t);
+            }
+        }
+        // Remaining orphans split: already-recovered ones are revoked at
+        // the rejoiner (first writer won — cancel the duplicate compute);
+        // the rest cancel their in-flight re-assignment and come back
+        // through the rejoiner's own per-task chunks.
+        let got_covered: Vec<PairTask> =
+            orph.tasks.iter().filter(|t| orph.got.contains_key(t)).copied().collect();
+        self.duplicate_results += superseded;
+        let mut cancels: BTreeMap<usize, Vec<PairTask>> = BTreeMap::new();
+        for (&assignee, vlist) in self.delegated.iter_mut() {
+            let mut taken = Vec::new();
+            vlist.retain(|&(o, t)| {
+                if o == v && !got_covered.contains(&t) {
+                    taken.push(t);
+                    false
+                } else {
+                    true
+                }
+            });
+            if !taken.is_empty() {
+                cancels.entry(assignee).or_default().extend(taken);
+            }
+        }
+        if !got_covered.is_empty() {
+            let _ = ep.send(endpoint_of(v), Message::Revoke { tasks: got_covered });
+        }
+        for (assignee, tasks) in cancels {
+            crate::log_info!(
+                "leader: cancelling {} in-flight reassignment(s) at rank {assignee} — rank {v} resumes them itself",
+                tasks.len()
+            );
+            let _ = ep.send(endpoint_of(assignee), Message::Revoke { tasks });
+        }
+        self.done[v].extend(done);
+        // The splice must lead with the prefix-flush chunk; hold the
+        // finalize until it lands (it is always sent, even when empty).
+        self.awaiting_prefix.insert(v);
+        Ok(())
     }
 
     /// Ranks the leader currently awaits something from (results, stats,
@@ -870,6 +1312,21 @@ impl<'a, 's> Gather<'a, 's> {
                 abort(ep, self.p);
                 anyhow::bail!("rank {d} crashed before {context}; aborting the run");
             }
+            if self.app_ring {
+                // Exact mode: a pre-barrier death re-routes the ring; a
+                // post-Proceed one is a gather-side loss replayed through
+                // the task ledger (both splice bitwise).
+                let r = if self.proceeded {
+                    self.on_death(d, ep)
+                } else {
+                    self.on_ring_death(d, ep)
+                };
+                if let Err(e) = r {
+                    abort(ep, self.p);
+                    return Err(e);
+                }
+                continue;
+            }
             if !self.app_recoverable {
                 abort(ep, self.p);
                 anyhow::bail!(
@@ -902,6 +1359,10 @@ impl<'a, 's> Gather<'a, 's> {
             Message::TasksDone { tasks } => self.on_tasks_done(rank, tasks)?,
             Message::Stats(s) => self.on_stats(rank, s)?,
             Message::PhaseDone { phase } => self.on_phase_done(rank, phase)?,
+            Message::Rejoin { rank: announced, done } => {
+                debug_assert_eq!(announced, rank, "rejoin announcement must match its sender");
+                self.on_rejoin(ep, rank, done)?
+            }
             other => {
                 abort(ep, self.p);
                 anyhow::bail!("leader: unexpected {} at the leader", other.kind());
@@ -967,8 +1428,13 @@ pub fn leader_main(
 ) -> anyhow::Result<LeaderOutcome> {
     let p = plan.p;
     let part = Partition::new(plan.n, p);
-    let LeaderPlan { app, quorum, tasks, kill, recovery, sink, steal_batch } = lp;
+    let LeaderPlan { app, quorum, tasks, kill, recovery, sink, steal_batch, degrade, rejoin_after_ms } =
+        lp;
     let doomed: Vec<usize> = kill.iter().map(|&(k, _)| k).collect();
+    // Blocks each rank holds under the quorum placement — the baseline the
+    // recovery grant dedup starts from.
+    let holdings: Vec<BTreeSet<usize>> =
+        (0..p).map(|w| quorum.quorum(w).into_iter().collect()).collect();
     // Work stealing: precompute the full residency map — every rank whose
     // quorum hosts both of a pair's blocks can execute that pair's task
     // with zero extra scatter traffic (broader than the r-fold recovery
@@ -982,7 +1448,18 @@ pub fn leader_main(
         }
         StealCfg { batch: steal_batch, hosts }
     });
-    let mut g = Gather::new(p, app, tasks.clone(), doomed.clone(), recovery, sink, steal_cfg);
+    let mut g = Gather::new(
+        p,
+        app,
+        Partition::new(plan.n, p),
+        holdings,
+        tasks.clone(),
+        doomed.clone(),
+        recovery,
+        sink,
+        steal_cfg,
+        degrade,
+    );
 
     // Materialize each distinct block exactly once, Arc-shared across its
     // replica owners. Exactly one *delivered* send per block carries the
@@ -1006,7 +1483,7 @@ pub fn leader_main(
         // before any task can start, so injection semantics cannot depend
         // on the scatter mode. A scatter-phase death then strikes while
         // the blocks are still in flight.
-        inject_kills(ep, &kill);
+        inject_kills(ep, &kill, rejoin_after_ms);
         for w in 0..p {
             let msg = Message::TasksAhead { quorum: quorum.quorum(w), tasks: tasks[w].clone() };
             if let Err(e) = ep.send(endpoint_of(w), msg) {
@@ -1094,7 +1571,7 @@ pub fn leader_main(
             ep.send(endpoint_of(w), Message::AssignData { quorum: q, blocks })
                 .map_err(|e| anyhow::anyhow!("scatter to rank {w}: {e}"))?;
         }
-        inject_kills(ep, &kill);
+        inject_kills(ep, &kill, rejoin_after_ms);
         for (w, tasks) in tasks.into_iter().enumerate() {
             // A scatter-killed rank may already be dead; that expected
             // failure is deliberately ignored (the injection send itself
@@ -1112,6 +1589,9 @@ pub fn leader_main(
             let _ = ep.send(endpoint_of(w), Message::Proceed);
         }
     }
+    // Any ring death past this point is a gather-side loss (the ring will
+    // finish without the victim's result), not a re-route.
+    g.proceeded = true;
 
     // ---- Gather results + stats; serve recovery + steals to the end. ----
     while !g.need_result.is_empty()
@@ -1139,15 +1619,25 @@ pub fn leader_main(
         } else {
             0.0
         },
+        ring_reroutes: g.ring_reroutes,
+        rejoined_ranks: g.rejoined,
+        duplicate_results: g.duplicate_results,
+        uncovered_pairs: g.uncovered.into_iter().collect(),
     })
 }
 
 /// Deliver the failure injections. The engine validates the kill list (in
 /// range, no duplicate targets), so an injection send can only fail if the
 /// target somehow died first — a bug worth surfacing, not swallowing.
-fn inject_kills(ep: &Endpoint, kill: &[(usize, KillAt)]) {
+fn inject_kills(ep: &Endpoint, kill: &[(usize, KillAt)], rejoin_after_ms: Option<u64>) {
     for &(k, at) in kill {
-        if let Err(e) = ep.send(endpoint_of(k), Message::Crash { at }) {
+        // The rejoin flavor only composes with disconnects — the other
+        // kills tear the worker down for good.
+        let rejoin = match at {
+            KillAt::Disconnect { .. } => rejoin_after_ms,
+            _ => None,
+        };
+        if let Err(e) = ep.send(endpoint_of(k), Message::Crash { at, rejoin_after_ms: rejoin }) {
             crate::log_warn!("leader: failure injection for rank {k} failed: {e}");
             debug_assert!(false, "failure injection for rank {k} failed: {e}");
         }

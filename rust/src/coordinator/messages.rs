@@ -144,6 +144,38 @@ impl KillAt {
     }
 }
 
+/// What the leader does when deaths exhaust r-fold redundancy and some
+/// pair has no surviving host (`--degrade`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradeMode {
+    /// Hard-abort the run with an "insufficient redundancy" error — the
+    /// pre-degradation behavior, and the default.
+    Abort,
+    /// Complete every coverable task and report the uncoverable pairs in
+    /// an explicit `uncovered_pairs` manifest (with a coverage ratio)
+    /// instead of erroring — a resident service serves a degraded answer
+    /// rather than nothing.
+    Partial,
+}
+
+impl DegradeMode {
+    /// Parse `abort | partial`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "abort" => Some(DegradeMode::Abort),
+            "partial" => Some(DegradeMode::Partial),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DegradeMode::Abort => "abort",
+            DegradeMode::Partial => "partial",
+        }
+    }
+}
+
 /// App-level traffic: worker ↔ worker exchange and worker → leader results.
 #[derive(Debug)]
 pub enum Payload {
@@ -336,6 +368,24 @@ pub enum Message {
     /// revoke, and the leader's first-writer-wins parity assert keeps the
     /// duplicate bitwise-identical.
     Revoke { tasks: Vec<PairTask> },
+    /// Leader → every surviving worker: exact-mode ring recovery. Rank
+    /// `dead` died before the barrier; `substitute` plays its ring
+    /// position. All ranks fold the (dead → substitute) mapping into their
+    /// successor map; the substitute additionally recomputes the dead
+    /// rank's phase-1 `tasks` (routing tiles to the surviving row homes,
+    /// which dedupe re-deliveries) and rebuilds the dead rank's row block
+    /// from re-granted input blocks so it can inject the rows at the
+    /// correct rotation steps. Broadcast strictly before `Proceed`, so
+    /// per-pair FIFO guarantees every rank knows the final topology when
+    /// the ring starts.
+    RingReroute { dead: usize, substitute: usize, tasks: Vec<PairTask> },
+    /// Worker → leader: a rank the failure detector declared dead is back
+    /// (`--rejoin-after-ms`). `done` is the resume cursor — the tasks the
+    /// rank had completed before going dark, in assignment order. The
+    /// leader re-admits the rank, revokes the in-flight reassignment of
+    /// the overlap, and expects the remainder from the rejoiner as tagged
+    /// per-task chunks.
+    Rejoin { rank: usize, done: Vec<PairTask> },
     /// Worker → leader: per-rank stats at completion.
     Stats(crate::coordinator::driver::RankStats),
     /// Leader → worker: phase barrier release.
@@ -346,8 +396,12 @@ pub enum Message {
     Shutdown,
     /// Failure injection: `at` says when the receiving worker dies
     /// (simulating a crashed rank). It always marks itself killed on the
-    /// transport so the leader can detect the loss.
-    Crash { at: KillAt },
+    /// transport so the leader can detect the loss. When
+    /// `rejoin_after_ms` is set (only meaningful with the `disconnect`
+    /// flavor), the dark rank revives its transport after that many
+    /// milliseconds and sends [`Message::Rejoin`] — the transient-failure
+    /// injection.
+    Crash { at: KillAt, rejoin_after_ms: Option<u64> },
 }
 
 impl Message {
@@ -365,6 +419,8 @@ impl Message {
             Message::App(p) | Message::Result(p) => p.nbytes(),
             Message::ResultChunk { payload, tasks } => payload.nbytes() + (tasks.len() * 16) as u64,
             Message::Reassign { tasks, .. } => (tasks.len() * 16) as u64,
+            Message::RingReroute { tasks, .. } => 16 + (tasks.len() * 16) as u64,
+            Message::Rejoin { done, .. } => 8 + (done.len() * 16) as u64,
             Message::RecoveredResult { payload, .. } => 16 + payload.nbytes(),
             Message::TasksDone { tasks } | Message::Revoke { tasks } => (tasks.len() * 16) as u64,
             Message::Stats(_) => 128,
@@ -386,6 +442,8 @@ impl Message {
             Message::Result(_) => "result",
             Message::ResultChunk { .. } => "result-chunk",
             Message::Reassign { .. } => "reassign",
+            Message::RingReroute { .. } => "ring-reroute",
+            Message::Rejoin { .. } => "rejoin",
             Message::RecoveredResult { .. } => "recovered-result",
             Message::TasksDone { .. } => "tasks-done",
             Message::Revoke { .. } => "revoke",
@@ -470,7 +528,15 @@ mod tests {
         assert_eq!(Message::Shutdown.kind(), "shutdown");
         assert_eq!(Message::App(Payload::Edges(vec![])).kind(), "edges");
         assert_eq!(Message::Result(Payload::Tiles(vec![])).kind(), "result");
-        assert_eq!(Message::Crash { at: KillAt::Scatter }.kind(), "crash");
+        assert_eq!(
+            Message::Crash { at: KillAt::Scatter, rejoin_after_ms: None }.kind(),
+            "crash"
+        );
+        assert_eq!(
+            Message::RingReroute { dead: 4, substitute: 2, tasks: vec![] }.kind(),
+            "ring-reroute"
+        );
+        assert_eq!(Message::Rejoin { rank: 4, done: vec![] }.kind(), "rejoin");
         assert_eq!(
             Message::Reassign { for_rank: 2, tasks: vec![PairTask { a: 0, b: 1 }] }.kind(),
             "reassign"
@@ -552,6 +618,14 @@ mod tests {
         assert_eq!(KillAt::Gather.compute_trigger(), None);
         assert_eq!(KillAt::Compute { tasks: 2 }.compute_trigger(), Some(2));
         assert_eq!(KillAt::Disconnect { tasks: 2 }.compute_trigger(), Some(2));
+    }
+
+    #[test]
+    fn degrade_mode_parses() {
+        assert_eq!(DegradeMode::parse("abort"), Some(DegradeMode::Abort));
+        assert_eq!(DegradeMode::parse("partial"), Some(DegradeMode::Partial));
+        assert_eq!(DegradeMode::parse("bogus"), None);
+        assert_eq!(DegradeMode::parse(DegradeMode::Partial.name()), Some(DegradeMode::Partial));
     }
 
     #[test]

@@ -82,7 +82,7 @@ pub use driver::{
     RankStats,
 };
 pub use leader::ResultSink;
-pub use messages::{BlockData, KillAt, Message, Payload, PlacedBlock};
+pub use messages::{BlockData, DegradeMode, KillAt, Message, Payload, PlacedBlock};
 pub use tcp::HeartbeatConfig;
 pub use transport::{
     endpoint_of, rank_of, DeadRankDetection, Endpoint, Transport, TransportHealth, TransportKind,

@@ -17,7 +17,8 @@
 //! a death: `socket-closed`), plus one **heartbeat thread** (a
 //! [`Frame::Heartbeat`] on every connection each interval) and one
 //! **monitor thread** (a peer silent for longer than the timeout is
-//! declared dead: `heartbeat-timeout`, and its connection is shut down).
+//! declared dead: `heartbeat-timeout`; the silent connection is left
+//! open so the peer can still announce a rejoin over it later).
 //! Any arriving frame counts as liveness, so a busy peer that is pushing
 //! data but too backed up to heartbeat is never falsely declared dead.
 //! Detection simply raises the same per-rank killed flag the in-memory
@@ -28,7 +29,15 @@
 //! heartbeat thread but leaves every socket open and silent, so peers get
 //! no EOF and must discover the death via heartbeat timeout — the
 //! production failure mode of a hung host, as opposed to a crashed
-//! process whose kernel at least closes its sockets.
+//! process whose kernel at least closes its sockets. Because both sides
+//! of a silent partition keep their sockets open (the victim on purpose,
+//! the detector because timeout detection never closes anything), the
+//! victim can later **rejoin** over the very same connections:
+//! [`TcpBackend::revive_local`] lifts the darkness and restarts the
+//! heartbeat beacon, and the leader's [`TcpBackend::revive_peer`] forgets
+//! the recorded death. Only this silent-partition flavor is rejoinable —
+//! a hard socket break (process crash, `kill`) still requires a fresh
+//! worker launch.
 
 use super::transport::{rank_of, DeadRankDetection, Endpoint, Envelope, Transport, TransportHealth};
 use super::wire::{self, Frame};
@@ -214,6 +223,38 @@ impl TcpBackend {
         WENT_DARK.store(true, Ordering::SeqCst);
     }
 
+    /// Peer-side half of a rejoin: forget a recorded death so traffic to
+    /// the rank flows again. The liveness stamp is refreshed **before**
+    /// the killed flag clears — the other order lets the monitor re-declare
+    /// the death off the stale last-seen value in its very next poll.
+    pub(super) fn revive_peer(&self, endpoint: usize) {
+        self.shared.touch(endpoint);
+        self.shared.killed[endpoint].store(false, Ordering::SeqCst);
+    }
+
+    /// Victim-side half of a rejoin: leave injected darkness. The sockets
+    /// were never closed (that is the point of the disconnect flavor), so
+    /// coming back means refreshing every peer's liveness stamp, lowering
+    /// the dark flag, and restarting the heartbeat beacon (its thread
+    /// exited when the flag went up). The monitor thread stays down on
+    /// purpose: peers that already declared this rank dead stopped
+    /// heartbeating it, and a restarted monitor would promptly mis-declare
+    /// *them* dead in return; socket EOF still catches real peer deaths.
+    pub(super) fn revive_local(&self) {
+        for c in self.shared.conns.iter().flatten() {
+            self.shared.touch(c.peer);
+        }
+        self.shared.dark.store(false, Ordering::SeqCst);
+        WENT_DARK.store(false, Ordering::SeqCst);
+        thread::Builder::new()
+            .name(format!("quorall-tcp-hb-{}", self.shared.local))
+            .spawn({
+                let shared = Arc::clone(&self.shared);
+                move || heartbeat_loop(shared)
+            })
+            .expect("respawn heartbeat thread");
+    }
+
     pub(super) fn health(&self, n: usize) -> TransportHealth {
         let s = &self.shared;
         let now = s.now_ns();
@@ -320,8 +361,11 @@ fn monitor_loop(shared: Arc<Shared>) {
                 continue;
             }
             if now.saturating_sub(shared.last_seen[c.peer].load(Ordering::Relaxed)) > timeout_ns {
+                // Leave the silent socket open: a dark peer that comes back
+                // (`--rejoin-after-ms`) announces itself over this very
+                // connection, and closing it would convert the recoverable
+                // silent partition into a permanent death.
                 shared.mark_dead(c.peer, "heartbeat-timeout");
-                c.shutdown();
             }
         }
     }
@@ -745,6 +789,31 @@ mod tests {
         );
         // Peers time the victim out too, independently of the leader.
         assert!(wait_until(Duration::from_secs(5), || cl[2].0.is_killed(1)));
+    }
+
+    #[test]
+    fn dark_endpoint_revives_over_the_same_sockets() {
+        let hb = HeartbeatConfig { interval_ms: 10, timeout_ms: 150 };
+        let cl = cluster(2, hb);
+        cl[1].1.go_dark();
+        assert!(
+            wait_until(Duration::from_secs(5), || cl[0].0.is_killed(1)),
+            "leader never timed out the dark endpoint"
+        );
+        // The victim comes back, then the leader forgets the death.
+        // Messages flow both ways over the never-closed sockets.
+        cl[1].1.revive_from_dark();
+        cl[0].0.revive(1);
+        assert!(!cl[0].0.is_killed(1));
+        cl[1].1.send(0, Message::Rejoin { rank: 0, done: Vec::new() }).unwrap();
+        assert_eq!(cl[0].1.recv().unwrap().msg.kind(), "rejoin");
+        cl[0].1.send(1, Message::Proceed).unwrap();
+        assert_eq!(cl[1].1.recv().unwrap().msg.kind(), "proceed");
+        // The restarted heartbeat beacon keeps the rank alive: no second
+        // timeout detection after well over the configured timeout.
+        thread::sleep(Duration::from_millis(400));
+        assert!(!cl[0].0.is_killed(1), "revived rank was re-declared dead");
+        assert_eq!(cl[0].0.health().detections.len(), 1);
     }
 
     #[test]

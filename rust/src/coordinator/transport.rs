@@ -283,6 +283,19 @@ impl Transport {
         self.killed[rank].load(Ordering::SeqCst)
     }
 
+    /// Forget a recorded death: the rank announced a rejoin and traffic to
+    /// it may flow again. On TCP the peer's liveness stamp is refreshed
+    /// before the killed flag clears, so the monitor does not instantly
+    /// re-declare the stale death; the memory backend just lowers the
+    /// shared kill flag. Only meaningful for the silent `disconnect` kill
+    /// flavor — a broken socket stays broken.
+    pub fn revive(&self, rank: usize) {
+        match &self.backend {
+            Backend::Memory { .. } => self.killed[rank].store(false, Ordering::SeqCst),
+            Backend::Tcp(t) => t.revive_peer(rank),
+        }
+    }
+
     /// Messages sent by `from`, queued at `to`, not yet dequeued by it.
     pub fn in_flight(&self, from: usize, to: usize) -> u64 {
         self.in_flight[from][to].load(Ordering::Relaxed)
@@ -525,6 +538,20 @@ impl Endpoint {
         }
     }
 
+    /// Come back from [`Endpoint::go_dark`] — the `--rejoin-after-ms`
+    /// injection flavor. Clears the local kill flag; on TCP it also lifts
+    /// the darkness and restarts the heartbeat beacon over the sockets the
+    /// disconnect deliberately left open. The caller is responsible for
+    /// announcing itself to the leader with a `Rejoin` message afterwards
+    /// (peers only forget the death when the leader tells its transport
+    /// to [`Transport::revive`] this rank).
+    pub fn revive_from_dark(&self) {
+        self.transport.killed[self.rank].store(false, Ordering::SeqCst);
+        if let Backend::Tcp(t) = &self.transport.backend {
+            t.revive_local();
+        }
+    }
+
     /// (messages, bytes) received by this rank so far.
     pub fn received(&self) -> (u64, u64) {
         self.transport.recv_stats[self.rank].snapshot()
@@ -631,6 +658,21 @@ mod tests {
         eps[1].go_dark();
         assert!(t.is_killed(1));
         assert_eq!(eps[0].send(1, Message::Proceed).unwrap_err(), SendError::Killed(1));
+    }
+
+    #[test]
+    fn memory_revive_after_dark_restores_delivery() {
+        let (t, eps) = Transport::new(3);
+        eps[1].go_dark();
+        assert!(t.is_killed(1));
+        eps[1].revive_from_dark();
+        t.revive(1);
+        assert!(!t.is_killed(1));
+        eps[0].send(1, Message::Proceed).unwrap();
+        assert_eq!(eps[1].recv().unwrap().msg.kind(), "proceed");
+        // A later (real) death is still recorded as fresh.
+        t.kill(1);
+        assert!(t.is_killed(1));
     }
 
     #[test]

@@ -466,9 +466,16 @@ pub fn encode_message(msg: &Message) -> Vec<u8> {
             put_u8(&mut out, *phase);
         }
         Message::Shutdown => put_u8(&mut out, 12),
-        Message::Crash { at } => {
+        Message::Crash { at, rejoin_after_ms } => {
             put_u8(&mut out, 13);
             put_kill_at(&mut out, at);
+            match rejoin_after_ms {
+                Some(ms) => {
+                    put_bool(&mut out, true);
+                    put_u64(&mut out, *ms);
+                }
+                None => put_bool(&mut out, false),
+            }
         }
         Message::TasksDone { tasks } => {
             put_u8(&mut out, 14);
@@ -477,6 +484,17 @@ pub fn encode_message(msg: &Message) -> Vec<u8> {
         Message::Revoke { tasks } => {
             put_u8(&mut out, 15);
             put_tasks(&mut out, tasks);
+        }
+        Message::RingReroute { dead, substitute, tasks } => {
+            put_u8(&mut out, 16);
+            put_usize(&mut out, *dead);
+            put_usize(&mut out, *substitute);
+            put_tasks(&mut out, tasks);
+        }
+        Message::Rejoin { rank, done } => {
+            put_u8(&mut out, 17);
+            put_usize(&mut out, *rank);
+            put_tasks(&mut out, done);
         }
     }
     out
@@ -514,9 +532,19 @@ fn take_message(r: &mut Reader<'_>) -> anyhow::Result<Message> {
         10 => Message::Proceed,
         11 => Message::PhaseDone { phase: r.take_u8()? },
         12 => Message::Shutdown,
-        13 => Message::Crash { at: take_kill_at(r)? },
+        13 => {
+            let at = take_kill_at(r)?;
+            let rejoin_after_ms = if r.take_bool()? { Some(r.take_u64()?) } else { None };
+            Message::Crash { at, rejoin_after_ms }
+        }
         14 => Message::TasksDone { tasks: take_tasks(r)? },
         15 => Message::Revoke { tasks: take_tasks(r)? },
+        16 => Message::RingReroute {
+            dead: r.take_usize()?,
+            substitute: r.take_usize()?,
+            tasks: take_tasks(r)?,
+        },
+        17 => Message::Rejoin { rank: r.take_usize()?, done: take_tasks(r)? },
         t => anyhow::bail!("wire: unknown message tag {t}"),
     })
 }
@@ -840,10 +868,13 @@ mod tests {
             Message::Proceed,
             Message::PhaseDone { phase: 2 },
             Message::Shutdown,
-            Message::Crash { at: KillAt::Scatter },
-            Message::Crash { at: KillAt::Compute { tasks: 3 } },
-            Message::Crash { at: KillAt::Gather },
-            Message::Crash { at: KillAt::Disconnect { tasks: 2 } },
+            Message::Crash { at: KillAt::Scatter, rejoin_after_ms: None },
+            Message::Crash { at: KillAt::Compute { tasks: 3 }, rejoin_after_ms: None },
+            Message::Crash { at: KillAt::Gather, rejoin_after_ms: None },
+            Message::Crash { at: KillAt::Disconnect { tasks: 2 }, rejoin_after_ms: None },
+            Message::Crash { at: KillAt::Disconnect { tasks: 2 }, rejoin_after_ms: Some(40) },
+            Message::RingReroute { dead: 4, substitute: 6, tasks: vec![task(4, 7), task(2, 4)] },
+            Message::Rejoin { rank: 5, done: vec![task(5, 1), task(5, 5)] },
         ];
         for (i, msg) in msgs.into_iter().enumerate() {
             // Frame as a worker rank's send: the endpoint conversions must

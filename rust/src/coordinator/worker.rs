@@ -51,6 +51,8 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
     let mut pending_reassign = VecDeque::new();
     let mut revoked = std::collections::BTreeSet::new();
     let mut kill_at = None;
+    let mut rejoin_after_ms = None;
+    let mut reroutes = VecDeque::new();
     let mut scatter_wait = 0.0f64;
 
     // ---- Phase 0: learn quorum + task list (stash everything else). ----
@@ -74,7 +76,7 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
             }
             Message::AssignBlock(pb) => stash_block(&mut blocks, &mem, pb),
             Message::ComputeTasks { tasks } => break tasks,
-            Message::Crash { at } => match at {
+            Message::Crash { at, rejoin_after_ms: rejoin } => match at {
                 // Scatter-phase injection dies on delivery, before any
                 // work — marked killed so the leader's failure detection
                 // sees the loss instead of hanging.
@@ -84,8 +86,16 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
                 }
                 // Mid-run injection arms the plan; the crash fires from
                 // begin_task (compute) or after the app returns (gather).
-                other => kill_at = Some(other),
+                other => {
+                    kill_at = Some(other);
+                    rejoin_after_ms = rejoin;
+                }
             },
+            // Defensive: the leader broadcasts re-routes only after every
+            // task list went out (per-pair FIFO), but stashing is free.
+            Message::RingReroute { dead, substitute, tasks } => {
+                reroutes.push_back((dead, substitute, tasks));
+            }
             Message::Shutdown => return,
             // A fast peer's app traffic can outrun the leader's tasks.
             Message::App(p) => pending.push_back(p),
@@ -113,6 +123,10 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         result_stash: None,
         streamed_items: 0,
         kill_at,
+        rejoin_after_ms,
+        rejoined: false,
+        done_log: Vec::new(),
+        reroutes,
         dead: false,
         task_tags: Vec::new(),
         completed_tasks: 0,
@@ -179,13 +193,15 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
     let _ = ctx.ep.send(0, Message::Stats(stats));
 
     // ---- Serve recovery work, drain until shutdown. ----
-    // Grants stashed mid-protocol first (arrival order), then the wire.
-    while let Some((for_rank, tasks)) = ctx.pending_reassign.pop_front() {
-        if !recover_tasks(app.as_ref(), &mut ctx, for_rank, tasks) {
-            return;
-        }
-    }
+    // Grants stashed mid-protocol first (arrival order), then the wire —
+    // re-drained every round, because executing one grant can stash
+    // another (the poll inside `recover_tasks` queues what it drains).
     loop {
+        while let Some((for_rank, tasks)) = ctx.pending_reassign.pop_front() {
+            if !recover_tasks(app.as_ref(), &mut ctx, for_rank, tasks) {
+                return;
+            }
+        }
         match ctx.ep.recv() {
             None => return,
             Some(env) => match env.msg {
@@ -237,8 +253,22 @@ fn recover_tasks(
         if ctx.plan.steal && !ctx.injection_says_alive() {
             return false;
         }
+        // A rejoin can cancel part of this grant mid-flight: the leader
+        // revokes the tasks the rejoiner already finished. Drain the wire
+        // and skip them — the rejoiner's own bitwise-identical copy wins.
+        ctx.poll_control();
+        if ctx.dead {
+            return false;
+        }
+        if ctx.grant_revoked(&task) {
+            continue;
+        }
         if !ctx.ensure_blocks(&[task.a, task.b]) {
             return false;
+        }
+        if ctx.grant_revoked(&task) {
+            // The revoke can land while the blocks were awaited.
+            continue;
         }
         let payload = app.run_recovery_task(ctx, task);
         let _ = ctx.ep.send(0, Message::RecoveredResult { for_rank, task, payload });
@@ -405,7 +435,12 @@ mod tests {
                 Message::TasksAhead { quorum: vec![0, 1], tasks: vec![PairTask { a: 0, b: 1 }] },
             )
             .unwrap();
-        leader.send(endpoint_of(0), Message::Crash { at: KillAt::Scatter }).unwrap();
+        leader
+            .send(
+                endpoint_of(0),
+                Message::Crash { at: KillAt::Scatter, rejoin_after_ms: None },
+            )
+            .unwrap();
         h.join().unwrap();
         assert!(leader.transport().is_killed(endpoint_of(0)));
         assert!(

@@ -17,7 +17,7 @@
 use quorall::cli::{App, ArgSpec, Command, ParseOutcome, Parsed};
 use quorall::config::{BackendKind, DatasetConfig, PcitMode, RunConfig};
 use quorall::coordinator::{
-    run_distributed_pcit, run_single_node, EngineOptions, KillAt, TransportKind,
+    run_distributed_pcit, run_single_node, DegradeMode, EngineOptions, KillAt, TransportKind,
 };
 use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
 use quorall::metrics::Table;
@@ -77,6 +77,16 @@ fn app() -> App {
                     "TCP silence window before a peer is declared dead (ms)",
                     "",
                 ))
+                .arg(ArgSpec::opt(
+                    "degrade",
+                    "when redundancy is exhausted: abort | partial (finish coverable pairs)",
+                    "",
+                ))
+                .arg(ArgSpec::opt(
+                    "rejoin-after-ms",
+                    "disconnect-killed ranks rejoin the mesh after this delay (ms)",
+                    "",
+                ))
                 .arg(ArgSpec::opt("backend", "native | xla", "native"))
                 .arg(ArgSpec::opt("seed", "dataset seed", "42"))
                 .arg(ArgSpec::opt("csv", "load expression CSV instead of synthetic", ""))
@@ -122,6 +132,16 @@ fn app() -> App {
                     "TCP silence window before a peer is declared dead (ms)",
                     "",
                 ))
+                .arg(ArgSpec::opt(
+                    "degrade",
+                    "when redundancy is exhausted: abort | partial (finish coverable pairs)",
+                    "",
+                ))
+                .arg(ArgSpec::opt(
+                    "rejoin-after-ms",
+                    "disconnect-killed ranks rejoin the mesh after this delay (ms)",
+                    "",
+                ))
                 .arg(ArgSpec::opt("topk", "pairs to report", "10"))
                 .arg(ArgSpec::opt("seed", "feature seed", "42"))
                 .arg(ArgSpec::opt("backend", "native | xla", "native")),
@@ -162,6 +182,16 @@ fn app() -> App {
                 .arg(ArgSpec::opt(
                     "heartbeat-timeout-ms",
                     "TCP silence window before a peer is declared dead (ms)",
+                    "",
+                ))
+                .arg(ArgSpec::opt(
+                    "degrade",
+                    "when redundancy is exhausted: abort | partial (finish coverable pairs)",
+                    "",
+                ))
+                .arg(ArgSpec::opt(
+                    "rejoin-after-ms",
+                    "disconnect-killed ranks rejoin the mesh after this delay (ms)",
                     "",
                 ))
                 .arg(ArgSpec::opt("steps", "leapfrog steps", "50"))
@@ -320,6 +350,8 @@ struct ResilienceFlags {
     processes: Option<bool>,
     heartbeat_ms: Option<u64>,
     heartbeat_timeout_ms: Option<u64>,
+    degrade: Option<DegradeMode>,
+    rejoin_after_ms: Option<u64>,
 }
 
 fn parse_resilience_flags(p: &Parsed) -> anyhow::Result<ResilienceFlags> {
@@ -400,6 +432,17 @@ fn parse_resilience_flags(p: &Parsed) -> anyhow::Result<ResilienceFlags> {
         "" => None,
         _ => Some(p.get_u64("heartbeat-timeout-ms")?),
     };
+    let degrade = match p.get_str("degrade").unwrap_or("") {
+        "" => None,
+        s => Some(
+            DegradeMode::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("bad --degrade: {s} (abort | partial)"))?,
+        ),
+    };
+    let rejoin_after_ms = match p.get_str("rejoin-after-ms").unwrap_or("") {
+        "" => None,
+        _ => Some(p.get_u64("rejoin-after-ms")?),
+    };
     Ok(ResilienceFlags {
         redundancy,
         kill,
@@ -412,6 +455,8 @@ fn parse_resilience_flags(p: &Parsed) -> anyhow::Result<ResilienceFlags> {
         processes,
         heartbeat_ms,
         heartbeat_timeout_ms,
+        degrade,
+        rejoin_after_ms,
     })
 }
 
@@ -455,6 +500,12 @@ impl ResilienceFlags {
         if let Some(ms) = self.heartbeat_timeout_ms {
             opts.heartbeat_timeout_ms = ms;
         }
+        if let Some(d) = self.degrade {
+            opts.degrade = d;
+        }
+        if let Some(ms) = self.rejoin_after_ms {
+            opts.rejoin_after_ms = Some(ms);
+        }
     }
 
     /// Same tri-state overlay for a `RunConfig` (the pcit command path).
@@ -496,6 +547,12 @@ impl ResilienceFlags {
         }
         if let Some(ms) = self.heartbeat_timeout_ms {
             cfg.heartbeat_timeout_ms = ms;
+        }
+        if let Some(d) = self.degrade {
+            cfg.degrade = d;
+        }
+        if let Some(ms) = self.rejoin_after_ms {
+            cfg.rejoin_after_ms = Some(ms);
         }
     }
 }
@@ -599,11 +656,16 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
 
     if cfg.recover || !cfg.kill.is_empty() {
         println!(
-            "resilience: r = {}, kill = {:?} at {}, recover = {}",
+            "resilience: r = {}, kill = {:?} at {}, recover = {}, degrade = {}{}",
             cfg.redundancy,
             cfg.kill,
             cfg.kill_at.name(),
-            if cfg.recover { "on" } else { "off" }
+            if cfg.recover { "on" } else { "off" },
+            cfg.degrade.name(),
+            match cfg.rejoin_after_ms {
+                Some(ms) => format!(", rejoin after {ms} ms"),
+                None => String::new(),
+            }
         );
     }
     if cfg.steal || cfg.throttle.is_some() {
@@ -630,6 +692,31 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
                 "  failure detector: rank {} dead ({}, detection latency {:.3}s)",
                 d.rank, d.cause, d.latency_secs
             );
+        }
+    }
+    if rep.ring_reroutes > 0 {
+        println!(
+            "ring re-routing: {} reroute order(s) — substitutes replayed the dead ranks' ring walks",
+            rep.ring_reroutes
+        );
+    }
+    if !rep.rejoined_ranks.is_empty() {
+        println!(
+            "rejoin: ranks {:?} re-admitted mid-run ({} duplicate result(s) discarded first-writer-wins)",
+            rep.rejoined_ranks, rep.duplicate_results
+        );
+    }
+    if !rep.uncovered_pairs.is_empty() {
+        println!(
+            "degraded completion: {} pair(s) uncoverable after redundancy exhaustion (coverage {:.2}%)",
+            rep.uncovered_pairs.len(),
+            100.0 * rep.coverage_ratio
+        );
+        for (a, b) in rep.uncovered_pairs.iter().take(16) {
+            println!("  uncovered: ({a}, {b})");
+        }
+        if rep.uncovered_pairs.len() > 16 {
+            println!("  … ({} more)", rep.uncovered_pairs.len() - 16);
         }
     }
     if rep.stolen_tasks > 0 {

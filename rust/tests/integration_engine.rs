@@ -479,18 +479,48 @@ fn killed_rank_during_gather_errors_cleanly() {
     assert!(msg.contains("rank 1") && msg.contains("crashed"), "unexpected error: {msg}");
 }
 
+/// An app that opts into neither task-ledger recovery (`recoverable`)
+/// nor ring re-routing (`ring_recovery`) — its results are opaque to the
+/// engine, so a mid-run death cannot be masked.
+struct OpaqueApp;
+
+impl DistributedApp for OpaqueApp {
+    fn name(&self) -> &'static str {
+        "opaque"
+    }
+
+    fn elements(&self) -> usize {
+        18
+    }
+
+    fn make_block(&self, range: std::ops::Range<usize>) -> BlockData {
+        BlockData::Rows(Matrix::zeros(range.len(), 4))
+    }
+
+    fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+        let tasks = std::mem::take(&mut ctx.tasks);
+        let mut edges = Vec::new();
+        for t in &tasks {
+            if !ctx.begin_task(t) {
+                return None;
+            }
+            edges.push((t.a, t.b, 1.0f32));
+        }
+        Some(Payload::Edges(edges))
+    }
+}
+
 #[test]
 fn unrecoverable_app_mid_run_death_aborts_cleanly() {
-    // Barrier-phase apps are no longer rejected up front: exact-mode PCIT
-    // runs under a recovery plan, but its tile routing + ring are not
-    // task-granular, so an actual death must surface a clean error (not a
-    // hang, not a categorical "barrier-free apps only" refusal).
-    let d = dataset(90);
+    // Exact-mode PCIT now recovers by ring re-routing, so the categorical
+    // abort only remains for apps that expose neither task-granular
+    // results nor a ring order. Such a death must still surface a clean
+    // error — not a hang, and not a silent partial result.
     let mut opts = EngineOptions::new(9, Strategy::Cyclic);
     opts.kill = vec![4];
     opts.recover = true;
     opts.redundancy = 2;
-    let err = run_app(pcit_app(&d, DistMode::Exact), &opts).unwrap_err();
+    let err = run_app(Arc::new(OpaqueApp), &opts).unwrap_err();
     let msg = format!("{err:#}");
     assert!(
         msg.contains("cannot recover") && msg.contains("rank 4"),

@@ -15,8 +15,8 @@ use quorall::apps::similarity::run_distributed_similarity;
 use quorall::apps::{DistMode, PcitApp};
 use quorall::config::{PcitMode, RunConfig};
 use quorall::coordinator::{
-    run_app, run_resilient_pcit_at, run_single_node, BlockData, DistributedApp, EngineOptions,
-    KillAt, Payload, WorkerCtx,
+    run_app, run_resilient_pcit_at, run_single_node, BlockData, DegradeMode, DistributedApp,
+    EngineOptions, KillAt, Payload, TransportKind, WorkerCtx,
 };
 use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
 use quorall::pcit::standardize_rows;
@@ -429,24 +429,97 @@ fn barrier_phase_app_recovers_mid_run() {
     assert_eq!(seen, expect, "recovered run must cover all pairs exactly once");
 }
 
-// ---- Unrecoverable apps: clean abort, not a hang ----
+// ---- Exact-mode PCIT: ring re-routing around a dead rank ----
+
+fn exact_cfg(strategy: Strategy, pipeline: bool) -> RunConfig {
+    RunConfig {
+        ranks: P,
+        mode: PcitMode::QuorumExact,
+        strategy,
+        pipeline,
+        ..RunConfig::default()
+    }
+}
 
 #[test]
-fn exact_pcit_mid_compute_death_aborts_cleanly() {
+fn exact_pcit_kill_matrix_bitwise_identical() {
+    // A mid-ring death no longer aborts exact mode: the leader recomputes
+    // the ring successor map around the dead rank, a substitute (which
+    // holds the victim's row blocks under r-fold placement) replays its
+    // tile production and elimination tasks in the original per-pair FIFO
+    // order, and the spliced network is bitwise-identical to the
+    // failure-free run — across both placements, both protocols, and
+    // every kill phase.
     let d = dataset(90);
-    let app = Arc::new(PcitApp::new(
-        standardize_rows(&d.expr),
-        exec(),
-        DistMode::Exact,
-        true,
-        0.85,
-    ));
+    let single = run_single_node(&d, 2, None);
+    for strategy in STRATEGIES {
+        for pipeline in [false, true] {
+            let cfg = exact_cfg(strategy, pipeline);
+            let base = run_resilient_pcit_at(&cfg, &d, exec(), 2, &[], KillAt::Scatter).unwrap();
+            assert!(
+                base.network.same_edges(&single.network),
+                "strategy {} pipeline {pipeline}: failure-free exact run drifted from single node",
+                strategy.name()
+            );
+            for kill_at in KILL_PHASES {
+                let rep =
+                    run_resilient_pcit_at(&cfg, &d, exec(), 2, &[VICTIM], kill_at).unwrap();
+                assert_eq!(
+                    rep.network.edges,
+                    base.network.edges,
+                    "strategy {} pipeline {pipeline} kill_at {}: ring-recovered network differs",
+                    strategy.name(),
+                    kill_at.name()
+                );
+                assert_eq!(rep.dead_ranks, vec![VICTIM]);
+                if kill_at == KillAt::Gather {
+                    // Post-barrier death: the victim finished its ring scan,
+                    // so recovery replays its result tasks off the ledger —
+                    // no re-route order is ever issued.
+                    assert_eq!(
+                        rep.ring_reroutes, 0,
+                        "strategy {} pipeline {pipeline}: gather death must not re-route",
+                        strategy.name()
+                    );
+                } else {
+                    assert!(
+                        rep.ring_reroutes >= 1,
+                        "strategy {} pipeline {pipeline} kill_at {}: a pre-barrier death must re-route the ring",
+                        strategy.name(),
+                        kill_at.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_pcit_mid_compute_death_recovers_via_run_app() {
+    // The raw `run_app` surface (what the old abort test used) now rides
+    // the same ring recovery: bitwise-equal per-rank payloads.
+    let d = dataset(90);
+    let app = || {
+        Arc::new(PcitApp::new(
+            standardize_rows(&d.expr),
+            exec(),
+            DistMode::Exact,
+            true,
+            0.85,
+        ))
+    };
+    let base = run_app(app(), &recovery_opts(Strategy::Cyclic, false)).unwrap();
     let mut opts = recovery_opts(Strategy::Cyclic, false);
     opts.kill = vec![VICTIM];
     opts.kill_at = KillAt::Compute { tasks: 1 };
-    let err = run_app(app, &opts).unwrap_err();
-    let msg = format!("{err:#}");
-    assert!(msg.contains("cannot recover"), "unexpected error: {msg}");
+    let rep = run_app(app(), &opts).unwrap();
+    assert_eq!(rep.dead_ranks, vec![VICTIM]);
+    assert!(rep.ring_reroutes >= 1, "mid-compute death must re-route the ring");
+    assert_eq!(
+        edges_by_rank(&rep.results),
+        edges_by_rank(&base.results),
+        "ring-recovered per-rank payloads must match the failure-free run bitwise"
+    );
 }
 
 // ---- Full-PCIT local mode recovers (approximately, like the ablation) ----
@@ -660,4 +733,362 @@ fn steal_composes_with_streamed_scatter_and_recovery() {
             "pipeline {pipeline}: the throttled rank must still get stolen from"
         );
     }
+}
+
+// ---- Edge-payload helpers: output identity at pair granularity ----
+
+/// Per-rank edge payloads in rank order — payload-level bitwise identity.
+fn edges_by_rank(results: &[(usize, Payload)]) -> Vec<(usize, Vec<(usize, usize, f32)>)> {
+    let mut v: Vec<(usize, Vec<(usize, usize, f32)>)> = results
+        .iter()
+        .map(|(rank, payload)| match payload {
+            Payload::Edges(e) => (*rank, e.clone()),
+            other => panic!("rank {rank}: wrong payload {}", other.kind()),
+        })
+        .collect();
+    v.sort_by_key(|(rank, _)| *rank);
+    v
+}
+
+/// All pairs reported across every per-rank payload, sorted.
+fn collect_pairs(results: &[(usize, Payload)]) -> Vec<(usize, usize)> {
+    let mut seen: Vec<(usize, usize)> = Vec::new();
+    for (rank, payload) in results {
+        match payload {
+            Payload::Edges(e) => seen.extend(e.iter().map(|&(a, b, _)| (a, b))),
+            other => panic!("rank {rank}: wrong payload {}", other.kind()),
+        }
+    }
+    seen.sort_unstable();
+    seen
+}
+
+fn all_pairs() -> Vec<(usize, usize)> {
+    (0..P).flat_map(|a| (a..P).map(move |b| (a, b))).collect()
+}
+
+/// Edge-payload app with tunable stalls — the deterministic clockwork for
+/// the rejoin and cascade tests. Every recovery grant sleeps
+/// `recovery_ms` at its assignee, which pins the leader in its gather
+/// loop (recovery pending) long enough for a timed event — a rejoin
+/// window expiring, a second injected death — to land *while* the
+/// reassignment is still in flight; `slow_rank` stretches one rank's own
+/// queue by `own_ms` per task the same way. The payload is the task list
+/// itself, so exactly-once pair coverage and bitwise parity collapse into
+/// one assertion. Honors the mid-run `per_task_results()` flip (prefix
+/// flush, then per-task chunks) like the in-tree apps — a detected rejoin
+/// requires it.
+struct StallApp {
+    /// Rank whose own tasks each sleep `own_ms` (`usize::MAX` = nobody).
+    slow_rank: usize,
+    own_ms: u64,
+    recovery_ms: u64,
+}
+
+impl DistributedApp for StallApp {
+    fn name(&self) -> &'static str {
+        "stall-edges"
+    }
+
+    fn elements(&self) -> usize {
+        2 * P
+    }
+
+    fn make_block(&self, range: std::ops::Range<usize>) -> BlockData {
+        BlockData::Rows(Matrix::zeros(range.len(), 4))
+    }
+
+    fn recoverable(&self) -> bool {
+        true
+    }
+
+    fn run_recovery_task(&self, _ctx: &mut WorkerCtx, t: quorall::allpairs::PairTask) -> Payload {
+        std::thread::sleep(std::time::Duration::from_millis(self.recovery_ms));
+        Payload::Edges(vec![(t.a, t.b, 1.0)])
+    }
+
+    fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+        let tasks = std::mem::take(&mut ctx.tasks);
+        let streams_from_start = ctx.per_task_results();
+        let mut prefix_flushed = false;
+        let mut edges = Vec::new();
+        for t in &tasks {
+            if !ctx.begin_task(t) {
+                return None;
+            }
+            // A rejoin inside `begin_task` flips per-task streaming on:
+            // flush the accumulated prefix as one tagged chunk first.
+            if !streams_from_start && !prefix_flushed && ctx.per_task_results() {
+                prefix_flushed = true;
+                let prefix = std::mem::take(&mut edges);
+                ctx.stream_result(Payload::Edges(prefix));
+            }
+            if ctx.task_revoked(t) {
+                continue;
+            }
+            if ctx.my_block == self.slow_rank {
+                std::thread::sleep(std::time::Duration::from_millis(self.own_ms));
+            }
+            edges.push((t.a, t.b, 1.0f32));
+            ctx.complete_task(*t);
+            if streams_from_start || prefix_flushed {
+                let chunk = std::mem::take(&mut edges);
+                ctx.stream_result(Payload::Edges(chunk));
+            }
+        }
+        Some(Payload::Edges(edges))
+    }
+}
+
+// ---- Worker rejoin: transient disconnect, overlap cancellation ----
+
+/// The rejoin clockwork: the victim goes dark for 100 ms — long past the
+/// leader's 25 ms failure poll, so detection and reassignment are certain
+/// — while every recovery grant sleeps 400 ms at its assignee, so the
+/// leader is certainly still mid-recovery when the Rejoin lands and the
+/// overlap cancellation has a 300 ms cushion to win every race.
+fn rejoin_app() -> Arc<StallApp> {
+    Arc::new(StallApp { slow_rank: usize::MAX, own_ms: 0, recovery_ms: 400 })
+}
+
+fn rejoin_opts(tasks_before_dark: usize) -> EngineOptions {
+    let mut opts = recovery_opts(Strategy::Cyclic, false);
+    // The duplicate/recovered counts below are exact; the steal scheduler
+    // (QUORALL_STEAL=on lane) would add benign-but-nondeterministic
+    // re-grants, so pin it off — steal × kill composition has its own
+    // suite above.
+    opts.steal = false;
+    opts.kill = vec![VICTIM];
+    opts.kill_at = KillAt::Disconnect { tasks: tasks_before_dark };
+    opts.rejoin_after_ms = Some(100);
+    opts
+}
+
+fn no_steal_opts(strategy: Strategy) -> EngineOptions {
+    let mut opts = recovery_opts(strategy, false);
+    opts.steal = false;
+    opts
+}
+
+fn assert_rejoin_run(rep_tag: &str, tasks_before_dark: usize) {
+    let base = run_app(rejoin_app(), &no_steal_opts(Strategy::Cyclic)).unwrap();
+    let rep = run_app(rejoin_app(), &rejoin_opts(tasks_before_dark)).unwrap();
+    assert_eq!(
+        rep.dead_ranks,
+        vec![VICTIM],
+        "{rep_tag}: a 100 ms dark window must outlive the failure poll"
+    );
+    assert_eq!(rep.rejoined_ranks, vec![VICTIM], "{rep_tag}: the comeback must be recorded");
+    assert_eq!(
+        collect_pairs(&rep.results),
+        all_pairs(),
+        "{rep_tag}: every pair exactly once — no duplicates from the cancelled overlap"
+    );
+    assert_eq!(
+        edges_by_rank(&rep.results),
+        edges_by_rank(&base.results),
+        "{rep_tag}: rejoined run must match the failure-free run bitwise"
+    );
+    assert_eq!(
+        rep.duplicate_results, 0,
+        "{rep_tag}: the cancellation must win — no assignee result should land"
+    );
+    assert_eq!(rep.stats.len(), P, "{rep_tag}: a rejoined rank reports stats again");
+    assert!(rep.uncovered_pairs.is_empty());
+    assert_eq!(rep.coverage_ratio, 1.0);
+}
+
+#[test]
+fn rejoin_during_compute_cancels_reassignment_overlap() {
+    // Dark after one completed task: the resume cursor names it, the
+    // leader prunes it from the orphan ledger, cancels the in-flight
+    // reassignment of the remainder, and takes the rest from the
+    // rejoiner's own per-task chunks (prefix-flush chunk leading).
+    assert_rejoin_run("rejoin mid-compute", 1);
+}
+
+#[test]
+fn rejoin_during_scatter_resumes_full_queue() {
+    // Dark before completing anything: the resume cursor is empty, every
+    // task re-orphans, and the rejoiner reclaims its entire queue from
+    // the cancelled reassignment (its prefix-flush chunk is empty).
+    // Under the streamed-scatter lane this also exercises the rejoin
+    // block re-ship: the leader abandoned the victim's block queue at
+    // the death, so without the re-ship the rejoiner would wait in
+    // `ensure_blocks` forever.
+    assert_rejoin_run("rejoin at scatter", 0);
+}
+
+#[test]
+fn rejoin_after_recovery_finished_is_superseded() {
+    // With instant recovery grants, the 100 ms dark window is long enough
+    // that every orphan is recovered and spliced before the victim comes
+    // back. The rejoiner's whole stream must be revoked/superseded — and
+    // the output still bitwise-identical with exactly-once coverage.
+    let app = || Arc::new(StallApp { slow_rank: usize::MAX, own_ms: 0, recovery_ms: 0 });
+    let base = run_app(app(), &no_steal_opts(Strategy::Cyclic)).unwrap();
+    let rep = run_app(app(), &rejoin_opts(1)).unwrap();
+    assert_eq!(rep.dead_ranks, vec![VICTIM]);
+    assert_eq!(rep.rejoined_ranks, vec![VICTIM]);
+    assert_eq!(collect_pairs(&rep.results), all_pairs());
+    assert_eq!(edges_by_rank(&rep.results), edges_by_rank(&base.results));
+    assert!(
+        rep.recovered_tasks > 0,
+        "instant grants must finish recovery inside the dark window"
+    );
+}
+
+// ---- Cascading failure: second death while Reassign is in flight ----
+
+#[test]
+fn cascade_second_death_while_reassign_in_flight() {
+    // Rank v1 dies after one task; its orphans are granted to survivors
+    // whose recovery tasks each sleep 350 ms — so those Reassigns are
+    // still in flight when rank w (own queue stretched 40 ms per task)
+    // dies at the gather ~200 ms in. The leader must absorb the second
+    // death mid-recovery — re-orphan w's whole queue to the remaining
+    // survivors — and still deliver every pair exactly once, bitwise
+    // equal to the failure-free run, on both placements and transports.
+    for (strategy, r) in [(Strategy::Cyclic, 3), (Strategy::Grid, 2)] {
+        let quorum = strategy.build_redundant(P, r).unwrap();
+        let assign = RedundantAssignment::build(quorum.as_ref(), r);
+        // Victim pair (v1, w) such that every pair keeps a surviving host
+        // outside both — r = 3 guarantees it for cyclic; the grid's
+        // 2-host generic pairs need a same-line victim pair, so search.
+        let (v1, w) = (0..P)
+            .flat_map(|a| (0..P).filter(move |&b| b != a).map(move |b| (a, b)))
+            .find(|&(a, b)| {
+                (0..P).flat_map(|x| (x..P).map(move |y| (x, y))).all(|(x, y)| {
+                    quorum.pair_hosts(x, y).iter().any(|&h| h != a && h != b)
+                })
+            })
+            .expect("some victim pair must leave every pair a surviving host");
+        let orphaned =
+            (assign.primary_tasks_for(v1).len() + assign.primary_tasks_for(w).len()) as u64;
+        let app = || Arc::new(StallApp { slow_rank: w, own_ms: 40, recovery_ms: 350 });
+        let mut base_opts = no_steal_opts(strategy);
+        base_opts.redundancy = r;
+        let base = run_app(app(), &base_opts).unwrap();
+        for kind in [TransportKind::Memory, TransportKind::Tcp] {
+            let mut opts = no_steal_opts(strategy);
+            opts.redundancy = r;
+            opts.transport = kind;
+            opts.kill = vec![v1, w];
+            opts.kill_at_list = vec![KillAt::Compute { tasks: 1 }, KillAt::Gather];
+            let rep = run_app(app(), &opts).unwrap();
+            let mut want_dead = vec![v1, w];
+            want_dead.sort_unstable();
+            assert_eq!(
+                rep.dead_ranks,
+                want_dead,
+                "strategy {} transport {}: both victims must be detected",
+                strategy.name(),
+                kind.name()
+            );
+            assert_eq!(
+                collect_pairs(&rep.results),
+                all_pairs(),
+                "strategy {} transport {}: cascade must keep coverage exactly-once",
+                strategy.name(),
+                kind.name()
+            );
+            assert_eq!(
+                edges_by_rank(&rep.results),
+                edges_by_rank(&base.results),
+                "strategy {} transport {}: cascade-recovered payloads must match bitwise",
+                strategy.name(),
+                kind.name()
+            );
+            // Sync mode reports nothing before the final Result, so both
+            // victims orphan their full queues — v1's through the first
+            // Reassign wave, w's re-orphaned through the cascade.
+            assert_eq!(
+                rep.recovered_tasks,
+                orphaned,
+                "strategy {} transport {}: every orphan recovered exactly once",
+                strategy.name(),
+                kind.name()
+            );
+            assert_eq!(rep.stats.len(), P - 2);
+            let mut detected: Vec<usize> =
+                rep.health.detections.iter().map(|d| d.rank).collect();
+            detected.sort_unstable();
+            assert_eq!(detected, want_dead, "transport {}", kind.name());
+        }
+    }
+}
+
+// ---- Graceful degradation: redundancy exhausted, run completes ----
+
+#[test]
+fn degrade_partial_reports_uncovered_pairs() {
+    // r = 1: rank 0's death leaves some pairs with no surviving host.
+    // Under `--degrade partial` the run completes every coverable task
+    // and reports the rest in the manifest instead of aborting (the
+    // default abort flavor is pinned by
+    // `insufficient_redundancy_aborts_cleanly`).
+    let mut opts = EngineOptions::new(P, Strategy::Cyclic);
+    opts.steal = false;
+    opts.redundancy = 1;
+    opts.recover = true;
+    opts.kill = vec![0];
+    opts.kill_at = KillAt::Compute { tasks: 1 };
+    opts.degrade = DegradeMode::Partial;
+    let app = Arc::new(StallApp { slow_rank: usize::MAX, own_ms: 0, recovery_ms: 0 });
+    let rep = run_app(app, &opts).unwrap();
+    assert_eq!(rep.dead_ranks, vec![0]);
+    let uncovered = rep.uncovered_pairs.clone();
+    assert!(!uncovered.is_empty(), "r = 1 plus a death must exhaust some pair");
+    for &(a, b) in &uncovered {
+        assert!(a <= b, "manifest pairs must be normalized, got ({a}, {b})");
+    }
+    let mut sorted = uncovered.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted, uncovered, "manifest must be sorted and duplicate-free");
+    // Exactly-once over the covered remainder: all pairs minus manifest.
+    let covered: Vec<(usize, usize)> =
+        all_pairs().into_iter().filter(|p| !uncovered.contains(p)).collect();
+    assert_eq!(
+        collect_pairs(&rep.results),
+        covered,
+        "covered pairs must still arrive exactly once"
+    );
+    let total = (P * (P + 1) / 2) as f64;
+    let want = 1.0 - uncovered.len() as f64 / total;
+    assert!(
+        (rep.coverage_ratio - want).abs() < 1e-9,
+        "coverage ratio {} != {want}",
+        rep.coverage_ratio
+    );
+    assert!(rep.coverage_ratio < 1.0);
+}
+
+#[test]
+fn degrade_partial_pcit_network_is_covered_subset() {
+    // Threshold-mode PCIT under exhaustion: the degraded network must be
+    // exactly the failure-free network minus the uncovered tiles — every
+    // surviving edge bitwise-present in the baseline.
+    let d = dataset(90);
+    let base =
+        run_resilient_pcit_at(&pcit_cfg(Strategy::Cyclic, false), &d, exec(), 2, &[], KillAt::Scatter)
+            .unwrap();
+    let mut cfg = pcit_cfg(Strategy::Cyclic, false);
+    cfg.degrade = DegradeMode::Partial;
+    cfg.steal = false;
+    let rep =
+        run_resilient_pcit_at(&cfg, &d, exec(), 1, &[0], KillAt::Compute { tasks: 1 }).unwrap();
+    assert_eq!(rep.dead_ranks, vec![0]);
+    assert!(!rep.uncovered_pairs.is_empty());
+    assert!(rep.coverage_ratio < 1.0);
+    for e in &rep.network.edges {
+        assert!(
+            base.network.edges.contains(e),
+            "degraded edge {e:?} absent from the failure-free network"
+        );
+    }
+    assert!(
+        rep.network.n_edges() <= base.network.n_edges(),
+        "degradation cannot add edges"
+    );
 }
