@@ -68,6 +68,7 @@ pub fn json_payload(
 
 /// Parse `--quick` style bench args (smaller workloads for CI).
 pub fn quick_mode() -> bool {
+    // analyze: ignore(env QUORALL_BENCH_QUICK): bench-harness sizing, not a [run] knob
     std::env::args().any(|a| a == "--quick") || std::env::var("QUORALL_BENCH_QUICK").is_ok()
 }
 

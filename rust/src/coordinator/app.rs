@@ -436,6 +436,20 @@ impl WorkerCtx {
     /// Drain everything already on the wire without blocking (work
     /// stealing's task-boundary poll): revokes take effect, blocks land,
     /// app traffic and late grants stash, crash injections arm or fire.
+    ///
+    /// Scatter/phase-0 and worker→leader traffic never reaches these
+    /// task-boundary polls; `cargo xtask analyze` verifies the remaining
+    /// variants are matched across the six poll fns.
+    // analyze: ignore(AssignData): consumed by worker_run phase 0, before any poll runs
+    // analyze: ignore(TasksAhead): consumed by worker_run phase 0, before any poll runs
+    // analyze: ignore(ComputeTasks): consumed by worker_run phase 0, before any poll runs
+    // analyze: ignore(Result): worker→leader gather, never received by a worker
+    // analyze: ignore(ResultChunk): worker→leader streamed gather, never received by a worker
+    // analyze: ignore(RecoveredResult): worker→leader recovery gather, never received by a worker
+    // analyze: ignore(Stats): worker→leader final stats, never received by a worker
+    // analyze: ignore(TasksDone): worker→leader progress heartbeat, never received by a worker
+    // analyze: ignore(PhaseDone): worker→leader barrier vote, never received by a worker
+    // analyze: ignore(Rejoin): worker→leader re-admission announcement, never received by a worker
     pub(super) fn poll_control(&mut self) {
         while let Some(env) = self.ep.try_recv() {
             match env.msg {

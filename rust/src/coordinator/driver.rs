@@ -1015,6 +1015,175 @@ pub fn run_single_node(dataset: &ExpressionDataset, threads: usize, threshold: O
     }
 }
 
+// ---- machine-readable reports (CLI `--jsonl`) --------------------------
+//
+// One JSON object per run, one key per struct field — the conformance
+// analyzer (`cargo xtask analyze`, check `reports`) statically verifies
+// that every `RankStats`/`EngineReport`/`DistributedReport` field appears
+// in its serializer, so adding a report field without emitting it fails
+// the tier-1 gate instead of silently drifting.
+
+use crate::util::json::{obj, Json};
+
+fn json_u64(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn json_usize_arr(vs: &[usize]) -> Json {
+    Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+fn json_pairs(vs: &[(usize, usize)]) -> Json {
+    Json::Arr(
+        vs.iter()
+            .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+            .collect(),
+    )
+}
+
+/// Serialize one rank's stats — every [`RankStats`] field, by name.
+pub fn rank_stats_json(s: &RankStats) -> Json {
+    obj(vec![
+        ("rank", Json::Num(s.rank as f64)),
+        ("peak_logical_bytes", json_u64(s.peak_logical_bytes)),
+        ("corr_tiles", json_u64(s.corr_tiles)),
+        ("elim_tiles", json_u64(s.elim_tiles)),
+        ("sent_msgs", json_u64(s.sent_msgs)),
+        ("sent_bytes", json_u64(s.sent_bytes)),
+        ("recv_msgs", json_u64(s.recv_msgs)),
+        ("recv_bytes", json_u64(s.recv_bytes)),
+        ("phase1_secs", Json::Num(s.phase1_secs)),
+        ("phase2_secs", Json::Num(s.phase2_secs)),
+        ("recv_blocked_secs", Json::Num(s.recv_blocked_secs)),
+        ("scatter_blocked_secs", Json::Num(s.scatter_blocked_secs)),
+        ("time_to_first_task_secs", Json::Num(s.time_to_first_task_secs)),
+        ("n_items", json_u64(s.n_items)),
+        ("tasks_executed", json_u64(s.tasks_executed)),
+        ("task_exec_min_secs", Json::Num(s.task_exec_min_secs)),
+        ("task_exec_max_secs", Json::Num(s.task_exec_max_secs)),
+        ("task_exec_total_secs", Json::Num(s.task_exec_total_secs)),
+    ])
+}
+
+/// Serialize the failure detector's health snapshot.
+fn transport_health_json(h: &TransportHealth) -> Json {
+    obj(vec![
+        ("backend", Json::Str(h.backend.to_string())),
+        (
+            "last_heartbeat_age_secs",
+            Json::Arr(
+                h.last_heartbeat_age_secs
+                    .iter()
+                    .map(|&(rank, age)| {
+                        obj(vec![("rank", Json::Num(rank as f64)), ("age_secs", Json::Num(age))])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "detections",
+            Json::Arr(
+                h.detections
+                    .iter()
+                    .map(|d| {
+                        obj(vec![
+                            ("rank", Json::Num(d.rank as f64)),
+                            ("latency_secs", Json::Num(d.latency_secs)),
+                            ("cause", Json::Str(d.cause.to_string())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("reconnect_attempts", json_u64(h.reconnect_attempts)),
+    ])
+}
+
+/// Serialize a generic engine run — every [`EngineReport`] field, by name.
+/// Result payloads are summarized as per-rank item counts (the payload
+/// bodies are the app's output, not run metadata).
+pub fn engine_report_json(r: &EngineReport) -> Json {
+    obj(vec![
+        (
+            "results",
+            Json::Arr(
+                r.results
+                    .iter()
+                    .map(|(rank, p)| {
+                        obj(vec![
+                            ("rank", Json::Num(*rank as f64)),
+                            ("kind", Json::Str(p.kind().to_string())),
+                            ("items", json_u64(p.items())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("stats", Json::Arr(r.stats.iter().map(rank_stats_json).collect())),
+        ("strategy", Json::Str(r.strategy.name().to_string())),
+        ("wall_secs", Json::Num(r.wall_secs)),
+        ("critical_path_secs", Json::Num(r.critical_path_secs)),
+        ("max_quorum_size", Json::Num(r.max_quorum_size as f64)),
+        ("assignment_imbalance", Json::Num(r.assignment_imbalance)),
+        ("peak_bytes_per_rank", json_u64(r.peak_bytes_per_rank)),
+        ("total_comm_bytes", json_u64(r.total_comm_bytes)),
+        ("scatter_comm_bytes", json_u64(r.scatter_comm_bytes)),
+        ("recv_blocked_secs", Json::Num(r.recv_blocked_secs)),
+        ("scatter_blocked_secs", Json::Num(r.scatter_blocked_secs)),
+        ("time_to_first_task_secs", Json::Num(r.time_to_first_task_secs)),
+        ("overlap_ratio", Json::Num(r.overlap_ratio)),
+        ("recovered_tasks", json_u64(r.recovered_tasks)),
+        ("stolen_tasks", json_u64(r.stolen_tasks)),
+        ("steal_latency_secs", Json::Num(r.steal_latency_secs)),
+        ("dead_ranks", json_usize_arr(&r.dead_ranks)),
+        ("ring_reroutes", json_u64(r.ring_reroutes)),
+        ("rejoined_ranks", json_usize_arr(&r.rejoined_ranks)),
+        ("duplicate_results", json_u64(r.duplicate_results)),
+        ("uncovered_pairs", json_pairs(&r.uncovered_pairs)),
+        ("coverage_ratio", Json::Num(r.coverage_ratio)),
+        ("transport", Json::Str(r.transport.name().to_string())),
+        ("health", transport_health_json(&r.health)),
+    ])
+}
+
+/// Serialize a distributed PCIT run — every [`DistributedReport`] field,
+/// by name. The network is summarized (gene count + surviving edges); the
+/// edge list itself goes to `--out` CSV.
+pub fn distributed_report_json(r: &DistributedReport) -> Json {
+    obj(vec![
+        (
+            "network",
+            obj(vec![
+                ("genes", Json::Num(r.network.n as f64)),
+                ("edges", Json::Num(r.network.n_edges() as f64)),
+            ]),
+        ),
+        ("stats", Json::Arr(r.stats.iter().map(rank_stats_json).collect())),
+        ("wall_secs", Json::Num(r.wall_secs)),
+        ("critical_path_secs", Json::Num(r.critical_path_secs)),
+        ("quorum_size", Json::Num(r.quorum_size as f64)),
+        ("assignment_imbalance", Json::Num(r.assignment_imbalance)),
+        ("peak_bytes_per_rank", json_u64(r.peak_bytes_per_rank)),
+        ("total_comm_bytes", json_u64(r.total_comm_bytes)),
+        ("scatter_comm_bytes", json_u64(r.scatter_comm_bytes)),
+        ("recv_blocked_secs", Json::Num(r.recv_blocked_secs)),
+        ("scatter_blocked_secs", Json::Num(r.scatter_blocked_secs)),
+        ("time_to_first_task_secs", Json::Num(r.time_to_first_task_secs)),
+        ("overlap_ratio", Json::Num(r.overlap_ratio)),
+        ("recovered_tasks", json_u64(r.recovered_tasks)),
+        ("stolen_tasks", json_u64(r.stolen_tasks)),
+        ("steal_latency_secs", Json::Num(r.steal_latency_secs)),
+        ("dead_ranks", json_usize_arr(&r.dead_ranks)),
+        ("ring_reroutes", json_u64(r.ring_reroutes)),
+        ("rejoined_ranks", json_usize_arr(&r.rejoined_ranks)),
+        ("duplicate_results", json_u64(r.duplicate_results)),
+        ("uncovered_pairs", json_pairs(&r.uncovered_pairs)),
+        ("coverage_ratio", Json::Num(r.coverage_ratio)),
+        ("transport", Json::Str(r.transport.name().to_string())),
+        ("health", transport_health_json(&r.health)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1168,5 +1337,137 @@ mod tests {
         assert_eq!(total_corr, 10); // P(P+1)/2 pairs for P = 4
         assert!(rep.total_comm_bytes > 0);
         assert!(rep.stats.iter().all(|s| s.peak_logical_bytes > 0));
+    }
+
+    // ---- pinned report-serializer key sets -----------------------------
+    //
+    // These lists are the machine-readable contract `--jsonl` consumers
+    // parse. The conformance analyzer proves struct → serializer coverage
+    // statically; these tests pin the emitted key names so a rename is a
+    // deliberate, test-visible act.
+
+    fn json_keys(j: &Json) -> Vec<String> {
+        match j {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rank_stats_json_pins_every_field() {
+        let mut expected = vec![
+            "rank",
+            "peak_logical_bytes",
+            "corr_tiles",
+            "elim_tiles",
+            "sent_msgs",
+            "sent_bytes",
+            "recv_msgs",
+            "recv_bytes",
+            "phase1_secs",
+            "phase2_secs",
+            "recv_blocked_secs",
+            "scatter_blocked_secs",
+            "time_to_first_task_secs",
+            "n_items",
+            "tasks_executed",
+            "task_exec_min_secs",
+            "task_exec_max_secs",
+            "task_exec_total_secs",
+        ];
+        expected.sort_unstable();
+        assert_eq!(json_keys(&rank_stats_json(&RankStats::default())), expected);
+    }
+
+    #[test]
+    fn distributed_report_json_pins_every_field() {
+        let d = dataset(48);
+        let rep = run_distributed_pcit(&cfg(3, PcitMode::QuorumExact), &d, Arc::new(NativeBackend::new()))
+            .unwrap();
+        let j = distributed_report_json(&rep);
+        let mut expected = vec![
+            "network",
+            "stats",
+            "wall_secs",
+            "critical_path_secs",
+            "quorum_size",
+            "assignment_imbalance",
+            "peak_bytes_per_rank",
+            "total_comm_bytes",
+            "scatter_comm_bytes",
+            "recv_blocked_secs",
+            "scatter_blocked_secs",
+            "time_to_first_task_secs",
+            "overlap_ratio",
+            "recovered_tasks",
+            "stolen_tasks",
+            "steal_latency_secs",
+            "dead_ranks",
+            "ring_reroutes",
+            "rejoined_ranks",
+            "duplicate_results",
+            "uncovered_pairs",
+            "coverage_ratio",
+            "transport",
+            "health",
+        ];
+        expected.sort_unstable();
+        assert_eq!(json_keys(&j), expected);
+        // The emitted line must parse back; spot-check load-bearing values.
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("quorum_size"), Some(&Json::Num(rep.quorum_size as f64)));
+        let health_keys = json_keys(back.get("health").unwrap());
+        assert_eq!(
+            health_keys,
+            ["backend", "detections", "last_heartbeat_age_secs", "reconnect_attempts"]
+        );
+        match back.get("stats") {
+            Some(Json::Arr(stats)) => assert_eq!(stats.len(), 3),
+            other => panic!("stats must be an array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn engine_report_json_pins_every_field() {
+        let d = dataset(48);
+        let app = Arc::new(PcitApp::new(
+            crate::pcit::standardize_rows(&d.expr),
+            Arc::new(NativeBackend::new()),
+            DistMode::Local,
+            false,
+            0.5,
+        ));
+        let rep = run_app(app, &EngineOptions::new(3, Strategy::Cyclic)).unwrap();
+        let j = engine_report_json(&rep);
+        let mut expected = vec![
+            "results",
+            "stats",
+            "strategy",
+            "wall_secs",
+            "critical_path_secs",
+            "max_quorum_size",
+            "assignment_imbalance",
+            "peak_bytes_per_rank",
+            "total_comm_bytes",
+            "scatter_comm_bytes",
+            "recv_blocked_secs",
+            "scatter_blocked_secs",
+            "time_to_first_task_secs",
+            "overlap_ratio",
+            "recovered_tasks",
+            "stolen_tasks",
+            "steal_latency_secs",
+            "dead_ranks",
+            "ring_reroutes",
+            "rejoined_ranks",
+            "duplicate_results",
+            "uncovered_pairs",
+            "coverage_ratio",
+            "transport",
+            "health",
+        ];
+        expected.sort_unstable();
+        assert_eq!(json_keys(&j), expected);
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 }

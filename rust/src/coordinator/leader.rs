@@ -1348,6 +1348,20 @@ impl<'a, 's> Gather<'a, 's> {
 
     /// Route one incoming message — shared verbatim by the scatter pump,
     /// the phase wait and the result gather.
+    ///
+    /// Leader→worker traffic never arrives here; `cargo xtask analyze`
+    /// verifies the remaining variants are matched below.
+    // analyze: ignore(AssignData): leader→worker scatter, never received here
+    // analyze: ignore(TasksAhead): leader→worker scatter, never received here
+    // analyze: ignore(AssignBlock): leader→worker scatter, never received here
+    // analyze: ignore(ComputeTasks): leader→worker phase start, never received here
+    // analyze: ignore(App): worker↔worker ring traffic, never routed to the leader
+    // analyze: ignore(Reassign): leader→worker recovery grant, never received here
+    // analyze: ignore(Proceed): leader→worker barrier release, never received here
+    // analyze: ignore(Shutdown): leader→worker teardown, never received here
+    // analyze: ignore(Crash): leader→worker failure injection, never received here
+    // analyze: ignore(Revoke): leader→worker steal/degrade retraction, never received here
+    // analyze: ignore(RingReroute): leader→worker reroute order, never received here
     fn dispatch(&mut self, ep: &Endpoint, env: Envelope) -> anyhow::Result<()> {
         let rank = rank_of(env.from);
         match env.msg {

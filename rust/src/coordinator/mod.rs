@@ -64,6 +64,67 @@
 //!    (`allpairs::PairAssignment`); tiles routed to row-home ranks.
 //! 3. **Eliminate** — ring exchange of row blocks; each edge block (a, c)
 //!    scanned against all N mediators; masks reduced to edges at the leader.
+//!
+//! # Protocol invariants (statically checked)
+//!
+//! The conformance analyzer (`cargo xtask analyze`, re-run as the tier-1
+//! test `tests/integration_analyze.rs`) proves the following invariants on
+//! every build; violating any of them is a CI failure, not a code review
+//! hope.
+//!
+//! **Wire-tag table.** Every [`Message`] variant owns exactly one encode arm
+//! and one decode arm in [`wire`], under a unique `u8` tag, and is
+//! constructed by the `every_message_variant_round_trips_framed` round-trip
+//! test:
+//!
+//! | tag | Message        | tag | Message       | tag | Message       |
+//! |-----|----------------|-----|---------------|-----|---------------|
+//! | 0   | AssignData     | 6   | ResultChunk   | 12  | Shutdown      |
+//! | 1   | TasksAhead     | 7   | Reassign      | 13  | Crash         |
+//! | 2   | AssignBlock    | 8   | RecoveredResult | 14 | TasksDone     |
+//! | 3   | ComputeTasks   | 9   | Stats         | 15  | Revoke        |
+//! | 4   | App            | 10  | Proceed       | 16  | RingReroute   |
+//! | 5   | Result         | 11  | PhaseDone     | 17  | Rejoin        |
+//!
+//! [`Payload`] tags: 0 CorrTile, 1 RingRows, 2 Edges, 3 Tiles, 4 Forces.
+//! Tags are append-only: retiring a variant retires its tag; reusing one
+//! trips the duplicate-tag lint.
+//!
+//! **Dispatch coverage.** Every `Message` variant must be either matched or
+//! explicitly pragma'd away at each dispatch site: the leader's
+//! `dispatch`/`pump` loops ([`leader`]), the worker's `worker_run` serve
+//! loop ([`worker`]), and the worker-context stash loops in [`app`]
+//! (`poll_control`, `ensure_blocks`, `recv_app_where`, `barrier`,
+//! `recv_app_or_reroute`, `barrier_or_reroute`). A `_ =>` catch-all does
+//! not count as handling — the analyzer forces every drop to be named.
+//!
+//! **Report completeness.** Every [`RankStats`] field is wire-encoded
+//! (`put_stats`/`take_stats`) and every `RankStats`/[`EngineReport`]/
+//! [`DistributedReport`] field is emitted by the `--jsonl` serializers
+//! ([`driver::rank_stats_json`], [`driver::engine_report_json`],
+//! [`driver::distributed_report_json`]).
+//!
+//! **Config parity.** Every `[run]` config key has a matching `pcit` CLI
+//! flag, every flag has a matching key, and every `QUORALL_*` env read maps
+//! to a run key — or carries a pragma naming the exception.
+//!
+//! **Hot-path hygiene.** The tagged regions (`transport.rs` recv loop,
+//! `matrix.rs` matmul-nt kernel) admit no `Mutex`/`RwLock`/`.lock(`/`unsafe`
+//! without a same-or-preceding-line allow pragma.
+//!
+//! **Pragma syntax** (line comments, file-scoped unless noted):
+//!
+//! ```text
+//! // analyze: ignore(<Variant>)            exempt a variant at this dispatch site
+//! // analyze: ignore(run.<key>)            run key intentionally has no CLI flag
+//! // analyze: ignore(flag <name>)          CLI flag intentionally has no run key
+//! // analyze: ignore(env QUORALL_<NAME>)   env read that is not a run key
+//! // analyze: allow(lock)                  one lock in a hot path (same/prev line)
+//! // analyze: allow(unsafe)                one unsafe in a hot path (same/prev line)
+//! // analyze: hot-path begin(<name>) / end(<name>)   delimit a tagged region
+//! ```
+//!
+//! Every pragma should carry a trailing `: reason`.
 
 pub mod messages;
 pub mod transport;
@@ -76,10 +137,10 @@ pub mod driver;
 
 pub use app::{DistributedApp, Plan, WorkerCtx};
 pub use driver::{
-    overlap_ratio, pipeline_default, run_app, run_app_with_sink, run_distributed_pcit,
-    run_resilient_pcit, run_resilient_pcit_at, run_single_node, scatter_default, steal_default,
-    time_to_first_task_secs, transport_default, DistributedReport, EngineOptions, EngineReport,
-    RankStats,
+    distributed_report_json, engine_report_json, overlap_ratio, pipeline_default, rank_stats_json,
+    run_app, run_app_with_sink, run_distributed_pcit, run_resilient_pcit, run_resilient_pcit_at,
+    run_single_node, scatter_default, steal_default, time_to_first_task_secs, transport_default,
+    DistributedReport, EngineOptions, EngineReport, RankStats,
 };
 pub use leader::ResultSink;
 pub use messages::{BlockData, DegradeMode, KillAt, Message, Payload, PlacedBlock};

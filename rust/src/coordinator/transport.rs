@@ -440,6 +440,12 @@ impl Endpoint {
         self.transport.send(self.rank, to, msg)
     }
 
+    // The receive path below is the engine's hottest code: every protocol
+    // message of every rank funnels through it. The endpoint owns its
+    // receive queue precisely so these fns never take a lock; the analyzer
+    // (`cargo xtask analyze`) enforces that statically.
+    // analyze: hot-path begin(recv-loop)
+
     /// Blocking receive. Returns None when all senders are gone. Time spent
     /// actually waiting is added to [`Endpoint::blocked_secs`].
     pub fn recv(&self) -> Option<Envelope> {
@@ -500,6 +506,8 @@ impl Endpoint {
         self.blocked_nanos.set(self.blocked_nanos.get() + nanos);
     }
 
+    // analyze: hot-path end(recv-loop)
+
     /// Seconds this rank has spent blocked inside receives so far.
     pub fn blocked_secs(&self) -> f64 {
         self.blocked_nanos.get() as f64 * 1e-9
@@ -522,6 +530,7 @@ impl Endpoint {
     /// peers only discover the death via heartbeat timeout. The memory
     /// backend has no wire to go silent on, so this degrades to the
     /// ordinary kill flag.
+    #[allow(clippy::mem_forget)] // the leak below is the whole point
     pub fn go_dark(&self) {
         match &self.transport.backend {
             Backend::Memory { .. } => self.transport.kill(self.rank),

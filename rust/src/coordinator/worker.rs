@@ -42,6 +42,16 @@ pub fn worker_main(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan)
     }
 }
 
+/// Worker→leader traffic never arrives at a worker, and `Proceed` is
+/// consumed inside the task-boundary polls (`app.rs`), not this loop;
+/// `cargo xtask analyze` verifies the remaining variants are matched.
+// analyze: ignore(Result): worker→leader gather, never received by a worker
+// analyze: ignore(ResultChunk): worker→leader streamed gather, never received by a worker
+// analyze: ignore(RecoveredResult): worker→leader recovery gather, never received by a worker
+// analyze: ignore(TasksDone): worker→leader progress heartbeat, never received by a worker
+// analyze: ignore(PhaseDone): worker→leader barrier vote, never received by a worker
+// analyze: ignore(Rejoin): worker→leader re-admission announcement, never received by a worker
+// analyze: ignore(Proceed): consumed by the barrier polls in app.rs, never by this loop
 fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
     let my_block = rank_of(endpoint.rank);
     let mem = MemoryAccountant::new();

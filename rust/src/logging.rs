@@ -44,6 +44,7 @@ impl fmt::Display for Level {
 static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
 
 fn init_from_env() -> u8 {
+    // analyze: ignore(env QUORALL_LOG): diagnostics verbosity, not a [run] knob
     let lvl = std::env::var("QUORALL_LOG")
         .ok()
         .and_then(|s| Level::from_str(&s))

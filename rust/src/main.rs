@@ -17,7 +17,8 @@
 use quorall::cli::{App, ArgSpec, Command, ParseOutcome, Parsed};
 use quorall::config::{BackendKind, DatasetConfig, PcitMode, RunConfig};
 use quorall::coordinator::{
-    run_distributed_pcit, run_single_node, DegradeMode, EngineOptions, KillAt, TransportKind,
+    distributed_report_json, engine_report_json, run_distributed_pcit, run_single_node,
+    DegradeMode, EngineOptions, KillAt, TransportKind,
 };
 use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
 use quorall::metrics::Table;
@@ -36,10 +37,19 @@ fn app() -> App {
                 .arg(ArgSpec::opt("to", "table end P", "111"))
                 .arg(ArgSpec::flag("emit-rust", "emit tables.rs initializer rows")),
         )
+        // UX-only pcit flags, exempt from the flag ↔ [run]-key parity lint
+        // (`cargo xtask analyze`):
+        // analyze: ignore(flag config): selects the TOML file itself, not a [run] knob
+        // analyze: ignore(flag csv): dataset source override — [dataset] path in TOML
+        // analyze: ignore(flag out): output path, not run configuration
+        // analyze: ignore(flag verify): cross-check switch, not run configuration
+        // analyze: ignore(flag jsonl): output format switch, not run configuration
         .command(
             Command::new("pcit", "run PCIT gene-network reconstruction")
                 .arg(ArgSpec::opt("config", "TOML config path (overrides flags)", ""))
                 .arg(ArgSpec::opt("ranks", "simulated MPI ranks", "8"))
+                .arg(ArgSpec::opt("threads-per-rank", "compute threads per rank (0 = default)", ""))
+                .arg(ArgSpec::opt("block", "tile block size override (0 = auto)", ""))
                 .arg(ArgSpec::opt("genes", "synthetic gene count", "512"))
                 .arg(ArgSpec::opt("samples", "synthetic sample count", "32"))
                 .arg(ArgSpec::opt("mode", "single | quorum-exact | quorum-local", "quorum-exact"))
@@ -88,10 +98,12 @@ fn app() -> App {
                     "",
                 ))
                 .arg(ArgSpec::opt("backend", "native | xla", "native"))
+                .arg(ArgSpec::opt("artifacts-dir", "backend artifact cache directory", ""))
                 .arg(ArgSpec::opt("seed", "dataset seed", "42"))
                 .arg(ArgSpec::opt("csv", "load expression CSV instead of synthetic", ""))
                 .arg(ArgSpec::opt("out", "write surviving edges CSV here", ""))
-                .arg(ArgSpec::flag("verify", "also run single-node and compare")),
+                .arg(ArgSpec::flag("verify", "also run single-node and compare"))
+                .arg(ArgSpec::flag("jsonl", "emit one machine-readable JSON report line")),
         )
         .command(
             Command::new("similarity", "distributed all-pairs similarity (top-k report)")
@@ -144,7 +156,8 @@ fn app() -> App {
                 ))
                 .arg(ArgSpec::opt("topk", "pairs to report", "10"))
                 .arg(ArgSpec::opt("seed", "feature seed", "42"))
-                .arg(ArgSpec::opt("backend", "native | xla", "native")),
+                .arg(ArgSpec::opt("backend", "native | xla", "native"))
+                .arg(ArgSpec::flag("jsonl", "emit one machine-readable JSON report line")),
         )
         .command(
             Command::new("nbody", "placement-decomposed n-body simulation")
@@ -196,7 +209,8 @@ fn app() -> App {
                 ))
                 .arg(ArgSpec::opt("steps", "leapfrog steps", "50"))
                 .arg(ArgSpec::opt("dt", "time step", "0.001"))
-                .arg(ArgSpec::opt("threads", "pool threads", "4")),
+                .arg(ArgSpec::opt("threads", "pool threads", "4"))
+                .arg(ArgSpec::flag("jsonl", "emit one machine-readable JSON report line")),
         )
         .command(
             Command::new(
@@ -606,6 +620,16 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
     if let Some(b) = parse_scatter_flag(p)? {
         cfg.streamed_scatter = b;
     }
+    if let Some(v) = p.get_str("threads-per-rank").filter(|s| !s.is_empty()) {
+        cfg.threads_per_rank =
+            v.parse().map_err(|_| anyhow::anyhow!("bad --threads-per-rank: {v}"))?;
+    }
+    if let Some(v) = p.get_str("block").filter(|s| !s.is_empty()) {
+        cfg.block = v.parse().map_err(|_| anyhow::anyhow!("bad --block: {v}"))?;
+    }
+    if let Some(v) = p.get_str("artifacts-dir").filter(|s| !s.is_empty()) {
+        cfg.artifacts_dir = std::path::PathBuf::from(v);
+    }
     parse_resilience_flags(p)?.apply_to_cfg(&mut cfg);
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
@@ -769,6 +793,10 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
         quorall::data::loader::write_edges_csv(std::path::Path::new(out), &rep.network.edges)?;
         println!("wrote {out}");
     }
+    if p.get_flag("jsonl") {
+        let line = distributed_report_json(&rep).to_string();
+        println!("{line}");
+    }
     Ok(())
 }
 
@@ -826,6 +854,10 @@ fn cmd_similarity(p: &Parsed) -> anyhow::Result<()> {
     for (x, y, s) in &top {
         println!("  ({x:4}, {y:4})  sim = {s:.4}");
     }
+    if p.get_flag("jsonl") {
+        let line = engine_report_json(&rep).to_string();
+        println!("{line}");
+    }
     Ok(())
 }
 
@@ -875,6 +907,10 @@ fn cmd_nbody(p: &Parsed) -> anyhow::Result<()> {
         strategy.name(),
         format_secs(sw.elapsed_secs())
     );
+    if p.get_flag("jsonl") {
+        let line = engine_report_json(&rep).to_string();
+        println!("{line}");
+    }
     Ok(())
 }
 

@@ -55,13 +55,15 @@ pub struct MemorySnapshot {
 
 /// Whole-process peak resident set size in bytes (Linux: ru_maxrss is KiB).
 pub fn peak_rss_bytes() -> u64 {
-    unsafe {
-        let mut ru: libc::rusage = std::mem::zeroed();
-        if libc::getrusage(libc::RUSAGE_SELF, &mut ru) == 0 {
-            (ru.ru_maxrss as u64) * 1024
-        } else {
-            0
-        }
+    use crate::util::sys;
+    let mut ru = sys::rusage::default();
+    // SAFETY: plain FFI call writing into a stack-owned struct whose
+    // declaration covers the full kernel layout (`util::sys`).
+    let r = unsafe { sys::getrusage(sys::RUSAGE_SELF, &mut ru) };
+    if r == 0 {
+        (ru.ru_maxrss as u64) * 1024
+    } else {
+        0
     }
 }
 

@@ -83,9 +83,9 @@ impl ThreadPool {
             m: Mutex::new(()),
             cv: Condvar::new(),
         });
+        // SAFETY: we block until `remaining == 0` before returning, so the
+        // borrowed closure outlives every task that references it.
         let f: Arc<dyn Fn(usize) + Sync + Send> = unsafe {
-            // SAFETY: we block until `remaining == 0` before returning, so the
-            // borrowed closure outlives every task that references it.
             std::mem::transmute::<Arc<dyn Fn(usize) + Sync + Send>, _>(Arc::new(f))
         };
         for i in 0..n {
@@ -158,7 +158,12 @@ impl<T> Clone for SendPtr<T> {
     }
 }
 impl<T> Copy for SendPtr<T> {}
+// SAFETY: SendPtr is a deliberate smuggle — soundness is delegated to each
+// use site, which must write disjoint indices and keep the target alive
+// across the blocking parallel call (the contract documented above).
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: as above — shared access is sound only under the disjoint-write
+// contract every caller upholds.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {

@@ -141,6 +141,7 @@ impl Gen {
 /// replayed with [`replay`].
 pub fn forall(name: &str, cases: usize, property: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
     install_capture_hook();
+    // analyze: ignore(env QUORALL_PROP_SEED): property-test replay seed, not a [run] knob
     let base_seed = match std::env::var("QUORALL_PROP_SEED") {
         Ok(s) => s.parse::<u64>().unwrap_or(0xC0FFEE),
         Err(_) => 0xC0FFEE,

@@ -435,6 +435,11 @@ const MC: usize = 64;
 /// Cache panel of B rows — reused across every A row of the i panel.
 const NC: usize = 64;
 
+// The matmul-nt kernel family below is the engine's compute hot path —
+// every correlation tile and similarity tile runs through it. No locks, no
+// stray unsafe: the analyzer (`cargo xtask analyze`) audits the region.
+// analyze: hot-path begin(matmul-nt)
+
 /// `dst = a · bᵀ` — the shared all-pairs kernel (EXPERIMENTS.md §Perf).
 ///
 /// Blocked over i (A rows) and j (B rows) only; the k (inner) dimension is
@@ -568,6 +573,7 @@ pub fn matmul_nt_pooled(a: &Matrix, b: &Matrix, pool: &ThreadPool) -> Matrix {
         pool.parallel_for_chunked(n, |range| {
             // SAFETY: each task writes a disjoint row range of `out`, and
             // `out` outlives the blocking parallel_for_chunked call.
+            // analyze: allow(unsafe): the SAFETY argument above is the audit
             let dst = unsafe {
                 std::slice::from_raw_parts_mut(out_ptr.get().add(range.start * m), range.len() * m)
             };
@@ -577,6 +583,8 @@ pub fn matmul_nt_pooled(a: &Matrix, b: &Matrix, pool: &ThreadPool) -> Matrix {
     }
     out
 }
+
+// analyze: hot-path end(matmul-nt)
 
 impl Index<(usize, usize)> for Matrix {
     type Output = f32;

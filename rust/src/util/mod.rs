@@ -7,6 +7,7 @@
 pub mod prng;
 pub mod stats;
 pub mod json;
+pub mod sys;
 pub mod timer;
 pub mod bytes;
 pub mod matrix;

@@ -1,0 +1,53 @@
+//! Minimal libc FFI surface (Linux) — the offline build vendors no `libc`
+//! crate, so the two syscalls the metrics layer needs are declared here
+//! directly. Layouts match the x86_64/aarch64 Linux ABI (`tv_sec`/`tv_nsec`
+//! and every `rusage` counter are C `long`, i.e. 64-bit on LP64).
+
+#![allow(non_camel_case_types)]
+
+/// `CLOCK_THREAD_CPUTIME_ID` from `<time.h>` (Linux).
+pub const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+/// `RUSAGE_SELF` from `<sys/resource.h>`.
+pub const RUSAGE_SELF: i32 = 0;
+
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct timespec {
+    pub tv_sec: i64,
+    pub tv_nsec: i64,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct timeval {
+    pub tv_sec: i64,
+    pub tv_usec: i64,
+}
+
+/// Full Linux `struct rusage`: the kernel writes every field, so the
+/// declaration must cover all of them even though only `ru_maxrss` is read.
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct rusage {
+    pub ru_utime: timeval,
+    pub ru_stime: timeval,
+    pub ru_maxrss: i64,
+    pub ru_ixrss: i64,
+    pub ru_idrss: i64,
+    pub ru_isrss: i64,
+    pub ru_minflt: i64,
+    pub ru_majflt: i64,
+    pub ru_nswap: i64,
+    pub ru_inblock: i64,
+    pub ru_oublock: i64,
+    pub ru_msgsnd: i64,
+    pub ru_msgrcv: i64,
+    pub ru_nsignals: i64,
+    pub ru_nvcsw: i64,
+    pub ru_nivcsw: i64,
+}
+
+extern "C" {
+    pub fn clock_gettime(clockid: i32, tp: *mut timespec) -> i32;
+    pub fn getrusage(who: i32, usage: *mut rusage) -> i32;
+}

@@ -54,8 +54,11 @@ impl ThreadCpuTimer {
 
 /// Current thread CPU time in seconds.
 pub fn thread_cpu_secs() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    let r = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    use crate::util::sys;
+    let mut ts = sys::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: plain FFI call writing into a stack-owned, correctly-sized
+    // timespec; no aliasing, no retained pointers.
+    let r = unsafe { sys::clock_gettime(sys::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
     if r != 0 {
         return 0.0;
     }

@@ -1,0 +1,151 @@
+//! Integration: the protocol-conformance analyzer (`cargo xtask analyze`)
+//! as a tier-1 gate.
+//!
+//! Two directions, both required:
+//! * the real tree must be **clean** — any wire/dispatch/report/parity/
+//!   hot-path drift fails `cargo test` with file:line findings, and
+//! * the seeded-defect fixtures must each **fail loudly**, pinning that
+//!   every check actually fires (a silently-vacuous analyzer would pass
+//!   the clean-tree test forever).
+//!
+//! The fixture sources live in `xtask/fixtures/` and are shared with the
+//! xtask unit tests via `xtask::fixtures`.
+
+use std::process::Command;
+
+use xtask::fixtures::{BAD_DISPATCH, BAD_HOTPATH, BAD_MESSAGES, BAD_WIRE};
+use xtask::{check_dispatch, check_hot_paths, check_wire, render, DispatchSite, Src};
+
+/// 1-based line of the first line containing `marker` — fixtures anchor
+/// expected findings by marker comment, not by brittle line numbers.
+fn line_of(text: &str, marker: &str) -> usize {
+    text.lines()
+        .position(|l| l.contains(marker))
+        .map(|i| i + 1)
+        .unwrap_or_else(|| panic!("marker {marker:?} not found"))
+}
+
+#[test]
+fn analyzer_is_clean_on_the_tree() {
+    let rust_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = xtask::analyze_tree(rust_dir).expect("analyze_tree I/O");
+    assert!(
+        findings.is_empty(),
+        "protocol conformance findings (fix the code or pragma with a reason):\n{}",
+        render(&findings)
+    );
+}
+
+#[test]
+fn fixture_bad_wire_reports_all_three_seeded_defects() {
+    let messages = Src::new("fixtures/bad_messages.rs", BAD_MESSAGES);
+    let wire = Src::new("fixtures/bad_wire.rs", BAD_WIRE);
+    let findings = check_wire(&messages, &wire);
+    assert_eq!(findings.len(), 3, "expected exactly 3 wire findings:\n{}", render(&findings));
+    assert!(findings.iter().all(|f| f.check == "wire"), "{}", render(&findings));
+
+    // Defect 1: Gamma encodes under Beta's tag — anchored at the encode arm.
+    let dup = findings
+        .iter()
+        .find(|f| f.msg.contains("duplicate wire tag 1"))
+        .unwrap_or_else(|| panic!("no duplicate-tag finding:\n{}", render(&findings)));
+    assert_eq!(dup.file, "fixtures/bad_wire.rs");
+    assert_eq!(dup.line, line_of(BAD_WIRE, "seeded duplicate-tag defect"));
+    assert!(dup.msg.contains("Beta") && dup.msg.contains("Gamma"), "{}", dup.msg);
+
+    // Defect 2: Gamma has no decode arm — anchored at the enum variant.
+    // (The comment in take_message that *mentions* Gamma must not count.)
+    let dec = findings
+        .iter()
+        .find(|f| f.msg.contains("no decode arm"))
+        .unwrap_or_else(|| panic!("no missing-decode finding:\n{}", render(&findings)));
+    assert_eq!(dec.file, "fixtures/bad_messages.rs");
+    assert_eq!(dec.line, line_of(BAD_MESSAGES, "Gamma(u64)"));
+    assert!(dec.msg.contains("Message::Gamma"), "{}", dec.msg);
+
+    // Defect 3: Delta is missing from the round-trip property test.
+    let rt = findings
+        .iter()
+        .find(|f| f.msg.contains("round-trip"))
+        .unwrap_or_else(|| panic!("no round-trip-gap finding:\n{}", render(&findings)));
+    assert_eq!(rt.file, "fixtures/bad_messages.rs");
+    assert_eq!(rt.line, line_of(BAD_MESSAGES, "Delta,"));
+    assert!(rt.msg.contains("Message::Delta"), "{}", rt.msg);
+}
+
+#[test]
+fn fixture_bad_dispatch_reports_the_unmatched_variant_only() {
+    let messages = Src::new("fixtures/bad_messages.rs", BAD_MESSAGES);
+    let dispatch = Src::new("fixtures/bad_dispatch.rs", BAD_DISPATCH);
+    let site = DispatchSite { name: "fixture dispatch", file: &dispatch, fns: &["dispatch"] };
+    let findings = check_dispatch(&messages, &[site]);
+    // Gamma is the one seeded defect; Alpha/Beta are matched and Delta is
+    // pragma'd away — neither may fire.
+    assert_eq!(findings.len(), 1, "expected exactly 1 dispatch finding:\n{}", render(&findings));
+    let f = &findings[0];
+    assert_eq!(f.check, "dispatch");
+    assert_eq!(f.file, "fixtures/bad_dispatch.rs");
+    assert_eq!(f.line, line_of(BAD_DISPATCH, "pub fn dispatch"));
+    assert!(f.msg.contains("Message::Gamma"), "{}", f.msg);
+    assert!(f.msg.contains("fixture dispatch"), "{}", f.msg);
+}
+
+#[test]
+fn fixture_bad_hotpath_reports_the_mutex_but_honors_the_allow_pragma() {
+    let hot = Src::new("fixtures/bad_hotpath.rs", BAD_HOTPATH);
+    let findings = check_hot_paths(&[(&hot, "recv-loop")]);
+    // The `.lock(` acquisition is the one seeded defect; the unsafe block
+    // directly under its `allow(unsafe)` pragma must not fire.
+    assert_eq!(findings.len(), 1, "expected exactly 1 hot-path finding:\n{}", render(&findings));
+    let f = &findings[0];
+    assert_eq!(f.check, "hot-path");
+    assert_eq!(f.file, "fixtures/bad_hotpath.rs");
+    assert_eq!(f.line, line_of(BAD_HOTPATH, "seeded hot-path Mutex defect"));
+    assert!(f.msg.contains(".lock("), "{}", f.msg);
+}
+
+#[test]
+fn findings_render_as_file_line_check() {
+    let hot = Src::new("fixtures/bad_hotpath.rs", BAD_HOTPATH);
+    let findings = check_hot_paths(&[(&hot, "recv-loop")]);
+    let text = render(&findings);
+    let want = format!(
+        "fixtures/bad_hotpath.rs:{}: [hot-path]",
+        line_of(BAD_HOTPATH, "seeded hot-path Mutex defect")
+    );
+    assert!(text.starts_with(&want), "render format drifted: {text}");
+}
+
+/// `--jsonl` emits one machine-readable report line whose keys the
+/// analyzer guarantees cover every `DistributedReport` field.
+#[test]
+fn pcit_jsonl_emits_a_parseable_full_report() {
+    let out = Command::new(env!("CARGO_BIN_EXE_quorall"))
+        .args(["pcit", "--ranks", "3", "--genes", "96", "--samples", "20", "--jsonl"])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout: {text}\nstderr: {err}");
+    let line = text
+        .lines()
+        .rev()
+        .find(|l| l.starts_with('{'))
+        .unwrap_or_else(|| panic!("no JSON line in output:\n{text}"));
+    let json = quorall::util::json::Json::parse(line).expect("JSONL line parses");
+    for key in [
+        "network",
+        "stats",
+        "wall_secs",
+        "quorum_size",
+        "peak_bytes_per_rank",
+        "total_comm_bytes",
+        "coverage_ratio",
+        "transport",
+        "health",
+    ] {
+        assert!(json.get(key).is_some(), "JSONL report missing key {key}: {line}");
+    }
+    let stats = json.get("stats").and_then(|v| v.as_arr()).expect("stats array");
+    assert_eq!(stats.len(), 3, "one stats object per rank");
+}

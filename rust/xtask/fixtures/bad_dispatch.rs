@@ -1,0 +1,13 @@
+//! Analyzer fixture: a dispatch loop that silently drops a variant.
+//! Gamma is neither matched nor pragma'd (the seeded defect); Delta is
+//! legitimately exempted by pragma. Never compiled — parsed only.
+
+pub fn dispatch(&mut self, env: Envelope) {
+    match env.msg {
+        Message::Alpha => self.on_alpha(),
+        Message::Beta { id } => self.on_beta(id),
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+// analyze: ignore(Delta): fixture — Delta never reaches this site

@@ -1,0 +1,13 @@
+//! Analyzer fixture: a tagged hot path containing a Mutex acquisition
+//! without an allow pragma (the seeded defect) and an unsafe block that is
+//! correctly pragma'd. Never compiled — parsed only.
+
+// analyze: hot-path begin(recv-loop)
+pub fn recv(&self) -> Envelope {
+    let guard = self.queue.lock().unwrap(); // seeded hot-path Mutex defect
+    // analyze: allow(unsafe): fixture — pointer read is pre-validated
+    let v = unsafe { *self.ptr };
+    drop(guard);
+    make_envelope(v)
+}
+// analyze: hot-path end(recv-loop)

@@ -1,0 +1,18 @@
+//! Analyzer fixture: the message enums the seeded-defect fixtures
+//! (bad_wire.rs, bad_dispatch.rs) mishandle. Never compiled — parsed only.
+
+pub enum Message {
+    /// Clean: encoded, decoded, round-tripped, dispatched.
+    Alpha,
+    /// Clean codec; dispatched.
+    Beta { id: usize },
+    /// Defective: duplicate wire tag, no decode arm, not dispatched.
+    Gamma(u64),
+    /// Defective: missing from the round-trip test; pragma'd at dispatch.
+    Delta,
+}
+
+pub enum Payload {
+    /// Clean on every axis.
+    Tile(Vec<f32>),
+}

@@ -1,0 +1,54 @@
+//! Analyzer fixture: a wire codec with three seeded defects —
+//! a duplicate wire tag (Gamma encodes as Beta's tag), a missing decode
+//! arm (Gamma), and a round-trip coverage gap (Delta). Never compiled.
+
+pub fn encode_message(msg: &Message) -> Vec<u8> {
+    let mut out = Vec::new();
+    match msg {
+        Message::Alpha => put_u8(&mut out, 0),
+        Message::Beta { id } => {
+            put_u8(&mut out, 1);
+            put_u64(&mut out, *id as u64);
+        }
+        Message::Gamma(x) => put_u8(&mut out, 1), // seeded duplicate-tag defect
+        Message::Delta => put_u8(&mut out, 3),
+    }
+    out
+}
+
+pub fn take_message(r: &mut Reader) -> Message {
+    match take_u8(r) {
+        0 => Message::Alpha,
+        1 => Message::Beta { id: take_u64(r) as usize },
+        3 => Message::Delta,
+        t => panic!("unknown tag {t}"),
+    }
+    // seeded defect: Message::Gamma has no decode arm (mentioned only in
+    // this comment, which the masked scan must not count).
+}
+
+pub fn put_payload(out: &mut Vec<u8>, p: &Payload) {
+    match p {
+        Payload::Tile(v) => {
+            put_u8(out, 0);
+            put_f32s(out, v);
+        }
+    }
+}
+
+pub fn take_payload(r: &mut Reader) -> Payload {
+    match take_u8(r) {
+        0 => Payload::Tile(take_f32s(r)),
+        t => panic!("unknown payload tag {t}"),
+    }
+}
+
+mod tests {
+    fn every_message_variant_round_trips_framed() {
+        let _ = Message::Alpha;
+        let _ = Message::Beta { id: 7 };
+        let _ = Message::Gamma(9);
+        let _ = Payload::Tile(vec![1.0]);
+        // seeded defect: Message::Delta is never constructed here.
+    }
+}

@@ -1,0 +1,79 @@
+//! `cargo xtask analyze` — run the protocol conformance pass over the
+//! tree and exit non-zero on any finding. See ../src/lib.rs for what the
+//! five checks enforce and ROADMAP.md for why they exist.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = None;
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                if i + 1 >= args.len() {
+                    eprintln!("--root requires a path");
+                    return ExitCode::FAILURE;
+                }
+                root = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            "--help" | "-h" => {
+                print_help();
+                return ExitCode::SUCCESS;
+            }
+            other if cmd.is_none() => {
+                cmd = Some(other.to_string());
+                i += 1;
+            }
+            other => {
+                eprintln!("unknown argument: {other}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    match cmd.as_deref() {
+        Some("analyze") => analyze(&root),
+        Some(other) => {
+            eprintln!("unknown xtask command: {other}");
+            print_help();
+            ExitCode::FAILURE
+        }
+        None => {
+            print_help();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn analyze(root: &std::path::Path) -> ExitCode {
+    match xtask::analyze_tree(root) {
+        Ok(findings) if findings.is_empty() => {
+            println!(
+                "analyze: wire / dispatch / reports / parity / hot-path checks clean under {}",
+                root.display()
+            );
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            eprintln!("{}", xtask::render(&findings));
+            eprintln!("analyze: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("analyze: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "usage: cargo xtask analyze [--root <rust-dir>]\n\n\
+         Static protocol-conformance checks over the coordinator sources:\n\
+         wire codec arms, dispatch coverage, report-field drift, CLI/config/env\n\
+         parity, and the hot-path lock/unsafe audit. Non-zero exit on findings."
+    );
+}
