@@ -1,0 +1,197 @@
+//! Hybrid intra-rank parallelism: thread-count scaling at fixed P.
+//!
+//! Every worker rank owns a tile pool of `threads_per_rank` threads that
+//! computes tile rows in parallel and commits them in strict serial order,
+//! so the output is bitwise-identical to the single-threaded run. This
+//! bench makes the throughput side measurable: P = 4 ranks, threads swept
+//! over {1, 2, 4, 8} ({1, 4} under `--quick`), all three apps.
+//!
+//! Asserted, not just reported: every multi-threaded run is
+//! bitwise-identical to its t = 1 baseline, and (full mode only) the
+//! similarity t = 4 wall clock strictly beats t = 1. The strict-win
+//! assertion is pinned to similarity because it is the pure
+//! tile-throughput app: n-body pays a deliberate 2x flop tax for its
+//! deterministic two-pass reduction, and exact PCIT serializes on the
+//! ring — both still report their scaling here, but on an oversubscribed
+//! host (P x t compute threads) their win is not guaranteed.
+//!
+//! Emits `BENCH_threads.json`.
+//!
+//! Run: `cargo bench --bench threads [-- --quick]`
+
+use quorall::apps::nbody::{run_distributed_nbody, Bodies};
+use quorall::apps::similarity::run_distributed_similarity;
+use quorall::benchkit;
+use quorall::config::{PcitMode, RunConfig};
+use quorall::coordinator::{run_distributed_pcit, EngineOptions, RankStats};
+use quorall::data::synthetic::{ExpressionDataset, SyntheticSpec};
+use quorall::metrics::Table;
+use quorall::quorum::Strategy;
+use quorall::runtime::{Executor, NativeBackend};
+use quorall::util::json::Json;
+use quorall::util::prng::Rng;
+use quorall::util::timer::format_secs;
+use quorall::util::Matrix;
+use std::sync::Arc;
+use std::time::Instant;
+
+const P: usize = 4;
+
+fn opts(threads: usize) -> EngineOptions {
+    let mut o = EngineOptions::new(P, Strategy::Cyclic);
+    o.threads_per_rank = threads;
+    o
+}
+
+/// Spread of per-rank mean task-execution times, `min..max` across ranks —
+/// the per-rank saturation signal (a shrinking mean as threads grow).
+fn rank_task_stats(stats: &[RankStats]) -> String {
+    let means: Vec<f64> = stats
+        .iter()
+        .filter(|s| s.tasks_executed > 0)
+        .map(|s| s.task_exec_total_secs / s.tasks_executed as f64)
+        .collect();
+    if means.is_empty() {
+        return "-".into();
+    }
+    let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = means.iter().cloned().fold(0.0f64, f64::max);
+    format!("{}..{}", format_secs(min), format_secs(max))
+}
+
+/// Sweep one app over the thread counts: row per count, bitwise parity
+/// against the t = 1 baseline, optional strict t = 4 < t = 1 wall check.
+fn sweep<T: PartialEq>(
+    app: &'static str,
+    threads: &[usize],
+    assert_scaling: bool,
+    run: impl Fn(usize) -> anyhow::Result<(f64, T, String)>,
+    table: &mut Table,
+    walls: &mut Vec<(String, f64)>,
+) -> anyhow::Result<()> {
+    let (w1, base, stats1) = run(threads[0])?;
+    table.row(vec![
+        app.into(),
+        threads[0].to_string(),
+        format_secs(w1),
+        "1.00x".into(),
+        stats1,
+    ]);
+    walls.push((format!("wall_{app}_t{}", threads[0]), w1));
+    let mut wall4 = None;
+    for &t in &threads[1..] {
+        let (w, out, stats) = run(t)?;
+        assert!(out == base, "{app}: {t} threads changed bits vs single-threaded");
+        if t == 4 {
+            wall4 = Some(w);
+        }
+        table.row(vec![
+            app.into(),
+            t.to_string(),
+            format_secs(w),
+            format!("{:.2}x", w1 / w),
+            stats,
+        ]);
+        walls.push((format!("wall_{app}_t{t}"), w));
+    }
+    if assert_scaling {
+        let w4 = wall4.expect("sweep includes t = 4");
+        assert!(
+            w4 < w1,
+            "{app}: t = 4 wall {} must strictly beat t = 1 wall {}",
+            format_secs(w4),
+            format_secs(w1)
+        );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = benchkit::quick_mode();
+    let threads: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let (n_sim, dim) = if quick { (800, 128) } else { (2400, 384) };
+    let n_bodies = if quick { 1200 } else { 3200 };
+    let genes = if quick { 256 } else { 448 };
+
+    let mut rng = Rng::new(53);
+    let feats = Matrix::from_fn(n_sim, dim, |_, _| rng.normal_f32());
+    let bodies = Bodies::random(n_bodies, 13);
+    let dataset = ExpressionDataset::generate(SyntheticSpec {
+        genes,
+        samples: 32,
+        modules: 8,
+        noise: 0.6,
+        seed: 19,
+    });
+    let exec: Executor = Arc::new(NativeBackend::new());
+
+    let mut table = Table::new(
+        &format!("intra-rank tile-pool scaling, P = {P}, threads per rank swept"),
+        &["app", "threads", "wall", "speedup", "task mean/rank"],
+    );
+    let mut meta: Vec<(&str, Json)> = vec![("quick", Json::Bool(quick))];
+    let mut walls: Vec<(String, f64)> = Vec::new();
+
+    sweep(
+        "similarity",
+        threads,
+        !quick,
+        |t| {
+            let e = Arc::clone(&exec);
+            let t0 = Instant::now();
+            let (m, rep) = run_distributed_similarity(&feats, &e, &opts(t))?;
+            Ok((
+                t0.elapsed().as_secs_f64(),
+                m.as_slice().to_vec(),
+                rank_task_stats(&rep.stats),
+            ))
+        },
+        &mut table,
+        &mut walls,
+    )?;
+
+    sweep(
+        "nbody",
+        threads,
+        false,
+        |t| {
+            let t0 = Instant::now();
+            let (f, rep) = run_distributed_nbody(&bodies, &opts(t))?;
+            Ok((t0.elapsed().as_secs_f64(), f, rank_task_stats(&rep.stats)))
+        },
+        &mut table,
+        &mut walls,
+    )?;
+
+    sweep(
+        "pcit-exact",
+        threads,
+        false,
+        |t| {
+            let cfg = RunConfig {
+                ranks: P,
+                mode: PcitMode::QuorumExact,
+                threads_per_rank: t,
+                ..RunConfig::default()
+            };
+            let t0 = Instant::now();
+            let rep = run_distributed_pcit(&cfg, &dataset, Arc::clone(&exec))?;
+            Ok((t0.elapsed().as_secs_f64(), rep.network.edges, rank_task_stats(&rep.stats)))
+        },
+        &mut table,
+        &mut walls,
+    )?;
+
+    benchkit::emit(&table);
+    for (k, v) in &walls {
+        meta.push((k.as_str(), Json::Num(*v)));
+    }
+    let payload = benchkit::json_payload("threads", meta, &[&table]);
+    benchkit::write_json(std::path::Path::new("BENCH_threads.json"), &payload)?;
+    println!("expected shape: tile compute dominates similarity, so its wall drops near-linearly");
+    println!("until the host's cores are oversubscribed (P x t threads); n-body pays a 2x flop");
+    println!("tax for the deterministic two-pass reduction, so its curve starts at ~0.5x ideal;");
+    println!("exact PCIT scales phase 1 but serializes on the elimination ring. Output is");
+    println!("bitwise-identical at every thread count — parallel compute, serial commit order.");
+    Ok(())
+}

@@ -115,6 +115,86 @@ fn pair_forces(
     (fa, fb)
 }
 
+/// [`pair_forces`] across an intra-rank pool, bitwise-identical to the
+/// serial kernel at any thread count via a **two-pass row-parallel**
+/// schedule: pass A parallelizes over `ii` and accumulates only `fa[ii]`
+/// (its `jj`-ascending accumulation order is exactly the serial one); pass
+/// B parallelizes over `jj`, recomputes the same `s` per pair with the
+/// identical expression order (f64 ops are deterministic), and accumulates
+/// only `fb[jj]` (its `ii`-ascending order is exactly the serial one).
+/// Costs 2× the pair evaluations, which is why it is gated on a pool being
+/// present — serial callers keep the single-pass kernel.
+fn pair_forces_pooled(
+    mass_a: &[f64],
+    pos_a: &[[f64; 3]],
+    mass_b: &[f64],
+    pos_b: &[[f64; 3]],
+    diag: bool,
+    pool: Option<&ThreadPool>,
+) -> (Vec<[f64; 3]>, Vec<[f64; 3]>) {
+    let Some(pool) = pool.filter(|p| p.size() > 1 && mass_a.len().max(mass_b.len()) >= 2) else {
+        return pair_forces(mass_a, pos_a, mass_b, pos_b, diag);
+    };
+    let mut fa = vec![[0.0; 3]; mass_a.len()];
+    let mut fb = vec![[0.0; 3]; mass_b.len()];
+    // analyze: hot-path begin(pair-forces)
+    {
+        let fa_ptr = crate::pool::SendPtr(fa.as_mut_ptr());
+        pool.parallel_for_chunked(mass_a.len(), |r| {
+            // SAFETY: each chunk writes the disjoint `fa` rows `r`, and `fa`
+            // outlives the blocking parallel_for_chunked call.
+            // analyze: allow(unsafe): the SAFETY argument above is the audit
+            let dst = unsafe { std::slice::from_raw_parts_mut(fa_ptr.get().add(r.start), r.len()) };
+            for (k, ii) in r.enumerate() {
+                let pi = pos_a[ii];
+                let mi = mass_a[ii];
+                for jj in 0..mass_b.len() {
+                    if diag && jj <= ii {
+                        continue;
+                    }
+                    let pj = pos_b[jj];
+                    let dx = pj[0] - pi[0];
+                    let dy = pj[1] - pi[1];
+                    let dz = pj[2] - pi[2];
+                    let r2 = dx * dx + dy * dy + dz * dz + SOFTENING * SOFTENING;
+                    let inv_r3 = 1.0 / (r2 * r2.sqrt());
+                    let s = G * mi * mass_b[jj] * inv_r3;
+                    dst[k][0] += s * dx;
+                    dst[k][1] += s * dy;
+                    dst[k][2] += s * dz;
+                }
+            }
+        });
+        let fb_ptr = crate::pool::SendPtr(fb.as_mut_ptr());
+        pool.parallel_for_chunked(mass_b.len(), |r| {
+            // SAFETY: disjoint `fb` rows `r`; `fb` outlives the call.
+            // analyze: allow(unsafe): the SAFETY argument above is the audit
+            let dst = unsafe { std::slice::from_raw_parts_mut(fb_ptr.get().add(r.start), r.len()) };
+            for ii in 0..mass_a.len() {
+                let pi = pos_a[ii];
+                let mi = mass_a[ii];
+                for (k, jj) in r.clone().enumerate() {
+                    if diag && jj <= ii {
+                        continue;
+                    }
+                    let pj = pos_b[jj];
+                    let dx = pj[0] - pi[0];
+                    let dy = pj[1] - pi[1];
+                    let dz = pj[2] - pi[2];
+                    let r2 = dx * dx + dy * dy + dz * dz + SOFTENING * SOFTENING;
+                    let inv_r3 = 1.0 / (r2 * r2.sqrt());
+                    let s = G * mi * mass_b[jj] * inv_r3;
+                    dst[k][0] -= s * dx;
+                    dst[k][1] -= s * dy;
+                    dst[k][2] -= s * dz;
+                }
+            }
+        });
+    }
+    // analyze: hot-path end(pair-forces)
+    (fa, fb)
+}
+
 /// [`pair_forces`] over index ranges of a full particle system.
 fn block_pair_forces(
     bodies: &Bodies,
@@ -316,7 +396,7 @@ fn task_partials(
     if ma.is_empty() && mb.is_empty() {
         return None;
     }
-    let (fa, fb) = pair_forces(ma, pa, mb, pb, t.a == t.b);
+    let (fa, fb) = pair_forces_pooled(ma, pa, mb, pb, t.a == t.b, ctx.tile_pool());
     ctx.corr_tiles += 1;
     Some(vec![
         (ctx.block_range(t.a).start, fa),
@@ -427,6 +507,31 @@ pub fn simulate_with_initial_forces(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn pair_forces_pooled_is_bitwise_serial() {
+        // Exact equality on purpose: the two-pass schedule must reproduce
+        // the serial kernel bit for bit, off-diagonal and diagonal alike.
+        let b = Bodies::random(57, 3);
+        let (ma, pa) = (&b.mass[..30], &b.pos[..30]);
+        let (mb, pb) = (&b.mass[30..], &b.pos[30..]);
+        for t in [2usize, 3, 4] {
+            let pool = ThreadPool::new(t);
+            let (sa, sb) = pair_forces(ma, pa, mb, pb, false);
+            let (qa, qb) = pair_forces_pooled(ma, pa, mb, pb, false, Some(&pool));
+            assert_eq!(sa, qa, "fa t={t}");
+            assert_eq!(sb, qb, "fb t={t}");
+            // Diagonal (same-block) tile.
+            let (sa, sb) = pair_forces(ma, pa, ma, pa, true);
+            let (qa, qb) = pair_forces_pooled(ma, pa, ma, pa, true, Some(&pool));
+            assert_eq!(sa, qa, "diag fa t={t}");
+            assert_eq!(sb, qb, "diag fb t={t}");
+        }
+        // No pool → exact serial path.
+        let (sa, sb) = pair_forces(ma, pa, mb, pb, false);
+        let (qa, qb) = pair_forces_pooled(ma, pa, mb, pb, false, None);
+        assert_eq!((sa, sb), (qa, qb));
+    }
 
     #[test]
     fn quorum_forces_match_direct() {

@@ -98,7 +98,12 @@ impl PcitApp {
                 // streamed blocks): exit without reporting.
                 return None;
             }
-            let tile = Arc::new(self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view()));
+            let tile = Arc::new(crate::runtime::corr_tile_pooled(
+                self.exec.as_ref(),
+                ctx.tile_pool(),
+                ctx.block_rows(t.a).view(),
+                ctx.block_rows(t.b).view(),
+            ));
             ctx.corr_tiles += 1;
             ctx.complete_task(*t);
             if t.a == t.b {
@@ -231,10 +236,14 @@ impl PcitApp {
             }
             let sw = ThreadCpuTimer::start();
             for t in &tasks {
-                let tile = Arc::new(
-                    self.exec
-                        .corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view()),
-                );
+                // Substitute recompute rides the same pool as the normal
+                // task loop — pooled or serial, the tiles are bitwise equal.
+                let tile = Arc::new(crate::runtime::corr_tile_pooled(
+                    self.exec.as_ref(),
+                    ctx.tile_pool(),
+                    ctx.block_rows(t.a).view(),
+                    ctx.block_rows(t.b).view(),
+                ));
                 ctx.corr_tiles += 1;
                 let deliver = [(t.a, t.b, false), (t.b, t.a, true)];
                 let n_dests = if t.a == t.b { 1 } else { 2 };
@@ -284,9 +293,12 @@ impl PcitApp {
             if vr.len() == 0 || jr.len() == 0 {
                 continue;
             }
-            let tile = self
-                .exec
-                .corr_tile(ctx.block_rows(v).view(), ctx.block_rows(j).view());
+            let tile = crate::runtime::corr_tile_pooled(
+                self.exec.as_ref(),
+                ctx.tile_pool(),
+                ctx.block_rows(v).view(),
+                ctx.block_rows(j).view(),
+            );
             ctx.corr_tiles += 1;
             row.set_block(0, jr.start, &tile);
         }
@@ -429,8 +441,16 @@ impl PcitApp {
             return;
         }
         // cxy: zero-copy window of my rows at the other block's columns.
+        // The pooled scan chunks cxy and rxz (= my_rows) together along
+        // their shared row axis; bitwise-identical to the serial tile.
         let cxy = my_rows.view_block(0, other_range.start, a, b);
-        let flags = self.exec.pcit_tile(cxy, my_rows.view(), other_rows.view());
+        let flags = crate::runtime::pcit_tile_pooled(
+            self.exec.as_ref(),
+            ctx.tile_pool(),
+            cxy,
+            my_rows.view(),
+            other_rows.view(),
+        );
         ctx.elim_tiles += 1;
         let mask = flags_to_mask(&flags);
         let diagonal = other_block == home;
@@ -540,7 +560,12 @@ impl PcitApp {
             return true;
         }
         // Tiles read the quorum blocks in place — no per-task clones.
-        let cxy = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view());
+        let cxy = crate::runtime::corr_tile_pooled(
+            self.exec.as_ref(),
+            ctx.tile_pool(),
+            ctx.block_rows(t.a).view(),
+            ctx.block_rows(t.b).view(),
+        );
         ctx.corr_tiles += 1;
         if self.use_pcit {
             // Mediator panel: all quorum genes, concatenated.
@@ -554,19 +579,51 @@ impl PcitApp {
             let panel_cols: usize = panel.iter().map(|&(_, l)| l).sum();
             let mut rxz = Matrix::zeros(a_len, panel_cols);
             let mut ryz = Matrix::zeros(b_len, panel_cols);
-            let mut c0 = 0usize;
-            for &(qb, qlen) in &panel {
-                if qlen == 0 {
-                    continue;
+            // Compute-in-parallel / commit-in-order: the per-quorum-block
+            // panel correlations are independent, so a pooled rank maps
+            // them across its threads; the `set_block` commits below run
+            // serially at the original column offsets, so `rxz`/`ryz` are
+            // bitwise-identical to the serial assembly.
+            let entries: Vec<(usize, usize)> = {
+                let mut c0 = 0usize;
+                panel
+                    .iter()
+                    .filter(|&&(_, qlen)| qlen > 0)
+                    .map(|&(qb, qlen)| {
+                        let e = (qb, c0);
+                        c0 += qlen;
+                        e
+                    })
+                    .collect()
+            };
+            let tiles: Vec<(Matrix, Matrix)> = {
+                let a_view = ctx.block_rows(t.a).view();
+                let b_view = ctx.block_rows(t.b).view();
+                let q_views: Vec<_> =
+                    entries.iter().map(|&(qb, _)| ctx.block_rows(qb).view()).collect();
+                match ctx.tile_pool() {
+                    Some(pool) if pool.size() > 1 && q_views.len() > 1 => pool
+                        .parallel_map(q_views.len(), |k| {
+                            (self.exec.corr_tile(a_view, q_views[k]), self.exec.corr_tile(b_view, q_views[k]))
+                        }),
+                    _ => q_views
+                        .iter()
+                        .map(|&qv| (self.exec.corr_tile(a_view, qv), self.exec.corr_tile(b_view, qv)))
+                        .collect(),
                 }
-                let ta = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(qb).view());
-                let tb = self.exec.corr_tile(ctx.block_rows(t.b).view(), ctx.block_rows(qb).view());
-                ctx.corr_tiles += 2;
-                rxz.set_block(0, c0, &ta);
-                ryz.set_block(0, c0, &tb);
-                c0 += qlen;
+            };
+            for (&(_, c0), (ta, tb)) in entries.iter().zip(&tiles) {
+                rxz.set_block(0, c0, ta);
+                ryz.set_block(0, c0, tb);
             }
-            let flags = self.exec.pcit_tile(cxy.view(), rxz.view(), ryz.view());
+            ctx.corr_tiles += 2 * entries.len() as u64;
+            let flags = crate::runtime::pcit_tile_pooled(
+                self.exec.as_ref(),
+                ctx.tile_pool(),
+                cxy.view(),
+                rxz.view(),
+                ryz.view(),
+            );
             ctx.elim_tiles += 1;
             let mask = flags_to_mask(&flags);
             self.collect_task_edges(ctx, t, &cxy, Some(&mask), edges);

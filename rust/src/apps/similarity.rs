@@ -236,8 +236,15 @@ impl SimilarityApp {
         if ra.is_empty() || rb.is_empty() {
             return None;
         }
-        // Zero-copy: tiles read straight from the placement blocks.
-        let tile = self.exec.corr_tile(ctx.block_rows(t.a).view(), ctx.block_rows(t.b).view());
+        // Zero-copy: tiles read straight from the placement blocks. The
+        // row-chunked pooled path is bitwise-identical to the serial kernel
+        // (falls through to it when the rank has no tile pool).
+        let tile = crate::runtime::corr_tile_pooled(
+            self.exec.as_ref(),
+            ctx.tile_pool(),
+            ctx.block_rows(t.a).view(),
+            ctx.block_rows(t.b).view(),
+        );
         ctx.corr_tiles += 1;
         Some((ra.start, rb.start, tile))
     }

@@ -244,7 +244,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         Self {
             ranks: 4,
-            threads_per_rank: 1,
+            threads_per_rank: crate::coordinator::threads_default(),
             mode: PcitMode::QuorumExact,
             strategy: Strategy::Cyclic,
             pipeline: crate::coordinator::pipeline_default(),

@@ -50,6 +50,12 @@ pub struct Plan {
     /// compute time before each task after the first, making it run
     /// `factor`× slower without changing any computed byte.
     pub throttle: Option<(usize, u32)>,
+    /// Intra-rank compute threads: each worker sizes its tile-kernel
+    /// [`crate::pool::ThreadPool`] with this (the hybrid MPI+OpenMP split
+    /// of the paper's implementation). 1 = no pool spawned. Tile helpers
+    /// compute in parallel but commit in strict serial order, so any value
+    /// must be bitwise-identical to 1.
+    pub threads: usize,
     /// Run start reference — workers stamp
     /// `RankStats::time_to_first_task_secs` against it.
     pub t0: Instant,
@@ -273,11 +279,23 @@ pub struct WorkerCtx {
     pub elim_tiles: u64,
     pub phase1_secs: f64,
     pub phase2_secs: f64,
+    /// Intra-rank tile-compute pool, sized by [`Plan::threads`]; `None`
+    /// when `threads <= 1` so the default single-threaded path spawns
+    /// nothing. Shared by the normal task loop, recovery recompute, and
+    /// stolen-task execution (they all run through the same per-task app
+    /// kernels). Pass as `ctx.pool()` into the pooled tile helpers.
+    pub pool: Option<Arc<crate::pool::ThreadPool>>,
 }
 
 impl WorkerCtx {
     pub fn block_range(&self, b: usize) -> Range<usize> {
         self.plan.block_range(b)
+    }
+
+    /// Borrow the intra-rank tile-compute pool (`None` at threads <= 1);
+    /// the shape every pooled tile helper takes, with a serial fallback.
+    pub fn tile_pool(&self) -> Option<&crate::pool::ThreadPool> {
+        self.pool.as_deref()
     }
 
     /// Row-matrix contents of a held block (panics if the block is not in
@@ -931,6 +949,7 @@ mod tests {
                 streamed_scatter: true,
                 steal: false,
                 throttle: None,
+                threads: 1,
                 t0: Instant::now(),
             },
             mem: MemoryAccountant::new(),
@@ -963,6 +982,7 @@ mod tests {
             elim_tiles: 0,
             phase1_secs: 0.0,
             phase2_secs: 0.0,
+            pool: None,
         }
     }
 

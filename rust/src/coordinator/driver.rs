@@ -153,6 +153,14 @@ pub struct EngineOptions {
     /// (first-writer-wins), and the run finishes with zero duplicate task
     /// results. `None` keeps disconnects permanent.
     pub rejoin_after_ms: Option<u64>,
+    /// Intra-rank compute threads (`--threads-per-rank`, `[run]
+    /// threads_per_rank`, env `QUORALL_THREADS_PER_RANK`): each worker rank
+    /// runs its per-task tile kernels across a pool of this many threads,
+    /// the hybrid-parallel analogue of the paper's MPI+OpenMP split. Tile
+    /// helpers compute in parallel but commit in the strict serial order,
+    /// so output stays bitwise-identical to `threads_per_rank = 1`.
+    /// Default 1 (no pool is spawned at all).
+    pub threads_per_rank: usize,
 }
 
 /// Process-wide pipeline default: `QUORALL_PIPELINE=on|1` flips every
@@ -200,6 +208,19 @@ pub fn steal_default() -> bool {
         .unwrap_or(false)
 }
 
+/// Process-wide intra-rank thread default: `QUORALL_THREADS_PER_RANK=<t>`
+/// sizes the per-worker compute pool for every engine run built through
+/// [`EngineOptions::new`] / `RunConfig` defaults (how CI runs the
+/// integration suite at t > 1). Explicit `--threads-per-rank` /
+/// `opts.threads_per_rank` settings win. Values below 1 clamp to 1.
+pub fn threads_default() -> usize {
+    std::env::var("QUORALL_THREADS_PER_RANK")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
 impl EngineOptions {
     pub fn new(ranks: usize, strategy: Strategy) -> Self {
         Self {
@@ -225,6 +246,7 @@ impl EngineOptions {
             throttle: None,
             degrade: DegradeMode::Abort,
             rejoin_after_ms: None,
+            threads_per_rank: threads_default(),
         }
     }
 }
@@ -480,6 +502,7 @@ pub fn run_app_with_sink(
         streamed_scatter: opts.streamed_scatter,
         steal,
         throttle: opts.throttle,
+        threads: opts.threads_per_rank.max(1),
         t0: std::time::Instant::now(),
     };
     let sw = Stopwatch::start();
@@ -682,6 +705,7 @@ fn launch_cluster(
                     plan.streamed_scatter,
                     plan.steal,
                     plan.throttle,
+                    plan.threads,
                     &spec,
                 );
                 let bin = match &opts.worker_bin {
@@ -842,6 +866,7 @@ pub fn run_distributed_pcit(
     opts.throttle = cfg.throttle;
     opts.degrade = cfg.degrade;
     opts.rejoin_after_ms = cfg.rejoin_after_ms;
+    opts.threads_per_rank = cfg.threads_per_rank;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {
@@ -941,6 +966,7 @@ pub fn run_resilient_pcit_at(
     opts.throttle = cfg.throttle;
     opts.degrade = cfg.degrade;
     opts.rejoin_after_ms = cfg.rejoin_after_ms;
+    opts.threads_per_rank = cfg.threads_per_rank;
     let rep = run_app(app, &opts)?;
     let network = edges_network(n, rep.results)?;
     Ok(DistributedReport {

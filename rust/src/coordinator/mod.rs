@@ -139,8 +139,8 @@ pub use app::{DistributedApp, Plan, WorkerCtx};
 pub use driver::{
     distributed_report_json, engine_report_json, overlap_ratio, pipeline_default, rank_stats_json,
     run_app, run_app_with_sink, run_distributed_pcit, run_resilient_pcit, run_resilient_pcit_at,
-    run_single_node, scatter_default, steal_default, time_to_first_task_secs, transport_default,
-    DistributedReport, EngineOptions, EngineReport, RankStats,
+    run_single_node, scatter_default, steal_default, threads_default, time_to_first_task_secs,
+    transport_default, DistributedReport, EngineOptions, EngineReport, RankStats,
 };
 pub use leader::ResultSink;
 pub use messages::{BlockData, DegradeMode, KillAt, Message, Payload, PlacedBlock};

@@ -731,6 +731,7 @@ pub fn encode_setup(
     streamed_scatter: bool,
     steal: bool,
     throttle: Option<(usize, u32)>,
+    threads: usize,
     app_spec: &[u8],
 ) -> Vec<u8> {
     let mut out = Vec::new();
@@ -748,16 +749,17 @@ pub fn encode_setup(
         }
         None => put_bool(&mut out, false),
     }
+    put_usize(&mut out, threads);
     put_bytes(&mut out, app_spec);
     out
 }
 
 /// Inverse of [`encode_setup`]:
-/// `(n, p, block, pipeline, streamed, steal, throttle, spec)`.
+/// `(n, p, block, pipeline, streamed, steal, throttle, threads, spec)`.
 #[allow(clippy::type_complexity)]
 pub fn decode_setup(
     buf: &[u8],
-) -> anyhow::Result<(usize, usize, usize, bool, bool, bool, Option<(usize, u32)>, Vec<u8>)> {
+) -> anyhow::Result<(usize, usize, usize, bool, bool, bool, Option<(usize, u32)>, usize, Vec<u8>)> {
     let mut r = Reader::new(buf);
     let n = r.take_usize()?;
     let p = r.take_usize()?;
@@ -770,9 +772,10 @@ pub fn decode_setup(
     } else {
         None
     };
+    let threads = r.take_usize()?;
     let spec = r.take_bytes()?;
     r.finish()?;
-    Ok((n, p, block, pipeline, streamed, steal, throttle, spec))
+    Ok((n, p, block, pipeline, streamed, steal, throttle, threads, spec))
 }
 
 #[cfg(test)]
@@ -985,17 +988,20 @@ mod tests {
 
     #[test]
     fn setup_blob_round_trips() {
-        let blob = encode_setup(100, 8, 13, true, false, true, Some((3, 4)), &[9, 8, 7]);
-        let (n, p, block, pipe, streamed, steal, throttle, spec) = decode_setup(&blob).unwrap();
+        let blob = encode_setup(100, 8, 13, true, false, true, Some((3, 4)), 4, &[9, 8, 7]);
+        let (n, p, block, pipe, streamed, steal, throttle, threads, spec) =
+            decode_setup(&blob).unwrap();
         assert_eq!((n, p, block, pipe, streamed), (100, 8, 13, true, false));
         assert!(steal);
         assert_eq!(throttle, Some((3, 4)));
+        assert_eq!(threads, 4);
         assert_eq!(spec, vec![9, 8, 7]);
         // No throttle round-trips as None.
-        let blob = encode_setup(10, 4, 3, false, true, false, None, &[]);
-        let (.., steal, throttle, spec) = decode_setup(&blob).unwrap();
+        let blob = encode_setup(10, 4, 3, false, true, false, None, 1, &[]);
+        let (.., steal, throttle, threads, spec) = decode_setup(&blob).unwrap();
         assert!(!steal);
         assert_eq!(throttle, None);
+        assert_eq!(threads, 1);
         assert!(spec.is_empty());
     }
 }

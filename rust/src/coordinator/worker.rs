@@ -155,6 +155,11 @@ fn worker_run(endpoint: Endpoint, app: Arc<dyn DistributedApp>, plan: Plan) {
         elim_tiles: 0,
         phase1_secs: 0.0,
         phase2_secs: 0.0,
+        // Intra-rank tile pool (hybrid parallelism): spawned once per rank
+        // and shared by the task loop, recovery recompute, and stolen-task
+        // execution. threads = 1 keeps the path allocation-free.
+        pool: (plan.threads > 1)
+            .then(|| std::sync::Arc::new(crate::pool::ThreadPool::new(plan.threads))),
     };
 
     // ---- App protocol (compute + exchange + local reduce). ----
@@ -348,6 +353,7 @@ mod tests {
             streamed_scatter: streamed,
             steal: false,
             throttle: None,
+            threads: 1,
             t0: Instant::now(),
         }
     }
@@ -428,6 +434,53 @@ mod tests {
             ],
         );
         assert_eq!(edges, vec![(0, 1, 10.0)]);
+    }
+
+    /// App that panics from inside a pooled tile: the payload must cross
+    /// the pool latch, unwind out of `run_worker`, and take the same
+    /// clean-abort path as a protocol violation (rank marked killed, no
+    /// Result) instead of deadlocking the pool or the leader.
+    struct PanicTileApp;
+
+    impl DistributedApp for PanicTileApp {
+        fn name(&self) -> &'static str {
+            "panic-tile"
+        }
+
+        fn elements(&self) -> usize {
+            4
+        }
+
+        fn make_block(&self, range: std::ops::Range<usize>) -> BlockData {
+            BlockData::Rows(Matrix::from_fn(range.len(), 1, |r, _| (range.start + r) as f32))
+        }
+
+        fn run_worker(&self, ctx: &mut WorkerCtx) -> Option<Payload> {
+            let pool = ctx.tile_pool().expect("plan.threads > 1 spawns a pool");
+            pool.parallel_for_chunked(8, |r| {
+                if r.contains(&3) {
+                    panic!("tile kernel exploded");
+                }
+            });
+            Some(Payload::Edges(Vec::new()))
+        }
+    }
+
+    #[test]
+    fn pool_panic_takes_clean_abort_path() {
+        let (_t, mut eps) = Transport::new(2);
+        let worker_ep = eps.pop().unwrap();
+        let leader = eps.pop().unwrap();
+        let mut pl = plan(false);
+        pl.threads = 4;
+        let h = std::thread::spawn(move || worker_main(worker_ep, Arc::new(PanicTileApp), pl));
+        leader.send(endpoint_of(0), Message::ComputeTasks { tasks: vec![] }).unwrap();
+        assert!(h.join().is_err(), "worker must re-raise the tile panic");
+        assert!(leader.transport().is_killed(endpoint_of(0)));
+        assert!(
+            leader.recv_timeout(std::time::Duration::from_millis(50)).is_none(),
+            "a panicked rank must not report a Result"
+        );
     }
 
     #[test]

@@ -668,11 +668,17 @@ fn cmd_pcit(p: &Parsed) -> anyhow::Result<()> {
     );
 
     if cfg.mode == PcitMode::Single {
-        let rep = run_single_node(&dataset, cfg.ranks.max(cfg.threads_per_rank), None);
+        // The baseline's parallelism is the intra-rank thread count
+        // (flag > config > QUORALL_THREADS_PER_RANK env > 1), never the
+        // rank count: single-node has no ranks to saturate.
+        let threads = cfg.threads_per_rank.max(1);
+        let rep = run_single_node(&dataset, threads, None);
         println!(
-            "single-node: {} edges in {} (logical memory {})",
+            "single-node: {} edges in {} with {} thread{} (logical memory {})",
             rep.network.n_edges(),
             format_secs(rep.wall_secs),
+            threads,
+            if threads == 1 { "" } else { "s" },
             format_bytes(rep.logical_bytes)
         );
         return Ok(());
@@ -927,7 +933,7 @@ fn cmd_worker(p: &Parsed) -> anyhow::Result<()> {
     let rank = p.get_usize("rank")?;
     let timeout = Duration::from_millis(p.get_u64("join-timeout-ms")?);
     let joined = tcp::join(&leader, endpoint_of(rank), timeout)?;
-    let (n, ranks, block, pipeline, streamed_scatter, steal, throttle, spec) =
+    let (n, ranks, block, pipeline, streamed_scatter, steal, throttle, threads, spec) =
         wire::decode_setup(&joined.setup)?;
     let app = quorall::apps::app_from_spec(&spec)?;
     let plan = Plan {
@@ -938,6 +944,7 @@ fn cmd_worker(p: &Parsed) -> anyhow::Result<()> {
         streamed_scatter,
         steal,
         throttle,
+        threads,
         t0: Instant::now(),
     };
     quorall::coordinator::worker::worker_main(joined.endpoint, app, plan);

@@ -7,10 +7,15 @@
 //! (≥ tens of microseconds) that queue contention is negligible, which the
 //! `ablations` bench verifies.
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// First panic payload captured across a parallel region, so the original
+/// message survives into the worker's clean-abort path instead of being
+/// replaced by a generic "N tasks panicked" string.
+type Payload = Box<dyn std::any::Any + Send + 'static>;
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
@@ -74,12 +79,14 @@ impl ThreadPool {
         struct Latch {
             remaining: AtomicUsize,
             panicked: AtomicUsize,
+            payload: Mutex<Option<Payload>>,
             m: Mutex<()>,
             cv: Condvar,
         }
         let latch = Arc::new(Latch {
             remaining: AtomicUsize::new(n),
             panicked: AtomicUsize::new(0),
+            payload: Mutex::new(None),
             m: Mutex::new(()),
             cv: Condvar::new(),
         });
@@ -92,9 +99,14 @@ impl ThreadPool {
             let f = Arc::clone(&f);
             let latch = Arc::clone(&latch);
             self.submit(move || {
-                let r = catch_unwind(AssertUnwindSafe(|| f(i)));
-                if r.is_err() {
+                if let Err(e) = catch_unwind(AssertUnwindSafe(|| f(i))) {
                     latch.panicked.fetch_add(1, Ordering::Relaxed);
+                    let mut slot = latch.payload.lock().unwrap();
+                    // Keep only the FIRST payload observed; later ones are
+                    // counted but dropped.
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
                 }
                 if latch.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
                     let _g = latch.m.lock().unwrap();
@@ -107,9 +119,11 @@ impl ThreadPool {
             g = latch.cv.wait(g).unwrap();
         }
         drop(g);
-        let p = latch.panicked.load(Ordering::Relaxed);
-        if p > 0 {
-            panic!("{p} task(s) panicked in parallel_for");
+        if latch.panicked.load(Ordering::Relaxed) > 0 {
+            let payload = latch.payload.lock().unwrap().take();
+            // Re-raise the original payload so the panic message reaches
+            // the worker's catch_unwind → transport.kill clean-abort path.
+            resume_unwind(payload.expect("panicked count > 0 implies payload"));
         }
     }
 
@@ -131,17 +145,30 @@ impl ThreadPool {
         slots.into_iter().map(|s| s.expect("slot filled")).collect()
     }
 
-    /// Chunked parallel-for: splits `0..n` into `chunks ≈ 4×threads` ranges.
+    /// Chunked parallel-for over `0..n` with self-scheduling: small fixed
+    /// chunks are claimed from a shared atomic counter, so threads that land
+    /// on cheap items come back for more while a thread stuck on an expensive
+    /// item keeps only its own chunk. This balances pathologically skewed
+    /// per-item cost (e.g. quorum tiles of very different heights) with O(1)
+    /// queue operations per thread instead of per chunk.
+    ///
+    /// Chunk *boundaries* depend on thread count, so callers must only rely
+    /// on per-index effects being boundary-independent (each index processed
+    /// exactly once) — the bitwise-determinism contract every tile helper in
+    /// this crate upholds by computing whole output rows per index.
     pub fn parallel_for_chunked(&self, n: usize, f: impl Fn(std::ops::Range<usize>) + Sync + Send) {
         if n == 0 {
             return;
         }
-        let chunk = (n / (self.size * 4)).max(1);
-        let n_chunks = crate::util::ceil_div(n, chunk);
-        self.parallel_for(n_chunks, move |c| {
-            let lo = c * chunk;
-            let hi = ((c + 1) * chunk).min(n);
-            f(lo..hi);
+        let chunk = (n / (self.size * 8)).max(1);
+        let next = AtomicUsize::new(0);
+        let walkers = self.size.min(crate::util::ceil_div(n, chunk));
+        self.parallel_for(walkers, |_w| loop {
+            let lo = next.fetch_add(chunk, Ordering::Relaxed);
+            if lo >= n {
+                break;
+            }
+            f(lo..(lo + chunk).min(n));
         });
     }
 }
@@ -260,6 +287,79 @@ mod tests {
             c.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(c.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn chunked_balances_skewed_item_cost() {
+        // One item is pathologically more expensive than the rest; the
+        // self-scheduling loop must still cover every index exactly once
+        // and not serialize the cheap items behind the expensive one.
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..512).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for_chunked(512, |r| {
+            for i in r {
+                if i == 0 {
+                    // Simulated heavy tile: ~1000x the work of its peers.
+                    let mut acc = 0u64;
+                    for k in 0..200_000u64 {
+                        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+                    }
+                    assert_ne!(acc, 1); // keep the loop observable
+                }
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunked_single_item() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU64::new(0);
+        pool.parallel_for_chunked(1, |r| {
+            hits.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn panic_payload_preserved() {
+        // The clean-abort path in `worker_main` logs the payload message;
+        // the pool must re-raise the original payload, not a generic count.
+        let pool = ThreadPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(8, |i| {
+                if i == 5 {
+                    panic!("tile {i} exploded");
+                }
+            });
+        }));
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert_eq!(msg, "tile 5 exploded");
+    }
+
+    #[test]
+    fn chunked_panic_propagates() {
+        let pool = ThreadPool::new(3);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for_chunked(64, |r| {
+                if r.contains(&17) {
+                    panic!("chunk containing 17");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // Pool survives for reuse.
+        let c = AtomicU64::new(0);
+        pool.parallel_for_chunked(64, |r| {
+            c.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 64);
     }
 
     #[test]

@@ -16,9 +16,11 @@
 pub mod native;
 pub mod artifact;
 pub mod engine;
+pub mod pooled;
 
 pub use artifact::{ArtifactManifest, KernelSpec};
 pub use native::NativeBackend;
+pub use pooled::{corr_tile_pooled, pcit_tile_pooled};
 
 use crate::util::{Matrix, MatrixView};
 use std::sync::Arc;

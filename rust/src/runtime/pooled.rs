@@ -1,0 +1,139 @@
+//! Row-chunked, bitwise-stable pooled wrappers over the [`TileExecutor`]
+//! kernels — the intra-rank half of the paper's hybrid MPI+OpenMP split.
+//!
+//! Both tile shapes decompose cleanly along the first operand's rows:
+//! every output row of `corr_tile(za, zb)` depends only on the matching
+//! `za` row (each element is an independent strict-order dot product), and
+//! every output row of `pcit_tile(cxy, rxz, ryz)` depends only on the
+//! matching `cxy` / `rxz` rows plus all of `ryz`. Chunking the row range
+//! and stitching the per-chunk results back into their original slots
+//! therefore reproduces the serial kernel **bit for bit**, for any chunk
+//! boundaries — which is exactly what the self-scheduling
+//! [`ThreadPool::parallel_for_chunked`] needs, since its boundaries depend
+//! on thread count. Compute happens in parallel; the commit order is
+//! irrelevant because every chunk writes a disjoint, position-fixed slice.
+//!
+//! Callers pass `Option<&ThreadPool>` (the shape of
+//! [`WorkerCtx::tile_pool`](crate::coordinator::WorkerCtx::tile_pool));
+//! `None` or a 1-thread pool falls straight through to the serial kernel.
+
+use super::TileExecutor;
+use crate::pool::{SendPtr, ThreadPool};
+use crate::util::{Matrix, MatrixView};
+
+/// Correlation tile `za (A×M) · zb (B×M)ᵀ`, row-chunked across `pool`.
+/// Bitwise-identical to `exec.corr_tile(za, zb)` at any thread count.
+pub fn corr_tile_pooled(
+    exec: &dyn TileExecutor,
+    pool: Option<&ThreadPool>,
+    za: MatrixView<'_>,
+    zb: MatrixView<'_>,
+) -> Matrix {
+    let (a, m) = za.shape();
+    let b = zb.rows();
+    let Some(pool) = pool.filter(|p| p.size() > 1 && a >= 2) else {
+        return exec.corr_tile(za, zb);
+    };
+    let mut out = Matrix::zeros(a, b);
+    // analyze: hot-path begin(pooled-tiles)
+    {
+        let out_ptr = SendPtr(out.as_mut_slice().as_mut_ptr());
+        pool.parallel_for_chunked(a, |r| {
+            let rows = exec.corr_tile(za.sub(r.start, 0, r.len(), m), zb);
+            // SAFETY: each chunk writes the disjoint row range
+            // `r.start..r.start + r.len()` of `out`, and `out` outlives the
+            // blocking parallel_for_chunked call.
+            // analyze: allow(unsafe): the SAFETY argument above is the audit
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.get().add(r.start * b), r.len() * b)
+            };
+            dst.copy_from_slice(rows.as_slice());
+        });
+    }
+    out
+}
+
+/// PCIT elimination tile (`cxy` A×B, `rxz` A×Z, `ryz` B×Z → A×B flags),
+/// row-chunked across `pool`: `cxy` and `rxz` chunk together along A, `ryz`
+/// ships whole to every chunk (output row `a` scans all mediators `z`).
+/// Bitwise-identical to `exec.pcit_tile(cxy, rxz, ryz)` at any thread count.
+pub fn pcit_tile_pooled(
+    exec: &dyn TileExecutor,
+    pool: Option<&ThreadPool>,
+    cxy: MatrixView<'_>,
+    rxz: MatrixView<'_>,
+    ryz: MatrixView<'_>,
+) -> Matrix {
+    let (a, b) = cxy.shape();
+    let z = rxz.cols();
+    let Some(pool) = pool.filter(|p| p.size() > 1 && a >= 2) else {
+        return exec.pcit_tile(cxy, rxz, ryz);
+    };
+    let mut out = Matrix::zeros(a, b);
+    {
+        let out_ptr = SendPtr(out.as_mut_slice().as_mut_ptr());
+        pool.parallel_for_chunked(a, |r| {
+            let flags =
+                exec.pcit_tile(cxy.sub(r.start, 0, r.len(), b), rxz.sub(r.start, 0, r.len(), z), ryz);
+            // SAFETY: disjoint row ranges of `out`, which outlives the
+            // blocking parallel_for_chunked call (same contract as above).
+            // analyze: allow(unsafe): the SAFETY argument above is the audit
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.get().add(r.start * b), r.len() * b)
+            };
+            dst.copy_from_slice(flags.as_slice());
+        });
+    }
+    // analyze: hot-path end(pooled-tiles)
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::util::prng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn corr_tile_pooled_is_bitwise_serial() {
+        let exec = NativeBackend::new();
+        let mut rng = Rng::new(7);
+        // Skewed shapes on purpose: tall, wide, tiny, and 1-row tiles.
+        for (a, b, m) in [(33, 17, 24), (5, 64, 8), (1, 9, 12), (64, 64, 16)] {
+            let za = rand_matrix(&mut rng, a, m);
+            let zb = rand_matrix(&mut rng, b, m);
+            let serial = exec.corr_tile(za.view(), zb.view());
+            for t in [2, 3, 4] {
+                let pool = ThreadPool::new(t);
+                let pooled = corr_tile_pooled(&exec, Some(&pool), za.view(), zb.view());
+                assert_eq!(serial.as_slice(), pooled.as_slice(), "a={a} b={b} m={m} t={t}");
+            }
+            let fallback = corr_tile_pooled(&exec, None, za.view(), zb.view());
+            assert_eq!(serial.as_slice(), fallback.as_slice());
+        }
+    }
+
+    #[test]
+    fn pcit_tile_pooled_is_bitwise_serial() {
+        let exec = NativeBackend::new();
+        let mut rng = Rng::new(11);
+        for (a, b, z) in [(21, 13, 30), (4, 40, 10), (1, 6, 6)] {
+            let cxy = rand_matrix(&mut rng, a, b);
+            let rxz = rand_matrix(&mut rng, a, z);
+            let ryz = rand_matrix(&mut rng, b, z);
+            let serial = exec.pcit_tile(cxy.view(), rxz.view(), ryz.view());
+            for t in [2, 4] {
+                let pool = ThreadPool::new(t);
+                let pooled =
+                    pcit_tile_pooled(&exec, Some(&pool), cxy.view(), rxz.view(), ryz.view());
+                assert_eq!(serial.as_slice(), pooled.as_slice(), "a={a} b={b} z={z} t={t}");
+            }
+            let fallback = pcit_tile_pooled(&exec, None, cxy.view(), rxz.view(), ryz.view());
+            assert_eq!(serial.as_slice(), fallback.as_slice());
+        }
+    }
+}

@@ -449,6 +449,86 @@ fn streamed_scatter_parity_survives_credit_starvation() {
     assert_eq!(base.as_slice(), starved.as_slice());
 }
 
+// ---- Hybrid intra-rank parallelism: bitwise parity across thread counts ----
+
+#[test]
+fn threads_per_rank_bitwise_identical_across_apps() {
+    // The per-rank tile pool computes in parallel but commits in strict
+    // serial order, so every thread count must produce the exact bits of
+    // the threads_per_rank = 1 run — all three apps, both transports.
+    let d = dataset(96);
+    let mut rng = Rng::new(41);
+    let f = Matrix::from_fn(60, 16, |_, _| rng.normal_f32());
+    let b = Bodies::random(60, 7);
+    let e = exec();
+    for strategy in [Strategy::Cyclic, Strategy::Grid] {
+        for pipeline in [false, true] {
+            let mut nets = Vec::new();
+            let mut sims = Vec::new();
+            let mut forces = Vec::new();
+            for threads in [1usize, 2, 4] {
+                let cfg = RunConfig {
+                    ranks: 8,
+                    mode: PcitMode::QuorumExact,
+                    strategy,
+                    pipeline,
+                    threads_per_rank: threads,
+                    ..RunConfig::default()
+                };
+                nets.push(run_distributed_pcit(&cfg, &d, exec()).unwrap().network);
+
+                let mut opts = EngineOptions::new(8, strategy);
+                opts.pipeline = pipeline;
+                opts.threads_per_rank = threads;
+                sims.push(run_distributed_similarity(&f, &e, &opts).unwrap().0);
+                forces.push(run_distributed_nbody(&b, &opts).unwrap().0);
+            }
+            for (t, threads) in [2usize, 4].iter().enumerate().map(|(i, &t)| (i + 1, t)) {
+                assert_eq!(
+                    nets[0].edges,
+                    nets[t].edges,
+                    "strategy {} pipeline {pipeline}: PCIT edges differ at {threads} threads",
+                    strategy.name()
+                );
+                assert_eq!(
+                    sims[0].as_slice(),
+                    sims[t].as_slice(),
+                    "strategy {} pipeline {pipeline}: similarity differs at {threads} threads",
+                    strategy.name()
+                );
+                for i in 0..b.n {
+                    assert_eq!(
+                        forces[0][i],
+                        forces[t][i],
+                        "strategy {} pipeline {pipeline} body {i}: forces differ at {threads} threads",
+                        strategy.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn threads_per_rank_bitwise_identical_local_pcit() {
+    // Quorum-local mode takes the other pooled path (per-task panel
+    // assembly via parallel_map + whole-panel elimination scan) — it must
+    // be just as boundary-independent.
+    let d = dataset(80);
+    let mut nets = Vec::new();
+    for threads in [1usize, 4] {
+        let cfg = RunConfig {
+            ranks: 8,
+            mode: PcitMode::QuorumLocal,
+            use_pcit_significance: true,
+            threads_per_rank: threads,
+            ..RunConfig::default()
+        };
+        nets.push(run_distributed_pcit(&cfg, &d, exec()).unwrap().network);
+    }
+    assert_eq!(nets[0].edges, nets[1].edges, "quorum-local PCIT differs across thread counts");
+}
+
 // ---- Failure injection: clean errors, no hangs ----
 
 fn pcit_app(d: &ExpressionDataset, mode: DistMode) -> Arc<PcitApp> {

@@ -635,6 +635,41 @@ fn steal_victim_death_bitwise_identical() {
 }
 
 #[test]
+fn steal_kill_with_tile_pool_bitwise_identical() {
+    // The per-rank tile pool rides the same task loop the steal scheduler
+    // and the recovery ledger drive: revocation still lands only at task
+    // boundaries, so a thief's pooled recompute and the post-death splice
+    // must match the static, unthrottled, single-threaded run bit for bit.
+    let mut rng = Rng::new(5);
+    let f = Matrix::from_fn(54, 12, |_, _| rng.normal_f32());
+    let e = exec();
+    let mut base_opts = recovery_opts(Strategy::Cyclic, false);
+    base_opts.steal = false;
+    base_opts.threads_per_rank = 1;
+    let (base, _) = run_distributed_similarity(&f, &e, &base_opts).unwrap();
+    for pipeline in [false, true] {
+        let mut opts = recovery_opts(Strategy::Cyclic, pipeline);
+        opts.steal = true;
+        opts.steal_batch = 2;
+        opts.throttle = Some((VICTIM, 200));
+        opts.kill = vec![VICTIM];
+        opts.kill_at = KillAt::Compute { tasks: 2 };
+        opts.threads_per_rank = 4;
+        let (sim, rep) = run_distributed_similarity(&f, &e, &opts).unwrap();
+        assert_eq!(
+            sim.as_slice(),
+            base.as_slice(),
+            "pipeline {pipeline}: pooled steal + death recovery changed bits"
+        );
+        assert_eq!(rep.dead_ranks, vec![VICTIM]);
+        assert!(
+            rep.stolen_tasks > 0,
+            "pipeline {pipeline}: the throttled victim must get stolen from before dying"
+        );
+    }
+}
+
+#[test]
 fn steal_thief_death_reorphans_through_cascade() {
     // Grid placement at P = 9: a generic block pair (different row and
     // column) has exactly two hosts, so a two-host tail task in the

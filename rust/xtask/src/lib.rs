@@ -1147,6 +1147,8 @@ pub fn analyze_tree(rust_dir: &Path) -> Result<Vec<Finding>, String> {
     let logging = load("src/logging.rs")?;
     let benchkit = load("src/benchkit.rs")?;
     let prop = load("src/prop/mod.rs")?;
+    let pooled = load("src/runtime/pooled.rs")?;
+    let nbody = load("src/apps/nbody.rs")?;
 
     let mut findings = Vec::new();
     findings.extend(check_wire(&messages, &wire));
@@ -1160,7 +1162,15 @@ pub fn analyze_tree(rust_dir: &Path) -> Result<Vec<Finding>, String> {
     ));
     findings.extend(check_reports(&driver, &wire, &main_rs));
     findings.extend(check_parity(&main_rs, &schema, &[&driver, &logging, &benchkit, &prop]));
-    findings.extend(check_hot_paths(&[(&transport, "recv-loop"), (&matrix, "matmul-nt")]));
+    findings.extend(check_hot_paths(&[
+        (&transport, "recv-loop"),
+        (&matrix, "matmul-nt"),
+        // Intra-rank hybrid parallelism: the pooled tile helpers and the
+        // two-pass n-body kernel must keep locks out of the per-tile inner
+        // loops (SendPtr writes are the only audited unsafe).
+        (&pooled, "pooled-tiles"),
+        (&nbody, "pair-forces"),
+    ]));
     Ok(findings)
 }
 
